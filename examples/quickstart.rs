@@ -1,0 +1,70 @@
+//! Quickstart: one frame through the whole stack.
+//!
+//! ```bash
+//! make artifacts          # once (python build path)
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Loads the AOT artifacts if present (falling back to synthetic pruned
+//! weights + a synthetic frame so the example always runs), executes one
+//! frame, prints the detections, and shows the simulated chip metrics for
+//! that frame.
+
+use scsnn::coordinator::pipeline::DetectionPipeline;
+use scsnn::detect::dataset::{Dataset, CLASS_NAMES};
+use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::weights::ModelWeights;
+use scsnn::runtime::ArtifactPaths;
+
+fn main() -> anyhow::Result<()> {
+    let dir = ArtifactPaths::default_dir();
+    let paths = ArtifactPaths::in_dir(&dir);
+
+    // Prefer the trained artifacts + PJRT; fall back to synthetic weights.
+    let (pipeline, ds) = if paths.available() && paths.dataset_test.exists() {
+        println!("using trained artifacts from {}", dir.display());
+        let p = DetectionPipeline::from_artifacts(&dir, true)?;
+        let ds = Dataset::load(&paths.dataset_test)?;
+        (p, ds)
+    } else {
+        println!("artifacts missing — using synthetic weights (run `make artifacts` for the real model)");
+        let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+        let mut w = ModelWeights::random(&net, 1.0, 7);
+        w.prune_fine_grained(0.8);
+        let ds = Dataset::synth(1, net.input_w, net.input_h, 1);
+        (DetectionPipeline::from_weights(net, w)?, ds)
+    };
+
+    let frame = &ds.samples[0];
+    println!(
+        "frame: {}x{}  path: {}",
+        frame.image.w,
+        frame.image.h,
+        if pipeline.uses_pjrt() { "PJRT (AOT HLO)" } else { "golden model" }
+    );
+
+    let result = pipeline.process_frame(&frame.image)?;
+    println!("\n{} detections in {:?}:", result.detections.len(), result.wall);
+    for d in &result.detections {
+        println!(
+            "  {:<10} score {:.2}  box ({:.2}, {:.2}) {:.2}×{:.2}",
+            CLASS_NAMES[d.class_id], d.score, d.cx, d.cy, d.w, d.h
+        );
+    }
+    println!("ground truth: {} boxes", frame.boxes.len());
+
+    // Simulated chip metrics for this frame (paper hardware config).
+    let hw = pipeline.estimate_hw(&frame.image)?;
+    println!("\nsimulated accelerator (576 PEs @ 500 MHz, paper config):");
+    println!("  cycles/frame       {:>12}  (dense baseline {})", hw.cycles, hw.dense_cycles);
+    println!(
+        "  weight-skip saving {:>11.1}%",
+        (1.0 - hw.cycles as f64 / hw.dense_cycles as f64) * 100.0
+    );
+    println!("  input sparsity     {:>11.1}%", hw.input_sparsity * 100.0);
+    println!("  simulated fps      {:>12.1}", hw.sim_fps);
+    println!("  core power         {:>9.2} mW", hw.power.core_power_mw);
+    println!("  energy/frame       {:>9.3} mJ", hw.power.core_energy_mj);
+    println!("  efficiency         {:>9.2} TOPS/W", hw.power.tops_per_watt);
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Fig 14 companion: render detections of the trained model at
+//! (1,1) / (1,2) / (1,3) / (1,4) mixed time steps on the same frames —
+//! showing false boxes disappearing as time steps are added.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example visualize_timesteps
+//! ```
+
+use scsnn::coordinator::pipeline::DetectionPipeline;
+use scsnn::detect::dataset::{write_ppm, Dataset};
+use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::weights::ModelWeights;
+use scsnn::runtime::ArtifactPaths;
+
+fn main() -> anyhow::Result<()> {
+    let dir = ArtifactPaths::default_dir();
+    let paths = ArtifactPaths::in_dir(&dir);
+
+    let (weights, ds) = if paths.weights.exists() && paths.dataset_test.exists() {
+        (ModelWeights::load(&paths.weights)?, Dataset::load(&paths.dataset_test)?)
+    } else {
+        println!("artifacts missing — using synthetic weights/frames");
+        let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+        let mut w = ModelWeights::random(&net, 1.0, 3);
+        w.prune_fine_grained(0.8);
+        (w, Dataset::synth(2, net.input_w, net.input_h, 4))
+    };
+
+    let out = dir.join("fig14");
+    std::fs::create_dir_all(&out)?;
+    for t in 1..=4usize {
+        // (1, t) mixed time steps, same weights (the paper's SNN-4T trick).
+        let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::C2(t.max(1)));
+        let net = if t == 1 {
+            NetworkSpec::paper(Scale::Tiny, TimeStepConfig::Uniform(1))
+        } else {
+            net
+        };
+        if weights.validate_against(&net).is_err() {
+            println!("weights do not fit T={t} topology; skipping");
+            continue;
+        }
+        let pipeline = DetectionPipeline::from_weights(net, weights.clone())?;
+        for (i, s) in ds.samples.iter().take(2).enumerate() {
+            let fr = pipeline.process_frame(&s.image)?;
+            let p = out.join(format!("frame{i}_T{t}.ppm"));
+            write_ppm(&p, &s.image, &fr.detections)?;
+            println!(
+                "T=(1,{t}) frame {i}: {} detections → {}",
+                fr.detections.len(),
+                p.display()
+            );
+        }
+    }
+    println!("\ncompare the T=1 renders (spurious boxes) against T=3/T=4 (stable) — Fig 14's narrative.");
+    Ok(())
+}

@@ -1,0 +1,258 @@
+"""AOT build orchestrator — the single python entry point (`make artifacts`).
+
+Pipeline (python runs ONCE; the rust binary is self-contained afterwards):
+
+1. generate the synthetic IVS-3cls datasets (``dataset_train.bin`` /
+   ``dataset_test.bin``, SNND format);
+2. train the SNN detector (STBP + tdBN, mixed (1,3) time steps) and the
+   Table-II comparison variants, logging the loss curve;
+3. run the Table-I slimming pipeline: fine-grained pruning (+ masked
+   fine-tune) → BN fold → 8-bit quantization → ``weights_tiny.bin``
+   (SNNW format; also the unpruned quantization for ablation);
+4. sweep the mixed-time-step configurations of Fig 15 (inference only);
+5. lower the **quantized integer inference graph** (built from the
+   Layer-1 Pallas kernels) to HLO **text** — not `.serialize()`: the
+   image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos (see
+   /opt/xla-example/README.md) — as ``model_tiny.hlo.txt`` for the rust
+   PJRT runtime;
+6. write ``metrics.json`` with every python-side number the rust benches
+   print (Tables I/II, Fig 15, loss curve).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts \
+        [--steps N] [--variant-steps N] [--quick] [--skip-variants]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen, detect_np, train as T
+from .binfmt import write_snnd, write_snnw
+from .model import (
+    build_network,
+    fold_and_quantize,
+    head_to_float,
+    prune_fine_grained,
+    snn_forward_quant,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format).
+
+    ``print_large_constants=True`` is load-bearing: without it the printer
+    elides big literals as ``{...}``, which the rust client's HLO parser
+    silently mis-reads (the network's weights became garbage).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def eval_quant(qlayers, net, images, boxes, limit=None):
+    """mAP of the quantized integer model (whole-image conv), via the same
+    jitted graph that gets AOT-exported."""
+    fwd = jax.jit(lambda img: snn_forward_quant(qlayers, net, img))
+    t_in = net.layers[-1].in_t
+    all_dets, all_gts = [], []
+    n = len(images) if limit is None else min(limit, len(images))
+    for i in range(n):
+        acc = np.asarray(fwd(jnp.asarray(images[i])))
+        head = head_to_float(acc, qlayers, t_in)
+        all_dets.append(detect_np.nms(detect_np.decode(head)))
+        all_gts.append(boxes[i])
+    return detect_np.mean_ap(all_dets, all_gts)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=int(os.environ.get("SCSNN_STEPS", 240)))
+    ap.add_argument(
+        "--variant-steps", type=int, default=int(os.environ.get("SCSNN_VARIANT_STEPS", 120))
+    )
+    ap.add_argument("--train-images", type=int, default=192)
+    ap.add_argument("--test-images", type=int, default=48)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true", help="smoke-test sizes")
+    ap.add_argument("--skip-variants", action="store_true")
+    ap.add_argument("--skip-fig15", action="store_true")
+    args = ap.parse_args()
+    if args.quick:
+        args.steps, args.variant_steps = 8, 4
+        args.train_images, args.test_images = 16, 8
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    t_start = time.time()
+    metrics: dict = {"config": vars(args).copy()}
+
+    # ---- 1. datasets ----------------------------------------------------
+    net = build_network("tiny", t=3, ts_mode="C2")
+    w, h = net.input_w, net.input_h
+    print(f"== datagen: {args.train_images}+{args.test_images} scenes {w}x{h}")
+    tr_imgs, tr_boxes = datagen.generate(args.train_images, w, h, seed=args.seed)
+    te_imgs, te_boxes = datagen.generate(args.test_images, w, h, seed=args.seed + 10_000)
+    write_snnd(os.path.join(args.out_dir, "dataset_train.bin"), tr_imgs, tr_boxes)
+    write_snnd(os.path.join(args.out_dir, "dataset_test.bin"), te_imgs, te_boxes)
+
+    # ---- 2. train the SNN ------------------------------------------------
+    print(f"== train SNN ({args.steps} steps)")
+    params, bn, curve = T.train_model(
+        net, tr_imgs, tr_boxes, args.steps, batch=args.batch, seed=args.seed, log="snn"
+    )
+    metrics["loss_curve"] = curve
+    snn_a = T.evaluate_float(net, params, bn, te_imgs, te_boxes)
+    print(f"   SNN-a (float) mAP = {snn_a['mean']:.3f}  per-class {snn_a['ap']}")
+
+    # ---- 3. slimming pipeline (Table I) ----------------------------------
+    print("== prune 80% of 3x3 kernels + masked fine-tune")
+    pruned_params, masks = T.prune_float_params(params, net, rate=0.8)
+    ft_steps = max(args.steps // 3, 1)
+    gw, gh = net.grid()
+    step_fn = T.make_masked_step_fn(net, masks)
+    it = T.batches(tr_imgs, tr_boxes, args.batch, np.random.default_rng(args.seed + 1), gw, gh)
+    opt = T.adam_init(pruned_params)
+    # Fine-tune on a *separate copy* of the BN stats: `bn` stays paired
+    # with the unpruned `params` for the later Fig 15 / SNN-4T inference
+    # sweeps (mixing fine-tuned stats with unpruned weights zeroes them).
+    bn_ft = {k: dict(v) for k, v in bn.items()}
+    for s in range(ft_steps):
+        imgs, obj, coords, cls = next(it)
+        lr = T.lr_schedule(s, ft_steps, base=3e-4)
+        loss, pruned_params, bn_ft, opt = step_fn(
+            pruned_params, bn_ft, opt, jnp.float32(lr), imgs, obj, coords, cls
+        )
+    snn_b = T.evaluate_float(net, pruned_params, bn_ft, te_imgs, te_boxes)
+    print(f"   SNN-b (pruned) mAP = {snn_b['mean']:.3f}")
+
+    q_pruned = fold_and_quantize(pruned_params, bn_ft, net)
+    # Re-apply the exact pruning mask after quantization (rounding must not
+    # resurrect pruned weights).
+    for name, m in masks.items():
+        q_pruned[name].w *= np.asarray(m, np.int8).reshape(q_pruned[name].w.shape)
+    q_dense = fold_and_quantize(params, bn, net)
+    write_snnw(os.path.join(args.out_dir, "weights_tiny.bin"), q_pruned)
+    write_snnw(os.path.join(args.out_dir, "weights_tiny_dense.bin"), q_dense)
+
+    eval_n = None if args.test_images <= 48 else 48
+    snn_c = eval_quant(q_pruned, net, te_imgs, te_boxes, limit=eval_n)
+    print(f"   SNN-c (pruned+quant, int datapath) mAP = {snn_c['mean']:.3f}")
+    metrics["table1"] = {
+        "snn_a": snn_a,
+        "snn_b": snn_b,
+        "snn_c": snn_c,
+        # SNN-d (block convolution) is evaluated by the rust golden model —
+        # same quantized weights, 32×18 tiles. See benches/table1.rs.
+        "params_dense": T.num_params(net),
+        "nnz": int(sum(int((l.w != 0).sum()) for l in q_pruned.values())),
+    }
+
+    # ---- 4. Table II variants --------------------------------------------
+    if not args.skip_variants:
+        table2 = {}
+        for label, variant, bits in [
+            ("ann", "ann", 0),
+            ("qnn4", "qnn", 4),
+            ("qnn3", "qnn", 3),
+            ("qnn2", "qnn", 2),
+            ("bnn", "bnn", 0),
+        ]:
+            print(f"== train variant {label} ({args.variant_steps} steps)")
+            vnet = build_network("tiny", t=3, ts_mode="C2")
+            vp, vbn, _ = T.train_model(
+                vnet,
+                tr_imgs,
+                tr_boxes,
+                args.variant_steps,
+                batch=args.batch,
+                variant=variant,
+                act_bits=bits or 4,
+                seed=args.seed,
+                log=label,
+            )
+            table2[label] = T.evaluate_float(
+                vnet, vp, vbn, te_imgs, te_boxes, variant=variant, act_bits=bits or 4
+            )
+            print(f"   {label} mAP = {table2[label]['mean']:.3f}")
+        # SNN-4T: same trained weights, (1,4) mixed time steps.
+        net4 = build_network("tiny", t=4, ts_mode="C2")
+        table2["snn_4t"] = T.evaluate_float(net4, params, bn, te_imgs, te_boxes)
+        table2["snn_a"] = snn_a
+        print(f"   snn_4t mAP = {table2['snn_4t']['mean']:.3f}")
+        metrics["table2"] = table2
+
+    # ---- 5. Fig 15 mixed-time-step sweep ----------------------------------
+    if not args.skip_fig15:
+        fig15 = {}
+        for label, mode, blocks in [
+            ("T3", "uniform", 0),
+            ("C1", "C1", 0),
+            ("C2", "C2", 0),
+            ("C2B1", "C2B", 1),
+            ("C2B2", "C2B", 2),
+            ("C2B3", "C2B", 3),
+        ]:
+            snet = build_network("tiny", t=3, ts_mode=mode, ts_blocks=blocks)
+            r = T.evaluate_float(snet, params, bn, te_imgs, te_boxes)
+            fig15[label] = {"map": r, "giga_ops": T.dense_ops(snet) / 1e9}
+            print(f"   fig15 {label}: mAP={r['mean']:.3f} ops={fig15[label]['giga_ops']:.2f}G")
+        metrics["fig15"] = fig15
+
+    # ---- 6. AOT-lower the quantized graph ---------------------------------
+    # Two lowerings of the SAME integer network:
+    # - the Pallas-kernel graph (the L1 contract; what pytest verifies) →
+    #   `model_tiny_pallas.hlo.txt`;
+    # - the lax.conv oracle graph → `model_tiny.hlo.txt`, the artifact the
+    #   rust runtime loads. Both are bit-identical (asserted below); the
+    #   oracle graph ships because interpret-mode Pallas lowers to
+    #   per-grid-step while loops that xla_extension 0.5.1 (the rust
+    #   client) compiles pathologically slowly.
+    print("== lowering quantized inference graphs to HLO text")
+    spec = jax.ShapeDtypeStruct((3, net.input_h, net.input_w), jnp.uint8)
+    for fname, use_pallas in [("model_tiny.hlo.txt", False), ("model_tiny_pallas.hlo.txt", True)]:
+        lowered = jax.jit(
+            lambda img, up=use_pallas: (snn_forward_quant(q_pruned, net, img, use_pallas=up),)
+        ).lower(spec)
+        hlo = to_hlo_text(lowered)
+        hlo_path = os.path.join(args.out_dir, fname)
+        with open(hlo_path, "w") as f:
+            f.write(hlo)
+        print(f"   wrote {len(hlo)/1e6:.1f} MB HLO to {hlo_path}")
+
+    # Cross-check vector for the rust integration test: head_acc of test
+    # image 0 through the jitted graph — and pin the two graphs together.
+    acc0 = np.asarray(jax.jit(
+        lambda img: snn_forward_quant(q_pruned, net, img, use_pallas=False)
+    )(jnp.asarray(te_imgs[0])))
+    acc0_pallas = np.asarray(jax.jit(
+        lambda img: snn_forward_quant(q_pruned, net, img, use_pallas=True)
+    )(jnp.asarray(te_imgs[0])))
+    assert (acc0 == acc0_pallas).all(), "pallas and oracle graphs disagree"
+    np.asarray(acc0, "<i4").tofile(os.path.join(args.out_dir, "selfcheck_head_acc.bin"))
+    metrics["selfcheck"] = {
+        "image": 0,
+        "head_shape": list(acc0.shape),
+        "head_sum": int(acc0.astype(np.int64).sum()),
+    }
+
+    metrics["wall_seconds"] = time.time() - t_start
+    with open(os.path.join(args.out_dir, "metrics.json"), "w") as f:
+        json.dump(metrics, f, indent=1)
+    print(f"== artifacts complete in {metrics['wall_seconds']:.0f}s → {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Binary artifact formats shared with the rust request path.
+
+Kept byte-compatible with `rust/src/model/weights.rs` (``SNNW``) and
+`rust/src/detect/dataset.rs` (``SNND``). All integers little-endian.
+
+SNNW v1::
+
+    b"SNNW" u32=1 u32=n_layers
+    per layer (sorted by name, as rust's BTreeMap iterates):
+        u32 len + utf8 name
+        u32 k, u32 c, u32 kh, u32 kw
+        f32 scale, i32 vth_q
+        k × i32 bias
+        k*c*kh*kw × i8 weights (row-major k,c,kh,kw)
+
+SNND v1::
+
+    b"SNND" u32=1 u32=n_images
+    per image:
+        u32 w, u32 h
+        3*h*w × u8 pixels (channel-major: R plane, G plane, B plane)
+        u32 n_boxes, per box: u32 class_id, f32 cx, cy, w, h (normalized)
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class QuantLayer:
+    """One layer's quantized weights (mirror of rust `LayerWeights`)."""
+
+    w: np.ndarray  # int8 (k, c, kh, kw)
+    bias: np.ndarray  # int32 (k,)
+    scale: float
+    vth_q: int
+
+
+def _w_str(f, s: str) -> None:
+    b = s.encode("utf-8")
+    f.write(struct.pack("<I", len(b)))
+    f.write(b)
+
+
+def write_snnw(path: str, layers: dict[str, QuantLayer]) -> None:
+    """Write a SNNW weights file (layers serialized in sorted-name order)."""
+    with open(path, "wb") as f:
+        f.write(b"SNNW")
+        f.write(struct.pack("<II", 1, len(layers)))
+        for name in sorted(layers):
+            lw = layers[name]
+            k, c, kh, kw = lw.w.shape
+            _w_str(f, name)
+            f.write(struct.pack("<IIII", k, c, kh, kw))
+            f.write(struct.pack("<fi", float(lw.scale), int(lw.vth_q)))
+            f.write(np.asarray(lw.bias, dtype="<i4").tobytes())
+            f.write(np.asarray(lw.w, dtype=np.int8).tobytes())
+
+
+def read_snnw(path: str) -> dict[str, QuantLayer]:
+    """Read a SNNW weights file."""
+    out: dict[str, QuantLayer] = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"SNNW", "bad magic"
+        version, n = struct.unpack("<II", f.read(8))
+        assert version == 1, version
+        for _ in range(n):
+            (slen,) = struct.unpack("<I", f.read(4))
+            name = f.read(slen).decode("utf-8")
+            k, c, kh, kw = struct.unpack("<IIII", f.read(16))
+            scale, vth_q = struct.unpack("<fi", f.read(8))
+            bias = np.frombuffer(f.read(4 * k), dtype="<i4").copy()
+            w = (
+                np.frombuffer(f.read(k * c * kh * kw), dtype=np.int8)
+                .reshape(k, c, kh, kw)
+                .copy()
+            )
+            out[name] = QuantLayer(w=w, bias=bias, scale=scale, vth_q=vth_q)
+    return out
+
+
+def write_snnd(path: str, images: list[np.ndarray], boxes: list[np.ndarray]) -> None:
+    """Write a SNND dataset.
+
+    ``images[i]`` is uint8 (3, h, w); ``boxes[i]`` is float32 (n, 5) rows of
+    ``(class_id, cx, cy, w, h)``.
+    """
+    assert len(images) == len(boxes)
+    with open(path, "wb") as f:
+        f.write(b"SNND")
+        f.write(struct.pack("<II", 1, len(images)))
+        for img, bxs in zip(images, boxes):
+            assert img.dtype == np.uint8 and img.ndim == 3 and img.shape[0] == 3
+            _, h, w = img.shape
+            f.write(struct.pack("<II", w, h))
+            f.write(img.tobytes())
+            f.write(struct.pack("<I", len(bxs)))
+            for row in bxs:
+                f.write(struct.pack("<Iffff", int(row[0]), *map(float, row[1:5])))
+
+
+def read_snnd(path: str) -> tuple[list[np.ndarray], list[np.ndarray]]:
+    """Read a SNND dataset → (images, boxes)."""
+    images, boxes = [], []
+    with open(path, "rb") as f:
+        assert f.read(4) == b"SNND", "bad magic"
+        version, n = struct.unpack("<II", f.read(8))
+        assert version == 1, version
+        for _ in range(n):
+            w, h = struct.unpack("<II", f.read(8))
+            img = (
+                np.frombuffer(f.read(3 * h * w), dtype=np.uint8)
+                .reshape(3, h, w)
+                .copy()
+            )
+            (nb,) = struct.unpack("<I", f.read(4))
+            rows = np.zeros((nb, 5), np.float32)
+            for i in range(nb):
+                cid, cx, cy, bw, bh = struct.unpack("<Iffff", f.read(20))
+                rows[i] = (cid, cx, cy, bw, bh)
+            images.append(img)
+            boxes.append(rows)
+    return images, boxes

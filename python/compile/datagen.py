@@ -1,0 +1,109 @@
+"""Synthetic IVS-3cls-like driving scenes (build-path twin of
+`rust/src/detect/dataset.rs`).
+
+The real IVS 3cls dataset is proprietary; this generator produces the same
+task shape — road scenes with perspective-scaled vehicles / bikes /
+pedestrians and exact box ground truth — and writes the shared ``SNND``
+format the rust request path reads. The scene *spec* matches the rust
+generator (same classes, aspect ratios, perspective model); pixel-level
+RNG differs, which is fine: rust consumes these files, it never needs to
+re-generate identical pixels.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+CLASS_NAMES = ("bike", "vehicle", "pedestrian")
+NUM_CLASSES = 3
+
+
+def synth_scene(w: int, h: int, rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
+    """One scene → (uint8 image (3,h,w), float32 boxes (n,5))."""
+    img = np.zeros((3, h, w), np.float32)
+    horizon = int(h * rng.uniform(0.35, 0.5))
+    sky = rng.uniform([100, 140, 200], [160, 200, 255])
+    road = rng.uniform(60, 110)
+    # Sky gradient.
+    t = (np.arange(horizon) / max(horizon, 1))[:, None]
+    img[0, :horizon] = sky[0] * (1 - 0.3 * t)
+    img[1, :horizon] = sky[1] * (1 - 0.2 * t)
+    img[2, :horizon] = sky[2]
+    # Road with mild depth shading.
+    ys = np.arange(horizon, h)[:, None]
+    shade = road + (ys - horizon) / 8.0
+    img[0, horizon:] = shade
+    img[1, horizon:] = shade
+    img[2, horizon:] = shade + 5
+    # Lane markings.
+    for lane in range(3):
+        x0 = w * (lane + 1) // 4
+        for y in range(horizon, h - 4, 8):
+            spread = (y - horizon) // 24 + 1
+            img[:2, y : y + 3, max(0, x0 - spread // 2) : min(w, x0 + spread // 2 + 1)] = 230
+            img[2, y : y + 3, max(0, x0 - spread // 2) : min(w, x0 + spread // 2 + 1)] = 200
+    img += rng.uniform(-6, 6, size=img.shape)
+
+    n_obj = rng.integers(1, 5)
+    depths = np.sort(rng.uniform(0.25, 1.0, n_obj))
+    boxes = []
+    for depth in depths:
+        cid = int(rng.integers(0, NUM_CLASSES))
+        cy = horizon / h + depth * (1 - horizon / h) * 0.75
+        scale = 0.3 + 0.7 * depth
+        bw, bh = {
+            0: (0.09 * scale, 0.15 * scale),
+            1: (0.24 * scale, 0.16 * scale),
+            2: (0.055 * scale, 0.20 * scale),
+        }[cid]
+        cx = rng.uniform(bw / 2 + 0.01, 1 - bw / 2 - 0.01)
+        _draw_object(img, cid, cx, cy, bw, bh, rng)
+        boxes.append((cid, cx, cy, bw, bh))
+    return (
+        np.clip(img, 0, 255).astype(np.uint8),
+        np.asarray(boxes, np.float32).reshape(-1, 5),
+    )
+
+
+def _draw_object(img, cid, cx, cy, bw, bh, rng) -> None:
+    _, h, w = img.shape
+    x0, x1 = int((cx - bw / 2) * w), int((cx + bw / 2) * w)
+    y0, y1 = int((cy - bh / 2) * h), int((cy + bh / 2) * h)
+    x0, y0 = max(x0, 0), max(y0, 0)
+    x1, y1 = min(x1, w), min(y1, h)
+    if x1 <= x0 or y1 <= y0:
+        return
+    pw, ph = x1 - x0, y1 - y0
+
+    def fill(ax0, ay0, ax1, ay1, c):
+        ax0, ay0 = max(ax0, 0), max(ay0, 0)
+        ax1, ay1 = min(ax1, w), min(ay1, h)
+        if ax1 > ax0 and ay1 > ay0:
+            img[:, ay0:ay1, ax0:ax1] = np.asarray(c, np.float32)[:, None, None]
+
+    if cid == 0:  # bike: frame + two dark wheels
+        c = rng.uniform([150, 40, 30], [230, 90, 80])
+        fill(x0 + pw // 4, y0, x1 - pw // 4, y1 - ph // 3, c)
+        fill(x0, y1 - ph // 3, x0 + pw // 3 + 1, y1, [20, 20, 20])
+        fill(x1 - pw // 3 - 1, y1 - ph // 3, x1, y1, [20, 20, 20])
+    elif cid == 1:  # vehicle: body + cabin + wheels
+        c = rng.uniform(30, 220, 3)
+        fill(x0, y0 + ph // 4, x1, y1 - ph // 6, c)
+        fill(x0 + pw // 5, y0, x1 - pw // 5, y0 + ph // 4 + 1, c / 2)
+        fill(x0 + pw // 8, y1 - ph // 6, x0 + pw // 4, y1, [15, 15, 15])
+        fill(x1 - pw // 4, y1 - ph // 6, x1 - pw // 8, y1, [15, 15, 15])
+    else:  # pedestrian: body column + head
+        c = rng.uniform([140, 100, 60], [220, 180, 140])
+        fill(x0, y0 + ph // 5, x1, y1, c)
+        fill(x0 + pw // 4, y0, x1 - pw // 4, y0 + ph // 5 + 1, [224, 180, 150])
+
+
+def generate(n: int, w: int, h: int, seed: int) -> tuple[list[np.ndarray], list[np.ndarray]]:
+    """Generate ``n`` scenes."""
+    rng = np.random.default_rng(seed)
+    images, boxes = [], []
+    for _ in range(n):
+        img, bxs = synth_scene(w, h, rng)
+        images.append(img)
+        boxes.append(bxs)
+    return images, boxes

@@ -1,0 +1,119 @@
+"""NumPy detection utilities for the build path: YOLOv2 decode, NMS, and
+VOC-style mAP — the python twin of `rust/src/detect/` (same formulas) so
+``train.py`` can report Table I/II metrics without the rust binary.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .model import ANCHORS, NUM_CLASSES
+
+
+def _sigmoid(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+def decode(head: np.ndarray, conf_thresh: float = 0.1) -> np.ndarray:
+    """Decode a head map (HEAD_CH, gh, gw) → (n, 6) rows of
+    ``(class_id, cx, cy, w, h, score)``."""
+    per = 5 + NUM_CLASSES
+    gh, gw = head.shape[1], head.shape[2]
+    dets = []
+    for a, (pw, ph) in enumerate(ANCHORS):
+        blk = head[a * per : (a + 1) * per]
+        obj = _sigmoid(blk[4])
+        logits = blk[5:]
+        logits = logits - logits.max(axis=0, keepdims=True)
+        probs = np.exp(logits)
+        probs /= probs.sum(axis=0, keepdims=True)
+        cls = probs.argmax(axis=0)
+        score = obj * probs.max(axis=0)
+        ii, jj = np.nonzero(score >= conf_thresh)
+        for i, j in zip(ii, jj):
+            bw = min(pw * np.exp(np.clip(blk[2, i, j], -6, 6)) / gw, 1.0)
+            bh = min(ph * np.exp(np.clip(blk[3, i, j], -6, 6)) / gh, 1.0)
+            dets.append(
+                (
+                    cls[i, j],
+                    (j + _sigmoid(blk[0, i, j])) / gw,
+                    (i + _sigmoid(blk[1, i, j])) / gh,
+                    bw,
+                    bh,
+                    score[i, j],
+                )
+            )
+    return np.asarray(dets, np.float64).reshape(-1, 6)
+
+
+def iou(a: np.ndarray, b: np.ndarray) -> float:
+    """IoU of two (cx, cy, w, h) boxes."""
+    ax0, ay0, ax1, ay1 = a[0] - a[2] / 2, a[1] - a[3] / 2, a[0] + a[2] / 2, a[1] + a[3] / 2
+    bx0, by0, bx1, by1 = b[0] - b[2] / 2, b[1] - b[3] / 2, b[0] + b[2] / 2, b[1] + b[3] / 2
+    ix = max(0.0, min(ax1, bx1) - max(ax0, bx0))
+    iy = max(0.0, min(ay1, by1) - max(ay0, by0))
+    inter = ix * iy
+    union = a[2] * a[3] + b[2] * b[3] - inter
+    return inter / union if union > 0 else 0.0
+
+
+def nms(dets: np.ndarray, iou_thresh: float = 0.45) -> np.ndarray:
+    """Greedy per-class NMS on (n, 6) rows."""
+    if len(dets) == 0:
+        return dets
+    order = np.argsort(-dets[:, 5])
+    keep = []
+    for idx in order:
+        d = dets[idx]
+        if any(k[0] == d[0] and iou(k[1:5], d[1:5]) > iou_thresh for k in keep):
+            continue
+        keep.append(d)
+    return np.asarray(keep).reshape(-1, 6)
+
+
+def average_precision(dets, gts, iou_thresh=0.5) -> float:
+    """AP for one class. ``dets``: list of (img, row6); ``gts``: list of
+    (img, row5)."""
+    if not gts:
+        return 1.0 if not dets else 0.0
+    dets = sorted(dets, key=lambda d: -d[1][5])
+    matched = [False] * len(gts)
+    tp, fp = [], []
+    for img, d in dets:
+        best, best_iou = None, 0.0
+        for gi, (gimg, g) in enumerate(gts):
+            if gimg != img or matched[gi]:
+                continue
+            v = iou(d[1:5], g[1:5])
+            if v >= iou_thresh and v > best_iou:
+                best, best_iou = gi, v
+        if best is not None:
+            matched[best] = True
+            tp.append(1)
+            fp.append(0)
+        else:
+            tp.append(0)
+            fp.append(1)
+    tp = np.cumsum(tp)
+    fp = np.cumsum(fp)
+    recall = tp / len(gts)
+    precision = tp / np.maximum(tp + fp, 1)
+    # All-points interpolation.
+    for i in range(len(precision) - 2, -1, -1):
+        precision[i] = max(precision[i], precision[i + 1])
+    ap, prev_r = 0.0, 0.0
+    for r, p in zip(recall, precision):
+        ap += (r - prev_r) * p
+        prev_r = r
+    return float(ap)
+
+
+def mean_ap(all_dets, all_gts, iou_thresh=0.5) -> dict:
+    """mAP over the dataset. ``all_dets[i]``: (n,6) per image; ``all_gts[i]``:
+    (m,5) per image. Returns {"ap": [per class], "mean": float}."""
+    aps = []
+    for c in range(NUM_CLASSES):
+        d = [(i, row) for i, rows in enumerate(all_dets) for row in rows if int(row[0]) == c]
+        g = [(i, row) for i, rows in enumerate(all_gts) for row in rows if int(row[0]) == c]
+        aps.append(average_precision(d, g, iou_thresh))
+    return {"ap": aps, "mean": float(np.mean(aps))}

@@ -1,0 +1,50 @@
+"""Regenerate the HLO artifacts from an existing ``weights_tiny.bin``
+without retraining (used when only the export path changed)::
+
+    cd python && python -m compile.export_hlo --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .aot import to_hlo_text
+from .binfmt import read_snnd, read_snnw
+from .model import build_network, snn_forward_quant
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    net = build_network("tiny", t=3, ts_mode="C2")
+    q = read_snnw(os.path.join(args.out_dir, "weights_tiny.bin"))
+    spec = jax.ShapeDtypeStruct((3, net.input_h, net.input_w), jnp.uint8)
+    for fname, use_pallas in [("model_tiny.hlo.txt", False), ("model_tiny_pallas.hlo.txt", True)]:
+        lowered = jax.jit(
+            lambda img, up=use_pallas: (snn_forward_quant(q, net, img, use_pallas=up),)
+        ).lower(spec)
+        hlo = to_hlo_text(lowered)
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(hlo)
+        print(f"wrote {len(hlo)/1e6:.2f} MB → {fname}")
+    # Refresh the cross-check vector and pin both graphs together.
+    imgs, _ = read_snnd(os.path.join(args.out_dir, "dataset_test.bin"))
+    ref = np.asarray(
+        jax.jit(lambda im: snn_forward_quant(q, net, im, use_pallas=False))(jnp.asarray(imgs[0]))
+    )
+    pal = np.asarray(
+        jax.jit(lambda im: snn_forward_quant(q, net, im, use_pallas=True))(jnp.asarray(imgs[0]))
+    )
+    assert (ref == pal).all(), "pallas and oracle graphs disagree"
+    ref.astype("<i4").tofile(os.path.join(args.out_dir, "selfcheck_head_acc.bin"))
+    print("selfcheck refreshed; pallas ≡ oracle confirmed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Layer-1 Pallas kernel: the gated one-to-all product (§III-B-1).
+
+One grid instance computes one output channel of a spike-conv layer over
+the whole resident tile: for every kernel position ``(r, c)`` the input
+window shifted by ``(r−1, c−1)`` (the *enable map*) gates the accumulation
+of that position's weight across all output neurons in parallel — a
+scatter-free sparse convolution.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the 28nm ASIC skips
+zero weights in *time* (one cycle per nonzero). A TPU kernel has static
+shapes, so the skip becomes a *multiply-free masked accumulate*: zero
+weights contribute nothing and the VPU processes the whole enable map per
+step; cycle-level skipping is modeled by the rust simulator instead. The
+input tile stays resident in VMEM across all kernel positions and output
+channels (BlockSpec pins it), mirroring the Input-SRAM residency of the
+chip; weights stream per output channel like the NZ-Weight SRAM reads.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO, which both pytest and
+the rust runtime execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import sat_i16
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int):
+    """One output channel: gated one-to-all accumulation.
+
+    ``x_ref``: (C, H+2ph, W+2pw) int32 replicate-padded spikes (VMEM);
+    ``w_ref``: (C, kh, kw) int32 weights for this output channel;
+    ``b_ref``: (1,) int32 bias; ``o_ref``: (H, W) int32 accumulator out.
+    """
+    c_in = x_ref.shape[0]
+    h, w = o_ref.shape
+    acc = jnp.full((h, w), b_ref[0], jnp.int32)
+    # Python loops unroll at trace time: kh·kw·C static steps, matching the
+    # KTBC inner loop (C innermost is the hardware order; any order is
+    # associative here).
+    for r in range(kh):
+        for col in range(kw):
+            for c in range(c_in):
+                enable = x_ref[c, r : r + h, col : col + w]
+                acc = acc + enable * w_ref[c, r, col]
+    o_ref[...] = sat_i16(acc)
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw"))
+def gated_conv2d(x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray, *, kh: int, kw: int) -> jnp.ndarray:
+    """Gated one-to-all convolution of a full layer.
+
+    ``x``: int32 (C, H, W) spikes (or pixels/bit planes); ``w``: int32
+    (K, C, kh, kw); ``bias``: int32 (K,). Returns int32 (K, H, W) 16-bit
+    saturated accumulators — bit-exact with ``ref.conv2d_int``.
+    """
+    c_in, h, width = x.shape
+    k = w.shape[0]
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x.astype(jnp.int32), ((0, 0), (ph, ph), (pw, pw)), mode="edge")
+    kernel = functools.partial(_kernel, kh=kh, kw=kw)
+    return pl.pallas_call(
+        kernel,
+        grid=(k,),
+        in_specs=[
+            # Input tile resident across the whole grid (VMEM pinning).
+            pl.BlockSpec((c_in, h + 2 * ph, width + 2 * pw), lambda i: (0, 0, 0)),
+            # One output channel's weights per grid step (leading dim
+            # squeezed away inside the kernel).
+            pl.BlockSpec((None, c_in, kh, kw), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((None, h, width), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, h, width), jnp.int32),
+        interpret=True,
+    )(xp, w.astype(jnp.int32), bias.astype(jnp.int32))

@@ -1,0 +1,86 @@
+"""Layer-1 Pallas kernel: the LIF membrane update (Fig 7's LIF module).
+
+One grid instance advances one time step's worth of neurons for a channel
+block: leak (truncate-toward-zero ×0.25 shift), integrate, compare against
+``vth_q``, hard reset, 8-bit saturating membrane store — exactly the
+datapath of the chip's LIF unit and of ``ref.lif_chain``.
+
+The time recurrence stays outside (a `lax.scan` in the L2 model): membrane
+state is carried as a kernel input/output pair, mirroring the hardware's
+vmem registers being read and written every step.
+
+``interpret=True`` for CPU-PJRT executability (see gated_conv.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import I8_MAX, I8_MIN
+
+
+def _kernel(acc_ref, vmem_ref, fired_ref, vth_ref, out_spike_ref, out_vmem_ref, out_fired_ref):
+    """One LIF step over a flat neuron block."""
+    vmem = vmem_ref[...]
+    acc = acc_ref[...]
+    fired = fired_ref[...]
+    residual = jnp.where(fired != 0, 0, vmem)
+    leaked = jnp.where(residual >= 0, residual >> 2, -((-residual) >> 2))
+    u = leaked + acc
+    s = (u >= vth_ref[0]).astype(jnp.int32)
+    out_spike_ref[...] = s
+    out_vmem_ref[...] = jnp.clip(u, I8_MIN, I8_MAX)
+    out_fired_ref[...] = s
+
+
+@jax.jit
+def lif_step(
+    acc: jnp.ndarray, vmem: jnp.ndarray, fired: jnp.ndarray, vth_q: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One LIF time step via the Pallas kernel.
+
+    All arrays int32, any (flattenable) shape; ``vth_q`` scalar int32 array.
+    Returns ``(spikes, new_vmem, new_fired)``.
+    """
+    shape = acc.shape
+    flat = lambda a: a.reshape(-1).astype(jnp.int32)
+    n = acc.size
+    spikes, new_vmem, new_fired = pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(flat(acc), flat(vmem), flat(fired), jnp.atleast_1d(vth_q).astype(jnp.int32))
+    return spikes.reshape(shape), new_vmem.reshape(shape), new_fired.reshape(shape)
+
+
+def lif_chain_pallas(accs: jnp.ndarray, vth_q) -> jnp.ndarray:
+    """LIF over a (T, …) stack using the Pallas step kernel.
+
+    Matches ``ref.lif_chain`` bit-exactly.
+    """
+    def step(carry, acc):
+        vmem, fired = carry
+        spikes, vmem, fired = lif_step(acc, vmem, fired, jnp.asarray(vth_q, jnp.int32))
+        return (vmem, fired), spikes
+
+    zero = jnp.zeros(accs.shape[1:], jnp.int32)
+    _, spikes = jax.lax.scan(step, (zero, zero), accs)
+    return spikes

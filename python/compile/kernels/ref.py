@@ -1,0 +1,86 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Semantics are the project-wide integer datapath contract (see
+`rust/src/ref_impl/conv.rs`):
+
+- stride-1 same-size convolution, **replicate** boundary padding;
+- int32 accumulation, saturation to the PE's 16-bit domain at the end of
+  each conv;
+- LIF: ``u[t] = leak(u[t-1]·(1−s[t-1])) + I[t]``, ``s = u ≥ vth``, with the
+  hardware leak (×0.25 as a truncate-toward-zero shift) and 8-bit
+  saturating membrane storage.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+I16_MIN, I16_MAX = -(2**15), 2**15 - 1
+I8_MIN, I8_MAX = -128, 127
+
+
+def sat_i16(x: jnp.ndarray) -> jnp.ndarray:
+    """Saturate int32 to the 16-bit accumulator domain."""
+    return jnp.clip(x, I16_MIN, I16_MAX)
+
+
+def sat_i8(x: jnp.ndarray) -> jnp.ndarray:
+    """Saturate int32 to 8-bit membrane storage."""
+    return jnp.clip(x, I8_MIN, I8_MAX)
+
+
+def leak(v: jnp.ndarray) -> jnp.ndarray:
+    """The hardware leak: ×0.25 as an arithmetic shift truncating toward
+    zero (`QuantParams::leak` in rust)."""
+    return jnp.where(v >= 0, v >> 2, -((-v) >> 2))
+
+
+def conv2d_int(x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    """Integer same-size conv with replicate padding.
+
+    ``x``: int32 (C, H, W); ``w``: int32 (K, C, kh, kw); ``bias``: int32
+    (K,). Returns int32 (K, H, W), 16-bit saturated.
+    """
+    kh, kw = w.shape[2], w.shape[3]
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw)), mode="edge")
+    # Compute in f32 and cast back: every accumulator in this network is
+    # bounded by c_in·k²·127·255 < 2²⁴, so f32 is exact — and float conv
+    # is the only convolution the rust client's xla_extension 0.5.1
+    # compiles correctly (integer conv miscompiles there; the pytest
+    # oracle tests pin exactness against the integer Pallas kernels).
+    out = lax.conv_general_dilated(
+        xp[None].astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0].astype(jnp.int32)
+    return sat_i16(out + bias[:, None, None])
+
+
+def lif_chain(accs: jnp.ndarray, vth_q) -> jnp.ndarray:
+    """Run the LIF over a (T, …) stack of integer conv results.
+
+    Returns spikes (T, …) int32 ∈ {0,1}.
+    """
+
+    def step(carry, acc):
+        vmem, fired = carry
+        residual = jnp.where(fired, 0, vmem)
+        u = leak(residual) + acc
+        s = u >= vth_q
+        return (sat_i8(u), s), s.astype(jnp.int32)
+
+    zero = jnp.zeros(accs.shape[1:], jnp.int32)
+    _, spikes = lax.scan(step, (zero, zero.astype(bool)), accs)
+    return spikes
+
+
+def maxpool2x2_or(x: jnp.ndarray) -> jnp.ndarray:
+    """2×2 stride-2 OR pooling on a binary (C, H, W) map."""
+    c, h, w = x.shape
+    x = x[:, : h // 2 * 2, : w // 2 * 2]
+    x = x.reshape(c, h // 2, 2, w // 2, 2)
+    return (x.sum(axis=(2, 4)) > 0).astype(jnp.int32)

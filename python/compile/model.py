@@ -1,0 +1,518 @@
+"""Layer-2 JAX model: the paper's SNN object-detection network (§II).
+
+Three faces of the same network:
+
+1. **Float training model** — STBP surrogate-gradient LIF [21] with
+   threshold-dependent batch norm (tdBN) [22], CSP basic blocks, mixed
+   time steps, YOLOv2 head. Used by ``train.py``.
+2. **Quantized integer inference model** — BN folded into 8-bit weights,
+   integer LIF (shift leak, saturating vmem) built from the Layer-1
+   Pallas kernels. **Bit-exact** with the rust golden model
+   (`rust/src/ref_impl/snn.rs`, whole-image conv mode); this is the graph
+   ``aot.py`` lowers to HLO text for the rust runtime.
+3. **ANN / QNN / BNN comparison variants** (Table II) — same topology,
+   ReLU / fake-quant / sign activations, no time dimension.
+
+The layer list mirrors `rust/src/model/topology.rs` exactly (names,
+shapes, time steps, CSP wiring); `tests/test_model.py` pins the geometry.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .binfmt import QuantLayer
+from .kernels.gated_conv import gated_conv2d
+from .kernels.lif import lif_chain_pallas
+from .kernels.ref import maxpool2x2_or, sat_i16
+
+VTH = 0.5  # LIF threshold (§II-A)
+LEAK = 0.25  # LIF leak (×0.25 = >>2)
+NUM_ANCHORS = 5
+NUM_CLASSES = 3
+HEAD_CH = NUM_ANCHORS * (5 + NUM_CLASSES)
+ANCHORS = ((0.6, 1.2), (1.2, 1.0), (2.2, 1.6), (3.5, 2.4), (5.5, 3.5))
+
+
+# --------------------------------------------------------------------------
+# Topology (mirror of rust/src/model/topology.rs)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class LayerSpec:
+    """One conv layer as the hardware sees it."""
+
+    name: str
+    kind: str  # "encoding" | "spike" | "output"
+    c_in: int
+    c_out: int
+    k: int
+    in_t: int
+    out_t: int
+    maxpool_after: bool
+    in_w: int = 0
+    in_h: int = 0
+    concat_with: str | None = None
+    input_from: str | None = None
+
+
+@dataclass
+class NetworkSpec:
+    """The full network."""
+
+    name: str
+    input_w: int
+    input_h: int
+    layers: list[LayerSpec] = field(default_factory=list)
+
+    def layer(self, name: str) -> LayerSpec:
+        return next(l for l in self.layers if l.name == name)
+
+    def grid(self) -> tuple[int, int]:
+        last = self.layers[-1]
+        w = last.in_w // 2 if last.maxpool_after else last.in_w
+        h = last.in_h // 2 if last.maxpool_after else last.in_h
+        return w, h
+
+
+def build_network(scale: str = "tiny", t: int = 3, ts_mode: str = "C2", ts_blocks: int = 0) -> NetworkSpec:
+    """Build the paper network. ``ts_mode`` ∈ {"uniform","C1","C2","C2B"}
+    selects the mixed-time-step configuration (Fig 15); ``ts_blocks`` is
+    the X of C2BX."""
+    iw, ih = (1024, 576) if scale == "full" else (320, 192)
+    d = 1 if scale == "full" else 4
+    one_convs = {"uniform": 0, "C1": 1, "C2": 2, "C2B": 2}[ts_mode]
+    one_blocks = ts_blocks if ts_mode == "C2B" else 0
+
+    net = NetworkSpec(name=f"ivs3cls-{scale}-{ts_mode}{ts_blocks or ''}", input_w=iw, input_h=ih)
+    state = {"w": iw, "h": ih, "convs": 0, "blocks": 0}
+
+    def in_one() -> bool:
+        if state["convs"] < one_convs:
+            return True
+        return one_convs == 2 and state["blocks"] < one_blocks
+
+    def next_one(kind: str) -> bool:
+        if kind == "output":
+            return False
+        nc = state["convs"] + 1
+        if nc < one_convs:
+            return True
+        return one_convs == 2 and state["blocks"] < one_blocks
+
+    def push(spec: LayerSpec) -> None:
+        spec.in_w, spec.in_h = state["w"], state["h"]
+        if spec.maxpool_after:
+            state["w"] //= 2
+            state["h"] //= 2
+        net.layers.append(spec)
+
+    def conv(name, kind, c_in, c_out, k, pool):
+        it = 1 if in_one() else t
+        ot = 1 if kind == "output" else (1 if next_one(kind) else t)
+        if kind == "output":
+            ot = 1
+        push(LayerSpec(name, kind, c_in, c_out, k, it, ot, pool))
+        state["convs"] += 1
+
+    def basic_block(name, c_in, c_out, c_s, pool):
+        c_sh = c_s // 2
+        it = 1 if in_one() else t
+        block_input = net.layers[-1].name
+        push(LayerSpec(f"{name}.stack1", "spike", c_in, c_s, 3, it, it, False))
+        push(LayerSpec(f"{name}.stack2", "spike", c_s, c_s, 3, it, it, False))
+        push(
+            LayerSpec(
+                f"{name}.short", "spike", c_in, c_sh, 1, it, it, False, input_from=block_input
+            )
+        )
+        state["blocks"] += 1
+        ot = 1 if next_one("spike") else t
+        state["convs"] += 4
+        push(
+            LayerSpec(
+                f"{name}.agg",
+                "spike",
+                c_s + c_sh,
+                c_out,
+                1,
+                it,
+                ot,
+                pool,
+                concat_with=f"{name}.short",
+                input_from=f"{name}.stack2",
+            )
+        )
+
+    conv("enc", "encoding", 3, 32 // d, 3, True)
+    conv("conv1", "spike", 32 // d, 64 // d, 3, True)
+    basic_block("b1", 64 // d, 128 // d, 64 // d, True)
+    basic_block("b2", 128 // d, 256 // d, 128 // d, True)
+    basic_block("b3", 256 // d, 512 // d, 256 // d, True)
+    basic_block("b4", 512 // d, 512 // d, 192 // d, False)
+    conv("head", "output", 512 // d, HEAD_CH, 1, False)
+    return net
+
+
+# --------------------------------------------------------------------------
+# Float training model (STBP + tdBN)
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def spike_fn(u: jnp.ndarray) -> jnp.ndarray:
+    """Heaviside spike with STBP rectangular surrogate gradient."""
+    return (u >= VTH).astype(u.dtype)
+
+
+def _spike_fwd(u):
+    return spike_fn(u), u
+
+
+def _spike_bwd(u, g):
+    # Rectangular window of width 1 centred on the threshold [21].
+    surr = (jnp.abs(u - VTH) < 0.5).astype(u.dtype)
+    return (g * surr,)
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+def init_params(net: NetworkSpec, seed: int) -> dict:
+    """He-style init for conv weights + tdBN scale/shift (per channel)."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for l in net.layers:
+        fan_in = l.c_in * l.k * l.k
+        w = rng.normal(0, np.sqrt(2.0 / fan_in), (l.c_out, l.c_in, l.k, l.k))
+        p = {"w": jnp.asarray(w, jnp.float32)}
+        if l.kind == "output":
+            # Objectness logits start at −3 (σ ≈ 0.05) so the detector
+            # begins from "nothing anywhere" instead of spending its first
+            # hundred steps suppressing 300 cells — standard RetinaNet-style
+            # prior initialization, big win at small step budgets.
+            b = np.zeros(l.c_out, np.float32)
+            per = 5 + NUM_CLASSES
+            b[4::per] = -3.0
+            p["b"] = jnp.asarray(b)
+        else:
+            # tdBN: γ initialized to Vth per [22] so pre-activations sit at
+            # threshold scale.
+            p["gamma"] = jnp.full((l.c_out,), VTH, jnp.float32)
+            p["beta"] = jnp.zeros((l.c_out,), jnp.float32)
+        params[l.name] = p
+    return params
+
+
+def init_bn_stats(net: NetworkSpec) -> dict:
+    """Running mean/var for export-time BN folding."""
+    return {
+        l.name: {"mean": jnp.zeros((l.c_out,)), "var": jnp.ones((l.c_out,))}
+        for l in net.layers
+        if l.kind != "output"
+    }
+
+
+def _conv_f32(x, w):
+    """Float same-size conv with replicate padding (B, C, H, W)."""
+    ph, pw = w.shape[2] // 2, w.shape[3] // 2
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph, ph), (pw, pw)), mode="edge")
+    return lax.conv_general_dilated(
+        xp, w, (1, 1), "VALID", dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )
+
+
+def _maxpool_f32(x):
+    b, c, h, w = x.shape
+    return x[:, :, : h // 2 * 2, : w // 2 * 2].reshape(b, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+
+
+def _tdbn(x_t: jnp.ndarray, gamma, beta, stats, momentum, train: bool):
+    """tdBN over the (T, B, H, W) axes per channel. ``x_t``: (T,B,C,H,W)."""
+    if train:
+        mean = x_t.mean(axis=(0, 1, 3, 4))
+        var = x_t.var(axis=(0, 1, 3, 4))
+        new_stats = {
+            "mean": stats["mean"] * (1 - momentum) + mean * momentum,
+            "var": stats["var"] * (1 - momentum) + var * momentum,
+        }
+    else:
+        mean, var = stats["mean"], stats["var"]
+        new_stats = stats
+    inv = 1.0 / jnp.sqrt(var + 1e-5)
+    y = (x_t - mean[:, None, None]) * inv[:, None, None] * gamma[:, None, None] + beta[
+        :, None, None
+    ]
+    return y, new_stats
+
+
+def _lif_float(accs: jnp.ndarray, out_t: int) -> jnp.ndarray:
+    """Float LIF over (T,B,C,H,W) currents → spikes (out_t,B,C,H,W)."""
+
+    def step(carry, acc):
+        vmem, prev_s = carry
+        u = LEAK * vmem * (1.0 - prev_s) + acc
+        s = spike_fn(u)
+        return (u, s), s
+
+    if accs.shape[0] < out_t:
+        accs = jnp.concatenate([accs] + [accs[-1:]] * (out_t - accs.shape[0]), axis=0)
+    zero = jnp.zeros(accs.shape[1:], accs.dtype)
+    _, spikes = lax.scan(step, (zero, zero), accs)
+    return spikes
+
+
+def snn_forward_float(
+    params: dict, bn_stats: dict, net: NetworkSpec, images: jnp.ndarray, *, train: bool, momentum: float = 0.1
+):
+    """Float SNN forward. ``images``: (B, 3, H, W) in [0, 1].
+
+    Returns (head (B, HEAD_CH, gh, gw), new_bn_stats, aux spike rates).
+    """
+    outputs: dict[str, jnp.ndarray] = {}  # name -> (T,B,C,H,W) spikes
+    new_stats = {}
+    rates = {}
+    prev = None
+    head = None
+    for l in net.layers:
+        p = params[l.name]
+        if l.kind == "encoding":
+            x_t = images[None]  # (1,B,3,H,W)
+        else:
+            src = outputs[l.input_from or prev]
+            if l.concat_with is not None:
+                x_t = jnp.concatenate([src, outputs[l.concat_with]], axis=2)
+            else:
+                x_t = src
+        # Conv per input step (vmapped over T).
+        accs = jax.vmap(lambda xt: _conv_f32(xt, p["w"]))(x_t)
+        if l.kind == "output":
+            head = accs.mean(axis=0) + p["b"][:, None, None]
+            break
+        accs, new_stats[l.name] = _tdbn(
+            accs, p["gamma"], p["beta"], bn_stats[l.name], momentum, train
+        )
+        spikes = _lif_float(accs, l.out_t)
+        if l.maxpool_after:
+            spikes = jax.vmap(_maxpool_f32)(spikes)
+        outputs[l.name] = spikes
+        rates[l.name] = spikes.mean()
+        prev = l.name
+        # Free maps no longer needed (memory hygiene for big batches).
+    return head, new_stats, rates
+
+
+# --------------------------------------------------------------------------
+# ANN / QNN / BNN variants (Table II)
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _ste_round(x):
+    return jnp.round(x)
+
+
+_ste_round.defvjp(lambda x: (jnp.round(x), None), lambda _, g: (g,))
+
+
+@jax.custom_vjp
+def _ste_sign(x):
+    return jnp.sign(x) + (x == 0).astype(x.dtype)
+
+
+_ste_sign.defvjp(
+    lambda x: (jnp.sign(x) + (x == 0).astype(x.dtype), x),
+    lambda x, g: (g * (jnp.abs(x) <= 1).astype(x.dtype),),
+)
+
+
+def variant_forward(params, bn_stats, net, images, *, variant: str, act_bits: int = 4, train: bool):
+    """ANN ("ann"), quantized-activation ("qnn"), or binary ("bnn") forward
+    on the same topology, no time dimension."""
+    outputs = {}
+    new_stats = {}
+    prev = None
+    head = None
+    for l in net.layers:
+        p = params[l.name]
+        x = images if l.kind == "encoding" else outputs[l.input_from or prev]
+        if l.kind != "encoding" and l.concat_with is not None:
+            x = jnp.concatenate([x, outputs[l.concat_with]], axis=1)
+        w = p["w"]
+        if variant == "bnn" and l.kind != "output":
+            w = _ste_sign(w) * jnp.mean(jnp.abs(w))
+        acc = _conv_f32(x, w)
+        if l.kind == "output":
+            head = acc + p["b"][:, None, None]
+            break
+        acc_t, new_stats[l.name] = _tdbn(
+            acc[None], p["gamma"], p["beta"], bn_stats[l.name], 0.1, train
+        )
+        y = jnp.maximum(acc_t[0], 0.0)
+        if variant == "qnn":
+            # Fake-quant activations to `act_bits` in [0, 1] (FXP-n).
+            levels = 2**act_bits - 1
+            y = _ste_round(jnp.clip(y, 0, 1) * levels) / levels
+        elif variant == "bnn":
+            y = _ste_sign(y - 0.5) * 0.5 + 0.5  # binary {0,1}
+        if l.maxpool_after:
+            y = _maxpool_f32(y)
+        outputs[l.name] = y
+        prev = l.name
+    return head, new_stats
+
+
+# --------------------------------------------------------------------------
+# BN folding + quantization (→ the rust/AOT integer model)
+# --------------------------------------------------------------------------
+
+
+def fold_and_quantize(params: dict, bn_stats: dict, net: NetworkSpec) -> dict[str, QuantLayer]:
+    """Fold tdBN into the weights and quantize to the chip's 8-bit format.
+
+    Mirrors `QuantParams::from_weight_absmax` exactly: scale =
+    max(absmax/127, 0.5/96); vth_q = round(0.5/scale). The encoding layer
+    additionally folds the /255 input normalization into its weights.
+    """
+    out = {}
+    for l in net.layers:
+        p = params[l.name]
+        w = np.asarray(p["w"], np.float64)
+        if l.kind == "output":
+            w_fold, b_fold = w, np.asarray(p["b"], np.float64)
+        else:
+            st = bn_stats[l.name]
+            inv = 1.0 / np.sqrt(np.asarray(st["var"], np.float64) + 1e-5)
+            g = np.asarray(p["gamma"], np.float64) * inv
+            w_fold = w * g[:, None, None, None]
+            b_fold = np.asarray(p["beta"], np.float64) - np.asarray(st["mean"], np.float64) * g
+        if l.kind == "encoding":
+            w_fold = w_fold / 255.0
+        absmax = np.abs(w_fold).max()
+        # Scale floor = threshold-domain constraint. Spike layers must store
+        # near-threshold residuals in the 8-bit vmem → vth_q ≤ 96. The
+        # encoding layer carries no residual (it fires once, §II-A), so its
+        # threshold only needs to fit the 16-bit accumulator; the looser
+        # floor keeps its /255-folded weights from rounding to zero.
+        vth_cap = 8000.0 if l.kind == "encoding" else 96.0
+        scale = max(absmax / 127.0, 1e-8, VTH / vth_cap)
+        w_q = np.clip(np.round(w_fold / scale), -128, 127).astype(np.int8)
+        b_q = np.clip(np.round(b_fold / scale), -(2**15), 2**15 - 1).astype(np.int32)
+        vth_q = int(round(VTH / scale))
+        out[l.name] = QuantLayer(w=w_q, bias=b_q, scale=float(scale), vth_q=vth_q)
+    return out
+
+
+def prune_fine_grained(qlayers: dict[str, QuantLayer], rate: float) -> dict[str, QuantLayer]:
+    """Fine-grained magnitude pruning (§II-C): zero the smallest ``rate``
+    fraction of each 3×3 layer's weights; 1×1 layers kept intact. Mirrors
+    rust `ModelWeights::prune_fine_grained`."""
+    out = {}
+    for name, lw in qlayers.items():
+        w = lw.w.copy()
+        if w.shape[2] * w.shape[3] > 1:
+            mags = np.sort(np.abs(w.astype(np.int16)).ravel())
+            cut = min(int(len(mags) * rate), len(mags) - 1)
+            thr = max(mags[cut], 1)
+            w[np.abs(w.astype(np.int16)) < thr] = 0
+        out[name] = QuantLayer(w=w, bias=lw.bias.copy(), scale=lw.scale, vth_q=lw.vth_q)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Quantized integer inference (the AOT graph; calls the Pallas kernels)
+# --------------------------------------------------------------------------
+
+
+def snn_forward_quant(
+    qlayers: dict[str, QuantLayer],
+    net: NetworkSpec,
+    image_u8: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Integer forward of one frame. ``image_u8``: (3, H, W) uint8.
+
+    Returns the head accumulator (HEAD_CH, gh, gw) int32 — bit-exact with
+    rust `SnnForward::run(..).head_acc` in whole-image mode.
+
+    ``use_pallas`` selects the Layer-1 Pallas kernels (the architecture
+    contract; pytest pins them against the jnp oracle) vs the pure
+    `lax.conv` oracle graph. Both are bit-identical; the oracle graph is
+    what ships as the *runtime* HLO artifact because the interpret-mode
+    Pallas lowering (per-grid-step while loops) compiles pathologically
+    slowly on the rust client's xla_extension 0.5.1 (see aot.py).
+    """
+    from .kernels.ref import conv2d_int, lif_chain
+
+    conv = (
+        (lambda s, w, b, k: gated_conv2d(s, w, b, kh=k, kw=k))
+        if use_pallas
+        else (lambda s, w, b, k: conv2d_int(s, w, b))
+    )
+    lif = lif_chain_pallas if use_pallas else lif_chain
+    x = image_u8.astype(jnp.int32)
+    outputs: dict[str, jnp.ndarray] = {}
+    prev = None
+    for l in net.layers:
+        lw = qlayers[l.name]
+        w = jnp.asarray(lw.w, jnp.int32)
+        b = jnp.asarray(lw.bias, jnp.int32)
+        if l.kind == "encoding":
+            steps = [x] * l.in_t
+        else:
+            src = outputs[l.input_from or prev]
+            if l.concat_with is not None:
+                other = outputs[l.concat_with]
+                steps = [jnp.concatenate([a, o], axis=0) for a, o in zip(src, other)]
+            else:
+                steps = list(src)
+        # Conv per executed input step — the Layer-1 kernel.
+        accs = [conv(s, w, b, l.k) for s in steps]
+        if l.kind == "output":
+            total = accs[0]
+            for a in accs[1:]:
+                total = total + a
+            return total
+        # Mixed time steps: replay the last computed acc (§II-A).
+        accs_t = jnp.stack([accs[min(t, len(accs) - 1)] for t in range(l.out_t)])
+        spikes = lif(accs_t, lw.vth_q)
+        if l.maxpool_after:
+            spikes = jax.vmap(maxpool2x2_or)(spikes)
+        outputs[l.name] = [spikes[t] for t in range(l.out_t)]
+        prev = l.name
+    raise AssertionError("network has no head layer")
+
+
+def head_to_float(head_acc: np.ndarray, qlayers: dict[str, QuantLayer], in_t: int) -> np.ndarray:
+    """Dequantize the head accumulator: real = acc × scale / T."""
+    return np.asarray(head_acc, np.float64) * qlayers["head"].scale / in_t
+
+
+# Re-export for callers that only need the saturation helper.
+__all__ = [
+    "ANCHORS",
+    "HEAD_CH",
+    "NUM_ANCHORS",
+    "NUM_CLASSES",
+    "LayerSpec",
+    "NetworkSpec",
+    "build_network",
+    "init_params",
+    "init_bn_stats",
+    "snn_forward_float",
+    "variant_forward",
+    "fold_and_quantize",
+    "prune_fine_grained",
+    "snn_forward_quant",
+    "head_to_float",
+    "sat_i16",
+    "spike_fn",
+]

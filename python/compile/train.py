@@ -1,0 +1,291 @@
+"""Build-time training pipeline (§II / §IV-A).
+
+Trains the SNN detector with STBP + tdBN on the synthetic IVS-3cls stand-in,
+applies the model-slimming steps of Table I (fine-grained pruning →
+8-bit quantization; block convolution is evaluated on the rust side), and
+trains the ANN/QNN/BNN comparison variants of Table II. Emits
+``metrics.json`` with the loss curve and every python-side mAP so the rust
+benches can print the paper tables.
+
+This module is build-path only — it never runs at inference time.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import detect_np
+from .model import (
+    ANCHORS,
+    HEAD_CH,
+    NUM_CLASSES,
+    NetworkSpec,
+    build_network,
+    fold_and_quantize,
+    init_bn_stats,
+    init_params,
+    prune_fine_grained,
+    snn_forward_float,
+    variant_forward,
+)
+
+LAMBDA_COORD = 5.0
+LAMBDA_NOOBJ = 0.3
+
+
+# --------------------------------------------------------------------------
+# YOLOv2 target assignment + loss
+# --------------------------------------------------------------------------
+
+
+def assign_targets(boxes: np.ndarray, gw: int, gh: int):
+    """Build dense YOLO targets for one image.
+
+    Returns (obj (A,gh,gw), coords (A,4,gh,gw), cls (A,gh,gw) int)."""
+    na = len(ANCHORS)
+    obj = np.zeros((na, gh, gw), np.float32)
+    coords = np.zeros((na, 4, gh, gw), np.float32)
+    cls = np.zeros((na, gh, gw), np.int32)
+    for row in boxes:
+        cid, cx, cy, bw, bh = row
+        j = min(int(cx * gw), gw - 1)
+        i = min(int(cy * gh), gh - 1)
+        # Best anchor by shape IoU in grid units.
+        tw_g, th_g = bw * gw, bh * gh
+        best_a, best_iou = 0, -1.0
+        for a, (pw, ph) in enumerate(ANCHORS):
+            inter = min(tw_g, pw) * min(th_g, ph)
+            union = tw_g * th_g + pw * ph - inter
+            v = inter / union
+            if v > best_iou:
+                best_a, best_iou = a, v
+        pw, ph = ANCHORS[best_a]
+        tx = np.clip(cx * gw - j, 1e-4, 1 - 1e-4)
+        ty = np.clip(cy * gh - i, 1e-4, 1 - 1e-4)
+        obj[best_a, i, j] = 1.0
+        coords[best_a, :, i, j] = (
+            np.log(tx / (1 - tx)),
+            np.log(ty / (1 - ty)),
+            np.log(max(tw_g / pw, 1e-6)),
+            np.log(max(th_g / ph, 1e-6)),
+        )
+        cls[best_a, i, j] = int(cid)
+    return obj, coords, cls
+
+
+def yolo_loss(head: jnp.ndarray, obj, coords, cls):
+    """YOLOv2-style loss on a batch. ``head``: (B, HEAD_CH, gh, gw)."""
+    b, _, gh, gw = head.shape
+    na = len(ANCHORS)
+    per = 5 + NUM_CLASSES
+    h = head.reshape(b, na, per, gh, gw)
+    pred_xy = h[:, :, 0:2]
+    pred_wh = h[:, :, 2:4]
+    pred_obj = h[:, :, 4]
+    pred_cls = h[:, :, 5:]
+
+    m = obj[:, :, None]  # (B,A,1,gh,gw)
+    coord_loss = (
+        LAMBDA_COORD
+        * (m * ((pred_xy - coords[:, :, 0:2]) ** 2 + (pred_wh - coords[:, :, 2:4]) ** 2)).sum()
+    )
+    # BCE with logits on objectness.
+    bce = jnp.maximum(pred_obj, 0) - pred_obj * obj + jnp.log1p(jnp.exp(-jnp.abs(pred_obj)))
+    obj_loss = (obj * bce).sum() + LAMBDA_NOOBJ * ((1 - obj) * bce).sum()
+    # Cross-entropy on matched cells.
+    logp = jax.nn.log_softmax(pred_cls, axis=2)
+    onehot = jax.nn.one_hot(cls, NUM_CLASSES, axis=2, dtype=head.dtype)
+    cls_loss = -(obj[:, :, None] * onehot * logp).sum()
+    n_pos = jnp.maximum(obj.sum(), 1.0)
+    return (coord_loss + obj_loss + cls_loss) / n_pos
+
+
+# --------------------------------------------------------------------------
+# Minimal Adam (optax unavailable offline)
+# --------------------------------------------------------------------------
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, wd=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vhat = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    # AdamW-style decoupled weight decay (the paper uses AdamW).
+    new_params = jax.tree.map(
+        lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p), params, mhat, vhat
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def lr_schedule(step: int, total: int, base: float = 2e-3) -> float:
+    """Warmup from base/100 over the first 5% then cosine to base/100."""
+    warm = max(total // 20, 1)
+    if step < warm:
+        return base * (0.01 + 0.99 * step / warm)
+    p = (step - warm) / max(total - warm, 1)
+    return base * (0.01 + 0.99 * 0.5 * (1 + np.cos(np.pi * p)))
+
+
+# --------------------------------------------------------------------------
+# Training / evaluation drivers
+# --------------------------------------------------------------------------
+
+
+def batches(images, boxes, batch, rng, gw, gh):
+    """Endless shuffled minibatches of (imgs float [0,1], targets)."""
+    n = len(images)
+    order = rng.permutation(n)
+    i = 0
+    while True:
+        if i + batch > n:
+            order = rng.permutation(n)
+            i = 0
+        idx = order[i : i + batch]
+        i += batch
+        imgs = np.stack([images[k] for k in idx]).astype(np.float32) / 255.0
+        tgt = [assign_targets(boxes[k], gw, gh) for k in idx]
+        obj = np.stack([t[0] for t in tgt])
+        coords = np.stack([t[1] for t in tgt])
+        cls = np.stack([t[2] for t in tgt])
+        yield jnp.asarray(imgs), jnp.asarray(obj), jnp.asarray(coords), jnp.asarray(cls)
+
+
+def make_step_fn(net: NetworkSpec, variant: str | None, act_bits: int = 4):
+    """Jitted (params, bn, batch) → (loss, params, bn) train step."""
+
+    def loss_fn(params, bn, imgs, obj, coords, cls):
+        if variant is None:
+            head, new_bn, _ = snn_forward_float(params, bn, net, imgs, train=True)
+        else:
+            head, new_bn = variant_forward(
+                params, bn, net, imgs, variant=variant, act_bits=act_bits, train=True
+            )
+        return yolo_loss(head, obj, coords, cls), new_bn
+
+    @jax.jit
+    def step(params, bn, opt, lr, imgs, obj, coords, cls):
+        (loss, new_bn), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, bn, imgs, obj, coords, cls
+        )
+        params, opt = adam_update(params, grads, opt, lr)
+        return loss, params, new_bn, opt
+
+    return step
+
+
+def make_masked_step_fn(net: NetworkSpec, masks):
+    """Train step that keeps pruned weights at zero (fine-tuning)."""
+
+    def loss_fn(params, bn, imgs, obj, coords, cls):
+        mp = {
+            k: {**v, "w": v["w"] * masks[k]} if "w" in v else v for k, v in params.items()
+        }
+        head, new_bn, _ = snn_forward_float(mp, bn, net, imgs, train=True)
+        return yolo_loss(head, obj, coords, cls), new_bn
+
+    @jax.jit
+    def step(params, bn, opt, lr, imgs, obj, coords, cls):
+        (loss, new_bn), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, bn, imgs, obj, coords, cls
+        )
+        grads = {
+            k: {kk: (vv * masks[k] if kk == "w" else vv) for kk, vv in v.items()}
+            for k, v in grads.items()
+        }
+        params, opt = adam_update(params, grads, opt, lr)
+        params = {
+            k: {kk: (vv * masks[k] if kk == "w" else vv) for kk, vv in v.items()}
+            for k, v in params.items()
+        }
+        return loss, params, new_bn, opt
+
+    return step
+
+
+def train_model(net, images, boxes, steps, batch=4, variant=None, act_bits=4, seed=0, log=None):
+    """Train one model; returns (params, bn_stats, loss_curve)."""
+    gw, gh = net.grid()
+    params = init_params(net, seed)
+    bn = init_bn_stats(net)
+    opt = adam_init(params)
+    step_fn = make_step_fn(net, variant, act_bits)
+    it = batches(images, boxes, batch, np.random.default_rng(seed), gw, gh)
+    curve = []
+    t0 = time.time()
+    for s in range(steps):
+        imgs, obj, coords, cls = next(it)
+        lr = lr_schedule(s, steps)
+        loss, params, bn, opt = step_fn(params, bn, opt, jnp.float32(lr), imgs, obj, coords, cls)
+        curve.append(float(loss))
+        if log and (s % max(steps // 10, 1) == 0 or s == steps - 1):
+            print(f"[{log}] step {s}/{steps} loss={float(loss):.4f} ({time.time()-t0:.0f}s)")
+    return params, bn, curve
+
+
+def evaluate_float(net, params, bn, images, boxes, variant=None, act_bits=4, batch=8):
+    """mAP of a float model on a dataset."""
+
+    @jax.jit
+    def fwd(imgs):
+        if variant is None:
+            head, _, _ = snn_forward_float(params, bn, net, imgs, train=False)
+        else:
+            head, _ = variant_forward(
+                params, bn, net, imgs, variant=variant, act_bits=act_bits, train=False
+            )
+        return head
+
+    all_dets, all_gts = [], []
+    for i in range(0, len(images), batch):
+        imgs = np.stack(images[i : i + batch]).astype(np.float32) / 255.0
+        heads = np.asarray(fwd(jnp.asarray(imgs)))
+        for bidx in range(heads.shape[0]):
+            dets = detect_np.nms(detect_np.decode(heads[bidx]))
+            all_dets.append(dets)
+            all_gts.append(boxes[i + bidx])
+    return detect_np.mean_ap(all_dets, all_gts)
+
+
+def prune_float_params(params, net, rate=0.8):
+    """Magnitude-prune 3×3 layers in the float domain; returns (params,
+    masks)."""
+    out, masks = {}, {}
+    for l in net.layers:
+        p = dict(params[l.name])
+        w = np.asarray(p["w"])
+        if l.k > 1:
+            mags = np.sort(np.abs(w).ravel())
+            thr = mags[min(int(len(mags) * rate), len(mags) - 1)]
+            mask = (np.abs(w) >= max(thr, 1e-12)).astype(np.float32)
+        else:
+            mask = np.ones_like(w, np.float32)
+        p["w"] = jnp.asarray(w * mask)
+        out[l.name] = p
+        masks[l.name] = jnp.asarray(mask)
+    return out, masks
+
+
+def dense_ops(net: NetworkSpec) -> int:
+    """Dense operation count (2 ops/MAC), mirroring rust
+    `NetworkSpec::dense_ops`."""
+    total = 0
+    for l in net.layers:
+        planes = 8 if l.kind == "encoding" else 1
+        total += 2 * l.c_out * l.c_in * l.k * l.k * l.in_w * l.in_h * l.in_t * planes
+    return total
+
+
+def num_params(net: NetworkSpec) -> int:
+    """Parameter count (weights + biases)."""
+    return sum(l.c_out * l.c_in * l.k * l.k + l.c_out for l in net.layers)

@@ -1,0 +1,63 @@
+"""SNNW / SNND artifact format roundtrips (the rust side re-verifies the
+same bytes in its integration tests)."""
+
+import numpy as np
+
+from compile.binfmt import QuantLayer, read_snnd, read_snnw, write_snnd, write_snnw
+from compile import datagen
+
+
+def test_snnw_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    layers = {
+        "enc": QuantLayer(
+            w=rng.integers(-128, 128, (4, 3, 3, 3)).astype(np.int8),
+            bias=rng.integers(-1000, 1000, (4,)).astype(np.int32),
+            scale=0.0123,
+            vth_q=41,
+        ),
+        "head": QuantLayer(
+            w=rng.integers(-128, 128, (40, 8, 1, 1)).astype(np.int8),
+            bias=np.zeros((40,), np.int32),
+            scale=0.5,
+            vth_q=1,
+        ),
+    }
+    p = str(tmp_path / "w.bin")
+    write_snnw(p, layers)
+    back = read_snnw(p)
+    assert set(back) == set(layers)
+    for k in layers:
+        np.testing.assert_array_equal(back[k].w, layers[k].w)
+        np.testing.assert_array_equal(back[k].bias, layers[k].bias)
+        assert back[k].vth_q == layers[k].vth_q
+        assert abs(back[k].scale - layers[k].scale) < 1e-6
+
+
+def test_snnd_roundtrip(tmp_path):
+    imgs, boxes = datagen.generate(3, 64, 48, seed=1)
+    p = str(tmp_path / "d.bin")
+    write_snnd(p, imgs, boxes)
+    bi, bb = read_snnd(p)
+    assert len(bi) == 3
+    for a, b in zip(imgs, bi):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(boxes, bb):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_datagen_boxes_in_bounds():
+    imgs, boxes = datagen.generate(5, 96, 64, seed=2)
+    for img, bxs in zip(imgs, boxes):
+        assert img.shape == (3, 64, 96) and img.dtype == np.uint8
+        assert len(bxs) >= 1
+        for cid, cx, cy, w, h in bxs:
+            assert 0 <= cid < 3
+            assert 0 <= cx - w / 2 and cx + w / 2 <= 1
+            assert 0 <= cy - h / 2 and cy + h / 2 <= 1
+
+
+def test_datagen_deterministic():
+    a, _ = datagen.generate(2, 48, 32, seed=3)
+    b, _ = datagen.generate(2, 48, 32, seed=3)
+    np.testing.assert_array_equal(a[0], b[0])

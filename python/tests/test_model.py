@@ -1,0 +1,125 @@
+"""Layer-2 model checks: topology pins (mirroring rust
+`model::topology::tests`), float forward shapes, quantization rules, and
+float↔quant consistency of the LIF constants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    HEAD_CH,
+    VTH,
+    build_network,
+    fold_and_quantize,
+    init_bn_stats,
+    init_params,
+    snn_forward_float,
+    snn_forward_quant,
+    variant_forward,
+)
+from compile import train as T
+
+
+def test_topology_matches_rust_geometry():
+    net = build_network("tiny", t=3, ts_mode="C2")
+    assert len(net.layers) == 19
+    assert net.grid() == (10, 6)
+    enc, conv1 = net.layer("enc"), net.layer("conv1")
+    assert (enc.in_t, enc.out_t) == (1, 1)
+    assert (conv1.in_t, conv1.out_t) == (1, 3)
+    b1s1 = net.layer("b1.stack1")
+    assert (b1s1.in_t, b1s1.out_t) == (3, 3)
+    head = net.layer("head")
+    assert (head.in_t, head.out_t) == (3, 1)
+    assert head.c_out == HEAD_CH == 40
+    agg = net.layer("b1.agg")
+    assert agg.input_from == "b1.stack2" and agg.concat_with == "b1.short"
+    assert agg.c_in == net.layer("b1.stack2").c_out + net.layer("b1.short").c_out
+
+
+def test_full_scale_geometry():
+    net = build_network("full", t=3, ts_mode="C2")
+    assert net.grid() == (32, 18)
+    p = T.num_params(net)
+    assert 2_500_000 < p < 4_500_000
+
+
+def test_c2b1_time_region():
+    net = build_network("tiny", t=3, ts_mode="C2B", ts_blocks=1)
+    assert (net.layer("b1.stack2").in_t, net.layer("b1.stack2").out_t) == (1, 1)
+    assert (net.layer("b1.agg").in_t, net.layer("b1.agg").out_t) == (1, 3)
+    assert (net.layer("b2.stack1").in_t, net.layer("b2.stack1").out_t) == (3, 3)
+
+
+def test_mixed_time_steps_reduce_ops():
+    base = T.dense_ops(build_network("tiny", ts_mode="uniform"))
+    c2 = T.dense_ops(build_network("tiny", ts_mode="C2"))
+    assert c2 < base
+    assert 0.05 < 1 - c2 / base < 0.6
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    net = build_network("tiny")
+    params = init_params(net, 0)
+    bn = init_bn_stats(net)
+    return net, params, bn
+
+
+def test_float_forward_shapes(tiny_setup):
+    net, params, bn = tiny_setup
+    imgs = jnp.zeros((2, 3, net.input_h, net.input_w), jnp.float32)
+    head, new_bn, rates = snn_forward_float(params, bn, net, imgs, train=True)
+    gw, gh = net.grid()
+    assert head.shape == (2, HEAD_CH, gh, gw)
+    assert set(new_bn) == {l.name for l in net.layers if l.kind != "output"}
+    assert all(0.0 <= float(r) <= 1.0 for r in rates.values())
+
+
+def test_variant_forward_shapes(tiny_setup):
+    net, params, bn = tiny_setup
+    imgs = jnp.zeros((1, 3, net.input_h, net.input_w), jnp.float32)
+    for variant in ["ann", "qnn", "bnn"]:
+        head, _ = variant_forward(params, bn, net, imgs, variant=variant, train=False)
+        gw, gh = net.grid()
+        assert head.shape == (1, HEAD_CH, gh, gw), variant
+
+
+def test_quantization_rules(tiny_setup):
+    net, params, bn = tiny_setup
+    q = fold_and_quantize(params, bn, net)
+    assert set(q) == {l.name for l in net.layers}
+    for name, lw in q.items():
+        assert lw.w.dtype == np.int8
+        # vth_q = round(0.5/scale); spike layers capped for 8-bit vmem, the
+        # residual-free encoding layer only by the 16-bit accumulator.
+        cap = 8000 if name == "enc" else 96
+        assert 1 <= lw.vth_q <= cap + 1, name
+        assert abs(lw.vth_q - round(VTH / lw.scale)) <= 1
+    # Encoding layer folds /255 → much smaller scale than hidden layers.
+    assert q["enc"].scale < q["b1.stack1"].scale
+    # Its weights must survive quantization (regression: the old global
+    # floor rounded them all to zero).
+    assert (q["enc"].w != 0).any()
+
+
+def test_quant_forward_is_deterministic_and_shaped(tiny_setup):
+    net, params, bn = tiny_setup
+    q = fold_and_quantize(params, bn, net)
+    img = jnp.asarray(np.random.default_rng(0).integers(0, 256, (3, net.input_h, net.input_w)), jnp.uint8)
+    fwd = jax.jit(lambda im: snn_forward_quant(q, net, im))
+    a = np.asarray(fwd(img))
+    b = np.asarray(fwd(img))
+    gw, gh = net.grid()
+    assert a.shape == (HEAD_CH, gh, gw)
+    assert a.dtype == np.int32
+    np.testing.assert_array_equal(a, b)
+
+
+def test_spike_fn_surrogate_gradient():
+    from compile.model import spike_fn
+
+    g = jax.grad(lambda u: spike_fn(u).sum())(jnp.asarray([0.5, 0.2, 5.0]))
+    # Inside the rectangular window (|u-0.5|<0.5) gradient 1, outside 0.
+    np.testing.assert_array_equal(np.asarray(g), [1.0, 1.0, 0.0])

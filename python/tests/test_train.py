@@ -1,0 +1,87 @@
+"""Training-path checks: target assignment, loss behaviour on an
+overfittable micro-batch, detection metrics, pruning."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datagen, detect_np
+from compile import train as T
+from compile.model import ANCHORS, build_network, init_bn_stats, init_params
+
+
+def test_assign_targets_marks_best_anchor():
+    boxes = np.asarray([[1, 0.55, 0.55, 0.3, 0.2]], np.float32)  # wide vehicle
+    obj, coords, cls = T.assign_targets(boxes, gw=10, gh=6)
+    assert obj.sum() == 1.0
+    a, i, j = np.unravel_index(obj.argmax(), obj.shape)
+    assert (i, j) == (3, 5)
+    assert cls[a, i, j] == 1
+    # The matched anchor's prior should be among the wider ones.
+    assert ANCHORS[a][0] >= 1.0
+
+
+def test_yolo_loss_zero_when_perfect():
+    gw, gh = 10, 6
+    boxes = np.asarray([[2, 0.35, 0.45, 0.1, 0.2]], np.float32)
+    obj, coords, cls = T.assign_targets(boxes, gw, gh)
+    na, per = len(ANCHORS), 5 + 3
+    head = np.zeros((1, na * per, gh, gw), np.float32)
+    h = head.reshape(1, na, per, gh, gw)
+    # Perfect prediction: exact coords, +inf/-inf objectness and classes.
+    h[0, :, 4] = -30.0
+    a, i, j = np.unravel_index(obj.argmax(), obj.shape)
+    h[0, a, 0:4, i, j] = coords[a, :, i, j]
+    h[0, a, 4, i, j] = 30.0
+    h[0, a, 5 + int(cls[a, i, j]), i, j] = 30.0
+    loss = T.yolo_loss(
+        jnp.asarray(head), jnp.asarray(obj[None]), jnp.asarray(coords[None]), jnp.asarray(cls[None])
+    )
+    assert float(loss) < 1e-3
+
+
+def test_loss_decreases_on_overfit():
+    net = build_network("tiny")
+    imgs, boxes = datagen.generate(2, net.input_w, net.input_h, seed=5)
+    _, _, curve = T.train_model(net, imgs, boxes, steps=14, batch=2, seed=0)
+    # Compare early vs late averages (noisy, so use windows).
+    early = np.mean(curve[:4])
+    late = np.mean(curve[-4:])
+    assert late < early, f"loss did not decrease: {early} -> {late}"
+
+
+def test_prune_keeps_1x1_dense():
+    net = build_network("tiny")
+    params = init_params(net, 1)
+    pruned, masks = T.prune_float_params(params, net, rate=0.8)
+    short = np.asarray(masks["b1.short"])
+    assert short.min() == 1.0
+    enc = np.asarray(masks["enc"])
+    assert enc.mean() < 0.35
+
+
+def test_decode_nms_ap_pipeline():
+    # Synthesize a perfect head for one GT box and check AP = 1.
+    from compile.model import HEAD_CH, NUM_CLASSES
+
+    gw, gh = 10, 6
+    boxes = np.asarray([[0, 0.32, 0.52, 0.12, 0.18]], np.float32)
+    obj, coords, cls = T.assign_targets(boxes, gw, gh)
+    na, per = len(ANCHORS), 5 + NUM_CLASSES
+    head = np.full((na * per, gh, gw), -20.0, np.float32)
+    h = head.reshape(na, per, gh, gw)
+    a, i, j = np.unravel_index(obj.argmax(), obj.shape)
+    h[a, 0:4, i, j] = coords[a, :, i, j]
+    h[a, 4, i, j] = 20.0
+    h[a, 5 + 0, i, j] = 20.0
+    dets = detect_np.nms(detect_np.decode(head))
+    assert len(dets) == 1
+    r = detect_np.mean_ap([dets], [boxes])
+    assert r["ap"][0] == 1.0
+
+
+def test_lr_schedule_warmup_and_decay():
+    total = 100
+    lrs = [T.lr_schedule(s, total) for s in range(total)]
+    assert lrs[0] < lrs[5] <= max(lrs)
+    assert lrs[-1] < max(lrs) / 10

@@ -1,0 +1,82 @@
+//! Fig 5 — mIoUT of the features at each layer (T = 3).
+//!
+//! High mIoUT at the early layers (features nearly identical across time
+//! steps) is the evidence for dropping their time step to 1 (§II-D). The
+//! golden model runs with spike recording; the metric is Eq. 1.
+
+use scsnn::detect::dataset::Dataset;
+use scsnn::model::miout::MioutAccumulator;
+use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::ref_impl::{ForwardOptions, SnnForward};
+use scsnn::runtime::{load_trained_or_random, ArtifactPaths};
+use scsnn::util::BenchRunner;
+use std::collections::BTreeMap;
+
+fn main() {
+    let mut r = BenchRunner::new("fig05_miout");
+    // Uniform T=3 so every layer's features exist at 3 steps.
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::Uniform(3));
+    let (weights, trained) = load_trained_or_random(&net, 2);
+
+    let paths = ArtifactPaths::in_dir(&ArtifactPaths::default_dir());
+    let ds = if paths.dataset_test.exists() {
+        Dataset::load(&paths.dataset_test).unwrap()
+    } else {
+        Dataset::synth(4, net.input_w, net.input_h, 3)
+    };
+    let frames = ds.samples.len().min(6);
+
+    let fwd = SnnForward::new(
+        &net,
+        &weights,
+        ForwardOptions { block_tile: Some((32, 18)), record_spikes: true },
+    )
+    .unwrap();
+    let mut accs: BTreeMap<String, MioutAccumulator> = BTreeMap::new();
+    for s in ds.samples.iter().take(frames) {
+        let res = fwd.run(&s.image).unwrap();
+        for (name, maps) in &res.spikes {
+            let acc = accs
+                .entry(name.clone())
+                .or_insert_with(|| MioutAccumulator::new(maps[0].c, maps[0].h, maps[0].w));
+            for m in maps {
+                acc.push(m);
+            }
+        }
+    }
+
+    r.section(&format!(
+        "mIoUT per layer ({} weights, {frames} frames, T=3; paper shows ~0.9 early → ~0.4 late)",
+        if trained { "trained" } else { "synthetic" }
+    ));
+    let mut series = Vec::new();
+    for l in &net.layers {
+        if let Some(acc) = accs.get(&l.name) {
+            if let Some(m) = acc.miout() {
+                series.push((l.name.clone(), m));
+                let bar = "#".repeat((m * 40.0) as usize);
+                r.report_row(&format!("{:<12} {:>6.3} | {}", l.name, m, bar));
+            }
+        }
+    }
+    if series.len() >= 4 {
+        let early: f64 =
+            series.iter().take(2).map(|(_, m)| m).sum::<f64>() / 2.0;
+        let late: f64 =
+            series.iter().rev().take(2).map(|(_, m)| m).sum::<f64>() / 2.0;
+        r.report_row(&format!(
+            "shape: early-layer mean {early:.3} vs late-layer mean {late:.3} → {}",
+            if early >= late { "early ≥ late (paper's Fig 5 shape HOLDS)" } else { "inverted (weights untrained?)" }
+        ));
+    }
+
+    // Timing: metric accumulation itself.
+    let maps = &accs.values().next().unwrap();
+    let _ = maps;
+    let t = scsnn::tensor::Tensor::from_vec(8, 48, 80, vec![1u8; 8 * 48 * 80]);
+    r.bench_throughput("miout_push_30k_neurons", t.len() as u64, || {
+        let mut acc = MioutAccumulator::new(8, 48, 80);
+        acc.push(&t);
+        std::hint::black_box(acc.time_steps());
+    });
+}

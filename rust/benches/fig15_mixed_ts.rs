@@ -1,0 +1,66 @@
+//! Fig 15 — effect of mixed time steps on accuracy and operation count.
+//!
+//! Op counts (x-axis) are computed exactly from the topology at both
+//! scales; mAP (y-axis) comes from the python sweep in `metrics.json`
+//! (trained model, inference-only re-evaluation at T3/C1/C2/C2B1..3 —
+//! the paper's own protocol).
+
+use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::runtime::ArtifactPaths;
+use scsnn::util::json::Json;
+use scsnn::util::BenchRunner;
+
+fn main() {
+    let mut r = BenchRunner::new("fig15_mixed_time_steps");
+    let paths = ArtifactPaths::in_dir(&ArtifactPaths::default_dir());
+    let metrics = std::fs::read_to_string(&paths.metrics)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok());
+
+    let configs = [
+        ("T3", TimeStepConfig::Uniform(3)),
+        ("C1", TimeStepConfig::C1(3)),
+        ("C2", TimeStepConfig::C2(3)),
+        ("C2B1", TimeStepConfig::C2B(1, 3)),
+        ("C2B2", TimeStepConfig::C2B(2, 3)),
+        ("C2B3", TimeStepConfig::C2B(3, 3)),
+    ];
+
+    r.section("paper series (3.17M model @1024×576): T3 24.4→C2 20.2 GOP; mAP 73.9→73.3, dropping hard past C2B1");
+    r.section("reproduction series");
+    r.report_row("config | full GOP | tiny GOP | tiny mAP (python)");
+    let full_base = NetworkSpec::paper(Scale::Full, TimeStepConfig::Uniform(3)).dense_ops() as f64;
+    let mut c2_drop = (0.0, 0.0);
+    for (label, ts) in configs {
+        let full_ops = NetworkSpec::paper(Scale::Full, ts).dense_ops() as f64 / 1e9;
+        let tiny_ops = NetworkSpec::paper(Scale::Tiny, ts).dense_ops() as f64 / 1e9;
+        let map = metrics
+            .as_ref()
+            .and_then(|j| j.at(&["fig15", label, "map", "mean"]))
+            .and_then(|v| v.as_f64());
+        r.report_row(&format!(
+            "{label:<6} | {full_ops:>8.2} | {tiny_ops:>8.3} | {}",
+            map.map(|m| format!("{m:.3}")).unwrap_or("run `make artifacts`".into())
+        ));
+        if label == "T3" {
+            c2_drop.0 = full_ops;
+        }
+        if label == "C2" {
+            c2_drop.1 = full_ops;
+        }
+    }
+    r.report_row(&format!(
+        "C2 reduces {:.2} GOP = {:.1}% vs T3 (paper: 4.13 GOP = 17%)",
+        c2_drop.0 - c2_drop.1,
+        (1.0 - c2_drop.1 * 1e9 / full_base) * 100.0
+    ));
+
+    // Timing: ops accounting across all configs.
+    r.bench("dense_ops_all_configs", || {
+        let mut acc = 0u64;
+        for (_, ts) in configs {
+            acc = acc.wrapping_add(NetworkSpec::paper(Scale::Full, ts).dense_ops());
+        }
+        std::hint::black_box(acc);
+    });
+}

@@ -1,0 +1,88 @@
+//! Fig 18 — power and area breakdown.
+//!
+//! Power: PE / LIF / memory / clock / pool shares of core energy on a
+//! real frame's activity (paper: memory 48%, PE 41%, clock network 29%
+//! cross-cutting, input banks 73% of memory power).
+//! Area: memory vs logic (paper: 86% / 14%), and the logic split
+//! (paper: PEs 58% of logic).
+
+use scsnn::accel::energy::AreaModel;
+use scsnn::config::AccelConfig;
+use scsnn::coordinator::pipeline::DetectionPipeline;
+use scsnn::detect::dataset::Dataset;
+use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::runtime::{load_trained_or_random, ArtifactPaths};
+use scsnn::util::BenchRunner;
+
+fn main() {
+    let mut r = BenchRunner::new("fig18_breakdown");
+    let tiny = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let (weights, trained) = load_trained_or_random(&tiny, 8);
+    let pipeline = DetectionPipeline::from_weights(tiny.clone(), weights).unwrap();
+    let paths = ArtifactPaths::in_dir(&ArtifactPaths::default_dir());
+    let ds = if paths.dataset_test.exists() {
+        Dataset::load(&paths.dataset_test).unwrap()
+    } else {
+        Dataset::synth(1, tiny.input_w, tiny.input_h, 9)
+    };
+    let hw = pipeline.estimate_hw(&ds.samples[0].image).unwrap();
+
+    r.section(&format!(
+        "Fig 18(a-c) power breakdown ({} weights)",
+        if trained { "trained" } else { "synthetic" }
+    ));
+    let shares = hw.power.shares();
+    let labels = ["PE", "LIF", "memory", "clock+ctrl", "pool"];
+    for (label, share) in labels.iter().zip(shares) {
+        let bar = "#".repeat((share * 50.0) as usize);
+        r.report_row(&format!("{label:<10} {:>5.1}% | {bar}", share * 100.0));
+    }
+    r.report_row(&format!(
+        "input banks = {:.1}% of memory power (paper: 73%)",
+        hw.power.input_mem_share * 100.0
+    ));
+    r.report_row("paper: memory 48%, PE 41%, clock network 29% (cross-cutting), input mem 73% of memory");
+
+    r.section("Fig 18(d-f) area breakdown");
+    let area = AreaModel::default().report(&AccelConfig::paper());
+    r.report_row(&format!(
+        "memory {:.3} mm² ({:.0}%)  logic {:.3} mm² ({:.0}%)   (paper: 86% / 14%)",
+        area.sram_mm2,
+        area.memory_share() * 100.0,
+        area.logic_mm2,
+        (1.0 - area.memory_share()) * 100.0
+    ));
+    let kge_total: f64 = area.logic_kge.iter().sum();
+    for (label, kge) in ["PE", "LIF", "controller", "other"].iter().zip(area.logic_kge) {
+        r.report_row(&format!(
+            "logic {label:<10} {:>6.1} KGE ({:.0}%)",
+            kge,
+            kge / kge_total * 100.0
+        ));
+    }
+    r.report_row("paper: PEs 58% of logic area (576 16-bit partial-sum registers)");
+    let sram_labels = ["input", "output", "weight map", "nz weight"];
+    let sram_total: f64 = area.sram_kb.iter().sum();
+    for (label, kb) in sram_labels.iter().zip(area.sram_kb) {
+        r.report_row(&format!(
+            "SRAM {label:<11} {:>6.1} KB ({:.0}%)",
+            kb,
+            kb / sram_total * 100.0
+        ));
+    }
+    r.report_row("paper: NZ weight 49% + weight map 24% of total area (sized for the largest layer)");
+
+    // Timing: energy report construction.
+    let energy = scsnn::accel::energy::EnergyModel::default();
+    let ev = scsnn::accel::energy::FrameEvents {
+        cycles: 1_000_000,
+        pe_enabled: 100_000_000,
+        pe_gated: 300_000_000,
+        lif_updates: 5_000_000,
+        sram_pj: [1e6, 2e5, 1e5, 2e5],
+        pool_ops: 1_000_000,
+    };
+    r.bench("energy_report", || {
+        std::hint::black_box(energy.report(&ev, 400_000_000, 29.0).core_power_mw);
+    });
+}

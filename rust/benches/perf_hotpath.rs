@@ -1,0 +1,117 @@
+//! Hot-path microbenchmarks (the §Perf targets in EXPERIMENTS.md).
+//!
+//! L3 hot paths: the gated one-to-all inner loop (PE array), the
+//! cycle-level controller on a realistic layer, the functional golden
+//! model (drives all accuracy experiments), the analytic models (drive
+//! all design-space sweeps), and the detection post-processing.
+
+use scsnn::accel::controller::SystemController;
+use scsnn::accel::latency::LatencyModel;
+use scsnn::accel::one_to_all::GatedOneToAll;
+use scsnn::accel::pe::PeArray;
+use scsnn::config::AccelConfig;
+use scsnn::detect::nms::nms;
+use scsnn::detect::yolo::{decode, YoloHead};
+use scsnn::detect::dataset::Dataset;
+use scsnn::model::topology::{ConvKind, ConvSpec, NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::weights::ModelWeights;
+use scsnn::ref_impl::{block_conv2d, ForwardOptions, SnnForward};
+use scsnn::sparse::BitMaskKernel;
+use scsnn::tensor::Tensor;
+use scsnn::util::{BenchRunner, Rng};
+
+fn main() {
+    let mut r = BenchRunner::new("perf_hotpath");
+    let mut rng = Rng::new(1);
+
+    // --- L3 PE array: the gated one-to-all inner loop --------------------
+    let tile = Tensor::from_vec(
+        1,
+        18,
+        32,
+        (0..576).map(|_| u8::from(rng.chance(0.25))).collect(),
+    );
+    let plane: Vec<i8> = (0..9).map(|_| if rng.chance(0.2) { 3 } else { 0 }).collect();
+    let bm = BitMaskKernel::from_dense(&plane, 3, 3);
+    let mut pe = PeArray::new(18, 32);
+    r.bench_throughput("one_to_all_576pe_tile", 576 * bm.nnz().max(1) as u64, || {
+        let mut o = GatedOneToAll::new(&tile);
+        std::hint::black_box(o.run(&bm, &mut pe, 0));
+    });
+
+    // --- block convolution (golden model inner loop) ----------------------
+    let input = Tensor::from_vec(
+        16,
+        48,
+        80,
+        (0..16 * 48 * 80).map(|_| u8::from(rng.chance(0.25))).collect(),
+    );
+    let net_for_w = NetworkSpec {
+        name: "bench".into(),
+        input_w: 80,
+        input_h: 48,
+        input_c: 16,
+        layers: vec![ConvSpec {
+            name: "l".into(),
+            kind: ConvKind::Spike,
+            c_in: 16,
+            c_out: 16,
+            k: 3,
+            in_t: 1,
+            out_t: 1,
+            maxpool_after: false,
+            in_w: 80,
+            in_h: 48,
+            concat_with: None,
+            input_from: None,
+        }],
+        num_anchors: 5,
+        num_classes: 3,
+    };
+    let mut w16 = ModelWeights::random(&net_for_w, 1.0, 2);
+    w16.prune_fine_grained(0.8);
+    let lw = w16.get("l").unwrap();
+    let macs = (lw.w.count_nonzero() * 48 * 80) as u64;
+    r.bench_throughput("block_conv_16c_48x80_pruned", macs, || {
+        std::hint::black_box(block_conv2d(&input, &lw.w, &lw.bias, 32, 18));
+    });
+
+    // --- cycle-level controller on the same layer -------------------------
+    let mut ctrl = SystemController::new(AccelConfig::paper());
+    let spec = &net_for_w.layers[0];
+    r.bench("controller_layer_16c_48x80", || {
+        std::hint::black_box(ctrl.run_layer(spec, lw, std::slice::from_ref(&input)).unwrap().cycles);
+    });
+
+    // --- whole tiny-network golden forward --------------------------------
+    let tiny = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let mut tw = ModelWeights::random(&tiny, 1.0, 3);
+    tw.prune_fine_grained(0.8);
+    let ds = Dataset::synth(1, tiny.input_w, tiny.input_h, 4);
+    let fwd =
+        SnnForward::new(&tiny, &tw, ForwardOptions { block_tile: Some((32, 18)), record_spikes: false })
+            .unwrap();
+    r.bench("golden_forward_tiny_frame", || {
+        std::hint::black_box(fwd.run(&ds.samples[0].image).unwrap().head_acc.data[0]);
+    });
+
+    // --- analytic latency model (design-space sweeps) ----------------------
+    let full = NetworkSpec::paper(Scale::Full, TimeStepConfig::PAPER);
+    let mut fw = ModelWeights::random(&full, 1.0, 5);
+    fw.prune_fine_grained(0.8);
+    let lm = LatencyModel::new(AccelConfig::paper());
+    r.bench("latency_model_full", || {
+        std::hint::black_box(lm.network(&full, &fw).sparse_cycles());
+    });
+
+    // --- detection post-processing -----------------------------------------
+    let mut head = Tensor::zeros(40, 6, 10);
+    for v in head.data.iter_mut() {
+        *v = (rng.f64() * 4.0 - 3.0) as f32;
+    }
+    let cfg = YoloHead::default();
+    r.bench("decode_nms_head", || {
+        let dets = decode(&head, &cfg, 0.25);
+        std::hint::black_box(nms(dets, 0.45).len());
+    });
+}

@@ -1,0 +1,92 @@
+//! Table II — comparison across precisions: ANN / YOLOv2 / QNN(4,3,2b) /
+//! BNN / SNN-a / SNN-4T / SNN-d, with model sizes.
+//!
+//! mAPs of the trained variants come from the python build metrics; model
+//! sizes are computed here from the topology + precision (the same
+//! arithmetic as the paper's "Model size (Mbits)" column). The YOLOv2 and
+//! GUO et al. rows are external reference points quoted from the paper.
+
+use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::runtime::ArtifactPaths;
+use scsnn::sparse::stats::{format_bits, Format};
+use scsnn::util::json::Json;
+use scsnn::util::BenchRunner;
+
+fn main() {
+    let r = BenchRunner::new("table2_precision_comparison");
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let params = net.num_params();
+    let fp32_mbits = params as f64 * 32.0 / 1e6;
+
+    r.section("paper rows (3.17M-param model @ 1024×576)");
+    for row in [
+        "ANN   float32/float32 | 101.44 Mbit | mAP 80.4",
+        "YOLOv2 float32        | 1618.2 Mbit | mAP 76.1",
+        "QNN   FXP4/float32    | 101.44 Mbit | mAP 80.0",
+        "QNN   FXP3/float32    | 101.44 Mbit | mAP 76.1",
+        "QNN   FXP2/float32    | 101.44 Mbit | mAP 72.0",
+        "GUO et al. hybrid     |   17.2 Mbit | mAP 71.1",
+        "BNN   binary/binary   |   3.17 Mbit | mAP 55.8",
+        "SNN-a binary/float32  | 101.44 Mbit | mAP 73.9",
+        "SNN-4T (1,4) steps    | 101.44 Mbit | mAP 74.1",
+        "SNN-d binary/FXP8     |   7.68 Mbit | mAP 71.5",
+    ] {
+        r.report_row(row);
+    }
+
+    r.section(&format!("reproduction rows (tiny scale, {params} params)"));
+    let paths = ArtifactPaths::in_dir(&ArtifactPaths::default_dir());
+    let metrics = std::fs::read_to_string(&paths.metrics)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok());
+    let rows: [(&str, &str, f64); 7] = [
+        ("ann", "ANN   float32", fp32_mbits),
+        ("qnn4", "QNN   FXP4 act", fp32_mbits),
+        ("qnn3", "QNN   FXP3 act", fp32_mbits),
+        ("qnn2", "QNN   FXP2 act", fp32_mbits),
+        ("bnn", "BNN   binary", params as f64 / 1e6),
+        ("snn_a", "SNN-a binary/f32", fp32_mbits),
+        ("snn_4t", "SNN-4T (1,4)", fp32_mbits),
+    ];
+    for (key, label, mbits) in rows {
+        let m = metrics
+            .as_ref()
+            .and_then(|j| j.at(&["table2", key, "mean"]))
+            .and_then(|v| v.as_f64());
+        match m {
+            Some(m) => r.report_row(&format!("{label:<18} | {mbits:>7.2} Mbit | mAP {m:.3}")),
+            None => r.report_row(&format!("{label:<18} | {mbits:>7.2} Mbit | (run `make artifacts`)")),
+        }
+    }
+    // SNN-d size from the shipped compressed weights (bit-mask + 8b).
+    if let Ok(w) = scsnn::model::weights::ModelWeights::load(&paths.weights) {
+        let mut bits = 0usize;
+        for (_, lw) in w.iter() {
+            bits += format_bits(&lw.w, Format::BitMask, 8).bits;
+        }
+        let snn_c_map = metrics
+            .as_ref()
+            .and_then(|j| j.at(&["table1", "snn_c", "mean"]))
+            .and_then(|v| v.as_f64());
+        r.report_row(&format!(
+            "SNN-d bin/FXP8     | {:>7.2} Mbit (bit-mask) | mAP {}",
+            bits as f64 / 1e6,
+            snn_c_map.map(|m| format!("{m:.3}")).unwrap_or("n/a".into())
+        ));
+        r.report_row(&format!(
+            "compression: {:.1}x smaller than fp32 (paper: 13.2x)",
+            fp32_mbits * 1e6 / bits as f64
+        ));
+    }
+
+    // Shape assertions (who wins) — printed, and checked when data exists.
+    if let Some(j) = &metrics {
+        let get = |k: &str| j.at(&["table2", k, "mean"]).and_then(|v| v.as_f64());
+        if let (Some(ann), Some(bnn), Some(snn)) = (get("ann"), get("bnn"), get("snn_a")) {
+            r.report_row(&format!(
+                "shape check: ANN ({ann:.3}) ≥ SNN-a ({snn:.3}) ≥ BNN ({bnn:.3}): {}",
+                if ann >= snn && snn >= bnn { "HOLDS" } else { "VIOLATED (short training run)" }
+            ));
+        }
+    }
+}

@@ -1,0 +1,580 @@
+//! The system controller: executes one layer through the PE/LIF/MaxPool
+//! pipeline following the paper's data flow (§III-C, Fig 12):
+//!
+//! ```text
+//! for each 32×18 tile:                         (spatial parallelism)
+//!   for each output channel K:
+//!     for each output time step T:
+//!       for each input bit plane B:            (8 for encoding, else 1)
+//!         for each input channel C:
+//!           gated one-to-all product            (1 cycle / nonzero weight)
+//!       LIF update → (optional OR max-pool) → output write (reordered)
+//! ```
+//!
+//! When `in_t == 1 < out_t` the convolution is computed once and its
+//! partial sums are replayed into the LIF for every output step (§II-A).
+//! The controller is **bit-exact** against the functional golden model
+//! (`ref_impl`): the integration tests convolve whole layers both ways.
+
+use super::lif_unit::LifUnit;
+use super::one_to_all::GatedOneToAll;
+use super::pe::{GatingStats, PeArray};
+use super::sram::{SramBank, SramKind};
+use crate::config::registers::{ConfigRegisters, LayerSetup};
+use crate::config::AccelConfig;
+use crate::model::lif::LifParams;
+use crate::model::topology::{ConvKind, ConvSpec};
+use crate::model::weights::LayerWeights;
+use crate::sparse::BitMaskKernel;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Fixed pipeline overheads in cycles (the non-MAC portion of the loop).
+#[derive(Clone, Copy, Debug)]
+pub struct CycleCosts {
+    /// Input-channel switch: the 4 input banks are read simultaneously to
+    /// refill the spike window (the paper's dominant memory-power event).
+    pub input_switch: u64,
+    /// LIF update + output write-back per (k, t) tile.
+    pub lif_writeback: u64,
+    /// Per-tile setup (address generation, bank select).
+    pub tile_setup: u64,
+}
+
+impl Default for CycleCosts {
+    fn default() -> Self {
+        CycleCosts { input_switch: 1, lif_writeback: 2, tile_setup: 4 }
+    }
+}
+
+/// Execution record of one layer.
+#[derive(Clone, Debug)]
+pub struct LayerRun {
+    /// Cycles with zero-weight skipping (the shipped design).
+    pub cycles: u64,
+    /// Cycles for the dense baseline (skipping disabled, §IV-E).
+    pub dense_cycles: u64,
+    /// PE clock-gating activity.
+    pub gating: GatingStats,
+    /// LIF update events.
+    pub lif_updates: u64,
+    /// Spikes emitted by the layer.
+    pub spikes_out: u64,
+    /// SRAM access counters (input, output, weight-map, nz-weight).
+    pub sram: [SramBank; 4],
+    /// Output spike maps per time step (hidden layers).
+    pub output: Vec<Tensor<u8>>,
+    /// Head accumulator (output layer only): sum over time steps.
+    pub head_acc: Option<Tensor<i32>>,
+}
+
+impl LayerRun {
+    /// Latency saving of weight skipping vs the dense baseline.
+    pub fn latency_saving(&self) -> f64 {
+        if self.dense_cycles == 0 {
+            0.0
+        } else {
+            1.0 - self.cycles as f64 / self.dense_cycles as f64
+        }
+    }
+}
+
+/// The system controller bound to a hardware configuration.
+pub struct SystemController {
+    cfg: AccelConfig,
+    costs: CycleCosts,
+    regs: ConfigRegisters,
+}
+
+impl SystemController {
+    /// New controller.
+    pub fn new(cfg: AccelConfig) -> Self {
+        SystemController { cfg, costs: CycleCosts::default(), regs: ConfigRegisters::default() }
+    }
+
+    /// Access the configuration.
+    pub fn config(&self) -> &AccelConfig {
+        &self.cfg
+    }
+
+    /// Execute one layer on `inputs` (one spike/pixel map per input time
+    /// step; pixel maps carry 8-bit values for the encoding layer).
+    pub fn run_layer(
+        &mut self,
+        spec: &ConvSpec,
+        lw: &LayerWeights,
+        inputs: &[Tensor<u8>],
+    ) -> Result<LayerRun> {
+        // ---- Program the configuration registers (§III-D) -------------
+        self.regs.reset();
+        self.regs.program(LayerSetup {
+            in_channels: spec.c_in,
+            out_channels: spec.c_out,
+            kh: spec.k,
+            kw: spec.k,
+            in_t: spec.in_t,
+            out_t: spec.out_t,
+            in_h: spec.in_h,
+            in_w: spec.in_w,
+            num_sparse_weights: lw.w.count_nonzero(),
+            maxpool: spec.maxpool_after,
+            encoding: spec.kind == ConvKind::Encoding,
+        })?;
+        if inputs.len() != spec.in_t {
+            bail!("layer {}: got {} input steps, want {}", spec.name, inputs.len(), spec.in_t);
+        }
+        for inp in inputs {
+            if inp.c != spec.c_in || inp.h != spec.in_h || inp.w != spec.in_w {
+                bail!("layer {}: input shape mismatch", spec.name);
+            }
+        }
+
+        // ---- Compress weights into the on-chip format ------------------
+        // (One plane per (k, c); resident in Weight Map / NZ Weight SRAM.)
+        let planes: Vec<BitMaskKernel> = crate::sparse::bitmask::compress_kernel4(&lw.w);
+        let bit_planes = if spec.kind == ConvKind::Encoding { 8u32 } else { 1 };
+
+        let mut run = LayerRun {
+            cycles: 0,
+            dense_cycles: 0,
+            gating: GatingStats::default(),
+            lif_updates: 0,
+            spikes_out: 0,
+            sram: [
+                SramBank::new(SramKind::Input, self.cfg.input_sram_bytes),
+                SramBank::new(SramKind::Output, self.cfg.output_sram_bytes),
+                SramBank::new(SramKind::WeightMap, self.cfg.weight_map_sram_bytes),
+                SramBank::new(SramKind::NzWeight, self.cfg.nz_weight_sram_bytes),
+            ],
+            output: (0..spec.out_t)
+                .map(|_| Tensor::zeros(spec.c_out, spec.out_h(), spec.out_w()))
+                .collect(),
+            head_acc: if spec.kind == ConvKind::Output {
+                Some(Tensor::zeros(spec.c_out, spec.in_h, spec.in_w))
+            } else {
+                None
+            },
+        };
+
+        let (tw, th) = (self.cfg.tile_w, self.cfg.tile_h);
+        // Convolution is computed once per *input* time step; the head
+        // (no-reset accumulator) integrates over all of them even though
+        // it emits a single averaged output step.
+        let conv_t = spec.in_t;
+
+        // ---- Tile loop --------------------------------------------------
+        let mut y0 = 0;
+        while y0 < spec.in_h {
+            let cth = th.min(spec.in_h - y0);
+            let mut x0 = 0;
+            while x0 < spec.in_w {
+                let ctw = tw.min(spec.in_w - x0);
+                run.cycles += self.costs.tile_setup;
+                run.dense_cycles += self.costs.tile_setup;
+                self.run_tile(spec, lw, inputs, &planes, bit_planes, conv_t, (y0, x0, cth, ctw), &mut run);
+                x0 += ctw;
+            }
+            y0 += cth;
+        }
+        Ok(run)
+    }
+
+    /// Execute the KTBC loop for one spatial tile.
+    #[allow(clippy::too_many_arguments)]
+    fn run_tile(
+        &self,
+        spec: &ConvSpec,
+        lw: &LayerWeights,
+        inputs: &[Tensor<u8>],
+        planes: &[BitMaskKernel],
+        bit_planes: u32,
+        conv_t: usize,
+        tile: (usize, usize, usize, usize),
+        run: &mut LayerRun,
+    ) {
+        let (y0, x0, cth, ctw) = tile;
+        let mut pe = PeArray::new(cth, ctw);
+        let mut lif = LifUnit::new(cth, ctw);
+        let p = LifParams::from_quant(&lw.qp);
+        let dense_plane_cycles = (spec.k * spec.k) as u64;
+        let eff_out_t = if spec.kind == ConvKind::Output { spec.in_t } else { spec.out_t };
+
+        // Pre-extract per-(t, c) input channel tiles once per tile — the
+        // hardware equivalent is the Input SRAM holding the sub-tile.
+        // (Indexing: tiles_in[t][c].)
+        let tiles_in: Vec<Vec<Tensor<u8>>> = inputs
+            .iter()
+            .map(|inp| {
+                (0..spec.c_in)
+                    .map(|c| {
+                        let mut t = Tensor::zeros(1, cth, ctw);
+                        for y in 0..cth {
+                            for x in 0..ctw {
+                                t.set(0, y, x, inp.get(c, y0 + y, x0 + x));
+                            }
+                        }
+                        t
+                    })
+                    .collect()
+            })
+            .collect();
+
+        for k in 0..spec.c_out {
+            lif.reset();
+            // Partial sums of the last computed conv step, for replay.
+            let mut replay: Vec<i16> = Vec::new();
+            for t in 0..eff_out_t {
+                let acc: Vec<i16> = if t < conv_t {
+                    // Per-channel bias preloads the partial-sum registers.
+                    pe.preload(lw.bias[k]);
+                    for b in 0..bit_planes {
+                        for c in 0..spec.c_in {
+                            // Input-channel switch: all 4 banks read.
+                            run.sram[0].read(self.cfg.io_banks as u64);
+                            run.cycles += self.costs.input_switch;
+                            run.dense_cycles += self.costs.input_switch;
+
+                            let pl = &planes[k * spec.c_in + c];
+                            // Weight map word + one NZ read per nonzero.
+                            run.sram[2].read(1);
+                            run.sram[3].read(pl.nnz() as u64);
+
+                            let tile_in = if bit_planes > 1 {
+                                // Encoding layer: extract bit plane b.
+                                bit_plane(&tiles_in[t][c], b)
+                            } else {
+                                tiles_in[t][c].clone()
+                            };
+                            let cycles = GatedOneToAll::new(&tile_in).run(pl, &mut pe, b);
+                            run.cycles += cycles;
+                            run.dense_cycles += dense_plane_cycles;
+                        }
+                    }
+                    replay = pe.readout();
+                    replay.clone()
+                } else {
+                    // in_t < out_t: replay the single computed result.
+                    replay.clone()
+                };
+
+                run.cycles += self.costs.lif_writeback;
+                run.dense_cycles += self.costs.lif_writeback;
+
+                match spec.kind {
+                    ConvKind::Output => {
+                        // Membrane accumulation, no reset, no fire. Bias is
+                        // already in the partial sums (register preload).
+                        let head = run.head_acc.as_mut().expect("head layer");
+                        for y in 0..cth {
+                            for x in 0..ctw {
+                                let v =
+                                    head.get(k, y0 + y, x0 + x) + acc[y * ctw + x] as i32;
+                                head.set(k, y0 + y, x0 + x, v);
+                            }
+                        }
+                        run.sram[1].write(self.cfg.io_banks as u64);
+                    }
+                    _ => {
+                        let spike_tile = lif.step(p, &acc, 0);
+                        run.sram[1].write(self.cfg.io_banks as u64);
+                        // Optional fused OR max pool, then reordered write.
+                        if spec.maxpool_after {
+                            let pooled = crate::ref_impl::maxpool2x2_or(&spike_tile);
+                            paste(&mut run.output[t], k, y0 / 2, x0 / 2, &pooled);
+                        } else {
+                            paste(&mut run.output[t], k, y0, x0, &spike_tile);
+                        }
+                    }
+                }
+            }
+            run.lif_updates += lif.updates;
+            run.spikes_out += lif.spikes_out;
+            lif.updates = 0;
+            lif.spikes_out = 0;
+        }
+        run.gating.merge(&pe.stats());
+    }
+}
+
+/// Extract bit plane `b` of a multibit tile as a binary spike tile.
+fn bit_plane(tile: &Tensor<u8>, b: u32) -> Tensor<u8> {
+    let mut out = Tensor::zeros(tile.c, tile.h, tile.w);
+    for (o, &v) in out.data.iter_mut().zip(&tile.data) {
+        *o = (v >> b) & 1;
+    }
+    out
+}
+
+/// Paste a `(1, h, w)` tile into channel `k` of `dst` at `(y0, x0)`.
+fn paste(dst: &mut Tensor<u8>, k: usize, y0: usize, x0: usize, tile: &Tensor<u8>) {
+    for y in 0..tile.h {
+        for x in 0..tile.w {
+            dst.set(k, y0 + y, x0 + x, tile.get(0, y, x));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+    use crate::model::weights::ModelWeights;
+    use crate::model::lif::LifState;
+    use crate::ref_impl::block_conv2d;
+    use crate::util::Rng;
+
+    /// Golden-model comparison: the controller's layer output must equal
+    /// block conv + LIF computed functionally.
+    fn check_layer_against_ref(spec: &ConvSpec, lw: &LayerWeights, inputs: &[Tensor<u8>]) {
+        let cfg = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() };
+        let mut ctrl = SystemController::new(cfg.clone());
+        let run = ctrl.run_layer(spec, lw, inputs).unwrap();
+
+        // Functional reference.
+        let conv_t = spec.in_t.min(spec.out_t);
+        let accs: Vec<Tensor<i32>> = (0..conv_t)
+            .map(|t| block_conv2d(&inputs[t], &lw.w, &lw.bias, cfg.tile_w, cfg.tile_h))
+            .collect();
+        match spec.kind {
+            ConvKind::Output => {
+                let mut want = Tensor::zeros(spec.c_out, spec.in_h, spec.in_w);
+                for t in 0..spec.out_t {
+                    let acc = &accs[t.min(accs.len() - 1)];
+                    for (w, &a) in want.data.iter_mut().zip(&acc.data) {
+                        *w += a;
+                    }
+                }
+                assert_eq!(run.head_acc.as_ref().unwrap().data, want.data);
+            }
+            _ => {
+                let n = spec.c_out * spec.in_h * spec.in_w;
+                let mut lif = LifState::new(n);
+                let p = LifParams::from_quant(&lw.qp);
+                for t in 0..spec.out_t {
+                    let acc = &accs[t.min(accs.len() - 1)];
+                    // Reference biases are folded into block_conv2d (which
+                    // already adds bias), so subtract the double count:
+                    // controller injects bias at LIF; reference conv added
+                    // it inside the accumulator. Same value either way.
+                    let mut spikes = vec![0u8; n];
+                    lif.step(p, &acc.data, &mut spikes);
+                    let mut sp = Tensor::from_vec(spec.c_out, spec.in_h, spec.in_w, spikes);
+                    if spec.maxpool_after {
+                        sp = crate::ref_impl::maxpool2x2_or(&sp);
+                    }
+                    assert_eq!(run.output[t].data, sp.data, "time step {t}");
+                }
+            }
+        }
+    }
+
+    fn random_inputs(spec: &ConvSpec, seed: u64, multibit: bool) -> Vec<Tensor<u8>> {
+        let mut rng = Rng::new(seed);
+        (0..spec.in_t)
+            .map(|_| {
+                let n = spec.c_in * spec.in_h * spec.in_w;
+                let data = (0..n)
+                    .map(|_| {
+                        if multibit {
+                            rng.next_u32() as u8
+                        } else {
+                            u8::from(rng.chance(0.25))
+                        }
+                    })
+                    .collect();
+                Tensor::from_vec(spec.c_in, spec.in_h, spec.in_w, data)
+            })
+            .collect()
+    }
+
+    fn test_spec(kind: ConvKind, in_t: usize, out_t: usize, pool: bool) -> ConvSpec {
+        ConvSpec {
+            name: "t".into(),
+            kind,
+            c_in: 3,
+            c_out: 4,
+            k: 3,
+            in_t,
+            out_t,
+            maxpool_after: pool,
+            in_w: 16,
+            in_h: 12,
+            concat_with: None,
+            input_from: None,
+        }
+    }
+
+    fn test_weights(spec: &ConvSpec, seed: u64, density: f64) -> LayerWeights {
+        let net = NetworkSpec {
+            name: "t".into(),
+            input_w: spec.in_w,
+            input_h: spec.in_h,
+            input_c: spec.c_in,
+            layers: vec![spec.clone()],
+            num_anchors: 5,
+            num_classes: 3,
+        };
+        let mw = ModelWeights::random(&net, density, seed);
+        mw.get(&spec.name).unwrap().clone()
+    }
+
+    #[test]
+    fn spike_layer_matches_reference() {
+        let spec = test_spec(ConvKind::Spike, 3, 3, false);
+        let lw = test_weights(&spec, 1, 0.4);
+        let inputs = random_inputs(&spec, 2, false);
+        check_layer_against_ref(&spec, &lw, &inputs);
+    }
+
+    #[test]
+    fn mixed_time_step_replay_matches_reference() {
+        let spec = test_spec(ConvKind::Spike, 1, 3, false);
+        let lw = test_weights(&spec, 3, 0.4);
+        let inputs = random_inputs(&spec, 4, false);
+        check_layer_against_ref(&spec, &lw, &inputs);
+    }
+
+    #[test]
+    fn pooled_layer_matches_reference() {
+        let spec = test_spec(ConvKind::Spike, 2, 2, true);
+        let lw = test_weights(&spec, 5, 0.4);
+        let inputs = random_inputs(&spec, 6, false);
+        check_layer_against_ref(&spec, &lw, &inputs);
+    }
+
+    #[test]
+    fn encoding_layer_bit_serial_matches_multibit_conv() {
+        let mut spec = test_spec(ConvKind::Encoding, 1, 1, false);
+        spec.c_in = 3;
+        let lw = test_weights(&spec, 7, 1.0);
+        let inputs = random_inputs(&spec, 8, true);
+        // Bit-serial accumulation must equal direct multibit convolution.
+        check_layer_against_ref(&spec, &lw, &inputs);
+    }
+
+    #[test]
+    fn head_layer_accumulates_without_reset() {
+        let mut spec = test_spec(ConvKind::Output, 3, 1, false);
+        spec.out_t = 1;
+        spec.in_t = 3;
+        spec.k = 1;
+        let lw = test_weights(&spec, 9, 1.0);
+        let inputs = random_inputs(&spec, 10, false);
+        // out_t=1 for the head in the spec, but the membrane accumulates
+        // over in_t steps: emulate by setting out_t=in_t internally.
+        let mut spec2 = spec.clone();
+        spec2.out_t = 3;
+        check_layer_against_ref(&spec2, &lw, &inputs);
+    }
+
+    #[test]
+    fn sparse_cycles_below_dense() {
+        let spec = test_spec(ConvKind::Spike, 3, 3, false);
+        let mut lw = test_weights(&spec, 11, 1.0);
+        // Prune to 20% density.
+        let mut rng = Rng::new(12);
+        for v in lw.w.data.iter_mut() {
+            if rng.chance(0.8) {
+                *v = 0;
+            }
+        }
+        let inputs = random_inputs(&spec, 13, false);
+        let mut ctrl = SystemController::new(AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() });
+        let run = ctrl.run_layer(&spec, &lw, &inputs).unwrap();
+        let saving = run.latency_saving();
+        assert!((0.3..0.9).contains(&saving), "saving={saving}");
+    }
+
+    #[test]
+    fn gating_fraction_tracks_input_sparsity() {
+        let spec = test_spec(ConvKind::Spike, 1, 1, false);
+        let lw = test_weights(&spec, 14, 1.0);
+        // Very sparse inputs → high gated fraction.
+        let mut rng = Rng::new(15);
+        let n = spec.c_in * spec.in_h * spec.in_w;
+        let inputs = vec![Tensor::from_vec(
+            spec.c_in,
+            spec.in_h,
+            spec.in_w,
+            (0..n).map(|_| u8::from(rng.chance(0.1))).collect(),
+        )];
+        let mut ctrl = SystemController::new(AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() });
+        let run = ctrl.run_layer(&spec, &lw, &inputs).unwrap();
+        let gf = run.gating.gated_fraction();
+        assert!(gf > 0.8, "gated fraction={gf}");
+    }
+
+    #[test]
+    fn rejects_bad_input_shapes() {
+        let spec = test_spec(ConvKind::Spike, 1, 1, false);
+        let lw = test_weights(&spec, 16, 0.5);
+        let mut ctrl = SystemController::new(AccelConfig::paper());
+        assert!(ctrl.run_layer(&spec, &lw, &[]).is_err());
+        let bad = vec![Tensor::zeros(1, 2, 2)];
+        assert!(ctrl.run_layer(&spec, &lw, &bad).is_err());
+    }
+
+    #[test]
+    fn full_tiny_network_matches_golden_model() {
+        // Chain every layer of the tiny network through the controller and
+        // compare the head against the functional SnnForward.
+        use crate::ref_impl::{ForwardOptions, SnnForward};
+        let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+        let mw = ModelWeights::random(&net, 0.3, 17);
+        let mut rng = Rng::new(18);
+        let n = net.input_c * net.input_h * net.input_w;
+        let img = Tensor::from_vec(
+            net.input_c,
+            net.input_h,
+            net.input_w,
+            (0..n).map(|_| rng.next_u32() as u8).collect(),
+        );
+
+        // Golden model with the hardware tile.
+        let opts = ForwardOptions { block_tile: Some((32, 18)), record_spikes: false };
+        let want = SnnForward::new(&net, &mw, opts).unwrap().run(&img).unwrap();
+
+        // Controller, layer by layer.
+        let mut ctrl = SystemController::new(AccelConfig::paper());
+        let mut outputs: std::collections::BTreeMap<String, Vec<Tensor<u8>>> = Default::default();
+        let mut prev: Option<String> = None;
+        let mut head: Option<Tensor<i32>> = None;
+        for l in &net.layers {
+            let lw = mw.get(&l.name).unwrap();
+            let inputs: Vec<Tensor<u8>> = if l.kind == ConvKind::Encoding {
+                vec![img.clone(); l.in_t]
+            } else {
+                let main = l.input_from.clone().or_else(|| prev.clone()).unwrap();
+                let main_steps = outputs.get(&main).unwrap();
+                match l.concat_with.as_deref() {
+                    None => main_steps.clone(),
+                    Some(o) => {
+                        let os = outputs.get(o).unwrap();
+                        main_steps
+                            .iter()
+                            .zip(os)
+                            .map(|(a, b)| {
+                                let mut d = a.data.clone();
+                                d.extend_from_slice(&b.data);
+                                Tensor::from_vec(a.c + b.c, a.h, a.w, d)
+                            })
+                            .collect()
+                    }
+                }
+            };
+            // Head accumulates over in_t: set out_t = in_t internally.
+            let mut spec = l.clone();
+            if l.kind == ConvKind::Output {
+                spec.out_t = l.in_t;
+            }
+            let run = ctrl.run_layer(&spec, lw, &inputs).unwrap();
+            if l.kind == ConvKind::Output {
+                head = run.head_acc;
+            } else {
+                outputs.insert(l.name.clone(), run.output);
+            }
+            prev = Some(l.name.clone());
+        }
+        assert_eq!(head.unwrap().data, want.head_acc.data);
+    }
+}

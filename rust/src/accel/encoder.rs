@@ -1,0 +1,85 @@
+//! Row/column priority encoders (Fig 11).
+//!
+//! Each cycle the PE module consumes one nonzero weight: the encoders find
+//! the **leftmost nonzero bit** of the weight map (row-major scan), emit
+//! its `(row, col)` position — which selects the enable-map shift — and the
+//! bit is cleared before the next cycle. When the map reaches zero the
+//! plane is done and the controller advances the `C` loop.
+
+/// Combinational priority encoder over a ≤16-bit weight map word.
+#[derive(Clone, Debug)]
+pub struct PriorityEncoder {
+    map: u16,
+    kw: usize,
+}
+
+impl PriorityEncoder {
+    /// Load a weight map for a `kh × kw` plane.
+    pub fn load(map: u16, kw: usize) -> Self {
+        assert!(kw > 0);
+        PriorityEncoder { map, kw }
+    }
+
+    /// Whether any nonzero weight remains.
+    pub fn has_next(&self) -> bool {
+        self.map != 0
+    }
+
+    /// Pop the position of the leftmost (lowest-index) nonzero bit as
+    /// `(row, col)`, clearing it — one hardware cycle.
+    pub fn next_position(&mut self) -> Option<(usize, usize)> {
+        if self.map == 0 {
+            return None;
+        }
+        let i = self.map.trailing_zeros() as usize;
+        self.map &= self.map - 1; // clear lowest set bit
+        Some((i / self.kw, i % self.kw))
+    }
+
+    /// Remaining nonzero count (= remaining cycles for this plane).
+    pub fn remaining(&self) -> usize {
+        self.map.count_ones() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::BitMaskKernel;
+    use crate::util::propcheck::run_prop;
+
+    #[test]
+    fn scans_row_major() {
+        // Map for a 3×3 plane with bits at (0,1), (1,2), (2,0).
+        let map = (1 << 1) | (1 << 5) | (1 << 6);
+        let mut e = PriorityEncoder::load(map, 3);
+        assert_eq!(e.remaining(), 3);
+        assert_eq!(e.next_position(), Some((0, 1)));
+        assert_eq!(e.next_position(), Some((1, 2)));
+        assert_eq!(e.next_position(), Some((2, 0)));
+        assert_eq!(e.next_position(), None);
+        assert!(!e.has_next());
+    }
+
+    #[test]
+    fn empty_map() {
+        let mut e = PriorityEncoder::load(0, 3);
+        assert!(!e.has_next());
+        assert_eq!(e.next_position(), None);
+    }
+
+    #[test]
+    fn prop_matches_bitmask_iteration() {
+        // The encoder must visit exactly the positions of the bit-mask
+        // representation, in the same order.
+        run_prop("encoder/matches-bitmask", |g| {
+            let plane = g.sparse_i8(9, 0.4);
+            let bm = BitMaskKernel::from_dense(&plane, 3, 3);
+            let mut e = PriorityEncoder::load(bm.map[0], 3);
+            for (r, c, _w) in bm.iter_nz() {
+                assert_eq!(e.next_position(), Some((r, c)));
+            }
+            assert_eq!(e.next_position(), None);
+        });
+    }
+}

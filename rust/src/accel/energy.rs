@@ -1,0 +1,292 @@
+//! Power, energy and area model (Fig 16 / Fig 18, §IV-E).
+//!
+//! Event-based: every architectural event counted by the simulator (PE
+//! accumulate, gated idle, LIF update, SRAM access, cycle) carries an
+//! energy coefficient. The coefficients are anchored to the paper's
+//! published implementation numbers — 30.5 mW core power at 500 MHz/0.9 V
+//! on the SNN-d workload, with the Fig 18 breakdown (memory 48% / PE 41%,
+//! input banks 73% of memory power, clock network 29% of total) and the
+//! §IV-E claim that zero-activation gating removes 46.6% of PE dynamic
+//! power at 77.4% input sparsity. That last pair fixes the split between
+//! the PE's always-on clock component and its data-dependent accumulate
+//! component: `0.466 = 0.774 · e_acc/(e_clk + e_acc)` → accumulate ≈ 60%
+//! of ungated PE dynamic power.
+//!
+//! Area is a macro-level model: SRAM at the paper's implied density
+//! (0.86 mm² for 288.5 KB → ≈3.0 µm²/byte in 28nm) plus standard-cell
+//! logic at ~0.55 µm²/GE, with the Fig 18(f) gate-count split.
+
+use super::controller::LayerRun;
+use crate::config::AccelConfig;
+
+/// Energy coefficients in picojoules per event (28nm, 0.9 V).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// PE accumulate event (adder toggle + 16-bit register write).
+    pub pe_acc_pj: f64,
+    /// PE event with clock gated off (residual leakage/glitch power).
+    pub pe_gated_pj: f64,
+    /// Per-PE clock-pin energy per *array-active* cycle (the part the
+    /// enable gate cannot remove at the array level: local clock buffers).
+    pub pe_clock_pj: f64,
+    /// LIF update (leak shift + compare + 8-bit vmem register).
+    pub lif_update_pj: f64,
+    /// Global clock-tree + controller energy per cycle.
+    pub global_clock_pj: f64,
+    /// OR-gate pooling per reduction.
+    pub pool_pj: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        // Calibrated (see module docs + EXPERIMENTS.md §Perf/Energy-calibration)
+        // so the full-size SNN-d-like workload (≈4.7 G PE events, ≈36 M
+        // cycles/frame) lands near the paper's 1 mJ/frame with the Fig 18
+        // shares, and the gating saving at 77.4% sparsity reproduces the
+        // §IV-E 46.6%: (0.774·(0.13−0.01))/(0.13+0.07) ≈ 0.46.
+        EnergyModel {
+            pe_acc_pj: 0.13,
+            pe_gated_pj: 0.010,
+            pe_clock_pj: 0.070,
+            lif_update_pj: 0.30,
+            global_clock_pj: 8.0,
+            pool_pj: 0.004,
+        }
+    }
+}
+
+/// Aggregated event counts for a frame (merge of [`LayerRun`]s).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FrameEvents {
+    /// Cycles with weight skipping.
+    pub cycles: u64,
+    /// PE accumulates executed.
+    pub pe_enabled: u64,
+    /// PE events gated.
+    pub pe_gated: u64,
+    /// LIF updates.
+    pub lif_updates: u64,
+    /// SRAM access energy already integrated (pJ), by bank kind
+    /// (input, output, weight map, nz weight).
+    pub sram_pj: [f64; 4],
+    /// Max-pool reductions.
+    pub pool_ops: u64,
+}
+
+impl FrameEvents {
+    /// Merge a layer run into the frame totals.
+    pub fn add_layer(&mut self, run: &LayerRun) {
+        self.cycles += run.cycles;
+        self.pe_enabled += run.gating.enabled;
+        self.pe_gated += run.gating.gated;
+        self.lif_updates += run.lif_updates;
+        for (i, bank) in run.sram.iter().enumerate() {
+            self.sram_pj[i] += bank.energy_pj();
+        }
+    }
+}
+
+/// Power/energy report for one frame (the Fig 16 table + Fig 18 pies).
+#[derive(Clone, Debug)]
+pub struct PowerReport {
+    /// Core energy per frame in mJ.
+    pub core_energy_mj: f64,
+    /// Core power in mW at the given fps.
+    pub core_power_mw: f64,
+    /// Component energies in pJ: [pe, lif, memory, clock, pool].
+    pub components_pj: [f64; 5],
+    /// Input-bank share of memory energy.
+    pub input_mem_share: f64,
+    /// Effective TOPS/W counting weight sparsity (ops = 2·sparse MACs).
+    pub tops_per_watt: f64,
+}
+
+impl PowerReport {
+    /// Fractional breakdown matching Fig 18(a): PE, LIF, memory, clock,
+    /// pool shares of core energy.
+    pub fn shares(&self) -> [f64; 5] {
+        let total: f64 = self.components_pj.iter().sum();
+        self.components_pj.map(|c| c / total)
+    }
+}
+
+impl EnergyModel {
+    /// Build the report for one frame's events.
+    ///
+    /// `sparse_macs` is the executed MAC count (for TOPS/W), `fps` the
+    /// achieved frame rate (for power = energy × fps).
+    pub fn report(&self, ev: &FrameEvents, sparse_macs: u64, fps: f64) -> PowerReport {
+        let pe = ev.pe_enabled as f64 * self.pe_acc_pj
+            + ev.pe_gated as f64 * self.pe_gated_pj
+            + (ev.pe_enabled + ev.pe_gated) as f64 * self.pe_clock_pj;
+        let lif = ev.lif_updates as f64 * self.lif_update_pj;
+        let mem: f64 = ev.sram_pj.iter().sum();
+        let clock = ev.cycles as f64 * self.global_clock_pj;
+        let pool = ev.pool_ops as f64 * self.pool_pj;
+        let total_pj = pe + lif + mem + clock + pool;
+        let core_energy_mj = total_pj * 1e-9;
+        let core_power_mw = core_energy_mj * fps;
+        let ops = 2.0 * sparse_macs as f64;
+        let tops_per_watt = if total_pj > 0.0 {
+            // ops / (energy in J) / 1e12  ==  ops / (total_pj × 1e-12) / 1e12
+            ops / total_pj
+        } else {
+            0.0
+        };
+        PowerReport {
+            core_energy_mj,
+            core_power_mw,
+            components_pj: [pe, lif, mem, clock, pool],
+            input_mem_share: if mem > 0.0 { ev.sram_pj[0] / mem } else { 0.0 },
+            tops_per_watt,
+        }
+    }
+
+    /// PE dynamic power saving of activation gating vs no gating (§IV-E):
+    /// compare against a hypothetical array where every event pays the
+    /// accumulate energy.
+    pub fn pe_gating_saving(&self, ev: &FrameEvents) -> f64 {
+        let total_ev = (ev.pe_enabled + ev.pe_gated) as f64;
+        if total_ev == 0.0 {
+            return 0.0;
+        }
+        let ungated = total_ev * (self.pe_acc_pj + self.pe_clock_pj);
+        let gated = ev.pe_enabled as f64 * self.pe_acc_pj
+            + ev.pe_gated as f64 * self.pe_gated_pj
+            + total_ev * self.pe_clock_pj;
+        1.0 - gated / ungated
+    }
+}
+
+/// Macro-level area model (Fig 16 / Fig 18 d–f).
+#[derive(Clone, Copy, Debug)]
+pub struct AreaModel {
+    /// SRAM density in mm² per KB (paper-implied ≈ 0.00298).
+    pub sram_mm2_per_kb: f64,
+    /// Standard-cell area per gate-equivalent in µm².
+    pub um2_per_ge: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        AreaModel { sram_mm2_per_kb: 0.86 / 288.5, um2_per_ge: 0.55 }
+    }
+}
+
+/// Area report in mm².
+#[derive(Clone, Debug)]
+pub struct AreaReport {
+    /// Total SRAM area.
+    pub sram_mm2: f64,
+    /// Logic area.
+    pub logic_mm2: f64,
+    /// Logic gate count (KGE) by component: [PE, LIF, controller, other].
+    pub logic_kge: [f64; 4],
+    /// SRAM KB by bank: [input, output, weight map, nz weight].
+    pub sram_kb: [f64; 4],
+}
+
+impl AreaReport {
+    /// Total core area.
+    pub fn total_mm2(&self) -> f64 {
+        self.sram_mm2 + self.logic_mm2
+    }
+
+    /// Memory share of core area (paper: 86%).
+    pub fn memory_share(&self) -> f64 {
+        self.sram_mm2 / self.total_mm2()
+    }
+}
+
+impl AreaModel {
+    /// Estimate the chip area for a configuration.
+    ///
+    /// Gate counts: each PE is a 16-bit adder + 16-bit register + gate
+    /// (~170 GE); each of the 576 LIF lanes is a shifter/comparator/8-bit
+    /// register (~60 GE); controller/encoders/misc make up the rest of
+    /// the paper's 256.4 KGE.
+    pub fn report(&self, cfg: &AccelConfig) -> AreaReport {
+        let pes = cfg.num_pes() as f64;
+        let pe_kge = pes * 170.0 / 1000.0;
+        let lif_kge = pes * 60.0 / 1000.0;
+        let ctrl_kge = 60.0;
+        let other_kge = 64.0;
+        let logic_kge = [pe_kge, lif_kge, ctrl_kge, other_kge];
+        let total_kge: f64 = logic_kge.iter().sum();
+        let sram_kb = [
+            cfg.input_sram_bytes as f64 / 1024.0,
+            cfg.output_sram_bytes as f64 / 1024.0,
+            cfg.weight_map_sram_bytes as f64 / 1024.0,
+            cfg.nz_weight_sram_bytes as f64 / 1024.0,
+        ];
+        let sram_total_kb: f64 = sram_kb.iter().sum::<f64>() + 4.5; // misc buffers
+        AreaReport {
+            sram_mm2: sram_total_kb * self.sram_mm2_per_kb,
+            logic_mm2: total_kge * 1000.0 * self.um2_per_ge / 1e6,
+            logic_kge,
+            sram_kb,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snn_d_like_events() -> (FrameEvents, u64) {
+        // Synthetic event profile with the paper's headline activity:
+        // 77.4% input sparsity on ~5.3 G PE events/frame at 29 fps.
+        let total_pe: u64 = 5_300_000_000;
+        let enabled = (total_pe as f64 * 0.226) as u64;
+        let ev = FrameEvents {
+            cycles: 17_000_000,
+            pe_enabled: enabled,
+            pe_gated: total_pe - enabled,
+            lif_updates: 40_000_000,
+            sram_pj: [14e6, 2e6, 1e6, 2e6],
+            pool_ops: 5_000_000,
+        };
+        (ev, total_pe)
+    }
+
+    #[test]
+    fn gating_saving_matches_papers_466() {
+        let m = EnergyModel::default();
+        let (ev, _) = snn_d_like_events();
+        let saving = m.pe_gating_saving(&ev);
+        // Paper: 46.6% at 77.4% sparsity. Coefficients put us nearby.
+        assert!((0.35..0.60).contains(&saving), "saving={saving}");
+    }
+
+    #[test]
+    fn report_is_self_consistent() {
+        let m = EnergyModel::default();
+        let (ev, macs) = snn_d_like_events();
+        let r = m.report(&ev, macs, 29.0);
+        assert!(r.core_energy_mj > 0.0);
+        assert!((r.core_power_mw - r.core_energy_mj * 29.0).abs() < 1e-9);
+        let shares = r.shares();
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(r.tops_per_watt > 1.0, "TOPS/W={}", r.tops_per_watt);
+    }
+
+    #[test]
+    fn area_matches_fig16_scale() {
+        let a = AreaModel::default().report(&AccelConfig::paper());
+        let total = a.total_mm2();
+        // Paper: 1.0 mm² core, 86% memory.
+        assert!((0.6..1.5).contains(&total), "area={total}");
+        assert!((0.75..0.95).contains(&a.memory_share()), "mem={}", a.memory_share());
+        // Logic near the paper's 256.4 KGE.
+        let kge: f64 = a.logic_kge.iter().sum();
+        assert!((180.0..330.0).contains(&kge), "kge={kge}");
+    }
+
+    #[test]
+    fn zero_events_degenerate() {
+        let m = EnergyModel::default();
+        let r = m.report(&FrameEvents::default(), 0, 29.0);
+        assert_eq!(r.core_energy_mj, 0.0);
+        assert_eq!(m.pe_gating_saving(&FrameEvents::default()), 0.0);
+    }
+}

@@ -1,0 +1,211 @@
+//! Analytic whole-network cycle model (§IV-C/E).
+//!
+//! Computes, per layer and in total, the cycles the KTBC schedule takes —
+//! with zero-weight skipping (the shipped design) and for the dense
+//! baseline (skipping off) — without executing any arithmetic, so the
+//! full-size 1024×576 network can be analyzed instantly. The same cost
+//! constants drive the cycle counters of the executing
+//! [`super::controller::SystemController`]; an integration test pins the
+//! two models together on a small layer.
+
+use super::controller::CycleCosts;
+use crate::config::AccelConfig;
+use crate::model::topology::{ConvKind, ConvSpec, NetworkSpec};
+use crate::model::weights::ModelWeights;
+
+/// Per-layer latency result.
+#[derive(Clone, Debug)]
+pub struct LayerLatency {
+    /// Layer name.
+    pub name: String,
+    /// Cycles with weight skipping.
+    pub sparse_cycles: u64,
+    /// Cycles without skipping.
+    pub dense_cycles: u64,
+}
+
+/// Whole-network latency result.
+#[derive(Clone, Debug, Default)]
+pub struct NetworkLatency {
+    /// Per-layer records in execution order.
+    pub layers: Vec<LayerLatency>,
+}
+
+impl NetworkLatency {
+    /// Total cycles with weight skipping.
+    pub fn sparse_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.sparse_cycles).sum()
+    }
+
+    /// Total dense-baseline cycles.
+    pub fn dense_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.dense_cycles).sum()
+    }
+
+    /// Fraction of computing latency saved by zero-weight skipping
+    /// (paper: 47.3%).
+    pub fn latency_saving(&self) -> f64 {
+        let d = self.dense_cycles();
+        if d == 0 {
+            0.0
+        } else {
+            1.0 - self.sparse_cycles() as f64 / d as f64
+        }
+    }
+
+    /// Frames per second at `clock_hz`.
+    pub fn fps(&self, clock_hz: f64) -> f64 {
+        clock_hz / self.sparse_cycles() as f64
+    }
+}
+
+/// The analytic model.
+pub struct LatencyModel {
+    cfg: AccelConfig,
+    costs: CycleCosts,
+}
+
+impl LatencyModel {
+    /// New model with default pipeline costs.
+    pub fn new(cfg: AccelConfig) -> Self {
+        LatencyModel { cfg, costs: CycleCosts::default() }
+    }
+
+    /// Cycles for one layer.
+    ///
+    /// Per tile, the KTBC loop costs
+    /// `Σ_k [ conv_t · B · Σ_c (nnz(k,c) + input_switch) + out_t · lif_wb ]`
+    /// plus the tile setup; `nnz → k²` for the dense baseline.
+    pub fn layer(&self, spec: &ConvSpec, lw: &crate::model::weights::LayerWeights) -> LayerLatency {
+        let tiles_x = spec.in_w.div_ceil(self.cfg.tile_w) as u64;
+        let tiles_y = spec.in_h.div_ceil(self.cfg.tile_h) as u64;
+        let n_tiles = tiles_x * tiles_y;
+        let planes = if spec.kind == ConvKind::Encoding { 8u64 } else { 1 };
+        let conv_t = spec.in_t as u64;
+        let out_t = if spec.kind == ConvKind::Output { spec.in_t } else { spec.out_t } as u64;
+
+        // Σ_c nnz(k,c) per output channel.
+        let mut sparse_inner = 0u64;
+        for k in 0..spec.c_out {
+            for c in 0..spec.c_in {
+                let plane = lw.w.plane(k, c);
+                sparse_inner += plane.iter().filter(|&&w| w != 0).count() as u64;
+            }
+        }
+        let dense_inner = (spec.c_out * spec.c_in * spec.k * spec.k) as u64;
+        let switches = (spec.c_out * spec.c_in) as u64 * self.costs.input_switch;
+        let lif = spec.c_out as u64 * out_t * self.costs.lif_writeback;
+
+        let per_tile_sparse = conv_t * planes * (sparse_inner + switches) + lif;
+        let per_tile_dense = conv_t * planes * (dense_inner + switches) + lif;
+        LayerLatency {
+            name: spec.name.clone(),
+            sparse_cycles: n_tiles * (per_tile_sparse + self.costs.tile_setup),
+            dense_cycles: n_tiles * (per_tile_dense + self.costs.tile_setup),
+        }
+    }
+
+    /// Cycles for the whole network.
+    pub fn network(&self, net: &NetworkSpec, weights: &ModelWeights) -> NetworkLatency {
+        NetworkLatency {
+            layers: net
+                .layers
+                .iter()
+                .map(|l| self.layer(l, weights.get(&l.name).expect("weights cover net")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::controller::SystemController;
+    use crate::model::topology::{Scale, TimeStepConfig};
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    #[test]
+    fn analytic_matches_executed_cycles() {
+        // The executing controller and the analytic model must agree
+        // exactly — they implement the same cost model.
+        let spec = ConvSpec {
+            name: "t".into(),
+            kind: ConvKind::Spike,
+            c_in: 3,
+            c_out: 4,
+            k: 3,
+            in_t: 2,
+            out_t: 2,
+            maxpool_after: false,
+            in_w: 16,
+            in_h: 12,
+            concat_with: None,
+            input_from: None,
+        };
+        let net = NetworkSpec {
+            name: "t".into(),
+            input_w: 16,
+            input_h: 12,
+            input_c: 3,
+            layers: vec![spec.clone()],
+            num_anchors: 5,
+            num_classes: 3,
+        };
+        let mut mw = ModelWeights::random(&net, 1.0, 7);
+        mw.prune_fine_grained(0.7);
+        let lw = mw.get("t").unwrap();
+
+        let cfg = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() };
+        let analytic = LatencyModel::new(cfg.clone()).layer(&spec, lw);
+
+        let mut rng = Rng::new(8);
+        let inputs: Vec<Tensor<u8>> = (0..2)
+            .map(|_| {
+                let n = 3 * 12 * 16;
+                Tensor::from_vec(3, 12, 16, (0..n).map(|_| u8::from(rng.chance(0.3))).collect())
+            })
+            .collect();
+        let run = SystemController::new(cfg).run_layer(&spec, lw, &inputs).unwrap();
+        assert_eq!(run.cycles, analytic.sparse_cycles);
+        assert_eq!(run.dense_cycles, analytic.dense_cycles);
+    }
+
+    #[test]
+    fn paper_pruning_gives_paper_scale_saving() {
+        // §IV-E: zero-weight skipping saves ~47.3% of computing latency at
+        // the paper's pruning rate.
+        let net = NetworkSpec::paper(Scale::Full, TimeStepConfig::PAPER);
+        let mut mw = ModelWeights::random(&net, 1.0, 9);
+        mw.prune_fine_grained(0.8);
+        let lat = LatencyModel::new(AccelConfig::paper()).network(&net, &mw);
+        let saving = lat.latency_saving();
+        assert!((0.30..0.70).contains(&saving), "saving={saving}");
+    }
+
+    #[test]
+    fn full_network_fps_near_paper() {
+        // Paper: 29 fps at 500 MHz for 1024×576. Our geometry differs in
+        // detail; require the same order of magnitude.
+        let net = NetworkSpec::paper(Scale::Full, TimeStepConfig::PAPER);
+        let mut mw = ModelWeights::random(&net, 1.0, 10);
+        mw.prune_fine_grained(0.8);
+        let lat = LatencyModel::new(AccelConfig::paper()).network(&net, &mw);
+        let fps = lat.fps(500e6);
+        assert!((5.0..120.0).contains(&fps), "fps={fps}");
+    }
+
+    #[test]
+    fn mixed_time_steps_cut_cycles() {
+        let mw_of = |ts| {
+            let net = NetworkSpec::paper(Scale::Full, ts);
+            let mut mw = ModelWeights::random(&net, 1.0, 11);
+            mw.prune_fine_grained(0.8);
+            (net, mw)
+        };
+        let (n3, w3) = mw_of(TimeStepConfig::Uniform(3));
+        let (nc2, wc2) = mw_of(TimeStepConfig::C2(3));
+        let m = LatencyModel::new(AccelConfig::paper());
+        assert!(m.network(&nc2, &wc2).sparse_cycles() < m.network(&n3, &w3).sparse_cycles());
+    }
+}

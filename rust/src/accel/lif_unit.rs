@@ -1,0 +1,114 @@
+//! The hardware LIF module (Fig 7): consumes the PE array's 16-bit partial
+//! sums for one (output-channel, time-step) tile, updates the 8-bit
+//! membrane potentials, and emits the output spike tile.
+//!
+//! Functionally it is the vectorized form of
+//! [`crate::model::lif::lif_step_scalar`]; this wrapper adds the tile
+//! geometry, the bias preload (the PE array starts from zero and bias is
+//! injected here, matching the single write port), and activity counters
+//! for the power model.
+
+use crate::model::lif::{lif_step_scalar, LifParams};
+use crate::tensor::Tensor;
+
+/// LIF module state for one tile × one output channel.
+#[derive(Clone, Debug)]
+pub struct LifUnit {
+    th: usize,
+    tw: usize,
+    vmem: Vec<i8>,
+    fired: Vec<bool>,
+    /// Total update events (drives clock/register power).
+    pub updates: u64,
+    /// Total spikes emitted.
+    pub spikes_out: u64,
+}
+
+impl LifUnit {
+    /// Fresh unit for a `th × tw` tile.
+    pub fn new(th: usize, tw: usize) -> Self {
+        LifUnit {
+            th,
+            tw,
+            vmem: vec![0; th * tw],
+            fired: vec![false; th * tw],
+            updates: 0,
+            spikes_out: 0,
+        }
+    }
+
+    /// Advance one time step: `acc` are the PE partial sums, `bias` is the
+    /// per-channel bias injected at LIF input. Returns the spike tile.
+    pub fn step(&mut self, p: LifParams, acc: &[i16], bias: i32) -> Tensor<u8> {
+        assert_eq!(acc.len(), self.vmem.len());
+        let mut out = Tensor::zeros(1, self.th, self.tw);
+        for (i, &a) in acc.iter().enumerate() {
+            let (v, s) = lif_step_scalar(self.vmem[i], self.fired[i], a as i32 + bias, p.vth_q);
+            self.vmem[i] = v;
+            self.fired[i] = s;
+            out.data[i] = u8::from(s);
+            self.updates += 1;
+            self.spikes_out += u64::from(s);
+        }
+        out
+    }
+
+    /// Reset membrane state (new output channel / new frame).
+    pub fn reset(&mut self) {
+        self.vmem.iter_mut().for_each(|v| *v = 0);
+        self.fired.iter_mut().for_each(|f| *f = false);
+    }
+
+    /// Current membrane potentials (for the output-conv no-reset mode the
+    /// controller reads accumulators directly instead).
+    pub fn vmem(&self) -> &[i8] {
+        &self.vmem
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::lif::{LifParams, LifState};
+    use crate::util::propcheck::run_prop;
+
+    #[test]
+    fn matches_model_lif_state() {
+        run_prop("lif-unit/matches-model", |g| {
+            let th = g.usize(1, 6);
+            let tw = g.usize(1, 6);
+            let n = th * tw;
+            let p = LifParams { vth_q: g.i64(1, 96) as i32 };
+            let bias = g.i64(-20, 20) as i32;
+            let mut unit = LifUnit::new(th, tw);
+            let mut model = LifState::new(n);
+            for _ in 0..3 {
+                let acc: Vec<i16> = g.vec(n, |g| g.i64(-200, 200) as i16);
+                let tile = unit.step(p, &acc, bias);
+                let accb: Vec<i32> = acc.iter().map(|&a| a as i32 + bias).collect();
+                let mut want = vec![0u8; n];
+                model.step(p, &accb, &mut want);
+                assert_eq!(tile.data, want);
+                assert_eq!(unit.vmem(), model.vmem.as_slice());
+            }
+        });
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut unit = LifUnit::new(2, 2);
+        let p = LifParams { vth_q: 10 };
+        unit.step(p, &[20, 0, 20, 0], 0);
+        assert_eq!(unit.updates, 4);
+        assert_eq!(unit.spikes_out, 2);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut unit = LifUnit::new(1, 2);
+        unit.step(LifParams { vth_q: 100 }, &[50, 60], 0);
+        assert_ne!(unit.vmem(), &[0, 0]);
+        unit.reset();
+        assert_eq!(unit.vmem(), &[0, 0]);
+    }
+}

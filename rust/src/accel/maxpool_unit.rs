@@ -1,0 +1,48 @@
+//! The max-pooling module (Fig 7) — "composed of simple OR gates": 2×2
+//! stride-2 OR reduction over binary spike tiles, applied on the fly as
+//! spikes leave the LIF module so pooled layers never store the full-rate
+//! map.
+
+use crate::tensor::Tensor;
+
+/// OR-gate max-pooling unit with an activity counter.
+#[derive(Clone, Debug, Default)]
+pub struct MaxPoolUnit {
+    /// Number of 2×2 OR reductions performed (4-input OR gates switched).
+    pub ops: u64,
+}
+
+impl MaxPoolUnit {
+    /// Pool one spike tile `(1, h, w)` → `(1, h/2, w/2)`.
+    pub fn pool(&mut self, tile: &Tensor<u8>) -> Tensor<u8> {
+        let out = crate::ref_impl::maxpool2x2_or(tile);
+        self.ops += (out.h * out.w) as u64;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::run_prop;
+
+    #[test]
+    fn pools_and_counts() {
+        let mut mp = MaxPoolUnit::default();
+        let t = Tensor::from_vec(1, 2, 4, vec![0, 1, 0, 0, 0, 0, 0, 1]);
+        let out = mp.pool(&t);
+        assert_eq!(out.data, vec![1, 1]);
+        assert_eq!(mp.ops, 2);
+    }
+
+    #[test]
+    fn prop_matches_reference() {
+        run_prop("maxpool-unit/matches-ref", |g| {
+            let h = g.usize(1, 5) * 2;
+            let w = g.usize(1, 5) * 2;
+            let t = Tensor::from_vec(1, h, w, g.spikes(h * w, 0.4));
+            let mut mp = MaxPoolUnit::default();
+            assert_eq!(mp.pool(&t), crate::ref_impl::maxpool2x2_or(&t));
+        });
+    }
+}

@@ -1,0 +1,44 @@
+//! Cycle-level simulator of the paper's accelerator (§III).
+//!
+//! The module mirrors the block diagram of Fig 7:
+//!
+//! ```text
+//!  DRAM ⇄ [Input SRAM ×4] ─┐
+//!  DRAM ⇄ [Weight Map SRAM]├─► [PE module: 576 gated CEs] ─► [LIF] ─► [MaxPool OR]
+//!  DRAM ⇄ [NZ Weight SRAM] ┘          ▲                          │
+//!                            [System Controller (KTBC loop)]     ▼
+//!                                                     [Output SRAM ×4] ⇄ DRAM
+//! ```
+//!
+//! [`encoder`] — row/column priority encoders over the weight bit mask;
+//! [`pe`] — the 576-element gated PE array with clock-gating statistics;
+//! [`one_to_all`] — the gated one-to-all product over one kernel plane;
+//! [`lif_unit`] / [`maxpool_unit`] — post-processing units;
+//! [`sram`] / [`dram`] — memory models with access + energy accounting;
+//! [`reorder`] — temporal/channel output reordering (Fig 13);
+//! [`controller`] — the KTBC loop executing whole layers cycle-accurately;
+//! [`latency`] — the analytic whole-network cycle model (dense vs sparse);
+//! [`energy`] — the paper-calibrated power/area model (Fig 16/18);
+//! [`parallelism`] — the §III-A design-space analysis behind Fig 6.
+
+pub mod controller;
+pub mod dram;
+pub mod encoder;
+pub mod energy;
+pub mod latency;
+pub mod lif_unit;
+pub mod maxpool_unit;
+pub mod one_to_all;
+pub mod parallelism;
+pub mod pe;
+pub mod reorder;
+pub mod sram;
+
+pub use controller::{LayerRun, SystemController};
+pub use dram::DramModel;
+pub use encoder::PriorityEncoder;
+pub use energy::{AreaModel, EnergyModel, PowerReport};
+pub use latency::{LatencyModel, NetworkLatency};
+pub use one_to_all::GatedOneToAll;
+pub use pe::{GatingStats, PeArray};
+pub use sram::{SramBank, SramKind};

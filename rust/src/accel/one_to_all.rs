@@ -1,0 +1,179 @@
+//! The gated one-to-all product (§III-B-1, Fig 8/9/11) — the paper's key
+//! computational idea.
+//!
+//! For one input-channel tile and one bit-mask-compressed kernel plane:
+//! every cycle the priority encoders emit the next nonzero weight position
+//! `(R, C)`; the **enable map** is the input tile shifted by `(R−1, C−1)`
+//! (so output `(y,x)` sees input `(y+R−1, x+C−1)` — replicate-padded at
+//! the tile boundary, which is exactly block convolution); all 576 PEs
+//! accumulate the weight in parallel, clock-gated by the enable bit.
+//! Zero *weights* are skipped entirely (cycle savings); zero *activations*
+//! only gate clocks (power savings) — never stalling the array.
+
+use super::encoder::PriorityEncoder;
+use super::pe::PeArray;
+use crate::sparse::BitMaskKernel;
+use crate::tensor::Tensor;
+
+/// Executes gated one-to-all products over one tile.
+pub struct GatedOneToAll<'a> {
+    /// Input tile (single channel plane), `(1, th, tw)`.
+    tile: &'a Tensor<u8>,
+    /// Scratch enable map, row-major `th × tw`.
+    enable: Vec<u8>,
+}
+
+impl<'a> GatedOneToAll<'a> {
+    /// Bind to one input-channel tile.
+    pub fn new(tile: &'a Tensor<u8>) -> Self {
+        assert_eq!(tile.c, 1, "one input channel at a time");
+        GatedOneToAll { tile, enable: vec![0; tile.h * tile.w] }
+    }
+
+    /// Build the enable map for a nonzero weight at kernel position
+    /// `(r, c)` of a `kh × kw` kernel: the input tile shifted so that each
+    /// output neuron reads its corresponding input, replicate-padded.
+    pub fn enable_map(&mut self, r: usize, c: usize, kh: usize, kw: usize) -> &[u8] {
+        let (th, tw) = (self.tile.h, self.tile.w);
+        let dy = r as isize - (kh / 2) as isize;
+        let dx = c as isize - (kw / 2) as isize;
+        for y in 0..th {
+            for x in 0..tw {
+                self.enable[y * tw + x] =
+                    self.tile.get_replicate(0, y as isize + dy, x as isize + dx);
+            }
+        }
+        &self.enable
+    }
+
+    /// Run the full product of this tile with one compressed kernel plane,
+    /// accumulating into `pe`. `shift` selects the bit plane (encoding
+    /// layer); returns the number of cycles consumed (= nonzero weights).
+    ///
+    /// Uses the fused shifted-accumulate (identical arithmetic to building
+    /// the enable map then [`PeArray::gated_accumulate`]; the property
+    /// test pins the two paths together).
+    pub fn run(&mut self, kernel: &BitMaskKernel, pe: &mut PeArray, shift: u32) -> u64 {
+        debug_assert_eq!(pe.tile_h, self.tile.h);
+        debug_assert_eq!(pe.tile_w, self.tile.w);
+        let mut enc = PriorityEncoder::load(kernel.map[0], kernel.kw);
+        let mut nz_iter = kernel.nz.iter();
+        let mut cycles = 0;
+        while let Some((r, c)) = enc.next_position() {
+            let w = *nz_iter.next().expect("map/nz agree");
+            let dy = r as isize - (kernel.kh / 2) as isize;
+            let dx = c as isize - (kernel.kw / 2) as isize;
+            pe.gated_accumulate_shifted(self.tile, dy, dx, w, shift);
+            cycles += 1;
+        }
+        cycles
+    }
+
+    /// Reference form of [`GatedOneToAll::run`]: materialize each enable
+    /// map explicitly and use the plain gated accumulate — kept as the
+    /// semantic definition the fused path is property-tested against.
+    pub fn run_reference(&mut self, kernel: &BitMaskKernel, pe: &mut PeArray, shift: u32) -> u64 {
+        let mut enc = PriorityEncoder::load(kernel.map[0], kernel.kw);
+        let mut nz_iter = kernel.nz.iter();
+        let mut cycles = 0;
+        while let Some((r, c)) = enc.next_position() {
+            let w = *nz_iter.next().expect("map/nz agree");
+            self.enable_map(r, c, kernel.kh, kernel.kw);
+            pe.gated_accumulate(&self.enable, w, shift);
+            cycles += 1;
+        }
+        cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ref_impl::conv2d;
+    use crate::tensor::Kernel4;
+    use crate::util::propcheck::run_prop;
+
+    /// The gated one-to-all product over a full tile must equal ordinary
+    /// (block) convolution of that tile — the central correctness claim —
+    /// and the fused fast path must match the reference enable-map path
+    /// (values *and* gating statistics).
+    #[test]
+    fn prop_equals_convolution() {
+        run_prop("one-to-all/equals-conv", |g| {
+            let th = g.usize(1, 8);
+            let tw = g.usize(1, 8);
+            let tile = Tensor::from_vec(1, th, tw, g.spikes(th * tw, 0.5));
+            let plane = g.sparse_i8(9, 0.4);
+            let bm = BitMaskKernel::from_dense(&plane, 3, 3);
+            let mut pe = PeArray::new(th, tw);
+            let cycles = GatedOneToAll::new(&tile).run(&bm, &mut pe, 0);
+            assert_eq!(cycles as usize, bm.nnz());
+
+            let w = Kernel4::from_vec(1, 1, 3, 3, plane);
+            let want = conv2d(&tile, &w, &[0]);
+            let got: Vec<i32> = pe.partial_sums().to_vec();
+            assert_eq!(got, want.data);
+
+            // Fused vs reference path: identical sums and statistics.
+            let mut pe_ref = PeArray::new(th, tw);
+            GatedOneToAll::new(&tile).run_reference(&bm, &mut pe_ref, 0);
+            assert_eq!(pe.partial_sums(), pe_ref.partial_sums());
+            assert_eq!(pe.stats(), pe_ref.stats());
+        });
+    }
+
+    #[test]
+    fn fig8_example_single_weight() {
+        // Fig 8: a 4×4 input, one nonzero weight at kernel (0,0). The
+        // enable map is the input shifted down-right by one (replicate).
+        let tile = Tensor::from_vec(
+            1,
+            4,
+            4,
+            vec![1, 0, 0, 0, /**/ 0, 1, 0, 0, /**/ 0, 0, 0, 0, /**/ 0, 0, 0, 1],
+        );
+        let plane = {
+            let mut p = vec![0i8; 9];
+            p[0] = 7; // (0,0)
+            p
+        };
+        let bm = BitMaskKernel::from_dense(&plane, 3, 3);
+        let mut pe = PeArray::new(4, 4);
+        GatedOneToAll::new(&tile).run(&bm, &mut pe, 0);
+        // Output (y,x) = 7 · input(y−1, x−1) with replicate padding.
+        assert_eq!(pe.partial_sums()[0], 7); // reads input(0,0) via clamp
+        assert_eq!(pe.partial_sums()[1 * 4 + 1], 7); // reads input(0,0)
+        assert_eq!(pe.partial_sums()[2 * 4 + 2], 7); // reads input(1,1)
+        assert_eq!(pe.partial_sums()[3 * 4 + 3], 0); // reads input(2,2)=0
+    }
+
+    #[test]
+    fn one_by_one_kernel_identity_enable() {
+        let tile = Tensor::from_vec(1, 2, 3, vec![1, 0, 1, 0, 1, 0]);
+        let bm = BitMaskKernel::from_dense(&[4], 1, 1);
+        let mut pe = PeArray::new(2, 3);
+        let cycles = GatedOneToAll::new(&tile).run(&bm, &mut pe, 0);
+        assert_eq!(cycles, 1);
+        assert_eq!(pe.partial_sums(), &[4, 0, 4, 0, 4, 0]);
+    }
+
+    #[test]
+    fn zero_kernel_costs_zero_cycles() {
+        let tile = Tensor::from_vec(1, 2, 2, vec![1, 1, 1, 1]);
+        let bm = BitMaskKernel::from_dense(&[0i8; 9], 3, 3);
+        let mut pe = PeArray::new(2, 2);
+        let cycles = GatedOneToAll::new(&tile).run(&bm, &mut pe, 0);
+        assert_eq!(cycles, 0);
+        assert_eq!(pe.partial_sums(), &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn gating_tracks_activation_sparsity() {
+        // All-zero tile: every event is gated.
+        let tile = Tensor::zeros(1, 3, 3);
+        let bm = BitMaskKernel::from_dense(&[1i8; 9], 3, 3);
+        let mut pe = PeArray::new(3, 3);
+        GatedOneToAll::new(&tile).run(&bm, &mut pe, 0);
+        assert_eq!(pe.stats().gated_fraction(), 1.0);
+    }
+}

@@ -1,0 +1,97 @@
+//! Temporal/channel output reordering (Fig 13).
+//!
+//! The KTBC loop finishes the input-channel dimension `C` before the time
+//! dimension `T`, but finishes the output-channel dimension `K` *after*
+//! `T`. Written naively, layer *n*'s output lands in `(k, t)` order while
+//! layer *n+1* wants to stream `(t, c)`-major input sequentially. The
+//! hardware therefore computes a strided write address so the Output SRAM
+//! (and DRAM) hold data in the next layer's natural read order:
+//!
+//! - other layers: produced `(k, t)` → stored `(t, k)`;
+//! - encoding layer: produced `(k, b, t)` (bit planes) → stored `(t, k)`
+//!   with the bit planes split and serialized first (Fig 13a).
+
+/// Write address (in elements) for the output produced at output channel
+/// `k` of `num_k`, time step `t` of `num_t`, so that storage is
+/// `(t, k)`-major — the next layer's sequential read order.
+pub fn write_address(k: usize, t: usize, num_k: usize, num_t: usize) -> usize {
+    debug_assert!(k < num_k && t < num_t);
+    t * num_k + k
+}
+
+/// Read address for the *producing* order — `(k, t)`-major — used to
+/// verify that reorder-on-write equals store-then-permute.
+pub fn produce_order_index(k: usize, t: usize, num_t: usize) -> usize {
+    k * num_t + t
+}
+
+/// Apply the reorder to a buffer laid out `(k, t)`-major, returning the
+/// `(t, k)`-major buffer the hardware would have produced with strided
+/// writes. `elem` values are whole tiles in the real datapath; any `Clone`
+/// payload works here.
+pub fn reorder_kt_to_tk<T: Clone>(data: &[T], num_k: usize, num_t: usize) -> Vec<T> {
+    assert_eq!(data.len(), num_k * num_t);
+    let mut out: Vec<T> = Vec::with_capacity(data.len());
+    for t in 0..num_t {
+        for k in 0..num_k {
+            out.push(data[produce_order_index(k, t, num_t)].clone());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::run_prop;
+
+    #[test]
+    fn fig13_example() {
+        // 3 output channels × 2 time steps produced (k,t)-major:
+        // [k0t0, k0t1, k1t0, k1t1, k2t0, k2t1]
+        let produced = vec!["k0t0", "k0t1", "k1t0", "k1t1", "k2t0", "k2t1"];
+        let stored = reorder_kt_to_tk(&produced, 3, 2);
+        assert_eq!(stored, vec!["k0t0", "k1t0", "k2t0", "k0t1", "k1t1", "k2t1"]);
+    }
+
+    #[test]
+    fn write_address_is_inverse_of_produce_order() {
+        run_prop("reorder/write-addr-inverse", |g| {
+            let num_k = g.usize(1, 16);
+            let num_t = g.usize(1, 4);
+            let mut hit = vec![false; num_k * num_t];
+            for k in 0..num_k {
+                for t in 0..num_t {
+                    let a = write_address(k, t, num_k, num_t);
+                    assert!(!hit[a], "address collision");
+                    hit[a] = true;
+                }
+            }
+            assert!(hit.iter().all(|&h| h), "addresses cover the buffer");
+        });
+    }
+
+    #[test]
+    fn strided_write_equals_permute() {
+        run_prop("reorder/strided-equals-permute", |g| {
+            let num_k = g.usize(1, 8);
+            let num_t = g.usize(1, 4);
+            let data: Vec<u32> = g.vec(num_k * num_t, |g| g.rng().next_u32());
+            // Simulate strided writes.
+            let mut strided = vec![0u32; data.len()];
+            for k in 0..num_k {
+                for t in 0..num_t {
+                    strided[write_address(k, t, num_k, num_t)] =
+                        data[produce_order_index(k, t, num_t)];
+                }
+            }
+            assert_eq!(strided, reorder_kt_to_tk(&data, num_k, num_t));
+        });
+    }
+
+    #[test]
+    fn single_time_step_is_identity() {
+        let data = vec![10, 20, 30];
+        assert_eq!(reorder_kt_to_tk(&data, 3, 1), data);
+    }
+}

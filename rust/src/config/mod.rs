@@ -1,0 +1,149 @@
+//! Configuration system: a TOML-subset parser (no `serde` offline), typed
+//! accelerator/runtime configs, and the hardware configuration registers
+//! of §III-D.
+
+pub mod registers;
+pub mod toml;
+
+pub use registers::{ConfigRegisters, LayerSetup};
+pub use toml::TomlDoc;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Hardware geometry + technology constants of the implemented chip
+/// (Fig 16). All simulator components read from this one struct so a
+/// hypothetical design-space sweep can vary it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AccelConfig {
+    /// PE tile height (paper: 18).
+    pub tile_h: usize,
+    /// PE tile width (paper: 32).
+    pub tile_w: usize,
+    /// Clock frequency in Hz (paper: 500 MHz).
+    pub clock_hz: f64,
+    /// Weight precision in bits (paper: 8).
+    pub weight_bits: usize,
+    /// Membrane-potential storage bits (paper: 8).
+    pub vmem_bits: usize,
+    /// Accumulator bits (paper: 16).
+    pub acc_bits: usize,
+    /// NZ Weight SRAM capacity in bytes. Sizing rule from §IV-D: large
+    /// enough for the largest layer's compressed weights (the paper's
+    /// network needed 216 KB total; our reproduction's b4.stack1 is a bit
+    /// wider, needing 192 KB NZ + 128 KB map — see DESIGN.md §8).
+    pub nz_weight_sram_bytes: usize,
+    /// Weight Map SRAM capacity in bytes.
+    pub weight_map_sram_bytes: usize,
+    /// Input SRAM capacity in bytes (paper evaluates 36 KB and 81 KB).
+    pub input_sram_bytes: usize,
+    /// Output SRAM capacity in bytes.
+    pub output_sram_bytes: usize,
+    /// Number of input/output SRAM banks (paper: 4 each).
+    pub io_banks: usize,
+    /// DRAM energy per bit in picojoules (paper: 70 pJ/bit DDR3).
+    pub dram_pj_per_bit: f64,
+    /// Max supported input channels (§III-D: 512).
+    pub max_in_channels: usize,
+    /// Max supported output channels (§III-D: 512).
+    pub max_out_channels: usize,
+    /// Max supported time steps (§III-D: 4).
+    pub max_time_steps: usize,
+    /// Supply voltage (paper: 0.9 V) — used by normalized-efficiency math.
+    pub voltage: f64,
+    /// Process node in nm (paper: 28).
+    pub process_nm: f64,
+}
+
+impl AccelConfig {
+    /// The paper's implemented configuration (Fig 16) with the 36 KB
+    /// input SRAM of §IV-D.
+    pub fn paper() -> Self {
+        AccelConfig {
+            tile_h: 18,
+            tile_w: 32,
+            clock_hz: 500e6,
+            weight_bits: 8,
+            vmem_bits: 8,
+            acc_bits: 16,
+            nz_weight_sram_bytes: 192 * 1024,
+            weight_map_sram_bytes: 128 * 1024,
+            input_sram_bytes: 36 * 1024,
+            output_sram_bytes: 36 * 1024,
+            io_banks: 4,
+            dram_pj_per_bit: 70.0,
+            max_in_channels: 512,
+            max_out_channels: 512,
+            max_time_steps: 4,
+            voltage: 0.9,
+            process_nm: 28.0,
+        }
+    }
+
+    /// §IV-D variant: input SRAM enlarged to 81 KB so a 32×18 tile with
+    /// 384 channels × 3 time steps stays on chip.
+    pub fn paper_large_input_sram() -> Self {
+        AccelConfig { input_sram_bytes: 81 * 1024, ..Self::paper() }
+    }
+
+    /// Number of PEs (one per output pixel of the tile; paper: 576).
+    pub fn num_pes(&self) -> usize {
+        self.tile_h * self.tile_w
+    }
+
+    /// Load overrides from a TOML-subset file section `[accel]`.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let doc = TomlDoc::parse_file(path)
+            .with_context(|| format!("loading accel config {}", path.display()))?;
+        let mut cfg = Self::paper();
+        if let Some(s) = doc.section("accel") {
+            cfg.tile_h = s.get_usize("tile_h").unwrap_or(cfg.tile_h);
+            cfg.tile_w = s.get_usize("tile_w").unwrap_or(cfg.tile_w);
+            cfg.clock_hz = s.get_f64("clock_hz").unwrap_or(cfg.clock_hz);
+            cfg.weight_bits = s.get_usize("weight_bits").unwrap_or(cfg.weight_bits);
+            cfg.input_sram_bytes = s.get_usize("input_sram_bytes").unwrap_or(cfg.input_sram_bytes);
+            cfg.output_sram_bytes =
+                s.get_usize("output_sram_bytes").unwrap_or(cfg.output_sram_bytes);
+            cfg.nz_weight_sram_bytes =
+                s.get_usize("nz_weight_sram_bytes").unwrap_or(cfg.nz_weight_sram_bytes);
+            cfg.weight_map_sram_bytes =
+                s.get_usize("weight_map_sram_bytes").unwrap_or(cfg.weight_map_sram_bytes);
+            cfg.dram_pj_per_bit = s.get_f64("dram_pj_per_bit").unwrap_or(cfg.dram_pj_per_bit);
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_matches_fig16() {
+        let c = AccelConfig::paper();
+        assert_eq!(c.num_pes(), 576);
+        assert_eq!(c.clock_hz, 500e6);
+        assert_eq!(c.weight_bits, 8);
+        assert_eq!(c.acc_bits, 16);
+        assert_eq!(c.io_banks, 4);
+    }
+
+    #[test]
+    fn large_sram_variant() {
+        let c = AccelConfig::paper_large_input_sram();
+        assert_eq!(c.input_sram_bytes, 81 * 1024);
+        assert_eq!(c.tile_h, AccelConfig::paper().tile_h);
+    }
+
+    #[test]
+    fn from_file_overrides() {
+        let dir = std::env::temp_dir().join("scsnn_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("accel.toml");
+        std::fs::write(&p, "[accel]\ntile_h = 9\nclock_hz = 1e9\n").unwrap();
+        let c = AccelConfig::from_file(&p).unwrap();
+        assert_eq!(c.tile_h, 9);
+        assert_eq!(c.clock_hz, 1e9);
+        assert_eq!(c.tile_w, 32); // untouched default
+    }
+}

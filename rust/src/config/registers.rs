@@ -1,0 +1,152 @@
+//! System-controller configuration registers (§III-D).
+//!
+//! The paper's accelerator is configured per layer through a register file:
+//! convolution parameters (≤512 in/out channels, 1×1–3×3 kernels), data
+//! flow parameters (≤4 input/output time steps, ≤1024×576 input), the
+//! sparse weight count, max-pooling / encoding-layer indicator bits, and a
+//! setup-done indicator. The simulator programs these exactly as a driver
+//! would program the chip, and validates ranges like the RTL's assertions.
+
+use anyhow::{bail, Result};
+
+/// Per-layer setup written into the configuration registers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerSetup {
+    /// Input channels (1..=512).
+    pub in_channels: usize,
+    /// Output channels (1..=512).
+    pub out_channels: usize,
+    /// Kernel height (1..=3).
+    pub kh: usize,
+    /// Kernel width (1..=3).
+    pub kw: usize,
+    /// Input time steps (1..=4).
+    pub in_t: usize,
+    /// Output time steps (1..=4).
+    pub out_t: usize,
+    /// Input feature height (≤576).
+    pub in_h: usize,
+    /// Input feature width (≤1024).
+    pub in_w: usize,
+    /// Number of nonzero (sparse) weights for the layer.
+    pub num_sparse_weights: usize,
+    /// Max-pool (2×2 OR) fused after this layer.
+    pub maxpool: bool,
+    /// This is the multibit input-encoding layer (bit-serial, B=8).
+    pub encoding: bool,
+}
+
+impl LayerSetup {
+    /// Input bit planes: 8 for the encoding layer, 1 for spike layers
+    /// (the `B` dimension of the KTBC loop).
+    pub fn bit_planes(&self) -> usize {
+        if self.encoding {
+            8
+        } else {
+            1
+        }
+    }
+}
+
+/// The register file of the system controller.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigRegisters {
+    setup: Option<LayerSetup>,
+    /// The §III-D "setup indicator": processing may only start once set.
+    setup_done: bool,
+}
+
+impl ConfigRegisters {
+    /// Program the registers for a layer, enforcing the documented
+    /// architectural limits.
+    pub fn program(&mut self, s: LayerSetup) -> Result<()> {
+        if s.in_channels == 0 || s.in_channels > 512 {
+            bail!("in_channels {} out of range 1..=512", s.in_channels);
+        }
+        if s.out_channels == 0 || s.out_channels > 512 {
+            bail!("out_channels {} out of range 1..=512", s.out_channels);
+        }
+        if !(1..=3).contains(&s.kh) || !(1..=3).contains(&s.kw) {
+            bail!("kernel {}x{} out of range 1x1..=3x3", s.kh, s.kw);
+        }
+        if !(1..=4).contains(&s.in_t) || !(1..=4).contains(&s.out_t) {
+            bail!("time steps in={} out={} out of range 1..=4", s.in_t, s.out_t);
+        }
+        if s.in_h == 0 || s.in_h > 576 || s.in_w == 0 || s.in_w > 1024 {
+            bail!("input {}x{} exceeds 1024x576", s.in_w, s.in_h);
+        }
+        if s.num_sparse_weights > s.out_channels * s.in_channels * s.kh * s.kw {
+            bail!("num_sparse_weights exceeds kernel volume");
+        }
+        self.setup = Some(s);
+        self.setup_done = true;
+        Ok(())
+    }
+
+    /// Whether setup is complete (the §III-D indicator bit).
+    pub fn is_ready(&self) -> bool {
+        self.setup_done
+    }
+
+    /// Read back the programmed setup.
+    pub fn setup(&self) -> Option<&LayerSetup> {
+        self.setup.as_ref()
+    }
+
+    /// Clear between layers.
+    pub fn reset(&mut self) {
+        self.setup = None;
+        self.setup_done = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn valid() -> LayerSetup {
+        LayerSetup {
+            in_channels: 64,
+            out_channels: 128,
+            kh: 3,
+            kw: 3,
+            in_t: 1,
+            out_t: 3,
+            in_h: 144,
+            in_w: 256,
+            num_sparse_weights: 1000,
+            maxpool: true,
+            encoding: false,
+        }
+    }
+
+    #[test]
+    fn program_and_ready() {
+        let mut regs = ConfigRegisters::default();
+        assert!(!regs.is_ready());
+        regs.program(valid()).unwrap();
+        assert!(regs.is_ready());
+        assert_eq!(regs.setup().unwrap().out_channels, 128);
+        regs.reset();
+        assert!(!regs.is_ready());
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let mut regs = ConfigRegisters::default();
+        assert!(regs.program(LayerSetup { in_channels: 0, ..valid() }).is_err());
+        assert!(regs.program(LayerSetup { out_channels: 513, ..valid() }).is_err());
+        assert!(regs.program(LayerSetup { kh: 4, ..valid() }).is_err());
+        assert!(regs.program(LayerSetup { in_t: 5, ..valid() }).is_err());
+        assert!(regs.program(LayerSetup { in_w: 2048, ..valid() }).is_err());
+        assert!(regs
+            .program(LayerSetup { num_sparse_weights: usize::MAX, ..valid() })
+            .is_err());
+    }
+
+    #[test]
+    fn bit_planes_encoding_vs_spike() {
+        assert_eq!(LayerSetup { encoding: true, ..valid() }.bit_planes(), 8);
+        assert_eq!(valid().bit_planes(), 1);
+    }
+}

@@ -1,0 +1,157 @@
+//! TOML-subset parser: `[section]` headers, `key = value` pairs with
+//! string / integer / float / boolean values, `#` comments. That is all
+//! the project's config files use, and `serde`/`toml` are unavailable
+//! offline.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One parsed `[section]`.
+#[derive(Clone, Debug, Default)]
+pub struct TomlSection {
+    values: BTreeMap<String, String>,
+}
+
+impl TomlSection {
+    /// Raw string value (quotes stripped).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// usize value.
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        // Accept float syntax (e.g. "1e6") for convenience.
+        self.get(key)
+            .and_then(|v| v.parse::<usize>().ok().or_else(|| v.parse::<f64>().ok().map(|f| f as usize)))
+    }
+
+    /// f64 value.
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// bool value.
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// All keys in the section.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+/// A parsed document: named sections plus a root section for keys that
+/// appear before any `[section]` header.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    root: TomlSection,
+    sections: BTreeMap<String, TomlSection>,
+}
+
+impl TomlDoc {
+    /// Parse a document from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut current: Option<String> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let Some(name) = name.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header: {raw:?}", lineno + 1);
+                };
+                let name = name.trim().to_string();
+                doc.sections.entry(name.clone()).or_default();
+                current = Some(name);
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim().to_string();
+                let val = unquote(v.trim());
+                let section = match &current {
+                    Some(name) => doc.sections.get_mut(name).unwrap(),
+                    None => &mut doc.root,
+                };
+                section.values.insert(key, val);
+            } else {
+                bail!("line {}: expected `key = value` or `[section]`: {raw:?}", lineno + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Parse a document from a file.
+    pub fn parse_file(path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Named section.
+    pub fn section(&self, name: &str) -> Option<&TomlSection> {
+        self.sections.get(name)
+    }
+
+    /// Keys before any section header.
+    pub fn root(&self) -> &TomlSection {
+        &self.root
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Only `#` outside quotes starts a comment; quotes never span lines.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> String {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            "top = 1\n[accel]\ntile_h = 18 # comment\nclock_hz = 5e8\nname = \"paper\"\nfast = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.root().get_usize("top"), Some(1));
+        let s = doc.section("accel").unwrap();
+        assert_eq!(s.get_usize("tile_h"), Some(18));
+        assert_eq!(s.get_f64("clock_hz"), Some(5e8));
+        assert_eq!(s.get("name"), Some("paper"));
+        assert_eq!(s.get_bool("fast"), Some(true));
+    }
+
+    #[test]
+    fn hash_in_string_not_comment() {
+        let doc = TomlDoc::parse("[a]\nk = \"x # y\"\n").unwrap();
+        assert_eq!(doc.section("a").unwrap().get("k"), Some("x # y"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(TomlDoc::parse("not a kv line").is_err());
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+    }
+
+    #[test]
+    fn missing_section_is_none() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert!(doc.section("nope").is_none());
+    }
+}

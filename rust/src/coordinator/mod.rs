@@ -1,0 +1,19 @@
+//! Layer-3 coordinator: the frame-processing pipeline that drives the
+//! accelerator (simulated) and the PJRT-compiled network on the request
+//! path.
+//!
+//! - [`tiler`] — 32×18 block tiling plan (the spatial-parallel work units);
+//! - [`scheduler`] — per-layer SRAM residency / DRAM refetch schedule;
+//! - [`pipeline`] — end-to-end frame pipeline: PJRT inference (or the
+//!   golden model), YOLO decode + NMS, hardware metric estimation;
+//! - [`metrics`] — throughput/latency/energy aggregation and reporting.
+
+pub mod metrics;
+pub mod pipeline;
+pub mod scheduler;
+pub mod tiler;
+
+pub use metrics::{FrameHwEstimate, PipelineMetrics};
+pub use pipeline::{DetectionPipeline, FrameResult, HwStatsMode, PipelineReport};
+pub use scheduler::{LayerPlan, LayerSchedule};
+pub use tiler::{TilePlan, TileRect};

@@ -1,0 +1,291 @@
+//! The end-to-end detection pipeline (the "chip driver").
+//!
+//! Per frame: run the quantized network — through the PJRT executable when
+//! the AOT artifacts are available, else through the functional golden
+//! model (bit-identical by construction) — decode the YOLO head, apply
+//! NMS, and (optionally) estimate the hardware metrics of the frame on
+//! the cycle/energy models using the frame's real activation sparsity.
+//!
+//! Multi-frame runs fan golden-model work across worker threads; the PJRT
+//! path executes on the coordinator thread (the executable is not `Sync`).
+
+use crate::accel::energy::EnergyModel;
+use crate::accel::latency::LatencyModel;
+use crate::config::AccelConfig;
+use crate::coordinator::metrics::{FrameHwEstimate, PipelineMetrics};
+use crate::detect::dataset::Dataset;
+use crate::detect::map::mean_ap;
+use crate::detect::nms::nms;
+use crate::detect::yolo::{decode, Box2D, YoloHead};
+use crate::detect::NUM_CLASSES;
+use crate::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use crate::model::weights::ModelWeights;
+use crate::ref_impl::{ForwardOptions, SnnForward};
+use crate::runtime::{ArtifactPaths, SnnExecutable};
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// How often to run the (costly) golden-model hardware estimation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HwStatsMode {
+    /// Never (detection only).
+    Off,
+    /// On the first frame only; reuse for the rest.
+    Once,
+    /// Every n-th frame.
+    Every(usize),
+}
+
+/// One frame's result.
+#[derive(Clone, Debug)]
+pub struct FrameResult {
+    /// Final detections (post NMS).
+    pub detections: Vec<Box2D>,
+    /// Dequantized head (kept for diagnostics).
+    pub head: Tensor<f32>,
+    /// Wall time of the inference+decode path.
+    pub wall: std::time::Duration,
+}
+
+/// Summary of a dataset run.
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    /// Aggregated metrics.
+    pub metrics: PipelineMetrics,
+    /// mAP against the dataset ground truth.
+    pub map: f64,
+    /// Per-class AP.
+    pub ap: Vec<f64>,
+}
+
+/// The pipeline.
+pub struct DetectionPipeline {
+    /// Network spec (tiny scale — the trained/exported geometry).
+    pub net: NetworkSpec,
+    /// Quantized weights.
+    pub weights: ModelWeights,
+    exe: Option<SnnExecutable>,
+    head_cfg: YoloHead,
+    /// Score threshold for decoding.
+    pub conf_thresh: f32,
+    /// NMS IoU threshold.
+    pub nms_iou: f32,
+    cfg: AccelConfig,
+    energy: EnergyModel,
+    /// Hardware estimation cadence.
+    pub hw_mode: HwStatsMode,
+}
+
+impl DetectionPipeline {
+    /// Build from the artifacts directory; `use_pjrt = false` skips the
+    /// executable (golden model only — used by tests and the simulator
+    /// benches so they don't pay PJRT compilation).
+    pub fn from_artifacts(dir: &Path, use_pjrt: bool) -> Result<Self> {
+        let paths = ArtifactPaths::in_dir(dir);
+        let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+        let weights = ModelWeights::load(&paths.weights)
+            .with_context(|| "loading quantized weights (run `make artifacts`)")?;
+        weights.validate_against(&net)?;
+        let (gw, gh) = net.grid();
+        let exe = if use_pjrt {
+            Some(SnnExecutable::load(
+                &paths.model_hlo,
+                (net.input_c, net.input_h, net.input_w),
+                (net.layers.last().unwrap().c_out, gh, gw),
+            )?)
+        } else {
+            None
+        };
+        Ok(DetectionPipeline {
+            net,
+            weights,
+            exe,
+            head_cfg: YoloHead::default(),
+            conf_thresh: 0.1,
+            nms_iou: 0.45,
+            cfg: AccelConfig::paper(),
+            energy: EnergyModel::default(),
+            hw_mode: HwStatsMode::Once,
+        })
+    }
+
+    /// Build directly from in-memory weights (tests, synthetic benches).
+    pub fn from_weights(net: NetworkSpec, weights: ModelWeights) -> Result<Self> {
+        weights.validate_against(&net)?;
+        Ok(DetectionPipeline {
+            net,
+            weights,
+            exe: None,
+            head_cfg: YoloHead::default(),
+            conf_thresh: 0.1,
+            nms_iou: 0.45,
+            cfg: AccelConfig::paper(),
+            energy: EnergyModel::default(),
+            hw_mode: HwStatsMode::Once,
+        })
+    }
+
+    /// Whether the PJRT path is active.
+    pub fn uses_pjrt(&self) -> bool {
+        self.exe.is_some()
+    }
+
+    /// Head accumulator of one frame (PJRT if available, else golden).
+    pub fn head_acc(&self, image: &Tensor<u8>) -> Result<Tensor<i32>> {
+        match &self.exe {
+            Some(exe) => exe.run(image),
+            None => {
+                let fwd = SnnForward::new(
+                    &self.net,
+                    &self.weights,
+                    // Whole-image conv: matches the exported graph.
+                    ForwardOptions { block_tile: None, record_spikes: false },
+                )?;
+                Ok(fwd.run(image)?.head_acc)
+            }
+        }
+    }
+
+    /// Process one frame end to end.
+    pub fn process_frame(&self, image: &Tensor<u8>) -> Result<FrameResult> {
+        let t0 = Instant::now();
+        let acc = self.head_acc(image)?;
+        let head = self.dequantize_head(&acc);
+        let dets = nms(decode(&head, &self.head_cfg, self.conf_thresh), self.nms_iou);
+        Ok(FrameResult { detections: dets, head, wall: t0.elapsed() })
+    }
+
+    /// Dequantize the head accumulator (scale / time steps).
+    pub fn dequantize_head(&self, acc: &Tensor<i32>) -> Tensor<f32> {
+        let head_lw = self.weights.get("head").expect("head weights");
+        let in_t = self.net.layers.last().unwrap().in_t as f32;
+        let mut out = Tensor::zeros(acc.c, acc.h, acc.w);
+        for (o, &a) in out.data.iter_mut().zip(&acc.data) {
+            *o = a as f32 * head_lw.qp.scale / in_t;
+        }
+        out
+    }
+
+    /// Estimate the hardware metrics of one frame (golden model run with
+    /// stats + analytic latency/energy models, paper hardware config).
+    pub fn estimate_hw(&self, image: &Tensor<u8>) -> Result<FrameHwEstimate> {
+        let fwd = SnnForward::new(
+            &self.net,
+            &self.weights,
+            ForwardOptions { block_tile: Some((self.cfg.tile_w, self.cfg.tile_h)), record_spikes: false },
+        )?;
+        let res = fwd.run(image)?;
+        let lat = LatencyModel::new(self.cfg.clone()).network(&self.net, &self.weights);
+        Ok(FrameHwEstimate::from_stats(&self.net, &res, &lat, &self.cfg, &self.energy))
+    }
+
+    /// Estimate the hardware metrics of the **full-size** design: measure
+    /// the per-layer activation-sparsity profile on this (tiny) frame,
+    /// then apply it to the full 1024×576 geometry (layer names match
+    /// across scales) — this is how the Fig 16 / Table III rows are
+    /// produced.
+    pub fn estimate_hw_full(
+        &self,
+        image: &Tensor<u8>,
+        full_net: &NetworkSpec,
+        full_weights: &ModelWeights,
+    ) -> Result<FrameHwEstimate> {
+        let fwd = SnnForward::new(
+            &self.net,
+            &self.weights,
+            ForwardOptions {
+                block_tile: Some((self.cfg.tile_w, self.cfg.tile_h)),
+                record_spikes: false,
+            },
+        )?;
+        let res = fwd.run(image)?;
+        let profile: std::collections::BTreeMap<String, f64> = res
+            .stats
+            .iter()
+            .map(|(k, s)| (k.clone(), s.input_sparsity))
+            .collect();
+        let lat = LatencyModel::new(self.cfg.clone()).network(full_net, full_weights);
+        Ok(FrameHwEstimate::from_profile(full_net, &profile, &lat, &self.cfg, &self.energy))
+    }
+
+    /// Run the pipeline over a dataset, computing mAP and metrics.
+    pub fn process_dataset(&self, ds: &Dataset) -> Result<PipelineReport> {
+        let mut metrics = PipelineMetrics::default();
+        let mut dets: Vec<(usize, Box2D)> = Vec::new();
+        for (i, sample) in ds.samples.iter().enumerate() {
+            let fr = self.process_frame(&sample.image)?;
+            metrics.record(fr.wall, fr.detections.len());
+            dets.extend(fr.detections.iter().map(|d| (i, *d)));
+            let need_hw = match self.hw_mode {
+                HwStatsMode::Off => false,
+                HwStatsMode::Once => i == 0,
+                HwStatsMode::Every(n) => n > 0 && i % n == 0,
+            };
+            if need_hw {
+                metrics.hw = Some(self.estimate_hw(&sample.image)?);
+            }
+        }
+        let gts = ds.ground_truth();
+        let summary = mean_ap(&dets, &gts, NUM_CLASSES, 0.5);
+        Ok(PipelineReport { metrics, map: summary.mean, ap: summary.ap })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_pipeline() -> DetectionPipeline {
+        let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+        let mut w = ModelWeights::random(&net, 1.0, 9);
+        w.prune_fine_grained(0.8);
+        DetectionPipeline::from_weights(net, w).unwrap()
+    }
+
+    #[test]
+    fn process_frame_runs_golden_path() {
+        let p = synthetic_pipeline();
+        let ds = Dataset::synth(1, p.net.input_w, p.net.input_h, 1);
+        let fr = p.process_frame(&ds.samples[0].image).unwrap();
+        assert_eq!(fr.head.c, 40);
+        assert!(fr.wall.as_nanos() > 0);
+        assert!(!p.uses_pjrt());
+    }
+
+    #[test]
+    fn dataset_report_has_metrics() {
+        let mut p = synthetic_pipeline();
+        p.hw_mode = HwStatsMode::Once;
+        let ds = Dataset::synth(2, p.net.input_w, p.net.input_h, 2);
+        let rep = p.process_dataset(&ds).unwrap();
+        assert_eq!(rep.metrics.frames, 2);
+        assert!((0.0..=1.0).contains(&rep.map));
+        let hw = rep.metrics.hw.as_ref().expect("hw estimate");
+        assert!(hw.cycles > 0 && hw.cycles < hw.dense_cycles);
+        assert!(hw.sim_fps > 0.0);
+        assert!((0.0..=1.0).contains(&hw.input_sparsity));
+        assert!(hw.power.core_power_mw > 0.0);
+    }
+
+    #[test]
+    fn hw_estimate_respects_sparsity() {
+        let p = synthetic_pipeline();
+        let ds = Dataset::synth(1, p.net.input_w, p.net.input_h, 3);
+        let hw = p.estimate_hw(&ds.samples[0].image).unwrap();
+        // Gated fraction of PE events should track input sparsity.
+        let total = hw.power.components_pj.iter().sum::<f64>();
+        assert!(total > 0.0);
+        assert!(hw.sparse_macs > 0);
+    }
+
+    #[test]
+    fn missing_artifacts_error_is_helpful() {
+        let err = DetectionPipeline::from_artifacts(Path::new("/nonexistent"), false)
+            .err()
+            .unwrap()
+            .to_string();
+        assert!(err.contains("artifacts"), "{err}");
+    }
+}

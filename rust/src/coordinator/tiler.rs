@@ -1,0 +1,132 @@
+//! Block-tiling plan: partitions a feature map into the hardware's
+//! `tile_w × tile_h` blocks (paper: 32×18; edge tiles clipped). These are
+//! the independent work units of the spatial-parallel PE array — block
+//! convolution guarantees no data crosses tile boundaries (§II-B).
+
+/// One tile rectangle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileRect {
+    /// Top row.
+    pub y0: usize,
+    /// Left column.
+    pub x0: usize,
+    /// Height (≤ tile_h).
+    pub h: usize,
+    /// Width (≤ tile_w).
+    pub w: usize,
+}
+
+impl TileRect {
+    /// PE-slot utilization of this tile on a `tw × th` array.
+    pub fn utilization(&self, tile_w: usize, tile_h: usize) -> f64 {
+        (self.w * self.h) as f64 / (tile_w * tile_h) as f64
+    }
+}
+
+/// The tiling of one feature map.
+#[derive(Clone, Debug)]
+pub struct TilePlan {
+    /// Map width/height.
+    pub map_w: usize,
+    /// Map height.
+    pub map_h: usize,
+    /// Tile geometry.
+    pub tile_w: usize,
+    /// Tile height.
+    pub tile_h: usize,
+}
+
+impl TilePlan {
+    /// Plan for a map.
+    pub fn new(map_w: usize, map_h: usize, tile_w: usize, tile_h: usize) -> Self {
+        assert!(tile_w > 0 && tile_h > 0);
+        TilePlan { map_w, map_h, tile_w, tile_h }
+    }
+
+    /// Number of tiles (x, y).
+    pub fn grid(&self) -> (usize, usize) {
+        (self.map_w.div_ceil(self.tile_w), self.map_h.div_ceil(self.tile_h))
+    }
+
+    /// Total tile count.
+    pub fn count(&self) -> usize {
+        let (x, y) = self.grid();
+        x * y
+    }
+
+    /// Iterate tiles row-major (the controller's processing order).
+    pub fn iter(&self) -> impl Iterator<Item = TileRect> + '_ {
+        let (gx, gy) = self.grid();
+        (0..gy).flat_map(move |ty| {
+            (0..gx).map(move |tx| {
+                let y0 = ty * self.tile_h;
+                let x0 = tx * self.tile_w;
+                TileRect {
+                    y0,
+                    x0,
+                    h: self.tile_h.min(self.map_h - y0),
+                    w: self.tile_w.min(self.map_w - x0),
+                }
+            })
+        })
+    }
+
+    /// Mean PE utilization across tiles (edge tiles waste slots).
+    pub fn mean_utilization(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.iter().map(|t| t.utilization(self.tile_w, self.tile_h)).sum::<f64>() / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::run_prop;
+
+    #[test]
+    fn exact_division() {
+        let p = TilePlan::new(64, 36, 32, 18);
+        assert_eq!(p.grid(), (2, 2));
+        assert_eq!(p.count(), 4);
+        assert!(p.iter().all(|t| t.w == 32 && t.h == 18));
+        assert_eq!(p.mean_utilization(), 1.0);
+    }
+
+    #[test]
+    fn clipped_edges() {
+        let p = TilePlan::new(40, 20, 32, 18);
+        assert_eq!(p.grid(), (2, 2));
+        let tiles: Vec<_> = p.iter().collect();
+        assert_eq!(tiles[0], TileRect { y0: 0, x0: 0, h: 18, w: 32 });
+        assert_eq!(tiles[1], TileRect { y0: 0, x0: 32, h: 18, w: 8 });
+        assert_eq!(tiles[3], TileRect { y0: 18, x0: 32, h: 2, w: 8 });
+    }
+
+    #[test]
+    fn paper_full_frame() {
+        // 1024×576 at 32×18 → 32×32 = 1024 tiles, all full.
+        let p = TilePlan::new(1024, 576, 32, 18);
+        assert_eq!(p.count(), 1024);
+        assert_eq!(p.mean_utilization(), 1.0);
+    }
+
+    #[test]
+    fn prop_tiles_cover_exactly() {
+        run_prop("tiler/covers-exactly", |g| {
+            let w = g.usize(1, 100);
+            let h = g.usize(1, 100);
+            let tw = g.usize(1, 40);
+            let th = g.usize(1, 40);
+            let p = TilePlan::new(w, h, tw, th);
+            let area: usize = p.iter().map(|t| t.w * t.h).sum();
+            assert_eq!(area, w * h, "tiles must cover the map exactly once");
+            for t in p.iter() {
+                assert!(t.x0 + t.w <= w && t.y0 + t.h <= h);
+                assert!(t.w >= 1 && t.h >= 1);
+            }
+        });
+    }
+}

@@ -1,0 +1,391 @@
+//! Synthetic IVS-3cls-like dataset (DESIGN.md §2).
+//!
+//! The real IVS 3cls dataset [32] (cityscape driving scenes, ~11k images,
+//! three classes: vehicle / bike / pedestrian) is proprietary, so this
+//! module provides a procedural stand-in with the same task shape:
+//! road-scene backgrounds with perspective-scaled objects of the three
+//! classes, plus exact bounding-box ground truth. The python build path
+//! (`python/compile/datagen.py`) implements the same scene spec for
+//! training; both sides read/write the `SNND` binary format, so the rust
+//! request path evaluates exactly the frames the model was trained on
+//! distribution-wise.
+//!
+//! Also provides PPM rendering with box overlays for the Fig 14
+//! visualizations.
+
+use super::yolo::Box2D;
+use crate::tensor::Tensor;
+use crate::util::io::*;
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Class names, index-aligned with Tables I/II.
+pub const CLASS_NAMES: [&str; 3] = ["bike", "vehicle", "pedestrian"];
+/// Number of classes.
+pub const NUM_CLASSES: usize = 3;
+
+/// One image + ground truth.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// RGB image `(3, h, w)`, 8-bit.
+    pub image: Tensor<u8>,
+    /// Ground-truth boxes (score = 1).
+    pub boxes: Vec<Box2D>,
+}
+
+/// A dataset of samples (all the same resolution).
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    /// Samples.
+    pub samples: Vec<Sample>,
+}
+
+const MAGIC: &[u8; 4] = b"SNND";
+const VERSION: u32 = 1;
+
+impl Dataset {
+    /// Generate `n` synthetic driving scenes at `w × h`.
+    pub fn synth(n: usize, w: usize, h: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        Dataset { samples: (0..n).map(|_| synth_scene(w, h, &mut rng)).collect() }
+    }
+
+    /// Save in the `SNND` format shared with `python/compile/binfmt.py`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        write_u32(&mut w, VERSION)?;
+        write_u32(&mut w, self.samples.len() as u32)?;
+        for s in &self.samples {
+            write_u32(&mut w, s.image.w as u32)?;
+            write_u32(&mut w, s.image.h as u32)?;
+            w.write_all(&s.image.data)?;
+            write_u32(&mut w, s.boxes.len() as u32)?;
+            for b in &s.boxes {
+                write_u32(&mut w, b.class_id as u32)?;
+                write_f32(&mut w, b.cx)?;
+                write_f32(&mut w, b.cy)?;
+                write_f32(&mut w, b.w)?;
+                write_f32(&mut w, b.h)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from the `SNND` format.
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening dataset {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        Self::read(&mut r)
+    }
+
+    /// Load from any reader.
+    pub fn read(r: &mut impl Read) -> Result<Dataset> {
+        expect_magic(r, MAGIC)?;
+        let version = read_u32(r)?;
+        if version != VERSION {
+            bail!("unsupported SNND version {version}");
+        }
+        let n = read_u32(r)? as usize;
+        let mut samples = Vec::with_capacity(n);
+        for _ in 0..n {
+            let w = read_u32(r)? as usize;
+            let h = read_u32(r)? as usize;
+            if w * h == 0 || w * h > 4096 * 4096 {
+                bail!("unreasonable image size {w}x{h}");
+            }
+            let data = read_bytes(r, 3 * h * w)?;
+            let image = Tensor::from_vec(3, h, w, data);
+            let nb = read_u32(r)? as usize;
+            let mut boxes = Vec::with_capacity(nb);
+            for _ in 0..nb {
+                let class_id = read_u32(r)? as usize;
+                let cx = read_f32(r)?;
+                let cy = read_f32(r)?;
+                let bw = read_f32(r)?;
+                let bh = read_f32(r)?;
+                boxes.push(Box2D { class_id, cx, cy, w: bw, h: bh, score: 1.0 });
+            }
+            samples.push(Sample { image, boxes });
+        }
+        Ok(Dataset { samples })
+    }
+
+    /// All ground-truth boxes as `(image_id, box)` pairs for [`super::map`].
+    pub fn ground_truth(&self) -> Vec<(usize, Box2D)> {
+        self.samples
+            .iter()
+            .enumerate()
+            .flat_map(|(i, s)| s.boxes.iter().map(move |b| (i, *b)))
+            .collect()
+    }
+}
+
+/// Generate one scene: sky/road background with noise, lane markings, and
+/// 2–7 perspective-scaled objects.
+fn synth_scene(w: usize, h: usize, rng: &mut Rng) -> Sample {
+    let mut img = Tensor::zeros(3, h, w);
+    let horizon = (h as f64 * rng.uniform(0.35, 0.5)) as usize;
+    // Sky gradient + road.
+    let sky = [rng.range(100, 160) as u8, rng.range(140, 200) as u8, rng.range(200, 256) as u8];
+    let road = rng.range(60, 110) as u8;
+    for y in 0..h {
+        for x in 0..w {
+            let (r, g, b) = if y < horizon {
+                let t = y as f64 / horizon.max(1) as f64;
+                (
+                    (sky[0] as f64 * (1.0 - 0.3 * t)) as u8,
+                    (sky[1] as f64 * (1.0 - 0.2 * t)) as u8,
+                    sky[2],
+                )
+            } else {
+                let v = road.saturating_add(((y - horizon) / 8) as u8);
+                (v, v, v.saturating_add(5))
+            };
+            img.set(0, y, x, r);
+            img.set(1, y, x, g);
+            img.set(2, y, x, b);
+        }
+    }
+    // Lane markings.
+    for lane in 0..3 {
+        let x0 = w * (lane + 1) / 4;
+        let mut y = horizon;
+        while y + 4 < h {
+            for yy in y..(y + 3).min(h) {
+                let spread = (yy - horizon) / 24 + 1;
+                for xx in x0.saturating_sub(spread / 2)..(x0 + spread / 2 + 1).min(w) {
+                    img.set(0, yy, xx, 230);
+                    img.set(1, yy, xx, 230);
+                    img.set(2, yy, xx, 200);
+                }
+            }
+            y += 8;
+        }
+    }
+    // Pixel noise.
+    for v in img.data.iter_mut() {
+        let n = rng.range_i64(-6, 6);
+        *v = (*v as i64 + n).clamp(0, 255) as u8;
+    }
+
+    // Objects, back (small) to front (large) so occlusion looks right.
+    let n_obj = rng.range(2, 8);
+    let mut boxes = Vec::new();
+    let mut depths: Vec<f64> = (0..n_obj).map(|_| rng.uniform(0.1, 1.0)).collect();
+    depths.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for depth in depths {
+        let class_id = rng.range(0, NUM_CLASSES);
+        let cy_rel = horizon as f64 / h as f64 + depth * (1.0 - horizon as f64 / h as f64) * 0.8;
+        let scale = 0.15 + 0.85 * depth; // perspective
+        let (bw_rel, bh_rel) = match class_id {
+            0 => (0.06 * scale, 0.10 * scale),  // bike
+            1 => (0.16 * scale, 0.11 * scale),  // vehicle
+            _ => (0.035 * scale, 0.13 * scale), // pedestrian
+        };
+        let cx_rel = rng.uniform(bw_rel / 2.0 + 0.01, 1.0 - bw_rel / 2.0 - 0.01);
+        let b = Box2D {
+            class_id,
+            cx: cx_rel as f32,
+            cy: cy_rel as f32,
+            w: bw_rel as f32,
+            h: bh_rel as f32,
+            score: 1.0,
+        };
+        draw_object(&mut img, &b, rng);
+        boxes.push(b);
+    }
+    Sample { image: img, boxes }
+}
+
+/// Rasterize an object of its class inside its box.
+fn draw_object(img: &mut Tensor<u8>, b: &Box2D, rng: &mut Rng) {
+    let (w, h) = (img.w as f32, img.h as f32);
+    let (x0, y0, x1, y1) = b.corners();
+    let (px0, py0) = ((x0 * w) as isize, (y0 * h) as isize);
+    let (px1, py1) = ((x1 * w) as isize, (y1 * h) as isize);
+    let color = match b.class_id {
+        0 => [rng.range(150, 230) as u8, rng.range(40, 90) as u8, rng.range(30, 80) as u8],
+        1 => [rng.range(30, 220) as u8, rng.range(30, 220) as u8, rng.range(30, 220) as u8],
+        _ => [rng.range(140, 220) as u8, rng.range(100, 180) as u8, rng.range(60, 140) as u8],
+    };
+    let fill = |img: &mut Tensor<u8>, ax0: isize, ay0: isize, ax1: isize, ay1: isize, c: [u8; 3]| {
+        for y in ay0.max(0)..ay1.min(img.h as isize) {
+            for x in ax0.max(0)..ax1.min(img.w as isize) {
+                for ch in 0..3 {
+                    img.set(ch, y as usize, x as usize, c[ch]);
+                }
+            }
+        }
+    };
+    let bw = px1 - px0;
+    let bh = py1 - py0;
+    match b.class_id {
+        // Bike: frame rectangle + two wheels (dark squares at the bottom).
+        0 => {
+            fill(img, px0 + bw / 4, py0, px1 - bw / 4, py1 - bh / 3, color);
+            let wheel = [20u8, 20, 20];
+            fill(img, px0, py1 - bh / 3, px0 + bw / 3 + 1, py1, wheel);
+            fill(img, px1 - bw / 3 - 1, py1 - bh / 3, px1, py1, wheel);
+        }
+        // Vehicle: body + darker cabin + wheels.
+        1 => {
+            fill(img, px0, py0 + bh / 4, px1, py1 - bh / 6, color);
+            let cabin = [color[0] / 2, color[1] / 2, color[2] / 2];
+            fill(img, px0 + bw / 5, py0, px1 - bw / 5, py0 + bh / 4 + 1, cabin);
+            let wheel = [15u8, 15, 15];
+            fill(img, px0 + bw / 8, py1 - bh / 6, px0 + bw / 4, py1, wheel);
+            fill(img, px1 - bw / 4, py1 - bh / 6, px1 - bw / 8, py1, wheel);
+        }
+        // Pedestrian: body column + head block.
+        _ => {
+            fill(img, px0, py0 + bh / 5, px1, py1, color);
+            let head = [224u8, 180, 150];
+            fill(img, px0 + bw / 4, py0, px1 - bw / 4, py0 + bh / 5 + 1, head);
+        }
+    }
+}
+
+/// Render an image (optionally with boxes burned in) as a binary PPM —
+/// used for the Fig 14 visualizations.
+pub fn write_ppm(path: &Path, image: &Tensor<u8>, boxes: &[Box2D]) -> Result<()> {
+    let mut img = image.clone();
+    for b in boxes {
+        burn_box(&mut img, b);
+    }
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    write!(w, "P6\n{} {}\n255\n", img.w, img.h)?;
+    for y in 0..img.h {
+        for x in 0..img.w {
+            w.write_all(&[img.get(0, y, x), img.get(1, y, x), img.get(2, y, x)])?;
+        }
+    }
+    Ok(())
+}
+
+/// Burn a class-colored box outline into the image.
+fn burn_box(img: &mut Tensor<u8>, b: &Box2D) {
+    let color = match b.class_id {
+        0 => [255u8, 60, 60],
+        1 => [60u8, 255, 60],
+        _ => [60u8, 120, 255],
+    };
+    let (x0, y0, x1, y1) = b.corners();
+    let px0 = ((x0 * img.w as f32) as isize).clamp(0, img.w as isize - 1) as usize;
+    let px1 = ((x1 * img.w as f32) as isize).clamp(0, img.w as isize - 1) as usize;
+    let py0 = ((y0 * img.h as f32) as isize).clamp(0, img.h as isize - 1) as usize;
+    let py1 = ((y1 * img.h as f32) as isize).clamp(0, img.h as isize - 1) as usize;
+    for x in px0..=px1 {
+        for ch in 0..3 {
+            img.set(ch, py0, x, color[ch]);
+            img.set(ch, py1, x, color[ch]);
+        }
+    }
+    for y in py0..=py1 {
+        for ch in 0..3 {
+            img.set(ch, y, px0, color[ch]);
+            img.set(ch, y, px1, color[ch]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::run_prop;
+
+    #[test]
+    fn synth_produces_valid_boxes() {
+        let ds = Dataset::synth(8, 160, 96, 7);
+        assert_eq!(ds.samples.len(), 8);
+        for s in &ds.samples {
+            assert!(!s.boxes.is_empty());
+            for b in &s.boxes {
+                let (x0, y0, x1, y1) = b.corners();
+                assert!(x0 >= 0.0 && y0 >= 0.0 && x1 <= 1.0 && y1 <= 1.0, "{b:?}");
+                assert!(b.class_id < NUM_CLASSES);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Dataset::synth(2, 64, 64, 1);
+        let b = Dataset::synth(2, 64, 64, 1);
+        assert_eq!(a.samples[0].image.data, b.samples[0].image.data);
+        assert_eq!(a.samples[1].boxes.len(), b.samples[1].boxes.len());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let ds = Dataset::synth(3, 64, 48, 2);
+        let dir = std::env::temp_dir().join("scsnn_ds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ds.bin");
+        ds.save(&p).unwrap();
+        let back = Dataset::load(&p).unwrap();
+        assert_eq!(back.samples.len(), 3);
+        for (a, b) in ds.samples.iter().zip(&back.samples) {
+            assert_eq!(a.image.data, b.image.data);
+            assert_eq!(a.boxes.len(), b.boxes.len());
+            for (x, y) in a.boxes.iter().zip(&b.boxes) {
+                assert_eq!(x.class_id, y.class_id);
+                assert!((x.cx - y.cx).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn ground_truth_pairs_indexed_by_image() {
+        let ds = Dataset::synth(3, 64, 48, 3);
+        let gt = ds.ground_truth();
+        let want: usize = ds.samples.iter().map(|s| s.boxes.len()).sum();
+        assert_eq!(gt.len(), want);
+        assert!(gt.iter().all(|(i, _)| *i < 3));
+    }
+
+    #[test]
+    fn objects_are_visible() {
+        // The drawn object should change pixels inside its box.
+        run_prop("dataset/objects-visible", |g| {
+            let seed = g.rng().next_u64();
+            let ds = Dataset::synth(1, 128, 96, seed);
+            let s = &ds.samples[0];
+            for b in &s.boxes {
+                let cx = (b.cx * 128.0) as usize;
+                let cy = (b.cy * 96.0) as usize;
+                // Center pixel should not be pure road/sky gradient — just
+                // check it exists; the real assertion is no panic during
+                // rasterization at any geometry.
+                let _ = s.image.get(0, cy.min(95), cx.min(127));
+            }
+        });
+    }
+
+    #[test]
+    fn ppm_writes_header_and_size() {
+        let ds = Dataset::synth(1, 32, 24, 4);
+        let dir = std::env::temp_dir().join("scsnn_ds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("img.ppm");
+        write_ppm(&p, &ds.samples[0].image, &ds.samples[0].boxes).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        assert!(data.starts_with(b"P6\n32 24\n255\n"));
+        assert_eq!(data.len(), 13 + 32 * 24 * 3);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("scsnn_ds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"JUNKJUNKJUNK").unwrap();
+        assert!(Dataset::load(&p).is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! VOC-style mean-average-precision evaluation (the metric of Tables I/II).
+//!
+//! Detections are matched to ground truth greedily by score order at
+//! IoU ≥ 0.5 (each ground-truth box matches at most once); AP is the area
+//! under the interpolated precision-recall curve (all-points
+//! interpolation, as in VOC2010+ / the IVS competition).
+
+use super::nms::iou;
+use super::yolo::Box2D;
+
+/// A detection or ground-truth box attributed to an image.
+pub type ImageBox = (usize, Box2D);
+
+/// Average precision for one class.
+///
+/// `dets` and `gts` are already filtered to the class.
+pub fn average_precision(dets: &[ImageBox], gts: &[ImageBox], iou_thresh: f32) -> f64 {
+    if gts.is_empty() {
+        return if dets.is_empty() { 1.0 } else { 0.0 };
+    }
+    let mut order: Vec<usize> = (0..dets.len()).collect();
+    order.sort_by(|&a, &b| dets[b].1.score.partial_cmp(&dets[a].1.score).unwrap());
+
+    let mut matched = vec![false; gts.len()];
+    let mut tp = vec![0u32; dets.len()];
+    let mut fp = vec![0u32; dets.len()];
+    for (rank, &di) in order.iter().enumerate() {
+        let (img, d) = &dets[di];
+        // Best unmatched ground truth in the same image.
+        let mut best: Option<(usize, f32)> = None;
+        for (gi, (gimg, g)) in gts.iter().enumerate() {
+            if gimg != img || matched[gi] {
+                continue;
+            }
+            let v = iou(d, g);
+            if v >= iou_thresh && best.map(|(_, bv)| v > bv).unwrap_or(true) {
+                best = Some((gi, v));
+            }
+        }
+        match best {
+            Some((gi, _)) => {
+                matched[gi] = true;
+                tp[rank] = 1;
+            }
+            None => fp[rank] = 1,
+        }
+    }
+
+    // Cumulate, build PR curve.
+    let mut cum_tp = 0u32;
+    let mut cum_fp = 0u32;
+    let n_gt = gts.len() as f64;
+    let mut recall = Vec::with_capacity(dets.len());
+    let mut precision = Vec::with_capacity(dets.len());
+    for r in 0..dets.len() {
+        cum_tp += tp[r];
+        cum_fp += fp[r];
+        recall.push(cum_tp as f64 / n_gt);
+        precision.push(cum_tp as f64 / (cum_tp + cum_fp) as f64);
+    }
+
+    // All-points interpolation: make precision monotone from the right,
+    // then integrate over recall steps.
+    for i in (0..precision.len().saturating_sub(1)).rev() {
+        if precision[i] < precision[i + 1] {
+            precision[i] = precision[i + 1];
+        }
+    }
+    let mut ap = 0.0;
+    let mut prev_r = 0.0;
+    for i in 0..recall.len() {
+        ap += (recall[i] - prev_r) * precision[i];
+        prev_r = recall[i];
+    }
+    ap
+}
+
+/// Per-class + mean AP summary (the AP columns of Tables I/II).
+#[derive(Clone, Debug)]
+pub struct EvalSummary {
+    /// AP per class index.
+    pub ap: Vec<f64>,
+    /// Mean over classes.
+    pub mean: f64,
+}
+
+/// Evaluate detections against ground truth over a dataset.
+pub fn mean_ap(
+    dets: &[ImageBox],
+    gts: &[ImageBox],
+    num_classes: usize,
+    iou_thresh: f32,
+) -> EvalSummary {
+    let mut ap = Vec::with_capacity(num_classes);
+    for c in 0..num_classes {
+        let d: Vec<ImageBox> = dets.iter().filter(|(_, b)| b.class_id == c).cloned().collect();
+        let g: Vec<ImageBox> = gts.iter().filter(|(_, b)| b.class_id == c).cloned().collect();
+        ap.push(average_precision(&d, &g, iou_thresh));
+    }
+    let mean = ap.iter().sum::<f64>() / num_classes.max(1) as f64;
+    EvalSummary { ap, mean }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bx(class_id: usize, cx: f32, cy: f32, score: f32) -> Box2D {
+        Box2D { class_id, cx, cy, w: 0.1, h: 0.1, score }
+    }
+
+    #[test]
+    fn perfect_detection_gives_ap_one() {
+        let gts = vec![(0, bx(0, 0.3, 0.3, 1.0)), (1, bx(0, 0.7, 0.7, 1.0))];
+        let dets = vec![(0, bx(0, 0.3, 0.3, 0.9)), (1, bx(0, 0.7, 0.7, 0.8))];
+        assert!((average_precision(&dets, &gts, 0.5) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn miss_halves_recall() {
+        let gts = vec![(0, bx(0, 0.3, 0.3, 1.0)), (0, bx(0, 0.7, 0.7, 1.0))];
+        let dets = vec![(0, bx(0, 0.3, 0.3, 0.9))];
+        let ap = average_precision(&dets, &gts, 0.5);
+        assert!((ap - 0.5).abs() < 1e-9, "ap={ap}");
+    }
+
+    #[test]
+    fn false_positive_lowers_ap() {
+        let gts = vec![(0, bx(0, 0.3, 0.3, 1.0))];
+        // High-scoring FP first, then the TP.
+        let dets = vec![(0, bx(0, 0.8, 0.8, 0.9)), (0, bx(0, 0.3, 0.3, 0.5))];
+        let ap = average_precision(&dets, &gts, 0.5);
+        assert!((ap - 0.5).abs() < 1e-9, "ap={ap}");
+    }
+
+    #[test]
+    fn duplicate_detection_is_fp() {
+        let gts = vec![(0, bx(0, 0.3, 0.3, 1.0))];
+        let dets = vec![(0, bx(0, 0.3, 0.3, 0.9)), (0, bx(0, 0.3, 0.3, 0.8))];
+        let ap = average_precision(&dets, &gts, 0.5);
+        // TP at rank 0 (recall 1, precision 1) then FP; all-points AP = 1.
+        assert!((ap - 1.0).abs() < 1e-9, "ap={ap}");
+    }
+
+    #[test]
+    fn wrong_image_does_not_match() {
+        let gts = vec![(0, bx(0, 0.3, 0.3, 1.0))];
+        let dets = vec![(1, bx(0, 0.3, 0.3, 0.9))];
+        assert_eq!(average_precision(&dets, &gts, 0.5), 0.0);
+    }
+
+    #[test]
+    fn mean_ap_per_class() {
+        let gts = vec![(0, bx(0, 0.3, 0.3, 1.0)), (0, bx(1, 0.7, 0.7, 1.0))];
+        let dets = vec![(0, bx(0, 0.3, 0.3, 0.9))]; // class 1 missed
+        let s = mean_ap(&dets, &gts, 3, 0.5);
+        assert!((s.ap[0] - 1.0).abs() < 1e-9);
+        assert_eq!(s.ap[1], 0.0);
+        assert_eq!(s.ap[2], 1.0); // no GT, no dets → vacuous 1.0
+        assert!((s.mean - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_gt_with_dets_is_zero() {
+        let dets = vec![(0, bx(0, 0.3, 0.3, 0.9))];
+        assert_eq!(average_precision(&dets, &[], 0.5), 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Object-detection stack: YOLOv2 head decoding (§II-A — "adopts the
+//! detection method of YOLOv2"), non-maximum suppression, VOC-style mAP
+//! evaluation, and the synthetic IVS-3cls-like dataset (DESIGN.md §2:
+//! the real IVS 3cls dataset is proprietary, so a procedural driving-scene
+//! generator with the same three classes stands in for it).
+
+pub mod dataset;
+pub mod map;
+pub mod nms;
+pub mod yolo;
+
+pub use dataset::{Dataset, Sample, CLASS_NAMES, NUM_CLASSES};
+pub use map::{average_precision, mean_ap, EvalSummary};
+pub use nms::{iou, nms};
+pub use yolo::{decode, Box2D, YoloHead};

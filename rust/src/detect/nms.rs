@@ -1,0 +1,139 @@
+//! Intersection-over-union and greedy per-class non-maximum suppression.
+
+use super::yolo::Box2D;
+
+/// IoU of two boxes in normalized coordinates.
+pub fn iou(a: &Box2D, b: &Box2D) -> f32 {
+    let (ax0, ay0, ax1, ay1) = a.corners();
+    let (bx0, by0, bx1, by1) = b.corners();
+    let ix = (ax1.min(bx1) - ax0.max(bx0)).max(0.0);
+    let iy = (ay1.min(by1) - ay0.max(by0)).max(0.0);
+    let inter = ix * iy;
+    let union = a.area() + b.area() - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+/// Greedy NMS, applied per class: keep the highest-scoring box, drop any
+/// same-class box overlapping it by more than `iou_thresh`, repeat.
+pub fn nms(mut dets: Vec<Box2D>, iou_thresh: f32) -> Vec<Box2D> {
+    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    let mut keep: Vec<Box2D> = Vec::with_capacity(dets.len());
+    for d in dets {
+        let suppressed = keep
+            .iter()
+            .any(|k| k.class_id == d.class_id && iou(k, &d) > iou_thresh);
+        if !suppressed {
+            keep.push(d);
+        }
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::run_prop;
+
+    fn bx(class_id: usize, cx: f32, cy: f32, w: f32, h: f32, score: f32) -> Box2D {
+        Box2D { class_id, cx, cy, w, h, score }
+    }
+
+    #[test]
+    fn identical_boxes_iou_one() {
+        let a = bx(0, 0.5, 0.5, 0.2, 0.2, 1.0);
+        assert!((iou(&a, &a) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn disjoint_boxes_iou_zero() {
+        let a = bx(0, 0.2, 0.2, 0.1, 0.1, 1.0);
+        let b = bx(0, 0.8, 0.8, 0.1, 0.1, 1.0);
+        assert_eq!(iou(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn half_overlap() {
+        let a = bx(0, 0.25, 0.5, 0.5, 0.5, 1.0);
+        let b = bx(0, 0.5, 0.5, 0.5, 0.5, 1.0);
+        // intersection 0.25×0.5, union 0.5·0.5·2 − 0.125 = 0.375.
+        assert!((iou(&a, &b) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nms_keeps_best_per_cluster() {
+        let dets = vec![
+            bx(0, 0.5, 0.5, 0.2, 0.2, 0.9),
+            bx(0, 0.51, 0.5, 0.2, 0.2, 0.7), // suppressed by the first
+            bx(0, 0.9, 0.9, 0.1, 0.1, 0.5),  // separate cluster
+        ];
+        let keep = nms(dets, 0.5);
+        assert_eq!(keep.len(), 2);
+        assert_eq!(keep[0].score, 0.9);
+        assert_eq!(keep[1].score, 0.5);
+    }
+
+    #[test]
+    fn nms_is_per_class() {
+        let dets = vec![
+            bx(0, 0.5, 0.5, 0.2, 0.2, 0.9),
+            bx(1, 0.5, 0.5, 0.2, 0.2, 0.8), // same place, other class: kept
+        ];
+        assert_eq!(nms(dets, 0.5).len(), 2);
+    }
+
+    #[test]
+    fn prop_nms_output_sorted_and_subset() {
+        run_prop("nms/sorted-subset", |g| {
+            let n = g.usize(0, 30);
+            let dets: Vec<Box2D> = g.vec(n, |g| {
+                bx(
+                    g.usize(0, 3),
+                    g.f64(0.1, 0.9) as f32,
+                    g.f64(0.1, 0.9) as f32,
+                    g.f64(0.05, 0.3) as f32,
+                    g.f64(0.05, 0.3) as f32,
+                    g.f64(0.0, 1.0) as f32,
+                )
+            });
+            let keep = nms(dets.clone(), 0.5);
+            assert!(keep.len() <= dets.len());
+            for w in keep.windows(2) {
+                assert!(w[0].score >= w[1].score);
+            }
+            // No two kept same-class boxes overlap above the threshold.
+            for (i, a) in keep.iter().enumerate() {
+                for b in &keep[i + 1..] {
+                    if a.class_id == b.class_id {
+                        assert!(iou(a, b) <= 0.5 + 1e-6);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_iou_symmetric_bounded() {
+        run_prop("iou/symmetric", |g| {
+            let mk = |g: &mut crate::util::propcheck::Gen| {
+                bx(
+                    0,
+                    g.f64(0.0, 1.0) as f32,
+                    g.f64(0.0, 1.0) as f32,
+                    g.f64(0.01, 0.5) as f32,
+                    g.f64(0.01, 0.5) as f32,
+                    1.0,
+                )
+            };
+            let a = mk(g);
+            let b = mk(g);
+            let i1 = iou(&a, &b);
+            let i2 = iou(&b, &a);
+            assert!((i1 - i2).abs() < 1e-6);
+            assert!((0.0..=1.0 + 1e-6).contains(&i1));
+        });
+    }
+}

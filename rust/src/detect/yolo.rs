@@ -1,0 +1,228 @@
+//! YOLOv2 detection head decoding [24].
+//!
+//! The output conv produces, per grid cell and anchor,
+//! `(tx, ty, tw, th, to, class logits…)`. Decoding follows YOLOv2:
+//! `bx = (j + σ(tx))/gw`, `by = (i + σ(ty))/gh`, `bw = pw·e^{tw}/gw`,
+//! `bh = ph·e^{th}/gh`, objectness `σ(to)` and class posterior
+//! `softmax(logits)`; box score = objectness × class probability.
+
+use crate::tensor::Tensor;
+
+/// One detection / ground-truth box in normalized image coordinates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Box2D {
+    /// Class index (0 = bike, 1 = vehicle, 2 = pedestrian).
+    pub class_id: usize,
+    /// Center x in `[0, 1]`.
+    pub cx: f32,
+    /// Center y in `[0, 1]`.
+    pub cy: f32,
+    /// Width in `[0, 1]`.
+    pub w: f32,
+    /// Height in `[0, 1]`.
+    pub h: f32,
+    /// Confidence score (1.0 for ground truth).
+    pub score: f32,
+}
+
+impl Box2D {
+    /// Corner coordinates `(x0, y0, x1, y1)`.
+    pub fn corners(&self) -> (f32, f32, f32, f32) {
+        (
+            self.cx - self.w / 2.0,
+            self.cy - self.h / 2.0,
+            self.cx + self.w / 2.0,
+            self.cy + self.h / 2.0,
+        )
+    }
+
+    /// Area (normalized units).
+    pub fn area(&self) -> f32 {
+        self.w * self.h
+    }
+}
+
+/// Head geometry: anchors in grid units, class count.
+#[derive(Clone, Debug)]
+pub struct YoloHead {
+    /// Anchor priors `(pw, ph)` in grid-cell units (5, like YOLOv2).
+    pub anchors: Vec<(f32, f32)>,
+    /// Number of classes (IVS 3cls: 3).
+    pub num_classes: usize,
+}
+
+impl Default for YoloHead {
+    fn default() -> Self {
+        // Priors spanning pedestrians (tall-narrow) to vehicles (wide),
+        // in units of one grid cell.
+        YoloHead {
+            anchors: vec![(0.6, 1.2), (1.2, 1.0), (2.2, 1.6), (3.5, 2.4), (5.5, 3.5)],
+            num_classes: 3,
+        }
+    }
+}
+
+impl YoloHead {
+    /// Channels the head tensor must have.
+    pub fn channels(&self) -> usize {
+        self.anchors.len() * (5 + self.num_classes)
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Decode a head tensor `(channels, gh, gw)` into boxes with
+/// `score ≥ conf_thresh`. Channel layout: anchor-major, i.e. channels
+/// `[a·(5+nc) .. (a+1)·(5+nc))` hold `(tx, ty, tw, th, to, classes…)` for
+/// anchor `a` — matching the JAX head's reshape.
+pub fn decode(head: &Tensor<f32>, cfg: &YoloHead, conf_thresh: f32) -> Vec<Box2D> {
+    assert_eq!(head.c, cfg.channels(), "head channels mismatch");
+    let (gh, gw) = (head.h, head.w);
+    let per = 5 + cfg.num_classes;
+    let mut out = Vec::new();
+    for (a, &(pw, ph)) in cfg.anchors.iter().enumerate() {
+        let base = a * per;
+        for i in 0..gh {
+            for j in 0..gw {
+                let tx = head.get(base, i, j);
+                let ty = head.get(base + 1, i, j);
+                let tw = head.get(base + 2, i, j);
+                let th = head.get(base + 3, i, j);
+                let to = head.get(base + 4, i, j);
+                let obj = sigmoid(to);
+                if obj < conf_thresh {
+                    continue; // cheap early-out: score ≤ obj
+                }
+                // Softmax over class logits.
+                let mut mx = f32::NEG_INFINITY;
+                for c in 0..cfg.num_classes {
+                    mx = mx.max(head.get(base + 5 + c, i, j));
+                }
+                let mut denom = 0.0;
+                for c in 0..cfg.num_classes {
+                    denom += (head.get(base + 5 + c, i, j) - mx).exp();
+                }
+                let (mut best_c, mut best_p) = (0usize, 0.0f32);
+                for c in 0..cfg.num_classes {
+                    let p = (head.get(base + 5 + c, i, j) - mx).exp() / denom;
+                    if p > best_p {
+                        best_p = p;
+                        best_c = c;
+                    }
+                }
+                let score = obj * best_p;
+                if score < conf_thresh {
+                    continue;
+                }
+                // exp clamped: quantized heads can emit large tw/th.
+                let bw = (pw * tw.clamp(-6.0, 6.0).exp()) / gw as f32;
+                let bh = (ph * th.clamp(-6.0, 6.0).exp()) / gh as f32;
+                out.push(Box2D {
+                    class_id: best_c,
+                    cx: (j as f32 + sigmoid(tx)) / gw as f32,
+                    cy: (i as f32 + sigmoid(ty)) / gh as f32,
+                    w: bw.min(1.0),
+                    h: bh.min(1.0),
+                    score,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`decode`] for one target box: the regression target
+/// `(tx, ty, tw, th)` for a given cell/anchor — used by the synthetic
+/// self-tests and mirrored by the python training loss.
+pub fn encode_target(b: &Box2D, cfg: &YoloHead, a: usize, gw: usize, gh: usize) -> (f32, f32, f32, f32, usize, usize) {
+    let gx = b.cx * gw as f32;
+    let gy = b.cy * gh as f32;
+    let j = (gx as usize).min(gw - 1);
+    let i = (gy as usize).min(gh - 1);
+    let (pw, ph) = cfg.anchors[a];
+    let tx = logit((gx - j as f32).clamp(1e-4, 1.0 - 1e-4));
+    let ty = logit((gy - i as f32).clamp(1e-4, 1.0 - 1e-4));
+    let tw = (b.w * gw as f32 / pw).max(1e-6).ln();
+    let th = (b.h * gh as f32 / ph).max(1e-6).ln();
+    (tx, ty, tw, th, i, j)
+}
+
+fn logit(p: f32) -> f32 {
+    (p / (1.0 - p)).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::run_prop;
+
+    #[test]
+    fn empty_head_yields_nothing() {
+        let cfg = YoloHead::default();
+        // Large negative objectness everywhere → no boxes.
+        let head = Tensor::from_vec(
+            cfg.channels(),
+            4,
+            6,
+            vec![-10.0; cfg.channels() * 24],
+        );
+        assert!(decode(&head, &cfg, 0.3).is_empty());
+    }
+
+    #[test]
+    fn roundtrip_encode_decode() {
+        run_prop("yolo/roundtrip", |g| {
+            let cfg = YoloHead::default();
+            let (gw, gh) = (10usize, 6usize);
+            let want = Box2D {
+                class_id: g.usize(0, 3),
+                cx: g.f64(0.05, 0.95) as f32,
+                cy: g.f64(0.05, 0.95) as f32,
+                w: g.f64(0.05, 0.4) as f32,
+                h: g.f64(0.05, 0.4) as f32,
+                score: 1.0,
+            };
+            let a = g.usize(0, cfg.anchors.len());
+            let (tx, ty, tw, th, i, j) = encode_target(&want, &cfg, a, gw, gh);
+            let mut head = Tensor::from_vec(
+                cfg.channels(),
+                gh,
+                gw,
+                vec![-12.0; cfg.channels() * gh * gw],
+            );
+            let per = 5 + cfg.num_classes;
+            head.set(a * per, i, j, tx);
+            head.set(a * per + 1, i, j, ty);
+            head.set(a * per + 2, i, j, tw);
+            head.set(a * per + 3, i, j, th);
+            head.set(a * per + 4, i, j, 8.0); // objectness ≈ 1
+            head.set(a * per + 5 + want.class_id, i, j, 6.0);
+            let dets = decode(&head, &cfg, 0.5);
+            assert_eq!(dets.len(), 1, "one detection");
+            let d = dets[0];
+            assert_eq!(d.class_id, want.class_id);
+            assert!((d.cx - want.cx).abs() < 1e-3, "cx {} vs {}", d.cx, want.cx);
+            assert!((d.cy - want.cy).abs() < 1e-3);
+            assert!((d.w - want.w).abs() < 1e-3);
+            assert!((d.h - want.h).abs() < 1e-3);
+            assert!(d.score > 0.9);
+        });
+    }
+
+    #[test]
+    fn head_channels_match_paper_head() {
+        assert_eq!(YoloHead::default().channels(), 40);
+    }
+
+    #[test]
+    fn corners_and_area() {
+        let b = Box2D { class_id: 0, cx: 0.5, cy: 0.5, w: 0.2, h: 0.1, score: 1.0 };
+        let (x0, y0, x1, y1) = b.corners();
+        assert!((x0 - 0.4).abs() < 1e-6 && (x1 - 0.6).abs() < 1e-6);
+        assert!((y0 - 0.45).abs() < 1e-6 && (y1 - 0.55).abs() < 1e-6);
+        assert!((b.area() - 0.02).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,47 @@
+//! # scsnn — Sparse Compressed Spiking Neural Network Accelerator
+//!
+//! A full-system reproduction of Lien & Chang, *"Sparse Compressed Spiking
+//! Neural Network Accelerator for Object Detection"*, IEEE TCAS-I 2022
+//! (DOI 10.1109/TCSI.2022.3149006).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **Layer 1** (build time): Pallas kernels implementing the paper's
+//!   *gated one-to-all product* sparse convolution and the LIF neuron
+//!   update (`python/compile/kernels/`).
+//! - **Layer 2** (build time): the paper's SNN object-detection network in
+//!   JAX, trained with STBP + tdBN and AOT-lowered to HLO text
+//!   (`python/compile/model.py`, `aot.py`).
+//! - **Layer 3** (this crate, request path): a cycle-level simulator of the
+//!   paper's 28nm accelerator ([`accel`]), a PJRT runtime that loads the
+//!   AOT artifacts ([`runtime`]), a frame-pipeline coordinator
+//!   ([`coordinator`]), and the detection stack ([`detect`]).
+//!
+//! Python never runs on the request path; `make artifacts` runs it once.
+//!
+//! ## Module map
+//!
+//! | Module | Role |
+//! |---|---|
+//! | [`util`] | PRNG, property testing, bench harness, CLI (offline substrates) |
+//! | [`tensor`] | NCHW tensors + fixed-point arithmetic (FXP8/FXP16) |
+//! | [`sparse`] | bit-mask / CSR / dense weight compression + storage accounting |
+//! | [`config`] | TOML-subset config system + hardware configuration registers |
+//! | [`model`] | network topology, LIF dynamics, weights, mIoUT metric |
+//! | [`ref_impl`] | functional golden model (block conv, full SNN forward) |
+//! | [`accel`] | cycle-level accelerator simulator (the paper's §III) |
+//! | [`detect`] | YOLOv2 decode, NMS, mAP, synthetic IVS-3cls dataset |
+//! | [`runtime`] | PJRT CPU client for `artifacts/*.hlo.txt` |
+//! | [`coordinator`] | block tiler, layer scheduler, frame pipeline, metrics |
+
+pub mod accel;
+pub mod config;
+pub mod coordinator;
+pub mod detect;
+pub mod model;
+pub mod ref_impl;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod util;

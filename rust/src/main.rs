@@ -1,0 +1,297 @@
+//! `scsnn` — leader binary for the sparse compressed SNN accelerator.
+//!
+//! Subcommands:
+//!
+//! - `detect`      run the detection pipeline on a dataset (PJRT + simulator)
+//! - `simulate`    analytic hardware run: cycles, fps, power, area (Fig 16)
+//! - `parallelism` the §III-A design-space study (Fig 6)
+//! - `dram`        DRAM traffic per compression format (Fig 17, §IV-D)
+//! - `timesteps`   mixed-time-step sweep on the golden model (Fig 15)
+//! - `miout`       per-layer mIoUT (Fig 5)
+//! - `report`      summarize `artifacts/metrics.json` (python build metrics)
+
+use anyhow::{bail, Result};
+use scsnn::accel::energy::{AreaModel, EnergyModel};
+use scsnn::accel::latency::LatencyModel;
+use scsnn::accel::parallelism::fig6_study;
+use scsnn::config::AccelConfig;
+use scsnn::coordinator::pipeline::{DetectionPipeline, HwStatsMode};
+use scsnn::detect::dataset::{write_ppm, Dataset};
+use scsnn::model::miout::MioutAccumulator;
+use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::weights::ModelWeights;
+use scsnn::ref_impl::{ForwardOptions, SnnForward};
+use scsnn::runtime::ArtifactPaths;
+use scsnn::sparse::stats::Format;
+use scsnn::util::json::Json;
+use scsnn::util::Args;
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand() {
+        Some("detect") => cmd_detect(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("parallelism") => cmd_parallelism(&args),
+        Some("dram") => cmd_dram(&args),
+        Some("timesteps") => cmd_timesteps(&args),
+        Some("miout") => cmd_miout(&args),
+        Some("report") => cmd_report(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}");
+            print_usage();
+            std::process::exit(2);
+        }
+        None => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "scsnn — sparse compressed SNN accelerator (TCAS-I 2022 reproduction)\n\
+         usage: scsnn <detect|simulate|parallelism|dram|timesteps|miout|report> [--options]\n\
+         common options: --artifacts DIR  --scale full|tiny  --seed N"
+    );
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts").map(PathBuf::from).unwrap_or_else(ArtifactPaths::default_dir)
+}
+
+/// Load trained weights when available, else synthesize pruned random
+/// weights so hardware commands work before `make artifacts`.
+fn load_or_random(args: &Args, net: &NetworkSpec) -> (ModelWeights, &'static str) {
+    let paths = ArtifactPaths::in_dir(&artifacts_dir(args));
+    if net.input_w == 320 {
+        if let Ok(w) = ModelWeights::load(&paths.weights) {
+            if w.validate_against(net).is_ok() {
+                return (w, "trained");
+            }
+        }
+    }
+    let mut w = ModelWeights::random(net, 1.0, args.parsed_or("seed", 42u64));
+    w.prune_fine_grained(0.8);
+    (w, "synthetic-pruned")
+}
+
+fn scale(args: &Args) -> Scale {
+    Scale::parse(args.get_or("scale", "full")).unwrap_or(Scale::Full)
+}
+
+fn cmd_detect(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let use_pjrt = !args.has_flag("no-pjrt");
+    let mut pipeline = DetectionPipeline::from_artifacts(&dir, use_pjrt)?;
+    pipeline.hw_mode = HwStatsMode::Once;
+    pipeline.conf_thresh = args.parsed_or("conf", 0.1f32);
+
+    let ds_path = args
+        .get("dataset")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| ArtifactPaths::in_dir(&dir).dataset_test);
+    let mut ds = Dataset::load(&ds_path)?;
+    let frames = args.parsed_or("frames", ds.samples.len());
+    ds.samples.truncate(frames);
+    println!(
+        "running {} frames through {} path…",
+        ds.samples.len(),
+        if pipeline.uses_pjrt() { "PJRT" } else { "golden-model" }
+    );
+    let report = pipeline.process_dataset(&ds)?;
+    println!("mAP@0.5 = {:.3}  (per-class {:?})", report.map, report.ap);
+    println!("{}", report.metrics.to_json().to_string_compact());
+
+    if let Some(out) = args.get("ppm-out") {
+        std::fs::create_dir_all(out)?;
+        for (i, s) in ds.samples.iter().take(4).enumerate() {
+            let fr = pipeline.process_frame(&s.image)?;
+            let p = PathBuf::from(out).join(format!("frame{i}.ppm"));
+            write_ppm(&p, &s.image, &fr.detections)?;
+            println!("wrote {}", p.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let sc = scale(args);
+    let net = NetworkSpec::paper(sc, TimeStepConfig::PAPER);
+    let (weights, kind) = load_or_random(args, &net);
+    let cfg = AccelConfig::paper();
+    let lat = LatencyModel::new(cfg.clone()).network(&net, &weights);
+    let area = AreaModel::default().report(&cfg);
+    println!("network {}  weights: {kind}  density {:.3}", net.name, weights.density());
+    println!(
+        "cycles/frame: sparse {}  dense {}  saving {:.1}%",
+        lat.sparse_cycles(),
+        lat.dense_cycles(),
+        lat.latency_saving() * 100.0
+    );
+    println!("fps @ {:.0} MHz: {:.1}", cfg.clock_hz / 1e6, lat.fps(cfg.clock_hz));
+    println!(
+        "area: {:.2} mm² total ({:.0}% memory), logic {:.1} KGE",
+        area.total_mm2(),
+        area.memory_share() * 100.0,
+        area.logic_kge.iter().sum::<f64>()
+    );
+    let _ = EnergyModel::default();
+    println!(
+        "(per-frame power needs activation stats — run `scsnn detect` or `cargo bench --bench fig16_impl`)"
+    );
+    Ok(())
+}
+
+fn cmd_parallelism(args: &Args) -> Result<()> {
+    let net = NetworkSpec::paper(scale(args), TimeStepConfig::PAPER);
+    let (weights, kind) = load_or_random(args, &net);
+    println!(
+        "Fig 6 design-parallelism study ({kind} weights, {} scale)",
+        args.get_or("scale", "full")
+    );
+    println!("{:<22} {:>6} {:>14} {:>9} {:>10}", "organization", "fifo", "cycles", "rel", "fifo KB");
+    for row in fig6_study(&net, &weights) {
+        println!(
+            "{:<22} {:>6} {:>14} {:>9.3} {:>10.1}",
+            row.label,
+            row.fifo_depth,
+            row.cycles,
+            row.rel_latency,
+            row.fifo_bytes as f64 / 1024.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_dram(args: &Args) -> Result<()> {
+    use scsnn::accel::dram::{DramModel, DramTraffic};
+    let net = NetworkSpec::paper(scale(args), TimeStepConfig::PAPER);
+    let (weights, kind) = load_or_random(args, &net);
+    println!("§IV-D external memory access ({kind} weights)");
+    for (label, cfg) in [
+        ("36 KB input SRAM", AccelConfig::paper()),
+        ("81 KB input SRAM", AccelConfig::paper_large_input_sram()),
+    ] {
+        let m = DramModel::new(cfg);
+        let t = m.frame_traffic(&net, &weights, Format::BitMask);
+        println!(
+            "  {label}: input {:.3} MB  output {:.3} MB  params {:.3} MB  → {:.2} mJ/frame",
+            DramTraffic::mb(t.input_bits),
+            DramTraffic::mb(t.output_bits),
+            DramTraffic::mb(t.param_bits),
+            m.frame_energy_mj(&t)
+        );
+    }
+    println!("Fig 17 parameter-traffic comparison:");
+    let m = DramModel::new(AccelConfig::paper());
+    for (label, fmt) in
+        [("dense", Format::Dense), ("CSR", Format::Csr), ("bit-mask", Format::BitMask)]
+    {
+        let t = m.frame_traffic(&net, &weights, fmt);
+        println!("  {label:<8} {:.3} MB", DramTraffic::mb(t.param_bits));
+    }
+    Ok(())
+}
+
+fn cmd_timesteps(args: &Args) -> Result<()> {
+    // Fig 15 on the rust side: op counts per configuration (mAP comes from
+    // the python metrics; see `cargo bench --bench fig15_mixed_ts`).
+    let sc = scale(args);
+    println!("Fig 15 mixed-time-step sweep ({sc:?})");
+    println!("{:<8} {:>12} {:>10}", "config", "dense GOP", "vs T3");
+    let base = NetworkSpec::paper(sc, TimeStepConfig::Uniform(3)).dense_ops() as f64;
+    for ts in [
+        TimeStepConfig::Uniform(3),
+        TimeStepConfig::C1(3),
+        TimeStepConfig::C2(3),
+        TimeStepConfig::C2B(1, 3),
+        TimeStepConfig::C2B(2, 3),
+        TimeStepConfig::C2B(3, 3),
+    ] {
+        let ops = NetworkSpec::paper(sc, ts).dense_ops() as f64;
+        println!("{:<8} {:>12.2} {:>9.1}%", ts.label(), ops / 1e9, ops / base * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_miout(args: &Args) -> Result<()> {
+    // Fig 5: mIoUT of each layer's output features at T=3.
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::Uniform(3));
+    let (weights, kind) = load_or_random(args, &net);
+    let dir = artifacts_dir(args);
+    let paths = ArtifactPaths::in_dir(&dir);
+    let ds = if paths.dataset_test.exists() {
+        Dataset::load(&paths.dataset_test)?
+    } else {
+        Dataset::synth(4, net.input_w, net.input_h, 7)
+    };
+    let frames = args.parsed_or("frames", 4usize).min(ds.samples.len());
+    let fwd = SnnForward::new(
+        &net,
+        &weights,
+        ForwardOptions { block_tile: Some((32, 18)), record_spikes: true },
+    )?;
+    println!("Fig 5 mIoUT per layer ({kind} weights, {frames} frames, T=3)");
+    let mut accs: std::collections::BTreeMap<String, MioutAccumulator> = Default::default();
+    for s in ds.samples.iter().take(frames) {
+        let res = fwd.run(&s.image)?;
+        for (name, maps) in &res.spikes {
+            let acc = accs
+                .entry(name.clone())
+                .or_insert_with(|| MioutAccumulator::new(maps[0].c, maps[0].h, maps[0].w));
+            for m in maps {
+                acc.push(m);
+            }
+        }
+    }
+    for l in &net.layers {
+        if let Some(acc) = accs.get(&l.name) {
+            match acc.miout() {
+                Some(m) => println!("  {:<12} {:.3}", l.name, m),
+                None => println!("  {:<12} (silent)", l.name),
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let paths = ArtifactPaths::in_dir(&artifacts_dir(args));
+    if !paths.metrics.exists() {
+        bail!("no metrics.json — run `make artifacts` first");
+    }
+    let j = Json::parse(&std::fs::read_to_string(&paths.metrics)?)?;
+    if let Some(curve) = j.at(&["loss_curve"]).and_then(|c| c.as_arr()) {
+        let first = curve.first().and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let last = curve.last().and_then(|v| v.as_f64()).unwrap_or(0.0);
+        println!("training: {} steps, loss {first:.3} → {last:.3}", curve.len());
+    }
+    for (table, keys) in [
+        ("table1", vec!["snn_a", "snn_b", "snn_c"]),
+        ("table2", vec!["ann", "qnn4", "qnn3", "qnn2", "bnn", "snn_a", "snn_4t"]),
+    ] {
+        if j.get(table).is_some() {
+            println!("{table}:");
+            for k in keys {
+                if let Some(m) = j.at(&[table, k, "mean"]).and_then(|v| v.as_f64()) {
+                    println!("  {k:<8} mAP {m:.3}");
+                }
+            }
+        }
+    }
+    if let Some(Json::Obj(fig15)) = j.get("fig15") {
+        println!("fig15:");
+        for (k, v) in fig15 {
+            let m = v.at(&["map", "mean"]).and_then(|x| x.as_f64()).unwrap_or(0.0);
+            let ops = v.at(&["giga_ops"]).and_then(|x| x.as_f64()).unwrap_or(0.0);
+            println!("  {k:<6} mAP {m:.3}  {ops:.2} GOP");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,168 @@
+//! Leaky integrate-and-fire neuron dynamics (§I, §II-A).
+//!
+//! The paper uses a discrete-time LIF with a delta synaptic kernel,
+//! threshold 0.5 and leak 0.25 — constants chosen so the integer datapath
+//! needs only a comparator and an arithmetic shift. Update rule (hard
+//! reset, as in STBP/tdBN training):
+//!
+//! ```text
+//! u[t] = leak(u[t-1] · (1 − s[t-1])) + I[t]
+//! s[t] = u[t] ≥ vth
+//! ```
+//!
+//! All arithmetic happens in the quantized integer domain: `I[t]` is the
+//! 16-bit conv accumulator, `u` is stored back at 8 bits (saturating) —
+//! matching the chip's "8-bit FXP @ Vmem, 16-bit FXP @ Acc" datapath.
+
+use crate::tensor::{sat_i8, QuantParams};
+
+/// Static LIF parameters in the integer domain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LifParams {
+    /// Integer firing threshold (`round(0.5 / scale)`).
+    pub vth_q: i32,
+}
+
+impl LifParams {
+    /// From per-layer quantization parameters.
+    pub fn from_quant(qp: &QuantParams) -> Self {
+        LifParams { vth_q: qp.vth_q }
+    }
+}
+
+/// Per-neuron membrane state across time steps.
+#[derive(Clone, Debug, Default)]
+pub struct LifState {
+    /// 8-bit membrane potential per neuron (saturating storage).
+    pub vmem: Vec<i8>,
+    /// Last spike per neuron (drives the hard reset).
+    pub fired: Vec<bool>,
+}
+
+impl LifState {
+    /// Fresh state for `n` neurons (potential 0, nothing fired).
+    pub fn new(n: usize) -> Self {
+        LifState { vmem: vec![0; n], fired: vec![false; n] }
+    }
+
+    /// Advance one time step for every neuron given its integrated conv
+    /// input `acc[i]` (16-bit accumulator domain, passed as i32), writing
+    /// output spikes into `spikes`. Returns the number of fired neurons.
+    pub fn step(&mut self, p: LifParams, acc: &[i32], spikes: &mut [u8]) -> usize {
+        assert_eq!(acc.len(), self.vmem.len());
+        assert_eq!(spikes.len(), self.vmem.len());
+        let mut fired_count = 0;
+        for i in 0..self.vmem.len() {
+            let residual = if self.fired[i] { 0 } else { self.vmem[i] as i32 };
+            let u = QuantParams::leak(residual) + acc[i];
+            let s = u >= p.vth_q;
+            self.vmem[i] = sat_i8(u);
+            self.fired[i] = s;
+            spikes[i] = u8::from(s);
+            fired_count += usize::from(s);
+        }
+        fired_count
+    }
+
+    /// Reset all neurons (between frames).
+    pub fn reset(&mut self) {
+        self.vmem.iter_mut().for_each(|v| *v = 0);
+        self.fired.iter_mut().for_each(|f| *f = false);
+    }
+}
+
+/// Pure single-neuron reference used by tests and the hardware LIF unit's
+/// verification: returns `(new_vmem, spike)`.
+pub fn lif_step_scalar(vmem: i8, fired_prev: bool, acc: i32, vth_q: i32) -> (i8, bool) {
+    let residual = if fired_prev { 0 } else { vmem as i32 };
+    let u = QuantParams::leak(residual) + acc;
+    (sat_i8(u), u >= vth_q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::run_prop;
+
+    const P: LifParams = LifParams { vth_q: 32 };
+
+    #[test]
+    fn integrates_below_threshold() {
+        let mut s = LifState::new(1);
+        let mut out = [0u8];
+        // 20 < 32: no fire, potential retained.
+        assert_eq!(s.step(P, &[20], &mut out), 0);
+        assert_eq!(out[0], 0);
+        assert_eq!(s.vmem[0], 20);
+        // leak(20) + 20 = 5 + 20 = 25 < 32: still silent.
+        s.step(P, &[20], &mut out);
+        assert_eq!(s.vmem[0], 25);
+        // leak(25) + 28 = 6 + 28 = 34 ≥ 32: fire.
+        assert_eq!(s.step(P, &[28], &mut out), 1);
+        assert_eq!(out[0], 1);
+    }
+
+    #[test]
+    fn hard_reset_after_fire() {
+        let mut s = LifState::new(1);
+        let mut out = [0u8];
+        s.step(P, &[100], &mut out);
+        assert_eq!(out[0], 1);
+        // Residual is dropped: next potential is just the new input.
+        s.step(P, &[10], &mut out);
+        assert_eq!(s.vmem[0], 10);
+        assert_eq!(out[0], 0);
+    }
+
+    #[test]
+    fn vmem_saturates_to_8bit() {
+        let mut s = LifState::new(1);
+        let mut out = [0u8];
+        s.step(LifParams { vth_q: 1000 }, &[500], &mut out);
+        assert_eq!(s.vmem[0], 127);
+        assert_eq!(out[0], 0);
+        s.step(LifParams { vth_q: 1000 }, &[-5000], &mut out);
+        assert_eq!(s.vmem[0], -128);
+    }
+
+    #[test]
+    fn negative_potential_decays_symmetrically() {
+        let mut s = LifState::new(1);
+        let mut out = [0u8];
+        s.step(P, &[-40], &mut out);
+        assert_eq!(s.vmem[0], -40);
+        s.step(P, &[0], &mut out);
+        assert_eq!(s.vmem[0], -10); // -40 >> 2 toward zero
+    }
+
+    #[test]
+    fn scalar_matches_vector() {
+        run_prop("lif/scalar-vs-vector", |g| {
+            let n = g.usize(1, 64);
+            let vth = g.i64(1, 96) as i32;
+            let mut st = LifState::new(n);
+            let mut spikes = vec![0u8; n];
+            for _ in 0..4 {
+                let acc: Vec<i32> = g.vec(n, |g| g.i64(-300, 300) as i32);
+                let prev: Vec<(i8, bool)> =
+                    st.vmem.iter().zip(&st.fired).map(|(&v, &f)| (v, f)).collect();
+                st.step(LifParams { vth_q: vth }, &acc, &mut spikes);
+                for i in 0..n {
+                    let (v, s) = lif_step_scalar(prev[i].0, prev[i].1, acc[i], vth);
+                    assert_eq!(st.vmem[i], v);
+                    assert_eq!(spikes[i] == 1, s);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut s = LifState::new(3);
+        let mut out = [0u8; 3];
+        s.step(P, &[100, 5, -7], &mut out);
+        s.reset();
+        assert!(s.vmem.iter().all(|&v| v == 0));
+        assert!(s.fired.iter().all(|&f| !f));
+    }
+}

@@ -1,0 +1,144 @@
+//! The paper's mIoUT metric — *mean Intersection over Union across
+//! Time-steps* (§II-D, Eq. 1, Fig 4).
+//!
+//! For each channel: accumulate per-neuron firing counts over the `T` time
+//! steps. The **intersection** is the set of neurons that fired at *every*
+//! step (count == T); the **union** is the set of neurons that fired at
+//! least once. `mIoUT = mean_c (|intersection_c| / |union_c|)` — 1.0 means
+//! the feature maps are identical across time steps, so the layer's input
+//! can drop to a single time step at little cost (the basis for the mixed
+//! time-step selection of Fig 5 / Fig 15).
+
+use crate::tensor::Tensor;
+
+/// Streaming accumulator over time steps for one layer's input feature map.
+#[derive(Clone, Debug)]
+pub struct MioutAccumulator {
+    c: usize,
+    hw: usize,
+    t_seen: usize,
+    /// Per-neuron firing count.
+    counts: Vec<u16>,
+}
+
+impl MioutAccumulator {
+    /// For a `(c, h, w)` spike map.
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        MioutAccumulator { c, hw: h * w, t_seen: 0, counts: vec![0; c * h * w] }
+    }
+
+    /// Accumulate one time step's spike map.
+    pub fn push(&mut self, spikes: &Tensor<u8>) {
+        assert_eq!(spikes.c * spikes.h * spikes.w, self.counts.len(), "shape mismatch");
+        for (cnt, &s) in self.counts.iter_mut().zip(&spikes.data) {
+            *cnt += u16::from(s != 0);
+        }
+        self.t_seen += 1;
+    }
+
+    /// Total time steps accumulated so far.
+    pub fn time_steps(&self) -> usize {
+        self.t_seen
+    }
+
+    /// Compute mIoUT per Eq. 1. Channels whose union is empty (completely
+    /// silent) carry no information about temporal similarity and are
+    /// excluded from the mean; returns `None` if every channel is silent
+    /// or fewer than 2 time steps were accumulated.
+    pub fn miout(&self) -> Option<f64> {
+        if self.t_seen < 2 {
+            return None;
+        }
+        let t = self.t_seen as u16;
+        let mut sum = 0.0;
+        let mut active_channels = 0usize;
+        for ch in 0..self.c {
+            let slice = &self.counts[ch * self.hw..(ch + 1) * self.hw];
+            let union = slice.iter().filter(|&&n| n > 0).count();
+            if union == 0 {
+                continue;
+            }
+            let inter = slice.iter().filter(|&&n| n == t).count();
+            sum += inter as f64 / union as f64;
+            active_channels += 1;
+        }
+        (active_channels > 0).then(|| sum / active_channels as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::run_prop;
+
+    /// The worked example of Fig 4: over 3 time steps, 4 neurons fire at
+    /// every step and 2 more fire at least once → mIoUT = 4/6 ≈ 0.67.
+    #[test]
+    fn fig4_example() {
+        let mut acc = MioutAccumulator::new(1, 3, 3);
+        // Neurons 0..4 fire every step; neuron 4 fires at t0 only,
+        // neuron 5 at t2 only; the rest stay silent.
+        let t0 = Tensor::from_vec(1, 3, 3, vec![1, 1, 1, 1, 1, 0, 0, 0, 0]);
+        let t1 = Tensor::from_vec(1, 3, 3, vec![1, 1, 1, 1, 0, 0, 0, 0, 0]);
+        let t2 = Tensor::from_vec(1, 3, 3, vec![1, 1, 1, 1, 0, 1, 0, 0, 0]);
+        acc.push(&t0);
+        acc.push(&t1);
+        acc.push(&t2);
+        let m = acc.miout().unwrap();
+        assert!((m - 4.0 / 6.0).abs() < 1e-12, "m={m}");
+    }
+
+    #[test]
+    fn identical_maps_give_one() {
+        let mut acc = MioutAccumulator::new(2, 2, 2);
+        let t = Tensor::from_vec(2, 2, 2, vec![1, 0, 1, 0, 0, 1, 0, 0]);
+        for _ in 0..3 {
+            acc.push(&t);
+        }
+        assert_eq!(acc.miout(), Some(1.0));
+    }
+
+    #[test]
+    fn disjoint_maps_give_zero() {
+        let mut acc = MioutAccumulator::new(1, 1, 2);
+        acc.push(&Tensor::from_vec(1, 1, 2, vec![1, 0]));
+        acc.push(&Tensor::from_vec(1, 1, 2, vec![0, 1]));
+        assert_eq!(acc.miout(), Some(0.0));
+    }
+
+    #[test]
+    fn silent_channels_excluded() {
+        let mut acc = MioutAccumulator::new(2, 1, 2);
+        // Channel 0 identical across steps; channel 1 silent.
+        let t = Tensor::from_vec(2, 1, 2, vec![1, 1, 0, 0]);
+        acc.push(&t);
+        acc.push(&t);
+        assert_eq!(acc.miout(), Some(1.0));
+    }
+
+    #[test]
+    fn insufficient_steps_is_none() {
+        let mut acc = MioutAccumulator::new(1, 1, 1);
+        assert_eq!(acc.miout(), None);
+        acc.push(&Tensor::from_vec(1, 1, 1, vec![1]));
+        assert_eq!(acc.miout(), None);
+    }
+
+    #[test]
+    fn prop_miout_in_unit_interval() {
+        run_prop("miout/unit-interval", |g| {
+            let c = g.usize(1, 4);
+            let h = g.usize(1, 6);
+            let w = g.usize(1, 6);
+            let t = g.usize(2, 5);
+            let mut acc = MioutAccumulator::new(c, h, w);
+            for _ in 0..t {
+                let data = g.spikes(c * h * w, 0.4);
+                acc.push(&Tensor::from_vec(c, h, w, data));
+            }
+            if let Some(m) = acc.miout() {
+                assert!((0.0..=1.0).contains(&m), "m={m}");
+            }
+        });
+    }
+}

@@ -1,0 +1,12 @@
+//! Network description, LIF neuron dynamics, weight containers, and the
+//! paper's mIoUT metric (§II).
+
+pub mod lif;
+pub mod miout;
+pub mod topology;
+pub mod weights;
+
+pub use lif::{LifState, LifParams};
+pub use miout::MioutAccumulator;
+pub use topology::{ConvKind, ConvSpec, NetworkSpec, Scale, TimeStepConfig};
+pub use weights::{LayerWeights, ModelWeights};

@@ -1,0 +1,562 @@
+//! The paper's object-detection network (Fig 1 / Fig 2) as data.
+//!
+//! The network is a flat list of convolution layers — exactly how the
+//! accelerator sees it (every CSP basic block lowers to four convs: two
+//! stacked 3×3, a 1×1 shortcut, and a 1×1 aggregation after channel
+//! concat). Downsampling is a 2×2 max pool (OR gate in hardware) fused
+//! after a layer.
+//!
+//! Two scales are provided (see DESIGN.md §8): `Full` is the paper's
+//! 1024×576 / ~3.3M-parameter geometry used analytically by the hardware
+//! experiments; `Tiny` is a width/4, 320×192 variant that is actually
+//! trained and executed end to end.
+
+/// Layer role, which fixes its time-step and reset semantics (§II-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvKind {
+    /// Multibit RGB input, bit-serial (B=8), "fires once": conv + tdBN +
+    /// LIF with a single time step.
+    Encoding,
+    /// Spike-in / spike-out convolution + tdBN + LIF.
+    Spike,
+    /// Detection head: accumulates membrane with no reset and averages
+    /// over time steps; produces multibit output.
+    Output,
+}
+
+/// One convolution layer as the hardware sees it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConvSpec {
+    /// Unique layer name, e.g. `b2.stack1`.
+    pub name: String,
+    /// Role.
+    pub kind: ConvKind,
+    /// Input channels.
+    pub c_in: usize,
+    /// Output channels.
+    pub c_out: usize,
+    /// Kernel size (square; paper supports 1..=3).
+    pub k: usize,
+    /// Input time steps.
+    pub in_t: usize,
+    /// Output time steps.
+    pub out_t: usize,
+    /// 2×2 max pool fused after this layer.
+    pub maxpool_after: bool,
+    /// Input feature width at this layer.
+    pub in_w: usize,
+    /// Input feature height at this layer.
+    pub in_h: usize,
+    /// For CSP blocks: name of the layer whose output is concatenated
+    /// *before* this layer's input (the aggregation conv consumes
+    /// `concat(stack2, shortcut)`). Empty for sequential layers.
+    pub concat_with: Option<String>,
+    /// Which earlier layer feeds this one (None = previous in list).
+    /// Used by the shortcut conv inside a CSP block, which reads the
+    /// block input rather than the stacked path.
+    pub input_from: Option<String>,
+}
+
+impl ConvSpec {
+    /// Output spatial width (stride-1 convs, same padding).
+    pub fn out_w(&self) -> usize {
+        if self.maxpool_after {
+            self.in_w / 2
+        } else {
+            self.in_w
+        }
+    }
+
+    /// Output spatial height.
+    pub fn out_h(&self) -> usize {
+        if self.maxpool_after {
+            self.in_h / 2
+        } else {
+            self.in_h
+        }
+    }
+
+    /// Number of weights.
+    pub fn num_weights(&self) -> usize {
+        self.c_out * self.c_in * self.k * self.k
+    }
+
+    /// Dense MACs for one full forward (all time steps, all bit planes).
+    /// Conv is computed `in_t` times (the mixed-time-step trick computes
+    /// it once when `in_t == 1` regardless of `out_t`), and the encoding
+    /// layer is bit-serial over 8 planes.
+    pub fn dense_macs(&self) -> u64 {
+        let planes = if self.kind == ConvKind::Encoding { 8 } else { 1 };
+        (self.num_weights() as u64)
+            * (self.in_w as u64)
+            * (self.in_h as u64)
+            * (self.in_t as u64)
+            * planes as u64
+    }
+
+    /// Dense operation count (1 MAC = 2 ops, matching Table III's footnote).
+    pub fn dense_ops(&self) -> u64 {
+        2 * self.dense_macs()
+    }
+}
+
+/// Model scale (DESIGN.md §8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Paper geometry: 1024×576, ~3.3M parameters.
+    Full,
+    /// Trained/executed geometry: 320×192, width ÷ 4.
+    Tiny,
+}
+
+impl Scale {
+    /// Input resolution `(w, h)`.
+    pub fn input_size(self) -> (usize, usize) {
+        match self {
+            Scale::Full => (1024, 576),
+            Scale::Tiny => (320, 192),
+        }
+    }
+
+    /// Channel width divider.
+    pub fn width_div(self) -> usize {
+        match self {
+            Scale::Full => 1,
+            Scale::Tiny => 4,
+        }
+    }
+
+    /// Parse from CLI string.
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "full" => Some(Scale::Full),
+            "tiny" => Some(Scale::Tiny),
+            _ => None,
+        }
+    }
+}
+
+/// Mixed-time-step configuration (Fig 15): how many leading layers run
+/// with a single input time step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimeStepConfig {
+    /// Every layer uses `t` time steps (the unmixed baseline).
+    Uniform(usize),
+    /// `C1`: only the encoding conv takes one time step.
+    C1(usize),
+    /// `C2`: the first two convs take one time step (the paper's choice,
+    /// `(1, t)` mixed time steps).
+    C2(usize),
+    /// `C2BX`: the first two convs *and* the first `x` basic blocks take
+    /// one time step.
+    C2B(usize, usize),
+}
+
+impl TimeStepConfig {
+    /// The paper's shipped configuration: mixed (1, 3).
+    pub const PAPER: TimeStepConfig = TimeStepConfig::C2(3);
+
+    /// Steady-state time steps `t`.
+    pub fn t(&self) -> usize {
+        match *self {
+            TimeStepConfig::Uniform(t)
+            | TimeStepConfig::C1(t)
+            | TimeStepConfig::C2(t)
+            | TimeStepConfig::C2B(_, t) => t,
+        }
+    }
+
+    /// Number of *leading basic blocks* running at one time step.
+    fn one_t_blocks(&self) -> usize {
+        match *self {
+            TimeStepConfig::C2B(x, _) => x,
+            _ => 0,
+        }
+    }
+
+    /// Whether the encoding conv's LIF repeats to `t` outputs immediately
+    /// (C1) or the single-step region extends further (C2/C2B).
+    fn one_t_convs(&self) -> usize {
+        match *self {
+            TimeStepConfig::Uniform(_) => 0,
+            TimeStepConfig::C1(_) => 1,
+            TimeStepConfig::C2(_) | TimeStepConfig::C2B(..) => 2,
+        }
+    }
+
+    /// Short label matching Fig 15's x-axis.
+    pub fn label(&self) -> String {
+        match *self {
+            TimeStepConfig::Uniform(t) => format!("T{t}"),
+            TimeStepConfig::C1(_) => "C1".into(),
+            TimeStepConfig::C2(_) => "C2".into(),
+            TimeStepConfig::C2B(x, _) => format!("C2B{x}"),
+        }
+    }
+}
+
+/// A complete network: ordered conv layers plus input geometry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkSpec {
+    /// Human-readable name.
+    pub name: String,
+    /// Input width.
+    pub input_w: usize,
+    /// Input height.
+    pub input_h: usize,
+    /// Input channels (RGB = 3).
+    pub input_c: usize,
+    /// Layers in execution order.
+    pub layers: Vec<ConvSpec>,
+    /// Detection head geometry: number of anchors.
+    pub num_anchors: usize,
+    /// Number of object classes.
+    pub num_classes: usize,
+}
+
+impl NetworkSpec {
+    /// Build the paper's network (Fig 1) at a given scale and time-step
+    /// configuration.
+    ///
+    /// Structure: Encoding(3→32) ⌄pool, Conv(32→64) ⌄pool, then four CSP
+    /// basic blocks (64→128 ⌄, 128→256 ⌄, 256→512 ⌄, 512→512) and a 1×1
+    /// output conv to `anchors × (5 + classes)`. Channel counts divide by
+    /// `scale.width_div()`.
+    pub fn paper(scale: Scale, ts: TimeStepConfig) -> NetworkSpec {
+        let (iw, ih) = scale.input_size();
+        let d = scale.width_div();
+        let t = ts.t();
+        let num_anchors = 5;
+        let num_classes = 3;
+
+        let mut b = Builder::new(iw, ih, t, ts);
+        // Encoding conv (in_t is always 1: fires once from the image).
+        b.conv("enc", ConvKind::Encoding, 3, 32 / d, 3, true);
+        // Second conv ("conv block" in Fig 1).
+        b.conv("conv1", ConvKind::Spike, 32 / d, 64 / d, 3, true);
+        // CSP basic blocks.
+        b.basic_block("b1", 64 / d, 128 / d, 64 / d, true);
+        b.basic_block("b2", 128 / d, 256 / d, 128 / d, true);
+        b.basic_block("b3", 256 / d, 512 / d, 256 / d, true);
+        b.basic_block("b4", 512 / d, 512 / d, 192 / d, false);
+        // Output conv (1×1 head).
+        let head = num_anchors * (5 + num_classes);
+        b.conv("head", ConvKind::Output, 512 / d, head, 1, false);
+
+        NetworkSpec {
+            name: format!("ivs3cls-{:?}-{}", scale, ts.label()),
+            input_w: iw,
+            input_h: ih,
+            input_c: 3,
+            layers: b.layers,
+            num_anchors,
+            num_classes,
+        }
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.num_weights() + l.c_out).sum()
+    }
+
+    /// Total dense operations for one frame (Fig 15's op-count axis).
+    pub fn dense_ops(&self) -> u64 {
+        self.layers.iter().map(|l| l.dense_ops()).sum()
+    }
+
+    /// Layer lookup by name.
+    pub fn layer(&self, name: &str) -> Option<&ConvSpec> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// Names of all layers, in order.
+    pub fn layer_names(&self) -> Vec<&str> {
+        self.layers.iter().map(|l| l.name.as_str()).collect()
+    }
+
+    /// Detection grid size `(gw, gh)` — the output of the last layer.
+    pub fn grid(&self) -> (usize, usize) {
+        let last = self.layers.last().expect("network has layers");
+        (last.out_w(), last.out_h())
+    }
+}
+
+/// Incremental builder tracking spatial size and time-step region.
+struct Builder {
+    layers: Vec<ConvSpec>,
+    w: usize,
+    h: usize,
+    t: usize,
+    ts: TimeStepConfig,
+    convs_done: usize,
+    blocks_done: usize,
+}
+
+impl Builder {
+    fn new(w: usize, h: usize, t: usize, ts: TimeStepConfig) -> Self {
+        Builder { layers: Vec::new(), w, h, t, ts, convs_done: 0, blocks_done: 0 }
+    }
+
+    /// in/out time steps for the next sequential layer given the mixed
+    /// configuration: layers inside the single-step region run 1→1, the
+    /// layer at the boundary runs 1→t, and everything after runs t→t.
+    /// The output head always emits a single (averaged) step.
+    fn times(&self, kind: ConvKind) -> (usize, usize) {
+        let one_convs = self.ts.one_t_convs();
+        let one_blocks = self.ts.one_t_blocks();
+        // Index of this conv in the "leading convs" count (enc=0, conv1=1).
+        let conv_idx = self.convs_done;
+        let in_one = if conv_idx < one_convs {
+            true
+        } else {
+            // Inside the single-step block region? Blocks count after the
+            // two leading convs.
+            one_convs == 2 && self.blocks_done < one_blocks
+        };
+        // The *next* position still single-step? The boundary layer emits t.
+        let next_in_one = match kind {
+            ConvKind::Output => false,
+            _ => {
+                let nc = conv_idx + 1;
+                if nc < one_convs {
+                    true
+                } else {
+                    one_convs == 2 && self.next_blocks_done() < one_blocks
+                }
+            }
+        };
+        let in_t = if in_one { 1 } else { self.t };
+        let out_t = match kind {
+            ConvKind::Output => 1,
+            _ => {
+                if next_in_one {
+                    1
+                } else {
+                    self.t
+                }
+            }
+        };
+        // Uniform config: encoding still fires once per step from the same
+        // image — modeled as in_t = t (recomputed each step).
+        (in_t, out_t)
+    }
+
+    fn push(&mut self, mut spec: ConvSpec) {
+        spec.in_w = self.w;
+        spec.in_h = self.h;
+        if spec.maxpool_after {
+            self.w /= 2;
+            self.h /= 2;
+        }
+        self.layers.push(spec);
+    }
+
+    fn conv(
+        &mut self,
+        name: &str,
+        kind: ConvKind,
+        c_in: usize,
+        c_out: usize,
+        k: usize,
+        pool: bool,
+    ) {
+        let (in_t, out_t) = self.times(kind);
+        self.push(ConvSpec {
+            name: name.into(),
+            kind,
+            c_in,
+            c_out,
+            k,
+            in_t,
+            out_t,
+            maxpool_after: pool,
+            in_w: 0,
+            in_h: 0,
+            concat_with: None,
+            input_from: None,
+        });
+        self.convs_done += 1;
+    }
+
+    fn next_blocks_done(&self) -> usize {
+        self.blocks_done
+    }
+
+    /// CSP basic block (Fig 2b): two stacked 3×3 convs (width `c_s`), a
+    /// 1×1 shortcut at `c_s/2` channels reading the block input, and a 1×1
+    /// aggregation conv over the concatenation.
+    fn basic_block(&mut self, name: &str, c_in: usize, c_out: usize, c_s: usize, pool: bool) {
+        let c_sh = c_s / 2;
+        let (in_t, out_t_region) = {
+            // All convs inside a block share the block's time region;
+            // the aggregation layer decides the output time step.
+            let (i, _) = self.times(ConvKind::Spike);
+            (i, ())
+        };
+        let _ = out_t_region;
+        let block_input = self
+            .layers
+            .last()
+            .map(|l| l.name.clone())
+            .expect("basic block needs a predecessor");
+        let mk = |nm: &str| format!("{name}.{nm}");
+
+        // Stacked path.
+        self.push(ConvSpec {
+            name: mk("stack1"),
+            kind: ConvKind::Spike,
+            c_in,
+            c_out: c_s,
+            k: 3,
+            in_t,
+            out_t: in_t,
+            maxpool_after: false,
+            in_w: 0,
+            in_h: 0,
+            concat_with: None,
+            input_from: None,
+        });
+        self.push(ConvSpec {
+            name: mk("stack2"),
+            kind: ConvKind::Spike,
+            c_in: c_s,
+            c_out: c_s,
+            k: 3,
+            in_t,
+            out_t: in_t,
+            maxpool_after: false,
+            in_w: 0,
+            in_h: 0,
+            concat_with: None,
+            input_from: None,
+        });
+        // Shortcut path (reads the block input).
+        self.push(ConvSpec {
+            name: mk("short"),
+            kind: ConvKind::Spike,
+            c_in,
+            c_out: c_sh,
+            k: 1,
+            in_t,
+            out_t: in_t,
+            maxpool_after: false,
+            in_w: 0,
+            in_h: 0,
+            concat_with: None,
+            input_from: Some(block_input),
+        });
+        // Aggregation over concat(stack2, short). Its out_t follows the
+        // time-step region boundary.
+        self.blocks_done += 1;
+        let (_, out_t) = self.times(ConvKind::Spike);
+        self.convs_done += 4;
+        self.push(ConvSpec {
+            name: mk("agg"),
+            kind: ConvKind::Spike,
+            c_in: c_s + c_sh,
+            c_out,
+            k: 1,
+            in_t,
+            out_t,
+            maxpool_after: pool,
+            in_w: 0,
+            in_h: 0,
+            concat_with: Some(mk("short")),
+            input_from: Some(mk("stack2")),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_scale_geometry() {
+        let net = NetworkSpec::paper(Scale::Full, TimeStepConfig::PAPER);
+        assert_eq!(net.input_w, 1024);
+        assert_eq!(net.input_h, 576);
+        // 2 convs + 4 blocks × 4 convs + head = 19 layers.
+        assert_eq!(net.layers.len(), 19);
+        // Final grid is exactly one 32×18 hardware tile.
+        assert_eq!(net.grid(), (32, 18));
+        // Parameter count near the paper's 3.17M.
+        let p = net.num_params();
+        assert!((2_500_000..4_500_000).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn tiny_scale_geometry() {
+        let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+        assert_eq!(net.grid(), (10, 6));
+        let p = net.num_params();
+        assert!(p < 400_000, "params={p}");
+    }
+
+    #[test]
+    fn paper_time_steps_c2() {
+        let net = NetworkSpec::paper(Scale::Full, TimeStepConfig::C2(3));
+        let enc = net.layer("enc").unwrap();
+        let conv1 = net.layer("conv1").unwrap();
+        let b1s1 = net.layer("b1.stack1").unwrap();
+        let head = net.layer("head").unwrap();
+        assert_eq!((enc.in_t, enc.out_t), (1, 1));
+        assert_eq!((conv1.in_t, conv1.out_t), (1, 3));
+        assert_eq!((b1s1.in_t, b1s1.out_t), (3, 3));
+        assert_eq!((head.in_t, head.out_t), (3, 1));
+    }
+
+    #[test]
+    fn c1_time_steps() {
+        let net = NetworkSpec::paper(Scale::Full, TimeStepConfig::C1(3));
+        let enc = net.layer("enc").unwrap();
+        let conv1 = net.layer("conv1").unwrap();
+        assert_eq!((enc.in_t, enc.out_t), (1, 3));
+        assert_eq!((conv1.in_t, conv1.out_t), (3, 3));
+    }
+
+    #[test]
+    fn c2b1_extends_single_step_region() {
+        let net = NetworkSpec::paper(Scale::Full, TimeStepConfig::C2B(1, 3));
+        let b1agg = net.layer("b1.agg").unwrap();
+        let b2s1 = net.layer("b2.stack1").unwrap();
+        assert_eq!((b1agg.in_t, b1agg.out_t), (1, 3));
+        assert_eq!((b2s1.in_t, b2s1.out_t), (3, 3));
+        // Inner layers of b1 are single-step.
+        let b1s2 = net.layer("b1.stack2").unwrap();
+        assert_eq!((b1s2.in_t, b1s2.out_t), (1, 1));
+    }
+
+    #[test]
+    fn mixed_time_steps_reduce_ops() {
+        // Fig 15 / §II-D: C2 reduces ops vs the uniform-T baseline, and
+        // deeper cuts reduce further.
+        let base = NetworkSpec::paper(Scale::Full, TimeStepConfig::Uniform(3)).dense_ops();
+        let c1 = NetworkSpec::paper(Scale::Full, TimeStepConfig::C1(3)).dense_ops();
+        let c2 = NetworkSpec::paper(Scale::Full, TimeStepConfig::C2(3)).dense_ops();
+        let c2b2 = NetworkSpec::paper(Scale::Full, TimeStepConfig::C2B(2, 3)).dense_ops();
+        assert!(c1 < base && c2 < c1 && c2b2 < c2, "{base} {c1} {c2} {c2b2}");
+        // §II-D: (1,3) mixed time steps ≈ 17% reduction vs original.
+        let reduction = 1.0 - c2 as f64 / base as f64;
+        assert!((0.05..0.60).contains(&reduction), "reduction={reduction}");
+    }
+
+    #[test]
+    fn concat_and_shortcut_wiring() {
+        let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+        let agg = net.layer("b1.agg").unwrap();
+        assert_eq!(agg.input_from.as_deref(), Some("b1.stack2"));
+        assert_eq!(agg.concat_with.as_deref(), Some("b1.short"));
+        assert_eq!(agg.c_in, net.layer("b1.stack2").unwrap().c_out + net.layer("b1.short").unwrap().c_out);
+        let short = net.layer("b1.short").unwrap();
+        assert_eq!(short.input_from.as_deref(), Some("conv1"));
+    }
+
+    #[test]
+    fn head_channels_match_yolo() {
+        let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+        let head = net.layer("head").unwrap();
+        assert_eq!(head.c_out, 5 * (5 + 3));
+        assert_eq!(head.k, 1);
+    }
+}

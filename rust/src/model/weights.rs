@@ -1,0 +1,307 @@
+//! Quantized weight containers + the model-slimming operations of §II
+//! (fine-grained pruning, 8-bit quantization), and the `SNNW` artifact
+//! format shared with `python/compile/binfmt.py`.
+
+use crate::model::topology::NetworkSpec;
+use crate::tensor::{Kernel4, QuantParams};
+use crate::util::io::*;
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// One layer's quantized weights (BN already folded in by the build path).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerWeights {
+    /// 8-bit weights `(k, c, kh, kw)`.
+    pub w: Kernel4<i8>,
+    /// Per-output-channel bias in the 16-bit accumulator domain.
+    pub bias: Vec<i32>,
+    /// Quantization parameters (scale + integer threshold).
+    pub qp: QuantParams,
+}
+
+impl LayerWeights {
+    /// Weight density (fraction nonzero) — the y-axis of Fig 3.
+    pub fn density(&self) -> f64 {
+        1.0 - self.w.sparsity()
+    }
+
+    /// Number of nonzero weights.
+    pub fn nnz(&self) -> usize {
+        self.w.count_nonzero()
+    }
+}
+
+/// All layers of a model, keyed by layer name.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ModelWeights {
+    layers: BTreeMap<String, LayerWeights>,
+}
+
+const MAGIC: &[u8; 4] = b"SNNW";
+const VERSION: u32 = 1;
+
+impl ModelWeights {
+    /// Insert a layer.
+    pub fn insert(&mut self, name: &str, lw: LayerWeights) {
+        self.layers.insert(name.to_string(), lw);
+    }
+
+    /// Layer lookup.
+    pub fn get(&self, name: &str) -> Option<&LayerWeights> {
+        self.layers.get(name)
+    }
+
+    /// Mutable lookup.
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut LayerWeights> {
+        self.layers.get_mut(name)
+    }
+
+    /// Iterate layers in name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &LayerWeights)> {
+        self.layers.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Number of layers.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Whether empty.
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Total nonzero / total weights over the whole model.
+    pub fn density(&self) -> f64 {
+        let total: usize = self.layers.values().map(|l| l.w.data.len()).sum();
+        let nnz: usize = self.layers.values().map(|l| l.nnz()).sum();
+        if total == 0 {
+            0.0
+        } else {
+            nnz as f64 / total as f64
+        }
+    }
+
+    /// Generate random weights for a network spec — used by tests, the
+    /// simulator's stimulus generator, and benches that don't need trained
+    /// weights. `density` < 1.0 pre-sparsifies 3×3 kernels (1×1 kernels
+    /// are kept dense, like the paper's pruning policy).
+    pub fn random(net: &NetworkSpec, density: f64, seed: u64) -> ModelWeights {
+        let mut rng = Rng::new(seed);
+        let mut mw = ModelWeights::default();
+        for l in &net.layers {
+            let qp = QuantParams::from_weight_absmax(1.0);
+            let mut w = Kernel4::zeros(l.c_out, l.c_in, l.k, l.k);
+            for v in w.data.iter_mut() {
+                let keep = l.k == 1 || rng.chance(density);
+                if keep {
+                    // Avoid exact zeros so density is exact for kept slots.
+                    let mag = rng.range_i64(1, 127);
+                    *v = (mag * if rng.chance(0.5) { 1 } else { -1 }) as i8;
+                }
+            }
+            let bias = (0..l.c_out).map(|_| rng.range_i64(-8, 8) as i32).collect();
+            mw.insert(&l.name, LayerWeights { w, bias, qp });
+        }
+        mw
+    }
+
+    /// Fine-grained magnitude pruning (§II-C, [26]): zero the smallest
+    /// `rate` fraction of weights in every **3×3** kernel tensor; 1×1
+    /// kernels are kept intact, per the paper's policy.
+    pub fn prune_fine_grained(&mut self, rate: f64) {
+        for lw in self.layers.values_mut() {
+            if lw.w.kh == 1 && lw.w.kw == 1 {
+                continue;
+            }
+            let mut mags: Vec<i16> = lw.w.data.iter().map(|&w| (w as i16).abs()).collect();
+            mags.sort_unstable();
+            let cut = ((mags.len() as f64 * rate) as usize).min(mags.len().saturating_sub(1));
+            let threshold = mags[cut];
+            for v in lw.w.data.iter_mut() {
+                if (*v as i16).abs() < threshold.max(1) {
+                    *v = 0;
+                }
+            }
+        }
+    }
+
+    /// Serialize to the `SNNW` artifact format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        write_u32(&mut w, VERSION)?;
+        write_u32(&mut w, self.layers.len() as u32)?;
+        for (name, lw) in &self.layers {
+            write_string(&mut w, name)?;
+            write_u32(&mut w, lw.w.k as u32)?;
+            write_u32(&mut w, lw.w.c as u32)?;
+            write_u32(&mut w, lw.w.kh as u32)?;
+            write_u32(&mut w, lw.w.kw as u32)?;
+            write_f32(&mut w, lw.qp.scale)?;
+            write_i32(&mut w, lw.qp.vth_q)?;
+            for &b in &lw.bias {
+                write_i32(&mut w, b)?;
+            }
+            let bytes: Vec<u8> = lw.w.data.iter().map(|&v| v as u8).collect();
+            w.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Load from the `SNNW` artifact format.
+    pub fn load(path: &Path) -> Result<ModelWeights> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening weights {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        Self::read(&mut r)
+    }
+
+    /// Load from any reader.
+    pub fn read(r: &mut impl Read) -> Result<ModelWeights> {
+        expect_magic(r, MAGIC)?;
+        let version = read_u32(r)?;
+        if version != VERSION {
+            bail!("unsupported SNNW version {version}");
+        }
+        let n = read_u32(r)? as usize;
+        let mut mw = ModelWeights::default();
+        for _ in 0..n {
+            let name = read_string(r)?;
+            let k = read_u32(r)? as usize;
+            let c = read_u32(r)? as usize;
+            let kh = read_u32(r)? as usize;
+            let kw = read_u32(r)? as usize;
+            let scale = read_f32(r)?;
+            let vth_q = read_i32(r)?;
+            let mut bias = Vec::with_capacity(k);
+            for _ in 0..k {
+                bias.push(read_i32(r)?);
+            }
+            let raw = read_bytes(r, k * c * kh * kw)?;
+            let data: Vec<i8> = raw.iter().map(|&b| b as i8).collect();
+            mw.insert(
+                &name,
+                LayerWeights {
+                    w: Kernel4::from_vec(k, c, kh, kw, data),
+                    bias,
+                    qp: QuantParams { scale, vth_q },
+                },
+            );
+        }
+        Ok(mw)
+    }
+
+    /// Validate that the weights cover a network spec exactly.
+    pub fn validate_against(&self, net: &NetworkSpec) -> Result<()> {
+        for l in &net.layers {
+            let Some(lw) = self.get(&l.name) else {
+                bail!("weights missing layer {:?}", l.name);
+            };
+            if lw.w.k != l.c_out || lw.w.c != l.c_in || lw.w.kh != l.k || lw.w.kw != l.k {
+                bail!(
+                    "layer {:?}: weight shape ({},{},{},{}) != spec ({},{},{},{})",
+                    l.name, lw.w.k, lw.w.c, lw.w.kh, lw.w.kw, l.c_out, l.c_in, l.k, l.k
+                );
+            }
+            if lw.bias.len() != l.c_out {
+                bail!("layer {:?}: bias length mismatch", l.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::topology::{Scale, TimeStepConfig};
+    use crate::util::propcheck::run_prop;
+
+    fn tiny_net() -> NetworkSpec {
+        NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER)
+    }
+
+    #[test]
+    fn random_weights_match_spec() {
+        let net = tiny_net();
+        let mw = ModelWeights::random(&net, 1.0, 1);
+        mw.validate_against(&net).unwrap();
+        assert_eq!(mw.len(), net.layers.len());
+    }
+
+    #[test]
+    fn pruning_hits_target_rate_on_3x3() {
+        let net = tiny_net();
+        let mut mw = ModelWeights::random(&net, 1.0, 2);
+        mw.prune_fine_grained(0.8);
+        let enc = mw.get("enc").unwrap();
+        let density = enc.density();
+        assert!(density < 0.35, "density={density}");
+        // 1×1 layers untouched (paper policy).
+        let short = mw.get("b1.short").unwrap();
+        assert!(short.density() > 0.99, "1x1 density={}", short.density());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let net = tiny_net();
+        let mut mw = ModelWeights::random(&net, 0.5, 3);
+        mw.prune_fine_grained(0.8);
+        let dir = std::env::temp_dir().join("scsnn_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        mw.save(&p).unwrap();
+        let back = ModelWeights::load(&p).unwrap();
+        assert_eq!(mw, back);
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("scsnn_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(ModelWeights::load(&p).is_err());
+    }
+
+    #[test]
+    fn validate_catches_shape_mismatch() {
+        let net = tiny_net();
+        let mut mw = ModelWeights::random(&net, 1.0, 4);
+        let lw = mw.get_mut("enc").unwrap();
+        lw.bias.pop();
+        assert!(mw.validate_against(&net).is_err());
+    }
+
+    #[test]
+    fn prop_pruning_monotone() {
+        run_prop("weights/pruning-monotone", |g| {
+            let net = tiny_net();
+            let seed = g.rng().next_u64();
+            let mut a = ModelWeights::random(&net, 1.0, seed);
+            let mut b = a.clone();
+            a.prune_fine_grained(0.5);
+            b.prune_fine_grained(0.9);
+            assert!(b.density() <= a.density() + 1e-9);
+        });
+    }
+
+    #[test]
+    fn paper_pruning_reduces_70pct_of_weights() {
+        // §II-C: pruning 80% of 3×3 kernels removes ~70% of all weights
+        // (1×1 kernels survive). Check the same arithmetic holds on our
+        // geometry at full scale.
+        let net = NetworkSpec::paper(Scale::Full, TimeStepConfig::PAPER);
+        let mut mw = ModelWeights::random(&net, 1.0, 5);
+        mw.prune_fine_grained(0.8);
+        let density = mw.density();
+        let removed = 1.0 - density;
+        assert!((0.60..0.85).contains(&removed), "removed={removed}");
+    }
+}

@@ -1,0 +1,132 @@
+//! Block convolution (§II-B, [25]).
+//!
+//! The input feature map is partitioned into non-overlapping `tile_w ×
+//! tile_h` blocks; each block is convolved **independently** with replicate
+//! padding at its own boundary, so no partial sums ever cross tiles and
+//! the hardware needs no boundary buffers. This changes the numerics
+//! relative to whole-image convolution only in a 1-pixel band at interior
+//! tile edges — the paper measured a 0.8% mAP cost for it (Table I).
+
+use super::conv::conv2d;
+use crate::tensor::{Kernel4, Tensor};
+
+/// Stride-1 same-size convolution computed block-wise.
+///
+/// `tile_w`/`tile_h` is the hardware tile (paper: 32×18). Edge tiles are
+/// clipped to the map, matching the controller's handling of non-divisible
+/// sizes.
+pub fn block_conv2d(
+    input: &Tensor<u8>,
+    w: &Kernel4<i8>,
+    bias: &[i32],
+    tile_w: usize,
+    tile_h: usize,
+) -> Tensor<i32> {
+    assert!(tile_w > 0 && tile_h > 0);
+    let mut out = Tensor::zeros(w.k, input.h, input.w);
+    let mut y0 = 0;
+    while y0 < input.h {
+        let th = tile_h.min(input.h - y0);
+        let mut x0 = 0;
+        while x0 < input.w {
+            let tw = tile_w.min(input.w - x0);
+            // Independent tile: copy it out, convolve with replicate
+            // padding *of the tile itself*, paste the result back.
+            let tile = input.tile_replicate(y0 as isize, x0 as isize, th, tw);
+            let tile_out = conv2d(&tile, w, bias);
+            for k in 0..w.k {
+                for ty in 0..th {
+                    for tx in 0..tw {
+                        out.set(k, y0 + ty, x0 + tx, tile_out.get(k, ty, tx));
+                    }
+                }
+            }
+            x0 += tw;
+        }
+        y0 += th;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::run_prop;
+
+    #[test]
+    fn single_tile_equals_dense() {
+        // When the tile covers the whole map, block conv == dense conv.
+        let input = Tensor::from_vec(1, 4, 4, (0..16).map(|i| (i % 2) as u8).collect());
+        let mut w = Kernel4::zeros(1, 1, 3, 3);
+        w.set(0, 0, 1, 1, 2);
+        w.set(0, 0, 0, 0, -1);
+        let dense = conv2d(&input, &w, &[3]);
+        let block = block_conv2d(&input, &w, &[3], 4, 4);
+        assert_eq!(dense, block);
+    }
+
+    #[test]
+    fn one_by_one_kernel_unaffected_by_tiling() {
+        // 1×1 kernels read no neighbors, so any tiling is exact.
+        run_prop("block-conv/1x1-exact", |g| {
+            let c = g.usize(1, 3);
+            let h = g.usize(1, 8);
+            let wd = g.usize(1, 8);
+            let input = Tensor::from_vec(c, h, wd, g.spikes(c * h * wd, 0.5));
+            let k = g.usize(1, 3);
+            let w = Kernel4::from_vec(k, c, 1, 1, g.vec(k * c, |g| g.i8()));
+            let bias = g.vec(k, |g| g.i64(-10, 10) as i32);
+            let dense = conv2d(&input, &w, &bias);
+            let (tw, th) = (g.usize(1, wd + 1), g.usize(1, h + 1));
+            let block = block_conv2d(&input, &w, &bias, tw, th);
+            assert_eq!(dense, block);
+        });
+    }
+
+    #[test]
+    fn tile_interior_matches_dense() {
+        // For 3×3 kernels, only the 1-pixel band at tile boundaries may
+        // differ; interiors must match the dense result exactly.
+        run_prop("block-conv/interior-exact", |g| {
+            let input = Tensor::from_vec(1, 8, 8, g.spikes(64, 0.5));
+            let w = Kernel4::from_vec(1, 1, 3, 3, g.vec(9, |g| g.i64(-5, 5) as i8));
+            let dense = conv2d(&input, &w, &[0]);
+            let block = block_conv2d(&input, &w, &[0], 4, 4);
+            for y in 0..8usize {
+                for x in 0..8usize {
+                    let on_tile_edge =
+                        y % 4 == 0 || y % 4 == 3 || x % 4 == 0 || x % 4 == 3;
+                    if !on_tile_edge {
+                        assert_eq!(block.get(0, y, x), dense.get(0, y, x), "({y},{x})");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn non_divisible_sizes_covered() {
+        let input = Tensor::from_vec(1, 5, 7, vec![1u8; 35]);
+        let mut w = Kernel4::zeros(1, 1, 3, 3);
+        w.set(0, 0, 1, 1, 1);
+        let out = block_conv2d(&input, &w, &[0], 3, 2);
+        // Every output written exactly once → all ones.
+        assert!(out.data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn paper_tile_geometry() {
+        // 32×18 tiles over a 64×36 map: 2×2 tiles, all full size.
+        let input = Tensor::from_vec(1, 36, 64, vec![1u8; 36 * 64]);
+        let mut w = Kernel4::zeros(1, 1, 3, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                w.set(0, 0, i, j, 1);
+            }
+        }
+        let out = block_conv2d(&input, &w, &[0], 32, 18);
+        // All-ones input with all-ones 3×3 kernel and replicate padding:
+        // every output is 9 regardless of tiling.
+        assert!(out.data.iter().all(|&v| v == 9));
+    }
+}

@@ -1,0 +1,248 @@
+//! Integer dense convolution and OR-gate max pooling.
+//!
+//! Semantics fixed here (and mirrored by the Pallas kernel, the JAX model
+//! and the PE-array simulator):
+//!
+//! - stride 1, "same" output size, **replicate** boundary padding (the
+//!   paper's block-convolution padding; we use it at image boundaries too
+//!   so whole-image and block convolution agree in tile interiors);
+//! - inputs are `u8` (binary spikes, or multibit bit-planes/raw pixels for
+//!   the encoding layer), weights `i8`, accumulation in `i32` with a final
+//!   saturation to the PE's 16-bit accumulator domain.
+
+use crate::tensor::{sat_i16, Kernel4, Tensor};
+
+/// Dense stride-1 same-size convolution with replicate padding.
+///
+/// Returns the 16-bit-saturated accumulator map (stored as `i32`).
+///
+/// Hot path of the golden model (every accuracy experiment runs through
+/// it): organized as one shifted row-add per nonzero weight — the software
+/// analogue of the gated one-to-all product — so the inner loop is a
+/// sequential slice walk instead of per-pixel gather (see EXPERIMENTS.md
+/// §Perf for the before/after).
+pub fn conv2d(input: &Tensor<u8>, w: &Kernel4<i8>, bias: &[i32]) -> Tensor<i32> {
+    assert_eq!(input.c, w.c, "input channels mismatch");
+    assert_eq!(bias.len(), w.k, "bias length mismatch");
+    assert_eq!(w.kh, w.kw, "square kernels only");
+    let (h, wid) = (input.h, input.w);
+    let half = (w.kh / 2) as isize;
+    let mut out = Tensor::zeros(w.k, h, wid);
+    for k in 0..w.k {
+        let out_plane = {
+            let base = k * h * wid;
+            &mut out.data[base..base + h * wid]
+        };
+        out_plane.iter_mut().for_each(|o| *o = bias[k]);
+        for c in 0..input.c {
+            let in_plane = input.channel(c);
+            for i in 0..w.kh {
+                for j in 0..w.kw {
+                    let wt = w.get(k, c, i, j) as i32;
+                    if wt == 0 {
+                        continue; // zero-weight skipping, like the hardware
+                    }
+                    let dy = i as isize - half;
+                    let dx = j as isize - half;
+                    for y in 0..h {
+                        let sy = (y as isize + dy).clamp(0, h as isize - 1) as usize;
+                        let in_row = &in_plane[sy * wid..sy * wid + wid];
+                        let out_row = &mut out_plane[y * wid..y * wid + wid];
+                        add_shifted_row(out_row, in_row, wt, dx);
+                    }
+                }
+            }
+        }
+        out_plane.iter_mut().for_each(|o| *o = sat_i16(*o) as i32);
+    }
+    out
+}
+
+/// `out[x] += wt · in[clamp(x + dx)]` over a row, with the edge columns
+/// replicate-clamped — the per-row kernel of [`conv2d`].
+#[inline]
+fn add_shifted_row(out_row: &mut [i32], in_row: &[u8], wt: i32, dx: isize) {
+    let wid = out_row.len();
+    debug_assert_eq!(in_row.len(), wid);
+    match dx {
+        0 => {
+            for (o, &v) in out_row.iter_mut().zip(in_row) {
+                *o += wt * v as i32;
+            }
+        }
+        -1 => {
+            out_row[0] += wt * in_row[0] as i32;
+            for (o, &v) in out_row[1..].iter_mut().zip(&in_row[..wid - 1]) {
+                *o += wt * v as i32;
+            }
+        }
+        1 => {
+            for (o, &v) in out_row[..wid - 1].iter_mut().zip(&in_row[1..]) {
+                *o += wt * v as i32;
+            }
+            out_row[wid - 1] += wt * in_row[wid - 1] as i32;
+        }
+        _ => {
+            // General shift (kernels > 3×3 are not used by the paper, but
+            // keep the path correct).
+            for (x, o) in out_row.iter_mut().enumerate() {
+                let sx = (x as isize + dx).clamp(0, wid as isize - 1) as usize;
+                *o += wt * in_row[sx] as i32;
+            }
+        }
+    }
+}
+
+/// 2×2 stride-2 max pooling on binary spike maps — an OR over the window,
+/// which is how the hardware implements it (§III-B: "composed of simple OR
+/// gates"). Odd trailing rows/cols are dropped (sizes here are even by
+/// construction).
+pub fn maxpool2x2_or(input: &Tensor<u8>) -> Tensor<u8> {
+    let (oh, ow) = (input.h / 2, input.w / 2);
+    let mut out = Tensor::zeros(input.c, oh, ow);
+    for c in 0..input.c {
+        for y in 0..oh {
+            for x in 0..ow {
+                let v = input.get(c, 2 * y, 2 * x)
+                    | input.get(c, 2 * y, 2 * x + 1)
+                    | input.get(c, 2 * y + 1, 2 * x)
+                    | input.get(c, 2 * y + 1, 2 * x + 1);
+                out.set(c, y, x, u8::from(v != 0));
+            }
+        }
+    }
+    out
+}
+
+/// 2×2 stride-2 max pooling over multibit maps (used only by the ANN/QNN
+/// comparison variants, not by the spike datapath).
+pub fn maxpool2x2_or_multibit(input: &Tensor<i32>) -> Tensor<i32> {
+    let (oh, ow) = (input.h / 2, input.w / 2);
+    let mut out = Tensor::zeros(input.c, oh, ow);
+    for c in 0..input.c {
+        for y in 0..oh {
+            for x in 0..ow {
+                let v = input
+                    .get(c, 2 * y, 2 * x)
+                    .max(input.get(c, 2 * y, 2 * x + 1))
+                    .max(input.get(c, 2 * y + 1, 2 * x))
+                    .max(input.get(c, 2 * y + 1, 2 * x + 1));
+                out.set(c, y, x, v);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::run_prop;
+
+    #[test]
+    fn identity_1x1_kernel() {
+        let input = Tensor::from_vec(1, 2, 2, vec![1u8, 0, 1, 1]);
+        let mut w = Kernel4::zeros(1, 1, 1, 1);
+        w.set(0, 0, 0, 0, 1);
+        let out = conv2d(&input, &w, &[0]);
+        assert_eq!(out.data, vec![1, 0, 1, 1]);
+    }
+
+    #[test]
+    fn bias_only() {
+        let input = Tensor::zeros(1, 3, 3);
+        let w = Kernel4::zeros(2, 1, 3, 3);
+        let out = conv2d(&input, &w, &[5, -7]);
+        assert!(out.channel(0).iter().all(|&v| v == 5));
+        assert!(out.channel(1).iter().all(|&v| v == -7));
+    }
+
+    #[test]
+    fn single_weight_shifts_input() {
+        // Kernel with one nonzero at (0,0) — i.e. offset (-1,-1): output
+        // (y,x) = input(y-1, x-1) with replicate padding. This is exactly
+        // the "enable map" relationship of the gated one-to-all product.
+        let input = Tensor::from_vec(1, 3, 3, vec![1u8, 0, 0, 0, 0, 0, 0, 0, 1]);
+        let mut w = Kernel4::zeros(1, 1, 3, 3);
+        w.set(0, 0, 0, 0, 3);
+        let out = conv2d(&input, &w, &[0]);
+        // (0,0) reads replicate(-1,-1)=input(0,0)=1 → 3.
+        assert_eq!(out.get(0, 0, 0), 3);
+        assert_eq!(out.get(0, 1, 1), 3); // reads input(0,0)
+        assert_eq!(out.get(0, 2, 2), 0); // reads input(1,1)=0
+    }
+
+    #[test]
+    fn saturates_to_i16() {
+        let input = Tensor::from_vec(1, 1, 1, vec![255u8]);
+        let mut w = Kernel4::zeros(1, 1, 3, 3);
+        // All 9 taps hit the same replicated pixel: 9 × 127 × 255 ≫ i16.
+        for i in 0..3 {
+            for j in 0..3 {
+                w.set(0, 0, i, j, 127);
+            }
+        }
+        let out = conv2d(&input, &w, &[0]);
+        assert_eq!(out.get(0, 0, 0), i16::MAX as i32);
+    }
+
+    #[test]
+    fn or_pooling_matches_any() {
+        let input = Tensor::from_vec(1, 2, 4, vec![0u8, 1, 0, 0, 0, 0, 0, 0]);
+        let out = maxpool2x2_or(&input);
+        assert_eq!(out.data, vec![1, 0]);
+    }
+
+    #[test]
+    fn prop_conv_linear_in_weights() {
+        // conv(w1 + w2) == conv(w1) + conv(w2) when no saturation occurs.
+        run_prop("conv/linear-in-weights", |g| {
+            let c = g.usize(1, 3);
+            let h = g.usize(1, 6);
+            let wd = g.usize(1, 6);
+            let k = g.usize(1, 3);
+            let input = Tensor::from_vec(c, h, wd, g.spikes(c * h * wd, 0.5));
+            let mk = |g: &mut crate::util::propcheck::Gen| {
+                let data = g.vec(k * c * 9, |g| g.i64(-20, 20) as i8);
+                Kernel4::from_vec(k, c, 3, 3, data)
+            };
+            let w1 = mk(g);
+            let w2 = mk(g);
+            let mut wsum = w1.clone();
+            for (a, b) in wsum.data.iter_mut().zip(&w2.data) {
+                *a += *b; // |a+b| ≤ 40, no i8 overflow
+            }
+            let zero = vec![0i32; k];
+            let o1 = conv2d(&input, &w1, &zero);
+            let o2 = conv2d(&input, &w2, &zero);
+            let os = conv2d(&input, &wsum, &zero);
+            for i in 0..os.data.len() {
+                assert_eq!(os.data[i], o1.data[i] + o2.data[i]);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_or_pool_idempotent_on_binary() {
+        run_prop("conv/or-pool-binary", |g| {
+            let c = g.usize(1, 3);
+            let h = g.usize(1, 4) * 2;
+            let w = g.usize(1, 4) * 2;
+            let input = Tensor::from_vec(c, h, w, g.spikes(c * h * w, 0.3));
+            let out = maxpool2x2_or(&input);
+            assert!(out.data.iter().all(|&v| v <= 1));
+            // Any set output bit implies a set bit in its window.
+            for cc in 0..c {
+                for y in 0..h / 2 {
+                    for x in 0..w / 2 {
+                        let window = input.get(cc, 2 * y, 2 * x)
+                            + input.get(cc, 2 * y, 2 * x + 1)
+                            + input.get(cc, 2 * y + 1, 2 * x)
+                            + input.get(cc, 2 * y + 1, 2 * x + 1);
+                        assert_eq!(out.get(cc, y, x) == 1, window > 0);
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! Functional golden model.
+//!
+//! Bit-exact integer reference for everything the accelerator computes:
+//! dense convolution, block convolution (§II-B), and the full SNN forward
+//! pass with LIF state across time steps. The cycle-level simulator
+//! ([`crate::accel`]) and the JAX/PJRT artifact are both verified against
+//! this module.
+
+pub mod block_conv;
+pub mod conv;
+pub mod snn;
+
+pub use block_conv::block_conv2d;
+pub use conv::{conv2d, maxpool2x2_or, maxpool2x2_or_multibit};
+pub use snn::{ForwardOptions, ForwardResult, LayerStats, SnnForward};

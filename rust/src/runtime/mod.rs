@@ -1,0 +1,171 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them on the CPU PJRT client via the `xla` crate.
+//!
+//! Interchange is **HLO text**, not serialized `HloModuleProto` — jax ≥0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and
+//! `python/compile/aot.py`). The exported entry point takes one `u8[3,H,W]`
+//! image parameter and returns a 1-tuple of the `s32` head accumulator
+//! (lowered with `return_tuple=True`).
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Default artifact locations relative to the repo root.
+pub struct ArtifactPaths {
+    /// HLO text of the quantized inference graph.
+    pub model_hlo: PathBuf,
+    /// SNNW quantized weights.
+    pub weights: PathBuf,
+    /// SNNW quantized weights without pruning (ablation).
+    pub weights_dense: PathBuf,
+    /// SNND train dataset.
+    pub dataset_train: PathBuf,
+    /// SNND test dataset.
+    pub dataset_test: PathBuf,
+    /// Python-side metrics (Tables I/II, Fig 15, loss curve).
+    pub metrics: PathBuf,
+    /// Python-side head accumulator of test image 0 (cross-check vector).
+    pub selfcheck: PathBuf,
+}
+
+impl ArtifactPaths {
+    /// Resolve under an artifacts directory.
+    pub fn in_dir(dir: &Path) -> Self {
+        ArtifactPaths {
+            model_hlo: dir.join("model_tiny.hlo.txt"),
+            weights: dir.join("weights_tiny.bin"),
+            weights_dense: dir.join("weights_tiny_dense.bin"),
+            dataset_train: dir.join("dataset_train.bin"),
+            dataset_test: dir.join("dataset_test.bin"),
+            metrics: dir.join("metrics.json"),
+            selfcheck: dir.join("selfcheck_head_acc.bin"),
+        }
+    }
+
+    /// The conventional `artifacts/` directory (env `SCSNN_ARTIFACTS`
+    /// overrides; searched relative to CWD and the crate root).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("SCSNN_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let local = PathBuf::from("artifacts");
+        if local.exists() {
+            return local;
+        }
+        // Fall back to the crate root (benches/tests run from there).
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Whether the inference artifacts exist.
+    pub fn available(&self) -> bool {
+        self.model_hlo.exists() && self.weights.exists()
+    }
+}
+
+/// Load the trained quantized weights if the artifacts exist and match
+/// `net`'s geometry; otherwise synthesize pruned random weights (80% on
+/// 3×3 kernels, the paper's rate). Returns the weights and whether they
+/// are trained. Used by the CLI, examples and benches so every hardware
+/// experiment runs before *and* after `make artifacts`.
+pub fn load_trained_or_random(
+    net: &crate::model::topology::NetworkSpec,
+    seed: u64,
+) -> (crate::model::weights::ModelWeights, bool) {
+    let paths = ArtifactPaths::in_dir(&ArtifactPaths::default_dir());
+    if let Ok(w) = crate::model::weights::ModelWeights::load(&paths.weights) {
+        if w.validate_against(net).is_ok() {
+            return (w, true);
+        }
+    }
+    let mut w = crate::model::weights::ModelWeights::random(net, 1.0, seed);
+    w.prune_fine_grained(0.8);
+    (w, false)
+}
+
+/// A compiled SNN inference executable on the PJRT CPU client.
+pub struct SnnExecutable {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// Input channels/height/width the graph was exported for.
+    pub input_shape: (usize, usize, usize),
+    /// Head channels/height/width.
+    pub head_shape: (usize, usize, usize),
+}
+
+impl SnnExecutable {
+    /// Load and compile an HLO-text artifact.
+    ///
+    /// `input_shape`/`head_shape` are `(c, h, w)` of the exported graph
+    /// (from the network spec; validated on execution).
+    pub fn load(
+        hlo_path: &Path,
+        input_shape: (usize, usize, usize),
+        head_shape: (usize, usize, usize),
+    ) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(hlo_path).with_context(|| {
+            format!("parsing HLO text {} (run `make artifacts`?)", hlo_path.display())
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        Ok(SnnExecutable { client, exe, input_shape, head_shape })
+    }
+
+    /// Platform string of the underlying client (e.g. `cpu`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Run one frame: `(3, h, w)` u8 image → `(c, gh, gw)` i32 head
+    /// accumulator (bit-exact with the rust golden model in whole-image
+    /// mode and with the python graph).
+    pub fn run(&self, image: &Tensor<u8>) -> Result<Tensor<i32>> {
+        let (c, h, w) = self.input_shape;
+        if (image.c, image.h, image.w) != (c, h, w) {
+            bail!(
+                "input {}x{}x{} != exported {}x{}x{}",
+                image.c, image.h, image.w, c, h, w
+            );
+        }
+        // u8 is not a `NativeType` in the xla crate; build the U8 literal
+        // from raw bytes instead.
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[c, h, w],
+            &image.data,
+        )?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<i32>()?;
+        let (hc, hh, hw) = self.head_shape;
+        if data.len() != hc * hh * hw {
+            bail!("head size {} != expected {}x{}x{}", data.len(), hc, hh, hw);
+        }
+        Ok(Tensor::from_vec(hc, hh, hw, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_paths_layout() {
+        let p = ArtifactPaths::in_dir(Path::new("/tmp/a"));
+        assert_eq!(p.model_hlo, Path::new("/tmp/a/model_tiny.hlo.txt"));
+        assert!(!ArtifactPaths::in_dir(Path::new("/nonexistent")).available());
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        let err =
+            SnnExecutable::load(Path::new("/nonexistent/x.hlo.txt"), (3, 192, 320), (40, 6, 10));
+        assert!(err.is_err());
+    }
+
+    // Full runtime roundtrip (PJRT execute vs golden model) lives in
+    // tests/runtime_roundtrip.rs — it needs `make artifacts` first.
+}

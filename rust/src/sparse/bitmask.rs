@@ -1,0 +1,149 @@
+//! Bit-mask sparse kernel representation (Fig 10, right).
+//!
+//! A kernel plane `(kh × kw)` is stored as a `kh*kw`-bit sparse map plus
+//! the packed nonzero 8-bit weights in row-major order. This is the format
+//! held in the accelerator's Weight Map SRAM / NZ Weight SRAM banks and
+//! consumed one nonzero per cycle by the priority encoders (§III-C).
+
+use crate::tensor::Kernel4;
+
+/// One kernel plane, bit-mask compressed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitMaskKernel {
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Sparse map, one bit per position, row-major; bit `i*kw + j` set iff
+    /// the weight at `(i, j)` is nonzero. Stored LSB-first in `u16` words
+    /// (a 3×3 map is 9 bits — one word, as in the RTL).
+    pub map: Vec<u16>,
+    /// Packed nonzero weights in row-major scan order.
+    pub nz: Vec<i8>,
+}
+
+impl BitMaskKernel {
+    /// Compress a dense plane.
+    pub fn from_dense(plane: &[i8], kh: usize, kw: usize) -> Self {
+        assert_eq!(plane.len(), kh * kw);
+        assert!(kh * kw <= 16, "kernel plane larger than one map word");
+        let mut map = 0u16;
+        let mut nz = Vec::new();
+        for (i, &w) in plane.iter().enumerate() {
+            if w != 0 {
+                map |= 1 << i;
+                nz.push(w);
+            }
+        }
+        BitMaskKernel { kh, kw, map: vec![map], nz }
+    }
+
+    /// Decompress back to a dense plane.
+    pub fn to_dense(&self) -> Vec<i8> {
+        let mut out = vec![0i8; self.kh * self.kw];
+        let mut it = self.nz.iter();
+        for (i, slot) in out.iter_mut().enumerate() {
+            if self.map[0] >> i & 1 == 1 {
+                *slot = *it.next().expect("map/nz length mismatch");
+            }
+        }
+        out
+    }
+
+    /// Number of nonzero weights.
+    pub fn nnz(&self) -> usize {
+        self.nz.len()
+    }
+
+    /// Iterate nonzero weights as `(row, col, value)` in the scan order the
+    /// hardware's priority encoders produce (row-major, leftmost first).
+    pub fn iter_nz(&self) -> impl Iterator<Item = (usize, usize, i8)> + '_ {
+        let kw = self.kw;
+        let map = self.map[0];
+        (0..self.kh * self.kw)
+            .filter(move |i| map >> i & 1 == 1)
+            .zip(self.nz.iter())
+            .map(move |(i, &w)| (i / kw, i % kw, w))
+    }
+
+    /// Storage cost in bits: map (1 bit/position) + nonzeros (8 bits each).
+    pub fn storage_bits(&self, weight_bits: usize) -> usize {
+        self.kh * self.kw + self.nz.len() * weight_bits
+    }
+}
+
+/// Compress every `(k, c)` plane of a 4-D kernel tensor.
+pub fn compress_kernel4(k4: &Kernel4<i8>) -> Vec<BitMaskKernel> {
+    (0..k4.k)
+        .flat_map(|k| (0..k4.c).map(move |c| (k, c)))
+        .map(|(k, c)| BitMaskKernel::from_dense(k4.plane(k, c), k4.kh, k4.kw))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::run_prop;
+
+    #[test]
+    fn roundtrip_example() {
+        // The Fig 10 example kernel: one nonzero at each corner-ish spot.
+        let plane = vec![0i8, 5, 0, 0, 0, -3, 2, 0, 0];
+        let bm = BitMaskKernel::from_dense(&plane, 3, 3);
+        assert_eq!(bm.nnz(), 3);
+        assert_eq!(bm.to_dense(), plane);
+    }
+
+    #[test]
+    fn iter_nz_row_major_order() {
+        let plane = vec![0i8, 5, 0, 0, 0, -3, 2, 0, 0];
+        let bm = BitMaskKernel::from_dense(&plane, 3, 3);
+        let nz: Vec<_> = bm.iter_nz().collect();
+        assert_eq!(nz, vec![(0, 1, 5), (1, 2, -3), (2, 0, 2)]);
+    }
+
+    #[test]
+    fn all_zero_plane() {
+        let plane = vec![0i8; 9];
+        let bm = BitMaskKernel::from_dense(&plane, 3, 3);
+        assert_eq!(bm.nnz(), 0);
+        assert_eq!(bm.to_dense(), plane);
+        assert_eq!(bm.storage_bits(8), 9);
+    }
+
+    #[test]
+    fn dense_plane_storage() {
+        let plane = vec![1i8; 9];
+        let bm = BitMaskKernel::from_dense(&plane, 3, 3);
+        // 9 map bits + 9 weights × 8 bits.
+        assert_eq!(bm.storage_bits(8), 9 + 72);
+    }
+
+    #[test]
+    fn one_by_one_kernel() {
+        let bm = BitMaskKernel::from_dense(&[7], 1, 1);
+        assert_eq!(bm.iter_nz().collect::<Vec<_>>(), vec![(0, 0, 7)]);
+        assert_eq!(bm.storage_bits(8), 1 + 8);
+    }
+
+    #[test]
+    fn prop_roundtrip_any_plane() {
+        run_prop("bitmask/roundtrip", |g| {
+            let (kh, kw) = *g.rng().choose(&[(1, 1), (3, 3), (2, 2), (3, 1)]);
+            let plane = g.sparse_i8(kh * kw, 0.4);
+            let bm = BitMaskKernel::from_dense(&plane, kh, kw);
+            assert_eq!(bm.to_dense(), plane);
+            let nnz = plane.iter().filter(|&&w| w != 0).count();
+            assert_eq!(bm.nnz(), nnz);
+        });
+    }
+
+    #[test]
+    fn compress_kernel4_covers_all_planes() {
+        let mut k4: Kernel4<i8> = Kernel4::zeros(2, 3, 3, 3);
+        k4.set(1, 2, 1, 1, 9);
+        let planes = compress_kernel4(&k4);
+        assert_eq!(planes.len(), 6);
+        assert_eq!(planes[5].nnz(), 1); // (k=1,c=2) is the last plane
+    }
+}

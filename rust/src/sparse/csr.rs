@@ -1,0 +1,135 @@
+//! CSR sparse kernel representation (Fig 10, left) — implemented as the
+//! comparison baseline for the storage/DRAM-traffic analysis (Fig 17).
+//!
+//! Per the paper's accounting, CSR for a `kh × kw` plane stores: row index
+//! pointers (`kh+1` entries), a column index per nonzero, and the nonzero
+//! values. Index widths are the minimal bit widths for the kernel
+//! geometry, which is the most favorable-possible accounting for CSR.
+
+/// One kernel plane in CSR form.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CsrKernel {
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Row pointers, `kh + 1` entries.
+    pub indptr: Vec<u8>,
+    /// Column index of each nonzero.
+    pub indices: Vec<u8>,
+    /// Nonzero values, row-major.
+    pub nz: Vec<i8>,
+}
+
+impl CsrKernel {
+    /// Compress a dense plane.
+    pub fn from_dense(plane: &[i8], kh: usize, kw: usize) -> Self {
+        assert_eq!(plane.len(), kh * kw);
+        let mut indptr = Vec::with_capacity(kh + 1);
+        let mut indices = Vec::new();
+        let mut nz = Vec::new();
+        indptr.push(0u8);
+        for i in 0..kh {
+            for j in 0..kw {
+                let w = plane[i * kw + j];
+                if w != 0 {
+                    indices.push(j as u8);
+                    nz.push(w);
+                }
+            }
+            indptr.push(nz.len() as u8);
+        }
+        CsrKernel { kh, kw, indptr, indices, nz }
+    }
+
+    /// Decompress back to a dense plane.
+    pub fn to_dense(&self) -> Vec<i8> {
+        let mut out = vec![0i8; self.kh * self.kw];
+        for i in 0..self.kh {
+            let (lo, hi) = (self.indptr[i] as usize, self.indptr[i + 1] as usize);
+            for p in lo..hi {
+                out[i * self.kw + self.indices[p] as usize] = self.nz[p];
+            }
+        }
+        out
+    }
+
+    /// Number of nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.nz.len()
+    }
+
+    /// Storage cost in bits with minimal index widths:
+    /// `(kh+1)` pointers of `ceil(log2(kh*kw+1))` bits, one
+    /// `ceil(log2(kw))` bit column index per nonzero, and the values.
+    pub fn storage_bits(&self, weight_bits: usize) -> usize {
+        let ptr_bits = bits_for(self.kh * self.kw + 1);
+        let col_bits = bits_for(self.kw).max(1);
+        (self.kh + 1) * ptr_bits + self.nz.len() * (col_bits + weight_bits)
+    }
+}
+
+/// Minimal number of bits to represent values `0..n` (n distinct values).
+pub fn bits_for(n: usize) -> usize {
+    match n {
+        0 | 1 => 1,
+        _ => usize::BITS as usize - (n - 1).leading_zeros() as usize,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::run_prop;
+
+    #[test]
+    fn roundtrip_example() {
+        let plane = vec![0i8, 5, 0, 0, 0, -3, 2, 0, 0];
+        let csr = CsrKernel::from_dense(&plane, 3, 3);
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.to_dense(), plane);
+        assert_eq!(csr.indices, vec![1, 2, 0]);
+        assert_eq!(csr.indptr, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn bits_for_values() {
+        assert_eq!(bits_for(1), 1);
+        assert_eq!(bits_for(2), 1);
+        assert_eq!(bits_for(3), 2);
+        assert_eq!(bits_for(9), 4);
+        assert_eq!(bits_for(10), 4);
+        assert_eq!(bits_for(17), 5);
+    }
+
+    #[test]
+    fn storage_cost_3x3() {
+        let plane = vec![0i8, 5, 0, 0, 0, -3, 2, 0, 0];
+        let csr = CsrKernel::from_dense(&plane, 3, 3);
+        // ptrs: 4 × ceil(log2(10)) = 4×4 = 16; nz: 3 × (2 + 8) = 30.
+        assert_eq!(csr.storage_bits(8), 46);
+    }
+
+    #[test]
+    fn prop_roundtrip_any_plane() {
+        run_prop("csr/roundtrip", |g| {
+            let (kh, kw) = *g.rng().choose(&[(1usize, 1usize), (3, 3), (2, 3)]);
+            let plane = g.sparse_i8(kh * kw, 0.35);
+            let csr = CsrKernel::from_dense(&plane, kh, kw);
+            assert_eq!(csr.to_dense(), plane);
+        });
+    }
+
+    #[test]
+    fn prop_bitmask_beats_csr_at_moderate_density() {
+        // The paper's observation: at the network's weight density
+        // (~30% on 3×3 kernels) the bit mask is cheaper than CSR.
+        run_prop("csr/bitmask-cheaper", |g| {
+            let plane = g.sparse_i8(9, 0.3);
+            let csr = CsrKernel::from_dense(&plane, 3, 3);
+            let bm = crate::sparse::BitMaskKernel::from_dense(&plane, 3, 3);
+            // CSR pays 16 pointer bits before storing anything.
+            assert!(bm.storage_bits(8) <= csr.storage_bits(8) + 8 * plane.len());
+        });
+    }
+}

@@ -1,0 +1,27 @@
+//! Sparse weight compression formats (§III-B-2, Fig 10, Fig 17).
+//!
+//! The paper compares three representations of a pruned kernel plane:
+//!
+//! - **dense** — the original 8-bit-per-weight layout;
+//! - **CSR** — index pointers + column indexes + nonzero values, the usual
+//!   HPC representation;
+//! - **bit-mask** — a 1-bit-per-position sparse map plus the packed nonzero
+//!   values, the representation the accelerator adopts because the map
+//!   feeds the row/column priority encoders of the gated one-to-all
+//!   product directly and needs no index arithmetic.
+//!
+//! Each format reports its storage cost in bits so Fig 17 (DRAM access of
+//! the network parameters per representation) can be regenerated exactly.
+
+pub mod bitmask;
+pub mod csr;
+pub mod stats;
+
+pub use bitmask::BitMaskKernel;
+pub use csr::CsrKernel;
+pub use stats::{format_bits, FormatCost};
+
+/// Storage cost (bits) of one kernel plane in the dense format.
+pub fn dense_bits(kh: usize, kw: usize, weight_bits: usize) -> usize {
+    kh * kw * weight_bits
+}

@@ -1,0 +1,165 @@
+//! Fixed-point arithmetic matching the paper's datapath (Fig 16):
+//! 8-bit FXP weights, 8-bit FXP membrane potential, 16-bit accumulators.
+//!
+//! Because SNN activations are binary spikes, a "multiply" is a gated add
+//! of the 8-bit weight into a 16-bit partial sum — exactly what the gated
+//! computation element in the PE does. The quantization scheme is a single
+//! per-layer power-free affine scale (no zero point: weights are symmetric
+//! around 0), shared with the python export path.
+
+/// Saturate an i32 into i8 (8-bit FXP storage, e.g. membrane potential).
+#[inline]
+pub fn sat_i8(v: i32) -> i8 {
+    v.clamp(i8::MIN as i32, i8::MAX as i32) as i8
+}
+
+/// Saturate an i32 into i16 (the PE's 16-bit accumulator registers).
+#[inline]
+pub fn sat_i16(v: i32) -> i16 {
+    v.clamp(i16::MIN as i32, i16::MAX as i32) as i16
+}
+
+/// An 8-bit fixed-point value with an associated scale: `real = q * scale`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Fxp8 {
+    /// Quantized value.
+    pub q: i8,
+    /// Scale (real units per LSB).
+    pub scale: f32,
+}
+
+impl Fxp8 {
+    /// Quantize a real value at the given scale (round-to-nearest,
+    /// saturating).
+    pub fn quantize(real: f32, scale: f32) -> Self {
+        let q = (real / scale).round() as i32;
+        Fxp8 { q: sat_i8(q), scale }
+    }
+
+    /// Recover the real value.
+    pub fn dequantize(self) -> f32 {
+        self.q as f32 * self.scale
+    }
+}
+
+/// Per-layer quantization parameters shared between the float model and the
+/// integer datapath.
+///
+/// The LIF threshold (0.5) and leak (0.25) of the paper live in the
+/// *normalized* (post-tdBN) domain; on the integer datapath the threshold
+/// becomes `vth_q = round(0.5 / scale)` and the leak is an exact arithmetic
+/// right shift by 2 (×0.25) — this is why the paper picked those constants
+/// ("for a simple hardware implementation").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    /// Real units per weight LSB.
+    pub scale: f32,
+    /// Integer firing threshold (`round(0.5/scale)`).
+    pub vth_q: i32,
+}
+
+impl QuantParams {
+    /// LIF threshold in the normalized domain (§II-A).
+    pub const VTH_REAL: f32 = 0.5;
+    /// LIF leak factor (×0.25 = `>> 2`).
+    pub const LEAK_SHIFT: u32 = 2;
+
+    /// Derive per-layer parameters from the max |weight| after BN folding.
+    ///
+    /// The scale is chosen so weights span i8 and the integer threshold
+    /// stays comfortably inside the 8-bit membrane range (≤ 96), matching
+    /// the paper's 8-bit Vmem storage.
+    pub fn from_weight_absmax(absmax: f32) -> Self {
+        let mut scale = (absmax / 127.0).max(1e-8);
+        // Keep vth_q ≤ 96 so potentials near threshold fit 8-bit storage.
+        let min_scale = Self::VTH_REAL / 96.0;
+        if scale < min_scale {
+            scale = min_scale;
+        }
+        let vth_q = (Self::VTH_REAL / scale).round() as i32;
+        QuantParams { scale, vth_q }
+    }
+
+    /// Quantize one weight.
+    pub fn quantize_weight(&self, w: f32) -> i8 {
+        sat_i8((w / self.scale).round() as i32)
+    }
+
+    /// Quantize a bias into the 16-bit accumulator domain.
+    pub fn quantize_bias(&self, b: f32) -> i16 {
+        sat_i16((b / self.scale).round() as i32)
+    }
+
+    /// Exact integer leak: `v * 0.25` as an arithmetic shift with
+    /// round-toward-zero, mirroring the RTL (sign-preserving).
+    #[inline]
+    pub fn leak(v: i32) -> i32 {
+        // Arithmetic shift rounds toward -inf; hardware uses truncation
+        // toward zero for symmetric decay, so compensate negatives.
+        if v >= 0 {
+            v >> Self::LEAK_SHIFT
+        } else {
+            -((-v) >> Self::LEAK_SHIFT)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::run_prop;
+
+    #[test]
+    fn sat_bounds() {
+        assert_eq!(sat_i8(1000), 127);
+        assert_eq!(sat_i8(-1000), -128);
+        assert_eq!(sat_i8(5), 5);
+        assert_eq!(sat_i16(40_000), 32_767);
+        assert_eq!(sat_i16(-40_000), -32_768);
+    }
+
+    #[test]
+    fn quantize_roundtrip_small_error() {
+        let qp = QuantParams::from_weight_absmax(1.0);
+        for w in [-1.0f32, -0.5, -0.1, 0.0, 0.3, 0.99] {
+            let q = qp.quantize_weight(w);
+            let err = (q as f32 * qp.scale - w).abs();
+            assert!(err <= qp.scale / 2.0 + 1e-6, "w={w} err={err}");
+        }
+    }
+
+    #[test]
+    fn vth_q_in_8bit_range() {
+        for absmax in [0.01f32, 0.1, 0.5, 1.0, 4.0, 10.0] {
+            let qp = QuantParams::from_weight_absmax(absmax);
+            assert!(qp.vth_q > 0 && qp.vth_q <= 96, "absmax={absmax} vth={}", qp.vth_q);
+        }
+    }
+
+    #[test]
+    fn leak_truncates_toward_zero() {
+        assert_eq!(QuantParams::leak(7), 1);
+        assert_eq!(QuantParams::leak(-7), -1);
+        assert_eq!(QuantParams::leak(8), 2);
+        assert_eq!(QuantParams::leak(-8), -2);
+        assert_eq!(QuantParams::leak(3), 0);
+        assert_eq!(QuantParams::leak(-3), 0);
+    }
+
+    #[test]
+    fn fxp8_quantize_dequantize() {
+        let v = Fxp8::quantize(0.37, 0.01);
+        assert_eq!(v.q, 37);
+        assert!((v.dequantize() - 0.37).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_leak_magnitude_shrinks() {
+        run_prop("fxp/leak-shrinks", |g| {
+            let v = g.i64(-1 << 20, 1 << 20) as i32;
+            let l = QuantParams::leak(v);
+            assert!(l.abs() <= v.abs() / 4 + 1);
+            assert!(l.signum() == 0 || l.signum() == v.signum());
+        });
+    }
+}

@@ -1,0 +1,267 @@
+//! Dense tensor substrate.
+//!
+//! The accelerator operates on small integer domains — binary spikes,
+//! 8-bit fixed-point weights and membrane potentials, 16-bit accumulators —
+//! so the tensor type is a plain row-major container generic over the
+//! element. Layout is `(C, H, W)` for feature maps and `(K, C, Kh, Kw)`
+//! for kernels; the time dimension is kept as an explicit `Vec<Tensor>`
+//! because the hardware streams time steps (it never holds a T-major
+//! tensor).
+
+pub mod fxp;
+
+pub use fxp::{sat_i16, sat_i8, Fxp8, QuantParams};
+
+/// Row-major 3-D tensor `(c, h, w)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tensor<T> {
+    /// Channels.
+    pub c: usize,
+    /// Height (rows).
+    pub h: usize,
+    /// Width (columns).
+    pub w: usize,
+    /// Row-major data, `len == c*h*w`.
+    pub data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    /// Zero-initialized tensor.
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        Tensor { c, h, w, data: vec![T::default(); c * h * w] }
+    }
+
+    /// Build from existing data (length must match).
+    pub fn from_vec(c: usize, h: usize, w: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), c * h * w, "tensor shape/data mismatch");
+        Tensor { c, h, w, data }
+    }
+
+    /// Total element count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Whether the tensor is empty.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flat index of `(c, y, x)`.
+    #[inline]
+    pub fn idx(&self, c: usize, y: usize, x: usize) -> usize {
+        debug_assert!(c < self.c && y < self.h && x < self.w);
+        (c * self.h + y) * self.w + x
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, c: usize, y: usize, x: usize) -> T {
+        self.data[self.idx(c, y, x)]
+    }
+
+    /// Mutable element access.
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: T) {
+        let i = self.idx(c, y, x);
+        self.data[i] = v;
+    }
+
+    /// Element access with **replicate** (clamp-to-edge) boundary padding —
+    /// the paper's block-convolution padding mode (§II-B).
+    #[inline]
+    pub fn get_replicate(&self, c: usize, y: isize, x: isize) -> T {
+        let yy = y.clamp(0, self.h as isize - 1) as usize;
+        let xx = x.clamp(0, self.w as isize - 1) as usize;
+        self.get(c, yy, xx)
+    }
+
+    /// One channel plane as a slice.
+    pub fn channel(&self, c: usize) -> &[T] {
+        let hw = self.h * self.w;
+        &self.data[c * hw..(c + 1) * hw]
+    }
+
+    /// Extract the sub-tile `[y0, y0+th) × [x0, x0+tw)` over all channels.
+    /// Out-of-bounds reads use replicate padding so edge tiles are full
+    /// size, matching the hardware's fixed 32×18 PE tile.
+    pub fn tile_replicate(&self, y0: isize, x0: isize, th: usize, tw: usize) -> Tensor<T> {
+        let mut out = Tensor::zeros(self.c, th, tw);
+        for c in 0..self.c {
+            for ty in 0..th {
+                for tx in 0..tw {
+                    let v = self.get_replicate(c, y0 + ty as isize, x0 + tx as isize);
+                    out.set(c, ty, tx, v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Tensor<u8> {
+    /// Fraction of zero elements (activation sparsity, §IV-E).
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let zeros = self.data.iter().filter(|&&v| v == 0).count();
+        zeros as f64 / self.data.len() as f64
+    }
+
+    /// Number of nonzero (fired) elements.
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0).count()
+    }
+}
+
+/// Row-major 4-D kernel tensor `(k, c, kh, kw)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Kernel4<T> {
+    /// Output channels.
+    pub k: usize,
+    /// Input channels.
+    pub c: usize,
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Row-major data, `len == k*c*kh*kw`.
+    pub data: Vec<T>,
+}
+
+impl<T: Copy + Default> Kernel4<T> {
+    /// Zero-initialized kernel.
+    pub fn zeros(k: usize, c: usize, kh: usize, kw: usize) -> Self {
+        Kernel4 { k, c, kh, kw, data: vec![T::default(); k * c * kh * kw] }
+    }
+
+    /// Build from existing data (length must match).
+    pub fn from_vec(k: usize, c: usize, kh: usize, kw: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), k * c * kh * kw, "kernel shape/data mismatch");
+        Kernel4 { k, c, kh, kw, data }
+    }
+
+    /// Flat index of `(k, c, i, j)`.
+    #[inline]
+    pub fn idx(&self, k: usize, c: usize, i: usize, j: usize) -> usize {
+        debug_assert!(k < self.k && c < self.c && i < self.kh && j < self.kw);
+        ((k * self.c + c) * self.kh + i) * self.kw + j
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, k: usize, c: usize, i: usize, j: usize) -> T {
+        self.data[self.idx(k, c, i, j)]
+    }
+
+    /// Mutable element access.
+    #[inline]
+    pub fn set(&mut self, k: usize, c: usize, i: usize, j: usize, v: T) {
+        let idx = self.idx(k, c, i, j);
+        self.data[idx] = v;
+    }
+
+    /// The `(kh, kw)` plane for `(k, c)` as a slice.
+    pub fn plane(&self, k: usize, c: usize) -> &[T] {
+        let n = self.kh * self.kw;
+        let base = (k * self.c + c) * n;
+        &self.data[base..base + n]
+    }
+}
+
+impl Kernel4<i8> {
+    /// Fraction of zero weights (weight sparsity after pruning, Fig 3).
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let zeros = self.data.iter().filter(|&&v| v == 0).count();
+        zeros as f64 / self.data.len() as f64
+    }
+
+    /// Number of nonzero weights.
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::run_prop;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut t: Tensor<i32> = Tensor::zeros(3, 4, 5);
+        t.set(2, 3, 4, 99);
+        assert_eq!(t.get(2, 3, 4), 99);
+        assert_eq!(t.data[t.idx(2, 3, 4)], 99);
+    }
+
+    #[test]
+    fn replicate_padding_clamps() {
+        let t = Tensor::from_vec(1, 2, 2, vec![1u8, 2, 3, 4]);
+        assert_eq!(t.get_replicate(0, -1, -1), 1);
+        assert_eq!(t.get_replicate(0, -5, 1), 2);
+        assert_eq!(t.get_replicate(0, 5, 5), 4);
+        assert_eq!(t.get_replicate(0, 1, -3), 3);
+    }
+
+    #[test]
+    fn tile_replicate_interior_matches_get() {
+        let mut t: Tensor<u8> = Tensor::zeros(2, 6, 6);
+        for (i, v) in t.data.iter_mut().enumerate() {
+            *v = (i % 251) as u8;
+        }
+        let tile = t.tile_replicate(1, 2, 3, 3);
+        for c in 0..2 {
+            for y in 0..3 {
+                for x in 0..3 {
+                    assert_eq!(tile.get(c, y, x), t.get(c, 1 + y, 2 + x));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_counts() {
+        let t = Tensor::from_vec(1, 1, 4, vec![0u8, 1, 0, 1]);
+        assert_eq!(t.sparsity(), 0.5);
+        assert_eq!(t.count_nonzero(), 2);
+    }
+
+    #[test]
+    fn kernel_plane_slices() {
+        let mut k: Kernel4<i8> = Kernel4::zeros(2, 3, 3, 3);
+        k.set(1, 2, 0, 1, 7);
+        let plane = k.plane(1, 2);
+        assert_eq!(plane[1], 7);
+    }
+
+    #[test]
+    fn prop_tile_replicate_edges_clamp() {
+        run_prop("tensor/tile-replicate-clamps", |g| {
+            let c = g.usize(1, 4);
+            let h = g.usize(1, 8);
+            let w = g.usize(1, 8);
+            let data = g.vec(c * h * w, |g| g.rng().next_u32() as u8);
+            let t = Tensor::from_vec(c, h, w, data);
+            let y0 = g.i64(-3, h as i64) as isize;
+            let x0 = g.i64(-3, w as i64) as isize;
+            let tile = t.tile_replicate(y0, x0, 4, 4);
+            for cc in 0..c {
+                for ty in 0..4usize {
+                    for tx in 0..4usize {
+                        assert_eq!(
+                            tile.get(cc, ty, tx),
+                            t.get_replicate(cc, y0 + ty as isize, x0 + tx as isize)
+                        );
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,178 @@
+//! Minimal benchmark harness (`criterion` is unavailable offline).
+//!
+//! Each `benches/*.rs` target uses `harness = false` and drives a
+//! [`BenchRunner`]: timed micro-measurements with warmup + outlier-robust
+//! statistics, plus free-form "report rows" so a bench target can print
+//! the exact table/figure series the paper reports.
+
+use std::time::{Duration, Instant};
+
+/// One timed measurement: robust statistics over many iterations.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Benchmark id, e.g. `pe_array/step/576`.
+    pub name: String,
+    /// Median wall time per iteration.
+    pub median: Duration,
+    /// Mean wall time per iteration.
+    pub mean: Duration,
+    /// Min / max over samples.
+    pub min: Duration,
+    pub max: Duration,
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Optional throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl Measurement {
+    /// Elements per second if `elements` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / self.median.as_secs_f64())
+    }
+}
+
+/// Harness driving warmup, sampling and reporting for one bench target.
+pub struct BenchRunner {
+    target: String,
+    sample_budget: Duration,
+    warmup_budget: Duration,
+    results: Vec<Measurement>,
+}
+
+impl BenchRunner {
+    /// Create a runner for a named bench target.
+    ///
+    /// Budgets are intentionally small (the suite has many targets); they
+    /// can be scaled with `SCSNN_BENCH_SECS` (per-measurement seconds).
+    pub fn new(target: &str) -> Self {
+        let secs: f64 = std::env::var("SCSNN_BENCH_SECS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.5);
+        println!("\n== bench target: {target} ==");
+        BenchRunner {
+            target: target.to_string(),
+            sample_budget: Duration::from_secs_f64(secs),
+            warmup_budget: Duration::from_secs_f64(secs / 4.0),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which must perform one logical iteration per call.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &Measurement {
+        self.bench_elements(name, None, &mut f)
+    }
+
+    /// Time `f` with a throughput denominator (`elements` per iteration).
+    pub fn bench_throughput(
+        &mut self,
+        name: &str,
+        elements: u64,
+        mut f: impl FnMut(),
+    ) -> &Measurement {
+        self.bench_elements(name, Some(elements), &mut f)
+    }
+
+    fn bench_elements(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> &Measurement {
+        // Warmup: also estimates per-iteration cost to size the batches.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup_budget {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+
+        // Sampling: fixed batches so each sample is long enough to time.
+        let batch = ((1e-4 / per_iter.max(1e-12)).ceil() as u64).clamp(1, 1_000_000);
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.sample_budget || samples.len() < 10 {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+            if samples.len() >= 2000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let m = Measurement {
+            name: format!("{}/{}", self.target, name),
+            median: Duration::from_secs_f64(median),
+            mean: Duration::from_secs_f64(mean),
+            min: Duration::from_secs_f64(samples[0]),
+            max: Duration::from_secs_f64(*samples.last().unwrap()),
+            samples: samples.len(),
+            elements,
+        };
+        let tp = m
+            .throughput()
+            .map(|t| format!("  {:.3} Melem/s", t / 1e6))
+            .unwrap_or_default();
+        println!(
+            "  {:<48} median {:>12?}  mean {:>12?}  ({} samples){tp}",
+            m.name, m.median, m.mean, m.samples
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Print a free-form paper-table row (kept alongside the timings so the
+    /// bench output is the single reproduction record for that table).
+    pub fn report_row(&self, row: &str) {
+        println!("  | {row}");
+    }
+
+    /// Print a section header inside the target's report.
+    pub fn section(&self, title: &str) {
+        println!("\n-- {title} --");
+    }
+
+    /// All measurements taken so far.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("SCSNN_BENCH_SECS", "0.05");
+        let mut r = BenchRunner::new("selftest");
+        let mut acc = 0u64;
+        let m = r
+            .bench("noop-ish", || {
+                acc = acc.wrapping_add(std::hint::black_box(1));
+            })
+            .clone();
+        assert!(m.median > Duration::ZERO);
+        assert!(m.samples >= 10);
+    }
+
+    #[test]
+    fn throughput_is_positive() {
+        std::env::set_var("SCSNN_BENCH_SECS", "0.05");
+        let mut r = BenchRunner::new("selftest2");
+        let v: Vec<u64> = (0..1024).collect();
+        let m = r
+            .bench_throughput("sum1024", 1024, || {
+                std::hint::black_box(v.iter().sum::<u64>());
+            })
+            .clone();
+        assert!(m.throughput().unwrap() > 0.0);
+    }
+}

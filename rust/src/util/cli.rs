@@ -1,0 +1,115 @@
+//! Tiny CLI argument parser (`clap` is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, which is all the `scsnn` binary and examples need.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Positional arguments in order (subcommand first, typically).
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit iterator (used by tests).
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// First positional argument (the subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Option value as string.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Option value with default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Parsed option value (any FromStr) with default.
+    pub fn parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Whether a bare `--flag` was given.
+    pub fn has_flag(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("simulate --layer 3 --config=full input.bin");
+        assert_eq!(a.subcommand(), Some("simulate"));
+        assert_eq!(a.get("layer"), Some("3"));
+        assert_eq!(a.get("config"), Some("full"));
+        assert_eq!(a.positional, vec!["simulate", "input.bin"]);
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse("run --verbose --n 5 --dry-run");
+        assert!(a.has_flag("verbose"));
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.parsed_or("n", 0usize), 5);
+    }
+
+    #[test]
+    fn parsed_or_falls_back() {
+        let a = parse("run --n notanumber");
+        assert_eq!(a.parsed_or("n", 7usize), 7);
+        assert_eq!(a.parsed_or("missing", 3u32), 3);
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse("");
+        assert_eq!(a.subcommand(), None);
+    }
+}

@@ -1,0 +1,110 @@
+//! Little-endian binary I/O helpers for the artifact formats shared with
+//! the python build path (weights, datasets). Formats are defined in
+//! `python/compile/binfmt.py`; both sides keep these in sync.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Read exactly `n` bytes.
+pub fn read_bytes(r: &mut impl Read, n: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf).context("short read")?;
+    Ok(buf)
+}
+
+/// Read a little-endian u32.
+pub fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Read a little-endian i32.
+pub fn read_i32(r: &mut impl Read) -> Result<i32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(i32::from_le_bytes(b))
+}
+
+/// Read a little-endian f32.
+pub fn read_f32(r: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+/// Read a `u32`-length-prefixed UTF-8 string.
+pub fn read_string(r: &mut impl Read) -> Result<String> {
+    let n = read_u32(r)? as usize;
+    if n > 1 << 20 {
+        bail!("unreasonable string length {n}");
+    }
+    let bytes = read_bytes(r, n)?;
+    Ok(String::from_utf8(bytes).context("invalid utf-8 in artifact string")?)
+}
+
+/// Write a little-endian u32.
+pub fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    Ok(w.write_all(&v.to_le_bytes())?)
+}
+
+/// Write a little-endian i32.
+pub fn write_i32(w: &mut impl Write, v: i32) -> Result<()> {
+    Ok(w.write_all(&v.to_le_bytes())?)
+}
+
+/// Write a little-endian f32.
+pub fn write_f32(w: &mut impl Write, v: f32) -> Result<()> {
+    Ok(w.write_all(&v.to_le_bytes())?)
+}
+
+/// Write a `u32`-length-prefixed UTF-8 string.
+pub fn write_string(w: &mut impl Write, s: &str) -> Result<()> {
+    write_u32(w, s.len() as u32)?;
+    Ok(w.write_all(s.as_bytes())?)
+}
+
+/// Check a 4-byte magic header.
+pub fn expect_magic(r: &mut impl Read, magic: &[u8; 4]) -> Result<()> {
+    let got = read_bytes(r, 4)?;
+    if got != magic {
+        bail!(
+            "bad artifact magic: expected {:?}, got {:?}",
+            String::from_utf8_lossy(magic),
+            String::from_utf8_lossy(&got)
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut buf = Vec::new();
+        write_u32(&mut buf, 0xDEAD_BEEF).unwrap();
+        write_i32(&mut buf, -42).unwrap();
+        write_f32(&mut buf, 1.5).unwrap();
+        write_string(&mut buf, "hello").unwrap();
+        let mut c = Cursor::new(buf);
+        assert_eq!(read_u32(&mut c).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(read_i32(&mut c).unwrap(), -42);
+        assert_eq!(read_f32(&mut c).unwrap(), 1.5);
+        assert_eq!(read_string(&mut c).unwrap(), "hello");
+    }
+
+    #[test]
+    fn magic_mismatch_errors() {
+        let mut c = Cursor::new(b"XXXX".to_vec());
+        assert!(expect_magic(&mut c, b"SNNW").is_err());
+    }
+
+    #[test]
+    fn short_read_errors() {
+        let mut c = Cursor::new(vec![1u8, 2]);
+        assert!(read_u32(&mut c).is_err());
+    }
+}

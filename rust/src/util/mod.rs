@@ -1,0 +1,18 @@
+//! Offline substrates: PRNG, property-based testing, bench harness, CLI.
+//!
+//! The build environment has no network access and only the crates vendored
+//! by the xla example (`xla`, `anyhow`, …), so the usual ecosystem pieces
+//! (`rand`, `proptest`, `criterion`, `clap`) are re-implemented here at the
+//! scale this project needs.
+
+pub mod bench;
+pub mod cli;
+pub mod io;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+
+pub use bench::{BenchRunner, Measurement};
+pub use cli::Args;
+pub use propcheck::{run_prop, Gen};
+pub use rng::Rng;

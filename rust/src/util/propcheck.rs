@@ -1,0 +1,166 @@
+//! Minimal property-based testing framework (`proptest` is unavailable
+//! offline).
+//!
+//! A property is a closure over a [`Gen`]; [`run_prop`] executes it for a
+//! configurable number of cases with independent deterministic seeds and,
+//! on failure, reports the failing seed so the case can be replayed by
+//! setting `SCSNN_PROP_SEED`.
+
+use super::rng::Rng;
+
+/// Case-local generator handed to each property execution.
+///
+/// Thin wrapper over [`Rng`] with a few combinators for shaped data.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint that grows over the run, so early cases are small (easier
+    /// to debug) and later cases stress larger shapes.
+    pub size: usize,
+}
+
+impl Gen {
+    /// Underlying RNG access for anything not covered by the combinators.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// usize in `[lo, hi)`.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    /// i64 in `[lo, hi]`.
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_i64(lo, hi)
+    }
+
+    /// i8 across its full domain.
+    pub fn i8(&mut self) -> i8 {
+        self.rng.range_i64(i8::MIN as i64, i8::MAX as i64) as i8
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Vector of `n` elements from `f`.
+    pub fn vec<T>(&mut self, n: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// A sparse i8 vector with approximately `density` nonzeros — the shape
+    /// of data this project cares about most (pruned weights, spike maps).
+    pub fn sparse_i8(&mut self, n: usize, density: f64) -> Vec<i8> {
+        (0..n)
+            .map(|_| {
+                if self.rng.chance(density) {
+                    // nonzero value in [-128, 127] \ {0}
+                    loop {
+                        let v = self.i8();
+                        if v != 0 {
+                            break v;
+                        }
+                    }
+                } else {
+                    0
+                }
+            })
+            .collect()
+    }
+
+    /// A binary spike vector with firing probability `p`.
+    pub fn spikes(&mut self, n: usize, p: f64) -> Vec<u8> {
+        (0..n).map(|_| u8::from(self.rng.chance(p))).collect()
+    }
+}
+
+/// Number of cases per property; override with `SCSNN_PROP_CASES`.
+fn default_cases() -> u64 {
+    std::env::var("SCSNN_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` for many deterministic cases.
+///
+/// `name` is included in the panic message together with the failing seed;
+/// replay a single case with `SCSNN_PROP_SEED=<seed>`.
+pub fn run_prop(name: &str, mut prop: impl FnMut(&mut Gen)) {
+    if let Ok(seed) = std::env::var("SCSNN_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("SCSNN_PROP_SEED must be u64");
+        let mut g = Gen { rng: Rng::new(seed), size: 64 };
+        prop(&mut g);
+        return;
+    }
+    let cases = default_cases();
+    for case in 0..cases {
+        // Stable per-(property, case) seed: independent of execution order.
+        let seed = fnv1a(name).wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let size = 4 + (case as usize * 96) / cases.max(1) as usize;
+        let mut g = Gen { rng: Rng::new(seed), size };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (replay with \
+                 SCSNN_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// FNV-1a over the property name → base seed.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        run_prop("trivial", |g| {
+            let n = g.usize(0, 10);
+            assert!(n < 10);
+        });
+    }
+
+    #[test]
+    fn sparse_density_roughly_respected() {
+        run_prop("sparse-density", |g| {
+            let v = g.sparse_i8(2000, 0.2);
+            let nz = v.iter().filter(|&&x| x != 0).count();
+            assert!(nz > 200 && nz < 700, "nz={nz}");
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn reports_failing_seed() {
+        run_prop("always-fails", |_| panic!("boom"));
+    }
+
+    #[test]
+    fn size_grows() {
+        let mut sizes = vec![];
+        run_prop("size-probe", |g| sizes.push(g.size));
+        assert!(sizes.first().unwrap() < sizes.last().unwrap());
+    }
+}

@@ -1,0 +1,175 @@
+//! Cross-module integration: golden model ↔ detection stack ↔ coordinator
+//! on synthetic weights (no artifacts needed), plus artifact-format
+//! cross-checks when `make artifacts` has run.
+
+use scsnn::coordinator::pipeline::{DetectionPipeline, HwStatsMode};
+use scsnn::detect::dataset::Dataset;
+use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::weights::ModelWeights;
+use scsnn::runtime::ArtifactPaths;
+
+fn tiny_pipeline(seed: u64) -> DetectionPipeline {
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let mut w = ModelWeights::random(&net, 1.0, seed);
+    w.prune_fine_grained(0.8);
+    DetectionPipeline::from_weights(net, w).unwrap()
+}
+
+#[test]
+fn full_pipeline_on_synthetic_weights() {
+    let mut p = tiny_pipeline(1);
+    p.hw_mode = HwStatsMode::Once;
+    let ds = Dataset::synth(3, p.net.input_w, p.net.input_h, 2);
+    let rep = p.process_dataset(&ds).unwrap();
+    assert_eq!(rep.metrics.frames, 3);
+    let hw = rep.metrics.hw.as_ref().unwrap();
+    // §IV-E shape: weight skipping saves a large latency fraction at 80%
+    // 3×3 pruning.
+    let saving = 1.0 - hw.cycles as f64 / hw.dense_cycles as f64;
+    assert!((0.25..0.75).contains(&saving), "saving={saving}");
+    // Spike-layer input sparsity is high (the paper reports 77.4% on the
+    // trained model; random weights land in a broad but high band).
+    assert!(hw.input_sparsity > 0.3, "sparsity={}", hw.input_sparsity);
+}
+
+#[test]
+fn pipeline_is_deterministic() {
+    let p = tiny_pipeline(3);
+    let ds = Dataset::synth(1, p.net.input_w, p.net.input_h, 4);
+    let a = p.head_acc(&ds.samples[0].image).unwrap();
+    let b = p.head_acc(&ds.samples[0].image).unwrap();
+    assert_eq!(a.data, b.data);
+}
+
+#[test]
+fn trained_weights_artifact_loads_and_validates() {
+    let paths = ArtifactPaths::in_dir(&ArtifactPaths::default_dir());
+    if !paths.weights.exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let w = ModelWeights::load(&paths.weights).unwrap();
+    w.validate_against(&net).unwrap();
+    // The paper's pruning policy: 3×3 layers sparse, 1×1 layers dense.
+    let enc = w.get("enc").unwrap();
+    assert!(enc.density() < 0.45, "enc density {}", enc.density());
+    let short = w.get("b1.short").unwrap();
+    assert!(short.density() > 0.5, "1x1 density {}", short.density());
+    // Whole-model weight reduction ≈ the paper's 70%.
+    assert!(w.density() < 0.55, "model density {}", w.density());
+}
+
+#[test]
+fn trained_dataset_artifact_loads() {
+    let paths = ArtifactPaths::in_dir(&ArtifactPaths::default_dir());
+    if !paths.dataset_test.exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let ds = Dataset::load(&paths.dataset_test).unwrap();
+    assert!(!ds.samples.is_empty());
+    let s = &ds.samples[0];
+    assert_eq!((s.image.c, s.image.h, s.image.w), (3, 192, 320));
+    assert!(!s.boxes.is_empty());
+}
+
+#[test]
+fn golden_pipeline_detects_on_trained_weights() {
+    let dir = ArtifactPaths::default_dir();
+    let paths = ArtifactPaths::in_dir(&dir);
+    if !paths.weights.exists() || !paths.dataset_test.exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut p = DetectionPipeline::from_artifacts(&dir, false).unwrap();
+    p.hw_mode = HwStatsMode::Off;
+    let mut ds = Dataset::load(&paths.dataset_test).unwrap();
+    ds.samples.truncate(4);
+    let rep = p.process_dataset(&ds).unwrap();
+    assert_eq!(rep.metrics.frames, 4);
+    // mAP is whatever the short training run achieved; just bounds.
+    assert!((0.0..=1.0).contains(&rep.map));
+}
+
+// ---- failure injection ---------------------------------------------------
+
+#[test]
+fn truncated_weights_file_is_rejected() {
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let w = ModelWeights::random(&net, 0.5, 21);
+    let dir = std::env::temp_dir().join("scsnn_failinj");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("w.bin");
+    w.save(&p).unwrap();
+    let full = std::fs::read(&p).unwrap();
+    // Chop the file at several points: every prefix must error, not panic.
+    for frac in [0.1, 0.5, 0.9, 0.999] {
+        let cut = (full.len() as f64 * frac) as usize;
+        std::fs::write(&p, &full[..cut]).unwrap();
+        assert!(ModelWeights::load(&p).is_err(), "prefix {frac} accepted");
+    }
+}
+
+#[test]
+fn corrupted_dataset_header_is_rejected() {
+    let ds = Dataset::synth(1, 32, 32, 22);
+    let dir = std::env::temp_dir().join("scsnn_failinj");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("d.bin");
+    ds.save(&p).unwrap();
+    let mut bytes = std::fs::read(&p).unwrap();
+    // Claim an absurd image size.
+    bytes[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+    std::fs::write(&p, &bytes).unwrap();
+    assert!(Dataset::load(&p).is_err());
+}
+
+#[test]
+fn pipeline_rejects_weights_for_wrong_topology() {
+    let net3 = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let net4 = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::C2(4));
+    // Same shapes across T configs → weights fit; but a *full*-scale net
+    // must be rejected outright.
+    let w = ModelWeights::random(&net3, 0.5, 23);
+    let full = NetworkSpec::paper(Scale::Full, TimeStepConfig::PAPER);
+    assert!(DetectionPipeline::from_weights(full, w.clone()).is_err());
+    // T-config change keeps shapes: accepted (the Fig 14/SNN-4T protocol).
+    assert!(DetectionPipeline::from_weights(net4, w).is_ok());
+}
+
+#[test]
+fn controller_rejects_overlimit_layer() {
+    use scsnn::accel::controller::SystemController;
+    use scsnn::config::AccelConfig;
+    use scsnn::model::topology::{ConvKind, ConvSpec};
+    // 513 input channels exceeds the §III-D register limit.
+    let spec = ConvSpec {
+        name: "bad".into(),
+        kind: ConvKind::Spike,
+        c_in: 513,
+        c_out: 8,
+        k: 3,
+        in_t: 1,
+        out_t: 1,
+        maxpool_after: false,
+        in_w: 32,
+        in_h: 18,
+        concat_with: None,
+        input_from: None,
+    };
+    let small = NetworkSpec {
+        name: "t".into(),
+        input_w: 32,
+        input_h: 18,
+        input_c: 513,
+        layers: vec![spec.clone()],
+        num_anchors: 5,
+        num_classes: 3,
+    };
+    let w = ModelWeights::random(&small, 0.5, 24);
+    let lw = w.get("bad").unwrap();
+    let inputs = vec![scsnn::tensor::Tensor::zeros(513, 18, 32)];
+    let mut ctrl = SystemController::new(AccelConfig::paper());
+    assert!(ctrl.run_layer(&spec, lw, &inputs).is_err());
+}

@@ -1,0 +1,75 @@
+//! The AOT contract test: the HLO-text artifact, executed through the rust
+//! PJRT runtime, must match (a) the python-side cross-check vector and
+//! (b) the rust functional golden model, bit for bit.
+//!
+//! Needs `make artifacts`; skips with a message otherwise (the python jit
+//! and the golden model are pinned against each other regardless).
+
+use scsnn::detect::dataset::Dataset;
+use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::weights::ModelWeights;
+use scsnn::ref_impl::{ForwardOptions, SnnForward};
+use scsnn::runtime::{ArtifactPaths, SnnExecutable};
+
+fn artifacts() -> Option<ArtifactPaths> {
+    let paths = ArtifactPaths::in_dir(&ArtifactPaths::default_dir());
+    if paths.available() && paths.dataset_test.exists() {
+        Some(paths)
+    } else {
+        eprintln!("skipping runtime roundtrip: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn pjrt_matches_python_selfcheck_and_golden_model() {
+    let Some(paths) = artifacts() else { return };
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let (gw, gh) = net.grid();
+    let head_c = net.layers.last().unwrap().c_out;
+
+    let exe = SnnExecutable::load(
+        &paths.model_hlo,
+        (net.input_c, net.input_h, net.input_w),
+        (head_c, gh, gw),
+    )
+    .expect("compile HLO artifact");
+    assert_eq!(exe.platform().to_lowercase(), "cpu");
+
+    let ds = Dataset::load(&paths.dataset_test).unwrap();
+    let img0 = &ds.samples[0].image;
+    let acc = exe.run(img0).expect("execute frame");
+
+    // (a) python cross-check vector (head_acc of test image 0).
+    if paths.selfcheck.exists() {
+        let bytes = std::fs::read(&paths.selfcheck).unwrap();
+        assert_eq!(bytes.len(), acc.data.len() * 4, "selfcheck size");
+        let want: Vec<i32> = bytes
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        assert_eq!(acc.data, want, "PJRT output != python jit output");
+    }
+
+    // (b) rust golden model (whole-image conv mode — the exported graph).
+    let weights = ModelWeights::load(&paths.weights).unwrap();
+    let fwd = SnnForward::new(
+        &net,
+        &weights,
+        ForwardOptions { block_tile: None, record_spikes: false },
+    )
+    .unwrap();
+    let golden = fwd.run(img0).unwrap();
+    assert_eq!(
+        acc.data, golden.head_acc.data,
+        "PJRT output != rust golden model (quantization contract broken)"
+    );
+}
+
+#[test]
+fn pjrt_rejects_wrong_input_shape() {
+    let Some(paths) = artifacts() else { return };
+    let exe = SnnExecutable::load(&paths.model_hlo, (3, 192, 320), (40, 6, 10)).unwrap();
+    let bad = scsnn::tensor::Tensor::zeros(3, 10, 10);
+    assert!(exe.run(&bad).is_err());
+}

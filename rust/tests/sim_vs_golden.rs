@@ -1,0 +1,144 @@
+//! The simulator correctness contract: the cycle-level system controller
+//! must be **bit-exact** with the functional golden model for every layer
+//! shape the network uses — including the CSP wiring, mixed time steps,
+//! bit-serial encoding, pooling and the no-reset head — and its cycle
+//! counts must agree with the analytic latency model.
+
+use scsnn::accel::controller::SystemController;
+use scsnn::accel::latency::LatencyModel;
+use scsnn::config::AccelConfig;
+use scsnn::model::topology::{ConvKind, NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::weights::ModelWeights;
+use scsnn::ref_impl::{ForwardOptions, SnnForward};
+use scsnn::tensor::Tensor;
+use scsnn::util::Rng;
+
+fn random_image(net: &NetworkSpec, seed: u64) -> Tensor<u8> {
+    let mut rng = Rng::new(seed);
+    let n = net.input_c * net.input_h * net.input_w;
+    Tensor::from_vec(
+        net.input_c,
+        net.input_h,
+        net.input_w,
+        (0..n).map(|_| rng.next_u32() as u8).collect(),
+    )
+}
+
+/// Run the whole network through the executing controller, chaining layer
+/// outputs exactly as the coordinator does.
+fn run_through_controller(
+    net: &NetworkSpec,
+    weights: &ModelWeights,
+    cfg: AccelConfig,
+    img: &Tensor<u8>,
+) -> (Tensor<i32>, u64, u64) {
+    let mut ctrl = SystemController::new(cfg);
+    let mut outputs: std::collections::BTreeMap<String, Vec<Tensor<u8>>> = Default::default();
+    let mut prev: Option<String> = None;
+    let mut head = None;
+    let mut cycles = 0;
+    let mut dense_cycles = 0;
+    for l in &net.layers {
+        let lw = weights.get(&l.name).unwrap();
+        let inputs: Vec<Tensor<u8>> = if l.kind == ConvKind::Encoding {
+            vec![img.clone(); l.in_t]
+        } else {
+            let main = l.input_from.clone().or_else(|| prev.clone()).unwrap();
+            let main_steps = &outputs[&main];
+            match l.concat_with.as_deref() {
+                None => main_steps.clone(),
+                Some(o) => main_steps
+                    .iter()
+                    .zip(&outputs[o])
+                    .map(|(a, b)| {
+                        let mut d = a.data.clone();
+                        d.extend_from_slice(&b.data);
+                        Tensor::from_vec(a.c + b.c, a.h, a.w, d)
+                    })
+                    .collect(),
+            }
+        };
+        let run = ctrl.run_layer(l, lw, &inputs).unwrap();
+        cycles += run.cycles;
+        dense_cycles += run.dense_cycles;
+        if l.kind == ConvKind::Output {
+            head = run.head_acc;
+        } else {
+            outputs.insert(l.name.clone(), run.output);
+        }
+        prev = Some(l.name.clone());
+    }
+    (head.unwrap(), cycles, dense_cycles)
+}
+
+#[test]
+fn controller_bit_exact_with_golden_model_tiny_network() {
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let mut weights = ModelWeights::random(&net, 1.0, 11);
+    weights.prune_fine_grained(0.8);
+    let img = random_image(&net, 12);
+    let cfg = AccelConfig::paper();
+
+    let golden = SnnForward::new(
+        &net,
+        &weights,
+        ForwardOptions { block_tile: Some((cfg.tile_w, cfg.tile_h)), record_spikes: false },
+    )
+    .unwrap()
+    .run(&img)
+    .unwrap();
+
+    let (head, cycles, dense) = run_through_controller(&net, &weights, cfg.clone(), &img);
+    assert_eq!(head.data, golden.head_acc.data, "controller != golden model");
+
+    // Cycle counts agree with the analytic model.
+    let lat = LatencyModel::new(cfg).network(&net, &weights);
+    assert_eq!(cycles, lat.sparse_cycles());
+    assert_eq!(dense, lat.dense_cycles());
+}
+
+#[test]
+fn controller_matches_golden_on_uniform_time_steps() {
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::Uniform(2));
+    let mut weights = ModelWeights::random(&net, 1.0, 13);
+    weights.prune_fine_grained(0.5);
+    let img = random_image(&net, 14);
+    let cfg = AccelConfig::paper();
+    let golden = SnnForward::new(
+        &net,
+        &weights,
+        ForwardOptions { block_tile: Some((cfg.tile_w, cfg.tile_h)), record_spikes: false },
+    )
+    .unwrap()
+    .run(&img)
+    .unwrap();
+    let (head, _, _) = run_through_controller(&net, &weights, cfg, &img);
+    assert_eq!(head.data, golden.head_acc.data);
+}
+
+#[test]
+fn controller_matches_golden_with_trained_weights_if_available() {
+    let paths =
+        scsnn::runtime::ArtifactPaths::in_dir(&scsnn::runtime::ArtifactPaths::default_dir());
+    if !paths.weights.exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let weights = ModelWeights::load(&paths.weights).unwrap();
+    let img = random_image(&net, 15);
+    let cfg = AccelConfig::paper();
+    let golden = SnnForward::new(
+        &net,
+        &weights,
+        ForwardOptions { block_tile: Some((cfg.tile_w, cfg.tile_h)), record_spikes: false },
+    )
+    .unwrap()
+    .run(&img)
+    .unwrap();
+    let (head, cycles, dense) = run_through_controller(&net, &weights, cfg, &img);
+    assert_eq!(head.data, golden.head_acc.data);
+    // Trained+pruned weights must show the paper-scale latency saving.
+    let saving = 1.0 - cycles as f64 / dense as f64;
+    assert!((0.25..0.75).contains(&saving), "saving={saving}");
+}
