@@ -1,0 +1,38 @@
+# Top-level driver: python build path (one-shot) + rust request path.
+
+ARTIFACTS ?= artifacts
+CARGO ?= cargo
+PY ?= python3
+
+.PHONY: all build test bench artifacts artifacts-quick fmt clippy clean
+
+all: build
+
+# Tier-1 verification target.
+build:
+	cd rust && $(CARGO) build --release
+
+test:
+	cd rust && $(CARGO) test -q
+
+fmt:
+	cd rust && $(CARGO) fmt --check
+
+clippy:
+	cd rust && $(CARGO) clippy -- -D warnings
+
+# Paper figure/table reproductions (see README.md for the bench → figure map).
+bench:
+	cd rust && $(CARGO) bench
+
+# One-shot python build path: datasets + training + quantized weights +
+# AOT HLO artifact + metrics.json. Requires jax (see python/).
+artifacts:
+	cd python && $(PY) -m compile.aot --out-dir ../$(ARTIFACTS)
+
+# Much faster smoke version of the artifact build (short training).
+artifacts-quick:
+	cd python && $(PY) -m compile.aot --out-dir ../$(ARTIFACTS) --quick
+
+clean:
+	cd rust && $(CARGO) clean

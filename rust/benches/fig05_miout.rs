@@ -40,7 +40,8 @@ fn main() {
                 .entry(name.clone())
                 .or_insert_with(|| MioutAccumulator::new(maps[0].c, maps[0].h, maps[0].w));
             for m in maps {
-                acc.push(m);
+                // Compressed recording: only fired neurons are visited.
+                acc.push_map(m);
             }
         }
     }

@@ -4,33 +4,43 @@
 //! cycle-level controller on a realistic layer, the functional golden
 //! model (drives all accuracy experiments), the analytic models (drive
 //! all design-space sweeps), and the detection post-processing.
+//!
+//! Includes the **dense vs compressed activation sweep**: the golden-model
+//! block convolution executed densely (`block_conv2d`) and event-driven
+//! over the compressed representation (`block_conv2d_events`) at 10/50/90/
+//! 99% activation sparsity. Results are written to `BENCH_spikeplane.json`
+//! so the perf trajectory of the spike-plane data path is tracked from
+//! this change on. Acceptance floor: ≥2× at ≥90% sparsity.
 
-use scsnn::accel::controller::SystemController;
+use scsnn::accel::controller::{LayerInput, SystemController};
 use scsnn::accel::latency::LatencyModel;
 use scsnn::accel::one_to_all::GatedOneToAll;
 use scsnn::accel::pe::PeArray;
 use scsnn::config::AccelConfig;
+use scsnn::detect::dataset::Dataset;
 use scsnn::detect::nms::nms;
 use scsnn::detect::yolo::{decode, YoloHead};
-use scsnn::detect::dataset::Dataset;
 use scsnn::model::topology::{ConvKind, ConvSpec, NetworkSpec, Scale, TimeStepConfig};
 use scsnn::model::weights::ModelWeights;
-use scsnn::ref_impl::{block_conv2d, ForwardOptions, SnnForward};
-use scsnn::sparse::BitMaskKernel;
+use scsnn::ref_impl::{block_conv2d, block_conv2d_events, ForwardOptions, SnnForward};
+use scsnn::sparse::{BitMaskKernel, SpikeMap, SpikePlane};
 use scsnn::tensor::Tensor;
+use scsnn::util::json::Json;
 use scsnn::util::{BenchRunner, Rng};
+use std::collections::BTreeMap;
 
 fn main() {
     let mut r = BenchRunner::new("perf_hotpath");
     let mut rng = Rng::new(1);
 
     // --- L3 PE array: the gated one-to-all inner loop --------------------
-    let tile = Tensor::from_vec(
+    let tile_dense = Tensor::from_vec(
         1,
         18,
         32,
         (0..576).map(|_| u8::from(rng.chance(0.25))).collect(),
     );
+    let tile = SpikePlane::from_dense(tile_dense.channel(0), 18, 32);
     let plane: Vec<i8> = (0..9).map(|_| if rng.chance(0.2) { 3 } else { 0 }).collect();
     let bm = BitMaskKernel::from_dense(&plane, 3, 3);
     let mut pe = PeArray::new(18, 32);
@@ -75,12 +85,78 @@ fn main() {
     r.bench_throughput("block_conv_16c_48x80_pruned", macs, || {
         std::hint::black_box(block_conv2d(&input, &lw.w, &lw.bias, 32, 18));
     });
+    let input_map = SpikeMap::from_dense(&input);
+    r.bench_throughput("block_conv_events_16c_48x80_pruned", macs, || {
+        std::hint::black_box(block_conv2d_events(&input_map, &lw.w, &lw.bias, 32, 18));
+    });
+
+    // --- dense vs compressed activation sweep ------------------------------
+    // The golden-model conv (block conv, paper tile) on the same layer at
+    // several activation sparsities. Written to BENCH_spikeplane.json.
+    r.section("dense vs compressed activation sweep (block conv 16c 48x80, 80% pruned weights)");
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    for sparsity in [0.10f64, 0.50, 0.90, 0.99] {
+        let density = 1.0 - sparsity;
+        let stim = Tensor::from_vec(
+            16,
+            48,
+            80,
+            (0..16 * 48 * 80).map(|_| u8::from(rng.chance(density))).collect(),
+        );
+        let stim_map = SpikeMap::from_dense(&stim);
+        let label = format!("{:.0}", sparsity * 100.0);
+        let dense_m = r
+            .bench_throughput(&format!("conv_dense_s{label}"), macs, || {
+                std::hint::black_box(block_conv2d(&stim, &lw.w, &lw.bias, 32, 18));
+            })
+            .clone();
+        let events_m = r
+            .bench_throughput(&format!("conv_events_s{label}"), macs, || {
+                std::hint::black_box(block_conv2d_events(&stim_map, &lw.w, &lw.bias, 32, 18));
+            })
+            .clone();
+        let speedup = dense_m.median.as_secs_f64() / events_m.median.as_secs_f64();
+        r.report_row(&format!(
+            "sparsity {:>4.0}% | dense {:>10.3?} | events {:>10.3?} | speedup {speedup:>5.2}x",
+            sparsity * 100.0,
+            dense_m.median,
+            events_m.median
+        ));
+        let mut row = BTreeMap::new();
+        row.insert("activation_sparsity".to_string(), Json::Num(sparsity));
+        row.insert(
+            "dense_ns".to_string(),
+            Json::Num(dense_m.median.as_secs_f64() * 1e9),
+        );
+        row.insert(
+            "events_ns".to_string(),
+            Json::Num(events_m.median.as_secs_f64() * 1e9),
+        );
+        row.insert("speedup".to_string(), Json::Num(speedup));
+        sweep_rows.push(Json::Obj(row));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("perf_hotpath/spikeplane".to_string()));
+    doc.insert(
+        "workload".to_string(),
+        Json::Str("block_conv 16c 48x80, 3x3, 80% pruned, tile 32x18".to_string()),
+    );
+    doc.insert("target_speedup_at_90pct".to_string(), Json::Num(2.0));
+    doc.insert("sweep".to_string(), Json::Arr(sweep_rows));
+    let json_path = "BENCH_spikeplane.json";
+    match std::fs::write(json_path, Json::Obj(doc).to_string_compact()) {
+        Ok(()) => r.report_row(&format!("wrote {json_path}")),
+        Err(e) => r.report_row(&format!("could not write {json_path}: {e}")),
+    }
 
     // --- cycle-level controller on the same layer -------------------------
     let mut ctrl = SystemController::new(AccelConfig::paper());
     let spec = &net_for_w.layers[0];
     r.bench("controller_layer_16c_48x80", || {
-        std::hint::black_box(ctrl.run_layer(spec, lw, std::slice::from_ref(&input)).unwrap().cycles);
+        let run = ctrl
+            .run_layer(spec, lw, LayerInput::Spikes(std::slice::from_ref(&input_map)))
+            .unwrap();
+        std::hint::black_box(run.cycles);
     });
 
     // --- whole tiny-network golden forward --------------------------------

@@ -11,6 +11,17 @@
 //!       LIF update → (optional OR max-pool) → output write (reordered)
 //! ```
 //!
+//! Activations flow **compressed** end-to-end: spike layers consume
+//! [`SpikeMap`]s (word-packed bitmaps — the Input SRAM content), the
+//! encoding layer's multibit pixels are bit-sliced into 8 spike maps (the
+//! bit-serial datapath of §III-B), and the LIF/MaxPool units emit
+//! compressed tiles that are pasted into compressed layer outputs. Silent
+//! windows and channels therefore cost O(popcount) of *simulation* work
+//! instead of dense scans — while the **modeled** cycle counts are
+//! untouched (the hardware gates clocks on zero activations, it never
+//! skips the cycle), so the cycle accounting stays exactly in lock-step
+//! with the analytic [`super::latency::LatencyModel`].
+//!
 //! When `in_t == 1 < out_t` the convolution is computed once and its
 //! partial sums are replayed into the LIF for every output step (§II-A).
 //! The controller is **bit-exact** against the functional golden model
@@ -25,7 +36,7 @@ use crate::config::AccelConfig;
 use crate::model::lif::LifParams;
 use crate::model::topology::{ConvKind, ConvSpec};
 use crate::model::weights::LayerWeights;
-use crate::sparse::BitMaskKernel;
+use crate::sparse::{BitMaskKernel, SpikeMap, SpikePlane};
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 
@@ -47,6 +58,26 @@ impl Default for CycleCosts {
     }
 }
 
+/// One layer's stimulus, in the representation the datapath uses.
+#[derive(Clone, Copy, Debug)]
+pub enum LayerInput<'a> {
+    /// Multibit pixel frames for the encoding layer — bit-sliced into 8
+    /// spike planes internally (the §III-B bit-serial path).
+    Pixels(&'a [Tensor<u8>]),
+    /// Compressed binary spike maps, one per input time step.
+    Spikes(&'a [SpikeMap]),
+}
+
+impl<'a> LayerInput<'a> {
+    /// Number of input time steps.
+    pub fn steps(&self) -> usize {
+        match self {
+            LayerInput::Pixels(f) => f.len(),
+            LayerInput::Spikes(m) => m.len(),
+        }
+    }
+}
+
 /// Execution record of one layer.
 #[derive(Clone, Debug)]
 pub struct LayerRun {
@@ -62,8 +93,8 @@ pub struct LayerRun {
     pub spikes_out: u64,
     /// SRAM access counters (input, output, weight-map, nz-weight).
     pub sram: [SramBank; 4],
-    /// Output spike maps per time step (hidden layers).
-    pub output: Vec<Tensor<u8>>,
+    /// Compressed output spike maps per time step (hidden layers).
+    pub output: Vec<SpikeMap>,
     /// Head accumulator (output layer only): sum over time steps.
     pub head_acc: Option<Tensor<i32>>,
 }
@@ -97,13 +128,14 @@ impl SystemController {
         &self.cfg
     }
 
-    /// Execute one layer on `inputs` (one spike/pixel map per input time
-    /// step; pixel maps carry 8-bit values for the encoding layer).
+    /// Execute one layer on its stimulus: compressed spike maps for spike
+    /// and head layers, multibit pixel frames for the encoding layer (one
+    /// per input time step either way).
     pub fn run_layer(
         &mut self,
         spec: &ConvSpec,
         lw: &LayerWeights,
-        inputs: &[Tensor<u8>],
+        input: LayerInput<'_>,
     ) -> Result<LayerRun> {
         // ---- Program the configuration registers (§III-D) -------------
         self.regs.reset();
@@ -120,19 +152,51 @@ impl SystemController {
             maxpool: spec.maxpool_after,
             encoding: spec.kind == ConvKind::Encoding,
         })?;
-        if inputs.len() != spec.in_t {
-            bail!("layer {}: got {} input steps, want {}", spec.name, inputs.len(), spec.in_t);
+        if input.steps() != spec.in_t {
+            bail!("layer {}: got {} input steps, want {}", spec.name, input.steps(), spec.in_t);
         }
-        for inp in inputs {
-            if inp.c != spec.c_in || inp.h != spec.in_h || inp.w != spec.in_w {
-                bail!("layer {}: input shape mismatch", spec.name);
+        match (&input, spec.kind) {
+            (LayerInput::Pixels(frames), ConvKind::Encoding) => {
+                for f in *frames {
+                    if f.c != spec.c_in || f.h != spec.in_h || f.w != spec.in_w {
+                        bail!("layer {}: input shape mismatch", spec.name);
+                    }
+                }
+            }
+            (LayerInput::Spikes(maps), ConvKind::Spike | ConvKind::Output) => {
+                for m in *maps {
+                    if m.c != spec.c_in || m.h != spec.in_h || m.w != spec.in_w {
+                        bail!("layer {}: input shape mismatch", spec.name);
+                    }
+                }
+            }
+            (LayerInput::Pixels(_), _) => {
+                bail!("layer {}: pixel stimulus on a non-encoding layer", spec.name)
+            }
+            (LayerInput::Spikes(_), _) => {
+                bail!("layer {}: encoding layer wants pixel stimulus", spec.name)
             }
         }
 
         // ---- Compress weights into the on-chip format ------------------
         // (One plane per (k, c); resident in Weight Map / NZ Weight SRAM.)
         let planes: Vec<BitMaskKernel> = crate::sparse::bitmask::compress_kernel4(&lw.w);
-        let bit_planes = if spec.kind == ConvKind::Encoding { 8u32 } else { 1 };
+
+        // ---- Bit-slice the stimulus into spike planes ------------------
+        // Encoding: 8 bit planes per step (owned); spike layers: the
+        // compressed maps themselves (borrowed).
+        let owned_bits: Vec<Vec<SpikeMap>> = match &input {
+            LayerInput::Pixels(frames) => {
+                frames.iter().map(SpikeMap::bit_slice).collect()
+            }
+            LayerInput::Spikes(_) => Vec::new(),
+        };
+        let step_maps: Vec<Vec<&SpikeMap>> = match &input {
+            LayerInput::Pixels(_) => {
+                owned_bits.iter().map(|bits| bits.iter().collect()).collect()
+            }
+            LayerInput::Spikes(maps) => maps.iter().map(|m| vec![m]).collect(),
+        };
 
         let mut run = LayerRun {
             cycles: 0,
@@ -147,7 +211,7 @@ impl SystemController {
                 SramBank::new(SramKind::NzWeight, self.cfg.nz_weight_sram_bytes),
             ],
             output: (0..spec.out_t)
-                .map(|_| Tensor::zeros(spec.c_out, spec.out_h(), spec.out_w()))
+                .map(|_| SpikeMap::zeros(spec.c_out, spec.out_h(), spec.out_w()))
                 .collect(),
             head_acc: if spec.kind == ConvKind::Output {
                 Some(Tensor::zeros(spec.c_out, spec.in_h, spec.in_w))
@@ -171,7 +235,7 @@ impl SystemController {
                 let ctw = tw.min(spec.in_w - x0);
                 run.cycles += self.costs.tile_setup;
                 run.dense_cycles += self.costs.tile_setup;
-                self.run_tile(spec, lw, inputs, &planes, bit_planes, conv_t, (y0, x0, cth, ctw), &mut run);
+                self.run_tile(spec, lw, &step_maps, &planes, conv_t, (y0, x0, cth, ctw), &mut run);
                 x0 += ctw;
             }
             y0 += cth;
@@ -185,9 +249,8 @@ impl SystemController {
         &self,
         spec: &ConvSpec,
         lw: &LayerWeights,
-        inputs: &[Tensor<u8>],
+        step_maps: &[Vec<&SpikeMap>],
         planes: &[BitMaskKernel],
-        bit_planes: u32,
         conv_t: usize,
         tile: (usize, usize, usize, usize),
         run: &mut LayerRun,
@@ -199,21 +262,19 @@ impl SystemController {
         let dense_plane_cycles = (spec.k * spec.k) as u64;
         let eff_out_t = if spec.kind == ConvKind::Output { spec.in_t } else { spec.out_t };
 
-        // Pre-extract per-(t, c) input channel tiles once per tile — the
-        // hardware equivalent is the Input SRAM holding the sub-tile.
-        // (Indexing: tiles_in[t][c].)
-        let tiles_in: Vec<Vec<Tensor<u8>>> = inputs
+        // Pre-extract per-(t, b, c) compressed input tiles once per spatial
+        // tile — the hardware equivalent is the Input SRAM holding the
+        // sub-tile bitmap. Word-level extraction, no dense copies.
+        // (Indexing: tiles_in[t][b][c].)
+        let tiles_in: Vec<Vec<Vec<SpikePlane>>> = step_maps
             .iter()
-            .map(|inp| {
-                (0..spec.c_in)
-                    .map(|c| {
-                        let mut t = Tensor::zeros(1, cth, ctw);
-                        for y in 0..cth {
-                            for x in 0..ctw {
-                                t.set(0, y, x, inp.get(c, y0 + y, x0 + x));
-                            }
-                        }
-                        t
+            .map(|bit_maps| {
+                bit_maps
+                    .iter()
+                    .map(|m| {
+                        (0..spec.c_in)
+                            .map(|c| m.plane(c).extract_tile(y0, x0, cth, ctw))
+                            .collect()
                     })
                     .collect()
             })
@@ -227,8 +288,8 @@ impl SystemController {
                 let acc: Vec<i16> = if t < conv_t {
                     // Per-channel bias preloads the partial-sum registers.
                     pe.preload(lw.bias[k]);
-                    for b in 0..bit_planes {
-                        for c in 0..spec.c_in {
+                    for (b, bit_tiles) in tiles_in[t].iter().enumerate() {
+                        for (c, tile_in) in bit_tiles.iter().enumerate() {
                             // Input-channel switch: all 4 banks read.
                             run.sram[0].read(self.cfg.io_banks as u64);
                             run.cycles += self.costs.input_switch;
@@ -239,13 +300,8 @@ impl SystemController {
                             run.sram[2].read(1);
                             run.sram[3].read(pl.nnz() as u64);
 
-                            let tile_in = if bit_planes > 1 {
-                                // Encoding layer: extract bit plane b.
-                                bit_plane(&tiles_in[t][c], b)
-                            } else {
-                                tiles_in[t][c].clone()
-                            };
-                            let cycles = GatedOneToAll::new(&tile_in).run(pl, &mut pe, b);
+                            let cycles =
+                                GatedOneToAll::new(tile_in).run(pl, &mut pe, b as u32);
                             run.cycles += cycles;
                             run.dense_cycles += dense_plane_cycles;
                         }
@@ -277,12 +333,14 @@ impl SystemController {
                     _ => {
                         let spike_tile = lif.step(p, &acc, 0);
                         run.sram[1].write(self.cfg.io_banks as u64);
-                        // Optional fused OR max pool, then reordered write.
+                        // Optional fused OR max pool, then reordered write —
+                        // the compressed tile is pasted straight into the
+                        // compressed layer output.
                         if spec.maxpool_after {
-                            let pooled = crate::ref_impl::maxpool2x2_or(&spike_tile);
-                            paste(&mut run.output[t], k, y0 / 2, x0 / 2, &pooled);
+                            let pooled = spike_tile.maxpool2x2_or();
+                            run.output[t].paste(k, y0 / 2, x0 / 2, &pooled);
                         } else {
-                            paste(&mut run.output[t], k, y0, x0, &spike_tile);
+                            run.output[t].paste(k, y0, x0, &spike_tile);
                         }
                     }
                 }
@@ -296,39 +354,34 @@ impl SystemController {
     }
 }
 
-/// Extract bit plane `b` of a multibit tile as a binary spike tile.
-fn bit_plane(tile: &Tensor<u8>, b: u32) -> Tensor<u8> {
-    let mut out = Tensor::zeros(tile.c, tile.h, tile.w);
-    for (o, &v) in out.data.iter_mut().zip(&tile.data) {
-        *o = (v >> b) & 1;
-    }
-    out
-}
-
-/// Paste a `(1, h, w)` tile into channel `k` of `dst` at `(y0, x0)`.
-fn paste(dst: &mut Tensor<u8>, k: usize, y0: usize, x0: usize, tile: &Tensor<u8>) {
-    for y in 0..tile.h {
-        for x in 0..tile.w {
-            dst.set(k, y0 + y, x0 + x, tile.get(0, y, x));
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::lif::LifState;
     use crate::model::topology::{NetworkSpec, Scale, TimeStepConfig};
     use crate::model::weights::ModelWeights;
-    use crate::model::lif::LifState;
     use crate::ref_impl::block_conv2d;
     use crate::util::Rng;
+
+    fn as_input<'a>(
+        spec: &ConvSpec,
+        dense: &'a [Tensor<u8>],
+        compressed: &'a [SpikeMap],
+    ) -> LayerInput<'a> {
+        if spec.kind == ConvKind::Encoding {
+            LayerInput::Pixels(dense)
+        } else {
+            LayerInput::Spikes(compressed)
+        }
+    }
 
     /// Golden-model comparison: the controller's layer output must equal
     /// block conv + LIF computed functionally.
     fn check_layer_against_ref(spec: &ConvSpec, lw: &LayerWeights, inputs: &[Tensor<u8>]) {
         let cfg = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() };
         let mut ctrl = SystemController::new(cfg.clone());
-        let run = ctrl.run_layer(spec, lw, inputs).unwrap();
+        let compressed: Vec<SpikeMap> = inputs.iter().map(SpikeMap::from_dense).collect();
+        let run = ctrl.run_layer(spec, lw, as_input(spec, inputs, &compressed)).unwrap();
 
         // Functional reference.
         let conv_t = spec.in_t.min(spec.out_t);
@@ -352,17 +405,13 @@ mod tests {
                 let p = LifParams::from_quant(&lw.qp);
                 for t in 0..spec.out_t {
                     let acc = &accs[t.min(accs.len() - 1)];
-                    // Reference biases are folded into block_conv2d (which
-                    // already adds bias), so subtract the double count:
-                    // controller injects bias at LIF; reference conv added
-                    // it inside the accumulator. Same value either way.
                     let mut spikes = vec![0u8; n];
                     lif.step(p, &acc.data, &mut spikes);
                     let mut sp = Tensor::from_vec(spec.c_out, spec.in_h, spec.in_w, spikes);
                     if spec.maxpool_after {
                         sp = crate::ref_impl::maxpool2x2_or(&sp);
                     }
-                    assert_eq!(run.output[t].data, sp.data, "time step {t}");
+                    assert_eq!(run.output[t].to_dense().data, sp.data, "time step {t}");
                 }
             }
         }
@@ -448,7 +497,8 @@ mod tests {
         spec.c_in = 3;
         let lw = test_weights(&spec, 7, 1.0);
         let inputs = random_inputs(&spec, 8, true);
-        // Bit-serial accumulation must equal direct multibit convolution.
+        // Bit-serial accumulation over the sliced spike planes must equal
+        // direct multibit convolution.
         check_layer_against_ref(&spec, &lw, &inputs);
     }
 
@@ -478,9 +528,11 @@ mod tests {
                 *v = 0;
             }
         }
-        let inputs = random_inputs(&spec, 13, false);
-        let mut ctrl = SystemController::new(AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() });
-        let run = ctrl.run_layer(&spec, &lw, &inputs).unwrap();
+        let inputs: Vec<SpikeMap> =
+            random_inputs(&spec, 13, false).iter().map(SpikeMap::from_dense).collect();
+        let mut ctrl =
+            SystemController::new(AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() });
+        let run = ctrl.run_layer(&spec, &lw, LayerInput::Spikes(&inputs)).unwrap();
         let saving = run.latency_saving();
         assert!((0.3..0.9).contains(&saving), "saving={saving}");
     }
@@ -492,16 +544,39 @@ mod tests {
         // Very sparse inputs → high gated fraction.
         let mut rng = Rng::new(15);
         let n = spec.c_in * spec.in_h * spec.in_w;
-        let inputs = vec![Tensor::from_vec(
+        let inputs = vec![SpikeMap::from_dense(&Tensor::from_vec(
             spec.c_in,
             spec.in_h,
             spec.in_w,
             (0..n).map(|_| u8::from(rng.chance(0.1))).collect(),
-        )];
-        let mut ctrl = SystemController::new(AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() });
-        let run = ctrl.run_layer(&spec, &lw, &inputs).unwrap();
+        ))];
+        let mut ctrl =
+            SystemController::new(AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() });
+        let run = ctrl.run_layer(&spec, &lw, LayerInput::Spikes(&inputs)).unwrap();
         let gf = run.gating.gated_fraction();
         assert!(gf > 0.8, "gated fraction={gf}");
+    }
+
+    #[test]
+    fn all_zero_stimulus_fast_path_is_cycle_exact() {
+        // A silent stimulus takes the O(popcount) fast path everywhere but
+        // must report exactly the same cycle count as a dense one — the
+        // hardware never stalls on gated PEs.
+        let spec = test_spec(ConvKind::Spike, 1, 1, false);
+        let lw = test_weights(&spec, 21, 0.5);
+        let cfg = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() };
+        let zeros = vec![SpikeMap::zeros(spec.c_in, spec.in_h, spec.in_w)];
+        let dense_in: Vec<SpikeMap> =
+            random_inputs(&spec, 22, false).iter().map(SpikeMap::from_dense).collect();
+        let run_z = SystemController::new(cfg.clone())
+            .run_layer(&spec, &lw, LayerInput::Spikes(&zeros))
+            .unwrap();
+        let run_d =
+            SystemController::new(cfg).run_layer(&spec, &lw, LayerInput::Spikes(&dense_in)).unwrap();
+        assert_eq!(run_z.cycles, run_d.cycles);
+        assert_eq!(run_z.dense_cycles, run_d.dense_cycles);
+        assert_eq!(run_z.gating.gated_fraction(), 1.0);
+        assert_eq!(run_z.spikes_out + run_z.gating.enabled, 0);
     }
 
     #[test]
@@ -509,15 +584,19 @@ mod tests {
         let spec = test_spec(ConvKind::Spike, 1, 1, false);
         let lw = test_weights(&spec, 16, 0.5);
         let mut ctrl = SystemController::new(AccelConfig::paper());
-        assert!(ctrl.run_layer(&spec, &lw, &[]).is_err());
-        let bad = vec![Tensor::zeros(1, 2, 2)];
-        assert!(ctrl.run_layer(&spec, &lw, &bad).is_err());
+        assert!(ctrl.run_layer(&spec, &lw, LayerInput::Spikes(&[])).is_err());
+        let bad = vec![SpikeMap::zeros(1, 2, 2)];
+        assert!(ctrl.run_layer(&spec, &lw, LayerInput::Spikes(&bad)).is_err());
+        // Pixel stimulus on a spike layer is a representation error.
+        let px = vec![Tensor::zeros(spec.c_in, spec.in_h, spec.in_w)];
+        assert!(ctrl.run_layer(&spec, &lw, LayerInput::Pixels(&px)).is_err());
     }
 
     #[test]
     fn full_tiny_network_matches_golden_model() {
         // Chain every layer of the tiny network through the controller and
-        // compare the head against the functional SnnForward.
+        // compare the head against the functional SnnForward — compressed
+        // maps threaded between layers the whole way.
         use crate::ref_impl::{ForwardOptions, SnnForward};
         let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
         let mw = ModelWeights::random(&net, 0.3, 17);
@@ -536,38 +615,31 @@ mod tests {
 
         // Controller, layer by layer.
         let mut ctrl = SystemController::new(AccelConfig::paper());
-        let mut outputs: std::collections::BTreeMap<String, Vec<Tensor<u8>>> = Default::default();
+        let mut outputs: std::collections::BTreeMap<String, Vec<SpikeMap>> = Default::default();
         let mut prev: Option<String> = None;
         let mut head: Option<Tensor<i32>> = None;
         for l in &net.layers {
             let lw = mw.get(&l.name).unwrap();
-            let inputs: Vec<Tensor<u8>> = if l.kind == ConvKind::Encoding {
-                vec![img.clone(); l.in_t]
-            } else {
-                let main = l.input_from.clone().or_else(|| prev.clone()).unwrap();
-                let main_steps = outputs.get(&main).unwrap();
-                match l.concat_with.as_deref() {
-                    None => main_steps.clone(),
-                    Some(o) => {
-                        let os = outputs.get(o).unwrap();
-                        main_steps
-                            .iter()
-                            .zip(os)
-                            .map(|(a, b)| {
-                                let mut d = a.data.clone();
-                                d.extend_from_slice(&b.data);
-                                Tensor::from_vec(a.c + b.c, a.h, a.w, d)
-                            })
-                            .collect()
-                    }
-                }
-            };
             // Head accumulates over in_t: set out_t = in_t internally.
             let mut spec = l.clone();
             if l.kind == ConvKind::Output {
                 spec.out_t = l.in_t;
             }
-            let run = ctrl.run_layer(&spec, lw, &inputs).unwrap();
+            let run = if l.kind == ConvKind::Encoding {
+                let frames = vec![img.clone(); l.in_t];
+                ctrl.run_layer(&spec, lw, LayerInput::Pixels(&frames)).unwrap()
+            } else {
+                let main = l.input_from.clone().or_else(|| prev.clone()).unwrap();
+                let main_steps = outputs.get(&main).unwrap();
+                let inputs: Vec<SpikeMap> = match l.concat_with.as_deref() {
+                    None => main_steps.clone(),
+                    Some(o) => {
+                        let os = outputs.get(o).unwrap();
+                        main_steps.iter().zip(os).map(|(a, b)| a.concat(b)).collect()
+                    }
+                };
+                ctrl.run_layer(&spec, lw, LayerInput::Spikes(&inputs)).unwrap()
+            };
             if l.kind == ConvKind::Output {
                 head = run.head_acc;
             } else {

@@ -5,40 +5,59 @@
 //! its `(row, col)` position — which selects the enable-map shift — and the
 //! bit is cleared before the next cycle. When the map reaches zero the
 //! plane is done and the controller advances the `C` loop.
+//!
+//! A 3×3 plane fits one 16-bit map word and takes the combinational
+//! single-word fast path; 5×5 and 7×7 planes span multiple words, scanned
+//! in order with exhausted words skipped in O(1).
 
-/// Combinational priority encoder over a ≤16-bit weight map word.
+/// Priority encoder over a multi-word weight map (16 positions per word).
 #[derive(Clone, Debug)]
 pub struct PriorityEncoder {
-    map: u16,
+    words: Vec<u16>,
+    /// Index of the first possibly-nonzero word.
+    cursor: usize,
     kw: usize,
 }
 
 impl PriorityEncoder {
-    /// Load a weight map for a `kh × kw` plane.
+    /// Load a single-word map for a `kh × kw` plane (`kh*kw ≤ 16` — the
+    /// 3×3 fast path, and the signature the RTL-sized tests use).
     pub fn load(map: u16, kw: usize) -> Self {
+        Self::load_words(&[map], kw)
+    }
+
+    /// Load a multi-word map (row-major, LSB-first within each word).
+    pub fn load_words(map: &[u16], kw: usize) -> Self {
         assert!(kw > 0);
-        PriorityEncoder { map, kw }
+        assert!(!map.is_empty());
+        PriorityEncoder { words: map.to_vec(), cursor: 0, kw }
     }
 
     /// Whether any nonzero weight remains.
     pub fn has_next(&self) -> bool {
-        self.map != 0
+        self.words[self.cursor..].iter().any(|&w| w != 0)
     }
 
     /// Pop the position of the leftmost (lowest-index) nonzero bit as
     /// `(row, col)`, clearing it — one hardware cycle.
     pub fn next_position(&mut self) -> Option<(usize, usize)> {
-        if self.map == 0 {
-            return None;
+        while self.cursor < self.words.len() {
+            let word = self.words[self.cursor];
+            if word == 0 {
+                self.cursor += 1;
+                continue;
+            }
+            let bit = word.trailing_zeros() as usize;
+            self.words[self.cursor] &= word - 1; // clear lowest set bit
+            let i = self.cursor * 16 + bit;
+            return Some((i / self.kw, i % self.kw));
         }
-        let i = self.map.trailing_zeros() as usize;
-        self.map &= self.map - 1; // clear lowest set bit
-        Some((i / self.kw, i % self.kw))
+        None
     }
 
     /// Remaining nonzero count (= remaining cycles for this plane).
     pub fn remaining(&self) -> usize {
-        self.map.count_ones() as usize
+        self.words[self.cursor..].iter().map(|w| w.count_ones() as usize).sum()
     }
 }
 
@@ -69,13 +88,28 @@ mod tests {
     }
 
     #[test]
+    fn multi_word_scan_crosses_boundaries() {
+        // A 5×5 plane with bits at positions 2, 15, 16, 24.
+        let words = [(1u16 << 2) | (1 << 15), (1 << 0) | (1 << 8)];
+        let mut e = PriorityEncoder::load_words(&words, 5);
+        assert_eq!(e.remaining(), 4);
+        assert_eq!(e.next_position(), Some((0, 2)));
+        assert_eq!(e.next_position(), Some((3, 0))); // bit 15
+        assert_eq!(e.next_position(), Some((3, 1))); // bit 16
+        assert_eq!(e.next_position(), Some((4, 4))); // bit 24
+        assert_eq!(e.next_position(), None);
+    }
+
+    #[test]
     fn prop_matches_bitmask_iteration() {
         // The encoder must visit exactly the positions of the bit-mask
-        // representation, in the same order.
+        // representation, in the same order — for one-word and multi-word
+        // planes alike.
         run_prop("encoder/matches-bitmask", |g| {
-            let plane = g.sparse_i8(9, 0.4);
-            let bm = BitMaskKernel::from_dense(&plane, 3, 3);
-            let mut e = PriorityEncoder::load(bm.map[0], 3);
+            let (kh, kw) = *g.rng().choose(&[(3usize, 3usize), (5, 5), (7, 7)]);
+            let plane = g.sparse_i8(kh * kw, 0.4);
+            let bm = BitMaskKernel::from_dense(&plane, kh, kw);
+            let mut e = PriorityEncoder::load_words(&bm.map, kw);
             for (r, c, _w) in bm.iter_nz() {
                 assert_eq!(e.next_position(), Some((r, c)));
             }

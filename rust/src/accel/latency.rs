@@ -160,13 +160,20 @@ mod tests {
         let analytic = LatencyModel::new(cfg.clone()).layer(&spec, lw);
 
         let mut rng = Rng::new(8);
-        let inputs: Vec<Tensor<u8>> = (0..2)
+        let inputs: Vec<crate::sparse::SpikeMap> = (0..2)
             .map(|_| {
                 let n = 3 * 12 * 16;
-                Tensor::from_vec(3, 12, 16, (0..n).map(|_| u8::from(rng.chance(0.3))).collect())
+                crate::sparse::SpikeMap::from_dense(&Tensor::from_vec(
+                    3,
+                    12,
+                    16,
+                    (0..n).map(|_| u8::from(rng.chance(0.3))).collect(),
+                ))
             })
             .collect();
-        let run = SystemController::new(cfg).run_layer(&spec, lw, &inputs).unwrap();
+        let run = SystemController::new(cfg)
+            .run_layer(&spec, lw, crate::accel::controller::LayerInput::Spikes(&inputs))
+            .unwrap();
         assert_eq!(run.cycles, analytic.sparse_cycles);
         assert_eq!(run.dense_cycles, analytic.dense_cycles);
     }

@@ -1,6 +1,9 @@
 //! The hardware LIF module (Fig 7): consumes the PE array's 16-bit partial
 //! sums for one (output-channel, time-step) tile, updates the 8-bit
-//! membrane potentials, and emits the output spike tile.
+//! membrane potentials, and emits the output spike tile **compressed** —
+//! the spike bits are written straight into a word-packed
+//! [`SpikePlane`], which is exactly what the Output SRAM stores, with no
+//! dense intermediate.
 //!
 //! Functionally it is the vectorized form of
 //! [`crate::model::lif::lif_step_scalar`]; this wrapper adds the tile
@@ -9,7 +12,7 @@
 //! for the power model.
 
 use crate::model::lif::{lif_step_scalar, LifParams};
-use crate::tensor::Tensor;
+use crate::sparse::SpikePlane;
 
 /// LIF module state for one tile × one output channel.
 #[derive(Clone, Debug)]
@@ -38,15 +41,18 @@ impl LifUnit {
     }
 
     /// Advance one time step: `acc` are the PE partial sums, `bias` is the
-    /// per-channel bias injected at LIF input. Returns the spike tile.
-    pub fn step(&mut self, p: LifParams, acc: &[i16], bias: i32) -> Tensor<u8> {
+    /// per-channel bias injected at LIF input. Returns the compressed
+    /// spike tile.
+    pub fn step(&mut self, p: LifParams, acc: &[i16], bias: i32) -> SpikePlane {
         assert_eq!(acc.len(), self.vmem.len());
-        let mut out = Tensor::zeros(1, self.th, self.tw);
+        let mut out = SpikePlane::zeros(self.th, self.tw);
         for (i, &a) in acc.iter().enumerate() {
             let (v, s) = lif_step_scalar(self.vmem[i], self.fired[i], a as i32 + bias, p.vth_q);
             self.vmem[i] = v;
             self.fired[i] = s;
-            out.data[i] = u8::from(s);
+            if s {
+                out.set(i / self.tw, i % self.tw);
+            }
             self.updates += 1;
             self.spikes_out += u64::from(s);
         }
@@ -88,7 +94,7 @@ mod tests {
                 let accb: Vec<i32> = acc.iter().map(|&a| a as i32 + bias).collect();
                 let mut want = vec![0u8; n];
                 model.step(p, &accb, &mut want);
-                assert_eq!(tile.data, want);
+                assert_eq!(tile.to_dense(), want);
                 assert_eq!(unit.vmem(), model.vmem.as_slice());
             }
         });
@@ -98,9 +104,12 @@ mod tests {
     fn counters_accumulate() {
         let mut unit = LifUnit::new(2, 2);
         let p = LifParams { vth_q: 10 };
-        unit.step(p, &[20, 0, 20, 0], 0);
+        let tile = unit.step(p, &[20, 0, 20, 0], 0);
         assert_eq!(unit.updates, 4);
         assert_eq!(unit.spikes_out, 2);
+        assert_eq!(tile.count_set(), 2);
+        assert!(tile.get(0, 0));
+        assert!(tile.get(1, 0));
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! The max-pooling module (Fig 7) — "composed of simple OR gates": 2×2
 //! stride-2 OR reduction over binary spike tiles, applied on the fly as
 //! spikes leave the LIF module so pooled layers never store the full-rate
-//! map.
+//! map. Operates directly on compressed [`SpikePlane`] tiles: each set
+//! input bit ORs into its output cell, O(popcount) per tile.
 
-use crate::tensor::Tensor;
+use crate::sparse::SpikePlane;
 
 /// OR-gate max-pooling unit with an activity counter.
 #[derive(Clone, Debug, Default)]
@@ -13,9 +14,9 @@ pub struct MaxPoolUnit {
 }
 
 impl MaxPoolUnit {
-    /// Pool one spike tile `(1, h, w)` → `(1, h/2, w/2)`.
-    pub fn pool(&mut self, tile: &Tensor<u8>) -> Tensor<u8> {
-        let out = crate::ref_impl::maxpool2x2_or(tile);
+    /// Pool one compressed spike tile `h × w` → `h/2 × w/2`.
+    pub fn pool(&mut self, tile: &SpikePlane) -> SpikePlane {
+        let out = tile.maxpool2x2_or();
         self.ops += (out.h * out.w) as u64;
         out
     }
@@ -24,14 +25,15 @@ impl MaxPoolUnit {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::Tensor;
     use crate::util::propcheck::run_prop;
 
     #[test]
     fn pools_and_counts() {
         let mut mp = MaxPoolUnit::default();
-        let t = Tensor::from_vec(1, 2, 4, vec![0, 1, 0, 0, 0, 0, 0, 1]);
+        let t = SpikePlane::from_dense(&[0, 1, 0, 0, 0, 0, 0, 1], 2, 4);
         let out = mp.pool(&t);
-        assert_eq!(out.data, vec![1, 1]);
+        assert_eq!(out.to_dense(), vec![1, 1]);
         assert_eq!(mp.ops, 2);
     }
 
@@ -40,9 +42,11 @@ mod tests {
         run_prop("maxpool-unit/matches-ref", |g| {
             let h = g.usize(1, 5) * 2;
             let w = g.usize(1, 5) * 2;
-            let t = Tensor::from_vec(1, h, w, g.spikes(h * w, 0.4));
+            let data = g.spikes(h * w, 0.4);
+            let t = Tensor::from_vec(1, h, w, data.clone());
             let mut mp = MaxPoolUnit::default();
-            assert_eq!(mp.pool(&t), crate::ref_impl::maxpool2x2_or(&t));
+            let got = mp.pool(&SpikePlane::from_dense(&data, h, w));
+            assert_eq!(got.to_dense(), crate::ref_impl::maxpool2x2_or(&t).data);
         });
     }
 }

@@ -10,6 +10,25 @@
 //!                                                     [Output SRAM ×4] ⇄ DRAM
 //! ```
 //!
+//! **Compressed activation data path.** Both feature-map SRAMs hold
+//! activations as word-packed spike bitmaps
+//! ([`crate::sparse::SpikePlane`] / [`crate::sparse::SpikeMap`] — 1 bit
+//! per neuron, exactly what the RTL stores), and every unit operates on
+//! them natively:
+//!
+//! ```text
+//!  SpikeMap ─► [controller: bit-slice (enc) / extract_tile] ─► SpikePlane tiles
+//!      tiles ─► [one_to_all: O(popcount) enable events] ─► PE partial sums
+//!      sums  ─► [lif_unit: emits SpikePlane]  ─► [maxpool_unit: O(popcount) OR]
+//!      tiles ─► [reorder + SpikeMap::paste]   ─► next layer's SpikeMap
+//! ```
+//!
+//! Zero activations gate PE clocks (power) but never stall the array, so
+//! the *modeled* cycle counts are representation-independent — the
+//! compressed path only makes the simulator itself event-driven: silent
+//! windows/channels cost O(1), enable accounting is popcount-driven, and
+//! the whole path stays bit-exact with the dense golden model.
+//!
 //! [`encoder`] — row/column priority encoders over the weight bit mask;
 //! [`pe`] — the 576-element gated PE array with clock-gating statistics;
 //! [`one_to_all`] — the gated one-to-all product over one kernel plane;

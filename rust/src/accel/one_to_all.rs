@@ -1,5 +1,5 @@
 //! The gated one-to-all product (§III-B-1, Fig 8/9/11) — the paper's key
-//! computational idea.
+//! computational idea, over **compressed** spike tiles.
 //!
 //! For one input-channel tile and one bit-mask-compressed kernel plane:
 //! every cycle the priority encoders emit the next nonzero weight position
@@ -9,38 +9,45 @@
 //! accumulate the weight in parallel, clock-gated by the enable bit.
 //! Zero *weights* are skipped entirely (cycle savings); zero *activations*
 //! only gate clocks (power savings) — never stalling the array.
+//!
+//! The input tile arrives as a [`SpikePlane`] — the same word-packed
+//! bitmap the Input SRAM holds — so the simulator's enable accounting is
+//! popcount-driven: an all-zero window costs O(1) per weight instead of a
+//! dense scan, while the *modeled* cycle count is unchanged (the hardware
+//! still streams one nonzero weight per cycle regardless of activity).
 
 use super::encoder::PriorityEncoder;
 use super::pe::PeArray;
-use crate::sparse::BitMaskKernel;
-use crate::tensor::Tensor;
+use crate::sparse::{BitMaskKernel, SpikePlane};
 
-/// Executes gated one-to-all products over one tile.
+/// Executes gated one-to-all products over one compressed tile.
 pub struct GatedOneToAll<'a> {
-    /// Input tile (single channel plane), `(1, th, tw)`.
-    tile: &'a Tensor<u8>,
-    /// Scratch enable map, row-major `th × tw`.
+    /// Input tile (single channel plane), compressed.
+    tile: &'a SpikePlane,
+    /// Scratch enable map, row-major `th × tw` (reference path only).
     enable: Vec<u8>,
 }
 
 impl<'a> GatedOneToAll<'a> {
     /// Bind to one input-channel tile.
-    pub fn new(tile: &'a Tensor<u8>) -> Self {
-        assert_eq!(tile.c, 1, "one input channel at a time");
+    pub fn new(tile: &'a SpikePlane) -> Self {
         GatedOneToAll { tile, enable: vec![0; tile.h * tile.w] }
     }
 
-    /// Build the enable map for a nonzero weight at kernel position
+    /// Build the dense enable map for a nonzero weight at kernel position
     /// `(r, c)` of a `kh × kw` kernel: the input tile shifted so that each
     /// output neuron reads its corresponding input, replicate-padded.
+    /// Kept as the semantic definition the event-driven path is
+    /// property-tested against.
     pub fn enable_map(&mut self, r: usize, c: usize, kh: usize, kw: usize) -> &[u8] {
         let (th, tw) = (self.tile.h, self.tile.w);
         let dy = r as isize - (kh / 2) as isize;
         let dx = c as isize - (kw / 2) as isize;
         for y in 0..th {
+            let sy = (y as isize + dy).clamp(0, th as isize - 1) as usize;
             for x in 0..tw {
-                self.enable[y * tw + x] =
-                    self.tile.get_replicate(0, y as isize + dy, x as isize + dx);
+                let sx = (x as isize + dx).clamp(0, tw as isize - 1) as usize;
+                self.enable[y * tw + x] = u8::from(self.tile.get(sy, sx));
             }
         }
         &self.enable
@@ -48,22 +55,19 @@ impl<'a> GatedOneToAll<'a> {
 
     /// Run the full product of this tile with one compressed kernel plane,
     /// accumulating into `pe`. `shift` selects the bit plane (encoding
-    /// layer); returns the number of cycles consumed (= nonzero weights).
-    ///
-    /// Uses the fused shifted-accumulate (identical arithmetic to building
-    /// the enable map then [`PeArray::gated_accumulate`]; the property
-    /// test pins the two paths together).
+    /// layer); returns the number of cycles consumed (= nonzero weights —
+    /// activity never changes the cycle count, only the gating stats).
     pub fn run(&mut self, kernel: &BitMaskKernel, pe: &mut PeArray, shift: u32) -> u64 {
         debug_assert_eq!(pe.tile_h, self.tile.h);
         debug_assert_eq!(pe.tile_w, self.tile.w);
-        let mut enc = PriorityEncoder::load(kernel.map[0], kernel.kw);
+        let mut enc = PriorityEncoder::load_words(&kernel.map, kernel.kw);
         let mut nz_iter = kernel.nz.iter();
         let mut cycles = 0;
         while let Some((r, c)) = enc.next_position() {
             let w = *nz_iter.next().expect("map/nz agree");
             let dy = r as isize - (kernel.kh / 2) as isize;
             let dx = c as isize - (kernel.kw / 2) as isize;
-            pe.gated_accumulate_shifted(self.tile, dy, dx, w, shift);
+            pe.gated_accumulate_events(self.tile, dy, dx, w, shift);
             cycles += 1;
         }
         cycles
@@ -71,9 +75,10 @@ impl<'a> GatedOneToAll<'a> {
 
     /// Reference form of [`GatedOneToAll::run`]: materialize each enable
     /// map explicitly and use the plain gated accumulate — kept as the
-    /// semantic definition the fused path is property-tested against.
+    /// semantic definition the event-driven path is property-tested
+    /// against.
     pub fn run_reference(&mut self, kernel: &BitMaskKernel, pe: &mut PeArray, shift: u32) -> u64 {
-        let mut enc = PriorityEncoder::load(kernel.map[0], kernel.kw);
+        let mut enc = PriorityEncoder::load_words(&kernel.map, kernel.kw);
         let mut nz_iter = kernel.nz.iter();
         let mut cycles = 0;
         while let Some((r, c)) = enc.next_position() {
@@ -90,19 +95,21 @@ impl<'a> GatedOneToAll<'a> {
 mod tests {
     use super::*;
     use crate::ref_impl::conv2d;
-    use crate::tensor::Kernel4;
+    use crate::tensor::{Kernel4, Tensor};
     use crate::util::propcheck::run_prop;
 
     /// The gated one-to-all product over a full tile must equal ordinary
     /// (block) convolution of that tile — the central correctness claim —
-    /// and the fused fast path must match the reference enable-map path
-    /// (values *and* gating statistics).
+    /// and the event-driven fast path must match the reference enable-map
+    /// path (values *and* gating statistics), at any activation density.
     #[test]
     fn prop_equals_convolution() {
         run_prop("one-to-all/equals-conv", |g| {
             let th = g.usize(1, 8);
             let tw = g.usize(1, 8);
-            let tile = Tensor::from_vec(1, th, tw, g.spikes(th * tw, 0.5));
+            let density = g.f64(0.0, 1.0);
+            let dense_tile = Tensor::from_vec(1, th, tw, g.spikes(th * tw, density));
+            let tile = SpikePlane::from_dense(dense_tile.channel(0), th, tw);
             let plane = g.sparse_i8(9, 0.4);
             let bm = BitMaskKernel::from_dense(&plane, 3, 3);
             let mut pe = PeArray::new(th, tw);
@@ -110,11 +117,11 @@ mod tests {
             assert_eq!(cycles as usize, bm.nnz());
 
             let w = Kernel4::from_vec(1, 1, 3, 3, plane);
-            let want = conv2d(&tile, &w, &[0]);
+            let want = conv2d(&dense_tile, &w, &[0]);
             let got: Vec<i32> = pe.partial_sums().to_vec();
             assert_eq!(got, want.data);
 
-            // Fused vs reference path: identical sums and statistics.
+            // Event-driven vs reference path: identical sums and statistics.
             let mut pe_ref = PeArray::new(th, tw);
             GatedOneToAll::new(&tile).run_reference(&bm, &mut pe_ref, 0);
             assert_eq!(pe.partial_sums(), pe_ref.partial_sums());
@@ -122,16 +129,31 @@ mod tests {
         });
     }
 
+    /// 5×5 kernels (multi-word weight maps) follow the same contract.
+    #[test]
+    fn prop_equals_convolution_5x5() {
+        run_prop("one-to-all/equals-conv-5x5", |g| {
+            let th = g.usize(1, 8);
+            let tw = g.usize(1, 8);
+            let dense_tile = Tensor::from_vec(1, th, tw, g.spikes(th * tw, 0.4));
+            let tile = SpikePlane::from_dense(dense_tile.channel(0), th, tw);
+            let plane = g.sparse_i8(25, 0.3);
+            let bm = BitMaskKernel::from_dense(&plane, 5, 5);
+            let mut pe = PeArray::new(th, tw);
+            let cycles = GatedOneToAll::new(&tile).run(&bm, &mut pe, 0);
+            assert_eq!(cycles as usize, bm.nnz());
+            let w = Kernel4::from_vec(1, 1, 5, 5, plane);
+            let want = conv2d(&dense_tile, &w, &[0]);
+            assert_eq!(pe.partial_sums(), &want.data[..]);
+        });
+    }
+
     #[test]
     fn fig8_example_single_weight() {
         // Fig 8: a 4×4 input, one nonzero weight at kernel (0,0). The
         // enable map is the input shifted down-right by one (replicate).
-        let tile = Tensor::from_vec(
-            1,
-            4,
-            4,
-            vec![1, 0, 0, 0, /**/ 0, 1, 0, 0, /**/ 0, 0, 0, 0, /**/ 0, 0, 0, 1],
-        );
+        let dense = vec![1, 0, 0, 0, /**/ 0, 1, 0, 0, /**/ 0, 0, 0, 0, /**/ 0, 0, 0, 1];
+        let tile = SpikePlane::from_dense(&dense, 4, 4);
         let plane = {
             let mut p = vec![0i8; 9];
             p[0] = 7; // (0,0)
@@ -142,14 +164,14 @@ mod tests {
         GatedOneToAll::new(&tile).run(&bm, &mut pe, 0);
         // Output (y,x) = 7 · input(y−1, x−1) with replicate padding.
         assert_eq!(pe.partial_sums()[0], 7); // reads input(0,0) via clamp
-        assert_eq!(pe.partial_sums()[1 * 4 + 1], 7); // reads input(0,0)
+        assert_eq!(pe.partial_sums()[4 + 1], 7); // reads input(0,0)
         assert_eq!(pe.partial_sums()[2 * 4 + 2], 7); // reads input(1,1)
         assert_eq!(pe.partial_sums()[3 * 4 + 3], 0); // reads input(2,2)=0
     }
 
     #[test]
     fn one_by_one_kernel_identity_enable() {
-        let tile = Tensor::from_vec(1, 2, 3, vec![1, 0, 1, 0, 1, 0]);
+        let tile = SpikePlane::from_dense(&[1, 0, 1, 0, 1, 0], 2, 3);
         let bm = BitMaskKernel::from_dense(&[4], 1, 1);
         let mut pe = PeArray::new(2, 3);
         let cycles = GatedOneToAll::new(&tile).run(&bm, &mut pe, 0);
@@ -159,7 +181,7 @@ mod tests {
 
     #[test]
     fn zero_kernel_costs_zero_cycles() {
-        let tile = Tensor::from_vec(1, 2, 2, vec![1, 1, 1, 1]);
+        let tile = SpikePlane::from_dense(&[1, 1, 1, 1], 2, 2);
         let bm = BitMaskKernel::from_dense(&[0i8; 9], 3, 3);
         let mut pe = PeArray::new(2, 2);
         let cycles = GatedOneToAll::new(&tile).run(&bm, &mut pe, 0);
@@ -169,11 +191,14 @@ mod tests {
 
     #[test]
     fn gating_tracks_activation_sparsity() {
-        // All-zero tile: every event is gated.
-        let tile = Tensor::zeros(1, 3, 3);
+        // All-zero tile: every event is gated, but the cycle count is
+        // unchanged (the hardware never stalls on silent windows).
+        let tile = SpikePlane::zeros(3, 3);
         let bm = BitMaskKernel::from_dense(&[1i8; 9], 3, 3);
         let mut pe = PeArray::new(3, 3);
-        GatedOneToAll::new(&tile).run(&bm, &mut pe, 0);
+        let cycles = GatedOneToAll::new(&tile).run(&bm, &mut pe, 0);
+        assert_eq!(cycles, 9);
         assert_eq!(pe.stats().gated_fraction(), 1.0);
+        assert!(pe.partial_sums().iter().all(|&v| v == 0));
     }
 }

@@ -137,6 +137,28 @@ impl PeArray {
         self.stats.gated += (h * w) as u64 - enabled;
     }
 
+    /// One gated one-to-all cycle with the enable map expressed as a
+    /// shifted view of a **compressed** spike tile: every set bit of
+    /// `tile` (replicate-clamped through the `(dy, dx)` shift) enables one
+    /// PE. Event-driven form of [`PeArray::gated_accumulate_shifted`] —
+    /// identical partial sums and gating statistics, but the work is
+    /// O(popcount) per row and an all-zero tile costs O(1) instead of a
+    /// full dense scan.
+    pub fn gated_accumulate_events(
+        &mut self,
+        tile: &crate::sparse::SpikePlane,
+        dy: isize,
+        dx: isize,
+        weight: i8,
+        shift: u32,
+    ) {
+        debug_assert_eq!((tile.h, tile.w), (self.tile_h, self.tile_w));
+        let contrib = (weight as i32) << shift;
+        let enabled = tile.accumulate_shifted_into(&mut self.acc, dy, dx, contrib);
+        self.stats.enabled += enabled;
+        self.stats.gated += (self.tile_h * self.tile_w) as u64 - enabled;
+    }
+
     /// Raw wide partial sums (tests / head accumulation).
     pub fn partial_sums(&self) -> &[i32] {
         &self.acc
@@ -222,6 +244,33 @@ mod tests {
         assert_eq!(pe.stats().enabled, 2);
         pe.reset_stats();
         assert_eq!(pe.stats(), GatingStats::default());
+    }
+
+    #[test]
+    fn prop_events_match_dense_shifted() {
+        // The compressed-tile path must equal the dense shifted path in
+        // both partial sums and gating statistics, at any density.
+        use crate::sparse::SpikePlane;
+        use crate::tensor::Tensor;
+        run_prop("pe/events-vs-dense", |g| {
+            let h = g.usize(1, 8);
+            let w = g.usize(1, 70);
+            let density = g.f64(0.0, 1.0);
+            let tile = Tensor::from_vec(1, h, w, g.spikes(h * w, density));
+            let plane = SpikePlane::from_dense(tile.channel(0), h, w);
+            let mut dense_pe = PeArray::new(h, w);
+            let mut event_pe = PeArray::new(h, w);
+            for _ in 0..g.usize(1, 4) {
+                let dy = g.i64(-2, 2) as isize;
+                let dx = g.i64(-2, 2) as isize;
+                let wt = g.i8();
+                let shift = g.usize(0, 3) as u32;
+                dense_pe.gated_accumulate_shifted(&tile, dy, dx, wt, shift);
+                event_pe.gated_accumulate_events(&plane, dy, dx, wt, shift);
+            }
+            assert_eq!(event_pe.partial_sums(), dense_pe.partial_sums());
+            assert_eq!(event_pe.stats(), dense_pe.stats());
+        });
     }
 
     #[test]

@@ -10,6 +10,12 @@
 //! - other layers: produced `(k, t)` → stored `(t, k)`;
 //! - encoding layer: produced `(k, b, t)` (bit planes) → stored `(t, k)`
 //!   with the bit planes split and serialized first (Fig 13a).
+//!
+//! The payload is representation-agnostic: with the compressed activation
+//! data path the reordered elements are word-packed
+//! [`crate::sparse::SpikePlane`] tiles (1 bit/neuron), so the reorder
+//! buffers shrink 8× relative to byte-per-spike storage — same addresses,
+//! smaller words.
 
 /// Write address (in elements) for the output produced at output channel
 /// `k` of `num_k`, time step `t` of `num_t`, so that storage is
@@ -93,5 +99,25 @@ mod tests {
     fn single_time_step_is_identity() {
         let data = vec![10, 20, 30];
         assert_eq!(reorder_kt_to_tk(&data, 3, 1), data);
+    }
+
+    #[test]
+    fn reorders_compressed_spike_tiles() {
+        // The real datapath payload: compressed spike tiles ride through
+        // the same strided-write addressing untouched.
+        use crate::sparse::SpikePlane;
+        let tiles: Vec<SpikePlane> = (0..4)
+            .map(|i| {
+                let mut p = SpikePlane::zeros(2, 2);
+                p.set(i / 2, i % 2);
+                p
+            })
+            .collect();
+        let stored = reorder_kt_to_tk(&tiles, 2, 2);
+        // (k,t)-major [k0t0, k0t1, k1t0, k1t1] → (t,k) [k0t0, k1t0, k0t1, k1t1]
+        assert_eq!(stored[0], tiles[0]);
+        assert_eq!(stored[1], tiles[2]);
+        assert_eq!(stored[2], tiles[1]);
+        assert_eq!(stored[3], tiles[3]);
     }
 }

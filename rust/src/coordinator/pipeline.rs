@@ -6,6 +6,11 @@
 //! NMS, and (optionally) estimate the hardware metrics of the frame on
 //! the cycle/energy models using the frame's real activation sparsity.
 //!
+//! The golden path carries activations as compressed
+//! [`crate::sparse::SpikeMap`]s end-to-end (event-driven convolution,
+//! popcount statistics); dense `Tensor<u8>` frames exist only at the two
+//! representation boundaries — the RGB input and the PJRT executable.
+//!
 //! Multi-frame runs fan golden-model work across worker threads; the PJRT
 //! path executes on the coordinator thread (the executable is not `Sync`).
 
@@ -89,7 +94,13 @@ impl DetectionPipeline {
             .with_context(|| "loading quantized weights (run `make artifacts`)")?;
         weights.validate_against(&net)?;
         let (gw, gh) = net.grid();
-        let exe = if use_pjrt {
+        let exe = if use_pjrt && !SnnExecutable::SUPPORTED {
+            // Stub build: fall back to the (bit-identical) golden model.
+            eprintln!("PJRT not built (enable the `pjrt` feature); using the golden model");
+            None
+        } else if use_pjrt {
+            // Real PJRT build: a broken artifact is a hard error, not a
+            // silent backend switch.
             Some(SnnExecutable::load(
                 &paths.model_hlo,
                 (net.input_c, net.input_h, net.input_w),
@@ -170,6 +181,8 @@ impl DetectionPipeline {
 
     /// Estimate the hardware metrics of one frame (golden model run with
     /// stats + analytic latency/energy models, paper hardware config).
+    /// The sparsity profile comes from popcounts of the compressed spike
+    /// maps the golden model threads between layers.
     pub fn estimate_hw(&self, image: &Tensor<u8>) -> Result<FrameHwEstimate> {
         let fwd = SnnForward::new(
             &self.net,

@@ -26,7 +26,7 @@
 //! |---|---|
 //! | [`util`] | PRNG, property testing, bench harness, CLI (offline substrates) |
 //! | [`tensor`] | NCHW tensors + fixed-point arithmetic (FXP8/FXP16) |
-//! | [`sparse`] | bit-mask / CSR / dense weight compression + storage accounting |
+//! | [`sparse`] | bit-mask / CSR weight compression + compressed spike planes (`SpikePlane`/`SpikeMap`) carried end-to-end |
 //! | [`config`] | TOML-subset config system + hardware configuration registers |
 //! | [`model`] | network topology, LIF dynamics, weights, mIoUT metric |
 //! | [`ref_impl`] | functional golden model (block conv, full SNN forward) |

@@ -246,7 +246,7 @@ fn cmd_miout(args: &Args) -> Result<()> {
                 .entry(name.clone())
                 .or_insert_with(|| MioutAccumulator::new(maps[0].c, maps[0].h, maps[0].w));
             for m in maps {
-                acc.push(m);
+                acc.push_map(m);
             }
         }
     }

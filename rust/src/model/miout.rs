@@ -9,6 +9,7 @@
 //! can drop to a single time step at little cost (the basis for the mixed
 //! time-step selection of Fig 5 / Fig 15).
 
+use crate::sparse::SpikeMap;
 use crate::tensor::Tensor;
 
 /// Streaming accumulator over time steps for one layer's input feature map.
@@ -32,6 +33,20 @@ impl MioutAccumulator {
         assert_eq!(spikes.c * spikes.h * spikes.w, self.counts.len(), "shape mismatch");
         for (cnt, &s) in self.counts.iter_mut().zip(&spikes.data) {
             *cnt += u16::from(s != 0);
+        }
+        self.t_seen += 1;
+    }
+
+    /// Accumulate one time step from a **compressed** spike map — only
+    /// fired neurons are visited (O(popcount), the golden model's native
+    /// recording format).
+    pub fn push_map(&mut self, spikes: &SpikeMap) {
+        assert_eq!(spikes.len(), self.counts.len(), "shape mismatch");
+        for ch in 0..spikes.c {
+            let base = ch * self.hw;
+            for (y, x) in spikes.plane(ch).iter_set() {
+                self.counts[base + y * spikes.w + x] += 1;
+            }
         }
         self.t_seen += 1;
     }
@@ -122,6 +137,23 @@ mod tests {
         assert_eq!(acc.miout(), None);
         acc.push(&Tensor::from_vec(1, 1, 1, vec![1]));
         assert_eq!(acc.miout(), None);
+    }
+
+    #[test]
+    fn push_map_matches_dense_push() {
+        run_prop("miout/map-vs-dense", |g| {
+            let c = g.usize(1, 3);
+            let h = g.usize(1, 5);
+            let w = g.usize(1, 5);
+            let mut a = MioutAccumulator::new(c, h, w);
+            let mut b = MioutAccumulator::new(c, h, w);
+            for _ in 0..3 {
+                let t = Tensor::from_vec(c, h, w, g.spikes(c * h * w, 0.4));
+                a.push(&t);
+                b.push_map(&SpikeMap::from_dense(&t));
+            }
+            assert_eq!(a.miout(), b.miout());
+        });
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //!   the encoding layer), weights `i8`, accumulation in `i32` with a final
 //!   saturation to the PE's 16-bit accumulator domain.
 
+use crate::sparse::SpikeMap;
 use crate::tensor::{sat_i16, Kernel4, Tensor};
 
 /// Dense stride-1 same-size convolution with replicate padding.
@@ -91,6 +92,54 @@ fn add_shifted_row(out_row: &mut [i32], in_row: &[u8], wt: i32, dx: isize) {
             }
         }
     }
+}
+
+/// Event-driven stride-1 same-size convolution over a **compressed** spike
+/// map — bit-exact with [`conv2d`] on binary inputs.
+///
+/// Instead of walking every pixel, each nonzero weight is scattered over
+/// the set bits of its input channel's bitmap
+/// ([`crate::sparse::SpikePlane::accumulate_shifted_into`]), so the cost
+/// per (weight, row) is O(popcount) rather than O(width), and an all-zero
+/// channel is skipped in O(1) — the software analogue of the hardware
+/// never toggling a gated PE. This is the golden model's hot path once
+/// activations are carried compressed end-to-end.
+pub fn conv2d_events(input: &SpikeMap, w: &Kernel4<i8>, bias: &[i32]) -> Tensor<i32> {
+    assert_eq!(input.c, w.c, "input channels mismatch");
+    assert_eq!(bias.len(), w.k, "bias length mismatch");
+    assert_eq!(w.kh, w.kw, "square kernels only");
+    let (h, wid) = (input.h, input.w);
+    let half = (w.kh / 2) as isize;
+    let mut out = Tensor::zeros(w.k, h, wid);
+    for k in 0..w.k {
+        let out_plane = {
+            let base = k * h * wid;
+            &mut out.data[base..base + h * wid]
+        };
+        out_plane.iter_mut().for_each(|o| *o = bias[k]);
+        for c in 0..input.c {
+            let plane = input.plane(c);
+            if plane.is_all_zero() {
+                continue; // zero-activation channel skipping, O(1)
+            }
+            for i in 0..w.kh {
+                for j in 0..w.kw {
+                    let wt = w.get(k, c, i, j) as i32;
+                    if wt == 0 {
+                        continue; // zero-weight skipping, like the hardware
+                    }
+                    plane.accumulate_shifted_into(
+                        out_plane,
+                        i as isize - half,
+                        j as isize - half,
+                        wt,
+                    );
+                }
+            }
+        }
+        out_plane.iter_mut().for_each(|o| *o = sat_i16(*o) as i32);
+    }
+    out
 }
 
 /// 2×2 stride-2 max pooling on binary spike maps — an OR over the window,
@@ -220,6 +269,42 @@ mod tests {
                 assert_eq!(os.data[i], o1.data[i] + o2.data[i]);
             }
         });
+    }
+
+    #[test]
+    fn prop_event_conv_equals_dense_conv() {
+        // The tentpole contract: event-driven sparse convolution over the
+        // compressed representation is bit-exact with the dense golden
+        // path, across activation densities from 0% to 100%.
+        run_prop("conv/events-vs-dense", |g| {
+            let c = g.usize(1, 3);
+            let h = g.usize(1, 8);
+            let wd = g.usize(1, 10);
+            let k = g.usize(1, 3);
+            let density = g.f64(0.0, 1.0);
+            let density = if g.bool(0.1) { 0.0 } else { density };
+            let input = Tensor::from_vec(c, h, wd, g.spikes(c * h * wd, density));
+            let ksize = *g.rng().choose(&[1usize, 3, 5]);
+            let w = Kernel4::from_vec(
+                k,
+                c,
+                ksize,
+                ksize,
+                g.sparse_i8(k * c * ksize * ksize, 0.4),
+            );
+            let bias = g.vec(k, |g| g.i64(-10, 10) as i32);
+            let dense = conv2d(&input, &w, &bias);
+            let events = conv2d_events(&SpikeMap::from_dense(&input), &w, &bias);
+            assert_eq!(events, dense, "density={density} k={ksize}");
+        });
+    }
+
+    #[test]
+    fn event_conv_all_zero_input_is_bias_only() {
+        let input = SpikeMap::zeros(2, 3, 4);
+        let w = Kernel4::from_vec(1, 2, 3, 3, vec![3i8; 18]);
+        let out = conv2d_events(&input, &w, &[-7]);
+        assert!(out.data.iter().all(|&v| v == -7));
     }
 
     #[test]

@@ -10,6 +10,6 @@ pub mod block_conv;
 pub mod conv;
 pub mod snn;
 
-pub use block_conv::block_conv2d;
-pub use conv::{conv2d, maxpool2x2_or, maxpool2x2_or_multibit};
+pub use block_conv::{block_conv2d, block_conv2d_events};
+pub use conv::{conv2d, conv2d_events, maxpool2x2_or, maxpool2x2_or_multibit};
 pub use snn::{ForwardOptions, ForwardResult, LayerStats, SnnForward};

@@ -5,16 +5,21 @@
 //! (shortcut / concat), the mixed time-step rules of §II-D, OR max
 //! pooling, and optionally the 32×18 block convolution of §II-B.
 //!
-//! Besides the detection head output it records the per-layer statistics
-//! the hardware experiments need: input sparsity (§IV-E), firing counts,
-//! sparse operation counts, and per-time-step spike maps for the mIoUT
-//! analysis (Fig 5).
+//! Activations are carried **compressed** between layers: every spike map
+//! is a [`SpikeMap`] (word-packed bitmaps, `sparse::spike`), convolved
+//! event-driven ([`conv2d_events`] / [`block_conv2d_events`] — bit-exact
+//! with the dense path), and the per-layer statistics (input sparsity
+//! §IV-E, firing counts) are popcounts of those bitmaps instead of dense
+//! scans. Only the multibit encoding layer consumes the dense RGB frame,
+//! and the head emits a dense `i32` accumulator — the representation
+//! boundaries of the datapath.
 
 use crate::model::lif::{LifParams, LifState};
 use crate::model::topology::{ConvKind, ConvSpec, NetworkSpec};
 use crate::model::weights::ModelWeights;
-use crate::ref_impl::block_conv::block_conv2d;
-use crate::ref_impl::conv::{conv2d, maxpool2x2_or};
+use crate::ref_impl::block_conv::{block_conv2d, block_conv2d_events};
+use crate::ref_impl::conv::{conv2d, conv2d_events};
+use crate::sparse::SpikeMap;
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
@@ -25,8 +30,8 @@ pub struct ForwardOptions {
     /// Use block convolution with this tile (paper: 32×18); `None` runs
     /// whole-image convolution (the SNN-c ablation row).
     pub block_tile: Option<(usize, usize)>,
-    /// Keep every layer's spike maps in the result (needed for mIoUT and
-    /// the simulator's stimulus; costs memory on large inputs).
+    /// Keep every layer's compressed spike maps in the result (needed for
+    /// mIoUT and the simulator's stimulus; cheap — 1 bit per neuron).
     pub record_spikes: bool,
 }
 
@@ -61,8 +66,9 @@ pub struct ForwardResult {
     pub head_acc: Tensor<i32>,
     /// Per-layer stats, in execution order.
     pub stats: BTreeMap<String, LayerStats>,
-    /// Per-layer output spike maps per time step (`record_spikes` only).
-    pub spikes: BTreeMap<String, Vec<Tensor<u8>>>,
+    /// Per-layer compressed output spike maps per time step
+    /// (`record_spikes` only).
+    pub spikes: BTreeMap<String, Vec<SpikeMap>>,
 }
 
 impl ForwardResult {
@@ -126,8 +132,9 @@ impl<'a> SnnForward<'a> {
                 self.net.input_c, self.net.input_h, self.net.input_w
             );
         }
-        // Per-layer outputs (spike maps per time step), keyed by name.
-        let mut outputs: BTreeMap<String, Vec<Tensor<u8>>> = BTreeMap::new();
+        // Per-layer outputs (compressed spike maps per time step), keyed by
+        // name.
+        let mut outputs: BTreeMap<String, Vec<SpikeMap>> = BTreeMap::new();
         let mut prev_name: Option<String> = None;
         let mut result = ForwardResult {
             head: Tensor::zeros(0, 0, 0),
@@ -140,9 +147,23 @@ impl<'a> SnnForward<'a> {
             let lw = self.weights.get(&layer.name).expect("validated");
             let mut stats = LayerStats::default();
 
-            // ---- Gather input time steps -------------------------------
-            let inputs: Vec<Tensor<u8>> = if layer.kind == ConvKind::Encoding {
-                vec![image.clone(); layer.in_t]
+            // ---- Convolution per executed time step --------------------
+            // The encoding layer consumes the dense multibit frame; every
+            // other layer consumes the compressed maps of its producers.
+            let nnz = lw.w.count_nonzero() as u64;
+            let dense_w = lw.w.data.len() as u64;
+            let spatial = (layer.in_w * layer.in_h) as u64;
+            let planes = if layer.kind == ConvKind::Encoding { 8u64 } else { 1 };
+            let mut accs: Vec<Tensor<i32>> = Vec::with_capacity(layer.in_t);
+            if layer.kind == ConvKind::Encoding {
+                for _ in 0..layer.in_t {
+                    let acc = match self.opts.block_tile {
+                        Some((tw, th)) => block_conv2d(image, &lw.w, &lw.bias, tw, th),
+                        None => conv2d(image, &lw.w, &lw.bias),
+                    };
+                    stats.input_sparsity += image.sparsity();
+                    accs.push(acc);
+                }
             } else {
                 let main_name = layer
                     .input_from
@@ -152,14 +173,14 @@ impl<'a> SnnForward<'a> {
                 let main = outputs
                     .get(&main_name)
                     .unwrap_or_else(|| panic!("missing output of {main_name}"));
-                let steps = match layer.concat_with.as_deref() {
+                let steps: Vec<SpikeMap> = match layer.concat_with.as_deref() {
                     None => main.clone(),
                     Some(other) => {
                         let o = outputs
                             .get(other)
                             .unwrap_or_else(|| panic!("missing output of {other}"));
                         assert_eq!(main.len(), o.len(), "concat time-step mismatch");
-                        main.iter().zip(o.iter()).map(|(a, b)| concat_c(a, b)).collect()
+                        main.iter().zip(o.iter()).map(|(a, b)| a.concat(b)).collect()
                     }
                 };
                 // in_t must match what the producers emitted.
@@ -169,22 +190,15 @@ impl<'a> SnnForward<'a> {
                         layer.name, layer.in_t, steps.len()
                     );
                 }
-                steps
-            };
-
-            // ---- Convolution per executed time step --------------------
-            let nnz = lw.w.count_nonzero() as u64;
-            let dense_w = lw.w.data.len() as u64;
-            let spatial = (layer.in_w * layer.in_h) as u64;
-            let planes = if layer.kind == ConvKind::Encoding { 8u64 } else { 1 };
-            let mut accs: Vec<Tensor<i32>> = Vec::with_capacity(layer.in_t);
-            for step_in in &inputs {
-                let acc = match self.opts.block_tile {
-                    Some((tw, th)) => block_conv2d(step_in, &lw.w, &lw.bias, tw, th),
-                    None => conv2d(step_in, &lw.w, &lw.bias),
-                };
-                stats.input_sparsity += step_in.sparsity();
-                accs.push(acc);
+                for step_in in &steps {
+                    let acc = match self.opts.block_tile {
+                        Some((tw, th)) => block_conv2d_events(step_in, &lw.w, &lw.bias, tw, th),
+                        None => conv2d_events(step_in, &lw.w, &lw.bias),
+                    };
+                    // Popcount, not a dense scan.
+                    stats.input_sparsity += step_in.sparsity();
+                    accs.push(acc);
+                }
             }
             stats.conv_steps = accs.len();
             stats.input_sparsity /= accs.len() as f64;
@@ -217,17 +231,18 @@ impl<'a> SnnForward<'a> {
                     let n = layer.c_out * layer.in_h * layer.in_w;
                     let mut lif = LifState::new(n);
                     let p = LifParams::from_quant(&lw.qp);
-                    let mut out_steps: Vec<Tensor<u8>> = Vec::with_capacity(layer.out_t);
+                    let mut out_steps: Vec<SpikeMap> = Vec::with_capacity(layer.out_t);
+                    let mut spikes_flat = vec![0u8; n];
                     for t in 0..layer.out_t {
                         // Mixed time steps: when in_t < out_t the conv
                         // result of the single computed step is replayed
                         // into the LIF at every output step (§II-A).
                         let acc = &accs[t.min(accs.len() - 1)];
-                        let mut spikes_flat = vec![0u8; n];
                         lif.step(p, &acc.data, &mut spikes_flat);
-                        let mut sp = Tensor::from_vec(layer.c_out, layer.in_h, layer.in_w, spikes_flat);
+                        let mut sp =
+                            SpikeMap::from_dense_flat(layer.c_out, layer.in_h, layer.in_w, &spikes_flat);
                         if layer.maxpool_after {
-                            sp = maxpool2x2_or(&sp);
+                            sp = sp.maxpool2x2_or();
                         }
                         stats.output_sparsity += sp.sparsity();
                         out_steps.push(sp);
@@ -272,15 +287,6 @@ impl<'a> SnnForward<'a> {
             main == name || l.concat_with.as_deref() == Some(name)
         })
     }
-}
-
-/// Channel-wise concatenation of two equally-sized maps.
-fn concat_c(a: &Tensor<u8>, b: &Tensor<u8>) -> Tensor<u8> {
-    assert_eq!((a.h, a.w), (b.h, b.w), "concat spatial mismatch");
-    let mut data = Vec::with_capacity(a.data.len() + b.data.len());
-    data.extend_from_slice(&a.data);
-    data.extend_from_slice(&b.data);
-    Tensor::from_vec(a.c + b.c, a.h, a.w, data)
 }
 
 #[cfg(test)]
@@ -362,15 +368,19 @@ mod tests {
         )
         .unwrap();
         let res = fwd.run(&random_image(&net, 9)).unwrap();
-        // Every non-head layer records out_t maps.
+        // Every non-head layer records out_t compressed maps.
         for l in &net.layers {
             if l.kind == ConvKind::Output {
                 continue;
             }
             let maps = res.spikes.get(&l.name).unwrap();
             assert_eq!(maps.len(), l.out_t, "{}", l.name);
-            // Binary.
-            assert!(maps.iter().all(|m| m.data.iter().all(|&v| v <= 1)));
+            // Compressed maps are binary by construction; check the
+            // recorded geometry instead.
+            for m in maps {
+                assert_eq!((m.c, m.h, m.w), (l.c_out, l.out_h(), l.out_w()), "{}", l.name);
+                assert!(m.count_set() <= m.len());
+            }
         }
     }
 
@@ -401,5 +411,95 @@ mod tests {
         for (name, st) in &res.stats {
             assert!((0.0..=1.0).contains(&st.input_sparsity), "{name}");
         }
+    }
+
+    /// The compressed data path must agree with a fully dense re-execution
+    /// of the same network — layer chaining, concat, pooling and replay
+    /// included. (The per-op equivalences are property-tested in
+    /// `ref_impl::conv` / `ref_impl::block_conv`; this pins the wiring.)
+    #[test]
+    fn compressed_forward_matches_dense_reference_wiring() {
+        let net = tiny();
+        let mut mw = ModelWeights::random(&net, 1.0, 14);
+        mw.prune_fine_grained(0.8);
+        let img = random_image(&net, 15);
+        let fwd = SnnForward::new(
+            &net,
+            &mw,
+            ForwardOptions { block_tile: Some((32, 18)), record_spikes: true },
+        )
+        .unwrap();
+        let res = fwd.run(&img).unwrap();
+
+        // Dense re-execution using the plain tensor ops.
+        let mut outputs: BTreeMap<String, Vec<Tensor<u8>>> = BTreeMap::new();
+        let mut prev: Option<String> = None;
+        let mut head = Tensor::zeros(0, 0, 0);
+        for layer in &net.layers {
+            let lw = mw.get(&layer.name).unwrap();
+            let inputs: Vec<Tensor<u8>> = if layer.kind == ConvKind::Encoding {
+                vec![img.clone(); layer.in_t]
+            } else {
+                let main = layer.input_from.clone().or_else(|| prev.clone()).unwrap();
+                let main_steps = &outputs[&main];
+                match layer.concat_with.as_deref() {
+                    None => main_steps.clone(),
+                    Some(o) => main_steps
+                        .iter()
+                        .zip(&outputs[o])
+                        .map(|(a, b)| {
+                            let mut d = a.data.clone();
+                            d.extend_from_slice(&b.data);
+                            Tensor::from_vec(a.c + b.c, a.h, a.w, d)
+                        })
+                        .collect(),
+                }
+            };
+            let accs: Vec<Tensor<i32>> = inputs
+                .iter()
+                .map(|i| block_conv2d(i, &lw.w, &lw.bias, 32, 18))
+                .collect();
+            match layer.kind {
+                ConvKind::Output => {
+                    let mut sum = Tensor::zeros(layer.c_out, layer.in_h, layer.in_w);
+                    for acc in &accs {
+                        for (s, &a) in sum.data.iter_mut().zip(&acc.data) {
+                            *s += a;
+                        }
+                    }
+                    head = sum;
+                }
+                _ => {
+                    let n = layer.c_out * layer.in_h * layer.in_w;
+                    let mut lif = LifState::new(n);
+                    let p = LifParams::from_quant(&lw.qp);
+                    let mut steps = Vec::new();
+                    for t in 0..layer.out_t {
+                        let acc = &accs[t.min(accs.len() - 1)];
+                        let mut spikes = vec![0u8; n];
+                        lif.step(p, &acc.data, &mut spikes);
+                        let mut sp =
+                            Tensor::from_vec(layer.c_out, layer.in_h, layer.in_w, spikes);
+                        if layer.maxpool_after {
+                            sp = crate::ref_impl::maxpool2x2_or(&sp);
+                        }
+                        steps.push(sp);
+                    }
+                    // Compare against the recorded compressed maps.
+                    let rec = res.spikes.get(&layer.name).unwrap();
+                    for (t, (dense_sp, comp)) in steps.iter().zip(rec).enumerate() {
+                        assert_eq!(
+                            comp.to_dense().data,
+                            dense_sp.data,
+                            "{} step {t}",
+                            layer.name
+                        );
+                    }
+                    outputs.insert(layer.name.clone(), steps);
+                }
+            }
+            prev = Some(layer.name.clone());
+        }
+        assert_eq!(res.head_acc.data, head.data, "head accumulator");
     }
 }

@@ -7,9 +7,17 @@
 //! `python/compile/aot.py`). The exported entry point takes one `u8[3,H,W]`
 //! image parameter and returns a 1-tuple of the `s32` head accumulator
 //! (lowered with `return_tuple=True`).
+//!
+//! The `xla` bindings are behind the **`pjrt` cargo feature** (they need
+//! the vendored xla_extension toolchain, which offline builds lack).
+//! Without the feature a stub [`SnnExecutable`] compiles in whose `load`
+//! always errors, and the coordinator falls back to the functional golden
+//! model — bit-identical to the exported graph by construction. This is
+//! also the only place dense `Tensor<u8>` frames cross into the runtime:
+//! everything upstream carries compressed [`crate::sparse::SpikeMap`]s.
 
 use crate::tensor::Tensor;
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 use std::path::{Path, PathBuf};
 
 /// Default artifact locations relative to the repo root.
@@ -85,6 +93,7 @@ pub fn load_trained_or_random(
 }
 
 /// A compiled SNN inference executable on the PJRT CPU client.
+#[cfg(feature = "pjrt")]
 pub struct SnnExecutable {
     client: xla::PjRtClient,
     exe: xla::PjRtLoadedExecutable,
@@ -94,7 +103,11 @@ pub struct SnnExecutable {
     pub head_shape: (usize, usize, usize),
 }
 
+#[cfg(feature = "pjrt")]
 impl SnnExecutable {
+    /// Whether this build carries the real PJRT runtime.
+    pub const SUPPORTED: bool = true;
+
     /// Load and compile an HLO-text artifact.
     ///
     /// `input_shape`/`head_shape` are `(c, h, w)` of the exported graph
@@ -104,6 +117,7 @@ impl SnnExecutable {
         input_shape: (usize, usize, usize),
         head_shape: (usize, usize, usize),
     ) -> Result<Self> {
+        use anyhow::Context;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let proto = xla::HloModuleProto::from_text_file(hlo_path).with_context(|| {
             format!("parsing HLO text {} (run `make artifacts`?)", hlo_path.display())
@@ -122,6 +136,7 @@ impl SnnExecutable {
     /// accumulator (bit-exact with the rust golden model in whole-image
     /// mode and with the python graph).
     pub fn run(&self, image: &Tensor<u8>) -> Result<Tensor<i32>> {
+        use anyhow::bail;
         let (c, h, w) = self.input_shape;
         if (image.c, image.h, image.w) != (c, h, w) {
             bail!(
@@ -145,6 +160,46 @@ impl SnnExecutable {
             bail!("head size {} != expected {}x{}x{}", data.len(), hc, hh, hw);
         }
         Ok(Tensor::from_vec(hc, hh, hw, data))
+    }
+}
+
+/// Stub executable compiled when the `pjrt` feature is off: loading always
+/// errors, so callers fall back to the golden model (bit-identical to the
+/// exported graph).
+#[cfg(not(feature = "pjrt"))]
+pub struct SnnExecutable {
+    /// Input channels/height/width the graph was exported for.
+    pub input_shape: (usize, usize, usize),
+    /// Head channels/height/width.
+    pub head_shape: (usize, usize, usize),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl SnnExecutable {
+    /// Whether this build carries the real PJRT runtime.
+    pub const SUPPORTED: bool = false;
+
+    /// Always errors: this build has no PJRT client.
+    pub fn load(
+        hlo_path: &Path,
+        _input_shape: (usize, usize, usize),
+        _head_shape: (usize, usize, usize),
+    ) -> Result<Self> {
+        anyhow::bail!(
+            "PJRT runtime not built (enable the `pjrt` cargo feature); \
+             cannot execute {}",
+            hlo_path.display()
+        )
+    }
+
+    /// Platform string (stub).
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Unreachable in practice — `load` never succeeds on a stub build.
+    pub fn run(&self, _image: &Tensor<u8>) -> Result<Tensor<i32>> {
+        anyhow::bail!("PJRT runtime not built (enable the `pjrt` cargo feature)")
     }
 }
 

@@ -4,8 +4,16 @@
 //! the packed nonzero 8-bit weights in row-major order. This is the format
 //! held in the accelerator's Weight Map SRAM / NZ Weight SRAM banks and
 //! consumed one nonzero per cycle by the priority encoders (§III-C).
+//!
+//! The map is stored LSB-first in `u16` words. A 3×3 plane is 9 bits —
+//! one word, as in the RTL, and iteration keeps a single-word fast path
+//! for it; larger planes (5×5 = 25 bits, 7×7 = 49 bits) span multiple
+//! words and are scanned word by word in the same row-major order.
 
 use crate::tensor::Kernel4;
+
+/// Map word width in bits.
+const WORD_BITS: usize = 16;
 
 /// One kernel plane, bit-mask compressed.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -14,28 +22,35 @@ pub struct BitMaskKernel {
     pub kh: usize,
     /// Kernel width.
     pub kw: usize,
-    /// Sparse map, one bit per position, row-major; bit `i*kw + j` set iff
-    /// the weight at `(i, j)` is nonzero. Stored LSB-first in `u16` words
-    /// (a 3×3 map is 9 bits — one word, as in the RTL).
+    /// Sparse map, one bit per position, row-major; bit `i*kw + j` (stored
+    /// LSB-first, 16 positions per word) set iff the weight at `(i, j)` is
+    /// nonzero.
     pub map: Vec<u16>,
     /// Packed nonzero weights in row-major scan order.
     pub nz: Vec<i8>,
 }
 
 impl BitMaskKernel {
-    /// Compress a dense plane.
+    /// Compress a dense plane of any size (3×3 fits one map word; 5×5 and
+    /// 7×7 span multiple words).
     pub fn from_dense(plane: &[i8], kh: usize, kw: usize) -> Self {
         assert_eq!(plane.len(), kh * kw);
-        assert!(kh * kw <= 16, "kernel plane larger than one map word");
-        let mut map = 0u16;
+        let nwords = (kh * kw).div_ceil(WORD_BITS).max(1);
+        let mut map = vec![0u16; nwords];
         let mut nz = Vec::new();
         for (i, &w) in plane.iter().enumerate() {
             if w != 0 {
-                map |= 1 << i;
+                map[i / WORD_BITS] |= 1 << (i % WORD_BITS);
                 nz.push(w);
             }
         }
-        BitMaskKernel { kh, kw, map: vec![map], nz }
+        BitMaskKernel { kh, kw, map, nz }
+    }
+
+    /// Whether position `i` (row-major) is a nonzero weight.
+    #[inline]
+    pub fn bit(&self, i: usize) -> bool {
+        self.map[i / WORD_BITS] >> (i % WORD_BITS) & 1 == 1
     }
 
     /// Decompress back to a dense plane.
@@ -43,7 +58,7 @@ impl BitMaskKernel {
         let mut out = vec![0i8; self.kh * self.kw];
         let mut it = self.nz.iter();
         for (i, slot) in out.iter_mut().enumerate() {
-            if self.map[0] >> i & 1 == 1 {
+            if self.bit(i) {
                 *slot = *it.next().expect("map/nz length mismatch");
             }
         }
@@ -59,9 +74,8 @@ impl BitMaskKernel {
     /// hardware's priority encoders produce (row-major, leftmost first).
     pub fn iter_nz(&self) -> impl Iterator<Item = (usize, usize, i8)> + '_ {
         let kw = self.kw;
-        let map = self.map[0];
         (0..self.kh * self.kw)
-            .filter(move |i| map >> i & 1 == 1)
+            .filter(move |&i| self.bit(i))
             .zip(self.nz.iter())
             .map(move |(i, &w)| (i / kw, i % kw, w))
     }
@@ -91,6 +105,7 @@ mod tests {
         let plane = vec![0i8, 5, 0, 0, 0, -3, 2, 0, 0];
         let bm = BitMaskKernel::from_dense(&plane, 3, 3);
         assert_eq!(bm.nnz(), 3);
+        assert_eq!(bm.map.len(), 1); // single-word map for 3×3
         assert_eq!(bm.to_dense(), plane);
     }
 
@@ -127,9 +142,44 @@ mod tests {
     }
 
     #[test]
+    fn five_by_five_spans_two_words() {
+        // Bits at positions 0, 15, 16 and 24 exercise both word boundaries.
+        let mut plane = vec![0i8; 25];
+        plane[0] = 1;
+        plane[15] = -2;
+        plane[16] = 3;
+        plane[24] = 4;
+        let bm = BitMaskKernel::from_dense(&plane, 5, 5);
+        assert_eq!(bm.map.len(), 2);
+        assert_eq!(bm.nnz(), 4);
+        assert_eq!(bm.to_dense(), plane);
+        let nz: Vec<_> = bm.iter_nz().collect();
+        assert_eq!(nz, vec![(0, 0, 1), (3, 0, -2), (3, 1, 3), (4, 4, 4)]);
+    }
+
+    #[test]
+    fn seven_by_seven_roundtrip() {
+        let plane: Vec<i8> =
+            (0..49).map(|i| if i % 3 == 0 { (i % 11) as i8 - 5 } else { 0 }).collect();
+        let bm = BitMaskKernel::from_dense(&plane, 7, 7);
+        assert_eq!(bm.map.len(), 4); // 49 bits → 4 words
+        assert_eq!(bm.to_dense(), plane);
+        // Row-major scan order preserved across word boundaries.
+        let mut last = None;
+        for (r, c, _) in bm.iter_nz() {
+            let idx = r * 7 + c;
+            if let Some(prev) = last {
+                assert!(idx > prev);
+            }
+            last = Some(idx);
+        }
+    }
+
+    #[test]
     fn prop_roundtrip_any_plane() {
         run_prop("bitmask/roundtrip", |g| {
-            let (kh, kw) = *g.rng().choose(&[(1, 1), (3, 3), (2, 2), (3, 1)]);
+            let (kh, kw) =
+                *g.rng().choose(&[(1, 1), (3, 3), (2, 2), (3, 1), (5, 5), (7, 7)]);
             let plane = g.sparse_i8(kh * kw, 0.4);
             let bm = BitMaskKernel::from_dense(&plane, kh, kw);
             assert_eq!(bm.to_dense(), plane);

@@ -1,4 +1,5 @@
-//! Sparse weight compression formats (§III-B-2, Fig 10, Fig 17).
+//! Sparse compression — for **weights** (§III-B-2, Fig 10, Fig 17) and
+//! for **activations** ([`spike`]).
 //!
 //! The paper compares three representations of a pruned kernel plane:
 //!
@@ -12,13 +13,20 @@
 //!
 //! Each format reports its storage cost in bits so Fig 17 (DRAM access of
 //! the network parameters per representation) can be regenerated exactly.
+//!
+//! Activations get the same treatment: [`SpikePlane`] / [`SpikeMap`] are
+//! word-packed bitmaps carried end-to-end through the golden model and the
+//! cycle simulator, so activation sparsity is *exploited* (event-driven
+//! iteration in O(popcount)) rather than merely measured.
 
 pub mod bitmask;
 pub mod csr;
+pub mod spike;
 pub mod stats;
 
 pub use bitmask::BitMaskKernel;
 pub use csr::CsrKernel;
+pub use spike::{SpikeMap, SpikePlane};
 pub use stats::{format_bits, FormatCost};
 
 /// Storage cost (bits) of one kernel plane in the dense format.

@@ -1,0 +1,624 @@
+//! Compressed spike-plane representation — activation sparsity as a
+//! first-class type, not a statistic.
+//!
+//! SNN activations are binary, so a feature-map channel is exactly a
+//! bitmap: [`SpikePlane`] stores one `h × w` channel as word-packed row
+//! bitmaps (64 positions per `u64` word, rows padded to a whole word), and
+//! [`SpikeMap`] stacks `c` planes into a `(c, h, w)` feature map. This is
+//! the software twin of the accelerator's Input/Output SRAM content: the
+//! spike window the hardware reads *is* a bitmap, and the §IV-E power win
+//! comes from never toggling a PE whose enable bit is zero.
+//!
+//! Everything sparsity-related becomes `popcount` instead of a dense scan:
+//!
+//! - [`SpikePlane::count_set`] / [`SpikeMap::density`] — O(words), cached;
+//! - [`SpikePlane::iter_set`] — visits only fired neurons;
+//! - [`SpikePlane::accumulate_shifted_into`] — the event-driven inner loop
+//!   of sparse convolution: apply one weight to every output whose
+//!   (replicate-clamped) source bit is set, in O(popcount) per row, with
+//!   an O(1) all-zero fast path.
+//!
+//! The representation is bit-exact with the dense `Tensor<u8>` path; the
+//! property tests below pin `from_dense ∘ to_dense = id` and the
+//! event-driven accumulate against a naive dense reference across random
+//! densities from 0% to 100%.
+
+use crate::tensor::Tensor;
+
+/// One binary channel plane, word-packed: bit `x % 64` of word
+/// `y * words_per_row + x / 64` is the neuron at `(y, x)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpikePlane {
+    /// Height (rows).
+    pub h: usize,
+    /// Width (columns).
+    pub w: usize,
+    /// `u64` words per row (`ceil(w / 64)`; padding bits are always zero).
+    words_per_row: usize,
+    /// Row-major packed bitmap, `len == h * words_per_row`.
+    words: Vec<u64>,
+    /// Cached number of set bits.
+    nnz: usize,
+}
+
+impl SpikePlane {
+    /// All-zero plane.
+    pub fn zeros(h: usize, w: usize) -> SpikePlane {
+        let words_per_row = w.div_ceil(64).max(1);
+        SpikePlane { h, w, words_per_row, words: vec![0; h * words_per_row], nnz: 0 }
+    }
+
+    /// Compress a dense row-major plane (any nonzero value counts as a
+    /// spike — inputs are binary by construction).
+    pub fn from_dense(data: &[u8], h: usize, w: usize) -> SpikePlane {
+        assert_eq!(data.len(), h * w, "spike plane shape/data mismatch");
+        let mut p = SpikePlane::zeros(h, w);
+        for y in 0..h {
+            let row = &data[y * w..(y + 1) * w];
+            for (x, &v) in row.iter().enumerate() {
+                if v != 0 {
+                    p.set(y, x);
+                }
+            }
+        }
+        p
+    }
+
+    /// Decompress to a dense row-major 0/1 plane.
+    pub fn to_dense(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.h * self.w];
+        for (y, x) in self.iter_set() {
+            out[y * self.w + x] = 1;
+        }
+        out
+    }
+
+    /// Whether the bit at `(y, x)` is set.
+    #[inline]
+    pub fn get(&self, y: usize, x: usize) -> bool {
+        debug_assert!(y < self.h && x < self.w);
+        self.words[y * self.words_per_row + x / 64] >> (x % 64) & 1 == 1
+    }
+
+    /// Set the bit at `(y, x)` (idempotent).
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize) {
+        debug_assert!(y < self.h && x < self.w);
+        let idx = y * self.words_per_row + x / 64;
+        let mask = 1u64 << (x % 64);
+        if self.words[idx] & mask == 0 {
+            self.words[idx] |= mask;
+            self.nnz += 1;
+        }
+    }
+
+    /// Number of set bits (fired neurons) — cached, O(1).
+    #[inline]
+    pub fn count_set(&self) -> usize {
+        self.nnz
+    }
+
+    /// Whether no neuron fired — the fast-path predicate: an all-zero
+    /// plane contributes nothing to any convolution and is skipped in O(1).
+    #[inline]
+    pub fn is_all_zero(&self) -> bool {
+        self.nnz == 0
+    }
+
+    /// Fraction of set bits.
+    pub fn density(&self) -> f64 {
+        if self.h * self.w == 0 {
+            0.0
+        } else {
+            self.nnz as f64 / (self.h * self.w) as f64
+        }
+    }
+
+    /// Storage cost in bits (1 bit per neuron — spikes are binary, so the
+    /// bitmap *is* the activation data; dense `Tensor<u8>` spends 8×).
+    pub fn storage_bits(&self) -> usize {
+        self.h * self.w
+    }
+
+    /// Packed words of row `y`.
+    #[inline]
+    pub fn row_words(&self, y: usize) -> &[u64] {
+        debug_assert!(y < self.h);
+        &self.words[y * self.words_per_row..(y + 1) * self.words_per_row]
+    }
+
+    /// Iterate set bits as `(y, x)` in row-major order, visiting only
+    /// fired neurons (popcount-driven, zero words skipped wholesale).
+    pub fn iter_set(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        (0..self.h).flat_map(move |y| {
+            self.row_words(y).iter().enumerate().flat_map(move |(wi, &word)| {
+                BitIter { word }.map(move |b| (y, wi * 64 + b))
+            })
+        })
+    }
+
+    /// Extract the fully-in-bounds sub-tile `[y0, y0+th) × [x0, x0+tw)`.
+    /// Only the words overlapping the column window are visited, so the
+    /// cost is O(popcount of the window) + O(covered words) — extracting N
+    /// tiles from a row costs one pass over that row in total.
+    pub fn extract_tile(&self, y0: usize, x0: usize, th: usize, tw: usize) -> SpikePlane {
+        assert!(y0 + th <= self.h && x0 + tw <= self.w, "tile out of bounds");
+        let mut out = SpikePlane::zeros(th, tw);
+        if tw == 0 {
+            return out;
+        }
+        let wi_first = x0 / 64;
+        let wi_last = (x0 + tw - 1) / 64;
+        for ty in 0..th {
+            let row = self.row_words(y0 + ty);
+            for wi in wi_first..=wi_last {
+                let mut bits = row[wi];
+                // Mask off columns outside [x0, x0+tw) in the edge words.
+                if wi == wi_first {
+                    bits &= u64::MAX << (x0 % 64);
+                }
+                if wi == wi_last {
+                    let end = (x0 + tw - 1) % 64;
+                    if end < 63 {
+                        bits &= (1u64 << (end + 1)) - 1;
+                    }
+                }
+                while bits != 0 {
+                    let sx = wi * 64 + bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    out.set(ty, sx - x0);
+                }
+            }
+        }
+        out
+    }
+
+    /// 2×2 stride-2 OR max pooling, event-driven: each set input bit ORs
+    /// into its output cell, so the cost is O(popcount) — the hardware's
+    /// "simple OR gates" (§III-B) in compressed form. Odd trailing
+    /// rows/columns are dropped, matching the dense reference.
+    pub fn maxpool2x2_or(&self) -> SpikePlane {
+        let (oh, ow) = (self.h / 2, self.w / 2);
+        let mut out = SpikePlane::zeros(oh, ow);
+        for (y, x) in self.iter_set() {
+            if y / 2 < oh && x / 2 < ow {
+                out.set(y / 2, x / 2);
+            }
+        }
+        out
+    }
+
+    /// The event-driven convolution/PE inner loop: for every output
+    /// position `(y, x)` of the same `h × w` grid whose replicate-clamped
+    /// source `(y+dy, x+dx)` is a set bit, add `contrib` to
+    /// `acc[y*w + x]`. Returns the number of additions applied (= the PE
+    /// array's `enabled` event count for this weight).
+    ///
+    /// Semantically identical to building the dense enable map
+    /// `en(y,x) = self.get(clamp(y+dy), clamp(x+dx))` and accumulating
+    /// where `en` is set — but the cost is O(popcount) per row instead of
+    /// O(w), and an all-zero plane returns in O(1).
+    pub fn accumulate_shifted_into(
+        &self,
+        acc: &mut [i32],
+        dy: isize,
+        dx: isize,
+        contrib: i32,
+    ) -> u64 {
+        debug_assert_eq!(acc.len(), self.h * self.w);
+        if self.nnz == 0 {
+            return 0; // all-zero fast path
+        }
+        let (h, w) = (self.h, self.w);
+        let mut applied = 0u64;
+        for y in 0..h {
+            let sy = (y as isize + dy).clamp(0, h as isize - 1) as usize;
+            let row = self.row_words(sy);
+            let out_row = &mut acc[y * w..(y + 1) * w];
+            if dx >= 0 {
+                let dxu = dx as usize;
+                // Interior: output x = sx - dx reads source sx unclamped.
+                for (wi, &word) in row.iter().enumerate() {
+                    let mut bits = word;
+                    while bits != 0 {
+                        let sx = wi * 64 + bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        if sx >= dxu {
+                            out_row[sx - dxu] += contrib;
+                            applied += 1;
+                        }
+                    }
+                }
+                // Right edge: outputs in [w-dx, w) replicate-read in[w-1].
+                if dxu > 0 && self.get(sy, w - 1) {
+                    for slot in out_row[w.saturating_sub(dxu)..].iter_mut() {
+                        *slot += contrib;
+                        applied += 1;
+                    }
+                }
+            } else {
+                let m = (-dx) as usize;
+                // Interior: output x = sx + m reads source sx unclamped.
+                for (wi, &word) in row.iter().enumerate() {
+                    let mut bits = word;
+                    while bits != 0 {
+                        let sx = wi * 64 + bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        if sx + m < w {
+                            out_row[sx + m] += contrib;
+                            applied += 1;
+                        }
+                    }
+                }
+                // Left edge: outputs in [0, m) replicate-read in[0].
+                if self.get(sy, 0) {
+                    for slot in out_row[..m.min(w)].iter_mut() {
+                        *slot += contrib;
+                        applied += 1;
+                    }
+                }
+            }
+        }
+        applied
+    }
+}
+
+/// Iterator over the set-bit offsets of one word.
+struct BitIter {
+    word: u64,
+}
+
+impl Iterator for BitIter {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        if self.word == 0 {
+            None
+        } else {
+            let b = self.word.trailing_zeros() as usize;
+            self.word &= self.word - 1;
+            Some(b)
+        }
+    }
+}
+
+/// A `(c, h, w)` binary feature map as a stack of compressed planes — the
+/// type threaded between layers by the golden model and the cycle-level
+/// controller.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpikeMap {
+    /// Channels.
+    pub c: usize,
+    /// Height.
+    pub h: usize,
+    /// Width.
+    pub w: usize,
+    planes: Vec<SpikePlane>,
+}
+
+impl SpikeMap {
+    /// All-zero map.
+    pub fn zeros(c: usize, h: usize, w: usize) -> SpikeMap {
+        SpikeMap { c, h, w, planes: (0..c).map(|_| SpikePlane::zeros(h, w)).collect() }
+    }
+
+    /// Compress a dense spike tensor (any nonzero value counts as a spike).
+    pub fn from_dense(t: &Tensor<u8>) -> SpikeMap {
+        SpikeMap {
+            c: t.c,
+            h: t.h,
+            w: t.w,
+            planes: (0..t.c).map(|c| SpikePlane::from_dense(t.channel(c), t.h, t.w)).collect(),
+        }
+    }
+
+    /// Compress from a flat row-major `(c, h, w)` buffer (the LIF executor
+    /// emits flat spike vectors).
+    pub fn from_dense_flat(c: usize, h: usize, w: usize, data: &[u8]) -> SpikeMap {
+        assert_eq!(data.len(), c * h * w, "spike map shape/data mismatch");
+        SpikeMap {
+            c,
+            h,
+            w,
+            planes: (0..c)
+                .map(|ch| SpikePlane::from_dense(&data[ch * h * w..(ch + 1) * h * w], h, w))
+                .collect(),
+        }
+    }
+
+    /// Decompress to a dense `Tensor<u8>` — used only at representation
+    /// boundaries (PJRT runtime, visualization).
+    pub fn to_dense(&self) -> Tensor<u8> {
+        let mut out = Tensor::zeros(self.c, self.h, self.w);
+        for (c, plane) in self.planes.iter().enumerate() {
+            let base = c * self.h * self.w;
+            for (y, x) in plane.iter_set() {
+                out.data[base + y * self.w + x] = 1;
+            }
+        }
+        out
+    }
+
+    /// One channel plane.
+    #[inline]
+    pub fn plane(&self, c: usize) -> &SpikePlane {
+        &self.planes[c]
+    }
+
+    /// Mutable channel plane.
+    #[inline]
+    pub fn plane_mut(&mut self, c: usize) -> &mut SpikePlane {
+        &mut self.planes[c]
+    }
+
+    /// Set the bit at `(c, y, x)`.
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize) {
+        self.planes[c].set(y, x);
+    }
+
+    /// Whether the bit at `(c, y, x)` is set.
+    #[inline]
+    pub fn get(&self, c: usize, y: usize, x: usize) -> bool {
+        self.planes[c].get(y, x)
+    }
+
+    /// Total neurons.
+    pub fn len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Whether the map has no neurons.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total fired neurons across all channels — O(c), cached per plane.
+    pub fn count_set(&self) -> usize {
+        self.planes.iter().map(|p| p.count_set()).sum()
+    }
+
+    /// Fraction of fired neurons.
+    pub fn density(&self) -> f64 {
+        if self.len() == 0 {
+            0.0
+        } else {
+            self.count_set() as f64 / self.len() as f64
+        }
+    }
+
+    /// Fraction of silent neurons (the §IV-E activation sparsity) — what
+    /// `Tensor::<u8>::sparsity` computed with a dense scan, now a popcount.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.density()
+    }
+
+    /// Storage cost in bits (1 bit per neuron).
+    pub fn storage_bits(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Channel-wise concatenation (the CSP concat wiring).
+    pub fn concat(&self, other: &SpikeMap) -> SpikeMap {
+        assert_eq!((self.h, self.w), (other.h, other.w), "concat spatial mismatch");
+        let mut planes = Vec::with_capacity(self.c + other.c);
+        planes.extend(self.planes.iter().cloned());
+        planes.extend(other.planes.iter().cloned());
+        SpikeMap { c: self.c + other.c, h: self.h, w: self.w, planes }
+    }
+
+    /// 2×2 stride-2 OR max pooling over every channel, event-driven.
+    pub fn maxpool2x2_or(&self) -> SpikeMap {
+        SpikeMap {
+            c: self.c,
+            h: self.h / 2,
+            w: self.w / 2,
+            planes: self.planes.iter().map(|p| p.maxpool2x2_or()).collect(),
+        }
+    }
+
+    /// OR a tile into channel `k` at `(y0, x0)` — the controller's
+    /// compressed output write (tiles never overlap, so OR == write).
+    pub fn paste(&mut self, k: usize, y0: usize, x0: usize, tile: &SpikePlane) {
+        assert!(y0 + tile.h <= self.h && x0 + tile.w <= self.w, "paste out of bounds");
+        let plane = &mut self.planes[k];
+        for (y, x) in tile.iter_set() {
+            plane.set(y0 + y, x0 + x);
+        }
+    }
+
+    /// Bit-slice a multibit `u8` map into 8 binary planes: plane `b` holds
+    /// bit `b` of every pixel. This is how the encoding layer's bit-serial
+    /// datapath (§III-B) sees an RGB frame — 8 spike maps, one per
+    /// significance level.
+    pub fn bit_slice(t: &Tensor<u8>) -> Vec<SpikeMap> {
+        (0..8)
+            .map(|b| {
+                let mut m = SpikeMap::zeros(t.c, t.h, t.w);
+                for c in 0..t.c {
+                    for y in 0..t.h {
+                        for x in 0..t.w {
+                            if t.get(c, y, x) >> b & 1 == 1 {
+                                m.set(c, y, x);
+                            }
+                        }
+                    }
+                }
+                m
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::run_prop;
+    use crate::util::Rng;
+
+    fn random_plane(rng: &mut Rng, h: usize, w: usize, density: f64) -> (Vec<u8>, SpikePlane) {
+        let data: Vec<u8> = (0..h * w).map(|_| u8::from(rng.chance(density))).collect();
+        let plane = SpikePlane::from_dense(&data, h, w);
+        (data, plane)
+    }
+
+    #[test]
+    fn prop_roundtrip_all_densities() {
+        // from_dense ∘ to_dense = id across densities 0%..=100%,
+        // including shapes wider than one word.
+        run_prop("spike/roundtrip", |g| {
+            let h = g.usize(1, 8);
+            let w = g.usize(1, 150); // exercise multi-word rows
+            let density = g.f64(0.0, 1.0);
+            let density = if g.bool(0.1) { 0.0 } else if g.bool(0.1) { 1.0 } else { density };
+            let data = g.spikes(h * w, density);
+            let plane = SpikePlane::from_dense(&data, h, w);
+            assert_eq!(plane.to_dense(), data);
+            let nnz = data.iter().filter(|&&v| v != 0).count();
+            assert_eq!(plane.count_set(), nnz);
+            assert_eq!(plane.is_all_zero(), nnz == 0);
+        });
+    }
+
+    #[test]
+    fn prop_iter_set_matches_dense_scan() {
+        run_prop("spike/iter-set", |g| {
+            let h = g.usize(1, 6);
+            let w = g.usize(1, 130);
+            let data = g.spikes(h * w, 0.3);
+            let plane = SpikePlane::from_dense(&data, h, w);
+            let got: Vec<(usize, usize)> = plane.iter_set().collect();
+            let want: Vec<(usize, usize)> = (0..h)
+                .flat_map(|y| (0..w).map(move |x| (y, x)))
+                .filter(|&(y, x)| data[y * w + x] != 0)
+                .collect();
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn prop_accumulate_matches_dense_enable_map() {
+        // The event-driven accumulate must equal the naive dense form:
+        // acc[y*w+x] += contrib where plane(clamp(y+dy), clamp(x+dx)) set,
+        // for arbitrary shifts (up to 7×7 kernels) and any density.
+        run_prop("spike/accumulate-shifted", |g| {
+            let h = g.usize(1, 7);
+            let w = g.usize(1, 80);
+            let density = g.f64(0.0, 1.0);
+            let data = g.spikes(h * w, density);
+            let plane = SpikePlane::from_dense(&data, h, w);
+            let dy = g.i64(-3, 3) as isize;
+            let dx = g.i64(-3, 3) as isize;
+            let contrib = g.i64(-50, 50) as i32;
+
+            let mut got = vec![0i32; h * w];
+            let applied = plane.accumulate_shifted_into(&mut got, dy, dx, contrib);
+
+            let mut want = vec![0i32; h * w];
+            let mut want_applied = 0u64;
+            for y in 0..h {
+                for x in 0..w {
+                    let sy = (y as isize + dy).clamp(0, h as isize - 1) as usize;
+                    let sx = (x as isize + dx).clamp(0, w as isize - 1) as usize;
+                    if data[sy * w + sx] != 0 {
+                        want[y * w + x] += contrib;
+                        want_applied += 1;
+                    }
+                }
+            }
+            assert_eq!(got, want, "dy={dy} dx={dx} h={h} w={w}");
+            assert_eq!(applied, want_applied);
+        });
+    }
+
+    #[test]
+    fn all_zero_fast_path_applies_nothing() {
+        let plane = SpikePlane::zeros(6, 9);
+        let mut acc = vec![7i32; 54];
+        assert_eq!(plane.accumulate_shifted_into(&mut acc, -1, 1, 5), 0);
+        assert!(acc.iter().all(|&v| v == 7));
+    }
+
+    #[test]
+    fn prop_maxpool_matches_dense_reference() {
+        run_prop("spike/maxpool", |g| {
+            let h = g.usize(1, 6) * 2;
+            let w = g.usize(1, 40) * 2;
+            let data = g.spikes(h * w, 0.3);
+            let t = Tensor::from_vec(1, h, w, data);
+            let want = crate::ref_impl::maxpool2x2_or(&t);
+            let got = SpikePlane::from_dense(t.channel(0), h, w).maxpool2x2_or();
+            assert_eq!(got.to_dense(), want.data);
+        });
+    }
+
+    #[test]
+    fn extract_tile_matches_dense_window() {
+        let mut rng = Rng::new(11);
+        let (data, plane) = random_plane(&mut rng, 10, 70, 0.3);
+        let tile = plane.extract_tile(3, 17, 5, 40);
+        for y in 0..5 {
+            for x in 0..40 {
+                assert_eq!(tile.get(y, x), data[(3 + y) * 70 + 17 + x] != 0, "({y},{x})");
+            }
+        }
+        assert_eq!(tile.h, 5);
+        assert_eq!(tile.w, 40);
+    }
+
+    #[test]
+    fn map_roundtrip_and_counts() {
+        let t = Tensor::from_vec(2, 2, 3, vec![1, 0, 0, 0, 1, 0, 0, 0, 0, 1, 1, 1]);
+        let m = SpikeMap::from_dense(&t);
+        assert_eq!(m.count_set(), 5);
+        assert!((m.density() - 5.0 / 12.0).abs() < 1e-12);
+        assert!((m.sparsity() - (1.0 - 5.0 / 12.0)).abs() < 1e-12);
+        let back = m.to_dense();
+        assert_eq!(back.data, t.data);
+        assert_eq!(m.storage_bits(), 12);
+    }
+
+    #[test]
+    fn map_concat_stacks_channels() {
+        let a = SpikeMap::from_dense(&Tensor::from_vec(1, 1, 2, vec![1, 0]));
+        let b = SpikeMap::from_dense(&Tensor::from_vec(2, 1, 2, vec![0, 1, 1, 1]));
+        let cat = a.concat(&b);
+        assert_eq!((cat.c, cat.h, cat.w), (3, 1, 2));
+        assert_eq!(cat.to_dense().data, vec![1, 0, 0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn map_paste_writes_tile() {
+        let mut m = SpikeMap::zeros(2, 4, 4);
+        let tile = SpikePlane::from_dense(&[1, 0, 0, 1], 2, 2);
+        m.paste(1, 2, 2, &tile);
+        assert!(m.get(1, 2, 2));
+        assert!(m.get(1, 3, 3));
+        assert!(!m.get(1, 2, 3));
+        assert!(!m.get(0, 2, 2));
+        assert_eq!(m.count_set(), 2);
+    }
+
+    #[test]
+    fn bit_slice_reassembles_pixels() {
+        let t = Tensor::from_vec(1, 1, 3, vec![0u8, 255, 0b1010_0101]);
+        let slices = SpikeMap::bit_slice(&t);
+        assert_eq!(slices.len(), 8);
+        for x in 0..3 {
+            let mut v = 0u8;
+            for (b, s) in slices.iter().enumerate() {
+                if s.get(0, 0, x) {
+                    v |= 1 << b;
+                }
+            }
+            assert_eq!(v, t.get(0, 0, x));
+        }
+    }
+
+    #[test]
+    fn from_dense_flat_matches_tensor_path() {
+        let data = vec![0u8, 1, 1, 0, 0, 0, 1, 0, 1, 1, 0, 0];
+        let t = Tensor::from_vec(2, 2, 3, data.clone());
+        assert_eq!(SpikeMap::from_dense_flat(2, 2, 3, &data), SpikeMap::from_dense(&t));
+    }
+}

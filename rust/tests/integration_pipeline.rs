@@ -140,9 +140,10 @@ fn pipeline_rejects_weights_for_wrong_topology() {
 
 #[test]
 fn controller_rejects_overlimit_layer() {
-    use scsnn::accel::controller::SystemController;
+    use scsnn::accel::controller::{LayerInput, SystemController};
     use scsnn::config::AccelConfig;
     use scsnn::model::topology::{ConvKind, ConvSpec};
+    use scsnn::sparse::SpikeMap;
     // 513 input channels exceeds the §III-D register limit.
     let spec = ConvSpec {
         name: "bad".into(),
@@ -169,7 +170,7 @@ fn controller_rejects_overlimit_layer() {
     };
     let w = ModelWeights::random(&small, 0.5, 24);
     let lw = w.get("bad").unwrap();
-    let inputs = vec![scsnn::tensor::Tensor::zeros(513, 18, 32)];
+    let inputs = vec![SpikeMap::zeros(513, 18, 32)];
     let mut ctrl = SystemController::new(AccelConfig::paper());
-    assert!(ctrl.run_layer(&spec, lw, &inputs).is_err());
+    assert!(ctrl.run_layer(&spec, lw, LayerInput::Spikes(&inputs)).is_err());
 }

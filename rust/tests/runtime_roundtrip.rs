@@ -12,6 +12,10 @@ use scsnn::ref_impl::{ForwardOptions, SnnForward};
 use scsnn::runtime::{ArtifactPaths, SnnExecutable};
 
 fn artifacts() -> Option<ArtifactPaths> {
+    if !SnnExecutable::SUPPORTED {
+        eprintln!("skipping runtime roundtrip: built without the `pjrt` feature");
+        return None;
+    }
     let paths = ArtifactPaths::in_dir(&ArtifactPaths::default_dir());
     if paths.available() && paths.dataset_test.exists() {
         Some(paths)

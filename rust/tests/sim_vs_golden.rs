@@ -3,13 +3,18 @@
 //! shape the network uses — including the CSP wiring, mixed time steps,
 //! bit-serial encoding, pooling and the no-reset head — and its cycle
 //! counts must agree with the analytic latency model.
+//!
+//! Activations flow as compressed [`SpikeMap`]s through both sides: the
+//! controller consumes and emits them natively, and the golden model
+//! threads them between layers.
 
-use scsnn::accel::controller::SystemController;
+use scsnn::accel::controller::{LayerInput, SystemController};
 use scsnn::accel::latency::LatencyModel;
 use scsnn::config::AccelConfig;
 use scsnn::model::topology::{ConvKind, NetworkSpec, Scale, TimeStepConfig};
 use scsnn::model::weights::ModelWeights;
 use scsnn::ref_impl::{ForwardOptions, SnnForward};
+use scsnn::sparse::SpikeMap;
 use scsnn::tensor::Tensor;
 use scsnn::util::Rng;
 
@@ -24,8 +29,8 @@ fn random_image(net: &NetworkSpec, seed: u64) -> Tensor<u8> {
     )
 }
 
-/// Run the whole network through the executing controller, chaining layer
-/// outputs exactly as the coordinator does.
+/// Run the whole network through the executing controller, chaining
+/// compressed layer outputs exactly as the coordinator does.
 fn run_through_controller(
     net: &NetworkSpec,
     weights: &ModelWeights,
@@ -33,32 +38,25 @@ fn run_through_controller(
     img: &Tensor<u8>,
 ) -> (Tensor<i32>, u64, u64) {
     let mut ctrl = SystemController::new(cfg);
-    let mut outputs: std::collections::BTreeMap<String, Vec<Tensor<u8>>> = Default::default();
+    let mut outputs: std::collections::BTreeMap<String, Vec<SpikeMap>> = Default::default();
     let mut prev: Option<String> = None;
     let mut head = None;
     let mut cycles = 0;
     let mut dense_cycles = 0;
     for l in &net.layers {
         let lw = weights.get(&l.name).unwrap();
-        let inputs: Vec<Tensor<u8>> = if l.kind == ConvKind::Encoding {
-            vec![img.clone(); l.in_t]
+        let run = if l.kind == ConvKind::Encoding {
+            let frames = vec![img.clone(); l.in_t];
+            ctrl.run_layer(l, lw, LayerInput::Pixels(&frames)).unwrap()
         } else {
             let main = l.input_from.clone().or_else(|| prev.clone()).unwrap();
             let main_steps = &outputs[&main];
-            match l.concat_with.as_deref() {
+            let inputs: Vec<SpikeMap> = match l.concat_with.as_deref() {
                 None => main_steps.clone(),
-                Some(o) => main_steps
-                    .iter()
-                    .zip(&outputs[o])
-                    .map(|(a, b)| {
-                        let mut d = a.data.clone();
-                        d.extend_from_slice(&b.data);
-                        Tensor::from_vec(a.c + b.c, a.h, a.w, d)
-                    })
-                    .collect(),
-            }
+                Some(o) => main_steps.iter().zip(&outputs[o]).map(|(a, b)| a.concat(b)).collect(),
+            };
+            ctrl.run_layer(l, lw, LayerInput::Spikes(&inputs)).unwrap()
         };
-        let run = ctrl.run_layer(l, lw, &inputs).unwrap();
         cycles += run.cycles;
         dense_cycles += run.dense_cycles;
         if l.kind == ConvKind::Output {
@@ -114,6 +112,85 @@ fn controller_matches_golden_on_uniform_time_steps() {
     .unwrap();
     let (head, _, _) = run_through_controller(&net, &weights, cfg, &img);
     assert_eq!(head.data, golden.head_acc.data);
+}
+
+/// Controller vs golden model on a directly **compressed** stimulus: a
+/// single spike layer driven by `SpikeMap`s built at several activation
+/// densities (all-zero, sparse, dense) must be bit-exact with the
+/// functional reference — the compressed representation is the contract,
+/// not an approximation of it.
+#[test]
+fn controller_bit_exact_on_compressed_stimulus_across_densities() {
+    use scsnn::model::lif::{LifParams, LifState};
+    use scsnn::model::topology::ConvSpec;
+    use scsnn::ref_impl::block_conv2d_events;
+
+    let spec = ConvSpec {
+        name: "s".into(),
+        kind: ConvKind::Spike,
+        c_in: 4,
+        c_out: 3,
+        k: 3,
+        in_t: 2,
+        out_t: 2,
+        maxpool_after: false,
+        in_w: 20,
+        in_h: 14,
+        concat_with: None,
+        input_from: None,
+    };
+    let net = NetworkSpec {
+        name: "s".into(),
+        input_w: spec.in_w,
+        input_h: spec.in_h,
+        input_c: spec.c_in,
+        layers: vec![spec.clone()],
+        num_anchors: 5,
+        num_classes: 3,
+    };
+    let weights = ModelWeights::random(&net, 0.5, 31);
+    let lw = weights.get("s").unwrap();
+    let cfg = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() };
+
+    let mut rng = Rng::new(32);
+    for density in [0.0f64, 0.1, 0.5, 1.0] {
+        // Build the stimulus directly in compressed form.
+        let mut maps = Vec::new();
+        for _ in 0..spec.in_t {
+            let mut m = SpikeMap::zeros(spec.c_in, spec.in_h, spec.in_w);
+            for c in 0..spec.c_in {
+                for y in 0..spec.in_h {
+                    for x in 0..spec.in_w {
+                        if rng.chance(density) {
+                            m.set(c, y, x);
+                        }
+                    }
+                }
+            }
+            maps.push(m);
+        }
+
+        let mut ctrl = SystemController::new(cfg.clone());
+        let run = ctrl.run_layer(&spec, lw, LayerInput::Spikes(&maps)).unwrap();
+
+        // Functional reference on the same compressed stimulus.
+        let accs: Vec<Tensor<i32>> = maps
+            .iter()
+            .map(|m| block_conv2d_events(m, &lw.w, &lw.bias, cfg.tile_w, cfg.tile_h))
+            .collect();
+        let n = spec.c_out * spec.in_h * spec.in_w;
+        let mut lif = LifState::new(n);
+        let p = LifParams::from_quant(&lw.qp);
+        for t in 0..spec.out_t {
+            let mut spikes = vec![0u8; n];
+            lif.step(p, &accs[t].data, &mut spikes);
+            assert_eq!(
+                run.output[t].to_dense().data,
+                spikes,
+                "density {density}, step {t}"
+            );
+        }
+    }
 }
 
 #[test]
