@@ -4,7 +4,7 @@ ARTIFACTS ?= artifacts
 CARGO ?= cargo
 PY ?= python3
 
-.PHONY: all build test bench artifacts artifacts-quick fmt clippy clean
+.PHONY: all build test bench bench-smoke artifacts artifacts-quick fmt clippy clean
 
 all: build
 
@@ -19,11 +19,17 @@ fmt:
 	cd rust && $(CARGO) fmt --check
 
 clippy:
-	cd rust && $(CARGO) clippy -- -D warnings
+	cd rust && $(CARGO) clippy --all-targets -- -D warnings
 
 # Paper figure/table reproductions (see README.md for the bench → figure map).
 bench:
 	cd rust && $(CARGO) bench
+
+# Quick serving-path smoke: streaming engine + multi-core simulator with a
+# minimal sample budget (same as the CI bench step).
+bench-smoke:
+	cd rust && SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_throughput && \
+	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench fig06_parallelism
 
 # One-shot python build path: datasets + training + quantized weights +
 # AOT HLO artifact + metrics.json. Requires jax (see python/).

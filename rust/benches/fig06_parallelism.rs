@@ -5,10 +5,17 @@
 //! Run on the full-size network (every map ≥ one PE region, the paper's
 //! operating point).
 
-use scsnn::accel::parallelism::{fig6_study, input_parallel_latency, LayerWorkload, PeOrg};
+use scsnn::accel::parallelism::{
+    fig6_study, input_parallel_latency, multicore_study, LayerWorkload, PeOrg,
+};
+use scsnn::backend::{CycleSimBackend, FrameOptions, SnnBackend};
+use scsnn::config::AccelConfig;
+use scsnn::detect::dataset::Dataset;
 use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::weights::ModelWeights;
 use scsnn::runtime::load_trained_or_random;
 use scsnn::util::BenchRunner;
+use std::sync::Arc;
 
 fn main() {
     let mut r = BenchRunner::new("fig06_parallelism");
@@ -29,6 +36,47 @@ fn main() {
         ));
     }
     r.report_row("paper shape: input-parallel > 1.0 even with deep FIFOs; output-parallel grows with p; spatial = 1.0");
+
+    // --- multi-core tile sharding: simulated vs analytic speedup ---------
+    // The fourth parallelism axis (replicated spatial cores). The cycle
+    // simulator executes the tiny network at each core count; the
+    // extended analytic model must predict the very same makespan — the
+    // lock-step contract, cross-checked here at bench time.
+    r.section("multi-core scaling: simulated (cycle-sim, tiny net) vs analytic makespan");
+    r.report_row("cores | simulated speedup | analytic speedup | makespans");
+    let tiny = Arc::new(NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER));
+    let mut tw = ModelWeights::random(&tiny, 1.0, 5);
+    tw.prune_fine_grained(0.8);
+    let tw = Arc::new(tw);
+    let ds = Dataset::synth(1, tiny.input_w, tiny.input_h, 6);
+    let core_counts = [1usize, 2, 4, 8];
+    let analytic = multicore_study(&tiny, &tw, &AccelConfig::paper(), &core_counts);
+    let mut sim_base = 0u64;
+    for (i, &cores) in core_counts.iter().enumerate() {
+        let sim = CycleSimBackend::new(
+            tiny.clone(),
+            tw.clone(),
+            AccelConfig::paper().with_cores(cores),
+        )
+        .unwrap();
+        let frame = sim
+            .run_frame(&ds.samples[0].image, &FrameOptions { collect_stats: true })
+            .unwrap();
+        let makespan = frame.total_cycles();
+        if cores == 1 {
+            sim_base = makespan;
+        }
+        let sim_speedup = sim_base as f64 / makespan as f64;
+        let a = &analytic[i];
+        assert_eq!(
+            makespan, a.makespan,
+            "cores={cores}: simulator and analytic model must stay in lock-step"
+        );
+        r.report_row(&format!(
+            "{cores:>5} | {sim_speedup:>17.3} | {:>16.3} | {makespan} cycles (exact match)",
+            a.speedup
+        ));
+    }
 
     // Timing: the discrete-event input-parallel model (the expensive one).
     let wls = LayerWorkload::from_model(&net, &weights);

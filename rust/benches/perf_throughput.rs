@@ -1,0 +1,123 @@
+//! Serving-path throughput: the streaming engine swept over
+//! workers × simulated cores, recorded to `BENCH_throughput.json`.
+//!
+//! Two axes, two meanings:
+//!
+//! - **workers** — host-side frame-level parallelism: frames/sec the
+//!   golden-model backend sustains through the engine's worker pool
+//!   (wall-clock, in-order folding included);
+//! - **cores** — simulated accelerator parallelism: the cycle-sim
+//!   backend's frame makespan shrinks as the tile grid shards across
+//!   cores, so the *simulated* fps at the paper's 500 MHz clock rises
+//!   (analytic model and executed simulator agree in lock-step; see
+//!   `fig06_parallelism`).
+
+use scsnn::backend::{CycleSimBackend, FrameOptions, GoldenBackend, SnnBackend};
+use scsnn::config::AccelConfig;
+use scsnn::coordinator::engine::{EngineConfig, StreamingEngine};
+use scsnn::detect::dataset::Dataset;
+use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::weights::ModelWeights;
+use scsnn::ref_impl::ForwardOptions;
+use scsnn::tensor::Tensor;
+use scsnn::util::json::Json;
+use scsnn::util::BenchRunner;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let r = BenchRunner::new("perf_throughput");
+    let net = Arc::new(NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER));
+    let mut w = ModelWeights::random(&net, 1.0, 90);
+    w.prune_fine_grained(0.8);
+    let w = Arc::new(w);
+    let frames = 8usize;
+    let ds = Dataset::synth(frames, net.input_w, net.input_h, 91);
+    let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+
+    let mut rows: Vec<Json> = Vec::new();
+
+    // --- workers axis: wall-clock fps through the golden backend ---------
+    r.section("workers axis (golden backend, wall-clock frames/sec)");
+    let golden: Arc<dyn SnnBackend> = Arc::new(
+        GoldenBackend::new(
+            net.clone(),
+            w.clone(),
+            ForwardOptions { block_tile: None, record_spikes: false },
+        )
+        .unwrap(),
+    );
+    let mut fps1 = 0.0;
+    for workers in [1usize, 2, 4] {
+        let engine =
+            StreamingEngine::new(golden.clone(), EngineConfig { workers, queue_depth: 4 });
+        // Warm once, then time one streamed pass over the frame set.
+        engine.run_frames(&images[..1], FrameOptions::default()).unwrap();
+        let t0 = Instant::now();
+        let out = engine.run_frames(&images, FrameOptions::default()).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        assert_eq!(out.len(), frames);
+        let fps = frames as f64 / secs;
+        if workers == 1 {
+            fps1 = fps;
+        }
+        r.report_row(&format!(
+            "workers {workers} | {fps:8.2} frames/s | scaling {:.2}x",
+            fps / fps1.max(1e-12)
+        ));
+        let mut row = BTreeMap::new();
+        row.insert("axis".to_string(), Json::Str("workers".to_string()));
+        row.insert("workers".to_string(), Json::Num(workers as f64));
+        row.insert("cores".to_string(), Json::Num(1.0));
+        row.insert("wall_fps".to_string(), Json::Num(fps));
+        row.insert("scaling".to_string(), Json::Num(fps / fps1.max(1e-12)));
+        rows.push(Json::Obj(row));
+    }
+
+    // --- cores axis: simulated fps from the cycle-sim frame makespan ------
+    r.section("cores axis (cycle-sim backend, simulated fps @ 500 MHz)");
+    let clock = AccelConfig::paper().clock_hz;
+    let mut sim_fps1 = 0.0;
+    for cores in [1usize, 2, 4] {
+        let sim = CycleSimBackend::new(
+            net.clone(),
+            w.clone(),
+            AccelConfig::paper().with_cores(cores),
+        )
+        .unwrap();
+        let frame = sim
+            .run_frame(&ds.samples[0].image, &FrameOptions { collect_stats: true })
+            .unwrap();
+        let makespan = frame.total_cycles();
+        let sim_fps = clock / makespan as f64;
+        if cores == 1 {
+            sim_fps1 = sim_fps;
+        }
+        r.report_row(&format!(
+            "cores {cores} | makespan {makespan:>12} cycles | sim {sim_fps:8.2} fps | speedup {:.2}x",
+            sim_fps / sim_fps1.max(1e-12)
+        ));
+        let mut row = BTreeMap::new();
+        row.insert("axis".to_string(), Json::Str("cores".to_string()));
+        row.insert("workers".to_string(), Json::Num(1.0));
+        row.insert("cores".to_string(), Json::Num(cores as f64));
+        row.insert("makespan_cycles".to_string(), Json::Num(makespan as f64));
+        row.insert("sim_fps".to_string(), Json::Num(sim_fps));
+        row.insert("speedup".to_string(), Json::Num(sim_fps / sim_fps1.max(1e-12)));
+        rows.push(Json::Obj(row));
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("perf_throughput".to_string()));
+    doc.insert(
+        "workload".to_string(),
+        Json::Str(format!("{frames} synthetic tiny frames, 80% pruned weights")),
+    );
+    doc.insert("sweep".to_string(), Json::Arr(rows));
+    let json_path = "BENCH_throughput.json";
+    match std::fs::write(json_path, Json::Obj(doc).to_string_compact()) {
+        Ok(()) => r.report_row(&format!("wrote {json_path}")),
+        Err(e) => r.report_row(&format!("could not write {json_path}: {e}")),
+    }
+}

@@ -26,6 +26,13 @@
 //! partial sums are replayed into the LIF for every output step (§II-A).
 //! The controller is **bit-exact** against the functional golden model
 //! (`ref_impl`): the integration tests convolve whole layers both ways.
+//!
+//! With `AccelConfig::num_cores > 1` the tile grid is sharded round-robin
+//! across simulated cores (each a full PE array); [`LayerRun`] keeps
+//! per-core cycle counters and reports the layer **makespan** (max over
+//! cores) as `cycles`. A single core reproduces the original counts
+//! exactly, and the makespan stays in lock-step with the extended
+//! analytic [`super::latency::LatencyModel`].
 
 use super::lif_unit::LifUnit;
 use super::one_to_all::GatedOneToAll;
@@ -81,10 +88,18 @@ impl<'a> LayerInput<'a> {
 /// Execution record of one layer.
 #[derive(Clone, Debug)]
 pub struct LayerRun {
-    /// Cycles with zero-weight skipping (the shipped design).
+    /// Layer makespan in cycles with zero-weight skipping (the shipped
+    /// design): the maximum over the per-core counters. With
+    /// `num_cores = 1` this is the single core's total, exactly as the
+    /// original single-core simulator reported.
     pub cycles: u64,
-    /// Cycles for the dense baseline (skipping disabled, §IV-E).
+    /// Makespan for the dense baseline (skipping disabled, §IV-E).
     pub dense_cycles: u64,
+    /// Per-core cycle counters (zero-weight skipping on). Tiles are dealt
+    /// round-robin, so `cycles == core_cycles.iter().max()`.
+    pub core_cycles: Vec<u64>,
+    /// Per-core dense-baseline cycle counters.
+    pub core_dense_cycles: Vec<u64>,
     /// PE clock-gating activity.
     pub gating: GatingStats,
     /// LIF update events.
@@ -108,6 +123,17 @@ impl LayerRun {
             1.0 - self.cycles as f64 / self.dense_cycles as f64
         }
     }
+
+    /// Total work in cycles summed over cores (the single-core latency —
+    /// what the energy model scales with).
+    pub fn total_cycles(&self) -> u64 {
+        self.core_cycles.iter().sum()
+    }
+
+    /// Total dense-baseline work summed over cores.
+    pub fn total_dense_cycles(&self) -> u64 {
+        self.core_dense_cycles.iter().sum()
+    }
 }
 
 /// The system controller bound to a hardware configuration.
@@ -130,11 +156,32 @@ impl SystemController {
 
     /// Execute one layer on its stimulus: compressed spike maps for spike
     /// and head layers, multibit pixel frames for the encoding layer (one
-    /// per input time step either way).
+    /// per input time step either way). Compresses the layer's weights
+    /// into bit-mask planes internally; frame-serving paths that run the
+    /// same weights repeatedly should compress once and use
+    /// [`Self::run_layer_prepared`].
     pub fn run_layer(
         &mut self,
         spec: &ConvSpec,
         lw: &LayerWeights,
+        input: LayerInput<'_>,
+    ) -> Result<LayerRun> {
+        // ---- Compress weights into the on-chip format ------------------
+        // (One plane per (k, c); resident in Weight Map / NZ Weight SRAM.)
+        let planes: Vec<BitMaskKernel> = crate::sparse::bitmask::compress_kernel4(&lw.w);
+        self.run_layer_prepared(spec, lw, &planes, input)
+    }
+
+    /// Execute one layer with weights already compressed into bit-mask
+    /// planes (one per `(k, c)`, row-major — see
+    /// [`crate::sparse::bitmask::compress_kernel4`]). This is the
+    /// serving-path entry point: the compressed planes are immutable and
+    /// shared across frames/workers behind an `Arc`.
+    pub fn run_layer_prepared(
+        &mut self,
+        spec: &ConvSpec,
+        lw: &LayerWeights,
+        planes: &[BitMaskKernel],
         input: LayerInput<'_>,
     ) -> Result<LayerRun> {
         // ---- Program the configuration registers (§III-D) -------------
@@ -154,6 +201,15 @@ impl SystemController {
         })?;
         if input.steps() != spec.in_t {
             bail!("layer {}: got {} input steps, want {}", spec.name, input.steps(), spec.in_t);
+        }
+        if planes.len() != spec.c_out * spec.c_in {
+            bail!(
+                "layer {}: {} compressed planes for a {}x{} kernel",
+                spec.name,
+                planes.len(),
+                spec.c_out,
+                spec.c_in
+            );
         }
         match (&input, spec.kind) {
             (LayerInput::Pixels(frames), ConvKind::Encoding) => {
@@ -178,10 +234,6 @@ impl SystemController {
             }
         }
 
-        // ---- Compress weights into the on-chip format ------------------
-        // (One plane per (k, c); resident in Weight Map / NZ Weight SRAM.)
-        let planes: Vec<BitMaskKernel> = crate::sparse::bitmask::compress_kernel4(&lw.w);
-
         // ---- Bit-slice the stimulus into spike planes ------------------
         // Encoding: 8 bit planes per step (owned); spike layers: the
         // compressed maps themselves (borrowed).
@@ -201,6 +253,8 @@ impl SystemController {
         let mut run = LayerRun {
             cycles: 0,
             dense_cycles: 0,
+            core_cycles: Vec::new(),
+            core_dense_cycles: Vec::new(),
             gating: GatingStats::default(),
             lif_updates: 0,
             spikes_out: 0,
@@ -227,19 +281,38 @@ impl SystemController {
         let conv_t = spec.in_t;
 
         // ---- Tile loop --------------------------------------------------
+        // Tiles are dealt round-robin to the simulated cores (§III-A:
+        // spatially parallel PE arrays share nothing but the weight
+        // stream, so a tile is the natural unit of core parallelism).
+        // `run.cycles`/`run.dense_cycles` accumulate the running total;
+        // per-tile deltas are folded into the per-core counters and the
+        // makespan (max over cores) is reported at the end.
+        let cores = self.cfg.num_cores.max(1);
+        let mut core_cycles = vec![0u64; cores];
+        let mut core_dense = vec![0u64; cores];
+        let mut tile_idx = 0usize;
         let mut y0 = 0;
         while y0 < spec.in_h {
             let cth = th.min(spec.in_h - y0);
             let mut x0 = 0;
             while x0 < spec.in_w {
                 let ctw = tw.min(spec.in_w - x0);
+                let before = (run.cycles, run.dense_cycles);
                 run.cycles += self.costs.tile_setup;
                 run.dense_cycles += self.costs.tile_setup;
-                self.run_tile(spec, lw, &step_maps, &planes, conv_t, (y0, x0, cth, ctw), &mut run);
+                self.run_tile(spec, lw, &step_maps, planes, conv_t, (y0, x0, cth, ctw), &mut run);
+                let core = tile_idx % cores;
+                core_cycles[core] += run.cycles - before.0;
+                core_dense[core] += run.dense_cycles - before.1;
+                tile_idx += 1;
                 x0 += ctw;
             }
             y0 += cth;
         }
+        run.cycles = core_cycles.iter().copied().max().unwrap_or(0);
+        run.dense_cycles = core_dense.iter().copied().max().unwrap_or(0);
+        run.core_cycles = core_cycles;
+        run.core_dense_cycles = core_dense;
         Ok(run)
     }
 
@@ -577,6 +650,63 @@ mod tests {
         assert_eq!(run_z.dense_cycles, run_d.dense_cycles);
         assert_eq!(run_z.gating.gated_fraction(), 1.0);
         assert_eq!(run_z.spikes_out + run_z.gating.enabled, 0);
+    }
+
+    #[test]
+    fn multicore_shards_tiles_and_reports_makespan() {
+        // 16×12 features on an 8×6 tile → 4 equal tiles. Every tile costs
+        // the same cycles (counts depend on weights, not activations), so
+        // the 2-core makespan is exactly half the 1-core total and the
+        // 4-core makespan a quarter; a 3-core run carries 2 tiles on core
+        // 0 (round-robin) → makespan = half. Outputs are identical.
+        let spec = test_spec(ConvKind::Spike, 2, 2, false);
+        let lw = test_weights(&spec, 31, 0.5);
+        let inputs: Vec<SpikeMap> =
+            random_inputs(&spec, 32, false).iter().map(SpikeMap::from_dense).collect();
+        let base = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() };
+        let run1 = SystemController::new(base.clone())
+            .run_layer(&spec, &lw, LayerInput::Spikes(&inputs))
+            .unwrap();
+        assert_eq!(run1.core_cycles.len(), 1);
+        assert_eq!(run1.total_cycles(), run1.cycles);
+        for cores in [2usize, 3, 4] {
+            let run = SystemController::new(base.clone().with_cores(cores))
+                .run_layer(&spec, &lw, LayerInput::Spikes(&inputs))
+                .unwrap();
+            assert_eq!(run.core_cycles.len(), cores);
+            assert_eq!(run.total_cycles(), run1.cycles, "cores={cores}: work is conserved");
+            let tiles_on_core0 = 4usize.div_ceil(cores) as u64;
+            assert_eq!(run.cycles, run1.cycles / 4 * tiles_on_core0, "cores={cores}");
+            assert_eq!(run.dense_cycles, run1.dense_cycles / 4 * tiles_on_core0);
+            // Sharding is a scheduling change only: bit-identical outputs.
+            for (t, m) in run.output.iter().enumerate() {
+                assert_eq!(m, &run1.output[t], "cores={cores} step {t}");
+            }
+            assert_eq!(run.spikes_out, run1.spikes_out);
+        }
+    }
+
+    #[test]
+    fn prepared_planes_match_internal_compression() {
+        let spec = test_spec(ConvKind::Spike, 1, 1, false);
+        let lw = test_weights(&spec, 33, 0.4);
+        let inputs: Vec<SpikeMap> =
+            random_inputs(&spec, 34, false).iter().map(SpikeMap::from_dense).collect();
+        let cfg = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() };
+        let run_a = SystemController::new(cfg.clone())
+            .run_layer(&spec, &lw, LayerInput::Spikes(&inputs))
+            .unwrap();
+        let planes = crate::sparse::bitmask::compress_kernel4(&lw.w);
+        let run_b = SystemController::new(cfg.clone())
+            .run_layer_prepared(&spec, &lw, &planes, LayerInput::Spikes(&inputs))
+            .unwrap();
+        assert_eq!(run_a.cycles, run_b.cycles);
+        assert_eq!(run_a.output, run_b.output);
+        // A plane count that doesn't match the kernel is rejected.
+        let mut ctrl = SystemController::new(cfg);
+        assert!(ctrl
+            .run_layer_prepared(&spec, &lw, &planes[1..], LayerInput::Spikes(&inputs))
+            .is_err());
     }
 
     #[test]

@@ -74,9 +74,11 @@ pub struct FrameEvents {
 }
 
 impl FrameEvents {
-    /// Merge a layer run into the frame totals.
+    /// Merge a layer run into the frame totals. Energy scales with the
+    /// **total work** summed over cores (every core burns its own clock
+    /// tree), not the multi-core makespan `run.cycles` reports.
     pub fn add_layer(&mut self, run: &LayerRun) {
-        self.cycles += run.cycles;
+        self.cycles += run.total_cycles();
         self.pe_enabled += run.gating.enabled;
         self.pe_gated += run.gating.gated;
         self.lif_updates += run.lif_updates;

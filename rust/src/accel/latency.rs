@@ -18,10 +18,18 @@ use crate::model::weights::ModelWeights;
 pub struct LayerLatency {
     /// Layer name.
     pub name: String,
-    /// Cycles with weight skipping.
+    /// Total work in cycles with weight skipping (summed over cores).
     pub sparse_cycles: u64,
-    /// Cycles without skipping.
+    /// Total work without skipping.
     pub dense_cycles: u64,
+    /// Layer makespan with weight skipping when the tile grid is sharded
+    /// round-robin across `num_cores` cores: the busiest core carries
+    /// `ceil(tiles / cores)` tiles, and every tile costs the same (cycle
+    /// counts depend on weights, not activations). Equals `sparse_cycles`
+    /// at `num_cores = 1`.
+    pub sparse_makespan: u64,
+    /// Dense-baseline makespan.
+    pub dense_makespan: u64,
 }
 
 /// Whole-network latency result.
@@ -32,7 +40,7 @@ pub struct NetworkLatency {
 }
 
 impl NetworkLatency {
-    /// Total cycles with weight skipping.
+    /// Total work in cycles with weight skipping (summed over cores).
     pub fn sparse_cycles(&self) -> u64 {
         self.layers.iter().map(|l| l.sparse_cycles).sum()
     }
@@ -40,6 +48,28 @@ impl NetworkLatency {
     /// Total dense-baseline cycles.
     pub fn dense_cycles(&self) -> u64 {
         self.layers.iter().map(|l| l.dense_cycles).sum()
+    }
+
+    /// Frame makespan: layers run back to back, each taking its
+    /// multi-core makespan. Equals [`Self::sparse_cycles`] on one core.
+    pub fn sparse_makespan(&self) -> u64 {
+        self.layers.iter().map(|l| l.sparse_makespan).sum()
+    }
+
+    /// Dense-baseline frame makespan.
+    pub fn dense_makespan(&self) -> u64 {
+        self.layers.iter().map(|l| l.dense_makespan).sum()
+    }
+
+    /// Speedup of the configured core count over the same network's total
+    /// single-core work (`1.0` at one core; ≤ `num_cores` always).
+    pub fn core_speedup(&self) -> f64 {
+        let m = self.sparse_makespan();
+        if m == 0 {
+            1.0
+        } else {
+            self.sparse_cycles() as f64 / m as f64
+        }
     }
 
     /// Fraction of computing latency saved by zero-weight skipping
@@ -53,9 +83,10 @@ impl NetworkLatency {
         }
     }
 
-    /// Frames per second at `clock_hz`.
+    /// Frames per second at `clock_hz` — per-frame latency is the
+    /// multi-core makespan (identical to the total cycles on one core).
     pub fn fps(&self, clock_hz: f64) -> f64 {
-        clock_hz / self.sparse_cycles() as f64
+        clock_hz / self.sparse_makespan() as f64
     }
 }
 
@@ -98,10 +129,16 @@ impl LatencyModel {
 
         let per_tile_sparse = conv_t * planes * (sparse_inner + switches) + lif;
         let per_tile_dense = conv_t * planes * (dense_inner + switches) + lif;
+        // Round-robin tile sharding: the busiest of the `num_cores` cores
+        // carries ceil(tiles / cores) tiles — the executing controller's
+        // schedule, reproduced in closed form.
+        let busiest_tiles = n_tiles.div_ceil(self.cfg.num_cores.max(1) as u64);
         LayerLatency {
             name: spec.name.clone(),
             sparse_cycles: n_tiles * (per_tile_sparse + self.costs.tile_setup),
             dense_cycles: n_tiles * (per_tile_dense + self.costs.tile_setup),
+            sparse_makespan: busiest_tiles * (per_tile_sparse + self.costs.tile_setup),
+            dense_makespan: busiest_tiles * (per_tile_dense + self.costs.tile_setup),
         }
     }
 
@@ -176,6 +213,82 @@ mod tests {
             .unwrap();
         assert_eq!(run.cycles, analytic.sparse_cycles);
         assert_eq!(run.dense_cycles, analytic.dense_cycles);
+        assert_eq!(analytic.sparse_makespan, analytic.sparse_cycles, "one core: makespan = total");
+    }
+
+    #[test]
+    fn multicore_makespan_in_lockstep_with_controller() {
+        // The extended analytic model and the executing controller must
+        // agree exactly on the multi-core layer makespan — including a
+        // tile count (2×3 = 6 on a 16×18 map with 8×6 tiles) that does
+        // not divide evenly by the core count.
+        let spec = ConvSpec {
+            name: "t".into(),
+            kind: ConvKind::Spike,
+            c_in: 3,
+            c_out: 4,
+            k: 3,
+            in_t: 2,
+            out_t: 2,
+            maxpool_after: false,
+            in_w: 16,
+            in_h: 18,
+            concat_with: None,
+            input_from: None,
+        };
+        let net = NetworkSpec {
+            name: "t".into(),
+            input_w: 16,
+            input_h: 18,
+            input_c: 3,
+            layers: vec![spec.clone()],
+            num_anchors: 5,
+            num_classes: 3,
+        };
+        let mut mw = ModelWeights::random(&net, 1.0, 12);
+        mw.prune_fine_grained(0.7);
+        let lw = mw.get("t").unwrap();
+        let mut rng = Rng::new(13);
+        let inputs: Vec<crate::sparse::SpikeMap> = (0..2)
+            .map(|_| {
+                let n = 3 * 18 * 16;
+                crate::sparse::SpikeMap::from_dense(&Tensor::from_vec(
+                    3,
+                    18,
+                    16,
+                    (0..n).map(|_| u8::from(rng.chance(0.3))).collect(),
+                ))
+            })
+            .collect();
+        for cores in [1usize, 2, 3, 4, 6, 8] {
+            let cfg =
+                AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() }.with_cores(cores);
+            let analytic = LatencyModel::new(cfg.clone()).layer(&spec, lw);
+            let run = SystemController::new(cfg)
+                .run_layer(&spec, lw, crate::accel::controller::LayerInput::Spikes(&inputs))
+                .unwrap();
+            assert_eq!(run.cycles, analytic.sparse_makespan, "cores={cores}");
+            assert_eq!(run.dense_cycles, analytic.dense_makespan, "cores={cores}");
+            assert_eq!(run.total_cycles(), analytic.sparse_cycles, "cores={cores}");
+        }
+    }
+
+    #[test]
+    fn core_speedup_saturates_at_tile_count() {
+        // A layer with 6 tiles cannot speed up past 6×, and speedup is
+        // monotone in the core count.
+        let net = NetworkSpec::paper(Scale::Full, TimeStepConfig::PAPER);
+        let mut mw = ModelWeights::random(&net, 1.0, 14);
+        mw.prune_fine_grained(0.8);
+        let mut prev = 0.0f64;
+        for cores in [1usize, 2, 4, 8, 16] {
+            let lat =
+                LatencyModel::new(AccelConfig::paper().with_cores(cores)).network(&net, &mw);
+            let s = lat.core_speedup();
+            assert!(s >= prev, "cores={cores}: speedup regressed {s} < {prev}");
+            assert!(s <= cores as f64 + 1e-9, "cores={cores}: superlinear {s}");
+            prev = s;
+        }
     }
 
     #[test]

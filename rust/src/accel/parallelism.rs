@@ -16,6 +16,8 @@
 //!    process the same weight stream on different pixels, so there is no
 //!    imbalance at all; latency is exactly the nonzero count.
 
+use super::latency::LatencyModel;
+use crate::config::AccelConfig;
 use crate::model::topology::NetworkSpec;
 use crate::model::weights::ModelWeights;
 
@@ -156,6 +158,46 @@ pub fn fifo_bytes(org: PeOrg, depth: usize) -> usize {
     org.p * depth * org.h * org.w * 2
 }
 
+/// One row of the multi-core scaling study: replicating whole PE cores
+/// (the fourth axis beyond Fig 6's three intra-core organizations).
+#[derive(Clone, Debug)]
+pub struct MulticoreRow {
+    /// Core count.
+    pub cores: usize,
+    /// Network makespan in cycles (analytic, weight skipping on).
+    pub makespan: u64,
+    /// Speedup over one core.
+    pub speedup: f64,
+    /// Parallel efficiency (`speedup / cores`).
+    pub efficiency: f64,
+}
+
+/// Analytic multi-core scaling of a network: tile-grid sharding across
+/// replicated spatial-parallel cores, per the extended
+/// [`LatencyModel`]. Speedup saturates at the smallest layer's tile count
+/// (the head runs on one core no matter how many exist) — the Amdahl
+/// ceiling the Fig 6 cross-check reports.
+pub fn multicore_study(
+    net: &NetworkSpec,
+    weights: &ModelWeights,
+    cfg: &AccelConfig,
+    core_counts: &[usize],
+) -> Vec<MulticoreRow> {
+    let base = LatencyModel::new(cfg.clone().with_cores(1))
+        .network(net, weights)
+        .sparse_makespan();
+    core_counts
+        .iter()
+        .map(|&cores| {
+            let makespan = LatencyModel::new(cfg.clone().with_cores(cores))
+                .network(net, weights)
+                .sparse_makespan();
+            let speedup = if makespan == 0 { 1.0 } else { base as f64 / makespan as f64 };
+            MulticoreRow { cores, makespan, speedup, efficiency: speedup / cores.max(1) as f64 }
+        })
+        .collect()
+}
+
 /// One row of the Fig 6 study.
 #[derive(Clone, Debug)]
 pub struct ParallelismRow {
@@ -282,6 +324,29 @@ mod tests {
         assert_eq!(output_parallel_latency(&wl, org), 18 * 2);
         // Spatial: (9+9+1+1) = 20 cycles, 1 iteration.
         assert_eq!(spatial_latency(&wl, PeOrg::SPATIAL), 20);
+    }
+
+    #[test]
+    fn multicore_study_shape() {
+        let net = NetworkSpec::paper(Scale::Full, TimeStepConfig::PAPER);
+        let mut mw = ModelWeights::random(&net, 1.0, 6);
+        mw.prune_fine_grained(0.8);
+        let rows = multicore_study(&net, &mw, &AccelConfig::paper(), &[1, 2, 4, 8]);
+        assert_eq!(rows[0].cores, 1);
+        assert!((rows[0].speedup - 1.0).abs() < 1e-12);
+        for pair in rows.windows(2) {
+            assert!(pair[1].speedup >= pair[0].speedup, "speedup must be monotone");
+        }
+        for r in &rows {
+            assert!(r.speedup <= r.cores as f64 + 1e-9, "no superlinear scaling");
+            assert!(r.efficiency > 0.0 && r.efficiency <= 1.0 + 1e-9);
+        }
+        // Early full-size layers have hundreds of tiles, so 8 cores beat
+        // 2× easily — but the deep layers (b3/b4: ≤ 4 tiles) serialize,
+        // so the scaling is distinctly sublinear (Amdahl on tile count).
+        let s8 = rows.last().unwrap().speedup;
+        assert!(s8 > 2.0, "8-core speedup {s8}");
+        assert!(s8 < 8.0, "8-core speedup {s8} should hit the small-layer ceiling");
     }
 
     #[test]

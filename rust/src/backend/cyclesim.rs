@@ -1,0 +1,228 @@
+//! Cycle-simulator backend: the whole network executed layer by layer on
+//! the cycle-level [`SystemController`], compressed spike maps threaded
+//! between layers (CSP shortcut/concat wiring included). Bit-exact
+//! against the golden model run with the hardware block tile, and the
+//! only backend that reports cycle counts — per layer and per simulated
+//! core (`AccelConfig::num_cores`).
+//!
+//! The per-`(k, c)` bit-mask weight planes are compressed **once** at
+//! construction and shared across frames and worker threads behind an
+//! `Arc` — the serving path never re-compresses weights per frame.
+
+use super::{BackendCaps, BackendFrame, FrameOptions, LayerObservation, SnnBackend};
+use crate::accel::controller::{LayerInput, SystemController};
+use crate::config::AccelConfig;
+use crate::model::topology::{ConvKind, NetworkSpec};
+use crate::model::weights::ModelWeights;
+use crate::sparse::{bitmask::compress_kernel4, BitMaskKernel, SpikeMap};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// The cycle-level simulator behind the [`SnnBackend`] interface.
+pub struct CycleSimBackend {
+    net: Arc<NetworkSpec>,
+    weights: Arc<ModelWeights>,
+    cfg: AccelConfig,
+    /// Per-layer compressed weight planes, built once.
+    planes: Arc<BTreeMap<String, Vec<BitMaskKernel>>>,
+}
+
+impl CycleSimBackend {
+    /// New backend bound to a hardware configuration; validates weights
+    /// and compresses every layer's kernel into bit-mask planes.
+    pub fn new(
+        net: Arc<NetworkSpec>,
+        weights: Arc<ModelWeights>,
+        cfg: AccelConfig,
+    ) -> Result<CycleSimBackend> {
+        weights.validate_against(&net)?;
+        let planes: BTreeMap<String, Vec<BitMaskKernel>> = net
+            .layers
+            .iter()
+            .map(|l| {
+                let lw = weights.get(&l.name).expect("validated");
+                (l.name.clone(), compress_kernel4(&lw.w))
+            })
+            .collect();
+        Ok(CycleSimBackend { net, weights, cfg, planes: Arc::new(planes) })
+    }
+
+    /// The hardware configuration this backend simulates.
+    pub fn config(&self) -> &AccelConfig {
+        &self.cfg
+    }
+}
+
+impl SnnBackend for CycleSimBackend {
+    fn name(&self) -> &'static str {
+        "cyclesim"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        BackendCaps { parallel: true, reports_sparsity: true, reports_cycles: true }
+    }
+
+    fn run_frame(&self, image: &Tensor<u8>, opts: &FrameOptions) -> Result<BackendFrame> {
+        let mut ctrl = SystemController::new(self.cfg.clone());
+        // Per-layer compressed outputs, keyed by name (kept for the CSP
+        // concat wiring; the tiny serving geometry makes this cheap).
+        let mut outputs: BTreeMap<String, Vec<SpikeMap>> = BTreeMap::new();
+        let mut prev: Option<String> = None;
+        let mut head: Option<Tensor<i32>> = None;
+        let mut layers: BTreeMap<String, LayerObservation> = BTreeMap::new();
+
+        for l in &self.net.layers {
+            let lw = self.weights.get(&l.name).expect("validated");
+            let planes = self.planes.get(&l.name).expect("compressed at construction");
+            // The head accumulates its membrane over in_t steps even
+            // though the spec says it emits one averaged output step.
+            let mut spec = l.clone();
+            if l.kind == ConvKind::Output {
+                spec.out_t = l.in_t;
+            }
+            let (run, input_sparsity) = if l.kind == ConvKind::Encoding {
+                // Every encoding step replays the same static frame; only
+                // clone when the layer really takes multiple steps.
+                let run = if l.in_t == 1 {
+                    ctrl.run_layer_prepared(
+                        &spec,
+                        lw,
+                        planes,
+                        LayerInput::Pixels(std::slice::from_ref(image)),
+                    )
+                } else {
+                    let frames = vec![image.clone(); l.in_t];
+                    ctrl.run_layer_prepared(&spec, lw, planes, LayerInput::Pixels(&frames))
+                }
+                .with_context(|| format!("simulating layer {}", l.name))?;
+                (run, image.sparsity())
+            } else {
+                let main = l
+                    .input_from
+                    .clone()
+                    .or_else(|| prev.clone())
+                    .ok_or_else(|| anyhow!("layer {} has no predecessor", l.name))?;
+                let main_steps = outputs
+                    .get(&main)
+                    .ok_or_else(|| anyhow!("layer {}: missing output of {main}", l.name))?;
+                let inputs: Vec<SpikeMap> = match l.concat_with.as_deref() {
+                    None => main_steps.clone(),
+                    Some(o) => {
+                        let os = outputs
+                            .get(o)
+                            .ok_or_else(|| anyhow!("layer {}: missing output of {o}", l.name))?;
+                        main_steps.iter().zip(os).map(|(a, b)| a.concat(b)).collect()
+                    }
+                };
+                let sparsity =
+                    inputs.iter().map(|m| m.sparsity()).sum::<f64>() / inputs.len().max(1) as f64;
+                let run = ctrl
+                    .run_layer_prepared(&spec, lw, planes, LayerInput::Spikes(&inputs))
+                    .with_context(|| format!("simulating layer {}", l.name))?;
+                (run, sparsity)
+            };
+            if opts.collect_stats {
+                layers.insert(
+                    l.name.clone(),
+                    LayerObservation {
+                        input_sparsity,
+                        spikes_out: run.spikes_out,
+                        cycles: run.cycles,
+                        dense_cycles: run.dense_cycles,
+                        core_cycles: run.core_cycles.clone(),
+                    },
+                );
+            }
+            if l.kind == ConvKind::Output {
+                head = run.head_acc;
+            } else {
+                outputs.insert(l.name.clone(), run.output);
+            }
+            prev = Some(l.name.clone());
+        }
+        let head_acc = head.ok_or_else(|| anyhow!("network has no output layer"))?;
+        Ok(BackendFrame { head_acc, layers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::GoldenBackend;
+    use crate::model::topology::{Scale, TimeStepConfig};
+    use crate::ref_impl::ForwardOptions;
+    use crate::util::Rng;
+
+    fn setup() -> (Arc<NetworkSpec>, Arc<ModelWeights>, Tensor<u8>) {
+        let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+        let mut w = ModelWeights::random(&net, 1.0, 50);
+        w.prune_fine_grained(0.8);
+        let mut rng = Rng::new(51);
+        let n = net.input_c * net.input_h * net.input_w;
+        let img = Tensor::from_vec(
+            net.input_c,
+            net.input_h,
+            net.input_w,
+            (0..n).map(|_| rng.next_u32() as u8).collect(),
+        );
+        (Arc::new(net), Arc::new(w), img)
+    }
+
+    #[test]
+    fn bit_exact_against_golden_with_hardware_tile() {
+        let (net, w, img) = setup();
+        let cfg = AccelConfig::paper();
+        let golden = GoldenBackend::new(
+            net.clone(),
+            w.clone(),
+            ForwardOptions { block_tile: Some((cfg.tile_w, cfg.tile_h)), record_spikes: false },
+        )
+        .unwrap();
+        let sim = CycleSimBackend::new(net, w, cfg).unwrap();
+        let opts = FrameOptions { collect_stats: true };
+        let a = golden.run_frame(&img, &opts).unwrap();
+        let b = sim.run_frame(&img, &opts).unwrap();
+        assert_eq!(a.head_acc.data, b.head_acc.data);
+        // Spike popcounts agree layer for layer; only the simulator
+        // reports cycles.
+        for (name, obs) in &b.layers {
+            if name != "head" {
+                assert_eq!(obs.spikes_out, a.layers[name].spikes_out, "{name}");
+            }
+            assert!(obs.cycles > 0, "{name}");
+            assert!(obs.cycles <= obs.dense_cycles, "{name}");
+        }
+        assert!(b.total_cycles() > 0);
+    }
+
+    #[test]
+    fn multicore_frame_is_bit_identical_and_faster() {
+        let (net, w, img) = setup();
+        let one = CycleSimBackend::new(net.clone(), w.clone(), AccelConfig::paper()).unwrap();
+        let four =
+            CycleSimBackend::new(net, w, AccelConfig::paper().with_cores(4)).unwrap();
+        let opts = FrameOptions { collect_stats: true };
+        let a = one.run_frame(&img, &opts).unwrap();
+        let b = four.run_frame(&img, &opts).unwrap();
+        assert_eq!(a.head_acc.data, b.head_acc.data);
+        // Tiny scale: the first layers have ≥ 4 tiles, so the frame
+        // makespan must strictly drop; no layer may get slower.
+        assert!(b.total_cycles() < a.total_cycles());
+        for (name, obs) in &b.layers {
+            assert!(obs.cycles <= a.layers[name].cycles, "{name}");
+            assert_eq!(obs.core_cycles.len(), 4, "{name}");
+            assert_eq!(obs.spikes_out, a.layers[name].spikes_out, "{name}");
+        }
+    }
+
+    #[test]
+    fn stats_off_skips_observations() {
+        let (net, w, img) = setup();
+        let sim = CycleSimBackend::new(net, w, AccelConfig::paper()).unwrap();
+        let frame = sim.run_frame(&img, &FrameOptions::default()).unwrap();
+        assert!(frame.layers.is_empty());
+        assert!(sim.caps().reports_cycles);
+    }
+}

@@ -1,0 +1,132 @@
+//! Golden-model backend: the functional reference, compressed spike maps
+//! end-to-end. This is the default serving backend — bit-identical to the
+//! exported PJRT graph (whole-image convolution) or to the accelerator
+//! (block convolution with the hardware tile), depending on the
+//! [`ForwardOptions`] it is built with.
+
+use super::{BackendCaps, BackendFrame, FrameOptions, LayerObservation, SnnBackend};
+use crate::model::topology::NetworkSpec;
+use crate::model::weights::ModelWeights;
+use crate::ref_impl::{ForwardOptions, SnnForward};
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// The functional golden model behind the [`SnnBackend`] interface.
+///
+/// Weights are validated once at construction; the spec and weights live
+/// behind `Arc`s shared with the pipeline and across worker threads, so
+/// `run_frame` allocates only per-frame state.
+pub struct GoldenBackend {
+    net: Arc<NetworkSpec>,
+    weights: Arc<ModelWeights>,
+    opts: ForwardOptions,
+}
+
+impl GoldenBackend {
+    /// New backend; validates weights against the spec.
+    pub fn new(
+        net: Arc<NetworkSpec>,
+        weights: Arc<ModelWeights>,
+        opts: ForwardOptions,
+    ) -> Result<GoldenBackend> {
+        weights.validate_against(&net)?;
+        Ok(GoldenBackend { net, weights, opts })
+    }
+
+    /// The forward options this backend runs with.
+    pub fn forward_options(&self) -> ForwardOptions {
+        self.opts
+    }
+}
+
+impl SnnBackend for GoldenBackend {
+    fn name(&self) -> &'static str {
+        "golden"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        BackendCaps { parallel: true, reports_sparsity: true, reports_cycles: false }
+    }
+
+    fn run_frame(&self, image: &Tensor<u8>, opts: &FrameOptions) -> Result<BackendFrame> {
+        let fwd = SnnForward::new(&self.net, &self.weights, self.opts)?;
+        let res = fwd.run(image)?;
+        let layers: BTreeMap<String, LayerObservation> = if opts.collect_stats {
+            res.stats
+                .iter()
+                .map(|(name, s)| {
+                    (
+                        name.clone(),
+                        LayerObservation {
+                            input_sparsity: s.input_sparsity,
+                            spikes_out: s.spikes_out,
+                            ..Default::default()
+                        },
+                    )
+                })
+                .collect()
+        } else {
+            BTreeMap::new()
+        };
+        Ok(BackendFrame { head_acc: res.head_acc, layers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::topology::{Scale, TimeStepConfig};
+    use crate::util::Rng;
+
+    fn setup() -> (Arc<NetworkSpec>, Arc<ModelWeights>, Tensor<u8>) {
+        let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+        let mut w = ModelWeights::random(&net, 1.0, 40);
+        w.prune_fine_grained(0.8);
+        let mut rng = Rng::new(41);
+        let n = net.input_c * net.input_h * net.input_w;
+        let img = Tensor::from_vec(
+            net.input_c,
+            net.input_h,
+            net.input_w,
+            (0..n).map(|_| rng.next_u32() as u8).collect(),
+        );
+        (Arc::new(net), Arc::new(w), img)
+    }
+
+    #[test]
+    fn matches_direct_golden_run() {
+        let (net, w, img) = setup();
+        let opts = ForwardOptions { block_tile: None, record_spikes: false };
+        let be = GoldenBackend::new(net.clone(), w.clone(), opts).unwrap();
+        let frame = be.run_frame(&img, &FrameOptions { collect_stats: true }).unwrap();
+        let want = SnnForward::new(&net, &w, opts).unwrap().run(&img).unwrap();
+        assert_eq!(frame.head_acc.data, want.head_acc.data);
+        assert_eq!(frame.layers.len(), net.layers.len());
+        for (name, obs) in &frame.layers {
+            let s = want.stats.get(name).unwrap();
+            assert_eq!(obs.input_sparsity, s.input_sparsity, "{name}");
+            assert_eq!(obs.spikes_out, s.spikes_out, "{name}");
+            assert_eq!(obs.cycles, 0, "golden reports no cycles");
+        }
+    }
+
+    #[test]
+    fn stats_off_leaves_layers_empty() {
+        let (net, w, img) = setup();
+        let be = GoldenBackend::new(net, w, ForwardOptions::default()).unwrap();
+        let frame = be.run_frame(&img, &FrameOptions::default()).unwrap();
+        assert!(frame.layers.is_empty());
+        assert!(be.caps().parallel);
+    }
+
+    #[test]
+    fn rejects_mismatched_weights() {
+        let tiny = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+        let full = NetworkSpec::paper(Scale::Full, TimeStepConfig::PAPER);
+        let w = ModelWeights::random(&tiny, 0.5, 42);
+        assert!(GoldenBackend::new(Arc::new(full), Arc::new(w), ForwardOptions::default())
+            .is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! Unified execution backends — one trait, three engines.
+//!
+//! The repo has three ways to compute a frame's head accumulator, all
+//! bit-identical by construction:
+//!
+//! - [`GoldenBackend`] — the functional golden model
+//!   ([`crate::ref_impl::SnnForward`]), compressed spike maps end-to-end;
+//! - [`CycleSimBackend`] — the cycle-level accelerator simulator
+//!   ([`crate::accel::controller::SystemController`]), which additionally
+//!   reports per-layer/per-core cycle counts;
+//! - [`PjrtBackend`] — the AOT-compiled HLO graph on the PJRT CPU client
+//!   ([`crate::runtime::SnnExecutable`], behind the `pjrt` feature).
+//!
+//! [`SnnBackend`] is the serving-path abstraction over them: `run_frame`
+//! plus capability and metrics hooks. The coordinator's streaming engine
+//! ([`crate::coordinator::engine`]) schedules frames onto any backend
+//! without knowing which one it drives; expensive preprocessing (weight
+//! validation, bit-mask compression of the kernel planes) happens **once**
+//! at backend construction and is shared across frames and worker threads
+//! behind `Arc`s.
+
+pub mod cyclesim;
+pub mod golden;
+pub mod pjrt;
+
+pub use cyclesim::CycleSimBackend;
+pub use golden::GoldenBackend;
+pub use pjrt::PjrtBackend;
+
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// What a backend can do beyond producing the head accumulator.
+#[derive(Clone, Copy, Debug)]
+pub struct BackendCaps {
+    /// `run_frame` may be called concurrently from worker threads. When
+    /// false the engine keeps every frame on the coordinator thread.
+    pub parallel: bool,
+    /// Fills per-layer `input_sparsity` / `spikes_out` observations.
+    pub reports_sparsity: bool,
+    /// Fills per-layer (and per-core) cycle counts.
+    pub reports_cycles: bool,
+}
+
+/// Per-frame execution options.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FrameOptions {
+    /// Collect per-layer observations (sparsity popcounts, cycles) into
+    /// [`BackendFrame::layers`]. Off for the plain detection path.
+    pub collect_stats: bool,
+}
+
+/// One layer's observations from a backend run. Which fields are
+/// populated depends on [`BackendCaps`]; unreported fields are zero.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayerObservation {
+    /// Mean fraction of zero inputs over the executed conv time steps.
+    pub input_sparsity: f64,
+    /// Spikes emitted by the layer (popcount over output time steps).
+    pub spikes_out: u64,
+    /// Layer makespan in cycles (cycle-reporting backends).
+    pub cycles: u64,
+    /// Dense-baseline makespan.
+    pub dense_cycles: u64,
+    /// Per-core cycle counters (multi-core cycle simulation).
+    pub core_cycles: Vec<u64>,
+}
+
+/// One frame's result: the raw integer head accumulator plus whatever
+/// observations the backend reports. Decoding/NMS stay in the
+/// coordinator — backends end at the representation boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BackendFrame {
+    /// Head accumulator `(c, gh, gw)`, summed over time steps.
+    pub head_acc: Tensor<i32>,
+    /// Per-layer observations (empty unless
+    /// [`FrameOptions::collect_stats`] and the backend reports any).
+    pub layers: BTreeMap<String, LayerObservation>,
+}
+
+impl BackendFrame {
+    /// Frame makespan in cycles summed over layers (0 for backends that
+    /// don't report cycles).
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.values().map(|l| l.cycles).sum()
+    }
+
+    /// Total spikes emitted across all layers.
+    pub fn total_spikes(&self) -> u64 {
+        self.layers.values().map(|l| l.spikes_out).sum()
+    }
+}
+
+/// A frame-execution engine: the one interface the serving path sees.
+///
+/// Implementations must be cheap to *call* — all per-model preprocessing
+/// (validation, weight compression) belongs in the constructor so a
+/// backend can be shared across worker threads behind an `Arc` and run
+/// frames with nothing but per-frame state.
+pub trait SnnBackend: Send + Sync {
+    /// Stable identifier (`golden`, `cyclesim`, `pjrt`).
+    fn name(&self) -> &'static str;
+
+    /// Static capabilities.
+    fn caps(&self) -> BackendCaps;
+
+    /// Execute one RGB frame `(3, h, w)` and return the head accumulator
+    /// (+ observations per `opts`).
+    fn run_frame(&self, image: &Tensor<u8>, opts: &FrameOptions) -> Result<BackendFrame>;
+}
+
+/// CLI-selectable backend kind (`--backend {golden,cyclesim,pjrt}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Functional golden model.
+    Golden,
+    /// Cycle-level accelerator simulator.
+    CycleSim,
+    /// PJRT-compiled AOT graph.
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "golden" | "ref" => Some(BackendKind::Golden),
+            "cyclesim" | "cycle-sim" | "sim" => Some(BackendKind::CycleSim),
+            "pjrt" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling.
+    pub fn label(self) -> &'static str {
+        match self {
+            BackendKind::Golden => "golden",
+            BackendKind::CycleSim => "cyclesim",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses_cli_spellings() {
+        assert_eq!(BackendKind::parse("golden"), Some(BackendKind::Golden));
+        assert_eq!(BackendKind::parse("cyclesim"), Some(BackendKind::CycleSim));
+        assert_eq!(BackendKind::parse("sim"), Some(BackendKind::CycleSim));
+        assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("tpu"), None);
+        assert_eq!(BackendKind::CycleSim.label(), "cyclesim");
+    }
+
+    #[test]
+    fn backend_frame_aggregates() {
+        let mut layers = BTreeMap::new();
+        layers.insert(
+            "a".to_string(),
+            LayerObservation { cycles: 10, spikes_out: 3, ..Default::default() },
+        );
+        layers.insert(
+            "b".to_string(),
+            LayerObservation { cycles: 5, spikes_out: 4, ..Default::default() },
+        );
+        let f = BackendFrame { head_acc: Tensor::zeros(1, 1, 1), layers };
+        assert_eq!(f.total_cycles(), 15);
+        assert_eq!(f.total_spikes(), 7);
+    }
+}

@@ -1,0 +1,73 @@
+//! PJRT backend: the AOT-compiled HLO graph on the PJRT CPU client.
+//!
+//! Only available in `pjrt`-feature builds; on stub builds
+//! [`PjrtBackend::load`] errors (like [`SnnExecutable::load`]) and the
+//! pipeline falls back to the golden model, which is bit-identical to the
+//! exported graph by construction.
+//!
+//! The executable sits behind a `Mutex` because the PJRT client is not
+//! known to be thread-safe; accordingly [`BackendCaps::parallel`] is
+//! false and the streaming engine keeps PJRT frames on the coordinator
+//! thread instead of fanning them out.
+
+use super::{BackendCaps, BackendFrame, FrameOptions, SnnBackend};
+use crate::runtime::SnnExecutable;
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// The PJRT executable behind the [`SnnBackend`] interface.
+pub struct PjrtBackend {
+    exe: Mutex<SnnExecutable>,
+}
+
+impl PjrtBackend {
+    /// Wrap an already-loaded executable.
+    pub fn new(exe: SnnExecutable) -> PjrtBackend {
+        PjrtBackend { exe: Mutex::new(exe) }
+    }
+
+    /// Load and compile an HLO-text artifact (errors on stub builds).
+    pub fn load(
+        hlo_path: &Path,
+        input_shape: (usize, usize, usize),
+        head_shape: (usize, usize, usize),
+    ) -> Result<PjrtBackend> {
+        Ok(PjrtBackend::new(SnnExecutable::load(hlo_path, input_shape, head_shape)?))
+    }
+
+    /// Platform string of the underlying client.
+    pub fn platform(&self) -> String {
+        self.exe.lock().expect("pjrt lock").platform()
+    }
+}
+
+impl SnnBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        BackendCaps { parallel: false, reports_sparsity: false, reports_cycles: false }
+    }
+
+    fn run_frame(&self, image: &Tensor<u8>, _opts: &FrameOptions) -> Result<BackendFrame> {
+        let head_acc = self.exe.lock().expect("pjrt lock").run(image)?;
+        Ok(BackendFrame { head_acc, layers: BTreeMap::new() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_errors_without_artifact_or_runtime() {
+        // Stub builds error on principle; real builds error on the
+        // missing file. Either way: an error, never a silent fallback.
+        assert!(PjrtBackend::load(Path::new("/nonexistent/x.hlo.txt"), (3, 192, 320), (40, 6, 10))
+            .is_err());
+    }
+}

@@ -20,6 +20,12 @@ pub struct AccelConfig {
     pub tile_h: usize,
     /// PE tile width (paper: 32).
     pub tile_w: usize,
+    /// Number of spatially parallel cores, each a full `tile_h × tile_w`
+    /// PE array. The implemented chip is a single core (paper: 1); the
+    /// simulator and the analytic model shard each layer's tile grid
+    /// round-robin across cores and report the layer makespan (max over
+    /// cores) — the §III-A spatial-parallelism scaling axis.
+    pub num_cores: usize,
     /// Clock frequency in Hz (paper: 500 MHz).
     pub clock_hz: f64,
     /// Weight precision in bits (paper: 8).
@@ -62,6 +68,7 @@ impl AccelConfig {
         AccelConfig {
             tile_h: 18,
             tile_w: 32,
+            num_cores: 1,
             clock_hz: 500e6,
             weight_bits: 8,
             vmem_bits: 8,
@@ -86,9 +93,21 @@ impl AccelConfig {
         AccelConfig { input_sram_bytes: 81 * 1024, ..Self::paper() }
     }
 
-    /// Number of PEs (one per output pixel of the tile; paper: 576).
+    /// `num_cores` variant (design-space sweeps, `--cores N`).
+    pub fn with_cores(mut self, cores: usize) -> Self {
+        self.num_cores = cores.max(1);
+        self
+    }
+
+    /// Number of PEs per core (one per output pixel of the tile;
+    /// paper: 576).
     pub fn num_pes(&self) -> usize {
         self.tile_h * self.tile_w
+    }
+
+    /// Total PEs across all cores.
+    pub fn total_pes(&self) -> usize {
+        self.num_pes() * self.num_cores.max(1)
     }
 
     /// Load overrides from a TOML-subset file section `[accel]`.
@@ -99,6 +118,7 @@ impl AccelConfig {
         if let Some(s) = doc.section("accel") {
             cfg.tile_h = s.get_usize("tile_h").unwrap_or(cfg.tile_h);
             cfg.tile_w = s.get_usize("tile_w").unwrap_or(cfg.tile_w);
+            cfg.num_cores = s.get_usize("num_cores").unwrap_or(cfg.num_cores).max(1);
             cfg.clock_hz = s.get_f64("clock_hz").unwrap_or(cfg.clock_hz);
             cfg.weight_bits = s.get_usize("weight_bits").unwrap_or(cfg.weight_bits);
             cfg.input_sram_bytes = s.get_usize("input_sram_bytes").unwrap_or(cfg.input_sram_bytes);
@@ -122,6 +142,11 @@ mod tests {
     fn paper_config_matches_fig16() {
         let c = AccelConfig::paper();
         assert_eq!(c.num_pes(), 576);
+        // The implemented chip is a single core.
+        assert_eq!(c.num_cores, 1);
+        assert_eq!(c.total_pes(), 576);
+        assert_eq!(c.with_cores(4).total_pes(), 4 * 576);
+        assert_eq!(AccelConfig::paper().with_cores(0).num_cores, 1);
         assert_eq!(c.clock_hz, 500e6);
         assert_eq!(c.weight_bits, 8);
         assert_eq!(c.acc_bits, 16);

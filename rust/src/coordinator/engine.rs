@@ -1,0 +1,302 @@
+//! Backend-agnostic streaming engine: a bounded frame queue, a worker
+//! pool, and **in-order** result folding.
+//!
+//! The engine schedules frames onto any [`SnnBackend`]; it knows nothing
+//! about what a frame computes. Work items enter a bounded channel,
+//! workers execute them concurrently, and results are folded on the
+//! coordinator thread **in frame order** via a reorder buffer — so a
+//! multi-worker run is bit-identical to a single-worker run, whatever the
+//! completion order. The feeder never runs more than
+//! `max(queue_depth, workers)` frames ahead of the fold cursor, so both
+//! the job queue and the reorder buffer are bounded (true back pressure:
+//! a straggler frame pauses intake instead of ballooning memory).
+//! Per-frame wall time is measured in the worker and delivered alongside
+//! the result.
+//!
+//! Backends that are not thread-safe ([`BackendCaps::parallel`] == false,
+//! e.g. PJRT) degrade transparently to sequential execution on the
+//! coordinator thread.
+
+use crate::backend::{BackendFrame, FrameOptions, SnnBackend};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Scheduling parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// Worker threads (1 = sequential on the coordinator thread).
+    pub workers: usize,
+    /// Bounded frame-queue depth (back-pressure window).
+    pub queue_depth: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { workers: 1, queue_depth: 8 }
+    }
+}
+
+/// The streaming engine bound to one backend.
+pub struct StreamingEngine {
+    backend: Arc<dyn SnnBackend>,
+    cfg: EngineConfig,
+}
+
+impl StreamingEngine {
+    /// New engine over a shared backend.
+    pub fn new(backend: Arc<dyn SnnBackend>, cfg: EngineConfig) -> StreamingEngine {
+        StreamingEngine { backend, cfg }
+    }
+
+    /// The backend this engine drives.
+    pub fn backend(&self) -> &dyn SnnBackend {
+        &*self.backend
+    }
+
+    /// Effective worker count for `n` frames: capped by the frame count,
+    /// and forced to 1 when the backend cannot run concurrently.
+    pub fn effective_workers(&self, n: usize) -> usize {
+        let w = self.cfg.workers.max(1).min(n.max(1));
+        if self.backend.caps().parallel {
+            w
+        } else {
+            1
+        }
+    }
+
+    /// The scheduling core: run `work(i)` for every `i in 0..n` on the
+    /// worker pool and deliver results to `fold` **in frame order**
+    /// together with the frame's wall time. `work` runs concurrently and
+    /// must be pure per frame; `fold` runs on the coordinator thread
+    /// only. The first frame error (in frame order) aborts the run.
+    pub fn stream_ordered<T, W, F>(&self, n: usize, work: W, mut fold: F) -> Result<()>
+    where
+        T: Send,
+        W: Fn(usize) -> Result<T> + Sync,
+        F: FnMut(usize, T, Duration) -> Result<()>,
+    {
+        let workers = self.effective_workers(n);
+        if workers <= 1 {
+            for i in 0..n {
+                let t0 = Instant::now();
+                let out = work(i)?;
+                fold(i, out, t0.elapsed())?;
+            }
+            return Ok(());
+        }
+
+        let (job_tx, job_rx) = mpsc::sync_channel::<usize>(self.cfg.queue_depth.max(workers));
+        let job_rx = Mutex::new(job_rx);
+        // Results are unbounded so workers never block on delivery — the
+        // bounded job queue is the only back-pressure point, which keeps
+        // the pool deadlock-free by construction.
+        let (res_tx, res_rx) = mpsc::channel::<(usize, Result<T>, Duration)>();
+
+        std::thread::scope(|s| -> Result<()> {
+            for _ in 0..workers {
+                let job_rx = &job_rx;
+                let res_tx = res_tx.clone();
+                let work = &work;
+                s.spawn(move || loop {
+                    // Take the next frame; stop when the feeder hung up.
+                    let idx = {
+                        let rx = job_rx.lock().expect("job queue lock");
+                        match rx.recv() {
+                            Ok(i) => i,
+                            Err(_) => break,
+                        }
+                    };
+                    let t0 = Instant::now();
+                    let out = work(idx);
+                    if res_tx.send((idx, out, t0.elapsed())).is_err() {
+                        break; // coordinator aborted
+                    }
+                });
+            }
+            drop(res_tx);
+
+            // Feed frames and fold completed results in frame order. The
+            // feeder never runs more than `window` frames ahead of the
+            // fold cursor, so the reorder buffer (and the result channel)
+            // stay bounded even when one straggler frame blocks folding.
+            let window = self.cfg.queue_depth.max(workers);
+            let mut pending: BTreeMap<usize, (Result<T>, Duration)> = BTreeMap::new();
+            let mut next = 0usize;
+            let mut sent = 0usize;
+            while next < n {
+                while sent < n && sent - next < window {
+                    job_tx.send(sent).map_err(|_| anyhow!("worker pool exited early"))?;
+                    sent += 1;
+                }
+                let (i, res, wall) =
+                    res_rx.recv().map_err(|_| anyhow!("worker pool exited early"))?;
+                pending.insert(i, (res, wall));
+                while let Ok((i, res, wall)) = res_rx.try_recv() {
+                    pending.insert(i, (res, wall));
+                }
+                while let Some((res, wall)) = pending.remove(&next) {
+                    fold(next, res?, wall)?;
+                    next += 1;
+                }
+            }
+            drop(job_tx);
+            Ok(())
+        })
+    }
+
+    /// Run raw frames through the backend, returning results in frame
+    /// order — the determinism-test / bench entry point.
+    pub fn run_frames(
+        &self,
+        frames: &[&Tensor<u8>],
+        opts: FrameOptions,
+    ) -> Result<Vec<BackendFrame>> {
+        let mut out: Vec<BackendFrame> = Vec::with_capacity(frames.len());
+        self.stream_ordered(
+            frames.len(),
+            |i| self.backend.run_frame(frames[i], &opts),
+            |_, frame, _| {
+                out.push(frame);
+                Ok(())
+            },
+        )?;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::BackendCaps;
+    use std::collections::BTreeMap;
+
+    /// Test backend: head = image bytes, slower for *earlier* frames so
+    /// completion order inverts frame order under parallelism.
+    struct MockBackend {
+        parallel: bool,
+    }
+
+    impl SnnBackend for MockBackend {
+        fn name(&self) -> &'static str {
+            "mock"
+        }
+
+        fn caps(&self) -> BackendCaps {
+            BackendCaps {
+                parallel: self.parallel,
+                reports_sparsity: false,
+                reports_cycles: false,
+            }
+        }
+
+        fn run_frame(&self, image: &Tensor<u8>, _opts: &FrameOptions) -> Result<BackendFrame> {
+            let tag = image.data[0];
+            if tag == 99 {
+                anyhow::bail!("poisoned frame");
+            }
+            std::thread::sleep(Duration::from_millis((8 - (tag as u64).min(8)) * 3));
+            let mut head = Tensor::zeros(image.c, image.h, image.w);
+            for (o, &v) in head.data.iter_mut().zip(&image.data) {
+                *o = v as i32 * 2;
+            }
+            Ok(BackendFrame { head_acc: head, layers: BTreeMap::new() })
+        }
+    }
+
+    fn frames(tags: &[u8]) -> Vec<Tensor<u8>> {
+        tags.iter().map(|&t| Tensor::from_vec(1, 1, 2, vec![t, t])).collect()
+    }
+
+    #[test]
+    fn parallel_results_arrive_in_frame_order() {
+        let imgs = frames(&[0, 1, 2, 3, 4, 5]);
+        let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+        let be = Arc::new(MockBackend { parallel: true });
+        let seq = StreamingEngine::new(be.clone(), EngineConfig { workers: 1, queue_depth: 2 })
+            .run_frames(&refs, FrameOptions::default())
+            .unwrap();
+        let par = StreamingEngine::new(be, EngineConfig { workers: 4, queue_depth: 2 })
+            .run_frames(&refs, FrameOptions::default())
+            .unwrap();
+        assert_eq!(seq.len(), 6);
+        assert_eq!(seq, par, "multi-worker run must be bit-identical in frame order");
+        for (i, f) in par.iter().enumerate() {
+            assert_eq!(f.head_acc.data[0], i as i32 * 2);
+        }
+    }
+
+    #[test]
+    fn fold_sees_monotone_indices_and_wall_times() {
+        let imgs = frames(&[5, 0, 3, 1]);
+        let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+        let engine = StreamingEngine::new(
+            Arc::new(MockBackend { parallel: true }),
+            EngineConfig { workers: 3, queue_depth: 1 },
+        );
+        let mut seen = Vec::new();
+        engine
+            .stream_ordered(
+                refs.len(),
+                |i| engine.backend().run_frame(refs[i], &FrameOptions::default()),
+                |i, _, wall| {
+                    seen.push(i);
+                    assert!(wall > Duration::ZERO);
+                    Ok(())
+                },
+            )
+            .unwrap();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn frame_error_aborts_in_frame_order() {
+        let imgs = frames(&[1, 99, 3, 4]);
+        let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+        for workers in [1usize, 4] {
+            let engine = StreamingEngine::new(
+                Arc::new(MockBackend { parallel: true }),
+                EngineConfig { workers, queue_depth: 4 },
+            );
+            let mut folded = Vec::new();
+            let err = engine
+                .stream_ordered(
+                    refs.len(),
+                    |i| engine.backend().run_frame(refs[i], &FrameOptions::default()),
+                    |i, _, _| {
+                        folded.push(i);
+                        Ok(())
+                    },
+                )
+                .unwrap_err();
+            assert!(err.to_string().contains("poisoned"), "workers={workers}: {err}");
+            assert_eq!(folded, vec![0], "workers={workers}: frame 0 folds, frame 1 aborts");
+        }
+    }
+
+    #[test]
+    fn non_parallel_backend_degrades_to_sequential() {
+        let engine = StreamingEngine::new(
+            Arc::new(MockBackend { parallel: false }),
+            EngineConfig { workers: 8, queue_depth: 4 },
+        );
+        assert_eq!(engine.effective_workers(100), 1);
+        let imgs = frames(&[2, 4]);
+        let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+        let out = engine.run_frames(&refs, FrameOptions::default()).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[1].head_acc.data[0], 8);
+    }
+
+    #[test]
+    fn empty_run_is_a_noop() {
+        let engine = StreamingEngine::new(
+            Arc::new(MockBackend { parallel: true }),
+            EngineConfig::default(),
+        );
+        let out = engine.run_frames(&[], FrameOptions::default()).unwrap();
+        assert!(out.is_empty());
+    }
+}

@@ -147,9 +147,22 @@ pub struct PipelineMetrics {
     pub detections: usize,
     /// Last simulated hardware estimate.
     pub hw: Option<FrameHwEstimate>,
+    /// Backend that produced the run (`golden`, `cyclesim`, `pjrt`).
+    pub backend: Option<String>,
+    /// Worker threads the streaming engine ran with (0 = not recorded).
+    pub workers: usize,
 }
 
 impl PipelineMetrics {
+    /// Metrics labeled with the run's backend and worker count.
+    pub fn for_run(backend: &str, workers: usize) -> PipelineMetrics {
+        PipelineMetrics {
+            backend: Some(backend.to_string()),
+            workers,
+            ..PipelineMetrics::default()
+        }
+    }
+
     /// Record one frame.
     pub fn record(&mut self, wall: Duration, detections: usize) {
         self.frames += 1;
@@ -191,6 +204,12 @@ impl PipelineMetrics {
             Json::Num(self.latency_pct(0.99).as_secs_f64() * 1e3),
         );
         m.insert("detections".into(), Json::Num(self.detections as f64));
+        if let Some(backend) = &self.backend {
+            m.insert("backend".into(), Json::Str(backend.clone()));
+        }
+        if self.workers > 0 {
+            m.insert("workers".into(), Json::Num(self.workers as f64));
+        }
         if let Some(hw) = &self.hw {
             let mut h = BTreeMap::new();
             h.insert("cycles".into(), Json::Num(hw.cycles as f64));
@@ -224,10 +243,12 @@ mod tests {
 
     #[test]
     fn json_report_parses() {
-        let mut m = PipelineMetrics::default();
+        let mut m = PipelineMetrics::for_run("golden", 4);
         m.record(Duration::from_millis(5), 1);
         let j = m.to_json().to_string_compact();
         let parsed = Json::parse(&j).unwrap();
         assert_eq!(parsed.at(&["frames"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(parsed.at(&["workers"]).unwrap().as_f64(), Some(4.0));
+        assert!(j.contains("golden"));
     }
 }

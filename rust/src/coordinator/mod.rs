@@ -4,15 +4,20 @@
 //!
 //! - [`tiler`] — 32×18 block tiling plan (the spatial-parallel work units);
 //! - [`scheduler`] — per-layer SRAM residency / DRAM refetch schedule;
-//! - [`pipeline`] — end-to-end frame pipeline: PJRT inference (or the
-//!   golden model), YOLO decode + NMS, hardware metric estimation;
+//! - [`engine`] — backend-agnostic streaming engine: bounded frame queue,
+//!   worker pool, in-order (deterministic) result folding;
+//! - [`pipeline`] — end-to-end frame pipeline over any
+//!   [`crate::backend::SnnBackend`]: inference, YOLO decode + NMS,
+//!   hardware metric estimation;
 //! - [`metrics`] — throughput/latency/energy aggregation and reporting.
 
+pub mod engine;
 pub mod metrics;
 pub mod pipeline;
 pub mod scheduler;
 pub mod tiler;
 
+pub use engine::{EngineConfig, StreamingEngine};
 pub use metrics::{FrameHwEstimate, PipelineMetrics};
 pub use pipeline::{DetectionPipeline, FrameResult, HwStatsMode, PipelineReport};
 pub use scheduler::{LayerPlan, LayerSchedule};

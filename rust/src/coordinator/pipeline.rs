@@ -1,22 +1,28 @@
-//! The end-to-end detection pipeline (the "chip driver").
+//! The end-to-end detection pipeline (the "chip driver"), rebuilt on the
+//! unified backend interface.
 //!
-//! Per frame: run the quantized network — through the PJRT executable when
-//! the AOT artifacts are available, else through the functional golden
-//! model (bit-identical by construction) — decode the YOLO head, apply
-//! NMS, and (optionally) estimate the hardware metrics of the frame on
-//! the cycle/energy models using the frame's real activation sparsity.
+//! The pipeline owns an [`SnnBackend`] — PJRT executable, cycle-level
+//! simulator, or the functional golden model (bit-identical by
+//! construction) — and drives frames through the coordinator's
+//! [`StreamingEngine`]: a bounded frame queue feeding a worker pool, with
+//! per-frame metrics folded into [`PipelineMetrics`] in frame order, so a
+//! multi-worker run is bit-identical to a single-worker run.
 //!
-//! The golden path carries activations as compressed
-//! [`crate::sparse::SpikeMap`]s end-to-end (event-driven convolution,
-//! popcount statistics); dense `Tensor<u8>` frames exist only at the two
-//! representation boundaries — the RGB input and the PJRT executable.
-//!
-//! Multi-frame runs fan golden-model work across worker threads; the PJRT
-//! path executes on the coordinator thread (the executable is not `Sync`).
+//! Model preprocessing is paid once: the spec and quantized weights live
+//! behind `Arc`s shared with the backend and every worker, and the
+//! cycle-sim backend compresses its `BitMaskKernel` planes at
+//! construction, never per frame. Per frame the pipeline decodes the YOLO
+//! head, applies NMS, and (optionally, on the [`HwStatsMode`] cadence)
+//! estimates the frame's hardware metrics on the cycle/energy models
+//! using the frame's real activation sparsity.
 
 use crate::accel::energy::EnergyModel;
 use crate::accel::latency::LatencyModel;
+use crate::backend::{
+    BackendKind, CycleSimBackend, FrameOptions, GoldenBackend, PjrtBackend, SnnBackend,
+};
 use crate::config::AccelConfig;
+use crate::coordinator::engine::{EngineConfig, StreamingEngine};
 use crate::coordinator::metrics::{FrameHwEstimate, PipelineMetrics};
 use crate::detect::dataset::Dataset;
 use crate::detect::map::mean_ap;
@@ -26,10 +32,11 @@ use crate::detect::NUM_CLASSES;
 use crate::model::topology::{NetworkSpec, Scale, TimeStepConfig};
 use crate::model::weights::ModelWeights;
 use crate::ref_impl::{ForwardOptions, SnnForward};
-use crate::runtime::{ArtifactPaths, SnnExecutable};
+use crate::runtime::{try_load_executable, ArtifactPaths};
 use crate::tensor::Tensor;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// How often to run the (costly) golden-model hardware estimation.
@@ -67,11 +74,12 @@ pub struct PipelineReport {
 
 /// The pipeline.
 pub struct DetectionPipeline {
-    /// Network spec (tiny scale — the trained/exported geometry).
-    pub net: NetworkSpec,
-    /// Quantized weights.
-    pub weights: ModelWeights,
-    exe: Option<SnnExecutable>,
+    /// Network spec (tiny scale — the trained/exported geometry), shared
+    /// with the backend and the workers.
+    pub net: Arc<NetworkSpec>,
+    /// Quantized weights, shared likewise.
+    pub weights: Arc<ModelWeights>,
+    backend: Arc<dyn SnnBackend>,
     head_cfg: YoloHead,
     /// Score threshold for decoding.
     pub conf_thresh: f32,
@@ -81,6 +89,10 @@ pub struct DetectionPipeline {
     energy: EnergyModel,
     /// Hardware estimation cadence.
     pub hw_mode: HwStatsMode,
+    /// Worker threads for the streaming engine (1 = sequential).
+    pub workers: usize,
+    /// Bounded frame-queue depth (engine back-pressure window).
+    pub queue_depth: usize,
 }
 
 impl DetectionPipeline {
@@ -89,83 +101,164 @@ impl DetectionPipeline {
     /// benches so they don't pay PJRT compilation).
     pub fn from_artifacts(dir: &Path, use_pjrt: bool) -> Result<Self> {
         let paths = ArtifactPaths::in_dir(dir);
-        let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
-        let weights = ModelWeights::load(&paths.weights)
-            .with_context(|| "loading quantized weights (run `make artifacts`)")?;
+        let net = Arc::new(NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER));
+        let weights = Arc::new(
+            ModelWeights::load(&paths.weights)
+                .with_context(|| "loading quantized weights (run `make artifacts`)")?,
+        );
         weights.validate_against(&net)?;
         let (gw, gh) = net.grid();
-        let exe = if use_pjrt && !SnnExecutable::SUPPORTED {
-            // Stub build: fall back to the (bit-identical) golden model.
-            eprintln!("PJRT not built (enable the `pjrt` feature); using the golden model");
-            None
-        } else if use_pjrt {
-            // Real PJRT build: a broken artifact is a hard error, not a
-            // silent backend switch.
-            Some(SnnExecutable::load(
+        let backend: Arc<dyn SnnBackend> = if use_pjrt {
+            // A stub build falls back to the (bit-identical) golden model;
+            // a real PJRT build with a broken artifact is a hard error,
+            // not a silent backend switch.
+            match try_load_executable(
                 &paths.model_hlo,
                 (net.input_c, net.input_h, net.input_w),
                 (net.layers.last().unwrap().c_out, gh, gw),
-            )?)
+            )? {
+                Some(exe) => Arc::new(PjrtBackend::new(exe)),
+                None => {
+                    eprintln!(
+                        "PJRT not built (enable the `pjrt` feature); using the golden model"
+                    );
+                    Arc::new(Self::golden_backend(&net, &weights)?)
+                }
+            }
         } else {
-            None
+            Arc::new(Self::golden_backend(&net, &weights)?)
         };
-        Ok(DetectionPipeline {
-            net,
-            weights,
-            exe,
-            head_cfg: YoloHead::default(),
-            conf_thresh: 0.1,
-            nms_iou: 0.45,
-            cfg: AccelConfig::paper(),
-            energy: EnergyModel::default(),
-            hw_mode: HwStatsMode::Once,
-        })
+        Ok(Self::assemble(net, weights, backend))
     }
 
     /// Build directly from in-memory weights (tests, synthetic benches).
     pub fn from_weights(net: NetworkSpec, weights: ModelWeights) -> Result<Self> {
-        weights.validate_against(&net)?;
-        Ok(DetectionPipeline {
+        let net = Arc::new(net);
+        let weights = Arc::new(weights);
+        let backend = Arc::new(Self::golden_backend(&net, &weights)?);
+        Ok(Self::assemble(net, weights, backend))
+    }
+
+    fn assemble(
+        net: Arc<NetworkSpec>,
+        weights: Arc<ModelWeights>,
+        backend: Arc<dyn SnnBackend>,
+    ) -> Self {
+        DetectionPipeline {
             net,
             weights,
-            exe: None,
+            backend,
             head_cfg: YoloHead::default(),
             conf_thresh: 0.1,
             nms_iou: 0.45,
             cfg: AccelConfig::paper(),
             energy: EnergyModel::default(),
             hw_mode: HwStatsMode::Once,
-        })
+            workers: 1,
+            queue_depth: 8,
+        }
+    }
+
+    /// Golden backend in whole-image mode (matches the exported graph).
+    fn golden_backend(
+        net: &Arc<NetworkSpec>,
+        weights: &Arc<ModelWeights>,
+    ) -> Result<GoldenBackend> {
+        GoldenBackend::new(
+            net.clone(),
+            weights.clone(),
+            ForwardOptions { block_tile: None, record_spikes: false },
+        )
+    }
+
+    /// Switch the execution backend. `CycleSim` simulates the current
+    /// [`AccelConfig`] (see [`Self::set_cores`]); `Pjrt` must be selected
+    /// at construction via [`Self::from_artifacts`] because it needs the
+    /// compiled artifact.
+    pub fn select_backend(&mut self, kind: BackendKind) -> Result<()> {
+        self.backend = match kind {
+            BackendKind::Golden => Arc::new(Self::golden_backend(&self.net, &self.weights)?),
+            BackendKind::CycleSim => Arc::new(CycleSimBackend::new(
+                self.net.clone(),
+                self.weights.clone(),
+                self.cfg.clone(),
+            )?),
+            BackendKind::Pjrt => {
+                if self.backend.name() == "pjrt" {
+                    return Ok(());
+                }
+                bail!("select the PJRT backend at construction (from_artifacts with use_pjrt)")
+            }
+        };
+        Ok(())
+    }
+
+    /// Set the simulated core count; rebuilds the cycle-sim backend if it
+    /// is the active one.
+    pub fn set_cores(&mut self, cores: usize) -> Result<()> {
+        self.cfg.num_cores = cores.max(1);
+        if self.backend.name() == "cyclesim" {
+            self.select_backend(BackendKind::CycleSim)?;
+        }
+        Ok(())
+    }
+
+    /// Name of the active backend (`golden`, `cyclesim`, `pjrt`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Whether the PJRT path is active.
     pub fn uses_pjrt(&self) -> bool {
-        self.exe.is_some()
+        self.backend.name() == "pjrt"
     }
 
-    /// Head accumulator of one frame (PJRT if available, else golden).
+    /// A streaming engine over the active backend with the pipeline's
+    /// scheduling parameters.
+    pub fn engine(&self) -> StreamingEngine {
+        StreamingEngine::new(
+            self.backend.clone(),
+            EngineConfig { workers: self.workers, queue_depth: self.queue_depth },
+        )
+    }
+
+    /// Head accumulator of one frame on the active backend.
     pub fn head_acc(&self, image: &Tensor<u8>) -> Result<Tensor<i32>> {
-        match &self.exe {
-            Some(exe) => exe.run(image),
-            None => {
-                let fwd = SnnForward::new(
-                    &self.net,
-                    &self.weights,
-                    // Whole-image conv: matches the exported graph.
-                    ForwardOptions { block_tile: None, record_spikes: false },
-                )?;
-                Ok(fwd.run(image)?.head_acc)
-            }
-        }
+        Ok(self.backend.run_frame(image, &FrameOptions::default())?.head_acc)
+    }
+
+    /// The per-frame inference → dequantize → decode → NMS sequence —
+    /// the one definition every entry point (single frame, streamed
+    /// batch, dataset) runs.
+    fn detect_frame(&self, image: &Tensor<u8>) -> Result<(Vec<Box2D>, Tensor<f32>)> {
+        let acc = self.backend.run_frame(image, &FrameOptions::default())?.head_acc;
+        let head = self.dequantize_head(&acc);
+        let dets = nms(decode(&head, &self.head_cfg, self.conf_thresh), self.nms_iou);
+        Ok((dets, head))
     }
 
     /// Process one frame end to end.
     pub fn process_frame(&self, image: &Tensor<u8>) -> Result<FrameResult> {
         let t0 = Instant::now();
-        let acc = self.head_acc(image)?;
-        let head = self.dequantize_head(&acc);
-        let dets = nms(decode(&head, &self.head_cfg, self.conf_thresh), self.nms_iou);
-        Ok(FrameResult { detections: dets, head, wall: t0.elapsed() })
+        let (detections, head) = self.detect_frame(image)?;
+        Ok(FrameResult { detections, head, wall: t0.elapsed() })
+    }
+
+    /// Process a batch of frames through the streaming engine; results
+    /// come back in frame order and are bit-identical for any worker
+    /// count.
+    pub fn process_frames(&self, images: &[&Tensor<u8>]) -> Result<Vec<FrameResult>> {
+        let engine = self.engine();
+        let mut out: Vec<FrameResult> = Vec::with_capacity(images.len());
+        engine.stream_ordered(
+            images.len(),
+            |i| self.detect_frame(images[i]),
+            |_, (detections, head), wall| {
+                out.push(FrameResult { detections, head, wall });
+                Ok(())
+            },
+        )?;
+        Ok(out)
     }
 
     /// Dequantize the head accumulator (scale / time steps).
@@ -223,23 +316,33 @@ impl DetectionPipeline {
         Ok(FrameHwEstimate::from_profile(full_net, &profile, &lat, &self.cfg, &self.energy))
     }
 
-    /// Run the pipeline over a dataset, computing mAP and metrics.
+    /// Run the pipeline over a dataset, computing mAP and metrics. Frames
+    /// stream through the worker pool; metrics and detections are folded
+    /// in frame order (deterministic for any worker count).
     pub fn process_dataset(&self, ds: &Dataset) -> Result<PipelineReport> {
-        let mut metrics = PipelineMetrics::default();
+        let mut metrics = PipelineMetrics::for_run(
+            self.backend.name(),
+            self.engine().effective_workers(ds.samples.len()),
+        );
         let mut dets: Vec<(usize, Box2D)> = Vec::new();
-        for (i, sample) in ds.samples.iter().enumerate() {
-            let fr = self.process_frame(&sample.image)?;
-            metrics.record(fr.wall, fr.detections.len());
-            dets.extend(fr.detections.iter().map(|d| (i, *d)));
-            let need_hw = match self.hw_mode {
-                HwStatsMode::Off => false,
-                HwStatsMode::Once => i == 0,
-                HwStatsMode::Every(n) => n > 0 && i % n == 0,
-            };
-            if need_hw {
-                metrics.hw = Some(self.estimate_hw(&sample.image)?);
-            }
-        }
+        let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+        self.engine().stream_ordered(
+            images.len(),
+            |i| Ok(self.detect_frame(images[i])?.0),
+            |i, frame_dets, wall| {
+                metrics.record(wall, frame_dets.len());
+                dets.extend(frame_dets.iter().map(|d| (i, *d)));
+                let need_hw = match self.hw_mode {
+                    HwStatsMode::Off => false,
+                    HwStatsMode::Once => i == 0,
+                    HwStatsMode::Every(n) => n > 0 && i % n == 0,
+                };
+                if need_hw {
+                    metrics.hw = Some(self.estimate_hw(&ds.samples[i].image)?);
+                }
+                Ok(())
+            },
+        )?;
         let gts = ds.ground_truth();
         let summary = mean_ap(&dets, &gts, NUM_CLASSES, 0.5);
         Ok(PipelineReport { metrics, map: summary.mean, ap: summary.ap })
@@ -265,6 +368,7 @@ mod tests {
         assert_eq!(fr.head.c, 40);
         assert!(fr.wall.as_nanos() > 0);
         assert!(!p.uses_pjrt());
+        assert_eq!(p.backend_name(), "golden");
     }
 
     #[test]
@@ -280,6 +384,49 @@ mod tests {
         assert!(hw.sim_fps > 0.0);
         assert!((0.0..=1.0).contains(&hw.input_sparsity));
         assert!(hw.power.core_power_mw > 0.0);
+        assert_eq!(rep.metrics.backend.as_deref(), Some("golden"));
+        assert_eq!(rep.metrics.workers, 1);
+    }
+
+    #[test]
+    fn multi_worker_run_is_bit_identical() {
+        let mut p = synthetic_pipeline();
+        let ds = Dataset::synth(5, p.net.input_w, p.net.input_h, 6);
+        let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+        let seq = p.process_frames(&images).unwrap();
+        p.workers = 4;
+        p.queue_depth = 2;
+        let par = p.process_frames(&images).unwrap();
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.detections, b.detections);
+            assert_eq!(a.head.data, b.head.data);
+        }
+        // Dataset-level aggregation matches too (mAP over identical
+        // detections).
+        let rep_seq = { p.workers = 1; p.process_dataset(&ds).unwrap() };
+        let rep_par = { p.workers = 4; p.process_dataset(&ds).unwrap() };
+        assert_eq!(rep_seq.map, rep_par.map);
+        assert_eq!(rep_seq.metrics.detections, rep_par.metrics.detections);
+        assert_eq!(rep_par.metrics.workers, 4);
+    }
+
+    #[test]
+    fn cyclesim_backend_selectable_and_consistent() {
+        let mut p = synthetic_pipeline();
+        let ds = Dataset::synth(1, p.net.input_w, p.net.input_h, 7);
+        p.select_backend(BackendKind::CycleSim).unwrap();
+        assert_eq!(p.backend_name(), "cyclesim");
+        let fr = p.process_frame(&ds.samples[0].image).unwrap();
+        assert_eq!(fr.head.c, 40);
+        // Switching cores rebuilds the simulator but not the results.
+        p.set_cores(4).unwrap();
+        let fr4 = p.process_frame(&ds.samples[0].image).unwrap();
+        assert_eq!(fr.head.data, fr4.head.data);
+        p.select_backend(BackendKind::Golden).unwrap();
+        assert_eq!(p.backend_name(), "golden");
+        // PJRT cannot be selected without artifacts.
+        assert!(p.select_backend(BackendKind::Pjrt).is_err());
     }
 
     #[test]

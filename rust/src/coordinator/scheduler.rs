@@ -16,6 +16,9 @@ pub struct LayerPlan {
     pub name: String,
     /// Tiles per feature map.
     pub tiles: usize,
+    /// Tiles on the busiest core under round-robin sharding across
+    /// `AccelConfig::num_cores` (= `tiles` on a single-core config).
+    pub tiles_on_busiest_core: usize,
     /// Compressed weight bytes (bit-mask format).
     pub weight_bytes: usize,
     /// Whether the compressed weights fit the on-chip weight SRAMs.
@@ -54,6 +57,7 @@ impl LayerSchedule {
                 LayerPlan {
                     name: l.name.clone(),
                     tiles: plan.count(),
+                    tiles_on_busiest_core: plan.count().div_ceil(cfg.num_cores.max(1)),
                     weight_bytes: wbits / 8,
                     weights_resident: weight_sram.fits(wbits / 8),
                     input_working_set_bits: ws_bits,
@@ -136,7 +140,17 @@ mod tests {
         let s = setup(AccelConfig::paper());
         // First layer: 1024×576 / (32×18) = 1024 tiles.
         assert_eq!(s.layers[0].tiles, 1024);
+        assert_eq!(s.layers[0].tiles_on_busiest_core, 1024);
         // Head: 32×18 → single tile.
         assert_eq!(s.layers.last().unwrap().tiles, 1);
+    }
+
+    #[test]
+    fn multicore_shards_tile_budget() {
+        let s = setup(AccelConfig::paper().with_cores(8));
+        assert_eq!(s.layers[0].tiles, 1024);
+        assert_eq!(s.layers[0].tiles_on_busiest_core, 128);
+        // The single-tile head cannot shard.
+        assert_eq!(s.layers.last().unwrap().tiles_on_busiest_core, 1);
     }
 }

@@ -25,6 +25,7 @@
 //! | Module | Role |
 //! |---|---|
 //! | [`util`] | PRNG, property testing, bench harness, CLI (offline substrates) |
+//! | [`backend`] | unified `SnnBackend` trait: golden / cycle-sim / PJRT frame engines |
 //! | [`tensor`] | NCHW tensors + fixed-point arithmetic (FXP8/FXP16) |
 //! | [`sparse`] | bit-mask / CSR weight compression + compressed spike planes (`SpikePlane`/`SpikeMap`) carried end-to-end |
 //! | [`config`] | TOML-subset config system + hardware configuration registers |
@@ -33,9 +34,10 @@
 //! | [`accel`] | cycle-level accelerator simulator (the paper's §III) |
 //! | [`detect`] | YOLOv2 decode, NMS, mAP, synthetic IVS-3cls dataset |
 //! | [`runtime`] | PJRT CPU client for `artifacts/*.hlo.txt` |
-//! | [`coordinator`] | block tiler, layer scheduler, frame pipeline, metrics |
+//! | [`coordinator`] | block tiler, layer scheduler, streaming engine, frame pipeline, metrics |
 
 pub mod accel;
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod detect;

@@ -10,10 +10,11 @@
 //! - `miout`       per-layer mIoUT (Fig 5)
 //! - `report`      summarize `artifacts/metrics.json` (python build metrics)
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use scsnn::accel::energy::{AreaModel, EnergyModel};
 use scsnn::accel::latency::LatencyModel;
-use scsnn::accel::parallelism::fig6_study;
+use scsnn::accel::parallelism::{fig6_study, multicore_study};
+use scsnn::backend::BackendKind;
 use scsnn::config::AccelConfig;
 use scsnn::coordinator::pipeline::{DetectionPipeline, HwStatsMode};
 use scsnn::detect::dataset::{write_ppm, Dataset};
@@ -57,7 +58,8 @@ fn print_usage() {
     println!(
         "scsnn — sparse compressed SNN accelerator (TCAS-I 2022 reproduction)\n\
          usage: scsnn <detect|simulate|parallelism|dram|timesteps|miout|report> [--options]\n\
-         common options: --artifacts DIR  --scale full|tiny  --seed N"
+         common options: --artifacts DIR  --scale full|tiny  --seed N\n\
+         serving options: --backend golden|cyclesim|pjrt  --workers N  --cores N"
     );
 }
 
@@ -85,12 +87,36 @@ fn scale(args: &Args) -> Scale {
     Scale::parse(args.get_or("scale", "full")).unwrap_or(Scale::Full)
 }
 
+/// Parse `--backend` when given.
+fn backend_kind(args: &Args) -> Result<Option<BackendKind>> {
+    match args.get("backend") {
+        None => Ok(None),
+        Some(s) => BackendKind::parse(s)
+            .map(Some)
+            .ok_or_else(|| anyhow!("unknown backend {s:?} (golden|cyclesim|pjrt)")),
+    }
+}
+
 fn cmd_detect(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
-    let use_pjrt = !args.has_flag("no-pjrt");
+    let backend = backend_kind(args)?;
+    let use_pjrt = match backend {
+        Some(BackendKind::Pjrt) => true,
+        Some(_) => false,
+        None => !args.has_flag("no-pjrt"),
+    };
     let mut pipeline = DetectionPipeline::from_artifacts(&dir, use_pjrt)?;
     pipeline.hw_mode = HwStatsMode::Once;
     pipeline.conf_thresh = args.parsed_or("conf", 0.1f32);
+    pipeline.workers = args.parsed_or("workers", 1usize).max(1);
+    pipeline.set_cores(args.parsed_or("cores", 1usize))?;
+    match backend {
+        Some(BackendKind::Pjrt) if !pipeline.uses_pjrt() => {
+            bail!("--backend pjrt requested but the PJRT runtime is not built (enable the `pjrt` feature)")
+        }
+        Some(kind) if kind != BackendKind::Pjrt => pipeline.select_backend(kind)?,
+        _ => {}
+    }
 
     let ds_path = args
         .get("dataset")
@@ -100,9 +126,11 @@ fn cmd_detect(args: &Args) -> Result<()> {
     let frames = args.parsed_or("frames", ds.samples.len());
     ds.samples.truncate(frames);
     println!(
-        "running {} frames through {} path…",
+        "running {} frames through the {} backend ({} workers, {} cores)…",
         ds.samples.len(),
-        if pipeline.uses_pjrt() { "PJRT" } else { "golden-model" }
+        pipeline.backend_name(),
+        pipeline.workers,
+        args.parsed_or("cores", 1usize).max(1)
     );
     let report = pipeline.process_dataset(&ds)?;
     println!("mAP@0.5 = {:.3}  (per-class {:?})", report.map, report.ap);
@@ -124,7 +152,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let sc = scale(args);
     let net = NetworkSpec::paper(sc, TimeStepConfig::PAPER);
     let (weights, kind) = load_or_random(args, &net);
-    let cfg = AccelConfig::paper();
+    let cores = args.parsed_or("cores", 1usize).max(1);
+    let cfg = AccelConfig::paper().with_cores(cores);
     let lat = LatencyModel::new(cfg.clone()).network(&net, &weights);
     let area = AreaModel::default().report(&cfg);
     println!("network {}  weights: {kind}  density {:.3}", net.name, weights.density());
@@ -134,6 +163,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         lat.dense_cycles(),
         lat.latency_saving() * 100.0
     );
+    if cores > 1 {
+        println!(
+            "{cores} cores: makespan {} cycles  speedup {:.2}x  efficiency {:.0}%",
+            lat.sparse_makespan(),
+            lat.core_speedup(),
+            lat.core_speedup() / cores as f64 * 100.0
+        );
+    }
     println!("fps @ {:.0} MHz: {:.1}", cfg.clock_hz / 1e6, lat.fps(cfg.clock_hz));
     println!(
         "area: {:.2} mm² total ({:.0}% memory), logic {:.1} KGE",
@@ -164,6 +201,17 @@ fn cmd_parallelism(args: &Args) -> Result<()> {
             row.cycles,
             row.rel_latency,
             row.fifo_bytes as f64 / 1024.0
+        );
+    }
+    println!("\nmulti-core tile sharding (analytic makespan):");
+    println!("{:<8} {:>14} {:>9} {:>11}", "cores", "makespan", "speedup", "efficiency");
+    for row in multicore_study(&net, &weights, &AccelConfig::paper(), &[1, 2, 4, 8, 16]) {
+        println!(
+            "{:<8} {:>14} {:>8.2}x {:>10.0}%",
+            row.cores,
+            row.makespan,
+            row.speedup,
+            row.efficiency * 100.0
         );
     }
     Ok(())

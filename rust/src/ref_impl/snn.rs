@@ -48,6 +48,10 @@ pub struct LayerStats {
     pub input_sparsity: f64,
     /// Mean fraction of zero outputs (post-LIF) over time steps.
     pub output_sparsity: f64,
+    /// Total spikes emitted across output time steps (popcount of the
+    /// compressed output maps, post-pooling) — the layer's event count as
+    /// the backends report it.
+    pub spikes_out: u64,
     /// Sparse MAC count actually executed (zero weights skipped).
     pub sparse_macs: u64,
     /// Dense MAC count (no skipping) for the same work.
@@ -245,6 +249,7 @@ impl<'a> SnnForward<'a> {
                             sp = sp.maxpool2x2_or();
                         }
                         stats.output_sparsity += sp.sparsity();
+                        stats.spikes_out += sp.count_set() as u64;
                         out_steps.push(sp);
                     }
                     stats.output_sparsity /= layer.out_t as f64;

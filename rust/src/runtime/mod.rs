@@ -92,6 +92,22 @@ pub fn load_trained_or_random(
     (w, false)
 }
 
+/// Load the PJRT executable when this build carries the runtime;
+/// `Ok(None)` on a stub build (the caller falls back to the golden model,
+/// which is bit-identical to the exported graph by construction). A real
+/// PJRT build with a broken artifact is a hard error, never a silent
+/// backend switch.
+pub fn try_load_executable(
+    hlo_path: &Path,
+    input_shape: (usize, usize, usize),
+    head_shape: (usize, usize, usize),
+) -> Result<Option<SnnExecutable>> {
+    if !SnnExecutable::SUPPORTED {
+        return Ok(None);
+    }
+    Ok(Some(SnnExecutable::load(hlo_path, input_shape, head_shape)?))
+}
+
 /// A compiled SNN inference executable on the PJRT CPU client.
 #[cfg(feature = "pjrt")]
 pub struct SnnExecutable {
