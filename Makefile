@@ -25,11 +25,12 @@ clippy:
 bench:
 	cd rust && $(CARGO) bench
 
-# Quick serving-path smoke: streaming engine + multi-core simulator with a
-# minimal sample budget (same as the CI bench step).
+# Quick serving-path smoke: streaming engine + multi-core simulator +
+# multi-chip cluster with a minimal sample budget (same as the CI bench step).
 bench-smoke:
 	cd rust && SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_throughput && \
-	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench fig06_parallelism
+	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench fig06_parallelism && \
+	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_cluster
 
 # One-shot python build path: datasets + training + quantized weights +
 # AOT HLO artifact + metrics.json. Requires jax (see python/).

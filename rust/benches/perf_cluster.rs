@@ -1,0 +1,108 @@
+//! Multi-chip cluster sweep: chips × sharding policy on one tiny-scale
+//! frame, recorded to `BENCH_cluster.json`.
+//!
+//! For every combination the bench reports the simulated frame makespan
+//! (compute + interconnect), the steady-state initiation interval, the
+//! interconnect traffic in MB, and the frame energy split
+//! (chips + link). Two cross-checks run inline, mirroring
+//! `tests/cluster_equivalence.rs`:
+//!
+//! - the executed compute cycles equal the analytic
+//!   `LatencyModel::cluster` makespan (lock-step, weights-only);
+//! - re-pricing the recorded transfer log with the `LinkSpec` constants
+//!   reproduces the executed transfer cycles and link energy.
+
+use scsnn::accel::dram::LinkSpec;
+use scsnn::accel::latency::LatencyModel;
+use scsnn::backend::FrameOptions;
+use scsnn::cluster::ChipCluster;
+use scsnn::config::{ClusterConfig, ShardPolicy};
+use scsnn::detect::dataset::Dataset;
+use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::weights::ModelWeights;
+use scsnn::util::json::Json;
+use scsnn::util::BenchRunner;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn main() {
+    let r = BenchRunner::new("perf_cluster");
+    let net = Arc::new(NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER));
+    let mut w = ModelWeights::random(&net, 1.0, 130);
+    w.prune_fine_grained(0.8);
+    let w = Arc::new(w);
+    let ds = Dataset::synth(1, net.input_w, net.input_h, 131);
+    let image = &ds.samples[0].image;
+    let clock = ClusterConfig::single_chip().chip.clock_hz;
+
+    let mut rows: Vec<Json> = Vec::new();
+    r.section("chips × policy (simulated makespan, interconnect, energy)");
+    for chips in [1usize, 2, 4] {
+        for policy in ShardPolicy::all() {
+            let cc = ClusterConfig::single_chip().with_chips(chips).with_policy(policy);
+            let link = LinkSpec::from_cluster(&cc);
+            let analytic = LatencyModel::cluster(&net, &w, &cc);
+            let cluster = ChipCluster::new(net.clone(), w.clone(), cc).unwrap();
+            let cf = cluster
+                .run_frame_cluster(image, &FrameOptions::default())
+                .unwrap();
+
+            // Lock-step: executed compute vs closed form, and the link
+            // costs re-priced from the transfer log.
+            assert_eq!(
+                cf.run.compute_cycles, analytic.compute_makespan,
+                "chips={chips} {policy:?}: executed compute != analytic makespan"
+            );
+            let repriced: u64 =
+                cf.run.transfers.iter().map(|t| link.transfer_cycles(t.bits)).sum();
+            assert_eq!(cf.run.transfer_cycles, repriced, "chips={chips} {policy:?}");
+            let link_mj = link.energy_mj(cf.run.interconnect_bits);
+            assert!((cf.run.energy.interconnect_mj - link_mj).abs() < 1e-12);
+
+            let interconnect_mb = cf.run.interconnect_bits as f64 / 8.0 / 1e6;
+            let steady_fps = clock / analytic.pipeline_interval().max(1) as f64;
+            r.report_row(&format!(
+                "chips {chips} | {:<9} | makespan {:>10} cycles | frame {:>7.2} fps | steady {:>8.2} fps | link {:>7.4} MB | {:>7.4} mJ ({:>4.1}% link)",
+                policy.label(),
+                cf.run.makespan,
+                cf.run.fps(clock),
+                steady_fps,
+                interconnect_mb,
+                cf.run.energy.total_mj,
+                cf.run.energy.interconnect_share() * 100.0
+            ));
+            let mut row = BTreeMap::new();
+            row.insert("chips".to_string(), Json::Num(chips as f64));
+            row.insert("policy".to_string(), Json::Str(policy.label().to_string()));
+            row.insert("makespan_cycles".to_string(), Json::Num(cf.run.makespan as f64));
+            row.insert("compute_cycles".to_string(), Json::Num(cf.run.compute_cycles as f64));
+            row.insert("transfer_cycles".to_string(), Json::Num(cf.run.transfer_cycles as f64));
+            row.insert("frame_fps".to_string(), Json::Num(cf.run.fps(clock)));
+            row.insert("steady_fps".to_string(), Json::Num(steady_fps));
+            row.insert("interconnect_mb".to_string(), Json::Num(interconnect_mb));
+            row.insert("total_mj".to_string(), Json::Num(cf.run.energy.total_mj));
+            row.insert(
+                "interconnect_mj".to_string(),
+                Json::Num(cf.run.energy.interconnect_mj),
+            );
+            row.insert(
+                "chip_busy_cycles".to_string(),
+                Json::Arr(cf.run.chip_cycles.iter().map(|&c| Json::Num(c as f64)).collect()),
+            );
+            rows.push(Json::Obj(row));
+        }
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("perf_cluster".to_string()));
+    doc.insert(
+        "workload".to_string(),
+        Json::Str("1 synthetic tiny frame, 80% pruned weights, default link".to_string()),
+    );
+    doc.insert("sweep".to_string(), Json::Arr(rows));
+    let json_path = "BENCH_cluster.json";
+    match std::fs::write(json_path, Json::Obj(doc).to_string_compact()) {
+        Ok(()) => r.report_row(&format!("wrote {json_path}")),
+        Err(e) => r.report_row(&format!("could not write {json_path}: {e}")),
+    }
+}

@@ -49,9 +49,11 @@ fn main() {
         .unwrap(),
     );
     let mut fps1 = 0.0;
-    for workers in [1usize, 2, 4] {
-        let engine =
-            StreamingEngine::new(golden.clone(), EngineConfig { workers, queue_depth: 4 });
+    for (workers, batch) in [(1usize, 1usize), (2, 1), (4, 1), (2, 2), (4, 2)] {
+        let engine = StreamingEngine::new(
+            golden.clone(),
+            EngineConfig { workers, queue_depth: 4, batch },
+        );
         // Warm once, then time one streamed pass over the frame set.
         engine.run_frames(&images[..1], FrameOptions::default()).unwrap();
         let t0 = Instant::now();
@@ -59,16 +61,17 @@ fn main() {
         let secs = t0.elapsed().as_secs_f64();
         assert_eq!(out.len(), frames);
         let fps = frames as f64 / secs;
-        if workers == 1 {
+        if workers == 1 && batch == 1 {
             fps1 = fps;
         }
         r.report_row(&format!(
-            "workers {workers} | {fps:8.2} frames/s | scaling {:.2}x",
+            "workers {workers} batch {batch} | {fps:8.2} frames/s | scaling {:.2}x",
             fps / fps1.max(1e-12)
         ));
         let mut row = BTreeMap::new();
         row.insert("axis".to_string(), Json::Str("workers".to_string()));
         row.insert("workers".to_string(), Json::Num(workers as f64));
+        row.insert("batch".to_string(), Json::Num(batch as f64));
         row.insert("cores".to_string(), Json::Num(1.0));
         row.insert("wall_fps".to_string(), Json::Num(fps));
         row.insert("scaling".to_string(), Json::Num(fps / fps1.max(1e-12)));

@@ -1,4 +1,5 @@
-//! External DRAM traffic + energy model (§IV-D).
+//! External DRAM traffic + energy model (§IV-D), and the inter-chip
+//! interconnect model of the multi-chip cluster subsystem.
 //!
 //! The paper assumes DDR3 at 70 pJ/bit [35] and reports, for one
 //! 1024×576 frame: 188.928 MB of input traffic (the last layers refetch
@@ -7,8 +8,21 @@
 //! parameter traffic; growing the input SRAM to 81 KB cuts input traffic
 //! to 5.456 MB. This module computes those numbers from the network
 //! geometry, the SRAM capacities, and the weight compression format.
+//!
+//! **Inter-chip interconnect** ([`LinkSpec`] / [`Interconnect`]): when a
+//! frame is sharded across chips (`crate::cluster`), spike planes ship
+//! between chips over a DRAM-class link — per-transfer latency plus a
+//! bandwidth term, energy per bit, and per-chip traffic counters. Spike
+//! payloads are priced from popcounts ([`spike_map_transfer_bits`]):
+//! activations are binary events, so the sender streams cell-indexed
+//! event addresses ([`event_addr_bits`], ≥16 bits, 20 at the paper's
+//! 1024×576) and falls back to the raw bitmap when the plane is dense —
+//! the same compression argument the paper makes for weights (Fig 17),
+//! applied to the traffic that memory-dominated SNN accelerators actually
+//! move (Sommer et al., arXiv 2203.12437).
 
-use crate::config::AccelConfig;
+use crate::config::{AccelConfig, ClusterConfig};
+use crate::sparse::SpikeMap;
 use crate::model::topology::{ConvKind, NetworkSpec};
 use crate::model::weights::ModelWeights;
 use crate::sparse::stats::{format_bits, Format};
@@ -113,6 +127,177 @@ impl DramModel {
     }
 }
 
+/// One inter-chip link: bandwidth, fixed latency, energy per bit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkSpec {
+    /// Bits moved per core-clock cycle.
+    pub bits_per_cycle: u64,
+    /// Fixed per-transfer latency in core-clock cycles.
+    pub latency_cycles: u64,
+    /// Energy per bit in picojoules.
+    pub pj_per_bit: f64,
+}
+
+impl Default for LinkSpec {
+    fn default() -> Self {
+        LinkSpec { bits_per_cycle: 128, latency_cycles: 200, pj_per_bit: 10.0 }
+    }
+}
+
+impl LinkSpec {
+    /// The link a [`ClusterConfig`] describes.
+    pub fn from_cluster(cc: &ClusterConfig) -> LinkSpec {
+        LinkSpec {
+            bits_per_cycle: cc.link_bits_per_cycle.max(1),
+            latency_cycles: cc.link_latency_cycles,
+            pj_per_bit: cc.link_pj_per_bit,
+        }
+    }
+
+    /// Cycles one transfer of `bits` occupies the link (0 bits = no
+    /// transfer at all, not even the latency).
+    pub fn transfer_cycles(&self, bits: u64) -> u64 {
+        if bits == 0 {
+            0
+        } else {
+            self.latency_cycles + bits.div_ceil(self.bits_per_cycle.max(1))
+        }
+    }
+
+    /// Energy of moving `bits` over the link, in millijoules.
+    pub fn energy_mj(&self, bits: u64) -> f64 {
+        bits as f64 * self.pj_per_bit * 1e-9
+    }
+}
+
+/// Per-chip interconnect counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChipTraffic {
+    /// Bits received (from the host or another chip).
+    pub bits_in: u64,
+    /// Bits sent.
+    pub bits_out: u64,
+    /// Transfers received.
+    pub transfers_in: u64,
+    /// Transfers sent.
+    pub transfers_out: u64,
+}
+
+/// One recorded transfer. `None` endpoints are the host (frame upload /
+/// result download).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransferRecord {
+    /// Sending chip (`None` = host).
+    pub src: Option<usize>,
+    /// Receiving chip (`None` = host).
+    pub dst: Option<usize>,
+    /// Payload bits.
+    pub bits: u64,
+    /// Link occupancy charged ([`LinkSpec::transfer_cycles`]).
+    pub cycles: u64,
+}
+
+/// The cluster interconnect: one shared [`LinkSpec`] plus per-chip
+/// traffic counters and the full transfer log. The executing cluster
+/// records every transfer here; the analytic model re-prices the same log
+/// with the same [`LinkSpec`] constants, so the two stay in lock-step by
+/// construction (asserted in `tests/cluster_equivalence.rs`).
+#[derive(Clone, Debug)]
+pub struct Interconnect {
+    link: LinkSpec,
+    per_chip: Vec<ChipTraffic>,
+    transfers: Vec<TransferRecord>,
+}
+
+impl Interconnect {
+    /// New interconnect joining `chips` chips.
+    pub fn new(link: LinkSpec, chips: usize) -> Interconnect {
+        Interconnect {
+            link,
+            per_chip: vec![ChipTraffic::default(); chips.max(1)],
+            transfers: Vec::new(),
+        }
+    }
+
+    /// The link model.
+    pub fn link(&self) -> &LinkSpec {
+        &self.link
+    }
+
+    /// Record one transfer and return the cycles it occupies the link.
+    /// Zero-bit sends are dropped (event-driven: nothing to move).
+    pub fn send(&mut self, src: Option<usize>, dst: Option<usize>, bits: u64) -> u64 {
+        if bits == 0 {
+            return 0;
+        }
+        let cycles = self.link.transfer_cycles(bits);
+        if let Some(s) = src {
+            self.per_chip[s].bits_out += bits;
+            self.per_chip[s].transfers_out += 1;
+        }
+        if let Some(d) = dst {
+            self.per_chip[d].bits_in += bits;
+            self.per_chip[d].transfers_in += 1;
+        }
+        self.transfers.push(TransferRecord { src, dst, bits, cycles });
+        cycles
+    }
+
+    /// Total bits moved.
+    pub fn total_bits(&self) -> u64 {
+        self.transfers.iter().map(|t| t.bits).sum()
+    }
+
+    /// Total link occupancy in cycles (transfers serialized).
+    pub fn total_cycles(&self) -> u64 {
+        self.transfers.iter().map(|t| t.cycles).sum()
+    }
+
+    /// Total link energy in millijoules.
+    pub fn energy_mj(&self) -> f64 {
+        self.link.energy_mj(self.total_bits())
+    }
+
+    /// Per-chip counters.
+    pub fn per_chip(&self) -> &[ChipTraffic] {
+        &self.per_chip
+    }
+
+    /// The transfer log.
+    pub fn transfers(&self) -> &[TransferRecord] {
+        &self.transfers
+    }
+}
+
+/// Bits needed to address one of `cells` positions, halfword-aligned:
+/// `max(16, ceil(log2(cells)))` — a full-scale 1024×576 plane needs
+/// 20-bit addresses, a tile-sized strip still ships 16-bit ones.
+pub fn event_addr_bits(cells: u64) -> u64 {
+    (64 - cells.saturating_sub(1).leading_zeros() as u64).max(16)
+}
+
+/// Compressed transfer cost of `nnz` spike events in a plane of `cells`
+/// positions: a 32-bit count header plus one cell-indexed address per
+/// event ([`event_addr_bits`]), capped by the raw bitmap (the sender
+/// switches representation when events are denser than 1/addr_bits).
+pub fn spike_plane_transfer_bits(cells: u64, nnz: u64) -> u64 {
+    32 + (nnz * event_addr_bits(cells)).min(cells)
+}
+
+/// Compressed transfer cost of one spike map (all planes).
+pub fn spike_map_transfer_bits(map: &SpikeMap) -> u64 {
+    let cells = (map.h * map.w) as u64;
+    (0..map.c)
+        .map(|c| spike_plane_transfer_bits(cells, map.plane(c).count_set() as u64))
+        .sum()
+}
+
+/// Transfer cost of one multibit pixel frame (8 bits per value — not
+/// compressible the way binary spikes are).
+pub fn pixel_frame_bits(c: usize, h: usize, w: usize) -> u64 {
+    (c * h * w) as u64 * 8
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,5 +367,57 @@ mod tests {
         let t = DramTraffic { input_bits: 1_000_000, output_bits: 0, param_bits: 0 };
         // 1e6 bits × 70 pJ = 70 µJ = 0.07 mJ.
         assert!((t.energy_mj(70.0) - 0.07).abs() < 1e-9);
+    }
+
+    #[test]
+    fn link_transfer_cost_model() {
+        let l = LinkSpec { bits_per_cycle: 100, latency_cycles: 10, pj_per_bit: 2.0 };
+        assert_eq!(l.transfer_cycles(0), 0);
+        assert_eq!(l.transfer_cycles(1), 11);
+        assert_eq!(l.transfer_cycles(100), 11);
+        assert_eq!(l.transfer_cycles(101), 12);
+        // 1000 bits × 2 pJ = 2 nJ = 2e-6 mJ.
+        assert!((l.energy_mj(1000) - 2e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn interconnect_counts_per_chip() {
+        let mut ic = Interconnect::new(LinkSpec::default(), 3);
+        let c0 = ic.send(None, Some(0), 1024); // host upload
+        let c1 = ic.send(Some(0), Some(2), 512);
+        assert_eq!(ic.send(Some(0), Some(1), 0), 0, "zero-bit sends are dropped");
+        assert_eq!(ic.transfers().len(), 2);
+        assert_eq!(ic.total_bits(), 1536);
+        assert_eq!(ic.total_cycles(), c0 + c1);
+        assert_eq!(ic.per_chip()[0].bits_in, 1024);
+        assert_eq!(ic.per_chip()[0].bits_out, 512);
+        assert_eq!(ic.per_chip()[2].bits_in, 512);
+        assert_eq!(ic.per_chip()[1], ChipTraffic::default());
+        assert!((ic.energy_mj() - LinkSpec::default().energy_mj(1536)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn spike_transfer_priced_from_popcounts() {
+        use crate::tensor::Tensor;
+        // Addresses widen with the plane: 16 bits up to 2^16 cells,
+        // 20 bits for the paper's full-scale 1024×576 plane.
+        assert_eq!(event_addr_bits(1000), 16);
+        assert_eq!(event_addr_bits(1 << 16), 16);
+        assert_eq!(event_addr_bits((1 << 16) + 1), 17);
+        assert_eq!(event_addr_bits(1024 * 576), 20);
+        // Sparse plane: events win. Dense plane: bitmap cap kicks in.
+        assert_eq!(spike_plane_transfer_bits(1000, 3), 32 + 48);
+        assert_eq!(spike_plane_transfer_bits(1000, 900), 32 + 1000);
+        assert_eq!(spike_plane_transfer_bits(1024 * 576, 10), 32 + 200);
+        let mut dense = Tensor::zeros(2, 4, 8);
+        for v in dense.data.iter_mut() {
+            *v = 1;
+        }
+        let full = SpikeMap::from_dense(&dense);
+        let empty = SpikeMap::zeros(2, 4, 8);
+        assert_eq!(spike_map_transfer_bits(&full), 2 * (32 + 32));
+        assert_eq!(spike_map_transfer_bits(&empty), 2 * 32);
+        assert!(spike_map_transfer_bits(&empty) < spike_map_transfer_bits(&full));
+        assert_eq!(pixel_frame_bits(3, 4, 8), 3 * 4 * 8 * 8);
     }
 }

@@ -144,6 +144,41 @@ impl EnergyModel {
         }
     }
 
+    /// Price a multi-core / multi-chip frame: the frame's total event
+    /// energy (which already sums work across every core via
+    /// [`FrameEvents::add_layer`]) is split across chips in proportion to
+    /// their busy cycles, and the interconnect's link energy is added on
+    /// top. `fps` converts energy to power, as in [`Self::report`].
+    pub fn cluster_report(
+        &self,
+        ev: &FrameEvents,
+        sparse_macs: u64,
+        fps: f64,
+        chip_cycles: &[u64],
+        interconnect_mj: f64,
+    ) -> ClusterPowerReport {
+        let core = self.report(ev, sparse_macs, fps);
+        let busy_total: u64 = chip_cycles.iter().sum();
+        let chip_energy_mj: Vec<f64> = chip_cycles
+            .iter()
+            .map(|&c| {
+                if busy_total == 0 {
+                    0.0
+                } else {
+                    core.core_energy_mj * c as f64 / busy_total as f64
+                }
+            })
+            .collect();
+        let total_mj = core.core_energy_mj + interconnect_mj;
+        ClusterPowerReport {
+            chip_energy_mj,
+            interconnect_mj,
+            total_mj,
+            total_power_mw: total_mj * fps,
+            core,
+        }
+    }
+
     /// PE dynamic power saving of activation gating vs no gating (§IV-E):
     /// compare against a hypothetical array where every event pays the
     /// accumulate energy.
@@ -157,6 +192,36 @@ impl EnergyModel {
             + ev.pe_gated as f64 * self.pe_gated_pj
             + total_ev * self.pe_clock_pj;
         1.0 - gated / ungated
+    }
+}
+
+/// Cluster-level power/energy for one frame: the chip-local event energy
+/// split per chip plus the inter-chip interconnect energy — what a
+/// multi-chip sweep reports alongside the cluster makespan.
+#[derive(Clone, Debug)]
+pub struct ClusterPowerReport {
+    /// Core energy attributed to each chip, in mJ (sums to the frame's
+    /// total core energy).
+    pub chip_energy_mj: Vec<f64>,
+    /// Interconnect energy in mJ (link pJ/bit × bits moved).
+    pub interconnect_mj: f64,
+    /// Total frame energy in mJ (chips + interconnect).
+    pub total_mj: f64,
+    /// Total power in mW at the reported fps.
+    pub total_power_mw: f64,
+    /// The underlying single-frame core report (component breakdown,
+    /// TOPS/W — interconnect excluded, as in the paper's core numbers).
+    pub core: PowerReport,
+}
+
+impl ClusterPowerReport {
+    /// Interconnect share of the total frame energy.
+    pub fn interconnect_share(&self) -> f64 {
+        if self.total_mj > 0.0 {
+            self.interconnect_mj / self.total_mj
+        } else {
+            0.0
+        }
     }
 }
 
@@ -282,6 +347,25 @@ mod tests {
         // Logic near the paper's 256.4 KGE.
         let kge: f64 = a.logic_kge.iter().sum();
         assert!((180.0..330.0).contains(&kge), "kge={kge}");
+    }
+
+    #[test]
+    fn cluster_report_splits_core_energy_and_adds_link() {
+        let m = EnergyModel::default();
+        let (ev, macs) = snn_d_like_events();
+        let core = m.report(&ev, macs, 29.0);
+        let r = m.cluster_report(&ev, macs, 29.0, &[300, 100], 0.5);
+        assert_eq!(r.chip_energy_mj.len(), 2);
+        // Busy-cycle proportional split that sums back to the core energy.
+        assert!((r.chip_energy_mj.iter().sum::<f64>() - core.core_energy_mj).abs() < 1e-9);
+        assert!((r.chip_energy_mj[0] - 3.0 * r.chip_energy_mj[1]).abs() < 1e-9);
+        assert!((r.total_mj - (core.core_energy_mj + 0.5)).abs() < 1e-9);
+        assert!((r.total_power_mw - r.total_mj * 29.0).abs() < 1e-9);
+        assert!(r.interconnect_share() > 0.0 && r.interconnect_share() < 1.0);
+        // Idle cluster: nothing to attribute.
+        let idle = m.cluster_report(&FrameEvents::default(), 0, 29.0, &[0, 0], 0.0);
+        assert_eq!(idle.chip_energy_mj, vec![0.0, 0.0]);
+        assert_eq!(idle.interconnect_share(), 0.0);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! two models together on a small layer.
 
 use super::controller::CycleCosts;
-use crate::config::AccelConfig;
+use crate::config::{AccelConfig, ClusterConfig, ShardPolicy};
 use crate::model::topology::{ConvKind, ConvSpec, NetworkSpec};
 use crate::model::weights::ModelWeights;
 
@@ -152,6 +152,133 @@ impl LatencyModel {
                 .collect(),
         }
     }
+
+    /// Closed-form cluster compute model: what the multi-chip executor's
+    /// per-chip cycle counters must add up to, per sharding policy,
+    /// **before** interconnect time. The executing
+    /// `crate::cluster::ChipCluster` uses this model's stage partition and
+    /// must match its cycle totals exactly (cycle counts depend on
+    /// weights, not activations — the same lock-step argument as the
+    /// single-chip makespan). Interconnect time depends on activation
+    /// popcounts, so it is recorded by the executor and re-priced from the
+    /// transfer log with the same `LinkSpec` constants.
+    pub fn cluster(net: &NetworkSpec, weights: &ModelWeights, cc: &ClusterConfig) -> ClusterLatency {
+        let chips = cc.num_chips.max(1);
+        match cc.policy {
+            ShardPolicy::FrameParallel => {
+                // Each frame runs whole on one chip.
+                let lat = LatencyModel::new(cc.chip.clone()).network(net, weights);
+                let makespan = lat.sparse_makespan();
+                ClusterLatency {
+                    policy: cc.policy,
+                    num_chips: chips,
+                    stage_layers: vec![(0..net.layers.len()).collect()],
+                    stage_cycles: vec![makespan],
+                    compute_makespan: makespan,
+                }
+            }
+            ShardPolicy::LayerPipeline => {
+                // Contiguous stages balanced by per-layer makespan; one
+                // frame still visits every stage in sequence.
+                let lat = LatencyModel::new(cc.chip.clone()).network(net, weights);
+                let costs: Vec<u64> = lat.layers.iter().map(|l| l.sparse_makespan).collect();
+                let stage_layers = partition_stages(&costs, chips);
+                let stage_cycles: Vec<u64> = stage_layers
+                    .iter()
+                    .map(|layers| layers.iter().map(|&i| costs[i]).sum())
+                    .collect();
+                ClusterLatency {
+                    policy: cc.policy,
+                    num_chips: chips,
+                    compute_makespan: stage_cycles.iter().sum(),
+                    stage_layers,
+                    stage_cycles,
+                }
+            }
+            ShardPolicy::TileSplit => {
+                // Every layer's tile grid is dealt round-robin across the
+                // cluster's pooled cores — the existing multi-core makespan
+                // formula at `chips × cores_per_chip` cores.
+                let cores = cc.chip.num_cores.max(1) * chips;
+                let lat =
+                    LatencyModel::new(cc.chip.clone().with_cores(cores)).network(net, weights);
+                let makespan = lat.sparse_makespan();
+                ClusterLatency {
+                    policy: cc.policy,
+                    num_chips: chips,
+                    stage_layers: vec![(0..net.layers.len()).collect()],
+                    stage_cycles: vec![makespan],
+                    compute_makespan: makespan,
+                }
+            }
+        }
+    }
+}
+
+/// Analytic cluster compute latency (no interconnect): per-policy stage
+/// partition and cycle totals, in lock-step with the executing cluster's
+/// counters.
+#[derive(Clone, Debug)]
+pub struct ClusterLatency {
+    /// Sharding policy this was computed for.
+    pub policy: ShardPolicy,
+    /// Chips in the cluster.
+    pub num_chips: usize,
+    /// Layer indices per pipeline stage (`LayerPipeline`: one entry per
+    /// chip, possibly empty when there are more chips than layers; other
+    /// policies: a single entry listing every layer).
+    pub stage_layers: Vec<Vec<usize>>,
+    /// Compute cycles per stage (matching `stage_layers`).
+    pub stage_cycles: Vec<u64>,
+    /// Frame compute critical path in cycles: the cycles one frame spends
+    /// computing, excluding interconnect transfers.
+    pub compute_makespan: u64,
+}
+
+impl ClusterLatency {
+    /// Steady-state initiation interval: with many frames in flight,
+    /// `FrameParallel` starts a new frame every `makespan / chips` cycles
+    /// (N chips run N frames concurrently), `LayerPipeline` every
+    /// `max(stage_cycles)`, and `TileSplit` every frame makespan (all
+    /// chips cooperate on one frame at a time).
+    pub fn pipeline_interval(&self) -> u64 {
+        match self.policy {
+            ShardPolicy::FrameParallel => {
+                self.compute_makespan.div_ceil(self.num_chips.max(1) as u64)
+            }
+            _ => self.stage_cycles.iter().copied().max().unwrap_or(0),
+        }
+    }
+}
+
+/// Partition `costs` (one entry per layer, execution order) into
+/// `stages` contiguous groups balanced greedily against the ideal
+/// `total / stages` target. Every layer lands in exactly one group; when
+/// there are at least as many layers as stages every group is non-empty.
+/// Deterministic — the executing cluster and the analytic model share it.
+pub fn partition_stages(costs: &[u64], stages: usize) -> Vec<Vec<usize>> {
+    let stages = stages.max(1);
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); stages];
+    let total: u64 = costs.iter().sum();
+    let target = (total / stages as u64).max(1);
+    let mut s = 0usize;
+    let mut acc = 0u64;
+    for (i, &c) in costs.iter().enumerate() {
+        // Layers still unplaced (including this one) and stages strictly
+        // after the current one. Keeping layer `i` in stage `s` is only
+        // allowed if enough layers remain to feed every later stage.
+        let remaining_layers = costs.len() - i;
+        let advance = s + 1 < stages
+            && !out[s].is_empty()
+            && (remaining_layers <= stages - s - 1 || acc + c > target);
+        if advance {
+            s += 1;
+            acc = 0;
+        }
+        out[s].push(i);
+        acc += c;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -313,6 +440,60 @@ mod tests {
         let lat = LatencyModel::new(AccelConfig::paper()).network(&net, &mw);
         let fps = lat.fps(500e6);
         assert!((5.0..120.0).contains(&fps), "fps={fps}");
+    }
+
+    #[test]
+    fn partition_stages_is_contiguous_and_total() {
+        for (costs, stages) in [
+            (vec![1u64, 1, 1, 1, 1], 2usize),
+            (vec![10, 1, 1], 3),
+            (vec![1, 1, 100], 2),
+            (vec![5, 5], 2),
+            (vec![7], 4),
+            (vec![3, 9, 2, 8, 4, 6, 1, 5], 3),
+        ] {
+            let parts = partition_stages(&costs, stages);
+            assert_eq!(parts.len(), stages, "{costs:?}");
+            let flat: Vec<usize> = parts.iter().flatten().copied().collect();
+            assert_eq!(flat, (0..costs.len()).collect::<Vec<_>>(), "{costs:?}: contiguous order");
+            if costs.len() >= stages {
+                assert!(parts.iter().all(|p| !p.is_empty()), "{costs:?}: no starved stage");
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_compute_model_per_policy() {
+        use crate::config::{ClusterConfig, ShardPolicy};
+        let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+        let mut mw = ModelWeights::random(&net, 1.0, 21);
+        mw.prune_fine_grained(0.8);
+        let single = LatencyModel::new(AccelConfig::paper()).network(&net, &mw);
+
+        let cc = ClusterConfig::single_chip().with_chips(3);
+        // Frame-parallel: per-frame latency is the single-chip makespan.
+        let fp = LatencyModel::cluster(&net, &mw, &cc.clone().with_policy(ShardPolicy::FrameParallel));
+        assert_eq!(fp.compute_makespan, single.sparse_makespan());
+        // Layer-pipeline: stages cover every layer once; one frame still
+        // computes the same total, and the initiation interval shrinks.
+        let lp = LatencyModel::cluster(&net, &mw, &cc.clone().with_policy(ShardPolicy::LayerPipeline));
+        assert_eq!(lp.stage_layers.len(), 3);
+        let flat: Vec<usize> = lp.stage_layers.iter().flatten().copied().collect();
+        assert_eq!(flat, (0..net.layers.len()).collect::<Vec<_>>());
+        assert_eq!(lp.compute_makespan, single.sparse_makespan());
+        assert!(lp.pipeline_interval() < lp.compute_makespan);
+        // Tile-split: pooled cores shrink the frame compute critical path.
+        let ts = LatencyModel::cluster(&net, &mw, &cc.clone().with_policy(ShardPolicy::TileSplit));
+        assert!(ts.compute_makespan < single.sparse_makespan());
+        assert_eq!(
+            ts.compute_makespan,
+            LatencyModel::new(AccelConfig::paper().with_cores(3)).network(&net, &mw).sparse_makespan()
+        );
+        // One chip: every policy degenerates to the single-chip makespan.
+        for p in ShardPolicy::all() {
+            let one = LatencyModel::cluster(&net, &mw, &ClusterConfig::single_chip().with_policy(p));
+            assert_eq!(one.compute_makespan, single.sparse_makespan(), "{p:?}");
+        }
     }
 
     #[test]

@@ -54,10 +54,10 @@ pub mod reorder;
 pub mod sram;
 
 pub use controller::{LayerRun, SystemController};
-pub use dram::DramModel;
+pub use dram::{DramModel, Interconnect, LinkSpec};
 pub use encoder::PriorityEncoder;
-pub use energy::{AreaModel, EnergyModel, PowerReport};
-pub use latency::{LatencyModel, NetworkLatency};
+pub use energy::{AreaModel, ClusterPowerReport, EnergyModel, PowerReport};
+pub use latency::{ClusterLatency, LatencyModel, NetworkLatency};
 pub use one_to_all::GatedOneToAll;
 pub use pe::{GatingStats, PeArray};
 pub use sram::{SramBank, SramKind};

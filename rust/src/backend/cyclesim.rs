@@ -30,6 +30,11 @@ pub struct CycleSimBackend {
 }
 
 impl CycleSimBackend {
+    /// Static capabilities (also returned by [`SnnBackend::caps`]) — the
+    /// auto-select policy reads these without constructing a backend.
+    pub const CAPS: BackendCaps =
+        BackendCaps { parallel: true, reports_sparsity: true, reports_cycles: true };
+
     /// New backend bound to a hardware configuration; validates weights
     /// and compresses every layer's kernel into bit-mask planes.
     pub fn new(
@@ -49,6 +54,18 @@ impl CycleSimBackend {
         Ok(CycleSimBackend { net, weights, cfg, planes: Arc::new(planes) })
     }
 
+    /// New backend reusing already-compressed weight planes — the
+    /// multi-chip cluster shares one compression across all its chips.
+    pub fn with_planes(
+        net: Arc<NetworkSpec>,
+        weights: Arc<ModelWeights>,
+        cfg: AccelConfig,
+        planes: Arc<BTreeMap<String, Vec<BitMaskKernel>>>,
+    ) -> Result<CycleSimBackend> {
+        weights.validate_against(&net)?;
+        Ok(CycleSimBackend { net, weights, cfg, planes })
+    }
+
     /// The hardware configuration this backend simulates.
     pub fn config(&self) -> &AccelConfig {
         &self.cfg
@@ -61,7 +78,7 @@ impl SnnBackend for CycleSimBackend {
     }
 
     fn caps(&self) -> BackendCaps {
-        BackendCaps { parallel: true, reports_sparsity: true, reports_cycles: true }
+        Self::CAPS
     }
 
     fn run_frame(&self, image: &Tensor<u8>, opts: &FrameOptions) -> Result<BackendFrame> {

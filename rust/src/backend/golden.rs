@@ -25,6 +25,11 @@ pub struct GoldenBackend {
 }
 
 impl GoldenBackend {
+    /// Static capabilities (also returned by [`SnnBackend::caps`]) — the
+    /// auto-select policy reads these without constructing a backend.
+    pub const CAPS: BackendCaps =
+        BackendCaps { parallel: true, reports_sparsity: true, reports_cycles: false };
+
     /// New backend; validates weights against the spec.
     pub fn new(
         net: Arc<NetworkSpec>,
@@ -47,7 +52,7 @@ impl SnnBackend for GoldenBackend {
     }
 
     fn caps(&self) -> BackendCaps {
-        BackendCaps { parallel: true, reports_sparsity: true, reports_cycles: false }
+        Self::CAPS
     }
 
     fn run_frame(&self, image: &Tensor<u8>, opts: &FrameOptions) -> Result<BackendFrame> {

@@ -22,10 +22,12 @@
 pub mod cyclesim;
 pub mod golden;
 pub mod pjrt;
+pub mod select;
 
 pub use cyclesim::CycleSimBackend;
 pub use golden::GoldenBackend;
 pub use pjrt::PjrtBackend;
+pub use select::{AutoSelectPolicy, RequestClass};
 
 use crate::tensor::Tensor;
 use anyhow::Result;
@@ -110,7 +112,7 @@ pub trait SnnBackend: Send + Sync {
     fn run_frame(&self, image: &Tensor<u8>, opts: &FrameOptions) -> Result<BackendFrame>;
 }
 
-/// CLI-selectable backend kind (`--backend {golden,cyclesim,pjrt}`).
+/// CLI-selectable backend kind (`--backend {golden,cyclesim,pjrt,cluster}`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
     /// Functional golden model.
@@ -119,6 +121,8 @@ pub enum BackendKind {
     CycleSim,
     /// PJRT-compiled AOT graph.
     Pjrt,
+    /// Multi-chip cluster ([`crate::cluster::ChipCluster`]).
+    Cluster,
 }
 
 impl BackendKind {
@@ -128,6 +132,7 @@ impl BackendKind {
             "golden" | "ref" => Some(BackendKind::Golden),
             "cyclesim" | "cycle-sim" | "sim" => Some(BackendKind::CycleSim),
             "pjrt" => Some(BackendKind::Pjrt),
+            "cluster" => Some(BackendKind::Cluster),
             _ => None,
         }
     }
@@ -138,6 +143,7 @@ impl BackendKind {
             BackendKind::Golden => "golden",
             BackendKind::CycleSim => "cyclesim",
             BackendKind::Pjrt => "pjrt",
+            BackendKind::Cluster => "cluster",
         }
     }
 }
@@ -152,8 +158,10 @@ mod tests {
         assert_eq!(BackendKind::parse("cyclesim"), Some(BackendKind::CycleSim));
         assert_eq!(BackendKind::parse("sim"), Some(BackendKind::CycleSim));
         assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("cluster"), Some(BackendKind::Cluster));
         assert_eq!(BackendKind::parse("tpu"), None);
         assert_eq!(BackendKind::CycleSim.label(), "cyclesim");
+        assert_eq!(BackendKind::Cluster.label(), "cluster");
     }
 
     #[test]

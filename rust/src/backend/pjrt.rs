@@ -24,6 +24,11 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Static capabilities (also returned by [`SnnBackend::caps`]) — the
+    /// auto-select policy reads these without constructing a backend.
+    pub const CAPS: BackendCaps =
+        BackendCaps { parallel: false, reports_sparsity: false, reports_cycles: false };
+
     /// Wrap an already-loaded executable.
     pub fn new(exe: SnnExecutable) -> PjrtBackend {
         PjrtBackend { exe: Mutex::new(exe) }
@@ -50,7 +55,7 @@ impl SnnBackend for PjrtBackend {
     }
 
     fn caps(&self) -> BackendCaps {
-        BackendCaps { parallel: false, reports_sparsity: false, reports_cycles: false }
+        Self::CAPS
     }
 
     fn run_frame(&self, image: &Tensor<u8>, _opts: &FrameOptions) -> Result<BackendFrame> {

@@ -1,0 +1,187 @@
+//! Backend auto-select: a serving policy object that picks the execution
+//! backend from [`BackendCaps`] and the current request load, instead of
+//! a CLI flag (closes the ROADMAP "backend auto-select" item).
+//!
+//! The rules, in order:
+//!
+//! 1. A caller that wants hardware metrics gets the first cycle-reporting
+//!    backend (the cluster when one is registered, else the cycle
+//!    simulator).
+//! 2. Under a deep queue, throughput wins: the first backend that can run
+//!    frames concurrently **without** paying cycle accounting (the golden
+//!    model).
+//! 3. Under a shallow queue, single-frame latency wins: the PJRT engine
+//!    when it is built (it cannot parallelize, but one compiled frame
+//!    beats interpretation).
+//! 4. Otherwise any parallel backend, else whatever is registered.
+//!
+//! The policy only reads [`SnnBackend::caps`] and [`SnnBackend::name`] —
+//! registering a new backend (as the cluster subsystem does) requires no
+//! policy change.
+
+use super::{BackendCaps, SnnBackend};
+use std::sync::Arc;
+
+/// What the caller needs from the run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestClass {
+    /// The caller wants per-layer/per-core cycle counts.
+    pub want_cycles: bool,
+    /// Frames currently queued (the engine's back-pressure signal).
+    pub pending: usize,
+}
+
+/// The auto-select policy.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoSelectPolicy {
+    /// Queue depth above which throughput beats single-frame latency.
+    pub deep_queue: usize,
+}
+
+impl Default for AutoSelectPolicy {
+    fn default() -> Self {
+        AutoSelectPolicy { deep_queue: 4 }
+    }
+}
+
+impl AutoSelectPolicy {
+    /// Pick among candidate **descriptors** — `(name, caps)` pairs, which
+    /// are statically known per backend kind (each backend exposes a
+    /// `CAPS` const) — so callers can defer construction to the winning
+    /// candidate only. First match wins, so the caller's registration
+    /// order breaks ties. `None` only when `candidates` is empty.
+    pub fn choose_desc(
+        &self,
+        candidates: &[(&str, BackendCaps)],
+        req: &RequestClass,
+    ) -> Option<usize> {
+        if candidates.is_empty() {
+            return None;
+        }
+        if req.want_cycles {
+            if let Some(i) = candidates.iter().position(|(_, c)| c.reports_cycles) {
+                return Some(i);
+            }
+        }
+        if req.pending > self.deep_queue {
+            if let Some(i) = candidates.iter().position(|(_, c)| c.parallel && !c.reports_cycles)
+            {
+                return Some(i);
+            }
+        } else if let Some(i) = candidates.iter().position(|(n, _)| *n == "pjrt") {
+            return Some(i);
+        }
+        candidates.iter().position(|(_, c)| c.parallel).or(Some(0))
+    }
+
+    /// [`Self::choose_desc`] over already-constructed backends.
+    pub fn choose(
+        &self,
+        candidates: &[Arc<dyn SnnBackend>],
+        req: &RequestClass,
+    ) -> Option<Arc<dyn SnnBackend>> {
+        let descs: Vec<(&str, BackendCaps)> =
+            candidates.iter().map(|b| (b.name(), b.caps())).collect();
+        self.choose_desc(&descs, req).map(|i| candidates[i].clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{BackendCaps, BackendFrame, FrameOptions};
+    use crate::tensor::Tensor;
+    use anyhow::Result;
+    use std::collections::BTreeMap;
+
+    struct Fake {
+        name: &'static str,
+        caps: BackendCaps,
+    }
+
+    impl SnnBackend for Fake {
+        fn name(&self) -> &'static str {
+            self.name
+        }
+
+        fn caps(&self) -> BackendCaps {
+            self.caps
+        }
+
+        fn run_frame(&self, image: &Tensor<u8>, _: &FrameOptions) -> Result<BackendFrame> {
+            Ok(BackendFrame {
+                head_acc: Tensor::zeros(image.c, image.h, image.w),
+                layers: BTreeMap::new(),
+            })
+        }
+    }
+
+    fn dcaps(parallel: bool, cycles: bool) -> BackendCaps {
+        BackendCaps { parallel, reports_sparsity: cycles, reports_cycles: cycles }
+    }
+
+    fn fake(name: &'static str, parallel: bool, cycles: bool) -> Arc<dyn SnnBackend> {
+        Arc::new(Fake { name, caps: dcaps(parallel, cycles) })
+    }
+
+    fn fleet() -> Vec<Arc<dyn SnnBackend>> {
+        vec![
+            fake("pjrt", false, false),
+            fake("golden", true, false),
+            fake("cluster", true, true),
+            fake("cyclesim", true, true),
+        ]
+    }
+
+    #[test]
+    fn cycle_requests_get_the_cycle_reporter() {
+        let p = AutoSelectPolicy::default();
+        let got = p.choose(&fleet(), &RequestClass { want_cycles: true, pending: 100 }).unwrap();
+        // First registered cycle reporter wins: the cluster.
+        assert_eq!(got.name(), "cluster");
+        // Without one registered, fall through to the load rules.
+        let no_cycles = vec![fake("golden", true, false)];
+        let got = p.choose(&no_cycles, &RequestClass { want_cycles: true, pending: 0 }).unwrap();
+        assert_eq!(got.name(), "golden");
+    }
+
+    #[test]
+    fn deep_queue_prefers_throughput_shallow_prefers_pjrt() {
+        let p = AutoSelectPolicy::default();
+        let deep = p.choose(&fleet(), &RequestClass { want_cycles: false, pending: 16 }).unwrap();
+        assert_eq!(deep.name(), "golden", "deep queue: parallel + no cycle tax");
+        let shallow = p.choose(&fleet(), &RequestClass { want_cycles: false, pending: 1 }).unwrap();
+        assert_eq!(shallow.name(), "pjrt", "shallow queue: compiled single-frame latency");
+        // Shallow queue without PJRT built: first parallel backend.
+        let no_pjrt: Vec<Arc<dyn SnnBackend>> = fleet().into_iter().skip(1).collect();
+        let got = p.choose(&no_pjrt, &RequestClass { want_cycles: false, pending: 1 }).unwrap();
+        assert_eq!(got.name(), "golden");
+    }
+
+    #[test]
+    fn choose_desc_picks_without_construction() {
+        let p = AutoSelectPolicy::default();
+        let descs = [
+            ("pjrt", dcaps(false, false)),
+            ("golden", dcaps(true, false)),
+            ("cluster", dcaps(true, true)),
+        ];
+        let pick = |want_cycles, pending| {
+            p.choose_desc(&descs, &RequestClass { want_cycles, pending }).map(|i| descs[i].0)
+        };
+        assert_eq!(pick(true, 0), Some("cluster"));
+        assert_eq!(pick(false, 100), Some("golden"));
+        assert_eq!(pick(false, 0), Some("pjrt"));
+        assert_eq!(p.choose_desc(&[], &RequestClass::default()), None);
+    }
+
+    #[test]
+    fn empty_and_degenerate_fleets() {
+        let p = AutoSelectPolicy::default();
+        assert!(p.choose(&[], &RequestClass::default()).is_none());
+        // Only a sequential backend registered: still chosen.
+        let seq = vec![fake("pjrt", false, false)];
+        let got = p.choose(&seq, &RequestClass { want_cycles: true, pending: 100 }).unwrap();
+        assert_eq!(got.name(), "pjrt");
+    }
+}

@@ -1,0 +1,662 @@
+//! Multi-chip cluster subsystem: sharded execution with a modeled DRAM
+//! interconnect.
+//!
+//! The paper's single 28nm chip tops out at 1024×576@29fps; the next
+//! scaling axis after `AccelConfig::num_cores` (tiles within a chip) is a
+//! **cluster of chips** with modeled inter-chip traffic. [`ChipCluster`]
+//! owns N per-chip [`SnnBackend`] engines and executes a frame under a
+//! pluggable [`ShardPolicy`]:
+//!
+//! - **FrameParallel** — whole frames dealt round-robin across chips.
+//!   Zero inter-chip traffic; per-frame latency unchanged; throughput
+//!   scales with the chip count.
+//! - **LayerPipeline** — layers partitioned into contiguous stages
+//!   (balanced by the analytic per-layer makespan), one stage per chip;
+//!   compressed spike planes ship between stages, priced from popcounts.
+//! - **TileSplit** — every layer's tile grid dealt round-robin across the
+//!   cluster's pooled cores, with halo exchange between neighboring tiles
+//!   that land on different chips.
+//!
+//! Execution is **bit-exact** with the single-chip cycle simulator for
+//! every policy (sharding moves work and traffic, never arithmetic), and
+//! the cycle/traffic accounting stays in lock-step with the analytic
+//! models: compute cycles with [`LatencyModel::cluster`] (closed form —
+//! cycle counts depend on weights, not activations) and interconnect
+//! cost/energy with the [`LinkSpec`] constants re-applied to the recorded
+//! transfer log (traffic depends on activation popcounts, so it is
+//! *measured*, then re-priced). `tests/cluster_equivalence.rs` asserts
+//! both.
+//!
+//! Why a DRAM-class interconnect model and not just a speedup factor:
+//! memory traffic, not compute, dominates sparsely-active SNN
+//! accelerators (Sommer et al., arXiv 2203.12437), and co-optimizing the
+//! architecture with the network only works when the sharding policies
+//! are scored on the traffic they actually generate (SpikeX,
+//! arXiv 2505.12292).
+
+use crate::accel::controller::{LayerInput, SystemController};
+use crate::accel::dram::{
+    pixel_frame_bits, spike_map_transfer_bits, spike_plane_transfer_bits, ChipTraffic,
+    Interconnect, LinkSpec, TransferRecord,
+};
+use crate::accel::energy::{ClusterPowerReport, EnergyModel, FrameEvents};
+use crate::accel::latency::LatencyModel;
+use crate::backend::{
+    BackendCaps, BackendFrame, CycleSimBackend, FrameOptions, LayerObservation, SnnBackend,
+};
+use crate::config::{ClusterConfig, ShardPolicy};
+use crate::model::topology::{ConvKind, NetworkSpec};
+use crate::model::weights::ModelWeights;
+use crate::sparse::{bitmask::compress_kernel4, BitMaskKernel, SpikeMap};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Cluster-level execution record of one frame.
+#[derive(Clone, Debug)]
+pub struct ClusterRun {
+    /// Sharding policy that produced the run.
+    pub policy: ShardPolicy,
+    /// Busy compute cycles per chip (FrameParallel: one chip busy;
+    /// LayerPipeline: per stage; TileSplit: per chip's busiest-core time,
+    /// summed over layers).
+    pub chip_cycles: Vec<u64>,
+    /// Frame compute critical path in cycles (excluding transfers) — in
+    /// lock-step with [`LatencyModel::cluster`]'s `compute_makespan`.
+    pub compute_cycles: u64,
+    /// Serialized interconnect occupancy on the frame's critical path.
+    pub transfer_cycles: u64,
+    /// Frame makespan: compute critical path + interconnect.
+    pub makespan: u64,
+    /// Per-chip interconnect counters.
+    pub traffic: Vec<ChipTraffic>,
+    /// The full transfer log (host uploads/downloads included).
+    pub transfers: Vec<TransferRecord>,
+    /// Total interconnect bits moved.
+    pub interconnect_bits: u64,
+    /// Frame energy: per-chip core split + interconnect.
+    pub energy: ClusterPowerReport,
+}
+
+impl ClusterRun {
+    /// Simulated frames per second at `clock_hz`.
+    pub fn fps(&self, clock_hz: f64) -> f64 {
+        if self.makespan == 0 {
+            0.0
+        } else {
+            clock_hz / self.makespan as f64
+        }
+    }
+}
+
+/// One frame's full cluster result: the backend-visible frame plus the
+/// cluster-level accounting.
+#[derive(Clone, Debug)]
+pub struct ClusterFrame {
+    /// Head accumulator + per-layer observations (what [`SnnBackend`]
+    /// consumers see).
+    pub frame: BackendFrame,
+    /// Cluster accounting (makespan, traffic, energy).
+    pub run: ClusterRun,
+}
+
+/// How a frame's layers map onto chips.
+enum Plan<'a> {
+    /// `chip_of[layer_index]` executes each whole layer.
+    PerLayer(&'a [usize]),
+    /// Every layer's tile grid is dealt across the pooled cores of all
+    /// chips.
+    TileSplit,
+}
+
+/// A cluster of N identical simulated chips behind the [`SnnBackend`]
+/// interface — the serving path schedules frames onto it exactly like any
+/// single-chip backend, and [`Self::run_frame_cluster`] additionally
+/// reports the cluster accounting.
+pub struct ChipCluster {
+    net: Arc<NetworkSpec>,
+    weights: Arc<ModelWeights>,
+    cfg: ClusterConfig,
+    /// Per-chip engines, all sharing the cluster's one compressed-plane
+    /// map (weights are compressed once per cluster, not per chip). The
+    /// frame executor drives its own controllers for chip/traffic
+    /// attribution; these engines expose the chips for direct single-chip
+    /// use via [`Self::chips`], and the equivalence tests pin the cluster
+    /// bit-exact against `chips[0]`.
+    chips: Vec<Arc<CycleSimBackend>>,
+    /// Per-layer compressed weight planes, built once and shared with
+    /// every chip engine.
+    planes: Arc<BTreeMap<String, Vec<BitMaskKernel>>>,
+    /// LayerPipeline stage partition from the analytic model (shared so
+    /// executor and analytics agree by construction).
+    stages: Vec<Vec<usize>>,
+    /// Round-robin cursor for FrameParallel.
+    next_chip: AtomicUsize,
+}
+
+impl ChipCluster {
+    /// Static capabilities (also returned by [`SnnBackend::caps`]) — the
+    /// auto-select policy reads these without constructing a cluster.
+    pub const CAPS: BackendCaps =
+        BackendCaps { parallel: true, reports_sparsity: true, reports_cycles: true };
+
+    /// New cluster; validates weights once, compresses every layer's
+    /// kernel into bit-mask planes **once**, and shares the compressed
+    /// planes with all per-chip engines.
+    pub fn new(
+        net: Arc<NetworkSpec>,
+        weights: Arc<ModelWeights>,
+        cfg: ClusterConfig,
+    ) -> Result<ChipCluster> {
+        if cfg.num_chips == 0 {
+            bail!("cluster needs at least one chip");
+        }
+        weights.validate_against(&net)?;
+        let planes: Arc<BTreeMap<String, Vec<BitMaskKernel>>> = Arc::new(
+            net.layers
+                .iter()
+                .map(|l| {
+                    let lw = weights.get(&l.name).expect("validated");
+                    (l.name.clone(), compress_kernel4(&lw.w))
+                })
+                .collect(),
+        );
+        let chips = (0..cfg.num_chips)
+            .map(|_| {
+                CycleSimBackend::with_planes(
+                    net.clone(),
+                    weights.clone(),
+                    cfg.chip.clone(),
+                    planes.clone(),
+                )
+                .map(Arc::new)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let stages = LatencyModel::cluster(&net, &weights, &cfg).stage_layers;
+        Ok(ChipCluster {
+            net,
+            weights,
+            cfg,
+            chips,
+            planes,
+            stages,
+            next_chip: AtomicUsize::new(0),
+        })
+    }
+
+    /// The cluster configuration.
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// The per-chip backend engines.
+    pub fn chips(&self) -> &[Arc<CycleSimBackend>] {
+        &self.chips
+    }
+
+    /// The LayerPipeline stage partition (layer indices per chip).
+    pub fn stages(&self) -> &[Vec<usize>] {
+        &self.stages
+    }
+
+    /// Execute one frame under the configured sharding policy, returning
+    /// the backend frame plus the cluster accounting.
+    pub fn run_frame_cluster(
+        &self,
+        image: &Tensor<u8>,
+        opts: &FrameOptions,
+    ) -> Result<ClusterFrame> {
+        let layers = self.net.layers.len();
+        match self.cfg.policy {
+            ShardPolicy::FrameParallel => {
+                let j = self.next_chip.fetch_add(1, Ordering::Relaxed) % self.cfg.num_chips;
+                let chip_of = vec![j; layers];
+                self.run_sharded(image, opts, &Plan::PerLayer(&chip_of))
+            }
+            ShardPolicy::LayerPipeline => {
+                let mut chip_of = vec![0usize; layers];
+                for (s, stage) in self.stages.iter().enumerate() {
+                    for &li in stage {
+                        chip_of[li] = s;
+                    }
+                }
+                self.run_sharded(image, opts, &Plan::PerLayer(&chip_of))
+            }
+            ShardPolicy::TileSplit => self.run_sharded(image, opts, &Plan::TileSplit),
+        }
+    }
+
+    /// Chip owning tile `t` under TileSplit: tiles are dealt round-robin
+    /// over the cluster's pooled cores and chips own contiguous core
+    /// groups, so the grouping matches the controller's per-core counters.
+    fn tile_chip(&self, t: usize) -> usize {
+        let cores = self.cfg.chip.num_cores.max(1);
+        (t % (self.cfg.num_chips * cores)) / cores
+    }
+
+    /// Interior tile-boundary strips whose two adjacent tiles live on
+    /// different chips, as `(chip_a, chip_b, y0, y1, x0, x1)` over an
+    /// `h × w` feature map. Empty on a single chip or for 1×1 kernels.
+    fn halo_strips(
+        &self,
+        h: usize,
+        w: usize,
+        k: usize,
+    ) -> Vec<(usize, usize, usize, usize, usize, usize)> {
+        let mut strips = Vec::new();
+        let r = k / 2;
+        if self.cfg.num_chips < 2 || r == 0 {
+            return strips;
+        }
+        let (tw, th) = (self.cfg.chip.tile_w, self.cfg.chip.tile_h);
+        let tiles_x = w.div_ceil(tw);
+        let tiles_y = h.div_ceil(th);
+        for ty in 0..tiles_y {
+            for tx in 0..tiles_x {
+                let t = ty * tiles_x + tx;
+                let a = self.tile_chip(t);
+                if tx + 1 < tiles_x {
+                    let b = self.tile_chip(t + 1);
+                    if a != b {
+                        let x_edge = (tx + 1) * tw;
+                        let (y0, y1) = (ty * th, ((ty + 1) * th).min(h));
+                        let (x0, x1) = (x_edge - r, (x_edge + r).min(w));
+                        strips.push((a.min(b), a.max(b), y0, y1, x0, x1));
+                    }
+                }
+                if ty + 1 < tiles_y {
+                    let b = self.tile_chip(t + tiles_x);
+                    if a != b {
+                        let y_edge = (ty + 1) * th;
+                        let (y0, y1) = (y_edge - r, (y_edge + r).min(h));
+                        let (x0, x1) = (tx * tw, ((tx + 1) * tw).min(w));
+                        strips.push((a.min(b), a.max(b), y0, y1, x0, x1));
+                    }
+                }
+            }
+        }
+        strips
+    }
+
+    /// TileSplit halo exchange for one spike layer: compressed transfer
+    /// bits per chip pair, priced from the popcounts of the boundary
+    /// strips across all input time steps.
+    fn spike_halo_bits(&self, maps: &[SpikeMap], k: usize) -> BTreeMap<(usize, usize), u64> {
+        let mut bits: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+        if maps.is_empty() {
+            return bits;
+        }
+        let (h, w, c) = (maps[0].h, maps[0].w, maps[0].c);
+        for (a, b, y0, y1, x0, x1) in self.halo_strips(h, w, k) {
+            let (sh, sw) = (y1 - y0, x1 - x0);
+            let mut nnz = 0u64;
+            for m in maps {
+                for ci in 0..c {
+                    nnz += m.plane(ci).extract_tile(y0, x0, sh, sw).count_set() as u64;
+                }
+            }
+            let cells = (maps.len() * c * sh * sw) as u64;
+            *bits.entry((a, b)).or_insert(0) += spike_plane_transfer_bits(cells, nnz);
+        }
+        bits
+    }
+
+    /// TileSplit halo exchange for the encoding layer: multibit pixels are
+    /// not compressible, so the strips cost 8 bits per value (shipped once
+    /// — the static frame is replayed across time steps from chip caches).
+    fn pixel_halo_bits(&self, image: &Tensor<u8>, k: usize) -> BTreeMap<(usize, usize), u64> {
+        let mut bits: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+        for (a, b, y0, y1, x0, x1) in self.halo_strips(image.h, image.w, k) {
+            *bits.entry((a, b)).or_insert(0) += ((y1 - y0) * (x1 - x0) * image.c) as u64 * 8;
+        }
+        bits
+    }
+
+    /// The one execution loop behind every policy: the cycle-level layer
+    /// walk of [`CycleSimBackend`] (bit-exact by construction), with chip
+    /// attribution and interconnect recording per the plan.
+    fn run_sharded(
+        &self,
+        image: &Tensor<u8>,
+        opts: &FrameOptions,
+        plan: &Plan<'_>,
+    ) -> Result<ClusterFrame> {
+        let chips_n = self.cfg.num_chips;
+        let mut ic = Interconnect::new(LinkSpec::from_cluster(&self.cfg), chips_n);
+        let mut controllers: Vec<SystemController> = match plan {
+            Plan::PerLayer(_) => {
+                (0..chips_n).map(|_| SystemController::new(self.cfg.chip.clone())).collect()
+            }
+            Plan::TileSplit => {
+                let pool = chips_n * self.cfg.chip.num_cores.max(1);
+                vec![SystemController::new(self.cfg.chip.clone().with_cores(pool))]
+            }
+        };
+        let cores_per_chip = self.cfg.chip.num_cores.max(1);
+
+        let mut chip_cycles = vec![0u64; chips_n];
+        let mut compute_cycles = 0u64;
+        let mut transfer_cycles = 0u64;
+        let mut ev = FrameEvents::default();
+        let mut outputs: BTreeMap<String, Vec<SpikeMap>> = BTreeMap::new();
+        let mut producer: BTreeMap<String, usize> = BTreeMap::new();
+        let mut resident: BTreeSet<(String, usize)> = BTreeSet::new();
+        let mut prev: Option<String> = None;
+        let mut head: Option<Tensor<i32>> = None;
+        let mut layer_obs: BTreeMap<String, LayerObservation> = BTreeMap::new();
+
+        // Host frame upload to the first compute chip (TileSplit: the
+        // whole frame lands on chip 0's DRAM; halo strips model the
+        // cross-chip portion of the reads).
+        let first_chip = match plan {
+            Plan::PerLayer(chip_of) => *chip_of.first().unwrap_or(&0),
+            Plan::TileSplit => 0,
+        };
+        let upload_bits = pixel_frame_bits(image.c, image.h, image.w);
+        transfer_cycles += ic.send(None, Some(first_chip), upload_bits);
+
+        for (li, l) in self.net.layers.iter().enumerate() {
+            let lw = self.weights.get(&l.name).expect("validated");
+            let planes = self.planes.get(&l.name).expect("compressed at construction");
+            // The head accumulates its membrane over in_t steps even
+            // though the spec says it emits one averaged output step.
+            let mut spec = l.clone();
+            if l.kind == ConvKind::Output {
+                spec.out_t = l.in_t;
+            }
+            let exec_chip = match plan {
+                Plan::PerLayer(chip_of) => chip_of[li],
+                Plan::TileSplit => 0,
+            };
+            let ctrl = match plan {
+                Plan::PerLayer(_) => &mut controllers[exec_chip],
+                Plan::TileSplit => &mut controllers[0],
+            };
+
+            let (run, input_sparsity) = if l.kind == ConvKind::Encoding {
+                if let Plan::TileSplit = plan {
+                    for ((a, b), bits) in self.pixel_halo_bits(image, l.k) {
+                        transfer_cycles += ic.send(Some(a), Some(b), bits);
+                    }
+                }
+                let run = if l.in_t == 1 {
+                    ctrl.run_layer_prepared(
+                        &spec,
+                        lw,
+                        planes,
+                        LayerInput::Pixels(std::slice::from_ref(image)),
+                    )
+                } else {
+                    let frames = vec![image.clone(); l.in_t];
+                    ctrl.run_layer_prepared(&spec, lw, planes, LayerInput::Pixels(&frames))
+                }
+                .with_context(|| format!("simulating layer {} on chip {exec_chip}", l.name))?;
+                (run, image.sparsity())
+            } else {
+                let main = l
+                    .input_from
+                    .clone()
+                    .or_else(|| prev.clone())
+                    .ok_or_else(|| anyhow!("layer {} has no predecessor", l.name))?;
+                // Ship any dependency that lives on another chip (once per
+                // destination chip — it stays resident afterwards).
+                if let Plan::PerLayer(_) = plan {
+                    for dep in
+                        std::iter::once(main.as_str()).chain(l.concat_with.as_deref())
+                    {
+                        let from = *producer
+                            .get(dep)
+                            .ok_or_else(|| anyhow!("layer {}: missing output of {dep}", l.name))?;
+                        if from != exec_chip && !resident.contains(&(dep.to_string(), exec_chip)) {
+                            let maps = outputs.get(dep).expect("producer recorded with output");
+                            let bits: u64 = maps.iter().map(spike_map_transfer_bits).sum();
+                            transfer_cycles += ic.send(Some(from), Some(exec_chip), bits);
+                            resident.insert((dep.to_string(), exec_chip));
+                        }
+                    }
+                }
+                let main_steps = outputs
+                    .get(&main)
+                    .ok_or_else(|| anyhow!("layer {}: missing output of {main}", l.name))?;
+                let inputs: Vec<SpikeMap> = match l.concat_with.as_deref() {
+                    None => main_steps.clone(),
+                    Some(o) => {
+                        let os = outputs
+                            .get(o)
+                            .ok_or_else(|| anyhow!("layer {}: missing output of {o}", l.name))?;
+                        main_steps.iter().zip(os).map(|(a, b)| a.concat(b)).collect()
+                    }
+                };
+                if let Plan::TileSplit = plan {
+                    for ((a, b), bits) in self.spike_halo_bits(&inputs, l.k) {
+                        transfer_cycles += ic.send(Some(a), Some(b), bits);
+                    }
+                }
+                let sparsity =
+                    inputs.iter().map(|m| m.sparsity()).sum::<f64>() / inputs.len().max(1) as f64;
+                let run = ctrl
+                    .run_layer_prepared(&spec, lw, planes, LayerInput::Spikes(&inputs))
+                    .with_context(|| format!("simulating layer {} on chip {exec_chip}", l.name))?;
+                (run, sparsity)
+            };
+
+            // Chip attribution: the layer's makespan lands on its chip
+            // (PerLayer) or each chip is busy for its busiest core's time
+            // (TileSplit); the frame compute path advances by the layer
+            // makespan either way.
+            compute_cycles += run.cycles;
+            match plan {
+                Plan::PerLayer(_) => chip_cycles[exec_chip] += run.cycles,
+                Plan::TileSplit => {
+                    for j in 0..chips_n {
+                        let mine = &run.core_cycles[j * cores_per_chip..(j + 1) * cores_per_chip];
+                        chip_cycles[j] += mine.iter().copied().max().unwrap_or(0);
+                    }
+                }
+            }
+            ev.add_layer(&run);
+
+            if opts.collect_stats {
+                layer_obs.insert(
+                    l.name.clone(),
+                    LayerObservation {
+                        input_sparsity,
+                        spikes_out: run.spikes_out,
+                        cycles: run.cycles,
+                        dense_cycles: run.dense_cycles,
+                        core_cycles: run.core_cycles.clone(),
+                    },
+                );
+            }
+            if l.kind == ConvKind::Output {
+                head = run.head_acc;
+            } else {
+                outputs.insert(l.name.clone(), run.output);
+                producer.insert(l.name.clone(), exec_chip);
+                resident.insert((l.name.clone(), exec_chip));
+            }
+            prev = Some(l.name.clone());
+        }
+
+        // Result download: the head accumulator back to the host.
+        let head_acc = head.ok_or_else(|| anyhow!("network has no output layer"))?;
+        let last_chip = match plan {
+            Plan::PerLayer(chip_of) => *chip_of.last().unwrap_or(&0),
+            Plan::TileSplit => 0,
+        };
+        let head_bits =
+            (head_acc.c * head_acc.h * head_acc.w) as u64 * self.cfg.chip.acc_bits as u64;
+        transfer_cycles += ic.send(Some(last_chip), None, head_bits);
+
+        let makespan = compute_cycles + transfer_cycles;
+        let fps = if makespan == 0 { 0.0 } else { self.cfg.chip.clock_hz / makespan as f64 };
+        let sparse_macs = ev.pe_enabled + ev.pe_gated;
+        let energy = EnergyModel::default().cluster_report(
+            &ev,
+            sparse_macs,
+            fps,
+            &chip_cycles,
+            ic.energy_mj(),
+        );
+        let run = ClusterRun {
+            policy: self.cfg.policy,
+            chip_cycles,
+            compute_cycles,
+            transfer_cycles,
+            makespan,
+            traffic: ic.per_chip().to_vec(),
+            transfers: ic.transfers().to_vec(),
+            interconnect_bits: ic.total_bits(),
+            energy,
+        };
+        Ok(ClusterFrame { frame: BackendFrame { head_acc, layers: layer_obs }, run })
+    }
+}
+
+impl SnnBackend for ChipCluster {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        Self::CAPS
+    }
+
+    fn run_frame(&self, image: &Tensor<u8>, opts: &FrameOptions) -> Result<BackendFrame> {
+        Ok(self.run_frame_cluster(image, opts)?.frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::topology::{Scale, TimeStepConfig};
+    use crate::util::Rng;
+
+    fn setup() -> (Arc<NetworkSpec>, Arc<ModelWeights>, Tensor<u8>) {
+        let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+        let mut w = ModelWeights::random(&net, 1.0, 120);
+        w.prune_fine_grained(0.8);
+        let mut rng = Rng::new(121);
+        let n = net.input_c * net.input_h * net.input_w;
+        let img = Tensor::from_vec(
+            net.input_c,
+            net.input_h,
+            net.input_w,
+            (0..n).map(|_| rng.next_u32() as u8).collect(),
+        );
+        (Arc::new(net), Arc::new(w), img)
+    }
+
+    fn cluster(chips: usize, policy: ShardPolicy) -> (ChipCluster, Tensor<u8>) {
+        let (net, w, img) = setup();
+        let cfg = ClusterConfig::single_chip().with_chips(chips).with_policy(policy);
+        (ChipCluster::new(net, w, cfg).unwrap(), img)
+    }
+
+    #[test]
+    fn construction_validates_and_builds_chips() {
+        let (net, w, _) = setup();
+        let cc = ClusterConfig::single_chip().with_chips(3);
+        let cl = ChipCluster::new(net.clone(), w.clone(), cc).unwrap();
+        assert_eq!(cl.chips().len(), 3);
+        assert_eq!(cl.name(), "cluster");
+        assert!(cl.caps().reports_cycles && cl.caps().parallel);
+        // Stage partition covers every layer exactly once.
+        let flat: Vec<usize> = cl.stages().iter().flatten().copied().collect();
+        let mut sorted = flat.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..net.layers.len()).collect::<Vec<_>>());
+        // Mismatched weights are rejected.
+        let full = NetworkSpec::paper(Scale::Full, TimeStepConfig::PAPER);
+        assert!(ChipCluster::new(Arc::new(full), w, ClusterConfig::single_chip()).is_err());
+    }
+
+    #[test]
+    fn frame_parallel_round_robins_and_stays_bit_identical() {
+        let (cl, img) = cluster(2, ShardPolicy::FrameParallel);
+        let opts = FrameOptions { collect_stats: true };
+        let a = cl.run_frame_cluster(&img, &opts).unwrap();
+        let b = cl.run_frame_cluster(&img, &opts).unwrap();
+        // Chips are identical, so alternating chips must not change bits.
+        assert_eq!(a.frame, b.frame);
+        // Round-robin: frame 1 busies chip 0, frame 2 busies chip 1.
+        assert!(a.run.chip_cycles[0] > 0 && a.run.chip_cycles[1] == 0);
+        assert!(b.run.chip_cycles[1] > 0 && b.run.chip_cycles[0] == 0);
+        // No inter-chip transfers — only host upload/download.
+        assert_eq!(a.run.transfers.len(), 2);
+        assert!(a.run.transfers.iter().all(|t| t.src.is_none() || t.dst.is_none()));
+    }
+
+    #[test]
+    fn layer_pipeline_ships_spike_planes_between_stages() {
+        let (cl, img) = cluster(2, ShardPolicy::LayerPipeline);
+        let cf = cl.run_frame_cluster(&img, &FrameOptions::default()).unwrap();
+        // Both stages do work, and at least one chip-to-chip transfer
+        // crossed the stage boundary.
+        assert!(cf.run.chip_cycles.iter().all(|&c| c > 0));
+        let cross: Vec<&TransferRecord> = cf
+            .run
+            .transfers
+            .iter()
+            .filter(|t| t.src.is_some() && t.dst.is_some())
+            .collect();
+        assert!(!cross.is_empty(), "stage boundary must ship spike planes");
+        for t in &cross {
+            assert!(t.bits > 0 && t.cycles > 0);
+        }
+        assert_eq!(cf.run.makespan, cf.run.compute_cycles + cf.run.transfer_cycles);
+        assert!(cf.run.energy.interconnect_mj > 0.0);
+    }
+
+    #[test]
+    fn tile_split_exchanges_halos_and_cuts_compute() {
+        let (one, img) = cluster(1, ShardPolicy::TileSplit);
+        let (two, _) = cluster(2, ShardPolicy::TileSplit);
+        let a = one.run_frame_cluster(&img, &FrameOptions::default()).unwrap();
+        let b = two.run_frame_cluster(&img, &FrameOptions::default()).unwrap();
+        // Same arithmetic, pooled cores shrink the compute critical path.
+        assert_eq!(a.frame.head_acc.data, b.frame.head_acc.data);
+        assert!(b.run.compute_cycles < a.run.compute_cycles);
+        // One chip: no halo. Two chips: 3×3 layers exchange halos.
+        assert!(a.run.transfers.iter().all(|t| t.src.is_none() || t.dst.is_none()));
+        assert!(b.run.transfers.iter().any(|t| t.src.is_some() && t.dst.is_some()));
+        assert!(b.run.interconnect_bits > a.run.interconnect_bits);
+    }
+
+    #[test]
+    fn halo_strips_only_between_foreign_tiles() {
+        let (cl, _) = cluster(2, ShardPolicy::TileSplit);
+        // 1×1 kernels have no halo at all.
+        assert!(cl.halo_strips(64, 96, 1).is_empty());
+        let strips = cl.halo_strips(64, 96, 3);
+        assert!(!strips.is_empty());
+        for (a, b, y0, y1, x0, x1) in strips {
+            assert!(a < b, "pairs are normalized");
+            assert!(b < 2);
+            assert!(y0 < y1 && y1 <= 64);
+            assert!(x0 < x1 && x1 <= 96);
+        }
+        // A single-chip cluster never exchanges halos.
+        let (one, _) = cluster(1, ShardPolicy::TileSplit);
+        assert!(one.halo_strips(64, 96, 3).is_empty());
+    }
+
+    #[test]
+    fn zero_spike_halo_costs_nothing() {
+        let (cl, _) = cluster(2, ShardPolicy::TileSplit);
+        let maps = vec![SpikeMap::zeros(4, 64, 96); 2];
+        let bits = cl.spike_halo_bits(&maps, 3);
+        // Headers only: every strip is silent, so each pair's payload is
+        // the per-strip header, far below the bitmap fallback.
+        let total: u64 = bits.values().sum();
+        let dense: u64 = cl
+            .halo_strips(64, 96, 3)
+            .iter()
+            .map(|&(_, _, y0, y1, x0, x1)| (2 * 4 * (y1 - y0) * (x1 - x0)) as u64)
+            .sum();
+        assert!(total < dense, "silent halos must beat the raw bitmap ({total} vs {dense})");
+    }
+}

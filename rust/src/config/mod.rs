@@ -114,6 +114,11 @@ impl AccelConfig {
     pub fn from_file(path: &Path) -> Result<Self> {
         let doc = TomlDoc::parse_file(path)
             .with_context(|| format!("loading accel config {}", path.display()))?;
+        Ok(Self::from_doc(&doc))
+    }
+
+    /// Apply `[accel]` overrides from a parsed document.
+    pub fn from_doc(doc: &TomlDoc) -> Self {
         let mut cfg = Self::paper();
         if let Some(s) = doc.section("accel") {
             cfg.tile_h = s.get_usize("tile_h").unwrap_or(cfg.tile_h);
@@ -129,6 +134,123 @@ impl AccelConfig {
             cfg.weight_map_sram_bytes =
                 s.get_usize("weight_map_sram_bytes").unwrap_or(cfg.weight_map_sram_bytes);
             cfg.dram_pj_per_bit = s.get_f64("dram_pj_per_bit").unwrap_or(cfg.dram_pj_per_bit);
+        }
+        cfg
+    }
+}
+
+/// How a [`ClusterConfig`]'s chips split one frame's work (the cluster
+/// subsystem's sharding axis; see `crate::cluster`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Whole frames dealt round-robin across chips: zero inter-chip
+    /// traffic, per-frame latency unchanged, throughput scales with chips.
+    FrameParallel,
+    /// Layers partitioned into contiguous pipeline stages, one stage per
+    /// chip; compressed spike planes ship between stages.
+    LayerPipeline,
+    /// Every layer's tile grid split across all chips' cores, with halo
+    /// exchange between neighboring tiles on different chips.
+    TileSplit,
+}
+
+impl ShardPolicy {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<ShardPolicy> {
+        match s {
+            "frame" | "frame-parallel" => Some(ShardPolicy::FrameParallel),
+            "pipeline" | "layer-pipeline" => Some(ShardPolicy::LayerPipeline),
+            "tile" | "tile-split" => Some(ShardPolicy::TileSplit),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling.
+    pub fn label(self) -> &'static str {
+        match self {
+            ShardPolicy::FrameParallel => "frame",
+            ShardPolicy::LayerPipeline => "pipeline",
+            ShardPolicy::TileSplit => "tile",
+        }
+    }
+
+    /// Every policy, in CLI order.
+    pub fn all() -> [ShardPolicy; 3] {
+        [ShardPolicy::FrameParallel, ShardPolicy::LayerPipeline, ShardPolicy::TileSplit]
+    }
+}
+
+/// Multi-chip cluster configuration: N identical chips (each an
+/// [`AccelConfig`]) joined by a DRAM-class interconnect. The link numbers
+/// feed `crate::accel::dram::LinkSpec`; they live here so the whole
+/// cluster geometry loads from one `[cluster]` TOML section.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Simulated chips (1 = the plain single-chip design).
+    pub num_chips: usize,
+    /// How a frame's work is sharded across chips.
+    pub policy: ShardPolicy,
+    /// Inter-chip link bandwidth in bits per core-clock cycle (a 64-bit
+    /// DDR-style link at the core clock ⇒ 128 bits/cycle).
+    pub link_bits_per_cycle: u64,
+    /// Fixed per-transfer link latency in core-clock cycles.
+    pub link_latency_cycles: u64,
+    /// Link energy per bit in picojoules (off-chip SerDes + DRAM-class
+    /// wires; cheaper than the 70 pJ/bit DDR3 hop but far above on-chip).
+    pub link_pj_per_bit: f64,
+    /// Per-chip hardware geometry.
+    pub chip: AccelConfig,
+}
+
+impl ClusterConfig {
+    /// One paper chip, no interconnect in play.
+    pub fn single_chip() -> Self {
+        ClusterConfig {
+            num_chips: 1,
+            policy: ShardPolicy::FrameParallel,
+            link_bits_per_cycle: 128,
+            link_latency_cycles: 200,
+            link_pj_per_bit: 10.0,
+            chip: AccelConfig::paper(),
+        }
+    }
+
+    /// `num_chips` variant (sweeps, `--chips N`).
+    pub fn with_chips(mut self, chips: usize) -> Self {
+        self.num_chips = chips.max(1);
+        self
+    }
+
+    /// `policy` variant (sweeps, `--shard-policy P`).
+    pub fn with_policy(mut self, policy: ShardPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Load from a TOML-subset file: `[accel]` configures the per-chip
+    /// geometry, `[cluster]` the chip count, policy and link.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let doc = TomlDoc::parse_file(path)
+            .with_context(|| format!("loading cluster config {}", path.display()))?;
+        let mut cfg = Self::single_chip();
+        cfg.chip = AccelConfig::from_doc(&doc);
+        if let Some(s) = doc.section("cluster") {
+            cfg.num_chips = s.get_usize("num_chips").unwrap_or(cfg.num_chips).max(1);
+            if let Some(p) = s.get("policy") {
+                cfg.policy = ShardPolicy::parse(p).ok_or_else(|| {
+                    anyhow::anyhow!("unknown shard policy {p:?} in {}", path.display())
+                })?;
+            }
+            cfg.link_bits_per_cycle = s
+                .get_usize("link_bits_per_cycle")
+                .map(|v| v as u64)
+                .unwrap_or(cfg.link_bits_per_cycle)
+                .max(1);
+            cfg.link_latency_cycles = s
+                .get_usize("link_latency_cycles")
+                .map(|v| v as u64)
+                .unwrap_or(cfg.link_latency_cycles);
+            cfg.link_pj_per_bit = s.get_f64("link_pj_per_bit").unwrap_or(cfg.link_pj_per_bit);
         }
         Ok(cfg)
     }
@@ -170,5 +292,48 @@ mod tests {
         assert_eq!(c.tile_h, 9);
         assert_eq!(c.clock_hz, 1e9);
         assert_eq!(c.tile_w, 32); // untouched default
+    }
+
+    #[test]
+    fn shard_policy_spellings() {
+        assert_eq!(ShardPolicy::parse("frame"), Some(ShardPolicy::FrameParallel));
+        assert_eq!(ShardPolicy::parse("layer-pipeline"), Some(ShardPolicy::LayerPipeline));
+        assert_eq!(ShardPolicy::parse("tile"), Some(ShardPolicy::TileSplit));
+        assert_eq!(ShardPolicy::parse("bogus"), None);
+        for p in ShardPolicy::all() {
+            assert_eq!(ShardPolicy::parse(p.label()), Some(p), "{p:?} round-trips");
+        }
+    }
+
+    #[test]
+    fn cluster_defaults_are_single_chip() {
+        let c = ClusterConfig::single_chip();
+        assert_eq!(c.num_chips, 1);
+        assert_eq!(c.policy, ShardPolicy::FrameParallel);
+        assert_eq!(c.chip, AccelConfig::paper());
+        assert_eq!(c.with_chips(0).num_chips, 1);
+        assert_eq!(
+            ClusterConfig::single_chip().with_chips(4).with_policy(ShardPolicy::TileSplit).policy,
+            ShardPolicy::TileSplit
+        );
+    }
+
+    #[test]
+    fn cluster_from_file_reads_both_sections() {
+        let dir = std::env::temp_dir().join("scsnn_cluster_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cluster.toml");
+        std::fs::write(
+            &p,
+            "[accel]\nnum_cores = 2\n\n[cluster]\nnum_chips = 4\npolicy = \"pipeline\"\nlink_bits_per_cycle = 64\nlink_pj_per_bit = 5.0\n",
+        )
+        .unwrap();
+        let c = ClusterConfig::from_file(&p).unwrap();
+        assert_eq!(c.num_chips, 4);
+        assert_eq!(c.policy, ShardPolicy::LayerPipeline);
+        assert_eq!(c.link_bits_per_cycle, 64);
+        assert_eq!(c.link_pj_per_bit, 5.0);
+        assert_eq!(c.chip.num_cores, 2);
+        assert_eq!(c.link_latency_cycles, 200); // untouched default
     }
 }

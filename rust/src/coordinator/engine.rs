@@ -11,7 +11,10 @@
 //! the job queue and the reorder buffer are bounded (true back pressure:
 //! a straggler frame pauses intake instead of ballooning memory).
 //! Per-frame wall time is measured in the worker and delivered alongside
-//! the result.
+//! the result. Request batching ([`EngineConfig::batch`]) groups
+//! consecutive frames into one work item so backends amortize dispatch;
+//! batching never reorders the fold, so `workers × batch` runs stay
+//! bit-identical to the serial order.
 //!
 //! Backends that are not thread-safe ([`BackendCaps::parallel`] == false,
 //! e.g. PJRT) degrade transparently to sequential execution on the
@@ -31,11 +34,18 @@ pub struct EngineConfig {
     pub workers: usize,
     /// Bounded frame-queue depth (back-pressure window).
     pub queue_depth: usize,
+    /// Frames per work item (request batching): each item carries `batch`
+    /// consecutive frames, so one dispatch amortizes across the batch —
+    /// golden/cluster backends pay scheduling once per batch, PJRT pays
+    /// one executable invocation chain per batch. 1 = one frame per item.
+    /// Any `workers × batch` combination folds bit-identically to the
+    /// serial order (see [`StreamingEngine::stream_batched`]).
+    pub batch: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { workers: 1, queue_depth: 8 }
+        EngineConfig { workers: 1, queue_depth: 8, batch: 1 }
     }
 }
 
@@ -147,15 +157,57 @@ impl StreamingEngine {
         })
     }
 
+    /// [`Self::stream_ordered`] with request batching: frames are grouped
+    /// into work items of `EngineConfig::batch` **consecutive** frames;
+    /// a worker runs its item's frames in order and the fold still sees
+    /// every frame at its original index, in frame order — so any
+    /// `workers × batch` combination is bit-identical to the serial run.
+    /// Each frame's reported wall time is its item's wall time divided
+    /// evenly across the item (per-frame timing is not observable inside
+    /// a batch).
+    pub fn stream_batched<T, W, F>(&self, n: usize, work: W, mut fold: F) -> Result<()>
+    where
+        T: Send,
+        W: Fn(usize) -> Result<T> + Sync,
+        F: FnMut(usize, T, Duration) -> Result<()>,
+    {
+        let batch = self.cfg.batch.max(1);
+        if batch == 1 {
+            return self.stream_ordered(n, work, fold);
+        }
+        let items = n.div_ceil(batch);
+        self.stream_ordered(
+            items,
+            |item| {
+                let start = item * batch;
+                let end = (start + batch).min(n);
+                let mut out: Vec<T> = Vec::with_capacity(end - start);
+                for i in start..end {
+                    out.push(work(i)?);
+                }
+                Ok(out)
+            },
+            |item, results, wall| {
+                let start = item * batch;
+                let per_frame = wall / results.len().max(1) as u32;
+                for (off, r) in results.into_iter().enumerate() {
+                    fold(start + off, r, per_frame)?;
+                }
+                Ok(())
+            },
+        )
+    }
+
     /// Run raw frames through the backend, returning results in frame
-    /// order — the determinism-test / bench entry point.
+    /// order — the determinism-test / bench entry point. Honors the
+    /// engine's batch knob.
     pub fn run_frames(
         &self,
         frames: &[&Tensor<u8>],
         opts: FrameOptions,
     ) -> Result<Vec<BackendFrame>> {
         let mut out: Vec<BackendFrame> = Vec::with_capacity(frames.len());
-        self.stream_ordered(
+        self.stream_batched(
             frames.len(),
             |i| self.backend.run_frame(frames[i], &opts),
             |_, frame, _| {
@@ -215,10 +267,13 @@ mod tests {
         let imgs = frames(&[0, 1, 2, 3, 4, 5]);
         let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
         let be = Arc::new(MockBackend { parallel: true });
-        let seq = StreamingEngine::new(be.clone(), EngineConfig { workers: 1, queue_depth: 2 })
-            .run_frames(&refs, FrameOptions::default())
-            .unwrap();
-        let par = StreamingEngine::new(be, EngineConfig { workers: 4, queue_depth: 2 })
+        let seq = StreamingEngine::new(
+            be.clone(),
+            EngineConfig { workers: 1, queue_depth: 2, batch: 1 },
+        )
+        .run_frames(&refs, FrameOptions::default())
+        .unwrap();
+        let par = StreamingEngine::new(be, EngineConfig { workers: 4, queue_depth: 2, batch: 1 })
             .run_frames(&refs, FrameOptions::default())
             .unwrap();
         assert_eq!(seq.len(), 6);
@@ -234,7 +289,7 @@ mod tests {
         let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
         let engine = StreamingEngine::new(
             Arc::new(MockBackend { parallel: true }),
-            EngineConfig { workers: 3, queue_depth: 1 },
+            EngineConfig { workers: 3, queue_depth: 1, batch: 1 },
         );
         let mut seen = Vec::new();
         engine
@@ -258,7 +313,7 @@ mod tests {
         for workers in [1usize, 4] {
             let engine = StreamingEngine::new(
                 Arc::new(MockBackend { parallel: true }),
-                EngineConfig { workers, queue_depth: 4 },
+                EngineConfig { workers, queue_depth: 4, batch: 1 },
             );
             let mut folded = Vec::new();
             let err = engine
@@ -280,7 +335,7 @@ mod tests {
     fn non_parallel_backend_degrades_to_sequential() {
         let engine = StreamingEngine::new(
             Arc::new(MockBackend { parallel: false }),
-            EngineConfig { workers: 8, queue_depth: 4 },
+            EngineConfig { workers: 8, queue_depth: 4, batch: 1 },
         );
         assert_eq!(engine.effective_workers(100), 1);
         let imgs = frames(&[2, 4]);
@@ -288,6 +343,76 @@ mod tests {
         let out = engine.run_frames(&refs, FrameOptions::default()).unwrap();
         assert_eq!(out.len(), 2);
         assert_eq!(out[1].head_acc.data[0], 8);
+    }
+
+    #[test]
+    fn batched_runs_are_bit_identical_for_any_workers_x_batch() {
+        let imgs = frames(&[0, 1, 2, 3, 4, 5, 6]);
+        let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+        let be = Arc::new(MockBackend { parallel: true });
+        let seq = StreamingEngine::new(be.clone(), EngineConfig::default())
+            .run_frames(&refs, FrameOptions::default())
+            .unwrap();
+        // 7 frames across every workers × batch shape, including a batch
+        // that does not divide the frame count and a batch larger than it.
+        for workers in [1usize, 2, 4] {
+            for batch in [1usize, 2, 3, 16] {
+                let engine = StreamingEngine::new(
+                    be.clone(),
+                    EngineConfig { workers, queue_depth: 2, batch },
+                );
+                let got = engine.run_frames(&refs, FrameOptions::default()).unwrap();
+                assert_eq!(seq, got, "workers={workers} batch={batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_fold_sees_monotone_indices_and_split_wall_times() {
+        let imgs = frames(&[5, 0, 3, 1, 2]);
+        let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+        let engine = StreamingEngine::new(
+            Arc::new(MockBackend { parallel: true }),
+            EngineConfig { workers: 2, queue_depth: 1, batch: 2 },
+        );
+        let mut seen = Vec::new();
+        engine
+            .stream_batched(
+                refs.len(),
+                |i| engine.backend().run_frame(refs[i], &FrameOptions::default()),
+                |i, _, wall| {
+                    seen.push(i);
+                    assert!(wall > Duration::ZERO);
+                    Ok(())
+                },
+            )
+            .unwrap();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn batched_frame_error_aborts_with_earlier_frames_folded() {
+        // Frame 2 is poisoned; batch = 2 puts it in the second item, so
+        // item 0 (frames 0–1) folds and the run aborts on item 1.
+        let imgs = frames(&[1, 3, 99, 4]);
+        let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+        let engine = StreamingEngine::new(
+            Arc::new(MockBackend { parallel: true }),
+            EngineConfig { workers: 2, queue_depth: 4, batch: 2 },
+        );
+        let mut folded = Vec::new();
+        let err = engine
+            .stream_batched(
+                refs.len(),
+                |i| engine.backend().run_frame(refs[i], &FrameOptions::default()),
+                |i, _, _| {
+                    folded.push(i);
+                    Ok(())
+                },
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        assert_eq!(folded, vec![0, 1]);
     }
 
     #[test]

@@ -19,9 +19,11 @@
 use crate::accel::energy::EnergyModel;
 use crate::accel::latency::LatencyModel;
 use crate::backend::{
-    BackendKind, CycleSimBackend, FrameOptions, GoldenBackend, PjrtBackend, SnnBackend,
+    AutoSelectPolicy, BackendKind, CycleSimBackend, FrameOptions, GoldenBackend, PjrtBackend,
+    RequestClass, SnnBackend,
 };
-use crate::config::AccelConfig;
+use crate::cluster::ChipCluster;
+use crate::config::{AccelConfig, ClusterConfig, ShardPolicy};
 use crate::coordinator::engine::{EngineConfig, StreamingEngine};
 use crate::coordinator::metrics::{FrameHwEstimate, PipelineMetrics};
 use crate::detect::dataset::Dataset;
@@ -80,6 +82,10 @@ pub struct DetectionPipeline {
     /// Quantized weights, shared likewise.
     pub weights: Arc<ModelWeights>,
     backend: Arc<dyn SnnBackend>,
+    /// The loaded PJRT engine, kept so auto-select (and
+    /// `select_backend(Pjrt)`) can switch back to it after another
+    /// backend was active. `None` unless `from_artifacts` loaded one.
+    pjrt: Option<Arc<dyn SnnBackend>>,
     head_cfg: YoloHead,
     /// Score threshold for decoding.
     pub conf_thresh: f32,
@@ -93,6 +99,12 @@ pub struct DetectionPipeline {
     pub workers: usize,
     /// Bounded frame-queue depth (engine back-pressure window).
     pub queue_depth: usize,
+    /// Frames per engine work item (request batching; 1 = unbatched).
+    pub batch: usize,
+    /// Multi-chip cluster geometry for the `cluster` backend. Its `chip`
+    /// field is overridden with the pipeline's [`AccelConfig`] when the
+    /// backend is built, so `--cores` and `--chips` compose.
+    pub cluster: ClusterConfig,
 }
 
 impl DetectionPipeline {
@@ -144,10 +156,12 @@ impl DetectionPipeline {
         weights: Arc<ModelWeights>,
         backend: Arc<dyn SnnBackend>,
     ) -> Self {
+        let pjrt = (backend.name() == "pjrt").then_some(backend.clone());
         DetectionPipeline {
             net,
             weights,
             backend,
+            pjrt,
             head_cfg: YoloHead::default(),
             conf_thresh: 0.1,
             nms_iou: 0.45,
@@ -156,6 +170,8 @@ impl DetectionPipeline {
             hw_mode: HwStatsMode::Once,
             workers: 1,
             queue_depth: 8,
+            batch: 1,
+            cluster: ClusterConfig::single_chip(),
         }
     }
 
@@ -172,9 +188,10 @@ impl DetectionPipeline {
     }
 
     /// Switch the execution backend. `CycleSim` simulates the current
-    /// [`AccelConfig`] (see [`Self::set_cores`]); `Pjrt` must be selected
-    /// at construction via [`Self::from_artifacts`] because it needs the
-    /// compiled artifact.
+    /// [`AccelConfig`] (see [`Self::set_cores`]); `Cluster` builds a
+    /// [`ChipCluster`] from the pipeline's cluster geometry; `Pjrt` must
+    /// be selected at construction via [`Self::from_artifacts`] because it
+    /// needs the compiled artifact.
     pub fn select_backend(&mut self, kind: BackendKind) -> Result<()> {
         self.backend = match kind {
             BackendKind::Golden => Arc::new(Self::golden_backend(&self.net, &self.weights)?),
@@ -183,24 +200,82 @@ impl DetectionPipeline {
                 self.weights.clone(),
                 self.cfg.clone(),
             )?),
-            BackendKind::Pjrt => {
-                if self.backend.name() == "pjrt" {
-                    return Ok(());
-                }
-                bail!("select the PJRT backend at construction (from_artifacts with use_pjrt)")
-            }
+            BackendKind::Cluster => Arc::new(self.build_cluster()?),
+            BackendKind::Pjrt => match &self.pjrt {
+                Some(b) => b.clone(),
+                None => bail!(
+                    "select the PJRT backend at construction (from_artifacts with use_pjrt)"
+                ),
+            },
         };
         Ok(())
     }
 
-    /// Set the simulated core count; rebuilds the cycle-sim backend if it
-    /// is the active one.
+    /// A cluster over the pipeline's current chip config and cluster
+    /// geometry.
+    fn build_cluster(&self) -> Result<ChipCluster> {
+        let mut cc = self.cluster.clone();
+        cc.chip = self.cfg.clone();
+        ChipCluster::new(self.net.clone(), self.weights.clone(), cc)
+    }
+
+    /// Set the simulated core count; rebuilds the cycle-sim or cluster
+    /// backend if one of them is active.
     pub fn set_cores(&mut self, cores: usize) -> Result<()> {
         self.cfg.num_cores = cores.max(1);
-        if self.backend.name() == "cyclesim" {
-            self.select_backend(BackendKind::CycleSim)?;
+        match self.backend.name() {
+            "cyclesim" => self.select_backend(BackendKind::CycleSim)?,
+            "cluster" => self.select_backend(BackendKind::Cluster)?,
+            _ => {}
         }
         Ok(())
+    }
+
+    /// Set the cluster geometry (chip count + sharding policy); rebuilds
+    /// the cluster backend if it is the active one.
+    pub fn set_cluster(&mut self, chips: usize, policy: ShardPolicy) -> Result<()> {
+        self.cluster.num_chips = chips.max(1);
+        self.cluster.policy = policy;
+        if self.backend.name() == "cluster" {
+            self.select_backend(BackendKind::Cluster)?;
+        }
+        Ok(())
+    }
+
+    /// Auto-select the backend from capabilities + load instead of a CLI
+    /// flag ([`AutoSelectPolicy`]): candidates are the loaded PJRT engine
+    /// (whenever `from_artifacts` built one, even if another backend is
+    /// currently active), the golden model, the cluster (when more than
+    /// one chip is configured) and the cycle simulator. The policy
+    /// decides on static descriptors, so only the winning backend is
+    /// constructed — and only when the choice actually changes. Returns
+    /// the chosen backend's name.
+    pub fn select_backend_auto(
+        &mut self,
+        want_cycles: bool,
+        pending: usize,
+    ) -> Result<&'static str> {
+        let mut kinds: Vec<(BackendKind, crate::backend::BackendCaps)> = Vec::new();
+        if self.pjrt.is_some() {
+            kinds.push((BackendKind::Pjrt, PjrtBackend::CAPS));
+        }
+        kinds.push((BackendKind::Golden, GoldenBackend::CAPS));
+        if self.cluster.num_chips > 1 {
+            kinds.push((BackendKind::Cluster, ChipCluster::CAPS));
+        }
+        kinds.push((BackendKind::CycleSim, CycleSimBackend::CAPS));
+        let descs: Vec<(&str, crate::backend::BackendCaps)> =
+            kinds.iter().map(|(k, c)| (k.label(), *c)).collect();
+        let idx = AutoSelectPolicy::default()
+            .choose_desc(&descs, &RequestClass { want_cycles, pending })
+            .expect("candidate list is never empty");
+        let kind = kinds[idx].0;
+        // The decision is static; only rebuild when it actually changes
+        // the active backend (repeated selections are free).
+        if kind.label() != self.backend.name() {
+            self.select_backend(kind)?;
+        }
+        Ok(self.backend.name())
     }
 
     /// Name of the active backend (`golden`, `cyclesim`, `pjrt`).
@@ -218,7 +293,11 @@ impl DetectionPipeline {
     pub fn engine(&self) -> StreamingEngine {
         StreamingEngine::new(
             self.backend.clone(),
-            EngineConfig { workers: self.workers, queue_depth: self.queue_depth },
+            EngineConfig {
+                workers: self.workers,
+                queue_depth: self.queue_depth,
+                batch: self.batch,
+            },
         )
     }
 
@@ -250,7 +329,7 @@ impl DetectionPipeline {
     pub fn process_frames(&self, images: &[&Tensor<u8>]) -> Result<Vec<FrameResult>> {
         let engine = self.engine();
         let mut out: Vec<FrameResult> = Vec::with_capacity(images.len());
-        engine.stream_ordered(
+        engine.stream_batched(
             images.len(),
             |i| self.detect_frame(images[i]),
             |_, (detections, head), wall| {
@@ -326,7 +405,7 @@ impl DetectionPipeline {
         );
         let mut dets: Vec<(usize, Box2D)> = Vec::new();
         let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
-        self.engine().stream_ordered(
+        self.engine().stream_batched(
             images.len(),
             |i| Ok(self.detect_frame(images[i])?.0),
             |i, frame_dets, wall| {
@@ -427,6 +506,63 @@ mod tests {
         assert_eq!(p.backend_name(), "golden");
         // PJRT cannot be selected without artifacts.
         assert!(p.select_backend(BackendKind::Pjrt).is_err());
+    }
+
+    #[test]
+    fn cluster_backend_selectable_and_bit_identical() {
+        let mut p = synthetic_pipeline();
+        let ds = Dataset::synth(1, p.net.input_w, p.net.input_h, 17);
+        p.select_backend(BackendKind::CycleSim).unwrap();
+        let want = p.process_frame(&ds.samples[0].image).unwrap();
+        // Every policy at 2 chips reproduces the single-chip result.
+        for policy in ShardPolicy::all() {
+            p.set_cluster(2, policy).unwrap();
+            p.select_backend(BackendKind::Cluster).unwrap();
+            assert_eq!(p.backend_name(), "cluster");
+            let got = p.process_frame(&ds.samples[0].image).unwrap();
+            assert_eq!(got.head.data, want.head.data, "{policy:?}");
+            assert_eq!(got.detections, want.detections, "{policy:?}");
+        }
+        // set_cores rebuilds the active cluster backend.
+        p.set_cores(2).unwrap();
+        assert_eq!(p.backend_name(), "cluster");
+        let got = p.process_frame(&ds.samples[0].image).unwrap();
+        assert_eq!(got.head.data, want.head.data);
+    }
+
+    #[test]
+    fn batched_pipeline_run_is_bit_identical() {
+        let mut p = synthetic_pipeline();
+        let ds = Dataset::synth(5, p.net.input_w, p.net.input_h, 18);
+        let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+        let seq = p.process_frames(&images).unwrap();
+        p.workers = 2;
+        p.batch = 2; // 5 frames → items of 2, 2, 1
+        let bat = p.process_frames(&images).unwrap();
+        assert_eq!(seq.len(), bat.len());
+        for (a, b) in seq.iter().zip(&bat) {
+            assert_eq!(a.detections, b.detections);
+            assert_eq!(a.head.data, b.head.data);
+        }
+        let rep = p.process_dataset(&ds).unwrap();
+        assert_eq!(rep.metrics.frames, 5);
+    }
+
+    #[test]
+    fn auto_select_follows_caps_and_load() {
+        let mut p = synthetic_pipeline();
+        // Cycle request on a single-chip pipeline → cycle simulator.
+        assert_eq!(p.select_backend_auto(true, 0).unwrap(), "cyclesim");
+        // Cycle request with a cluster configured → cluster.
+        p.set_cluster(2, ShardPolicy::FrameParallel).unwrap();
+        assert_eq!(p.select_backend_auto(true, 0).unwrap(), "cluster");
+        // Deep queue, no cycle request → golden throughput engine
+        // (no PJRT in this build).
+        assert_eq!(p.select_backend_auto(false, 64).unwrap(), "golden");
+        assert_eq!(p.select_backend_auto(false, 0).unwrap(), "golden");
+        // The chosen backend actually serves frames.
+        let ds = Dataset::synth(1, p.net.input_w, p.net.input_h, 19);
+        assert!(p.process_frame(&ds.samples[0].image).is_ok());
     }
 
     #[test]

@@ -28,6 +28,7 @@
 //! | [`backend`] | unified `SnnBackend` trait: golden / cycle-sim / PJRT frame engines |
 //! | [`tensor`] | NCHW tensors + fixed-point arithmetic (FXP8/FXP16) |
 //! | [`sparse`] | bit-mask / CSR weight compression + compressed spike planes (`SpikePlane`/`SpikeMap`) carried end-to-end |
+//! | [`cluster`] | multi-chip cluster: sharded execution (frame/pipeline/tile) over a DRAM interconnect model |
 //! | [`config`] | TOML-subset config system + hardware configuration registers |
 //! | [`model`] | network topology, LIF dynamics, weights, mIoUT metric |
 //! | [`ref_impl`] | functional golden model (block conv, full SNN forward) |
@@ -38,6 +39,7 @@
 
 pub mod accel;
 pub mod backend;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod detect;

@@ -15,7 +15,7 @@ use scsnn::accel::energy::{AreaModel, EnergyModel};
 use scsnn::accel::latency::LatencyModel;
 use scsnn::accel::parallelism::{fig6_study, multicore_study};
 use scsnn::backend::BackendKind;
-use scsnn::config::AccelConfig;
+use scsnn::config::{AccelConfig, ClusterConfig, ShardPolicy};
 use scsnn::coordinator::pipeline::{DetectionPipeline, HwStatsMode};
 use scsnn::detect::dataset::{write_ppm, Dataset};
 use scsnn::model::miout::MioutAccumulator;
@@ -59,7 +59,8 @@ fn print_usage() {
         "scsnn — sparse compressed SNN accelerator (TCAS-I 2022 reproduction)\n\
          usage: scsnn <detect|simulate|parallelism|dram|timesteps|miout|report> [--options]\n\
          common options: --artifacts DIR  --scale full|tiny  --seed N\n\
-         serving options: --backend golden|cyclesim|pjrt  --workers N  --cores N"
+         serving options: --backend golden|cyclesim|pjrt|cluster|auto  --workers N  --cores N  --batch N\n\
+         cluster options: --chips N  --shard-policy frame|pipeline|tile  (--want-cycles with auto)"
     );
 }
 
@@ -99,24 +100,25 @@ fn backend_kind(args: &Args) -> Result<Option<BackendKind>> {
 
 fn cmd_detect(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
-    let backend = backend_kind(args)?;
+    let auto = args.get("backend") == Some("auto");
+    let backend = if auto { None } else { backend_kind(args)? };
     let use_pjrt = match backend {
         Some(BackendKind::Pjrt) => true,
         Some(_) => false,
+        // `auto` keeps PJRT as a candidate unless --no-pjrt opts out.
         None => !args.has_flag("no-pjrt"),
     };
     let mut pipeline = DetectionPipeline::from_artifacts(&dir, use_pjrt)?;
     pipeline.hw_mode = HwStatsMode::Once;
     pipeline.conf_thresh = args.parsed_or("conf", 0.1f32);
     pipeline.workers = args.parsed_or("workers", 1usize).max(1);
+    pipeline.batch = args.parsed_or("batch", 1usize).max(1);
     pipeline.set_cores(args.parsed_or("cores", 1usize))?;
-    match backend {
-        Some(BackendKind::Pjrt) if !pipeline.uses_pjrt() => {
-            bail!("--backend pjrt requested but the PJRT runtime is not built (enable the `pjrt` feature)")
-        }
-        Some(kind) if kind != BackendKind::Pjrt => pipeline.select_backend(kind)?,
-        _ => {}
-    }
+    let chips = args.parsed_or("chips", 1usize).max(1);
+    let policy_str = args.get_or("shard-policy", "frame");
+    let policy = ShardPolicy::parse(policy_str)
+        .ok_or_else(|| anyhow!("unknown shard policy {policy_str:?} (frame|pipeline|tile)"))?;
+    pipeline.set_cluster(chips, policy)?;
 
     let ds_path = args
         .get("dataset")
@@ -125,11 +127,34 @@ fn cmd_detect(args: &Args) -> Result<()> {
     let mut ds = Dataset::load(&ds_path)?;
     let frames = args.parsed_or("frames", ds.samples.len());
     ds.samples.truncate(frames);
+
+    if auto {
+        let chosen =
+            pipeline.select_backend_auto(args.has_flag("want-cycles"), ds.samples.len())?;
+        println!("auto-selected backend: {chosen}");
+    } else {
+        match backend {
+            Some(BackendKind::Pjrt) if !pipeline.uses_pjrt() => {
+                bail!("--backend pjrt requested but the PJRT runtime is not built (enable the `pjrt` feature)")
+            }
+            Some(kind) if kind != BackendKind::Pjrt => pipeline.select_backend(kind)?,
+            // `--chips N` without an explicit backend implies the cluster.
+            None if chips > 1 => pipeline.select_backend(BackendKind::Cluster)?,
+            _ => {}
+        }
+    }
+    // Only report the cluster geometry when the cluster actually runs.
+    let cluster_note = if pipeline.backend_name() == "cluster" {
+        format!(", {chips} chips [{}]", policy.label())
+    } else {
+        String::new()
+    };
     println!(
-        "running {} frames through the {} backend ({} workers, {} cores)…",
+        "running {} frames through the {} backend ({} workers, batch {}, {} cores{cluster_note})…",
         ds.samples.len(),
         pipeline.backend_name(),
         pipeline.workers,
+        pipeline.batch,
         args.parsed_or("cores", 1usize).max(1)
     );
     let report = pipeline.process_dataset(&ds)?;
@@ -170,6 +195,24 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             lat.core_speedup(),
             lat.core_speedup() / cores as f64 * 100.0
         );
+    }
+    let chips = args.parsed_or("chips", 1usize).max(1);
+    if chips > 1 {
+        println!("cluster of {chips} chips (analytic compute makespan, no interconnect):");
+        for policy in ShardPolicy::all() {
+            let cc = ClusterConfig { chip: cfg.clone(), ..ClusterConfig::single_chip() }
+                .with_chips(chips)
+                .with_policy(policy);
+            let cl = LatencyModel::cluster(&net, &weights, &cc);
+            println!(
+                "  {:<9} frame {} cycles  interval {} cycles  steady-state {:.1} fps",
+                policy.label(),
+                cl.compute_makespan,
+                cl.pipeline_interval(),
+                cfg.clock_hz / cl.pipeline_interval().max(1) as f64
+            );
+        }
+        println!("  (simulated counters + interconnect: `scsnn detect --chips N` or `cargo bench --bench perf_cluster`)");
     }
     println!("fps @ {:.0} MHz: {:.1}", cfg.clock_hz / 1e6, lat.fps(cfg.clock_hz));
     println!(

@@ -1,0 +1,166 @@
+//! Cluster equivalence + lock-step: sharding moves work and traffic,
+//! never arithmetic.
+//!
+//! - `num_chips = 1` must be **bit-identical** to the plain cycle-sim
+//!   backend for every sharding policy — head accumulator, per-layer
+//!   cycles and popcounts.
+//! - All policies must agree with each other on the final detections at
+//!   any chip count.
+//! - The executed cluster counters must be in lock-step with the analytic
+//!   models: compute cycles with `LatencyModel::cluster` (closed form),
+//!   interconnect cycles/energy with the `LinkSpec` constants re-applied
+//!   to the recorded transfer log.
+
+use scsnn::accel::dram::LinkSpec;
+use scsnn::accel::latency::LatencyModel;
+use scsnn::backend::{CycleSimBackend, FrameOptions, SnnBackend};
+use scsnn::cluster::ChipCluster;
+use scsnn::config::{AccelConfig, ClusterConfig, ShardPolicy};
+use scsnn::coordinator::pipeline::DetectionPipeline;
+use scsnn::detect::dataset::Dataset;
+use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::weights::ModelWeights;
+use scsnn::tensor::Tensor;
+use std::sync::Arc;
+
+fn setup(seed: u64) -> (Arc<NetworkSpec>, Arc<ModelWeights>, Tensor<u8>) {
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let mut w = ModelWeights::random(&net, 1.0, seed);
+    w.prune_fine_grained(0.8);
+    let ds = Dataset::synth(1, net.input_w, net.input_h, seed + 1);
+    (Arc::new(net), Arc::new(w), ds.samples[0].image.clone())
+}
+
+fn cluster(
+    net: &Arc<NetworkSpec>,
+    w: &Arc<ModelWeights>,
+    chips: usize,
+    policy: ShardPolicy,
+) -> ChipCluster {
+    let cfg = ClusterConfig::single_chip().with_chips(chips).with_policy(policy);
+    ChipCluster::new(net.clone(), w.clone(), cfg).unwrap()
+}
+
+#[test]
+fn single_chip_cluster_is_bit_identical_to_plain_backend_for_every_policy() {
+    let (net, w, img) = setup(200);
+    let plain = CycleSimBackend::new(net.clone(), w.clone(), AccelConfig::paper()).unwrap();
+    let opts = FrameOptions { collect_stats: true };
+    let want = plain.run_frame(&img, &opts).unwrap();
+    for policy in ShardPolicy::all() {
+        let cl = cluster(&net, &w, 1, policy);
+        let got = cl.run_frame(&img, &opts).unwrap();
+        // BackendFrame PartialEq: head accumulator AND every per-layer
+        // observation (cycles, popcounts, per-core counters).
+        assert_eq!(got, want, "{policy:?}");
+        // The per-chip engines the cluster owns agree too.
+        let chip0 = cl.chips()[0].run_frame(&img, &opts).unwrap();
+        assert_eq!(chip0, want, "{policy:?}: owned chip backend");
+    }
+}
+
+#[test]
+fn all_policies_agree_on_detections_at_any_chip_count() {
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let mut w = ModelWeights::random(&net, 1.0, 210);
+    w.prune_fine_grained(0.8);
+    let ds = Dataset::synth(2, net.input_w, net.input_h, 211);
+    let mut p = DetectionPipeline::from_weights(net, w).unwrap();
+    let mut reference: Option<Vec<_>> = None;
+    for chips in [2usize, 3] {
+        for policy in ShardPolicy::all() {
+            p.set_cluster(chips, policy).unwrap();
+            p.select_backend(scsnn::backend::BackendKind::Cluster).unwrap();
+            let dets: Vec<_> = ds
+                .samples
+                .iter()
+                .map(|s| p.process_frame(&s.image).unwrap().detections)
+                .collect();
+            match &reference {
+                None => reference = Some(dets),
+                Some(want) => {
+                    assert_eq!(&dets, want, "chips={chips} {policy:?}: detections diverged")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn executed_counters_lock_step_with_analytic_models() {
+    let (net, w, img) = setup(220);
+    for chips in [2usize, 3] {
+        for policy in ShardPolicy::all() {
+            let cc = ClusterConfig::single_chip().with_chips(chips).with_policy(policy);
+            let link = LinkSpec::from_cluster(&cc);
+            let analytic = LatencyModel::cluster(&net, &w, &cc);
+            let cl = ChipCluster::new(net.clone(), w.clone(), cc).unwrap();
+            let cf = cl.run_frame_cluster(&img, &FrameOptions::default()).unwrap();
+            let run = &cf.run;
+
+            // Compute side: closed form from weights only.
+            assert_eq!(
+                run.compute_cycles, analytic.compute_makespan,
+                "chips={chips} {policy:?}: compute makespan"
+            );
+            if policy == ShardPolicy::LayerPipeline {
+                // Per-stage busy cycles match the analytic partition.
+                assert_eq!(run.chip_cycles, analytic.stage_cycles, "chips={chips}");
+            }
+
+            // Interconnect side: re-pricing the recorded transfer log with
+            // the same LinkSpec reproduces the executed cost and energy.
+            let repriced_cycles: u64 =
+                run.transfers.iter().map(|t| link.transfer_cycles(t.bits)).sum();
+            assert_eq!(run.transfer_cycles, repriced_cycles, "chips={chips} {policy:?}");
+            let repriced_bits: u64 = run.transfers.iter().map(|t| t.bits).sum();
+            assert_eq!(run.interconnect_bits, repriced_bits, "chips={chips} {policy:?}");
+            assert!(
+                (run.energy.interconnect_mj - link.energy_mj(repriced_bits)).abs() < 1e-12,
+                "chips={chips} {policy:?}: link energy"
+            );
+            assert_eq!(run.makespan, run.compute_cycles + run.transfer_cycles);
+
+            // Per-chip counters are consistent with the log.
+            let sum_in: u64 = run.traffic.iter().map(|t| t.bits_in).sum();
+            let sum_out: u64 = run.traffic.iter().map(|t| t.bits_out).sum();
+            let host_in: u64 =
+                run.transfers.iter().filter(|t| t.src.is_none()).map(|t| t.bits).sum();
+            let host_out: u64 =
+                run.transfers.iter().filter(|t| t.dst.is_none()).map(|t| t.bits).sum();
+            assert_eq!(sum_in + host_out, repriced_bits, "chips={chips} {policy:?}");
+            assert_eq!(sum_out + host_in, repriced_bits, "chips={chips} {policy:?}");
+
+            // Energy attribution: chip split sums to the core energy and
+            // the total adds the interconnect.
+            let chip_sum: f64 = run.energy.chip_energy_mj.iter().sum();
+            assert!(
+                (run.energy.total_mj - (chip_sum + run.energy.interconnect_mj)).abs() < 1e-9,
+                "chips={chips} {policy:?}: energy split"
+            );
+        }
+    }
+}
+
+#[test]
+fn cluster_streams_through_engine_bit_identically() {
+    // The StreamingEngine treats the cluster like any backend: a
+    // workers=4, batch=2 run folds bit-identically to the serial order.
+    use scsnn::coordinator::engine::{EngineConfig, StreamingEngine};
+    let (net, w, _) = setup(230);
+    let ds = Dataset::synth(6, net.input_w, net.input_h, 231);
+    let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+    for policy in [ShardPolicy::LayerPipeline, ShardPolicy::TileSplit] {
+        let be: Arc<dyn SnnBackend> = Arc::new(cluster(&net, &w, 2, policy));
+        let seq = StreamingEngine::new(be.clone(), EngineConfig::default())
+            .run_frames(&images, FrameOptions { collect_stats: true })
+            .unwrap();
+        let par = StreamingEngine::new(
+            be,
+            EngineConfig { workers: 4, queue_depth: 2, batch: 2 },
+        )
+        .run_frames(&images, FrameOptions { collect_stats: true })
+        .unwrap();
+        assert_eq!(seq, par, "{policy:?}");
+    }
+}

@@ -23,15 +23,24 @@ fn setup(seed: u64, frames: usize) -> (Arc<NetworkSpec>, Arc<ModelWeights>, Data
     (Arc::new(net), Arc::new(w), ds)
 }
 
+fn run_with(
+    backend: Arc<dyn SnnBackend>,
+    ds: &Dataset,
+    workers: usize,
+    batch: usize,
+) -> Vec<scsnn::backend::BackendFrame> {
+    let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+    StreamingEngine::new(backend, EngineConfig { workers, queue_depth: 2, batch })
+        .run_frames(&images, FrameOptions { collect_stats: true })
+        .unwrap()
+}
+
 fn run_with_workers(
     backend: Arc<dyn SnnBackend>,
     ds: &Dataset,
     workers: usize,
 ) -> Vec<scsnn::backend::BackendFrame> {
-    let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
-    StreamingEngine::new(backend, EngineConfig { workers, queue_depth: 2 })
-        .run_frames(&images, FrameOptions { collect_stats: true })
-        .unwrap()
+    run_with(backend, ds, workers, 1)
 }
 
 #[test]
@@ -64,6 +73,25 @@ fn cyclesim_backend_workers4_bit_identical_to_workers1() {
         for obs in f.layers.values() {
             assert_eq!(obs.core_cycles.len(), 2);
             assert_eq!(obs.cycles, *obs.core_cycles.iter().max().unwrap());
+        }
+    }
+}
+
+#[test]
+fn workers_x_batch_grid_bit_identical_to_serial() {
+    // Request batching groups consecutive frames per work item; no
+    // workers × batch shape may change a single bit — including a batch
+    // that does not divide the frame count.
+    let (net, w, ds) = setup(75, 5);
+    let be: Arc<dyn SnnBackend> = Arc::new(
+        GoldenBackend::new(net, w, ForwardOptions { block_tile: None, record_spikes: false })
+            .unwrap(),
+    );
+    let serial = run_with(be.clone(), &ds, 1, 1);
+    for workers in [1usize, 2, 4] {
+        for batch in [2usize, 3, 8] {
+            let got = run_with(be.clone(), &ds, workers, batch);
+            assert_eq!(serial, got, "workers={workers} batch={batch}");
         }
     }
 }
