@@ -1,0 +1,103 @@
+//! Pipelined cluster sweep: `in_flight` × chips on a short tiny-scale
+//! frame stream, recorded to `BENCH_pipeline.json`.
+//!
+//! For every combination the bench reports the executed steady-state
+//! initiation interval next to the analytic
+//! `pipeline_interval_bounded(in_flight)`, the implied steady fps, the
+//! run makespan and the interconnect traffic. Two cross-checks run
+//! inline, mirroring `tests/pipelined_cluster.rs`:
+//!
+//! - the measured interval equals the analytic one within fill/drain +
+//!   transfer slack;
+//! - the pipelined outputs are bit-identical to the serial frame order.
+
+use scsnn::accel::latency::LatencyModel;
+use scsnn::backend::{BackendFrame, FrameOptions, SnnBackend};
+use scsnn::cluster::ChipCluster;
+use scsnn::config::{ClusterConfig, ShardPolicy};
+use scsnn::detect::dataset::Dataset;
+use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::weights::ModelWeights;
+use scsnn::tensor::Tensor;
+use scsnn::util::json::Json;
+use scsnn::util::BenchRunner;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn main() {
+    let r = BenchRunner::new("perf_pipeline");
+    let net = Arc::new(NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER));
+    let mut w = ModelWeights::random(&net, 1.0, 140);
+    w.prune_fine_grained(0.8);
+    let w = Arc::new(w);
+    let frames = 8usize;
+    let ds = Dataset::synth(frames, net.input_w, net.input_h, 141);
+    let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+    let clock = ClusterConfig::single_chip().chip.clock_hz;
+    let opts = FrameOptions::default();
+
+    let mut rows: Vec<Json> = Vec::new();
+    r.section("LayerPipeline: in-flight × chips (executed vs analytic interval)");
+    for chips in [1usize, 2, 4] {
+        let cc = ClusterConfig::single_chip()
+            .with_chips(chips)
+            .with_policy(ShardPolicy::LayerPipeline);
+        let analytic = LatencyModel::cluster(&net, &w, &cc);
+        let cluster = ChipCluster::new(net.clone(), w.clone(), cc).unwrap();
+        let serial: Vec<BackendFrame> =
+            images.iter().map(|i| cluster.run_frame(i, &opts).unwrap()).collect();
+        for in_flight in [1usize, 2, 4] {
+            let pr = cluster.run_pipelined(&images, &opts, in_flight).unwrap();
+
+            // Inline lock-step: executed interval vs closed form, and
+            // bit-identity with the serial frame order.
+            assert_eq!(pr.frames, serial, "chips={chips} in_flight={in_flight}");
+            let want = analytic.pipeline_interval_bounded(in_flight);
+            let measured = pr.measured_interval();
+            let slack = pr.transfer_slack() as f64 + 1.0;
+            assert!(
+                (measured - want as f64).abs() <= slack,
+                "chips={chips} in_flight={in_flight}: measured {measured:.0} vs analytic {want} (slack {slack:.0})"
+            );
+
+            let steady = pr.steady_fps(clock);
+            r.report_row(&format!(
+                "chips {chips} | in-flight {in_flight} | interval {measured:>9.0} cycles (analytic {want:>9}) | steady {steady:>7.2} fps | makespan {:>11} | link {:>7.4} MB",
+                pr.makespan,
+                pr.interconnect_bits as f64 / 8.0 / 1e6,
+            ));
+            let mut row = BTreeMap::new();
+            row.insert("chips".to_string(), Json::Num(chips as f64));
+            row.insert("in_flight".to_string(), Json::Num(in_flight as f64));
+            row.insert("frames".to_string(), Json::Num(frames as f64));
+            row.insert("measured_interval".to_string(), Json::Num(measured));
+            row.insert("analytic_interval".to_string(), Json::Num(want as f64));
+            row.insert("steady_fps".to_string(), Json::Num(steady));
+            row.insert("makespan_cycles".to_string(), Json::Num(pr.makespan as f64));
+            row.insert(
+                "interconnect_mb".to_string(),
+                Json::Num(pr.interconnect_bits as f64 / 8.0 / 1e6),
+            );
+            row.insert(
+                "chip_busy_cycles".to_string(),
+                Json::Arr(pr.chip_busy_cycles.iter().map(|&c| Json::Num(c as f64)).collect()),
+            );
+            rows.push(Json::Obj(row));
+        }
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("perf_pipeline".to_string()));
+    doc.insert(
+        "workload".to_string(),
+        Json::Str(format!(
+            "{frames} synthetic tiny frames, 80% pruned weights, default link, LayerPipeline"
+        )),
+    );
+    doc.insert("sweep".to_string(), Json::Arr(rows));
+    let json_path = "BENCH_pipeline.json";
+    match std::fs::write(json_path, Json::Obj(doc).to_string_compact()) {
+        Ok(()) => r.report_row(&format!("wrote {json_path}")),
+        Err(e) => r.report_row(&format!("could not write {json_path}: {e}")),
+    }
+}

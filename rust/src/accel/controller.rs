@@ -33,6 +33,12 @@
 //! cores) as `cycles`. A single core reproduces the original counts
 //! exactly, and the makespan stays in lock-step with the extended
 //! analytic [`super::latency::LatencyModel`].
+//!
+//! The controller executes exactly **one layer** per call; whole-network
+//! execution (input wiring, concat, head handling) is the job of the one
+//! shared walk in [`crate::exec::LayerWalk`] — every backend and the
+//! multi-chip cluster drive `run_layer_prepared` through it rather than
+//! hand-rolling their own layer loop.
 
 use super::lif_unit::LifUnit;
 use super::one_to_all::GatedOneToAll;

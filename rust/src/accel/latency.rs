@@ -249,6 +249,20 @@ impl ClusterLatency {
             _ => self.stage_cycles.iter().copied().max().unwrap_or(0),
         }
     }
+
+    /// Steady-state initiation interval achievable with at most
+    /// `in_flight` frames resident: the unbounded interval
+    /// ([`Self::pipeline_interval`]), floored by the residency window — a
+    /// window of W frames cannot start frames faster than one per
+    /// `compute_makespan / W` cycles, whatever the stage balance. At
+    /// `in_flight = 1` this is the serial frame makespan; it converges to
+    /// [`Self::pipeline_interval`] once the window covers the pipeline
+    /// depth. The executing `ChipCluster::run_pipelined` must realize
+    /// this interval within fill/drain + transfer slack (asserted in
+    /// `tests/pipelined_cluster.rs` and `benches/perf_pipeline.rs`).
+    pub fn pipeline_interval_bounded(&self, in_flight: usize) -> u64 {
+        self.pipeline_interval().max(self.compute_makespan.div_ceil(in_flight.max(1) as u64))
+    }
 }
 
 /// Partition `costs` (one entry per layer, execution order) into
@@ -493,6 +507,29 @@ mod tests {
         for p in ShardPolicy::all() {
             let one = LatencyModel::cluster(&net, &mw, &ClusterConfig::single_chip().with_policy(p));
             assert_eq!(one.compute_makespan, single.sparse_makespan(), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn bounded_interval_interpolates_serial_to_steady() {
+        use crate::config::{ClusterConfig, ShardPolicy};
+        let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+        let mut mw = ModelWeights::random(&net, 1.0, 23);
+        mw.prune_fine_grained(0.8);
+        for policy in ShardPolicy::all() {
+            let cc = ClusterConfig::single_chip().with_chips(3).with_policy(policy);
+            let cl = LatencyModel::cluster(&net, &mw, &cc);
+            // One frame in flight = strictly serial: the frame makespan.
+            assert_eq!(cl.pipeline_interval_bounded(1), cl.compute_makespan, "{policy:?}");
+            // A deep window converges to the unbounded steady state.
+            assert_eq!(cl.pipeline_interval_bounded(64), cl.pipeline_interval(), "{policy:?}");
+            // Monotone non-increasing in the window size.
+            let mut prev = u64::MAX;
+            for w in 1..=8 {
+                let i = cl.pipeline_interval_bounded(w);
+                assert!(i <= prev, "{policy:?} w={w}: {i} > {prev}");
+                prev = i;
+            }
         }
     }
 

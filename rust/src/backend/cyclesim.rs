@@ -1,22 +1,28 @@
 //! Cycle-simulator backend: the whole network executed layer by layer on
-//! the cycle-level [`SystemController`], compressed spike maps threaded
+//! the cycle-level `SystemController`, compressed spike maps threaded
 //! between layers (CSP shortcut/concat wiring included). Bit-exact
 //! against the golden model run with the hardware block tile, and the
 //! only backend that reports cycle counts — per layer and per simulated
 //! core (`AccelConfig::num_cores`).
 //!
+//! The layer walk itself lives in [`crate::exec`]: `run_frame` is a thin
+//! [`LayerWalk`] instantiation over [`NopHooks`] (one controller, no
+//! routing), the same driver the multi-chip cluster runs with its shard
+//! hooks — so the bit-exactness between the two paths is structural, not
+//! test-enforced.
+//!
 //! The per-`(k, c)` bit-mask weight planes are compressed **once** at
 //! construction and shared across frames and worker threads behind an
 //! `Arc` — the serving path never re-compresses weights per frame.
 
-use super::{BackendCaps, BackendFrame, FrameOptions, LayerObservation, SnnBackend};
-use crate::accel::controller::{LayerInput, SystemController};
+use super::{BackendCaps, BackendFrame, FrameOptions, SnnBackend};
 use crate::config::AccelConfig;
-use crate::model::topology::{ConvKind, NetworkSpec};
+use crate::exec::{LayerWalk, NopHooks};
+use crate::model::topology::NetworkSpec;
 use crate::model::weights::ModelWeights;
-use crate::sparse::{bitmask::compress_kernel4, BitMaskKernel, SpikeMap};
+use crate::sparse::{bitmask::compress_kernel4, BitMaskKernel};
 use crate::tensor::Tensor;
-use anyhow::{anyhow, Context, Result};
+use anyhow::Result;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -82,85 +88,10 @@ impl SnnBackend for CycleSimBackend {
     }
 
     fn run_frame(&self, image: &Tensor<u8>, opts: &FrameOptions) -> Result<BackendFrame> {
-        let mut ctrl = SystemController::new(self.cfg.clone());
-        // Per-layer compressed outputs, keyed by name (kept for the CSP
-        // concat wiring; the tiny serving geometry makes this cheap).
-        let mut outputs: BTreeMap<String, Vec<SpikeMap>> = BTreeMap::new();
-        let mut prev: Option<String> = None;
-        let mut head: Option<Tensor<i32>> = None;
-        let mut layers: BTreeMap<String, LayerObservation> = BTreeMap::new();
-
-        for l in &self.net.layers {
-            let lw = self.weights.get(&l.name).expect("validated");
-            let planes = self.planes.get(&l.name).expect("compressed at construction");
-            // The head accumulates its membrane over in_t steps even
-            // though the spec says it emits one averaged output step.
-            let mut spec = l.clone();
-            if l.kind == ConvKind::Output {
-                spec.out_t = l.in_t;
-            }
-            let (run, input_sparsity) = if l.kind == ConvKind::Encoding {
-                // Every encoding step replays the same static frame; only
-                // clone when the layer really takes multiple steps.
-                let run = if l.in_t == 1 {
-                    ctrl.run_layer_prepared(
-                        &spec,
-                        lw,
-                        planes,
-                        LayerInput::Pixels(std::slice::from_ref(image)),
-                    )
-                } else {
-                    let frames = vec![image.clone(); l.in_t];
-                    ctrl.run_layer_prepared(&spec, lw, planes, LayerInput::Pixels(&frames))
-                }
-                .with_context(|| format!("simulating layer {}", l.name))?;
-                (run, image.sparsity())
-            } else {
-                let main = l
-                    .input_from
-                    .clone()
-                    .or_else(|| prev.clone())
-                    .ok_or_else(|| anyhow!("layer {} has no predecessor", l.name))?;
-                let main_steps = outputs
-                    .get(&main)
-                    .ok_or_else(|| anyhow!("layer {}: missing output of {main}", l.name))?;
-                let inputs: Vec<SpikeMap> = match l.concat_with.as_deref() {
-                    None => main_steps.clone(),
-                    Some(o) => {
-                        let os = outputs
-                            .get(o)
-                            .ok_or_else(|| anyhow!("layer {}: missing output of {o}", l.name))?;
-                        main_steps.iter().zip(os).map(|(a, b)| a.concat(b)).collect()
-                    }
-                };
-                let sparsity =
-                    inputs.iter().map(|m| m.sparsity()).sum::<f64>() / inputs.len().max(1) as f64;
-                let run = ctrl
-                    .run_layer_prepared(&spec, lw, planes, LayerInput::Spikes(&inputs))
-                    .with_context(|| format!("simulating layer {}", l.name))?;
-                (run, sparsity)
-            };
-            if opts.collect_stats {
-                layers.insert(
-                    l.name.clone(),
-                    LayerObservation {
-                        input_sparsity,
-                        spikes_out: run.spikes_out,
-                        cycles: run.cycles,
-                        dense_cycles: run.dense_cycles,
-                        core_cycles: run.core_cycles.clone(),
-                    },
-                );
-            }
-            if l.kind == ConvKind::Output {
-                head = run.head_acc;
-            } else {
-                outputs.insert(l.name.clone(), run.output);
-            }
-            prev = Some(l.name.clone());
-        }
-        let head_acc = head.ok_or_else(|| anyhow!("network has no output layer"))?;
-        Ok(BackendFrame { head_acc, layers })
+        // The whole dataflow lives in the shared walk; this backend is
+        // its trivial instantiation (one controller, nothing routed).
+        let mut hooks = NopHooks::new(self.cfg.clone());
+        LayerWalk::new(&self.net, &self.weights, &self.planes).run(image, opts, &mut hooks)
     }
 }
 

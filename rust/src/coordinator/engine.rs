@@ -1,5 +1,6 @@
 //! Backend-agnostic streaming engine: a bounded frame queue, a worker
-//! pool, and **in-order** result folding.
+//! pool that **grows and shrinks with the backlog**, and in-order result
+//! folding.
 //!
 //! The engine schedules frames onto any [`SnnBackend`]; it knows nothing
 //! about what a frame computes. Work items enter a bounded channel,
@@ -16,21 +17,49 @@
 //! batching never reorders the fold, so `workers × batch` runs stay
 //! bit-identical to the serial order.
 //!
+//! **Dynamic worker scaling** ([`StreamingEngine::with_max_workers`]):
+//! `EngineConfig::workers` is the pool floor; when a ceiling above it is
+//! configured (`--workers min..max` on the CLI), the coordinator grows
+//! the pool one worker at a time when it waited [`GROW_PATIENCE`] without
+//! a result while more jobs were outstanding than the pool could be
+//! running (genuine backlog — a lone straggler or the drain phase never
+//! grows it), and workers above the floor retire after sitting idle for
+//! [`SHRINK_IDLE`]. Scaling is invisible to results: the reorder buffer
+//! already makes any pool size fold identically
+//! (`tests/engine_determinism.rs`).
+//!
 //! Backends that are not thread-safe ([`BackendCaps::parallel`] == false,
 //! e.g. PJRT) degrade transparently to sequential execution on the
 //! coordinator thread.
+//!
+//! [`BackendCaps::parallel`]: crate::backend::BackendCaps
 
 use crate::backend::{BackendFrame, FrameOptions, SnnBackend};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// How long the coordinator tolerates result starvation (with work
+/// outstanding) before growing the pool by one worker.
+pub const GROW_PATIENCE: Duration = Duration::from_millis(2);
+
+/// How long a worker above the pool floor sits idle before retiring.
+pub const SHRINK_IDLE: Duration = Duration::from_millis(5);
+
 /// Scheduling parameters.
+///
+/// Kept to exactly these three fields (struct literals are part of the
+/// public API surface); the dynamic-scaling ceiling lives on the engine
+/// itself — see [`StreamingEngine::with_max_workers`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct EngineConfig {
-    /// Worker threads (1 = sequential on the coordinator thread).
+    /// Worker threads (1 = sequential on the coordinator thread). With a
+    /// scaling ceiling configured this is the pool **floor** and the
+    /// initial size.
     pub workers: usize,
     /// Bounded frame-queue depth (back-pressure window).
     pub queue_depth: usize,
@@ -53,12 +82,33 @@ impl Default for EngineConfig {
 pub struct StreamingEngine {
     backend: Arc<dyn SnnBackend>,
     cfg: EngineConfig,
+    /// Dynamic-scaling ceiling; `<= cfg.workers` (the default 0) means a
+    /// fixed pool of `cfg.workers`.
+    max_workers: usize,
+    /// Largest pool size observed during the most recent run.
+    peak_workers: AtomicUsize,
+    /// Idle-shrink retirements during the most recent run.
+    shrink_events: AtomicUsize,
 }
 
 impl StreamingEngine {
-    /// New engine over a shared backend.
+    /// New engine over a shared backend with a fixed worker pool.
     pub fn new(backend: Arc<dyn SnnBackend>, cfg: EngineConfig) -> StreamingEngine {
-        StreamingEngine { backend, cfg }
+        StreamingEngine {
+            backend,
+            cfg,
+            max_workers: 0,
+            peak_workers: AtomicUsize::new(0),
+            shrink_events: AtomicUsize::new(0),
+        }
+    }
+
+    /// Enable dynamic scaling: the pool floats between
+    /// `cfg.workers` (floor) and `max` (ceiling) driven by the bounded
+    /// queue's backlog. `max <= cfg.workers` keeps the pool fixed.
+    pub fn with_max_workers(mut self, max: usize) -> StreamingEngine {
+        self.max_workers = max;
+        self
     }
 
     /// The backend this engine drives.
@@ -66,8 +116,9 @@ impl StreamingEngine {
         &*self.backend
     }
 
-    /// Effective worker count for `n` frames: capped by the frame count,
-    /// and forced to 1 when the backend cannot run concurrently.
+    /// Effective worker-pool **floor** for `n` frames: capped by the
+    /// frame count, and forced to 1 when the backend cannot run
+    /// concurrently.
     pub fn effective_workers(&self, n: usize) -> usize {
         let w = self.cfg.workers.max(1).min(n.max(1));
         if self.backend.caps().parallel {
@@ -75,6 +126,30 @@ impl StreamingEngine {
         } else {
             1
         }
+    }
+
+    /// Pool bounds `(floor, ceiling)` for `n` frames. The ceiling equals
+    /// the floor unless dynamic scaling is enabled, and is likewise
+    /// capped by the frame count and the backend's parallel capability.
+    pub fn worker_bounds(&self, n: usize) -> (usize, usize) {
+        let floor = self.effective_workers(n);
+        let ceiling = if self.backend.caps().parallel {
+            self.max_workers.max(floor).min(n.max(1))
+        } else {
+            floor
+        };
+        (floor, ceiling)
+    }
+
+    /// Largest pool size the most recent `stream_*` run reached (1 for
+    /// sequential runs).
+    pub fn peak_workers(&self) -> usize {
+        self.peak_workers.load(Ordering::Relaxed)
+    }
+
+    /// Workers retired by idle-shrink during the most recent run.
+    pub fn shrink_events(&self) -> usize {
+        self.shrink_events.load(Ordering::Relaxed)
     }
 
     /// The scheduling core: run `work(i)` for every `i in 0..n` on the
@@ -88,8 +163,10 @@ impl StreamingEngine {
         W: Fn(usize) -> Result<T> + Sync,
         F: FnMut(usize, T, Duration) -> Result<()>,
     {
-        let workers = self.effective_workers(n);
-        if workers <= 1 {
+        let (floor, ceiling) = self.worker_bounds(n);
+        self.shrink_events.store(0, Ordering::Relaxed);
+        if ceiling <= 1 {
+            self.peak_workers.store(1, Ordering::Relaxed);
             for i in 0..n {
                 let t0 = Instant::now();
                 let out = work(i)?;
@@ -97,26 +174,66 @@ impl StreamingEngine {
             }
             return Ok(());
         }
+        self.peak_workers.store(floor, Ordering::Relaxed);
 
-        let (job_tx, job_rx) = mpsc::sync_channel::<usize>(self.cfg.queue_depth.max(workers));
+        let (job_tx, job_rx) = mpsc::sync_channel::<usize>(self.cfg.queue_depth.max(ceiling));
         let job_rx = Mutex::new(job_rx);
         // Results are unbounded so workers never block on delivery — the
         // bounded job queue is the only back-pressure point, which keeps
         // the pool deadlock-free by construction.
         let (res_tx, res_rx) = mpsc::channel::<(usize, Result<T>, Duration)>();
+        // Pool-size target: workers with `id >= target` park without
+        // taking jobs. The coordinator raises it under backlog; the
+        // topmost active worker lowers it after idling.
+        let target = AtomicUsize::new(floor);
+        let done = AtomicBool::new(false);
 
         std::thread::scope(|s| -> Result<()> {
-            for _ in 0..workers {
+            for id in 0..ceiling {
                 let job_rx = &job_rx;
                 let res_tx = res_tx.clone();
                 let work = &work;
+                let target = &target;
+                let done = &done;
+                let shrinks = &self.shrink_events;
                 s.spawn(move || loop {
+                    // Parked above the current pool size: wait for a grow
+                    // decision (or the end of the run) without competing
+                    // for jobs. A 1ms poll keeps parked threads nearly
+                    // free; growth latency is dominated by GROW_PATIENCE
+                    // anyway.
+                    if id >= target.load(Ordering::Relaxed) {
+                        if done.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                        continue;
+                    }
                     // Take the next frame; stop when the feeder hung up.
                     let idx = {
                         let rx = job_rx.lock().expect("job queue lock");
-                        match rx.recv() {
+                        match rx.recv_timeout(SHRINK_IDLE) {
                             Ok(i) => i,
-                            Err(_) => break,
+                            Err(RecvTimeoutError::Timeout) => {
+                                // Idle: the topmost active worker retires
+                                // while the pool sits above its floor.
+                                let t = target.load(Ordering::Relaxed);
+                                if t > floor
+                                    && id + 1 == t
+                                    && target
+                                        .compare_exchange(
+                                            t,
+                                            t - 1,
+                                            Ordering::Relaxed,
+                                            Ordering::Relaxed,
+                                        )
+                                        .is_ok()
+                                {
+                                    shrinks.fetch_add(1, Ordering::Relaxed);
+                                }
+                                continue;
+                            }
+                            Err(RecvTimeoutError::Disconnected) => break,
                         }
                     };
                     let t0 = Instant::now();
@@ -132,28 +249,58 @@ impl StreamingEngine {
             // feeder never runs more than `window` frames ahead of the
             // fold cursor, so the reorder buffer (and the result channel)
             // stay bounded even when one straggler frame blocks folding.
-            let window = self.cfg.queue_depth.max(workers);
+            let window = self.cfg.queue_depth.max(ceiling);
             let mut pending: BTreeMap<usize, (Result<T>, Duration)> = BTreeMap::new();
             let mut next = 0usize;
             let mut sent = 0usize;
-            while next < n {
-                while sent < n && sent - next < window {
-                    job_tx.send(sent).map_err(|_| anyhow!("worker pool exited early"))?;
-                    sent += 1;
-                }
-                let (i, res, wall) =
-                    res_rx.recv().map_err(|_| anyhow!("worker pool exited early"))?;
-                pending.insert(i, (res, wall));
-                while let Ok((i, res, wall)) = res_rx.try_recv() {
+            let mut feed_and_fold = || -> Result<()> {
+                while next < n {
+                    while sent < n && sent - next < window {
+                        job_tx.send(sent).map_err(|_| anyhow!("worker pool exited early"))?;
+                        sent += 1;
+                    }
+                    let (i, res, wall) = loop {
+                        match res_rx.recv_timeout(GROW_PATIENCE) {
+                            Ok(r) => break r,
+                            Err(RecvTimeoutError::Timeout) => {
+                                // Starved while more jobs are outstanding
+                                // than the pool could even be running —
+                                // genuine backlog, grow toward the cap.
+                                // (A lone straggler or the drain phase has
+                                // outstanding <= target and never grows.)
+                                let outstanding = sent - next - pending.len();
+                                if outstanding > target.load(Ordering::Relaxed) {
+                                    if let Ok(t) = target.fetch_update(
+                                        Ordering::Relaxed,
+                                        Ordering::Relaxed,
+                                        |t| (t < ceiling).then_some(t + 1),
+                                    ) {
+                                        self.peak_workers.fetch_max(t + 1, Ordering::Relaxed);
+                                    }
+                                }
+                            }
+                            Err(RecvTimeoutError::Disconnected) => {
+                                return Err(anyhow!("worker pool exited early"));
+                            }
+                        }
+                    };
                     pending.insert(i, (res, wall));
+                    while let Ok((i, res, wall)) = res_rx.try_recv() {
+                        pending.insert(i, (res, wall));
+                    }
+                    while let Some((res, wall)) = pending.remove(&next) {
+                        fold(next, res?, wall)?;
+                        next += 1;
+                    }
                 }
-                while let Some((res, wall)) = pending.remove(&next) {
-                    fold(next, res?, wall)?;
-                    next += 1;
-                }
-            }
+                Ok(())
+            };
+            let result = feed_and_fold();
+            // Wake parked workers so the scope can join, success or not
+            // (closing the job queue stops the active ones).
+            done.store(true, Ordering::Relaxed);
             drop(job_tx);
-            Ok(())
+            result
         })
     }
 
@@ -336,13 +483,16 @@ mod tests {
         let engine = StreamingEngine::new(
             Arc::new(MockBackend { parallel: false }),
             EngineConfig { workers: 8, queue_depth: 4, batch: 1 },
-        );
+        )
+        .with_max_workers(16);
         assert_eq!(engine.effective_workers(100), 1);
+        assert_eq!(engine.worker_bounds(100), (1, 1));
         let imgs = frames(&[2, 4]);
         let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
         let out = engine.run_frames(&refs, FrameOptions::default()).unwrap();
         assert_eq!(out.len(), 2);
         assert_eq!(out[1].head_acc.data[0], 8);
+        assert_eq!(engine.peak_workers(), 1);
     }
 
     #[test]
@@ -423,5 +573,82 @@ mod tests {
         );
         let out = engine.run_frames(&[], FrameOptions::default()).unwrap();
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn dynamic_pool_grows_under_backlog_and_stays_bit_identical() {
+        // Slow frames (tag 0 → 24 ms each) keep the bounded queue full:
+        // the pool must grow past its floor of 1, and the fold must stay
+        // bit-identical to the fixed single-worker run.
+        let imgs = frames(&[0, 0, 0, 0, 0, 0, 0, 0]);
+        let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+        let be = Arc::new(MockBackend { parallel: true });
+        let fixed = StreamingEngine::new(be.clone(), EngineConfig::default())
+            .run_frames(&refs, FrameOptions::default())
+            .unwrap();
+        let engine = StreamingEngine::new(
+            be,
+            EngineConfig { workers: 1, queue_depth: 4, batch: 1 },
+        )
+        .with_max_workers(4);
+        assert_eq!(engine.worker_bounds(refs.len()), (1, 4));
+        let got = engine.run_frames(&refs, FrameOptions::default()).unwrap();
+        assert_eq!(fixed, got, "scaling must not change a single bit");
+        assert!(
+            engine.peak_workers() > 1,
+            "sustained backlog must grow the pool (peak={})",
+            engine.peak_workers()
+        );
+    }
+
+    #[test]
+    fn instant_work_never_grows_the_pool() {
+        // Tag 8 → zero sleep: results flow faster than GROW_PATIENCE, so
+        // the coordinator never starves and the pool stays at its floor.
+        let imgs = frames(&[8; 12]);
+        let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+        let engine = StreamingEngine::new(
+            Arc::new(MockBackend { parallel: true }),
+            EngineConfig { workers: 2, queue_depth: 4, batch: 1 },
+        )
+        .with_max_workers(8);
+        let out = engine.run_frames(&refs, FrameOptions::default()).unwrap();
+        assert_eq!(out.len(), 12);
+        // Tolerate a stray scheduler hiccup, but the pool must stay far
+        // from the ceiling when results flow instantly.
+        let peak = engine.peak_workers();
+        assert!(peak <= 4, "no backlog → no growth (peak={peak})");
+    }
+
+    #[test]
+    fn idle_workers_shrink_back_toward_the_floor() {
+        // Slow frames grow the pool; a slow fold then stalls intake long
+        // enough (> SHRINK_IDLE) for grown workers to retire.
+        let imgs = frames(&[0, 0, 0, 0, 0, 0]);
+        let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+        let engine = StreamingEngine::new(
+            Arc::new(MockBackend { parallel: true }),
+            EngineConfig { workers: 1, queue_depth: 2, batch: 1 },
+        )
+        .with_max_workers(4);
+        let mut seen = Vec::new();
+        engine
+            .stream_ordered(
+                refs.len(),
+                |i| engine.backend().run_frame(refs[i], &FrameOptions::default()),
+                |i, _, _| {
+                    seen.push(i);
+                    std::thread::sleep(Duration::from_millis(25));
+                    Ok(())
+                },
+            )
+            .unwrap();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+        assert!(engine.peak_workers() > 1, "peak={}", engine.peak_workers());
+        assert!(
+            engine.shrink_events() > 0,
+            "idle workers above the floor must retire (peak={})",
+            engine.peak_workers()
+        );
     }
 }

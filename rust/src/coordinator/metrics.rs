@@ -149,8 +149,12 @@ pub struct PipelineMetrics {
     pub hw: Option<FrameHwEstimate>,
     /// Backend that produced the run (`golden`, `cyclesim`, `pjrt`).
     pub backend: Option<String>,
-    /// Worker threads the streaming engine ran with (0 = not recorded).
+    /// Worker threads the streaming engine started with — the pool floor
+    /// under dynamic scaling (0 = not recorded).
     pub workers: usize,
+    /// Largest worker-pool size the run reached (equals `workers` for a
+    /// fixed pool; 0 = not recorded).
+    pub peak_workers: usize,
 }
 
 impl PipelineMetrics {
@@ -209,6 +213,9 @@ impl PipelineMetrics {
         }
         if self.workers > 0 {
             m.insert("workers".into(), Json::Num(self.workers as f64));
+        }
+        if self.peak_workers > 0 {
+            m.insert("peak_workers".into(), Json::Num(self.peak_workers as f64));
         }
         if let Some(hw) = &self.hw {
             let mut h = BTreeMap::new();

@@ -95,8 +95,15 @@ pub struct DetectionPipeline {
     energy: EnergyModel,
     /// Hardware estimation cadence.
     pub hw_mode: HwStatsMode,
-    /// Worker threads for the streaming engine (1 = sequential).
+    /// Worker threads for the streaming engine (1 = sequential). Under
+    /// dynamic scaling ([`Self::max_workers`]) this is the pool floor.
     pub workers: usize,
+    /// Dynamic-scaling ceiling for the worker pool (`--workers min..max`
+    /// on the CLI); 0 or `<= workers` keeps the pool fixed at
+    /// [`Self::workers`]. The engine grows toward the ceiling while the
+    /// bounded queue stays full and retires idle workers back to the
+    /// floor — bit-identical results either way (reorder-buffer folding).
+    pub max_workers: usize,
     /// Bounded frame-queue depth (engine back-pressure window).
     pub queue_depth: usize,
     /// Frames per engine work item (request batching; 1 = unbatched).
@@ -169,6 +176,7 @@ impl DetectionPipeline {
             energy: EnergyModel::default(),
             hw_mode: HwStatsMode::Once,
             workers: 1,
+            max_workers: 0,
             queue_depth: 8,
             batch: 1,
             cluster: ClusterConfig::single_chip(),
@@ -299,6 +307,7 @@ impl DetectionPipeline {
                 batch: self.batch,
             },
         )
+        .with_max_workers(self.max_workers)
     }
 
     /// Head accumulator of one frame on the active backend.
@@ -399,13 +408,14 @@ impl DetectionPipeline {
     /// stream through the worker pool; metrics and detections are folded
     /// in frame order (deterministic for any worker count).
     pub fn process_dataset(&self, ds: &Dataset) -> Result<PipelineReport> {
+        let engine = self.engine();
         let mut metrics = PipelineMetrics::for_run(
             self.backend.name(),
-            self.engine().effective_workers(ds.samples.len()),
+            engine.effective_workers(ds.samples.len()),
         );
         let mut dets: Vec<(usize, Box2D)> = Vec::new();
         let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
-        self.engine().stream_batched(
+        engine.stream_batched(
             images.len(),
             |i| Ok(self.detect_frame(images[i])?.0),
             |i, frame_dets, wall| {
@@ -422,6 +432,7 @@ impl DetectionPipeline {
                 Ok(())
             },
         )?;
+        metrics.peak_workers = engine.peak_workers();
         let gts = ds.ground_truth();
         let summary = mean_ap(&dets, &gts, NUM_CLASSES, 0.5);
         Ok(PipelineReport { metrics, map: summary.mean, ap: summary.ap })
@@ -546,6 +557,26 @@ mod tests {
         }
         let rep = p.process_dataset(&ds).unwrap();
         assert_eq!(rep.metrics.frames, 5);
+    }
+
+    #[test]
+    fn dynamic_worker_bounds_plumb_through_and_stay_bit_identical() {
+        let mut p = synthetic_pipeline();
+        let ds = Dataset::synth(4, p.net.input_w, p.net.input_h, 21);
+        let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+        let seq = p.process_frames(&images).unwrap();
+        p.workers = 1;
+        p.max_workers = 4;
+        assert_eq!(p.engine().worker_bounds(images.len()), (1, 4));
+        let dynamic = p.process_frames(&images).unwrap();
+        for (a, b) in seq.iter().zip(&dynamic) {
+            assert_eq!(a.detections, b.detections);
+            assert_eq!(a.head.data, b.head.data);
+        }
+        // The dataset report records how far the pool actually grew.
+        let rep = p.process_dataset(&ds).unwrap();
+        assert!(rep.metrics.peak_workers >= 1);
+        assert!(rep.metrics.peak_workers <= 4);
     }
 
     #[test]

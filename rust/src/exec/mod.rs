@@ -1,0 +1,390 @@
+//! The **one** cycle-level layer walk behind every execution path.
+//!
+//! Before this module existed the repo carried two hand-synchronized
+//! copies of the frame dataflow — `CycleSimBackend::run_frame` and the
+//! cluster's `run_sharded` — each re-implementing the head `out_t`
+//! override, the encoding-frame replay, the CSP concat wiring and the
+//! compressed spike-plane routing, pinned together only by equivalence
+//! tests. [`LayerWalk`] extracts that walk once; per-execution-context
+//! behavior (single chip, per-chip layer shard, pipeline-stage handoff)
+//! is a [`WalkHooks`] implementation instead of a forked loop, so the
+//! bit-exactness between execution paths is now **structural**:
+//!
+//! ```text
+//!                 ┌──────────────── LayerWalk ────────────────┐
+//!  image ───────▶ │ for each layer:                           │
+//!                 │   on_layer_start(li)                      │
+//!                 │   resolve inputs (prev / input_from,      │
+//!                 │                   concat_with, replay)    │
+//!                 │   route_input(li, RoutedInput)  ──────────┼──▶ interconnect
+//!                 │   controller(li).run_layer_prepared(...)  │    transfers,
+//!                 │   on_layer_output(li, LayerRun) ──────────┼──▶ chip/cycle
+//!                 │   stash spike planes / head accumulator   │    attribution
+//!                 └───────────────────────────────────────────┘
+//!                                  │
+//!                                  ▼
+//!                      BackendFrame (head + observations)
+//! ```
+//!
+//! - [`NopHooks`] — a bare [`SystemController`]: exactly the plain
+//!   single-chip cycle simulator ([`crate::backend::CycleSimBackend`]).
+//! - The cluster's shard hooks (see `crate::cluster`) — pick a per-chip
+//!   controller per layer, record interconnect transfers in
+//!   `route_input`, attribute busy cycles in `on_layer_output`.
+//!
+//! The walk is **resumable**: [`WalkState`] carries the inter-layer
+//! spike planes, so a caller can execute an arbitrary subset of layers
+//! per call ([`LayerWalk::run_layers`]). That is the seam the pipelined
+//! cluster executor uses to keep several frames resident at different
+//! pipeline stages (`ChipCluster::run_pipelined`).
+
+use crate::accel::controller::{LayerInput, LayerRun, SystemController};
+use crate::backend::{BackendFrame, FrameOptions, LayerObservation};
+use crate::config::AccelConfig;
+use crate::model::topology::{ConvKind, ConvSpec, NetworkSpec};
+use crate::model::weights::ModelWeights;
+use crate::sparse::{BitMaskKernel, SpikeMap};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+
+/// One layer's resolved stimulus, handed to [`WalkHooks::route_input`]
+/// before the layer executes — everything a hook needs to price the data
+/// movement that feeds the layer.
+pub enum RoutedInput<'i> {
+    /// Encoding layer: the multibit pixel frame (replayed across the
+    /// layer's `in_t` steps from on-chip caches).
+    Pixels {
+        /// The static input frame.
+        image: &'i Tensor<u8>,
+    },
+    /// Spike layer (hidden or head): the assembled stimulus plus the
+    /// upstream dependencies it was assembled from.
+    Spikes {
+        /// Possibly-concatenated input maps, one per input time step —
+        /// exactly what the controller will consume.
+        inputs: &'i [SpikeMap],
+        /// Upstream dependencies by producing-layer name with their raw
+        /// outputs (main input first, then any `concat_with` source).
+        deps: &'i [(&'i str, &'i [SpikeMap])],
+    },
+}
+
+/// Per-layer callbacks that turn the shared walk into a concrete
+/// execution context. Every method except [`Self::controller`] has a
+/// no-op default, so the trivial single-chip context implements nothing
+/// else.
+pub trait WalkHooks {
+    /// The controller that executes layer `li` — the only mandatory
+    /// hook. A single-chip context always returns the same controller; a
+    /// sharded context returns the owning chip's.
+    fn controller(&mut self, li: usize) -> &mut SystemController;
+
+    /// A layer is about to be resolved and executed.
+    fn on_layer_start(&mut self, _li: usize, _spec: &ConvSpec) -> Result<()> {
+        Ok(())
+    }
+
+    /// The layer's stimulus is assembled; account any data movement that
+    /// brings it to the executing chip (dependency shipping, halo
+    /// exchange).
+    fn route_input(
+        &mut self,
+        _li: usize,
+        _spec: &ConvSpec,
+        _input: &RoutedInput<'_>,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// The layer finished; attribute its cycles/energy and record where
+    /// its output now lives.
+    fn on_layer_output(&mut self, _li: usize, _spec: &ConvSpec, _run: &LayerRun) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// The trivial hook set: one [`SystemController`], no routing, no
+/// attribution — a [`LayerWalk`] over `NopHooks` **is** the plain
+/// single-chip cycle simulator, bit for bit and cycle for cycle
+/// (property-tested in `tests/exec_walk.rs`).
+pub struct NopHooks {
+    ctrl: SystemController,
+}
+
+impl NopHooks {
+    /// New single-controller context for a hardware configuration.
+    pub fn new(cfg: AccelConfig) -> NopHooks {
+        NopHooks { ctrl: SystemController::new(cfg) }
+    }
+}
+
+impl WalkHooks for NopHooks {
+    fn controller(&mut self, _li: usize) -> &mut SystemController {
+        &mut self.ctrl
+    }
+}
+
+/// The walk's inter-layer state: compressed spike planes keyed by
+/// producing layer, the implicit-predecessor cursor, the head
+/// accumulator, and any collected observations. Keeping it separate from
+/// [`LayerWalk`] makes the walk resumable — a caller may execute a few
+/// layers, do something else (ship planes to another chip, admit another
+/// frame), then continue.
+#[derive(Default)]
+pub struct WalkState {
+    outputs: BTreeMap<String, Vec<SpikeMap>>,
+    prev: Option<String>,
+    head: Option<Tensor<i32>>,
+    layers: BTreeMap<String, LayerObservation>,
+}
+
+impl WalkState {
+    /// Fresh state for one frame.
+    pub fn new() -> WalkState {
+        WalkState::default()
+    }
+
+    /// Whether the output layer has produced the head accumulator (i.e.
+    /// the walk reached the end of the network).
+    pub fn has_head(&self) -> bool {
+        self.head.is_some()
+    }
+
+    /// Compressed outputs of a layer, if it ran already.
+    pub fn output_of(&self, layer: &str) -> Option<&[SpikeMap]> {
+        self.outputs.get(layer).map(|v| v.as_slice())
+    }
+}
+
+/// The shared cycle-level layer-walk driver. Borrows the network, the
+/// weights and the once-compressed bit-mask planes; owns no mutable
+/// state, so one walk can drive many frames (and many hook contexts)
+/// concurrently.
+pub struct LayerWalk<'a> {
+    net: &'a NetworkSpec,
+    weights: &'a ModelWeights,
+    planes: &'a BTreeMap<String, Vec<BitMaskKernel>>,
+}
+
+impl<'a> LayerWalk<'a> {
+    /// New walk over a validated network with pre-compressed weight
+    /// planes (one `Vec<BitMaskKernel>` per layer, as built by
+    /// `compress_kernel4`).
+    pub fn new(
+        net: &'a NetworkSpec,
+        weights: &'a ModelWeights,
+        planes: &'a BTreeMap<String, Vec<BitMaskKernel>>,
+    ) -> LayerWalk<'a> {
+        LayerWalk { net, weights, planes }
+    }
+
+    /// Execute the whole network on one frame and assemble the backend
+    /// result.
+    pub fn run(
+        &self,
+        image: &Tensor<u8>,
+        opts: &FrameOptions,
+        hooks: &mut dyn WalkHooks,
+    ) -> Result<BackendFrame> {
+        let mut st = WalkState::new();
+        self.run_layers(&mut st, 0..self.net.layers.len(), image, opts, hooks)?;
+        Self::finish(st)
+    }
+
+    /// Execute a subset of layers (by index into `net.layers`, in the
+    /// given order) against a resumable [`WalkState`] — the pipelined
+    /// executor's per-stage entry point. Layers must be executed in
+    /// topological (list) order across calls; a layer whose inputs have
+    /// not been produced yet is an error.
+    pub fn run_layers(
+        &self,
+        st: &mut WalkState,
+        layers: impl IntoIterator<Item = usize>,
+        image: &Tensor<u8>,
+        opts: &FrameOptions,
+        hooks: &mut dyn WalkHooks,
+    ) -> Result<()> {
+        for li in layers {
+            let l = &self.net.layers[li];
+            let lw = self.weights.get(&l.name).expect("validated");
+            let planes = self.planes.get(&l.name).expect("compressed at construction");
+            hooks.on_layer_start(li, l)?;
+
+            // The head accumulates its membrane over in_t steps even
+            // though the spec says it emits one averaged output step.
+            let mut spec = l.clone();
+            if l.kind == ConvKind::Output {
+                spec.out_t = l.in_t;
+            }
+
+            let (run, input_sparsity) = if l.kind == ConvKind::Encoding {
+                hooks.route_input(li, l, &RoutedInput::Pixels { image })?;
+                // Every encoding step replays the same static frame; only
+                // clone when the layer really takes multiple steps.
+                let run = if l.in_t == 1 {
+                    hooks.controller(li).run_layer_prepared(
+                        &spec,
+                        lw,
+                        planes,
+                        LayerInput::Pixels(std::slice::from_ref(image)),
+                    )
+                } else {
+                    let frames = vec![image.clone(); l.in_t];
+                    hooks.controller(li).run_layer_prepared(
+                        &spec,
+                        lw,
+                        planes,
+                        LayerInput::Pixels(&frames),
+                    )
+                }
+                .with_context(|| format!("simulating layer {}", l.name))?;
+                (run, image.sparsity())
+            } else {
+                let main = l
+                    .input_from
+                    .clone()
+                    .or_else(|| st.prev.clone())
+                    .ok_or_else(|| anyhow!("layer {} has no predecessor", l.name))?;
+                let main_steps = st
+                    .outputs
+                    .get(&main)
+                    .ok_or_else(|| anyhow!("layer {}: missing output of {main}", l.name))?;
+                let inputs: Vec<SpikeMap> = match l.concat_with.as_deref() {
+                    None => main_steps.clone(),
+                    Some(o) => {
+                        let os = st
+                            .outputs
+                            .get(o)
+                            .ok_or_else(|| anyhow!("layer {}: missing output of {o}", l.name))?;
+                        main_steps.iter().zip(os).map(|(a, b)| a.concat(b)).collect()
+                    }
+                };
+                let mut deps: Vec<(&str, &[SpikeMap])> =
+                    vec![(main.as_str(), main_steps.as_slice())];
+                if let Some(o) = l.concat_with.as_deref() {
+                    deps.push((o, st.outputs.get(o).expect("checked above").as_slice()));
+                }
+                hooks.route_input(li, l, &RoutedInput::Spikes { inputs: &inputs, deps: &deps })?;
+                let sparsity =
+                    inputs.iter().map(|m| m.sparsity()).sum::<f64>() / inputs.len().max(1) as f64;
+                let run = hooks
+                    .controller(li)
+                    .run_layer_prepared(&spec, lw, planes, LayerInput::Spikes(&inputs))
+                    .with_context(|| format!("simulating layer {}", l.name))?;
+                (run, sparsity)
+            };
+
+            hooks.on_layer_output(li, l, &run)?;
+            if opts.collect_stats {
+                st.layers.insert(
+                    l.name.clone(),
+                    LayerObservation {
+                        input_sparsity,
+                        spikes_out: run.spikes_out,
+                        cycles: run.cycles,
+                        dense_cycles: run.dense_cycles,
+                        core_cycles: run.core_cycles.clone(),
+                    },
+                );
+            }
+            if l.kind == ConvKind::Output {
+                st.head = run.head_acc;
+            } else {
+                st.outputs.insert(l.name.clone(), run.output);
+            }
+            st.prev = Some(l.name.clone());
+        }
+        Ok(())
+    }
+
+    /// Close out a finished walk: the head accumulator plus whatever
+    /// observations were collected.
+    pub fn finish(st: WalkState) -> Result<BackendFrame> {
+        let head_acc = st.head.ok_or_else(|| anyhow!("network has no output layer"))?;
+        Ok(BackendFrame { head_acc, layers: st.layers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::topology::{Scale, TimeStepConfig};
+    use crate::sparse::bitmask::compress_kernel4;
+    use crate::util::Rng;
+
+    fn setup() -> (NetworkSpec, ModelWeights, Tensor<u8>) {
+        let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+        let mut w = ModelWeights::random(&net, 1.0, 300);
+        w.prune_fine_grained(0.8);
+        let mut rng = Rng::new(301);
+        let n = net.input_c * net.input_h * net.input_w;
+        let img = Tensor::from_vec(
+            net.input_c,
+            net.input_h,
+            net.input_w,
+            (0..n).map(|_| rng.next_u32() as u8).collect(),
+        );
+        (net, w, img)
+    }
+
+    fn planes_of(net: &NetworkSpec, w: &ModelWeights) -> BTreeMap<String, Vec<BitMaskKernel>> {
+        net.layers
+            .iter()
+            .map(|l| (l.name.clone(), compress_kernel4(&w.get(&l.name).unwrap().w)))
+            .collect()
+    }
+
+    #[test]
+    fn whole_walk_equals_staged_walk() {
+        // Running all layers in one call and layer-by-layer against a
+        // resumable state must be identical — the property the pipelined
+        // stage executor rests on.
+        let (net, w, img) = setup();
+        let planes = planes_of(&net, &w);
+        let walk = LayerWalk::new(&net, &w, &planes);
+        let opts = FrameOptions { collect_stats: true };
+
+        let mut hooks = NopHooks::new(AccelConfig::paper());
+        let whole = walk.run(&img, &opts, &mut hooks).unwrap();
+
+        let mut hooks = NopHooks::new(AccelConfig::paper());
+        let mut st = WalkState::new();
+        for li in 0..net.layers.len() {
+            assert!(!st.has_head());
+            walk.run_layers(&mut st, [li], &img, &opts, &mut hooks).unwrap();
+        }
+        assert!(st.has_head());
+        let staged = LayerWalk::finish(st).unwrap();
+        assert_eq!(whole, staged);
+    }
+
+    #[test]
+    fn state_tracks_outputs_and_head() {
+        let (net, w, img) = setup();
+        let planes = planes_of(&net, &w);
+        let walk = LayerWalk::new(&net, &w, &planes);
+        let mut hooks = NopHooks::new(AccelConfig::paper());
+        let mut st = WalkState::new();
+        walk.run_layers(&mut st, [0usize], &img, &FrameOptions::default(), &mut hooks).unwrap();
+        let first = net.layers[0].name.clone();
+        assert!(st.output_of(&first).is_some());
+        assert!(st.output_of("head").is_none());
+        assert!(!st.has_head());
+        // Finishing before the head ran is an error, not a silent zero.
+        assert!(LayerWalk::finish(st).is_err());
+    }
+
+    #[test]
+    fn out_of_order_layer_is_an_error() {
+        let (net, w, img) = setup();
+        let planes = planes_of(&net, &w);
+        let walk = LayerWalk::new(&net, &w, &planes);
+        let mut hooks = NopHooks::new(AccelConfig::paper());
+        let mut st = WalkState::new();
+        // Layer 1 consumes layer 0's spikes, which don't exist yet.
+        let err =
+            walk.run_layers(&mut st, [1usize], &img, &FrameOptions::default(), &mut hooks);
+        assert!(err.is_err());
+    }
+}

@@ -28,7 +28,8 @@
 //! | [`backend`] | unified `SnnBackend` trait: golden / cycle-sim / PJRT frame engines |
 //! | [`tensor`] | NCHW tensors + fixed-point arithmetic (FXP8/FXP16) |
 //! | [`sparse`] | bit-mask / CSR weight compression + compressed spike planes (`SpikePlane`/`SpikeMap`) carried end-to-end |
-//! | [`cluster`] | multi-chip cluster: sharded execution (frame/pipeline/tile) over a DRAM interconnect model |
+//! | [`cluster`] | multi-chip cluster: sharded + pipelined execution (frame/pipeline/tile) over a DRAM interconnect model |
+//! | [`exec`] | the one cycle-level layer walk (`LayerWalk` + `WalkHooks`) every execution path instantiates |
 //! | [`config`] | TOML-subset config system + hardware configuration registers |
 //! | [`model`] | network topology, LIF dynamics, weights, mIoUT metric |
 //! | [`ref_impl`] | functional golden model (block conv, full SNN forward) |
@@ -43,6 +44,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod detect;
+pub mod exec;
 pub mod model;
 pub mod ref_impl;
 pub mod runtime;

@@ -14,7 +14,8 @@ use anyhow::{anyhow, bail, Result};
 use scsnn::accel::energy::{AreaModel, EnergyModel};
 use scsnn::accel::latency::LatencyModel;
 use scsnn::accel::parallelism::{fig6_study, multicore_study};
-use scsnn::backend::BackendKind;
+use scsnn::backend::{BackendKind, FrameOptions};
+use scsnn::cluster::ChipCluster;
 use scsnn::config::{AccelConfig, ClusterConfig, ShardPolicy};
 use scsnn::coordinator::pipeline::{DetectionPipeline, HwStatsMode};
 use scsnn::detect::dataset::{write_ppm, Dataset};
@@ -24,9 +25,11 @@ use scsnn::model::weights::ModelWeights;
 use scsnn::ref_impl::{ForwardOptions, SnnForward};
 use scsnn::runtime::ArtifactPaths;
 use scsnn::sparse::stats::Format;
+use scsnn::tensor::Tensor;
 use scsnn::util::json::Json;
 use scsnn::util::Args;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 fn main() {
     let args = Args::from_env();
@@ -59,8 +62,8 @@ fn print_usage() {
         "scsnn — sparse compressed SNN accelerator (TCAS-I 2022 reproduction)\n\
          usage: scsnn <detect|simulate|parallelism|dram|timesteps|miout|report> [--options]\n\
          common options: --artifacts DIR  --scale full|tiny  --seed N\n\
-         serving options: --backend golden|cyclesim|pjrt|cluster|auto  --workers N  --cores N  --batch N\n\
-         cluster options: --chips N  --shard-policy frame|pipeline|tile  (--want-cycles with auto)"
+         serving options: --backend golden|cyclesim|pjrt|cluster|auto  --workers N|MIN..MAX  --cores N  --batch N\n\
+         cluster options: --chips N  --shard-policy frame|pipeline|tile  --in-flight N  (--want-cycles with auto)"
     );
 }
 
@@ -88,6 +91,25 @@ fn scale(args: &Args) -> Scale {
     Scale::parse(args.get_or("scale", "full")).unwrap_or(Scale::Full)
 }
 
+/// Parse `--workers N` (fixed pool) or `--workers MIN..MAX` (dynamic
+/// scaling bounds) into `(floor, ceiling)`; ceiling 0 = fixed.
+fn parse_workers(spec: &str) -> Result<(usize, usize)> {
+    if let Some((lo, hi)) = spec.split_once("..") {
+        let lo: usize =
+            lo.parse().map_err(|_| anyhow!("bad worker floor {lo:?} in --workers {spec}"))?;
+        let hi: usize =
+            hi.parse().map_err(|_| anyhow!("bad worker ceiling {hi:?} in --workers {spec}"))?;
+        if hi < lo.max(1) {
+            bail!("--workers {spec}: ceiling below floor");
+        }
+        Ok((lo.max(1), hi))
+    } else {
+        let n: usize =
+            spec.parse().map_err(|_| anyhow!("bad worker count {spec:?} (want N or MIN..MAX)"))?;
+        Ok((n.max(1), 0))
+    }
+}
+
 /// Parse `--backend` when given.
 fn backend_kind(args: &Args) -> Result<Option<BackendKind>> {
     match args.get("backend") {
@@ -111,7 +133,9 @@ fn cmd_detect(args: &Args) -> Result<()> {
     let mut pipeline = DetectionPipeline::from_artifacts(&dir, use_pjrt)?;
     pipeline.hw_mode = HwStatsMode::Once;
     pipeline.conf_thresh = args.parsed_or("conf", 0.1f32);
-    pipeline.workers = args.parsed_or("workers", 1usize).max(1);
+    let (worker_floor, worker_ceiling) = parse_workers(args.get_or("workers", "1"))?;
+    pipeline.workers = worker_floor;
+    pipeline.max_workers = worker_ceiling;
     pipeline.batch = args.parsed_or("batch", 1usize).max(1);
     pipeline.set_cores(args.parsed_or("cores", 1usize))?;
     let chips = args.parsed_or("chips", 1usize).max(1);
@@ -149,11 +173,15 @@ fn cmd_detect(args: &Args) -> Result<()> {
     } else {
         String::new()
     };
+    let workers_note = if pipeline.max_workers > pipeline.workers {
+        format!("{}..{}", pipeline.workers, pipeline.max_workers)
+    } else {
+        pipeline.workers.to_string()
+    };
     println!(
-        "running {} frames through the {} backend ({} workers, batch {}, {} cores{cluster_note})…",
+        "running {} frames through the {} backend ({workers_note} workers, batch {}, {} cores{cluster_note})…",
         ds.samples.len(),
         pipeline.backend_name(),
-        pipeline.workers,
         pipeline.batch,
         args.parsed_or("cores", 1usize).max(1)
     );
@@ -198,21 +226,59 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }
     let chips = args.parsed_or("chips", 1usize).max(1);
     if chips > 1 {
-        println!("cluster of {chips} chips (analytic compute makespan, no interconnect):");
+        let in_flight = args.parsed_or("in-flight", chips.max(2)).max(1);
+        // Executing the full-scale simulator takes hours; the measured
+        // column runs the pipelined executor at tiny scale only.
+        let measure = sc == Scale::Tiny;
+        let frames = 2 * in_flight + 2;
+        println!(
+            "cluster of {chips} chips (interval: analytic vs executed over {frames} pipelined frames, in-flight {in_flight}):"
+        );
+        println!(
+            "  {:<9} {:>14} {:>18} {:>18} {:>12}",
+            "policy", "frame cycles", "analytic interval", "measured interval", "steady fps"
+        );
+        let ds = measure.then(|| {
+            Dataset::synth(frames, net.input_w, net.input_h, args.parsed_or("seed", 42u64) + 1)
+        });
         for policy in ShardPolicy::all() {
             let cc = ClusterConfig { chip: cfg.clone(), ..ClusterConfig::single_chip() }
                 .with_chips(chips)
                 .with_policy(policy);
             let cl = LatencyModel::cluster(&net, &weights, &cc);
+            let analytic = cl.pipeline_interval_bounded(in_flight);
+            let (measured, steady) = match &ds {
+                Some(ds) => {
+                    let cluster = ChipCluster::new(
+                        Arc::new(net.clone()),
+                        Arc::new(weights.clone()),
+                        cc.clone(),
+                    )?;
+                    let imgs: Vec<&Tensor<u8>> =
+                        ds.samples.iter().map(|s| &s.image).collect();
+                    let run = cluster.run_pipelined(&imgs, &FrameOptions::default(), in_flight)?;
+                    (
+                        format!("{:.0}", run.measured_interval()),
+                        format!("{:.1}", run.steady_fps(cfg.clock_hz)),
+                    )
+                }
+                None => {
+                    ("-".to_string(), format!("{:.1}", cfg.clock_hz / analytic.max(1) as f64))
+                }
+            };
             println!(
-                "  {:<9} frame {} cycles  interval {} cycles  steady-state {:.1} fps",
+                "  {:<9} {:>14} {:>18} {:>18} {:>12}",
                 policy.label(),
                 cl.compute_makespan,
-                cl.pipeline_interval(),
-                cfg.clock_hz / cl.pipeline_interval().max(1) as f64
+                analytic,
+                measured,
+                steady
             );
         }
-        println!("  (simulated counters + interconnect: `scsnn detect --chips N` or `cargo bench --bench perf_cluster`)");
+        if !measure {
+            println!("  (measured column needs --scale tiny; full scale stays analytic-only)");
+        }
+        println!("  (simulated counters + interconnect: `scsnn detect --chips N`, `cargo bench --bench perf_cluster` or `--bench perf_pipeline`)");
     }
     println!("fps @ {:.0} MHz: {:.1}", cfg.clock_hz / 1e6, lat.fps(cfg.clock_hz));
     println!(

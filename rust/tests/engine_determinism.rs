@@ -97,6 +97,32 @@ fn workers_x_batch_grid_bit_identical_to_serial() {
 }
 
 #[test]
+fn dynamic_worker_scaling_bit_identical_to_fixed_pool() {
+    // A pool floating between 1 and 4 workers (growing under backlog,
+    // shrinking when idle) must fold exactly like the fixed pools — the
+    // reorder buffer makes scaling invisible to every consumer.
+    let (net, w, ds) = setup(90, 6);
+    let be: Arc<dyn SnnBackend> =
+        Arc::new(CycleSimBackend::new(net, w, AccelConfig::paper()).unwrap());
+    let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+    let fixed = run_with(be.clone(), &ds, 1, 1);
+    for batch in [1usize, 2] {
+        let engine = StreamingEngine::new(
+            be.clone(),
+            EngineConfig { workers: 1, queue_depth: 2, batch },
+        )
+        .with_max_workers(4);
+        assert_eq!(engine.worker_bounds(images.len()), (1, 4));
+        let got = engine
+            .run_frames(&images, FrameOptions { collect_stats: true })
+            .unwrap();
+        assert_eq!(fixed, got, "batch={batch}: dynamic pool changed bits");
+        let peak = engine.peak_workers();
+        assert!((1..=4).contains(&peak), "batch={batch}: peak={peak}");
+    }
+}
+
+#[test]
 fn pipeline_detections_workers4_bit_identical_to_workers1() {
     let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
     let mut w = ModelWeights::random(&net, 1.0, 80);

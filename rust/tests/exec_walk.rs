@@ -1,0 +1,235 @@
+//! `exec::LayerWalk` equivalence properties.
+//!
+//! The shared walk over [`NopHooks`] **is** the single-chip cycle
+//! simulator; these properties pin it — across random pruning densities,
+//! layer counts, time-step mixes and core counts — against the three
+//! independent anchors the repo already trusts:
+//!
+//! - the functional golden model (bit-exact head + spike popcounts),
+//! - the analytic latency model (exact per-layer cycle lock-step),
+//! - the multi-chip cluster (every policy a hook instantiation of the
+//!   same walk, bit-exact with the plain backend).
+
+use scsnn::accel::latency::LatencyModel;
+use scsnn::backend::{CycleSimBackend, FrameOptions, GoldenBackend, SnnBackend};
+use scsnn::cluster::ChipCluster;
+use scsnn::config::{AccelConfig, ClusterConfig, ShardPolicy};
+use scsnn::exec::{LayerWalk, NopHooks};
+use scsnn::model::topology::{ConvKind, ConvSpec, NetworkSpec};
+use scsnn::model::weights::ModelWeights;
+use scsnn::ref_impl::ForwardOptions;
+use scsnn::sparse::{bitmask::compress_kernel4, BitMaskKernel};
+use scsnn::tensor::Tensor;
+use scsnn::util::{run_prop, Gen};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// A random sequential chain in the shape the paper's networks take:
+/// encoding conv (bit-serial, single- or uniform-step), a boundary conv
+/// expanding to `t` steps, a few `t → t` spike layers, and a 1×1 head —
+/// with random channel widths, kernel sizes, fused pools and pruning.
+fn random_chain(g: &mut Gen) -> (NetworkSpec, ModelWeights) {
+    let in_w = [16usize, 24, 32][g.usize(0, 3)];
+    let in_h = 12usize;
+    let t = 1 + g.usize(0, 3); // 1..=3 (register file caps at 4)
+    let uniform_enc = g.bool(0.3); // encoding recomputed every step
+    let n_mid = g.usize(0, 3);
+
+    let mut layers: Vec<ConvSpec> = Vec::new();
+    let (mut w, mut h) = (in_w, in_h);
+    let enc_t = if uniform_enc { t } else { 1 };
+    let enc_c = 2 + g.usize(0, 5);
+    let enc_pool = g.bool(0.5);
+    layers.push(ConvSpec {
+        name: "enc".into(),
+        kind: ConvKind::Encoding,
+        c_in: 3,
+        c_out: enc_c,
+        k: 3,
+        in_t: enc_t,
+        out_t: enc_t,
+        maxpool_after: enc_pool,
+        in_w: w,
+        in_h: h,
+        concat_with: None,
+        input_from: None,
+    });
+    if enc_pool {
+        w /= 2;
+        h /= 2;
+    }
+    let mut prev_c = enc_c;
+
+    // Boundary conv: enc_t → t (the mixed-time-step replay path when
+    // enc_t == 1 < t).
+    let b_c = 2 + g.usize(0, 5);
+    let b_pool = g.bool(0.5);
+    layers.push(ConvSpec {
+        name: "conv1".into(),
+        kind: ConvKind::Spike,
+        c_in: prev_c,
+        c_out: b_c,
+        k: if g.bool(0.7) { 3 } else { 1 },
+        in_t: enc_t,
+        out_t: t,
+        maxpool_after: b_pool,
+        in_w: w,
+        in_h: h,
+        concat_with: None,
+        input_from: None,
+    });
+    if b_pool {
+        w /= 2;
+        h /= 2;
+    }
+    prev_c = b_c;
+
+    for i in 0..n_mid {
+        let c = 2 + g.usize(0, 5);
+        layers.push(ConvSpec {
+            name: format!("mid{i}"),
+            kind: ConvKind::Spike,
+            c_in: prev_c,
+            c_out: c,
+            k: if g.bool(0.7) { 3 } else { 1 },
+            in_t: t,
+            out_t: t,
+            maxpool_after: false,
+            in_w: w,
+            in_h: h,
+            concat_with: None,
+            input_from: None,
+        });
+        prev_c = c;
+    }
+
+    layers.push(ConvSpec {
+        name: "head".into(),
+        kind: ConvKind::Output,
+        c_in: prev_c,
+        c_out: 2 + g.usize(0, 4),
+        k: 1,
+        in_t: t,
+        out_t: 1,
+        maxpool_after: false,
+        in_w: w,
+        in_h: h,
+        concat_with: None,
+        input_from: None,
+    });
+
+    let net = NetworkSpec {
+        name: "prop-chain".into(),
+        input_w: in_w,
+        input_h: in_h,
+        input_c: 3,
+        layers,
+        num_anchors: 1,
+        num_classes: 1,
+    };
+    let seed = g.usize(0, 1_000_000) as u64;
+    let mut mw = ModelWeights::random(&net, 1.0, seed);
+    mw.prune_fine_grained(g.f64(0.0, 0.9));
+    (net, mw)
+}
+
+fn random_image(g: &mut Gen, net: &NetworkSpec) -> Tensor<u8> {
+    let n = net.input_c * net.input_h * net.input_w;
+    Tensor::from_vec(
+        net.input_c,
+        net.input_h,
+        net.input_w,
+        (0..n).map(|_| g.rng().next_u32() as u8).collect(),
+    )
+}
+
+fn planes_of(net: &NetworkSpec, mw: &ModelWeights) -> BTreeMap<String, Vec<BitMaskKernel>> {
+    net.layers
+        .iter()
+        .map(|l| (l.name.clone(), compress_kernel4(&mw.get(&l.name).unwrap().w)))
+        .collect()
+}
+
+#[test]
+fn nop_hooks_walk_reproduces_simulator_golden_and_analytic() {
+    run_prop("nop-hooks-walk", |g| {
+        let (net, mw) = random_chain(g);
+        let img = random_image(g, &net);
+        let cores = 1 + g.usize(0, 4); // 1..=4
+        let cfg = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() }.with_cores(cores);
+        let net = Arc::new(net);
+        let mw = Arc::new(mw);
+        let opts = FrameOptions { collect_stats: true };
+
+        // 1. A NopHooks walk IS the cycle-sim backend, bit for bit —
+        //    outputs, observations, cycle counters, per-core counters.
+        let sim = CycleSimBackend::new(net.clone(), mw.clone(), cfg.clone()).unwrap();
+        let from_backend = sim.run_frame(&img, &opts).unwrap();
+        let planes = planes_of(&net, &mw);
+        let mut hooks = NopHooks::new(cfg.clone());
+        let from_walk =
+            LayerWalk::new(&net, &mw, &planes).run(&img, &opts, &mut hooks).unwrap();
+        assert_eq!(from_walk, from_backend);
+
+        // 2. Bit-exact against the functional golden model run with the
+        //    hardware block tile.
+        let golden = GoldenBackend::new(
+            net.clone(),
+            mw.clone(),
+            ForwardOptions { block_tile: Some((8, 6)), record_spikes: false },
+        )
+        .unwrap();
+        let want = golden.run_frame(&img, &opts).unwrap();
+        assert_eq!(from_walk.head_acc.data, want.head_acc.data);
+        for (name, obs) in &from_walk.layers {
+            if name != "head" {
+                assert_eq!(obs.spikes_out, want.layers[name].spikes_out, "{name}");
+            }
+        }
+
+        // 3. Cycle counters in exact lock-step with the analytic model,
+        //    layer for layer, at any core count.
+        let lat = LatencyModel::new(cfg).network(&net, &mw);
+        for (ll, l) in lat.layers.iter().zip(net.layers.iter()) {
+            let obs = &from_walk.layers[&l.name];
+            assert_eq!(obs.cycles, ll.sparse_makespan, "{} cycles", l.name);
+            assert_eq!(obs.dense_cycles, ll.dense_makespan, "{} dense", l.name);
+            assert_eq!(obs.core_cycles.len(), cores, "{}", l.name);
+        }
+    });
+}
+
+#[test]
+fn every_cluster_policy_is_the_same_walk() {
+    run_prop("cluster-policy-walk", |g| {
+        let (net, mw) = random_chain(g);
+        let img = random_image(g, &net);
+        let cores = 1 + g.usize(0, 3);
+        let chips = 1 + g.usize(0, 3); // 1..=3
+        let policy = ShardPolicy::all()[g.usize(0, 3)];
+        let cfg = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() }.with_cores(cores);
+        let net = Arc::new(net);
+        let mw = Arc::new(mw);
+        let cc = ClusterConfig { chip: cfg.clone(), ..ClusterConfig::single_chip() }
+            .with_chips(chips)
+            .with_policy(policy);
+        let cluster = ChipCluster::new(net.clone(), mw.clone(), cc).unwrap();
+        let sim = CycleSimBackend::new(net, mw, cfg).unwrap();
+        let opts = FrameOptions { collect_stats: true };
+        let want = sim.run_frame(&img, &opts).unwrap();
+        let got = cluster.run_frame(&img, &opts).unwrap();
+        if chips == 1 {
+            // One chip: the whole BackendFrame matches, counters included.
+            assert_eq!(got, want, "{policy:?}");
+        } else {
+            // Sharding moves work, never arithmetic.
+            assert_eq!(got.head_acc.data, want.head_acc.data, "{policy:?}");
+            for (name, obs) in &got.layers {
+                assert_eq!(
+                    obs.spikes_out, want.layers[name].spikes_out,
+                    "{policy:?} {name}"
+                );
+            }
+        }
+    });
+}
