@@ -121,7 +121,11 @@ pub enum BackendKind {
     CycleSim,
     /// PJRT-compiled AOT graph.
     Pjrt,
-    /// Multi-chip cluster ([`crate::cluster::ChipCluster`]).
+    /// Multi-chip cluster ([`crate::cluster::ChipCluster`]). When the
+    /// pipeline sets a `--pipeline N` window, cluster frames route
+    /// through the wall-clock stage executor
+    /// (`crate::coordinator::stage_exec`) instead of monolithic
+    /// `run_frame` calls — same bits, overlapped stages.
     Cluster,
 }
 

@@ -40,7 +40,18 @@
 //! steady-state initiation interval that
 //! [`LatencyModel::cluster`]`.pipeline_interval()` predicts — asserted
 //! within fill/drain + transfer slack in `tests/pipelined_cluster.rs`,
-//! with outputs bit-identical to serial frame order.
+//! with outputs bit-identical to serial frame order. Host uploads are
+//! serialized on the one shared host link in that timing, so concurrent
+//! FrameParallel admissions contend instead of overlapping for free.
+//!
+//! **Wall-clock stage serving**: the cluster no longer owns the only
+//! beat loop — it *lends* its chips to the coordinator's stage executor
+//! (`coordinator::stage_exec::StageExecutor`) through a [`StageLease`]
+//! (one mutex-serialized controller per execution unit) and hands each
+//! admitted frame out as a [`StageFrame`] (per-frame hooks + resumable
+//! walk state), so real worker threads overlap stages of different
+//! frames and the modeled initiation interval shows up as measured
+//! wall-clock throughput on the serving path.
 //!
 //! Why a DRAM-class interconnect model and not just a speedup factor:
 //! memory traffic, not compute, dominates sparsely-active SNN
@@ -68,7 +79,7 @@ use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Cluster-level execution record of one frame.
 #[derive(Clone, Debug)]
@@ -151,6 +162,10 @@ pub struct ChipCluster {
     /// executed and analytic numbers come from one instance by
     /// construction.
     analytic: ClusterLatency,
+    /// The stage partition both pipelined executors run: LayerPipeline
+    /// uses the analytic per-chip partition, every other policy degrades
+    /// to a single whole-frame stage.
+    exec_stages: Vec<Vec<usize>>,
     /// Round-robin cursor for FrameParallel.
     next_chip: AtomicUsize,
 }
@@ -194,6 +209,10 @@ impl ChipCluster {
             })
             .collect::<Result<Vec<_>>>()?;
         let analytic = LatencyModel::cluster(&net, &weights, &cfg);
+        let exec_stages = match cfg.policy {
+            ShardPolicy::LayerPipeline => analytic.stage_layers.clone(),
+            _ => vec![(0..net.layers.len()).collect()],
+        };
         Ok(ChipCluster {
             net,
             weights,
@@ -201,6 +220,7 @@ impl ChipCluster {
             chips,
             planes,
             analytic,
+            exec_stages,
             next_chip: AtomicUsize::new(0),
         })
     }
@@ -224,6 +244,64 @@ impl ChipCluster {
     /// against (stage partition, compute makespan, initiation interval).
     pub fn analytic(&self) -> &ClusterLatency {
         &self.analytic
+    }
+
+    /// The stage partition the pipelined executors run (layer indices per
+    /// stage): the analytic per-chip partition under
+    /// [`ShardPolicy::LayerPipeline`], a single whole-frame stage
+    /// otherwise.
+    pub fn stage_partition(&self) -> &[Vec<usize>] {
+        &self.exec_stages
+    }
+
+    /// Execution unit — the serialized chip resource — that runs `stage`
+    /// of frame `frame`: the stage's chip under LayerPipeline, the
+    /// frame's round-robin chip under FrameParallel, the one pooled
+    /// controller under TileSplit. Unit indices match [`Self::lease`].
+    pub fn stage_unit(&self, frame: usize, stage: usize) -> usize {
+        match self.cfg.policy {
+            ShardPolicy::LayerPipeline => stage.min(self.cfg.num_chips.saturating_sub(1)),
+            ShardPolicy::FrameParallel => frame % self.cfg.num_chips.max(1),
+            ShardPolicy::TileSplit => 0,
+        }
+    }
+
+    /// Lend the cluster's chips to a stage-level executor: one
+    /// [`SystemController`] per execution unit, each behind a `Mutex` so
+    /// a chip runs one frame's stage at a time — the hardware pipeline's
+    /// structural hazard, realized in wall-clock time. The controller
+    /// reprograms its registers per layer, so sharing one across frames
+    /// is bit-exact by construction.
+    pub fn lease(&self) -> StageLease {
+        let tile_split = self.cfg.policy == ShardPolicy::TileSplit;
+        let units = self.unit_controllers(tile_split).into_iter().map(Mutex::new).collect();
+        StageLease { units }
+    }
+
+    /// Execution-unit controllers for this cluster: TileSplit pools
+    /// every chip's cores behind one controller, every other policy gets
+    /// one controller per chip. Shared by the serial hooks and the stage
+    /// lease so both paths simulate the same hardware by construction.
+    fn unit_controllers(&self, tile_split: bool) -> Vec<SystemController> {
+        if tile_split {
+            let pool = self.cfg.num_chips * self.cfg.chip.num_cores.max(1);
+            vec![SystemController::new(self.cfg.chip.clone().with_cores(pool))]
+        } else {
+            (0..self.cfg.num_chips)
+                .map(|_| SystemController::new(self.cfg.chip.clone()))
+                .collect()
+        }
+    }
+
+    /// Begin frame `index` on the stage executor: per-frame accounting
+    /// hooks (the host upload is charged now, on admission) plus a fresh
+    /// resumable walk state. Advance it with [`StageFrame::run_stage`],
+    /// retire it with [`StageFrame::finish`].
+    pub fn stage_frame(&self, index: usize, image: &Tensor<u8>) -> StageFrame<'_> {
+        let mut hooks = ShardHooks::new_leased(self, self.plan_for_frame(index));
+        let first = hooks.first_chip();
+        hooks.send(None, Some(first), pixel_frame_bits(image.c, image.h, image.w));
+        StageFrame { index, hooks, state: WalkState::new(), next_stage: 0 }
     }
 
     /// The layer→chip plan for one frame under the configured policy.
@@ -473,10 +551,7 @@ impl ChipCluster {
         let n = images.len();
         let chips = self.cfg.num_chips.max(1);
         let in_flight = in_flight.max(1);
-        let stage_layers: Vec<Vec<usize>> = match self.cfg.policy {
-            ShardPolicy::LayerPipeline => self.analytic.stage_layers.clone(),
-            _ => vec![(0..self.net.layers.len()).collect()],
-        };
+        let stage_layers = self.stage_partition();
         let s_n = stage_layers.len().max(1);
         let walk = LayerWalk::new(&self.net, &self.weights, &self.planes);
 
@@ -485,6 +560,7 @@ impl ChipCluster {
             hooks: ShardHooks<'c>,
             state: WalkState,
             next_stage: usize,
+            upload_cycles: u64,
             stage_compute: Vec<u64>,
             stage_transfer: Vec<u64>,
         }
@@ -492,6 +568,7 @@ impl ChipCluster {
         let mut frames: Vec<Option<BackendFrame>> = (0..n).map(|_| None).collect();
         let mut stage_compute: Vec<Vec<u64>> = vec![Vec::new(); n];
         let mut stage_transfer: Vec<Vec<u64>> = vec![Vec::new(); n];
+        let mut upload_cycles = vec![0u64; n];
         let mut download_cycles = vec![0u64; n];
         let mut chip_busy = vec![0u64; chips];
         let mut interconnect_bits = 0u64;
@@ -507,11 +584,13 @@ impl ChipCluster {
                 let mut hooks = ShardHooks::new(self, self.plan_for_frame(admitted));
                 let first = hooks.first_chip();
                 hooks.send(None, Some(first), pixel_frame_bits(img.c, img.h, img.w));
+                let upload = hooks.transfer_cycles;
                 live.push(FrameSlot {
                     index: admitted,
                     hooks,
                     state: WalkState::new(),
                     next_stage: 0,
+                    upload_cycles: upload,
                     stage_compute: Vec::new(),
                     stage_transfer: Vec::new(),
                 });
@@ -520,12 +599,13 @@ impl ChipCluster {
 
             // One beat: every resident frame advances one stage, oldest
             // first (stage s of frame f runs while stage s+1 still holds
-            // frame f-1's plane shipments in its log).
+            // frame f-1's plane shipments in its log). The upload charged
+            // at admission is tracked separately — it contends on the
+            // shared host link, not on the stage's arrival edge.
             for slot in live.iter_mut() {
                 let s = slot.next_stage;
                 let c0 = slot.hooks.compute_cycles;
-                // Stage 0 owns the upload charged at admission.
-                let t0 = if s == 0 { 0 } else { slot.hooks.transfer_cycles };
+                let t0 = slot.hooks.transfer_cycles;
                 walk.run_layers(
                     &mut slot.state,
                     stage_layers[s].iter().copied(),
@@ -560,19 +640,26 @@ impl ChipCluster {
                 frames[slot.index] = Some(frame);
                 stage_compute[slot.index] = slot.stage_compute;
                 stage_transfer[slot.index] = slot.stage_transfer;
+                upload_cycles[slot.index] = slot.upload_cycles;
             }
             live = still_live;
         }
 
-        // Pipeline timing from the executed counters: frame f's stage s
-        // starts when its data has arrived (previous stage + transfers)
-        // AND its chip is free; admission is throttled by the residency
-        // window (frame f waits for frame f − in_flight to drain).
+        // Pipeline timing from the executed counters: frame f's upload
+        // contends on the one shared host link (concurrent FrameParallel
+        // admissions serialize their uploads — ROADMAP "Pipelined
+        // FrameParallel upload contention"); its stage s then starts when
+        // its data has arrived (previous stage + transfers) AND its chip
+        // is free; admission is throttled by the residency window (frame
+        // f waits for frame f − in_flight to drain).
         let mut chip_free = vec![0u64; chips];
+        let mut host_free = 0u64;
         let mut done = vec![0u64; n];
         for f in 0..n {
             let release = if f >= in_flight { done[f - in_flight] } else { 0 };
-            let mut t = release;
+            let upload_done = release.max(host_free) + upload_cycles[f];
+            host_free = upload_done;
+            let mut t = upload_done;
             for s in 0..s_n {
                 let arrival = t + stage_transfer[f][s];
                 t = match self.cfg.policy {
@@ -610,12 +697,163 @@ impl ChipCluster {
             frames: frames.into_iter().map(|f| f.expect("every frame executed")).collect(),
             stage_cycles: stage_compute,
             stage_transfer_cycles: stage_transfer,
+            upload_cycles,
             download_cycles,
             done_cycles: done,
             analytic_interval,
             chip_busy_cycles: chip_busy,
             interconnect_bits,
         })
+    }
+}
+
+/// Per-chip controllers lent to the wall-clock stage executor
+/// (`coordinator::stage_exec::StageExecutor`): each execution unit — one
+/// chip, or TileSplit's single pooled controller — is a serialized
+/// resource behind a `Mutex`, borrowed by one frame at a time for the
+/// duration of one stage job. Built by [`ChipCluster::lease`].
+pub struct StageLease {
+    units: Vec<Mutex<SystemController>>,
+}
+
+impl StageLease {
+    /// Number of serialized execution units.
+    pub fn units(&self) -> usize {
+        self.units.len()
+    }
+
+    fn lock(&self, unit: usize) -> MutexGuard<'_, SystemController> {
+        self.units[unit].lock().expect("stage lease poisoned")
+    }
+}
+
+/// One frame in flight on the wall-clock stage executor: the frame's
+/// per-frame cluster accounting ([`ShardHooks`] internally — upload
+/// charged at admission, interconnect log, chip attribution) plus the
+/// resumable [`WalkState`], advanced one stage at a time on whatever
+/// worker thread holds the stage chip's lease. `Send` by construction —
+/// the executor ships it between workers, one hop per stage.
+pub struct StageFrame<'c> {
+    index: usize,
+    hooks: ShardHooks<'c>,
+    state: WalkState,
+    next_stage: usize,
+}
+
+// Compile-time guarantee: a stage frame must cross worker threads.
+#[allow(dead_code)]
+fn _stage_frame_is_send(f: StageFrame<'_>) -> impl Send + '_ {
+    f
+}
+
+impl<'c> StageFrame<'c> {
+    /// Frame index this state belongs to.
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    /// Stages completed so far.
+    pub fn stages_done(&self) -> usize {
+        self.next_stage
+    }
+
+    /// Whether every stage of the partition has run.
+    pub fn is_done(&self) -> bool {
+        self.next_stage >= self.hooks.cl.exec_stages.len()
+    }
+
+    /// Advance the frame one stage: lock the owning chip's leased
+    /// controller, run the stage's layers on it, and record the stage
+    /// completion on the walk state.
+    pub fn run_stage(
+        &mut self,
+        lease: &StageLease,
+        image: &Tensor<u8>,
+        opts: &FrameOptions,
+    ) -> Result<()> {
+        let cl = self.hooks.cl;
+        let s = self.next_stage;
+        if s >= cl.exec_stages.len() {
+            bail!("frame {}: all {} stages already ran", self.index, cl.exec_stages.len());
+        }
+        let unit = cl.stage_unit(self.index, s);
+        let mut ctrl = lease.lock(unit);
+        let mut hooks = LeasedHooks { inner: &mut self.hooks, ctrl: &mut *ctrl };
+        LayerWalk::new(&cl.net, &cl.weights, &cl.planes)
+            .run_layers(
+                &mut self.state,
+                cl.exec_stages[s].iter().copied(),
+                image,
+                opts,
+                &mut hooks,
+            )
+            .with_context(|| format!("stage {s} of frame {}", self.index))?;
+        self.state.record_stage_completion(s);
+        self.next_stage += 1;
+        Ok(())
+    }
+
+    /// Retire a fully-walked frame: head download back to the host, then
+    /// the backend frame plus the frame's cluster accounting.
+    pub fn finish(mut self) -> Result<ClusterFrame> {
+        let cl = self.hooks.cl;
+        if self.next_stage < cl.exec_stages.len() {
+            bail!(
+                "frame {}: finished after {}/{} stages",
+                self.index,
+                self.next_stage,
+                cl.exec_stages.len()
+            );
+        }
+        // The stage-completion events are the audit trail that the jobs
+        // hopped worker threads in order; a gap here is a scheduler bug,
+        // not a data bug — fail loudly instead of returning silently
+        // reordered work.
+        for (s, ev) in self.state.stage_completions().iter().enumerate() {
+            if ev.stage != s {
+                bail!(
+                    "frame {}: stage {} completed in slot {s} — executor ran stages out of order",
+                    self.index,
+                    ev.stage
+                );
+            }
+        }
+        let frame = LayerWalk::finish(self.state)?;
+        let last = self.hooks.last_chip();
+        let head_bits = frame.frame_head_cells() * cl.cfg.chip.acc_bits as u64;
+        self.hooks.send(Some(last), None, head_bits);
+        Ok(ClusterFrame { run: self.hooks.into_cluster_run(), frame })
+    }
+}
+
+/// Stage-scoped hook adapter: per-frame accounting stays on the frame's
+/// [`ShardHooks`]; execution lands on the chip controller leased for the
+/// duration of the stage.
+struct LeasedHooks<'a, 'c> {
+    inner: &'a mut ShardHooks<'c>,
+    ctrl: &'a mut SystemController,
+}
+
+impl WalkHooks for LeasedHooks<'_, '_> {
+    fn controller(&mut self, _li: usize) -> &mut SystemController {
+        &mut *self.ctrl
+    }
+
+    fn on_layer_start(&mut self, li: usize, spec: &ConvSpec) -> Result<()> {
+        self.inner.on_layer_start(li, spec)
+    }
+
+    fn route_input(
+        &mut self,
+        li: usize,
+        spec: &ConvSpec,
+        input: &RoutedInput<'_>,
+    ) -> Result<()> {
+        self.inner.route_input(li, spec, input)
+    }
+
+    fn on_layer_output(&mut self, li: usize, spec: &ConvSpec, run: &LayerRun) -> Result<()> {
+        self.inner.on_layer_output(li, spec, run)
     }
 }
 
@@ -649,16 +887,25 @@ struct ShardHooks<'c> {
 
 impl<'c> ShardHooks<'c> {
     fn new(cl: &'c ChipCluster, plan: Plan) -> ShardHooks<'c> {
+        let controllers = cl.unit_controllers(matches!(&plan, Plan::TileSplit));
+        Self::with_controllers(cl, plan, controllers)
+    }
+
+    /// Hooks for the leased stage-executor path: per-frame accounting
+    /// only — execution runs on the [`StageLease`]'s controllers through
+    /// [`LeasedHooks`], so building per-frame controllers here would be
+    /// dead weight on the serving hot path. [`WalkHooks::controller`]
+    /// must never be called on these hooks directly.
+    fn new_leased(cl: &'c ChipCluster, plan: Plan) -> ShardHooks<'c> {
+        Self::with_controllers(cl, plan, Vec::new())
+    }
+
+    fn with_controllers(
+        cl: &'c ChipCluster,
+        plan: Plan,
+        controllers: Vec<SystemController>,
+    ) -> ShardHooks<'c> {
         let chips_n = cl.cfg.num_chips;
-        let controllers: Vec<SystemController> = match &plan {
-            Plan::PerLayer(_) => {
-                (0..chips_n).map(|_| SystemController::new(cl.cfg.chip.clone())).collect()
-            }
-            Plan::TileSplit => {
-                let pool = chips_n * cl.cfg.chip.num_cores.max(1);
-                vec![SystemController::new(cl.cfg.chip.clone().with_cores(pool))]
-            }
-        };
         ShardHooks {
             cl,
             plan,
@@ -827,8 +1074,13 @@ pub struct PipelinedRun {
     /// stage chip's busy time; other policies: one whole-frame stage).
     pub stage_cycles: Vec<Vec<u64>>,
     /// Interconnect cycles charged on each `[frame][stage]`'s arrival
-    /// edge (stage 0 includes the host upload).
+    /// edge (inter-chip plane shipments; the host upload is priced
+    /// separately in [`Self::upload_cycles`]).
     pub stage_transfer_cycles: Vec<Vec<u64>>,
+    /// Host-upload cycles per frame, charged at admission and serialized
+    /// on the one shared host link in the pipeline timing (concurrent
+    /// FrameParallel admissions contend).
+    pub upload_cycles: Vec<u64>,
     /// Head-download cycles per frame.
     pub download_cycles: Vec<u64>,
     /// Completion cycle of each frame under the pipelined schedule.
@@ -865,7 +1117,11 @@ impl PipelinedRun {
     /// worst single frame's total interconnect occupancy.
     pub fn transfer_slack(&self) -> u64 {
         (0..self.done_cycles.len())
-            .map(|f| self.stage_transfer_cycles[f].iter().sum::<u64>() + self.download_cycles[f])
+            .map(|f| {
+                self.stage_transfer_cycles[f].iter().sum::<u64>()
+                    + self.upload_cycles[f]
+                    + self.download_cycles[f]
+            })
             .max()
             .unwrap_or(0)
     }

@@ -17,6 +17,15 @@
 //! batching never reorders the fold, so `workers × batch` runs stay
 //! bit-identical to the serial order.
 //!
+//! **Stage jobs** ([`StreamingEngine::stream_stages`]) are the engine's
+//! second job kind: `(frame, stage)` units with ordering constraints —
+//! a frame's stages run in order (the payload travels from job to job),
+//! execution units are exclusive (one frame per pipeline-stage chip),
+//! and at most `in_flight` frames are resident — scheduled onto the same
+//! worker pool, with retired frames folded in frame order through a
+//! dependency-aware reorder buffer. This is the wall-clock side of the
+//! cluster's pipelined execution (`coordinator::stage_exec`).
+//!
 //! **Dynamic worker scaling** ([`StreamingEngine::with_max_workers`]):
 //! `EngineConfig::workers` is the pool floor; when a ceiling above it is
 //! configured (`--workers min..max` on the CLI), the coordinator grows
@@ -37,7 +46,7 @@
 use crate::backend::{BackendFrame, FrameOptions, SnnBackend};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
@@ -49,6 +58,74 @@ pub const GROW_PATIENCE: Duration = Duration::from_millis(2);
 
 /// How long a worker above the pool floor sits idle before retiring.
 pub const SHRINK_IDLE: Duration = Duration::from_millis(5);
+
+/// One pool-scaling observation: the pool-size target right after a
+/// grow/shrink decision, with the backlog that justified it. The engine
+/// records a time series of these per run ([`StreamingEngine::
+/// scaling_timeline`]) so `PipelineMetrics` can export scaling behavior
+/// instead of just the peak.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolSample {
+    /// Pool-size target after the decision.
+    pub pool: usize,
+    /// Jobs outstanding (sent, not yet folded) at the decision — the
+    /// backlog a grow reacted to; 0 for an idle-shrink.
+    pub queue_depth: usize,
+}
+
+/// Wall-clock statistics of one stage-graph run
+/// ([`StreamingEngine::stream_stages`]): the measured counterpart of the
+/// cluster's analytic pipeline timing.
+#[derive(Clone, Debug)]
+pub struct StageStreamStats {
+    /// Completion instant of each frame's last stage, measured from the
+    /// run's start, indexed by frame (frames may complete out of index
+    /// order, e.g. round-robin chips).
+    pub frame_done: Vec<Duration>,
+    /// Total busy time per stage, summed across every execution unit
+    /// that ran the stage's jobs.
+    pub stage_busy: Vec<Duration>,
+    /// Distinct execution units that ran each stage (a LayerPipeline
+    /// stage is one chip; FrameParallel's single whole-frame stage
+    /// spreads across all chips).
+    pub stage_units: Vec<usize>,
+    /// Whole-run wall time.
+    pub wall: Duration,
+    /// Worker threads the run used.
+    pub workers: usize,
+}
+
+impl StageStreamStats {
+    /// Measured steady-state initiation interval: mean spacing of frame
+    /// completions past the pipeline-fill window — the wall-clock
+    /// analogue of `PipelinedRun::measured_interval`.
+    pub fn measured_interval(&self, in_flight: usize) -> Duration {
+        let n = self.frame_done.len();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        if n == 1 {
+            return self.frame_done[0];
+        }
+        let mut done = self.frame_done.clone();
+        done.sort_unstable();
+        let w = in_flight.max(1).min(n - 1);
+        done[n - 1].saturating_sub(done[w - 1]) / (n - w) as u32
+    }
+
+    /// Fraction of the run each stage spent busy, normalized by the
+    /// units that ran it (so a multi-chip whole-frame stage still reads
+    /// as a fraction); past the fill window the bottleneck stage
+    /// approaches 1.0.
+    pub fn stage_occupancy(&self) -> Vec<f64> {
+        let wall = self.wall.as_secs_f64().max(f64::EPSILON);
+        self.stage_busy
+            .iter()
+            .zip(&self.stage_units)
+            .map(|(b, &u)| b.as_secs_f64() / wall / u.max(1) as f64)
+            .collect()
+    }
+}
 
 /// Scheduling parameters.
 ///
@@ -89,6 +166,10 @@ pub struct StreamingEngine {
     peak_workers: AtomicUsize,
     /// Idle-shrink retirements during the most recent run.
     shrink_events: AtomicUsize,
+    /// Pool-scaling time series of the most recent run, in decision
+    /// order (grow decisions from the coordinator, shrink decisions from
+    /// the retiring workers).
+    timeline: Mutex<Vec<PoolSample>>,
 }
 
 impl StreamingEngine {
@@ -100,6 +181,7 @@ impl StreamingEngine {
             max_workers: 0,
             peak_workers: AtomicUsize::new(0),
             shrink_events: AtomicUsize::new(0),
+            timeline: Mutex::new(Vec::new()),
         }
     }
 
@@ -152,6 +234,12 @@ impl StreamingEngine {
         self.shrink_events.load(Ordering::Relaxed)
     }
 
+    /// Pool-scaling time series of the most recent run: one sample per
+    /// grow/shrink decision, in decision order (empty for fixed pools).
+    pub fn scaling_timeline(&self) -> Vec<PoolSample> {
+        self.timeline.lock().expect("timeline lock").clone()
+    }
+
     /// The scheduling core: run `work(i)` for every `i in 0..n` on the
     /// worker pool and deliver results to `fold` **in frame order**
     /// together with the frame's wall time. `work` runs concurrently and
@@ -165,6 +253,7 @@ impl StreamingEngine {
     {
         let (floor, ceiling) = self.worker_bounds(n);
         self.shrink_events.store(0, Ordering::Relaxed);
+        self.timeline.lock().expect("timeline lock").clear();
         if ceiling <= 1 {
             self.peak_workers.store(1, Ordering::Relaxed);
             for i in 0..n {
@@ -196,6 +285,7 @@ impl StreamingEngine {
                 let target = &target;
                 let done = &done;
                 let shrinks = &self.shrink_events;
+                let timeline = &self.timeline;
                 s.spawn(move || loop {
                     // Parked above the current pool size: wait for a grow
                     // decision (or the end of the run) without competing
@@ -230,6 +320,10 @@ impl StreamingEngine {
                                         .is_ok()
                                 {
                                     shrinks.fetch_add(1, Ordering::Relaxed);
+                                    timeline
+                                        .lock()
+                                        .expect("timeline lock")
+                                        .push(PoolSample { pool: t - 1, queue_depth: 0 });
                                 }
                                 continue;
                             }
@@ -276,6 +370,9 @@ impl StreamingEngine {
                                         |t| (t < ceiling).then_some(t + 1),
                                     ) {
                                         self.peak_workers.fetch_max(t + 1, Ordering::Relaxed);
+                                        self.timeline.lock().expect("timeline lock").push(
+                                            PoolSample { pool: t + 1, queue_depth: outstanding },
+                                        );
                                     }
                                 }
                             }
@@ -343,6 +440,252 @@ impl StreamingEngine {
                 Ok(())
             },
         )
+    }
+
+    /// The stage-graph scheduling core behind wall-clock pipelined
+    /// serving — the engine's **second job kind**: where
+    /// [`Self::stream_ordered`] schedules whole frames,
+    /// `stream_stages` schedules `(frame, stage)` jobs under three
+    /// ordering constraints:
+    ///
+    /// 1. **Frame order within a frame** — stage `s+1` of frame `f` can
+    ///    only run after stage `s` did; the frame's payload itself
+    ///    travels from job to job, so the dependency is structural.
+    /// 2. **Unit exclusivity** — at most one frame occupies an execution
+    ///    unit (`unit_of(frame, stage)`, e.g. a pipeline-stage chip) at a
+    ///    time: the hardware pipeline's structural hazard.
+    /// 3. **Residency window** — at most `in_flight` frames are admitted
+    ///    but not retired, exactly like the modeled
+    ///    `ChipCluster::run_pipelined` beat loop.
+    ///
+    /// `init` runs on the coordinator thread at admission and builds the
+    /// frame's payload; `work` runs on worker threads (dispatch is
+    /// oldest-frame-first) and must leave the payload ready for the next
+    /// stage; retired frames are delivered to `fold` **in frame order**
+    /// through a dependency-aware reorder buffer together with the
+    /// frame's completion instant. The first error aborts the run.
+    /// Returns the run's wall-clock stats: per-frame completion instants
+    /// and per-stage busy time — the measured counterpart of the analytic
+    /// initiation interval.
+    #[allow(clippy::too_many_arguments)]
+    pub fn stream_stages<P, I, W, F>(
+        &self,
+        n: usize,
+        stages: usize,
+        in_flight: usize,
+        unit_of: impl Fn(usize, usize) -> usize,
+        mut init: I,
+        work: W,
+        mut fold: F,
+    ) -> Result<StageStreamStats>
+    where
+        P: Send,
+        I: FnMut(usize) -> Result<P>,
+        W: Fn(usize, usize, &mut P) -> Result<()> + Sync,
+        F: FnMut(usize, P, Duration) -> Result<()>,
+    {
+        let stages = stages.max(1);
+        let in_flight = in_flight.max(1);
+        // Stage jobs run on a fixed pool sized from the larger of the
+        // floor and the dynamic-scaling ceiling (a `--workers 1..8` user
+        // asked for up to 8); concurrency can never exceed the residency
+        // window (at most one job per resident frame) or the frame
+        // count, and non-parallel backends stay on the coordinator
+        // thread.
+        let pool = self.cfg.workers.max(self.max_workers).max(1);
+        let workers = if self.backend.caps().parallel {
+            pool.min(in_flight).min(n.max(1))
+        } else {
+            1
+        };
+        // Same per-run contract as stream_ordered: the telemetry
+        // accessors describe the most recent run, whichever job kind it
+        // used (stage pools are fixed, so the timeline stays empty).
+        self.peak_workers.store(workers, Ordering::Relaxed);
+        self.shrink_events.store(0, Ordering::Relaxed);
+        self.timeline.lock().expect("timeline lock").clear();
+        let start = Instant::now();
+        let mut stats = StageStreamStats {
+            frame_done: vec![Duration::ZERO; n],
+            stage_busy: vec![Duration::ZERO; stages],
+            stage_units: vec![0usize; stages],
+            wall: Duration::ZERO,
+            workers,
+        };
+        if n == 0 {
+            return Ok(stats);
+        }
+        let mut unit_sets: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); stages];
+
+        if workers <= 1 {
+            // Sequential: same admission rules, jobs run inline with the
+            // oldest resident frame always advancing first — frames
+            // retire (and fold) in frame order by construction.
+            let mut slots: Vec<Option<P>> = (0..n).map(|_| None).collect();
+            let mut stage_of = vec![0usize; n];
+            let mut admitted = 0usize;
+            let mut retired = 0usize;
+            let mut live = 0usize;
+            while retired < n {
+                while admitted < n && live < in_flight {
+                    slots[admitted] = Some(init(admitted)?);
+                    live += 1;
+                    admitted += 1;
+                }
+                let f = (0..admitted)
+                    .find(|&f| slots[f].is_some() && stage_of[f] < stages)
+                    .expect("a resident frame always has a runnable stage");
+                let s = stage_of[f];
+                let mut payload = slots[f].take().expect("checked above");
+                unit_sets[s].insert(unit_of(f, s));
+                let t0 = Instant::now();
+                work(f, s, &mut payload)?;
+                stats.stage_busy[s] += t0.elapsed();
+                stage_of[f] = s + 1;
+                if s + 1 == stages {
+                    let at = start.elapsed();
+                    stats.frame_done[f] = at;
+                    fold(f, payload, at)?;
+                    live -= 1;
+                    retired += 1;
+                } else {
+                    slots[f] = Some(payload);
+                }
+            }
+            stats.stage_units = unit_sets.iter().map(|u| u.len()).collect();
+            stats.wall = start.elapsed();
+            return Ok(stats);
+        }
+
+        struct StageDone<P> {
+            frame: usize,
+            stage: usize,
+            payload: P,
+            result: Result<()>,
+            started: Duration,
+            finished: Duration,
+        }
+
+        let (job_tx, job_rx) = mpsc::sync_channel::<(usize, usize, P)>(workers);
+        let job_rx = Mutex::new(job_rx);
+        // Results unbounded so workers never block on delivery; the
+        // dispatcher only releases jobs whose dependencies are met, so
+        // the in-flight set is bounded by min(in_flight, units).
+        let (res_tx, res_rx) = mpsc::channel::<StageDone<P>>();
+
+        std::thread::scope(|s| -> Result<()> {
+            for _ in 0..workers {
+                let job_rx = &job_rx;
+                let res_tx = res_tx.clone();
+                let work = &work;
+                s.spawn(move || loop {
+                    let (frame, stage, mut payload) = {
+                        let rx = job_rx.lock().expect("stage job queue lock");
+                        match rx.recv() {
+                            Ok(j) => j,
+                            Err(_) => break, // dispatcher hung up
+                        }
+                    };
+                    let started = start.elapsed();
+                    // Contain panics: an unwinding worker would otherwise
+                    // leave the coordinator blocked on a result that
+                    // never comes (the other workers keep the channel
+                    // open) — turn the panic into a run-aborting error.
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        work(frame, stage, &mut payload)
+                    }))
+                    .unwrap_or_else(|p| {
+                        let msg = p
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| p.downcast_ref::<&str>().map(|m| m.to_string()))
+                            .unwrap_or_else(|| "<non-string panic>".into());
+                        Err(anyhow!("stage job (frame {frame}, stage {stage}) panicked: {msg}"))
+                    });
+                    let finished = start.elapsed();
+                    let done = StageDone { frame, stage, payload, result, started, finished };
+                    if res_tx.send(done).is_err() {
+                        break; // coordinator aborted
+                    }
+                });
+            }
+            drop(res_tx);
+
+            // Dispatch every dependency-free job, oldest frame first;
+            // park finished payloads until their next stage's unit frees
+            // up; fold retired frames in frame order (reorder buffer).
+            let mut slots: Vec<Option<P>> = (0..n).map(|_| None).collect();
+            let mut stage_of = vec![0usize; n];
+            let mut unit_busy: BTreeSet<usize> = BTreeSet::new();
+            let mut pending: BTreeMap<usize, (P, Duration)> = BTreeMap::new();
+            let mut next_fold = 0usize;
+            let mut admitted = 0usize;
+            let mut live = 0usize;
+            let mut jobs_in_flight = 0usize;
+            // Lowest frame that may still have work: frames retire in
+            // near-frame-order, so scanning from here keeps each
+            // dispatch pass O(in_flight) instead of O(frames ever seen).
+            let mut oldest = 0usize;
+            let mut coordinate = || -> Result<()> {
+                loop {
+                    while admitted < n && live < in_flight {
+                        slots[admitted] = Some(init(admitted)?);
+                        live += 1;
+                        admitted += 1;
+                    }
+                    while oldest < admitted && slots[oldest].is_none() && stage_of[oldest] >= stages
+                    {
+                        oldest += 1;
+                    }
+                    for f in oldest..admitted {
+                        if slots[f].is_none() || stage_of[f] >= stages {
+                            continue;
+                        }
+                        let unit = unit_of(f, stage_of[f]);
+                        if unit_busy.contains(&unit) {
+                            continue;
+                        }
+                        let payload = slots[f].take().expect("checked above");
+                        unit_busy.insert(unit);
+                        unit_sets[stage_of[f]].insert(unit);
+                        jobs_in_flight += 1;
+                        job_tx
+                            .send((f, stage_of[f], payload))
+                            .map_err(|_| anyhow!("stage worker pool exited early"))?;
+                    }
+                    if jobs_in_flight == 0 {
+                        debug_assert!(live == 0 && admitted == n);
+                        return Ok(());
+                    }
+                    let done = res_rx
+                        .recv()
+                        .map_err(|_| anyhow!("stage worker pool exited early"))?;
+                    jobs_in_flight -= 1;
+                    unit_busy.remove(&unit_of(done.frame, done.stage));
+                    stats.stage_busy[done.stage] += done.finished.saturating_sub(done.started);
+                    done.result?;
+                    stage_of[done.frame] = done.stage + 1;
+                    if done.stage + 1 == stages {
+                        live -= 1;
+                        stats.frame_done[done.frame] = done.finished;
+                        pending.insert(done.frame, (done.payload, done.finished));
+                        while let Some((payload, at)) = pending.remove(&next_fold) {
+                            fold(next_fold, payload, at)?;
+                            next_fold += 1;
+                        }
+                    } else {
+                        slots[done.frame] = Some(done.payload);
+                    }
+                }
+            };
+            let result = coordinate();
+            // Close the job queue so workers exit, success or not.
+            drop(job_tx);
+            result
+        })?;
+        stats.stage_units = unit_sets.iter().map(|u| u.len()).collect();
+        stats.wall = start.elapsed();
+        Ok(stats)
     }
 
     /// Run raw frames through the backend, returning results in frame
@@ -573,6 +916,121 @@ mod tests {
         );
         let out = engine.run_frames(&[], FrameOptions::default()).unwrap();
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn stage_jobs_respect_frame_order_unit_exclusivity_and_fold_order() {
+        let engine = StreamingEngine::new(
+            Arc::new(MockBackend { parallel: true }),
+            EngineConfig { workers: 4, queue_depth: 4, batch: 1 },
+        );
+        let (n, stages) = (6usize, 3usize);
+        // One claim counter per unit: two frames in the same unit at
+        // once is the pipeline hazard the scheduler must never allow.
+        let claims: Vec<AtomicUsize> = (0..stages).map(|_| AtomicUsize::new(0)).collect();
+        let overlap = AtomicBool::new(false);
+        let mut folded = Vec::new();
+        let stats = engine
+            .stream_stages(
+                n,
+                stages,
+                3,
+                |_f, s| s,
+                |f| Ok((f, 0usize)),
+                |f, s, p: &mut (usize, usize)| {
+                    assert_eq!(p.0, f, "payload followed the wrong frame");
+                    assert_eq!(p.1, s, "stage ran out of order");
+                    if claims[s].fetch_add(1, Ordering::SeqCst) != 0 {
+                        overlap.store(true, Ordering::SeqCst);
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                    claims[s].fetch_sub(1, Ordering::SeqCst);
+                    p.1 += 1;
+                    Ok(())
+                },
+                |f, p, done| {
+                    assert_eq!(p.1, stages, "folded frame missing stages");
+                    assert!(done > Duration::ZERO);
+                    folded.push(f);
+                    Ok(())
+                },
+            )
+            .unwrap();
+        assert_eq!(folded, vec![0, 1, 2, 3, 4, 5]);
+        assert!(!overlap.load(Ordering::SeqCst), "two frames occupied one unit at once");
+        assert_eq!(stats.frame_done.len(), n);
+        assert_eq!(stats.stage_busy.len(), stages);
+        assert!(stats.stage_busy.iter().all(|b| *b > Duration::ZERO));
+        // unit_of == stage index here, so each stage ran on one unit.
+        assert_eq!(stats.stage_units, vec![1, 1, 1]);
+        assert!(stats.wall > Duration::ZERO);
+        assert!(stats.measured_interval(3) > Duration::ZERO);
+        assert!(stats.stage_occupancy().iter().all(|&o| o > 0.0));
+    }
+
+    #[test]
+    fn stage_error_aborts_run() {
+        let engine = StreamingEngine::new(
+            Arc::new(MockBackend { parallel: true }),
+            EngineConfig { workers: 2, queue_depth: 4, batch: 1 },
+        );
+        let err = engine
+            .stream_stages(
+                4,
+                2,
+                2,
+                |_f, s| s,
+                |f| Ok(f),
+                |f, s, _p: &mut usize| {
+                    if f == 1 && s == 1 {
+                        anyhow::bail!("poisoned stage")
+                    }
+                    Ok(())
+                },
+                |_f, _p, _| Ok(()),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+    }
+
+    #[test]
+    fn stage_stream_sequential_oversized_window_and_empty_run() {
+        // Non-parallel backends keep every stage job on the coordinator
+        // thread; a window wider than the frame count must not deadlock.
+        let engine = StreamingEngine::new(
+            Arc::new(MockBackend { parallel: false }),
+            EngineConfig { workers: 8, queue_depth: 4, batch: 1 },
+        );
+        let mut folded = Vec::new();
+        let stats = engine
+            .stream_stages(
+                3,
+                2,
+                64,
+                |_f, _s| 0,
+                |f| Ok(f),
+                |_f, _s, _p: &mut usize| Ok(()),
+                |f, _p, _| {
+                    folded.push(f);
+                    Ok(())
+                },
+            )
+            .unwrap();
+        assert_eq!(folded, vec![0, 1, 2]);
+        assert_eq!(stats.workers, 1);
+        let empty = engine
+            .stream_stages(
+                0,
+                2,
+                2,
+                |_f, _s| 0,
+                |f| Ok(f),
+                |_f, _s, _p: &mut usize| Ok(()),
+                |_f, _p: usize, _| Ok(()),
+            )
+            .unwrap();
+        assert!(empty.frame_done.is_empty());
+        assert_eq!(empty.wall, Duration::ZERO);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 use crate::accel::energy::{EnergyModel, FrameEvents, PowerReport};
 use crate::accel::latency::NetworkLatency;
 use crate::config::AccelConfig;
+use crate::coordinator::engine::PoolSample;
 use crate::model::topology::{ConvKind, NetworkSpec};
 use crate::ref_impl::snn::ForwardResult;
 use crate::util::json::Json;
@@ -155,6 +156,18 @@ pub struct PipelineMetrics {
     /// Largest worker-pool size the run reached (equals `workers` for a
     /// fixed pool; 0 = not recorded).
     pub peak_workers: usize,
+    /// Measured wall-clock steady-state initiation interval of a
+    /// stage-executor run, in milliseconds (0 = the run was not
+    /// stage-pipelined).
+    pub wall_interval_ms: f64,
+    /// Per-stage busy fraction of a stage-executor run, normalized by
+    /// the execution units that ran each stage (empty = not
+    /// stage-pipelined).
+    pub stage_occupancy: Vec<f64>,
+    /// Worker-pool scaling time series of the run: pool size after each
+    /// grow/shrink decision, with the queue backlog that triggered it
+    /// (empty for fixed pools).
+    pub pool_timeline: Vec<PoolSample>,
 }
 
 impl PipelineMetrics {
@@ -217,6 +230,31 @@ impl PipelineMetrics {
         if self.peak_workers > 0 {
             m.insert("peak_workers".into(), Json::Num(self.peak_workers as f64));
         }
+        if self.wall_interval_ms > 0.0 {
+            m.insert("wall_interval_ms".into(), Json::Num(self.wall_interval_ms));
+        }
+        if !self.stage_occupancy.is_empty() {
+            m.insert(
+                "stage_occupancy".into(),
+                Json::Arr(self.stage_occupancy.iter().map(|&o| Json::Num(o)).collect()),
+            );
+        }
+        if !self.pool_timeline.is_empty() {
+            m.insert(
+                "pool_timeline".into(),
+                Json::Arr(
+                    self.pool_timeline
+                        .iter()
+                        .map(|s| {
+                            let mut o = BTreeMap::new();
+                            o.insert("pool".to_string(), Json::Num(s.pool as f64));
+                            o.insert("queue_depth".to_string(), Json::Num(s.queue_depth as f64));
+                            Json::Obj(o)
+                        })
+                        .collect(),
+                ),
+            );
+        }
         if let Some(hw) = &self.hw {
             let mut h = BTreeMap::new();
             h.insert("cycles".into(), Json::Num(hw.cycles as f64));
@@ -246,6 +284,23 @@ mod tests {
         assert!(m.wall_fps() > 0.0);
         assert_eq!(m.latency_pct(0.0), Duration::from_millis(10));
         assert!(m.latency_pct(0.99) >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn stage_serving_fields_serialize_when_recorded() {
+        let mut m = PipelineMetrics::for_run("cluster", 2);
+        m.record(Duration::from_millis(5), 1);
+        let j = m.to_json().to_string_compact();
+        assert!(!j.contains("wall_interval_ms") && !j.contains("stage_occupancy"));
+        m.wall_interval_ms = 12.5;
+        m.stage_occupancy = vec![0.9, 0.4];
+        m.pool_timeline = vec![PoolSample { pool: 2, queue_depth: 3 }];
+        let parsed = Json::parse(&m.to_json().to_string_compact()).unwrap();
+        assert_eq!(parsed.at(&["wall_interval_ms"]).unwrap().as_f64(), Some(12.5));
+        assert_eq!(parsed.at(&["stage_occupancy"]).unwrap().as_arr().unwrap().len(), 2);
+        let tl = parsed.at(&["pool_timeline"]).unwrap().as_arr().unwrap();
+        assert_eq!(tl[0].at(&["pool"]).unwrap().as_f64(), Some(2.0));
+        assert_eq!(tl[0].at(&["queue_depth"]).unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

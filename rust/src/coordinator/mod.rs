@@ -5,7 +5,10 @@
 //! - [`tiler`] — 32×18 block tiling plan (the spatial-parallel work units);
 //! - [`scheduler`] — per-layer SRAM residency / DRAM refetch schedule;
 //! - [`engine`] — backend-agnostic streaming engine: bounded frame queue,
-//!   worker pool, in-order (deterministic) result folding;
+//!   worker pool, in-order (deterministic) result folding — plus the
+//!   stage-job scheduler (`stream_stages`) behind wall-clock pipelining;
+//! - [`stage_exec`] — the wall-clock stage executor: cluster pipeline
+//!   stages as engine jobs on real threads, measured initiation interval;
 //! - [`pipeline`] — end-to-end frame pipeline over any
 //!   [`crate::backend::SnnBackend`]: inference, YOLO decode + NMS,
 //!   hardware metric estimation;
@@ -15,10 +18,12 @@ pub mod engine;
 pub mod metrics;
 pub mod pipeline;
 pub mod scheduler;
+pub mod stage_exec;
 pub mod tiler;
 
-pub use engine::{EngineConfig, StreamingEngine};
+pub use engine::{EngineConfig, PoolSample, StageStreamStats, StreamingEngine};
 pub use metrics::{FrameHwEstimate, PipelineMetrics};
 pub use pipeline::{DetectionPipeline, FrameResult, HwStatsMode, PipelineReport};
 pub use scheduler::{LayerPlan, LayerSchedule};
+pub use stage_exec::{StageExecutor, StageServingRun};
 pub use tiler::{TilePlan, TileRect};

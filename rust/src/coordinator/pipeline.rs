@@ -26,6 +26,7 @@ use crate::cluster::ChipCluster;
 use crate::config::{AccelConfig, ClusterConfig, ShardPolicy};
 use crate::coordinator::engine::{EngineConfig, StreamingEngine};
 use crate::coordinator::metrics::{FrameHwEstimate, PipelineMetrics};
+use crate::coordinator::stage_exec::{StageExecutor, StageServingRun};
 use crate::detect::dataset::Dataset;
 use crate::detect::map::mean_ap;
 use crate::detect::nms::nms;
@@ -39,7 +40,24 @@ use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Per-frame wall attribution for a stage-pipelined run: frames may
+/// complete out of index order (round-robin chips), so diff the
+/// completion instants in **completion order** and map each spacing back
+/// to its frame — naive index-order diffs would clamp to zero whenever a
+/// frame finished before its predecessor.
+fn completion_spacings(done: &[Duration]) -> Vec<Duration> {
+    let mut order: Vec<usize> = (0..done.len()).collect();
+    order.sort_by_key(|&i| done[i]);
+    let mut walls = vec![Duration::ZERO; done.len()];
+    let mut prev = Duration::ZERO;
+    for &i in &order {
+        walls[i] = done[i].saturating_sub(prev);
+        prev = done[i];
+    }
+    walls
+}
 
 /// How often to run the (costly) golden-model hardware estimation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -112,6 +130,16 @@ pub struct DetectionPipeline {
     /// field is overridden with the pipeline's [`AccelConfig`] when the
     /// backend is built, so `--cores` and `--chips` compose.
     pub cluster: ClusterConfig,
+    /// Wall-clock stage-pipelining window (`--pipeline N` on the CLI):
+    /// when > 0 and the cluster backend is active, frames route through
+    /// the stage executor ([`StageExecutor`]) with up to this many frames
+    /// resident across pipeline stages on real worker threads. 0 = off
+    /// (monolithic `run_frame` per work item).
+    pub pipeline_depth: usize,
+    /// The concrete cluster behind the trait object whenever the cluster
+    /// backend is active — the stage executor needs `ChipCluster`'s
+    /// stage partition and lease, which `dyn SnnBackend` cannot expose.
+    cluster_backend: Option<Arc<ChipCluster>>,
 }
 
 impl DetectionPipeline {
@@ -180,6 +208,8 @@ impl DetectionPipeline {
             queue_depth: 8,
             batch: 1,
             cluster: ClusterConfig::single_chip(),
+            pipeline_depth: 0,
+            cluster_backend: None,
         }
     }
 
@@ -201,6 +231,7 @@ impl DetectionPipeline {
     /// be selected at construction via [`Self::from_artifacts`] because it
     /// needs the compiled artifact.
     pub fn select_backend(&mut self, kind: BackendKind) -> Result<()> {
+        self.cluster_backend = None;
         self.backend = match kind {
             BackendKind::Golden => Arc::new(Self::golden_backend(&self.net, &self.weights)?),
             BackendKind::CycleSim => Arc::new(CycleSimBackend::new(
@@ -208,7 +239,11 @@ impl DetectionPipeline {
                 self.weights.clone(),
                 self.cfg.clone(),
             )?),
-            BackendKind::Cluster => Arc::new(self.build_cluster()?),
+            BackendKind::Cluster => {
+                let cl = Arc::new(self.build_cluster()?);
+                self.cluster_backend = Some(cl.clone());
+                cl
+            }
             BackendKind::Pjrt => match &self.pjrt {
                 Some(b) => b.clone(),
                 None => bail!(
@@ -310,6 +345,27 @@ impl DetectionPipeline {
         .with_max_workers(self.max_workers)
     }
 
+    /// The concrete cluster when the cluster backend is active.
+    pub fn cluster_backend(&self) -> Option<&Arc<ChipCluster>> {
+        self.cluster_backend.as_ref()
+    }
+
+    /// Whether frames route through the wall-clock stage executor: a
+    /// cluster backend is active and [`Self::pipeline_depth`] set a
+    /// residency window.
+    pub fn stage_serving_active(&self) -> bool {
+        self.pipeline_depth > 0 && self.cluster_backend.is_some()
+    }
+
+    /// Run `images` through the stage executor (active cluster backend,
+    /// `pipeline_depth` window): per-frame backend results in frame
+    /// order plus the measured wall-clock pipeline timing.
+    fn run_stage_serving(&self, images: &[&Tensor<u8>]) -> Result<StageServingRun> {
+        let cl = self.cluster_backend.as_ref().expect("stage serving needs the cluster backend");
+        let engine = self.engine();
+        StageExecutor::new(cl).run(&engine, images, &FrameOptions::default(), self.pipeline_depth)
+    }
+
     /// Head accumulator of one frame on the active backend.
     pub fn head_acc(&self, image: &Tensor<u8>) -> Result<Tensor<i32>> {
         Ok(self.backend.run_frame(image, &FrameOptions::default())?.head_acc)
@@ -320,9 +376,17 @@ impl DetectionPipeline {
     /// batch, dataset) runs.
     fn detect_frame(&self, image: &Tensor<u8>) -> Result<(Vec<Box2D>, Tensor<f32>)> {
         let acc = self.backend.run_frame(image, &FrameOptions::default())?.head_acc;
-        let head = self.dequantize_head(&acc);
+        Ok(self.decode_head(&acc))
+    }
+
+    /// Dequantize → decode → NMS on an already-computed head accumulator
+    /// — shared by the monolithic path ([`Self::detect_frame`]) and the
+    /// stage-serving paths, which receive their accumulators from the
+    /// stage executor instead of `run_frame`.
+    fn decode_head(&self, acc: &Tensor<i32>) -> (Vec<Box2D>, Tensor<f32>) {
+        let head = self.dequantize_head(acc);
         let dets = nms(decode(&head, &self.head_cfg, self.conf_thresh), self.nms_iou);
-        Ok((dets, head))
+        (dets, head)
     }
 
     /// Process one frame end to end.
@@ -334,8 +398,22 @@ impl DetectionPipeline {
 
     /// Process a batch of frames through the streaming engine; results
     /// come back in frame order and are bit-identical for any worker
-    /// count.
+    /// count. With [`Self::stage_serving_active`] the frames advance
+    /// through cluster pipeline stages on worker threads instead of
+    /// running monolithically — same bits, overlapped wall-clock.
     pub fn process_frames(&self, images: &[&Tensor<u8>]) -> Result<Vec<FrameResult>> {
+        if self.stage_serving_active() {
+            let run = self.run_stage_serving(images)?;
+            let mut out: Vec<FrameResult> = Vec::with_capacity(images.len());
+            // Per-frame latency is not observable once stages overlap;
+            // attribute each frame its completion spacing instead.
+            let walls = completion_spacings(&run.stats.frame_done);
+            for (bf, &wall) in run.frames.iter().zip(&walls) {
+                let (detections, head) = self.decode_head(&bf.head_acc);
+                out.push(FrameResult { detections, head, wall });
+            }
+            return Ok(out);
+        }
         let engine = self.engine();
         let mut out: Vec<FrameResult> = Vec::with_capacity(images.len());
         engine.stream_batched(
@@ -406,15 +484,42 @@ impl DetectionPipeline {
 
     /// Run the pipeline over a dataset, computing mAP and metrics. Frames
     /// stream through the worker pool; metrics and detections are folded
-    /// in frame order (deterministic for any worker count).
+    /// in frame order (deterministic for any worker count). With
+    /// [`Self::stage_serving_active`] the run goes through the stage
+    /// executor instead, and the metrics additionally report the measured
+    /// wall-clock initiation interval and per-stage occupancy.
     pub fn process_dataset(&self, ds: &Dataset) -> Result<PipelineReport> {
+        let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+        if self.stage_serving_active() {
+            let run = self.run_stage_serving(&images)?;
+            let mut metrics = PipelineMetrics::for_run(self.backend.name(), run.stats.workers);
+            let mut dets: Vec<(usize, Box2D)> = Vec::new();
+            let walls = completion_spacings(&run.stats.frame_done);
+            for (i, (bf, &wall)) in run.frames.iter().zip(&walls).enumerate() {
+                let (frame_dets, _head) = self.decode_head(&bf.head_acc);
+                metrics.record(wall, frame_dets.len());
+                dets.extend(frame_dets.iter().map(|d| (i, *d)));
+            }
+            // Pipelined stages share no per-frame cadence; estimate the
+            // hardware metrics once, on the first frame.
+            if self.hw_mode != HwStatsMode::Off {
+                if let Some(first) = ds.samples.first() {
+                    metrics.hw = Some(self.estimate_hw(&first.image)?);
+                }
+            }
+            metrics.peak_workers = run.stats.workers;
+            metrics.wall_interval_ms = run.wall_interval().as_secs_f64() * 1e3;
+            metrics.stage_occupancy = run.stage_occupancy();
+            let gts = ds.ground_truth();
+            let summary = mean_ap(&dets, &gts, NUM_CLASSES, 0.5);
+            return Ok(PipelineReport { metrics, map: summary.mean, ap: summary.ap });
+        }
         let engine = self.engine();
         let mut metrics = PipelineMetrics::for_run(
             self.backend.name(),
             engine.effective_workers(ds.samples.len()),
         );
         let mut dets: Vec<(usize, Box2D)> = Vec::new();
-        let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
         engine.stream_batched(
             images.len(),
             |i| Ok(self.detect_frame(images[i])?.0),
@@ -433,6 +538,7 @@ impl DetectionPipeline {
             },
         )?;
         metrics.peak_workers = engine.peak_workers();
+        metrics.pool_timeline = engine.scaling_timeline();
         let gts = ds.ground_truth();
         let summary = mean_ap(&dets, &gts, NUM_CLASSES, 0.5);
         Ok(PipelineReport { metrics, map: summary.mean, ap: summary.ap })

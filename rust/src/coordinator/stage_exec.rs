@@ -1,0 +1,144 @@
+//! Wall-clock pipelined serving: the stage-level executor that turns the
+//! cluster's *modeled* pipeline overlap into *measured* throughput on
+//! real threads.
+//!
+//! `ChipCluster::run_pipelined` realizes the analytic initiation interval
+//! in modeled cycles, but the serving path used to execute each frame's
+//! walk monolithically — one `run_frame` per work item — so the pipeline
+//! gain never showed up as wall-clock throughput. [`StageExecutor`]
+//! closes that seam: it decomposes each frame into per-stage jobs over
+//! the cluster's resumable walk state (a [`StageFrame`]) and feeds them
+//! to [`StreamingEngine::stream_stages`] workers, so up to `in_flight`
+//! frames advance concurrently through the stage partition while each
+//! chip — leased from the cluster through a [`StageLease`] — serializes
+//! its own stages: the hardware pipeline's structural hazard, reproduced
+//! in wall-clock time.
+//!
+//! ```text
+//!  images ──▶ admit ≤ in_flight (upload charged on admission)
+//!                  │
+//!                  ▼        StreamingEngine workers
+//!   frame f  : [s0]──▶[s1]──▶ … ──▶[sN]──▶ retire ┐  fold in frame
+//!   frame f+1:       [s0]──▶[s1]──▶ …             ├─ order (reorder
+//!   frame f+2:             [s0]──▶ …              ┘  buffer)
+//!                  ▲
+//!        each [s] locks its chip's StageLease unit — one frame
+//!        per chip at a time, stages of different frames overlap
+//! ```
+//!
+//! Outputs are **bit-identical to serial frame order** for every
+//! (workers, in_flight, policy) combination — the walk is the same, only
+//! the wall-clock overlap differs — property-checked against the golden
+//! model by the shared conformance harness in `tests/stage_serving.rs`,
+//! which also asserts the measured interval shrinks as the window grows.
+
+use crate::backend::{BackendFrame, FrameOptions};
+use crate::cluster::{ChipCluster, ClusterRun, StageLease};
+use crate::coordinator::engine::{StageStreamStats, StreamingEngine};
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::time::Duration;
+
+/// The wall-clock stage executor bound to one cluster: owns the lease on
+/// the cluster's chips for the executor's lifetime and schedules stage
+/// jobs through any [`StreamingEngine`].
+pub struct StageExecutor<'c> {
+    cluster: &'c ChipCluster,
+    lease: StageLease,
+}
+
+impl<'c> StageExecutor<'c> {
+    /// New executor leasing the cluster's chips.
+    pub fn new(cluster: &'c ChipCluster) -> StageExecutor<'c> {
+        StageExecutor { cluster, lease: cluster.lease() }
+    }
+
+    /// Stages in the cluster's partition (LayerPipeline: one per chip;
+    /// other policies: one whole-frame stage).
+    pub fn stages(&self) -> usize {
+        self.cluster.stage_partition().len()
+    }
+
+    /// Run `images` through the stage pipeline with at most `in_flight`
+    /// frames resident, scheduling stage jobs on `engine`'s workers.
+    /// Results come back in frame order, bit-identical to serial
+    /// `run_frame` calls.
+    pub fn run(
+        &self,
+        engine: &StreamingEngine,
+        images: &[&Tensor<u8>],
+        opts: &FrameOptions,
+        in_flight: usize,
+    ) -> Result<StageServingRun> {
+        let n = images.len();
+        let stages = self.stages();
+        let in_flight = in_flight.max(1);
+        let mut frames: Vec<Option<BackendFrame>> = (0..n).map(|_| None).collect();
+        let mut runs: Vec<Option<ClusterRun>> = (0..n).map(|_| None).collect();
+        let stats = engine.stream_stages(
+            n,
+            stages,
+            in_flight,
+            |f, s| self.cluster.stage_unit(f, s),
+            |f| Ok(self.cluster.stage_frame(f, images[f])),
+            |f, s, slot| {
+                debug_assert_eq!(slot.stages_done(), s);
+                slot.run_stage(&self.lease, images[f], opts)
+            },
+            |f, slot, _done| {
+                let cf = slot.finish()?;
+                frames[f] = Some(cf.frame);
+                runs[f] = Some(cf.run);
+                Ok(())
+            },
+        )?;
+        Ok(StageServingRun {
+            frames: frames.into_iter().map(|f| f.expect("every frame retired")).collect(),
+            cluster_runs: runs.into_iter().map(|r| r.expect("every frame retired")).collect(),
+            stats,
+            in_flight,
+            stages,
+        })
+    }
+}
+
+/// Result of one wall-clock stage-serving run: per-frame backend outputs
+/// (bit-identical to serial frame order) and cluster accounting, plus the
+/// measured pipeline timing.
+#[derive(Clone, Debug)]
+pub struct StageServingRun {
+    /// Per-frame results, in frame order.
+    pub frames: Vec<BackendFrame>,
+    /// Per-frame cluster accounting (modeled cycles, interconnect log,
+    /// energy) — the same record serial execution produces.
+    pub cluster_runs: Vec<ClusterRun>,
+    /// Wall-clock stats from the stage scheduler.
+    pub stats: StageStreamStats,
+    /// Residency window the run used.
+    pub in_flight: usize,
+    /// Stages in the partition.
+    pub stages: usize,
+}
+
+impl StageServingRun {
+    /// Measured wall-clock initiation interval: completion spacing past
+    /// the fill window.
+    pub fn wall_interval(&self) -> Duration {
+        self.stats.measured_interval(self.in_flight)
+    }
+
+    /// Wall-clock steady-state throughput implied by the interval.
+    pub fn steady_fps(&self) -> f64 {
+        let i = self.wall_interval().as_secs_f64();
+        if i <= 0.0 {
+            0.0
+        } else {
+            1.0 / i
+        }
+    }
+
+    /// Per-stage busy fraction of the run.
+    pub fn stage_occupancy(&self) -> Vec<f64> {
+        self.stats.stage_occupancy()
+    }
+}

@@ -34,9 +34,13 @@
 //!
 //! The walk is **resumable**: [`WalkState`] carries the inter-layer
 //! spike planes, so a caller can execute an arbitrary subset of layers
-//! per call ([`LayerWalk::run_layers`]). That is the seam the pipelined
-//! cluster executor uses to keep several frames resident at different
-//! pipeline stages (`ChipCluster::run_pipelined`).
+//! per call ([`LayerWalk::run_layers`]). That is the seam both pipelined
+//! executors use to keep several frames resident at different pipeline
+//! stages — the modeled-cycle beat loop (`ChipCluster::run_pipelined`)
+//! and the wall-clock stage executor
+//! (`coordinator::stage_exec::StageExecutor`), which additionally relies
+//! on the state being `Send` (stage jobs hop between worker threads) and
+//! on the [`StageCompletion`] events it records to audit stage order.
 
 use crate::accel::controller::{LayerInput, LayerRun, SystemController};
 use crate::backend::{BackendFrame, FrameOptions, LayerObservation};
@@ -125,18 +129,41 @@ impl WalkHooks for NopHooks {
     }
 }
 
+/// One stage-completion event recorded on a resumable [`WalkState`]: the
+/// wall-clock stage executor tags each `run_layers` call with its stage
+/// index so consumers can audit that a frame's stages completed in order
+/// even when the jobs hopped between worker threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StageCompletion {
+    /// Caller-assigned stage index.
+    pub stage: usize,
+    /// Total layers executed on this state when the stage completed.
+    pub layers_done: usize,
+}
+
 /// The walk's inter-layer state: compressed spike planes keyed by
 /// producing layer, the implicit-predecessor cursor, the head
 /// accumulator, and any collected observations. Keeping it separate from
 /// [`LayerWalk`] makes the walk resumable — a caller may execute a few
 /// layers, do something else (ship planes to another chip, admit another
-/// frame), then continue.
+/// frame), then continue. The state is `Send`: the wall-clock stage
+/// executor parks it between stage jobs that run on different worker
+/// threads.
 #[derive(Default)]
 pub struct WalkState {
     outputs: BTreeMap<String, Vec<SpikeMap>>,
     prev: Option<String>,
     head: Option<Tensor<i32>>,
     layers: BTreeMap<String, LayerObservation>,
+    layers_done: usize,
+    stage_events: Vec<StageCompletion>,
+}
+
+// Compile-time guarantee, not a convention: a resumable walk must be able
+// to cross threads for the stage executor to exist.
+#[allow(dead_code)]
+fn _walk_state_is_send(st: WalkState) -> impl Send {
+    st
 }
 
 impl WalkState {
@@ -154,6 +181,23 @@ impl WalkState {
     /// Compressed outputs of a layer, if it ran already.
     pub fn output_of(&self, layer: &str) -> Option<&[SpikeMap]> {
         self.outputs.get(layer).map(|v| v.as_slice())
+    }
+
+    /// Total layers executed against this state so far (across all
+    /// `run_layers` calls).
+    pub fn layers_done(&self) -> usize {
+        self.layers_done
+    }
+
+    /// Mark the end of one executor stage; pairs each caller-defined
+    /// stage with the walk progress it reached.
+    pub fn record_stage_completion(&mut self, stage: usize) {
+        self.stage_events.push(StageCompletion { stage, layers_done: self.layers_done });
+    }
+
+    /// Stage-completion events, in completion order.
+    pub fn stage_completions(&self) -> &[StageCompletion] {
+        &self.stage_events
     }
 }
 
@@ -294,6 +338,7 @@ impl<'a> LayerWalk<'a> {
                 st.outputs.insert(l.name.clone(), run.output);
             }
             st.prev = Some(l.name.clone());
+            st.layers_done += 1;
         }
         Ok(())
     }
@@ -373,6 +418,25 @@ mod tests {
         assert!(!st.has_head());
         // Finishing before the head ran is an error, not a silent zero.
         assert!(LayerWalk::finish(st).is_err());
+    }
+
+    #[test]
+    fn stage_completions_record_progress() {
+        let (net, w, img) = setup();
+        let planes = planes_of(&net, &w);
+        let walk = LayerWalk::new(&net, &w, &planes);
+        let mut hooks = NopHooks::new(AccelConfig::paper());
+        let mut st = WalkState::new();
+        let opts = FrameOptions::default();
+        walk.run_layers(&mut st, [0usize], &img, &opts, &mut hooks).unwrap();
+        st.record_stage_completion(0);
+        walk.run_layers(&mut st, 1..net.layers.len(), &img, &opts, &mut hooks).unwrap();
+        st.record_stage_completion(1);
+        assert_eq!(st.layers_done(), net.layers.len());
+        let ev = st.stage_completions();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0], StageCompletion { stage: 0, layers_done: 1 });
+        assert_eq!(ev[1], StageCompletion { stage: 1, layers_done: net.layers.len() });
     }
 
     #[test]

@@ -17,7 +17,9 @@ use scsnn::accel::parallelism::{fig6_study, multicore_study};
 use scsnn::backend::{BackendKind, FrameOptions};
 use scsnn::cluster::ChipCluster;
 use scsnn::config::{AccelConfig, ClusterConfig, ShardPolicy};
+use scsnn::coordinator::engine::{EngineConfig, StreamingEngine};
 use scsnn::coordinator::pipeline::{DetectionPipeline, HwStatsMode};
+use scsnn::coordinator::stage_exec::StageExecutor;
 use scsnn::detect::dataset::{write_ppm, Dataset};
 use scsnn::model::miout::MioutAccumulator;
 use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
@@ -63,7 +65,8 @@ fn print_usage() {
          usage: scsnn <detect|simulate|parallelism|dram|timesteps|miout|report> [--options]\n\
          common options: --artifacts DIR  --scale full|tiny  --seed N\n\
          serving options: --backend golden|cyclesim|pjrt|cluster|auto  --workers N|MIN..MAX  --cores N  --batch N\n\
-         cluster options: --chips N  --shard-policy frame|pipeline|tile  --in-flight N  (--want-cycles with auto)"
+         cluster options: --chips N  --shard-policy frame|pipeline|tile  --in-flight N  (--want-cycles with auto)\n\
+         stage serving:   --pipeline N  (wall-clock pipelined cluster serving, N frames in flight)"
     );
 }
 
@@ -143,6 +146,7 @@ fn cmd_detect(args: &Args) -> Result<()> {
     let policy = ShardPolicy::parse(policy_str)
         .ok_or_else(|| anyhow!("unknown shard policy {policy_str:?} (frame|pipeline|tile)"))?;
     pipeline.set_cluster(chips, policy)?;
+    pipeline.pipeline_depth = args.parsed_or("pipeline", 0usize);
 
     let ds_path = args
         .get("dataset")
@@ -167,9 +171,22 @@ fn cmd_detect(args: &Args) -> Result<()> {
             _ => {}
         }
     }
+    if pipeline.pipeline_depth > 0 && !pipeline.stage_serving_active() {
+        eprintln!(
+            "note: --pipeline {} has no effect on the {} backend — stage serving needs the \
+             cluster (--chips N or --backend cluster)",
+            pipeline.pipeline_depth,
+            pipeline.backend_name()
+        );
+    }
     // Only report the cluster geometry when the cluster actually runs.
     let cluster_note = if pipeline.backend_name() == "cluster" {
-        format!(", {chips} chips [{}]", policy.label())
+        let stage_note = if pipeline.stage_serving_active() {
+            format!(", stage-pipelined in-flight {}", pipeline.pipeline_depth)
+        } else {
+            String::new()
+        };
+        format!(", {chips} chips [{}]{stage_note}", policy.label())
     } else {
         String::new()
     };
@@ -227,16 +244,21 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let chips = args.parsed_or("chips", 1usize).max(1);
     if chips > 1 {
         let in_flight = args.parsed_or("in-flight", chips.max(2)).max(1);
+        // `--pipeline N` additionally runs the wall-clock stage executor
+        // (N frames in flight on real threads) for a measured
+        // wall-interval column next to the modeled one.
+        let wall_depth = args.parsed_or("pipeline", 0usize);
         // Executing the full-scale simulator takes hours; the measured
-        // column runs the pipelined executor at tiny scale only.
+        // columns run the pipelined executors at tiny scale only.
         let measure = sc == Scale::Tiny;
-        let frames = 2 * in_flight + 2;
+        let frames = 2 * in_flight.max(wall_depth) + 2;
         println!(
             "cluster of {chips} chips (interval: analytic vs executed over {frames} pipelined frames, in-flight {in_flight}):"
         );
         println!(
-            "  {:<9} {:>14} {:>18} {:>18} {:>12}",
-            "policy", "frame cycles", "analytic interval", "measured interval", "steady fps"
+            "  {:<9} {:>14} {:>18} {:>18} {:>12} {:>14}",
+            "policy", "frame cycles", "analytic interval", "measured interval", "steady fps",
+            "wall ms/frame"
         );
         let ds = measure.then(|| {
             Dataset::synth(frames, net.input_w, net.input_h, args.parsed_or("seed", 42u64) + 1)
@@ -247,36 +269,59 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 .with_policy(policy);
             let cl = LatencyModel::cluster(&net, &weights, &cc);
             let analytic = cl.pipeline_interval_bounded(in_flight);
-            let (measured, steady) = match &ds {
+            let (measured, steady, wall) = match &ds {
                 Some(ds) => {
-                    let cluster = ChipCluster::new(
+                    let cluster = Arc::new(ChipCluster::new(
                         Arc::new(net.clone()),
                         Arc::new(weights.clone()),
                         cc.clone(),
-                    )?;
+                    )?);
                     let imgs: Vec<&Tensor<u8>> =
                         ds.samples.iter().map(|s| &s.image).collect();
                     let run = cluster.run_pipelined(&imgs, &FrameOptions::default(), in_flight)?;
+                    // Wall column: the same frames through the stage
+                    // executor on real worker threads.
+                    let wall = if wall_depth > 0 {
+                        let engine = StreamingEngine::new(
+                            cluster.clone(),
+                            EngineConfig { workers: wall_depth, queue_depth: 8, batch: 1 },
+                        );
+                        let sr = StageExecutor::new(&cluster).run(
+                            &engine,
+                            &imgs,
+                            &FrameOptions::default(),
+                            wall_depth,
+                        )?;
+                        format!("{:.2}", sr.wall_interval().as_secs_f64() * 1e3)
+                    } else {
+                        "-".to_string()
+                    };
                     (
                         format!("{:.0}", run.measured_interval()),
                         format!("{:.1}", run.steady_fps(cfg.clock_hz)),
+                        wall,
                     )
                 }
-                None => {
-                    ("-".to_string(), format!("{:.1}", cfg.clock_hz / analytic.max(1) as f64))
-                }
+                None => (
+                    "-".to_string(),
+                    format!("{:.1}", cfg.clock_hz / analytic.max(1) as f64),
+                    "-".to_string(),
+                ),
             };
             println!(
-                "  {:<9} {:>14} {:>18} {:>18} {:>12}",
+                "  {:<9} {:>14} {:>18} {:>18} {:>12} {:>14}",
                 policy.label(),
                 cl.compute_makespan,
                 analytic,
                 measured,
-                steady
+                steady,
+                wall
             );
         }
         if !measure {
             println!("  (measured column needs --scale tiny; full scale stays analytic-only)");
+        } else if wall_depth == 0 {
+            println!("  (wall ms/frame column needs --pipeline N: stage executor on real threads)");
         }
         println!("  (simulated counters + interconnect: `scsnn detect --chips N`, `cargo bench --bench perf_cluster` or `--bench perf_pipeline`)");
     }

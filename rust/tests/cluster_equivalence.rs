@@ -11,6 +11,9 @@
 //!   interconnect cycles/energy with the `LinkSpec` constants re-applied
 //!   to the recorded transfer log.
 
+mod harness;
+
+use harness::tiny_cluster as cluster;
 use scsnn::accel::dram::LinkSpec;
 use scsnn::accel::latency::LatencyModel;
 use scsnn::backend::{CycleSimBackend, FrameOptions, SnnBackend};
@@ -18,27 +21,14 @@ use scsnn::cluster::ChipCluster;
 use scsnn::config::{AccelConfig, ClusterConfig, ShardPolicy};
 use scsnn::coordinator::pipeline::DetectionPipeline;
 use scsnn::detect::dataset::Dataset;
-use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::topology::NetworkSpec;
 use scsnn::model::weights::ModelWeights;
 use scsnn::tensor::Tensor;
 use std::sync::Arc;
 
 fn setup(seed: u64) -> (Arc<NetworkSpec>, Arc<ModelWeights>, Tensor<u8>) {
-    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
-    let mut w = ModelWeights::random(&net, 1.0, seed);
-    w.prune_fine_grained(0.8);
-    let ds = Dataset::synth(1, net.input_w, net.input_h, seed + 1);
-    (Arc::new(net), Arc::new(w), ds.samples[0].image.clone())
-}
-
-fn cluster(
-    net: &Arc<NetworkSpec>,
-    w: &Arc<ModelWeights>,
-    chips: usize,
-    policy: ShardPolicy,
-) -> ChipCluster {
-    let cfg = ClusterConfig::single_chip().with_chips(chips).with_policy(policy);
-    ChipCluster::new(net.clone(), w.clone(), cfg).unwrap()
+    let (net, w, ds) = harness::tiny_setup(1, seed);
+    (net, w, ds.samples[0].image.clone())
 }
 
 #[test]
@@ -61,9 +51,7 @@ fn single_chip_cluster_is_bit_identical_to_plain_backend_for_every_policy() {
 
 #[test]
 fn all_policies_agree_on_detections_at_any_chip_count() {
-    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
-    let mut w = ModelWeights::random(&net, 1.0, 210);
-    w.prune_fine_grained(0.8);
+    let (net, w) = harness::tiny_raw(210);
     let ds = Dataset::synth(2, net.input_w, net.input_h, 211);
     let mut p = DetectionPipeline::from_weights(net, w).unwrap();
     let mut reference: Option<Vec<_>> = None;

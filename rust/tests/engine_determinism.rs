@@ -123,6 +123,61 @@ fn dynamic_worker_scaling_bit_identical_to_fixed_pool() {
 }
 
 #[test]
+fn scaling_timeline_brackets_peak_and_never_reorders_output() {
+    // The (pool size, queue depth) time series exported for
+    // PipelineMetrics must bracket the recorded peak — every sample in
+    // [floor, peak], the peak itself present whenever the pool grew —
+    // and recording it must not change a single output bit.
+    let (net, w, ds) = setup(95, 8);
+    let be: Arc<dyn SnnBackend> =
+        Arc::new(CycleSimBackend::new(net, w, AccelConfig::paper()).unwrap());
+    let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+    let fixed = run_with(be.clone(), &ds, 1, 1);
+    let engine = StreamingEngine::new(
+        be,
+        EngineConfig { workers: 1, queue_depth: 2, batch: 1 },
+    )
+    .with_max_workers(4);
+    let got = engine
+        .run_frames(&images, FrameOptions { collect_stats: true })
+        .unwrap();
+    assert_eq!(fixed, got, "scaling telemetry must not change outputs");
+    let peak = engine.peak_workers();
+    let timeline = engine.scaling_timeline();
+    for s in &timeline {
+        assert!(
+            s.pool >= 1 && s.pool <= peak,
+            "sample {s:?} outside [1, {peak}]"
+        );
+    }
+    if peak > 1 {
+        // Growth happened: the series records it, peak included, and
+        // every grow decision carries the backlog that justified it.
+        assert!(!timeline.is_empty(), "peak {peak} with an empty timeline");
+        assert_eq!(timeline.iter().map(|s| s.pool).max().unwrap(), peak);
+        assert!(timeline.iter().any(|s| s.pool > 1 && s.queue_depth > 0));
+    }
+    if engine.shrink_events() > 0 {
+        assert!(
+            timeline.iter().any(|s| s.pool < peak),
+            "shrinks recorded but never sampled"
+        );
+    }
+    // The dataset path exports the same series into PipelineMetrics.
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let mut w = ModelWeights::random(&net, 1.0, 96);
+    w.prune_fine_grained(0.8);
+    let ds = Dataset::synth(4, net.input_w, net.input_h, 97);
+    let mut p = DetectionPipeline::from_weights(net, w).unwrap();
+    p.workers = 1;
+    p.max_workers = 4;
+    let rep = p.process_dataset(&ds).unwrap();
+    for s in &rep.metrics.pool_timeline {
+        assert!(s.pool >= 1 && s.pool <= rep.metrics.peak_workers);
+    }
+}
+
+#[test]
 fn pipeline_detections_workers4_bit_identical_to_workers1() {
     let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
     let mut w = ModelWeights::random(&net, 1.0, 80);

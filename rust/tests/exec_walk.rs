@@ -9,146 +9,22 @@
 //! - the analytic latency model (exact per-layer cycle lock-step),
 //! - the multi-chip cluster (every policy a hook instantiation of the
 //!   same walk, bit-exact with the plain backend).
+//!
+//! The random-chain generators live in the shared harness
+//! (`tests/harness/mod.rs`) — same shapes, same seeds, reused by the
+//! stage-serving conformance suite.
 
+mod harness;
+
+use harness::{chain_config, planes_of, random_chain, random_image};
 use scsnn::accel::latency::LatencyModel;
 use scsnn::backend::{CycleSimBackend, FrameOptions, GoldenBackend, SnnBackend};
 use scsnn::cluster::ChipCluster;
-use scsnn::config::{AccelConfig, ClusterConfig, ShardPolicy};
+use scsnn::config::{ClusterConfig, ShardPolicy};
 use scsnn::exec::{LayerWalk, NopHooks};
-use scsnn::model::topology::{ConvKind, ConvSpec, NetworkSpec};
-use scsnn::model::weights::ModelWeights;
 use scsnn::ref_impl::ForwardOptions;
-use scsnn::sparse::{bitmask::compress_kernel4, BitMaskKernel};
-use scsnn::tensor::Tensor;
-use scsnn::util::{run_prop, Gen};
-use std::collections::BTreeMap;
+use scsnn::util::run_prop;
 use std::sync::Arc;
-
-/// A random sequential chain in the shape the paper's networks take:
-/// encoding conv (bit-serial, single- or uniform-step), a boundary conv
-/// expanding to `t` steps, a few `t → t` spike layers, and a 1×1 head —
-/// with random channel widths, kernel sizes, fused pools and pruning.
-fn random_chain(g: &mut Gen) -> (NetworkSpec, ModelWeights) {
-    let in_w = [16usize, 24, 32][g.usize(0, 3)];
-    let in_h = 12usize;
-    let t = 1 + g.usize(0, 3); // 1..=3 (register file caps at 4)
-    let uniform_enc = g.bool(0.3); // encoding recomputed every step
-    let n_mid = g.usize(0, 3);
-
-    let mut layers: Vec<ConvSpec> = Vec::new();
-    let (mut w, mut h) = (in_w, in_h);
-    let enc_t = if uniform_enc { t } else { 1 };
-    let enc_c = 2 + g.usize(0, 5);
-    let enc_pool = g.bool(0.5);
-    layers.push(ConvSpec {
-        name: "enc".into(),
-        kind: ConvKind::Encoding,
-        c_in: 3,
-        c_out: enc_c,
-        k: 3,
-        in_t: enc_t,
-        out_t: enc_t,
-        maxpool_after: enc_pool,
-        in_w: w,
-        in_h: h,
-        concat_with: None,
-        input_from: None,
-    });
-    if enc_pool {
-        w /= 2;
-        h /= 2;
-    }
-    let mut prev_c = enc_c;
-
-    // Boundary conv: enc_t → t (the mixed-time-step replay path when
-    // enc_t == 1 < t).
-    let b_c = 2 + g.usize(0, 5);
-    let b_pool = g.bool(0.5);
-    layers.push(ConvSpec {
-        name: "conv1".into(),
-        kind: ConvKind::Spike,
-        c_in: prev_c,
-        c_out: b_c,
-        k: if g.bool(0.7) { 3 } else { 1 },
-        in_t: enc_t,
-        out_t: t,
-        maxpool_after: b_pool,
-        in_w: w,
-        in_h: h,
-        concat_with: None,
-        input_from: None,
-    });
-    if b_pool {
-        w /= 2;
-        h /= 2;
-    }
-    prev_c = b_c;
-
-    for i in 0..n_mid {
-        let c = 2 + g.usize(0, 5);
-        layers.push(ConvSpec {
-            name: format!("mid{i}"),
-            kind: ConvKind::Spike,
-            c_in: prev_c,
-            c_out: c,
-            k: if g.bool(0.7) { 3 } else { 1 },
-            in_t: t,
-            out_t: t,
-            maxpool_after: false,
-            in_w: w,
-            in_h: h,
-            concat_with: None,
-            input_from: None,
-        });
-        prev_c = c;
-    }
-
-    layers.push(ConvSpec {
-        name: "head".into(),
-        kind: ConvKind::Output,
-        c_in: prev_c,
-        c_out: 2 + g.usize(0, 4),
-        k: 1,
-        in_t: t,
-        out_t: 1,
-        maxpool_after: false,
-        in_w: w,
-        in_h: h,
-        concat_with: None,
-        input_from: None,
-    });
-
-    let net = NetworkSpec {
-        name: "prop-chain".into(),
-        input_w: in_w,
-        input_h: in_h,
-        input_c: 3,
-        layers,
-        num_anchors: 1,
-        num_classes: 1,
-    };
-    let seed = g.usize(0, 1_000_000) as u64;
-    let mut mw = ModelWeights::random(&net, 1.0, seed);
-    mw.prune_fine_grained(g.f64(0.0, 0.9));
-    (net, mw)
-}
-
-fn random_image(g: &mut Gen, net: &NetworkSpec) -> Tensor<u8> {
-    let n = net.input_c * net.input_h * net.input_w;
-    Tensor::from_vec(
-        net.input_c,
-        net.input_h,
-        net.input_w,
-        (0..n).map(|_| g.rng().next_u32() as u8).collect(),
-    )
-}
-
-fn planes_of(net: &NetworkSpec, mw: &ModelWeights) -> BTreeMap<String, Vec<BitMaskKernel>> {
-    net.layers
-        .iter()
-        .map(|l| (l.name.clone(), compress_kernel4(&mw.get(&l.name).unwrap().w)))
-        .collect()
-}
 
 #[test]
 fn nop_hooks_walk_reproduces_simulator_golden_and_analytic() {
@@ -156,7 +32,7 @@ fn nop_hooks_walk_reproduces_simulator_golden_and_analytic() {
         let (net, mw) = random_chain(g);
         let img = random_image(g, &net);
         let cores = 1 + g.usize(0, 4); // 1..=4
-        let cfg = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() }.with_cores(cores);
+        let cfg = chain_config(cores);
         let net = Arc::new(net);
         let mw = Arc::new(mw);
         let opts = FrameOptions { collect_stats: true };
@@ -207,7 +83,7 @@ fn every_cluster_policy_is_the_same_walk() {
         let cores = 1 + g.usize(0, 3);
         let chips = 1 + g.usize(0, 3); // 1..=3
         let policy = ShardPolicy::all()[g.usize(0, 3)];
-        let cfg = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() }.with_cores(cores);
+        let cfg = chain_config(cores);
         let net = Arc::new(net);
         let mw = Arc::new(mw);
         let cc = ClusterConfig { chip: cfg.clone(), ..ClusterConfig::single_chip() }

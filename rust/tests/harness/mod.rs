@@ -1,0 +1,263 @@
+//! Shared test harness for the integration suites: the random-chain /
+//! random-density generators that used to be duplicated across
+//! `tests/exec_walk.rs`, `tests/cluster_equivalence.rs` and
+//! `tests/sim_vs_golden.rs`, plus a reusable **conformance harness**
+//! that property-checks any [`SnnBackend`] against the golden model
+//! across random chains, pruning densities and time-step mixes.
+//!
+//! Each integration-test crate pulls this in with `mod harness;` — the
+//! generators are deterministic (seeded through `util::run_prop`), so
+//! consolidating them here changes no case coverage.
+#![allow(dead_code)]
+
+use scsnn::backend::{BackendFrame, FrameOptions, GoldenBackend, SnnBackend};
+use scsnn::cluster::ChipCluster;
+use scsnn::config::{AccelConfig, ClusterConfig, ShardPolicy};
+use scsnn::detect::dataset::Dataset;
+use scsnn::model::topology::{ConvKind, ConvSpec, NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::weights::ModelWeights;
+use scsnn::ref_impl::ForwardOptions;
+use scsnn::sparse::{bitmask::compress_kernel4, BitMaskKernel};
+use scsnn::tensor::Tensor;
+use scsnn::util::{run_prop, Gen, Rng};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// A random sequential chain in the shape the paper's networks take:
+/// encoding conv (bit-serial, single- or uniform-step), a boundary conv
+/// expanding to `t` steps, a few `t → t` spike layers, and a 1×1 head —
+/// with random channel widths, kernel sizes, fused pools and pruning.
+pub fn random_chain(g: &mut Gen) -> (NetworkSpec, ModelWeights) {
+    let in_w = [16usize, 24, 32][g.usize(0, 3)];
+    let in_h = 12usize;
+    let t = 1 + g.usize(0, 3); // 1..=3 (register file caps at 4)
+    let uniform_enc = g.bool(0.3); // encoding recomputed every step
+    let n_mid = g.usize(0, 3);
+
+    let mut layers: Vec<ConvSpec> = Vec::new();
+    let (mut w, mut h) = (in_w, in_h);
+    let enc_t = if uniform_enc { t } else { 1 };
+    let enc_c = 2 + g.usize(0, 5);
+    let enc_pool = g.bool(0.5);
+    layers.push(ConvSpec {
+        name: "enc".into(),
+        kind: ConvKind::Encoding,
+        c_in: 3,
+        c_out: enc_c,
+        k: 3,
+        in_t: enc_t,
+        out_t: enc_t,
+        maxpool_after: enc_pool,
+        in_w: w,
+        in_h: h,
+        concat_with: None,
+        input_from: None,
+    });
+    if enc_pool {
+        w /= 2;
+        h /= 2;
+    }
+    let mut prev_c = enc_c;
+
+    // Boundary conv: enc_t → t (the mixed-time-step replay path when
+    // enc_t == 1 < t).
+    let b_c = 2 + g.usize(0, 5);
+    let b_pool = g.bool(0.5);
+    layers.push(ConvSpec {
+        name: "conv1".into(),
+        kind: ConvKind::Spike,
+        c_in: prev_c,
+        c_out: b_c,
+        k: if g.bool(0.7) { 3 } else { 1 },
+        in_t: enc_t,
+        out_t: t,
+        maxpool_after: b_pool,
+        in_w: w,
+        in_h: h,
+        concat_with: None,
+        input_from: None,
+    });
+    if b_pool {
+        w /= 2;
+        h /= 2;
+    }
+    prev_c = b_c;
+
+    for i in 0..n_mid {
+        let c = 2 + g.usize(0, 5);
+        layers.push(ConvSpec {
+            name: format!("mid{i}"),
+            kind: ConvKind::Spike,
+            c_in: prev_c,
+            c_out: c,
+            k: if g.bool(0.7) { 3 } else { 1 },
+            in_t: t,
+            out_t: t,
+            maxpool_after: false,
+            in_w: w,
+            in_h: h,
+            concat_with: None,
+            input_from: None,
+        });
+        prev_c = c;
+    }
+
+    layers.push(ConvSpec {
+        name: "head".into(),
+        kind: ConvKind::Output,
+        c_in: prev_c,
+        c_out: 2 + g.usize(0, 4),
+        k: 1,
+        in_t: t,
+        out_t: 1,
+        maxpool_after: false,
+        in_w: w,
+        in_h: h,
+        concat_with: None,
+        input_from: None,
+    });
+
+    let net = NetworkSpec {
+        name: "prop-chain".into(),
+        input_w: in_w,
+        input_h: in_h,
+        input_c: 3,
+        layers,
+        num_anchors: 1,
+        num_classes: 1,
+    };
+    let seed = g.usize(0, 1_000_000) as u64;
+    let mut mw = ModelWeights::random(&net, 1.0, seed);
+    mw.prune_fine_grained(g.f64(0.0, 0.9));
+    (net, mw)
+}
+
+/// A random multibit input frame for `net`, drawn from the property's
+/// generator.
+pub fn random_image(g: &mut Gen, net: &NetworkSpec) -> Tensor<u8> {
+    let n = net.input_c * net.input_h * net.input_w;
+    Tensor::from_vec(
+        net.input_c,
+        net.input_h,
+        net.input_w,
+        (0..n).map(|_| g.rng().next_u32() as u8).collect(),
+    )
+}
+
+/// A deterministic multibit input frame for `net` from a bare seed (the
+/// non-property suites).
+pub fn image_from_seed(net: &NetworkSpec, seed: u64) -> Tensor<u8> {
+    let mut rng = Rng::new(seed);
+    let n = net.input_c * net.input_h * net.input_w;
+    Tensor::from_vec(
+        net.input_c,
+        net.input_h,
+        net.input_w,
+        (0..n).map(|_| rng.next_u32() as u8).collect(),
+    )
+}
+
+/// Per-layer bit-mask weight planes, as the serving path compresses them
+/// once at backend construction.
+pub fn planes_of(net: &NetworkSpec, mw: &ModelWeights) -> BTreeMap<String, Vec<BitMaskKernel>> {
+    net.layers
+        .iter()
+        .map(|l| (l.name.clone(), compress_kernel4(&mw.get(&l.name).unwrap().w)))
+        .collect()
+}
+
+/// The hardware configuration the random-chain properties simulate: a
+/// small tile so even tiny chains span several tiles (and several cores).
+pub fn chain_config(cores: usize) -> AccelConfig {
+    AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() }.with_cores(cores)
+}
+
+/// Paper-tiny network + 80%-pruned random weights + a synthetic dataset
+/// of `frames` frames — the setup every cluster/pipelined suite shares.
+pub fn tiny_setup(frames: usize, seed: u64) -> (Arc<NetworkSpec>, Arc<ModelWeights>, Dataset) {
+    let (net, w) = tiny_raw(seed);
+    let ds = Dataset::synth(frames, net.input_w, net.input_h, seed + 1);
+    (Arc::new(net), Arc::new(w), ds)
+}
+
+/// [`tiny_setup`]'s network and weights by value (pipeline builders take
+/// ownership).
+pub fn tiny_raw(seed: u64) -> (NetworkSpec, ModelWeights) {
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let mut w = ModelWeights::random(&net, 1.0, seed);
+    w.prune_fine_grained(0.8);
+    (net, w)
+}
+
+/// A cluster over the default link with `chips` chips and `policy`.
+pub fn tiny_cluster(
+    net: &Arc<NetworkSpec>,
+    w: &Arc<ModelWeights>,
+    chips: usize,
+    policy: ShardPolicy,
+) -> ChipCluster {
+    let cfg = ClusterConfig::single_chip().with_chips(chips).with_policy(policy);
+    ChipCluster::new(net.clone(), w.clone(), cfg).unwrap()
+}
+
+/// One generated conformance case: a random chain, pruned weights, and a
+/// handful of random frames.
+pub struct ConformanceCase {
+    pub net: Arc<NetworkSpec>,
+    pub weights: Arc<ModelWeights>,
+    pub images: Vec<Tensor<u8>>,
+}
+
+/// Golden-model reference results for a case, run with the hardware
+/// block tile of [`chain_config`] so cycle-level backends are bit-exact,
+/// not just numerically close.
+pub fn golden_frames(case: &ConformanceCase, opts: &FrameOptions) -> Vec<BackendFrame> {
+    let golden = GoldenBackend::new(
+        case.net.clone(),
+        case.weights.clone(),
+        ForwardOptions { block_tile: Some((8, 6)), record_spikes: false },
+    )
+    .unwrap();
+    case.images.iter().map(|i| golden.run_frame(i, opts).unwrap()).collect()
+}
+
+/// Drive a property over random conformance cases: random chains,
+/// pruning densities, time-step mixes, 1–4 frames per case.
+pub fn conformance_cases(name: &str, mut check: impl FnMut(&mut Gen, &ConformanceCase)) {
+    run_prop(name, |g| {
+        let (net, w) = random_chain(g);
+        let frames = 1 + g.usize(0, 4);
+        let images = (0..frames).map(|_| random_image(g, &net)).collect();
+        let case = ConformanceCase { net: Arc::new(net), weights: Arc::new(w), images };
+        check(g, &case);
+    });
+}
+
+/// The conformance contract: property-check any [`SnnBackend`] against
+/// the golden model across random chains/densities/time-steps — head
+/// accumulators bit-exact and per-layer spike popcounts equal, frame for
+/// frame. `make` may draw backend parameters (chips, policy, cores) from
+/// the generator.
+pub fn backend_conformance(
+    name: &str,
+    mut make: impl FnMut(&mut Gen, &ConformanceCase) -> Arc<dyn SnnBackend>,
+) {
+    conformance_cases(name, |g, case| {
+        let opts = FrameOptions { collect_stats: true };
+        let want = golden_frames(case, &opts);
+        let backend = make(g, case);
+        for (img, w) in case.images.iter().zip(&want) {
+            let got = backend.run_frame(img, &opts).unwrap();
+            assert_eq!(got.head_acc.data, w.head_acc.data, "{}: head diverged", backend.name());
+            for (lname, obs) in &got.layers {
+                if lname != "head" {
+                    assert_eq!(
+                        obs.spikes_out, w.layers[lname].spikes_out,
+                        "{}: layer {lname} popcount",
+                        backend.name()
+                    );
+                }
+            }
+        }
+    });
+}

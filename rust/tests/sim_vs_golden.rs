@@ -8,6 +8,9 @@
 //! controller consumes and emits them natively, and the golden model
 //! threads them between layers.
 
+mod harness;
+
+use harness::image_from_seed as random_image;
 use scsnn::accel::controller::{LayerInput, SystemController};
 use scsnn::accel::latency::LatencyModel;
 use scsnn::config::AccelConfig;
@@ -17,17 +20,6 @@ use scsnn::ref_impl::{ForwardOptions, SnnForward};
 use scsnn::sparse::SpikeMap;
 use scsnn::tensor::Tensor;
 use scsnn::util::Rng;
-
-fn random_image(net: &NetworkSpec, seed: u64) -> Tensor<u8> {
-    let mut rng = Rng::new(seed);
-    let n = net.input_c * net.input_h * net.input_w;
-    Tensor::from_vec(
-        net.input_c,
-        net.input_h,
-        net.input_w,
-        (0..n).map(|_| rng.next_u32() as u8).collect(),
-    )
-}
 
 /// Run the whole network through the executing controller, chaining
 /// compressed layer outputs exactly as the coordinator does.

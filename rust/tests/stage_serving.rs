@@ -1,0 +1,213 @@
+//! Wall-clock pipelined serving: the stage executor
+//! (`coordinator::stage_exec::StageExecutor`) must change **when** work
+//! happens — stages of different frames overlapping on real worker
+//! threads — and never **what** it computes.
+//!
+//! - Conformance (shared harness): stage-executor outputs are
+//!   bit-identical to serial frame order AND to the golden model for
+//!   random chains, densities, time-step mixes and random
+//!   (workers, in_flight, policy, chips) combinations.
+//! - An explicit policy × workers × in_flight grid on the paper-tiny
+//!   network pins the same property at serving scale.
+//! - The measured wall-clock initiation interval is non-increasing
+//!   (within fill/drain slack) as `in_flight` grows 1 → 4, and strictly
+//!   improves when the host actually has cores to overlap on.
+//! - `DetectionPipeline` with `--pipeline N` routes the cluster through
+//!   the executor: same mAP/detections, and `PipelineMetrics` gains the
+//!   wall interval and per-stage occupancy.
+
+mod harness;
+
+use scsnn::backend::{BackendFrame, BackendKind, FrameOptions, SnnBackend};
+use scsnn::cluster::ChipCluster;
+use scsnn::config::{ClusterConfig, ShardPolicy};
+use scsnn::coordinator::engine::{EngineConfig, StreamingEngine};
+use scsnn::coordinator::pipeline::DetectionPipeline;
+use scsnn::coordinator::stage_exec::StageExecutor;
+use scsnn::detect::dataset::Dataset;
+use scsnn::tensor::Tensor;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn cluster_backend_conforms_to_golden_via_shared_harness() {
+    // The harness property-checks ANY SnnBackend against the golden
+    // model; instantiate it for the cluster across random geometries.
+    harness::backend_conformance("cluster-backend-conformance", |g, case| {
+        let chips = 1 + g.usize(0, 3);
+        let policy = ShardPolicy::all()[g.usize(0, 3)];
+        let chip = harness::chain_config(1 + g.usize(0, 2));
+        let cc = ClusterConfig { chip, ..ClusterConfig::single_chip() }
+            .with_chips(chips)
+            .with_policy(policy);
+        Arc::new(ChipCluster::new(case.net.clone(), case.weights.clone(), cc).unwrap())
+    });
+}
+
+#[test]
+fn stage_executor_conforms_to_serial_order_and_golden() {
+    // The same harness cases driven through the stage executor with
+    // random (workers, in_flight, policy, chips): outputs bit-identical
+    // to serial frame order and heads bit-exact with the golden model.
+    harness::conformance_cases("stage-serving-conformance", |g, case| {
+        let chips = 1 + g.usize(0, 3);
+        let policy = ShardPolicy::all()[g.usize(0, 3)];
+        let workers = 1 + g.usize(0, 4);
+        let in_flight = 1 + g.usize(0, 4);
+        let chip = harness::chain_config(1 + g.usize(0, 2));
+        let cc = ClusterConfig { chip, ..ClusterConfig::single_chip() }
+            .with_chips(chips)
+            .with_policy(policy);
+        let cl =
+            Arc::new(ChipCluster::new(case.net.clone(), case.weights.clone(), cc).unwrap());
+        let opts = FrameOptions { collect_stats: true };
+        let serial: Vec<BackendFrame> =
+            case.images.iter().map(|i| cl.run_frame(i, &opts).unwrap()).collect();
+        let engine = StreamingEngine::new(
+            cl.clone(),
+            EngineConfig { workers, queue_depth: 4, batch: 1 },
+        );
+        let exec = StageExecutor::new(&cl);
+        let imgs: Vec<&Tensor<u8>> = case.images.iter().collect();
+        let run = exec.run(&engine, &imgs, &opts, in_flight).unwrap();
+        assert_eq!(
+            run.frames, serial,
+            "chips={chips} {policy:?} workers={workers} in_flight={in_flight}"
+        );
+        let want = harness::golden_frames(case, &opts);
+        for (got, w) in run.frames.iter().zip(&want) {
+            assert_eq!(got.head_acc.data, w.head_acc.data, "stage executor vs golden");
+        }
+    });
+}
+
+#[test]
+fn stage_executor_grid_bit_identical_on_tiny_network() {
+    // Acceptance grid at serving scale: every policy × workers ×
+    // in_flight combination reproduces serial frame order exactly.
+    let (net, w, ds) = harness::tiny_setup(3, 480);
+    let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+    let opts = FrameOptions { collect_stats: true };
+    for policy in ShardPolicy::all() {
+        let cl = Arc::new(harness::tiny_cluster(&net, &w, 2, policy));
+        let serial: Vec<BackendFrame> =
+            images.iter().map(|i| cl.run_frame(i, &opts).unwrap()).collect();
+        let exec = StageExecutor::new(&cl);
+        for workers in [1usize, 2, 4] {
+            for in_flight in [1usize, 2, 4] {
+                let engine = StreamingEngine::new(
+                    cl.clone(),
+                    EngineConfig { workers, queue_depth: 4, batch: 1 },
+                );
+                let run = exec.run(&engine, &images, &opts, in_flight).unwrap();
+                assert_eq!(
+                    run.frames, serial,
+                    "{policy:?} workers={workers} in_flight={in_flight}"
+                );
+                assert_eq!(run.in_flight, in_flight);
+                assert_eq!(run.cluster_runs.len(), images.len());
+                // The per-frame cluster accounting still prices real
+                // interconnect traffic under the staged schedule.
+                assert!(run.cluster_runs.iter().all(|r| r.makespan > 0));
+            }
+        }
+    }
+}
+
+#[test]
+fn wall_clock_interval_improves_as_the_window_grows() {
+    // The point of the tentpole: the analytic initiation interval shows
+    // up as measured wall-clock throughput. Deeper windows must not slow
+    // the stream down (within scheduling slack), and with real cores to
+    // overlap on they must strictly speed it up.
+    let (net, w, ds) = harness::tiny_setup(8, 490);
+    let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+    let opts = FrameOptions::default();
+    let cl = Arc::new(harness::tiny_cluster(&net, &w, 2, ShardPolicy::LayerPipeline));
+    let serial: Vec<BackendFrame> =
+        images.iter().map(|i| cl.run_frame(i, &opts).unwrap()).collect();
+    let engine = StreamingEngine::new(
+        cl.clone(),
+        EngineConfig { workers: 4, queue_depth: 8, batch: 1 },
+    );
+    let exec = StageExecutor::new(&cl);
+    let windows = [1usize, 2, 4];
+    let mut intervals: Vec<Duration> = Vec::new();
+    for &in_flight in &windows {
+        // Two runs per window, keep the faster one — wall-clock timing
+        // under a loaded test host is noisy.
+        let mut best = Duration::MAX;
+        for _ in 0..2 {
+            let run = exec.run(&engine, &images, &opts, in_flight).unwrap();
+            assert_eq!(run.frames, serial, "in_flight={in_flight}");
+            best = best.min(run.wall_interval());
+        }
+        assert!(best > Duration::ZERO);
+        intervals.push(best);
+    }
+    // Non-increasing within fill/drain + scheduling slack.
+    for (pair, w) in intervals.windows(2).zip(&windows[1..]) {
+        assert!(
+            pair[1] <= pair[0].mul_f64(1.35) + Duration::from_millis(10),
+            "in_flight={w}: interval regressed {:?} -> {:?}",
+            pair[0],
+            pair[1]
+        );
+    }
+    // With cores to spare, the 2-stage pipeline genuinely overlaps:
+    // in_flight=4 must beat the serial window outright. Gated on a
+    // comfortably parallel host — shared 4-core CI runners are too
+    // contended for a strict wall-clock comparison to be reliable.
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores >= 8 {
+        assert!(
+            intervals[2] < intervals[0],
+            "no wall-clock overlap on a {cores}-core host: {:?} vs {:?}",
+            intervals[2],
+            intervals[0]
+        );
+    }
+    // Occupancy: one entry per stage, all within (0, 1] up to rounding.
+    let run = exec.run(&engine, &images, &opts, 4).unwrap();
+    let occ = run.stage_occupancy();
+    assert_eq!(occ.len(), exec.stages());
+    assert!(occ.iter().all(|&o| o > 0.0 && o <= 1.05), "occupancy {occ:?}");
+}
+
+#[test]
+fn detection_pipeline_routes_cluster_through_stage_executor() {
+    let (net, w) = harness::tiny_raw(500);
+    let ds = Dataset::synth(4, net.input_w, net.input_h, 501);
+    let mut p = DetectionPipeline::from_weights(net, w).unwrap();
+    p.set_cluster(2, ShardPolicy::LayerPipeline).unwrap();
+    p.select_backend(BackendKind::Cluster).unwrap();
+    assert!(p.cluster_backend().is_some());
+    assert!(!p.stage_serving_active(), "depth 0 keeps the monolithic path");
+    let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+    let baseline_frames = p.process_frames(&images).unwrap();
+    let baseline = p.process_dataset(&ds).unwrap();
+
+    p.pipeline_depth = 2;
+    p.workers = 2;
+    assert!(p.stage_serving_active());
+    let staged_frames = p.process_frames(&images).unwrap();
+    for (a, b) in baseline_frames.iter().zip(&staged_frames) {
+        assert_eq!(a.detections, b.detections, "stage serving changed detections");
+        assert_eq!(a.head.data, b.head.data, "stage serving changed the head");
+    }
+    let staged = p.process_dataset(&ds).unwrap();
+    assert_eq!(baseline.map, staged.map);
+    assert_eq!(baseline.metrics.detections, staged.metrics.detections);
+    assert_eq!(staged.metrics.frames, 4);
+    assert!(staged.metrics.wall_interval_ms > 0.0, "wall interval must be measured");
+    assert_eq!(staged.metrics.stage_occupancy.len(), 2, "one occupancy per stage");
+    assert_eq!(staged.metrics.backend.as_deref(), Some("cluster"));
+
+    // Leaving the cluster backend deactivates stage serving even with a
+    // window configured.
+    p.select_backend(BackendKind::Golden).unwrap();
+    assert!(!p.stage_serving_active());
+    assert!(p.cluster_backend().is_none());
+    let golden = p.process_dataset(&ds).unwrap();
+    assert_eq!(golden.map, staged.map, "golden path agrees on detections");
+}
