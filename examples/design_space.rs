@@ -1,85 +1,21 @@
-//! Design-space exploration (extension beyond the paper's single design
-//! point): sweep the PE tile geometry, input-SRAM capacity and clock, and
-//! report fps / area / DRAM energy tradeoffs on the full-size network.
+//! Design-space exploration — thin driver over [`scsnn::dse`], the
+//! shared sweep behind the `scsnn dse` subcommand.
 //!
-//! This answers the natural ablation questions DESIGN.md raises: how much
-//! of the paper's efficiency comes from the 32×18 tile choice, and where
-//! the §IV-D input-SRAM knee sits.
+//! What started here as a handful of single-axis ablations (tile
+//! geometry, input-SRAM knee, clock scaling, pruning sensitivity) grew
+//! into the full cores × chips × shard-policy × residency-window ×
+//! SRAM × link × time-step grid: 1000+ analytic points, Pareto-pruned,
+//! with the frontier re-verified by the pipelined cycle simulator and
+//! the results written to `BENCH_dse.json`.
 //!
 //! ```bash
 //! cargo run --release --example design_space
+//! cargo run --release --example design_space -- --scale tiny --max-points 64
+//! # identical to:
+//! cargo run --release -- dse [--options]
 //! ```
 
-use scsnn::accel::dram::{DramModel, DramTraffic};
-use scsnn::accel::energy::AreaModel;
-use scsnn::accel::latency::LatencyModel;
-use scsnn::config::AccelConfig;
-use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
-use scsnn::model::weights::ModelWeights;
-use scsnn::sparse::stats::Format;
-
 fn main() -> anyhow::Result<()> {
-    let net = NetworkSpec::paper(Scale::Full, TimeStepConfig::PAPER);
-    let mut weights = ModelWeights::random(&net, 1.0, 42);
-    weights.prune_fine_grained(0.8);
-
-    println!("design-space sweep on the full-size network ({} params, density {:.2})\n",
-        net.num_params(), weights.density());
-
-    // --- 1. PE tile geometry (same 576-PE budget, different shapes) -----
-    println!("## PE tile geometry (576 PEs, 500 MHz)");
-    println!("{:<10} {:>14} {:>8} {:>10}", "tile", "cycles", "fps", "area mm²");
-    for (tw, th) in [(32usize, 18usize), (24, 24), (64, 9), (16, 36), (48, 12)] {
-        let cfg = AccelConfig { tile_w: tw, tile_h: th, ..AccelConfig::paper() };
-        let lat = LatencyModel::new(cfg.clone()).network(&net, &weights);
-        let area = AreaModel::default().report(&cfg);
-        println!(
-            "{:<10} {:>14} {:>8.1} {:>10.2}",
-            format!("{tw}x{th}"),
-            lat.sparse_cycles(),
-            lat.fps(cfg.clock_hz),
-            area.total_mm2()
-        );
-    }
-
-    // --- 2. Input SRAM capacity (the §IV-D knee) -------------------------
-    println!("\n## input SRAM capacity vs DRAM energy (70 pJ/bit)");
-    println!("{:<10} {:>12} {:>14}", "KB", "input MB", "DRAM mJ/frame");
-    for kb in [18usize, 36, 54, 81, 110, 162, 324] {
-        let cfg = AccelConfig { input_sram_bytes: kb * 1024, ..AccelConfig::paper() };
-        let m = DramModel::new(cfg);
-        let t = m.frame_traffic(&net, &weights, Format::BitMask);
-        println!(
-            "{:<10} {:>12.2} {:>14.2}",
-            kb,
-            DramTraffic::mb(t.input_bits),
-            m.frame_energy_mj(&t)
-        );
-    }
-
-    // --- 3. Clock scaling -------------------------------------------------
-    println!("\n## clock frequency vs fps");
-    let cfg = AccelConfig::paper();
-    let lat = LatencyModel::new(cfg).network(&net, &weights);
-    println!("{:<10} {:>8}", "MHz", "fps");
-    for mhz in [250.0f64, 400.0, 500.0, 650.0, 800.0] {
-        println!("{:<10} {:>8.1}", mhz, lat.fps(mhz * 1e6));
-    }
-
-    // --- 4. Pruning-rate sensitivity ---------------------------------------
-    println!("\n## pruning rate vs cycles (latency saving)");
-    println!("{:<10} {:>9} {:>14} {:>9}", "rate", "density", "cycles", "saving");
-    for rate in [0.0f64, 0.5, 0.7, 0.8, 0.9] {
-        let mut w = ModelWeights::random(&net, 1.0, 42);
-        w.prune_fine_grained(rate);
-        let lat = LatencyModel::new(AccelConfig::paper()).network(&net, &w);
-        println!(
-            "{:<10} {:>9.3} {:>14} {:>8.1}%",
-            rate,
-            w.density(),
-            lat.sparse_cycles(),
-            lat.latency_saving() * 100.0
-        );
-    }
-    Ok(())
+    let args = scsnn::util::Args::from_env();
+    scsnn::dse::run(&args)
 }

@@ -11,6 +11,15 @@
 //! 99% activation sparsity. Results are written to `BENCH_spikeplane.json`
 //! so the perf trajectory of the spike-plane data path is tracked from
 //! this change on. Acceptance floor: ≥2× at ≥90% sparsity.
+//!
+//! Also includes the **one-to-all datapath comparison**: the same gated
+//! one-to-all product run three ways — dense enable map
+//! (`run_reference`), per-pixel events (`run_events`), and the
+//! word-parallel mask–shift–popcount path (`run`) — at several activation
+//! densities. Bit-exactness of accumulators, gating stats and cycles
+//! across all three paths is a hard assert, so CI fails on any divergence
+//! before a single timing column prints. Target: ≥2× word-parallel over
+//! per-pixel at ≤50% density.
 
 use scsnn::accel::controller::{LayerInput, SystemController};
 use scsnn::accel::latency::LatencyModel;
@@ -48,6 +57,81 @@ fn main() {
         let mut o = GatedOneToAll::new(&tile);
         std::hint::black_box(o.run(&bm, &mut pe, 0));
     });
+
+    // --- one-to-all datapath: reference vs events vs words -----------------
+    // Bit-exactness is asserted before any timing runs, so CI fails hard
+    // if the word-parallel path ever diverges from the reference.
+    r.section("one-to-all datapath: dense map vs per-pixel events vs word-parallel");
+    let mut kvals: Vec<i8> =
+        (0..9).map(|_| if rng.chance(0.5) { (rng.next_u32() % 13) as i8 - 6 } else { 0 }).collect();
+    kvals[4] = 3;
+    let bm2 = BitMaskKernel::from_dense(&kvals, 3, 3);
+    let mut path_rows: Vec<Json> = Vec::new();
+    for density in [0.10f64, 0.25, 0.50] {
+        let stim_dense = Tensor::from_vec(
+            1,
+            18,
+            32,
+            (0..576).map(|_| u8::from(rng.chance(density))).collect(),
+        );
+        let stim = SpikePlane::from_dense(stim_dense.channel(0), 18, 32);
+        let run_path = |which: usize| {
+            let mut p = PeArray::new(18, 32);
+            let mut o = GatedOneToAll::new(&stim);
+            let cycles = match which {
+                0 => o.run_reference(&bm2, &mut p, 0),
+                1 => o.run_events(&bm2, &mut p, 0),
+                _ => o.run(&bm2, &mut p, 0),
+            };
+            (p.readout(), p.stats(), cycles)
+        };
+        let want = run_path(0);
+        for (which, name) in [(1usize, "per-pixel events"), (2, "word-parallel")] {
+            let got = run_path(which);
+            assert_eq!(
+                got, want,
+                "{name} path diverged from run_reference at density {density}"
+            );
+        }
+        let label = format!("{:.0}", density * 100.0);
+        let events_n = 576 * bm2.nnz() as u64;
+        let ref_m = r
+            .bench_throughput(&format!("one_to_all_reference_d{label}"), events_n, || {
+                let mut o = GatedOneToAll::new(&stim);
+                std::hint::black_box(o.run_reference(&bm2, &mut pe, 0));
+            })
+            .clone();
+        let events_m = r
+            .bench_throughput(&format!("one_to_all_events_d{label}"), events_n, || {
+                let mut o = GatedOneToAll::new(&stim);
+                std::hint::black_box(o.run_events(&bm2, &mut pe, 0));
+            })
+            .clone();
+        let words_m = r
+            .bench_throughput(&format!("one_to_all_words_d{label}"), events_n, || {
+                let mut o = GatedOneToAll::new(&stim);
+                std::hint::black_box(o.run(&bm2, &mut pe, 0));
+            })
+            .clone();
+        let vs_events = events_m.median.as_secs_f64() / words_m.median.as_secs_f64();
+        let vs_ref = ref_m.median.as_secs_f64() / words_m.median.as_secs_f64();
+        r.report_row(&format!(
+            "density {:>3.0}% | reference {:>10.3?} | events {:>10.3?} | words {:>10.3?} | \
+             words vs events {vs_events:>5.2}x | vs reference {vs_ref:>5.2}x",
+            density * 100.0,
+            ref_m.median,
+            events_m.median,
+            words_m.median
+        ));
+        let mut row = BTreeMap::new();
+        row.insert("activation_density".to_string(), Json::Num(density));
+        row.insert("reference_ns".to_string(), Json::Num(ref_m.median.as_secs_f64() * 1e9));
+        row.insert("events_ns".to_string(), Json::Num(events_m.median.as_secs_f64() * 1e9));
+        row.insert("words_ns".to_string(), Json::Num(words_m.median.as_secs_f64() * 1e9));
+        row.insert("words_vs_events".to_string(), Json::Num(vs_events));
+        row.insert("words_vs_reference".to_string(), Json::Num(vs_ref));
+        path_rows.push(Json::Obj(row));
+    }
 
     // --- block convolution (golden model inner loop) ----------------------
     let input = Tensor::from_vec(
@@ -143,6 +227,8 @@ fn main() {
     );
     doc.insert("target_speedup_at_90pct".to_string(), Json::Num(2.0));
     doc.insert("sweep".to_string(), Json::Arr(sweep_rows));
+    doc.insert("target_words_vs_events_at_50pct".to_string(), Json::Num(2.0));
+    doc.insert("one_to_all_paths".to_string(), Json::Arr(path_rows));
     let json_path = "BENCH_spikeplane.json";
     match std::fs::write(json_path, Json::Obj(doc).to_string_compact()) {
         Ok(()) => r.report_row(&format!("wrote {json_path}")),

@@ -46,6 +46,7 @@ use super::pe::{GatingStats, PeArray};
 use super::sram::{SramBank, SramKind};
 use crate::config::registers::{ConfigRegisters, LayerSetup};
 use crate::config::AccelConfig;
+use crate::coordinator::tiler::{TilePlan, TileRect};
 use crate::model::lif::LifParams;
 use crate::model::topology::{ConvKind, ConvSpec};
 use crate::model::weights::LayerWeights;
@@ -142,17 +143,48 @@ impl LayerRun {
     }
 }
 
+/// Reusable per-tile working state, kept on the controller so repeated
+/// layer runs — tiles within a layer, layers within a frame, and frames
+/// within a serving loop (cluster lease units hold their controllers
+/// across frames) — reuse the allocations instead of constructing fresh
+/// PE/LIF state and re-allocating extracted tiles per tile. Purely a
+/// memoization of buffers: every user resets shape and counters before
+/// touching them, so results are bit-identical to the allocate-per-tile
+/// form (pinned in `tests/exec_walk.rs` and the conformance harness).
+struct Scratch {
+    /// The PE array, re-shaped per tile.
+    pe: PeArray,
+    /// The LIF unit, re-shaped per tile.
+    lif: LifUnit,
+    /// Extracted compressed input tiles, flattened
+    /// `(t * n_bit_planes + b) * c_in + c`; grown on demand and refilled
+    /// in place via [`SpikePlane::extract_tile_into`].
+    tiles_in: Vec<SpikePlane>,
+}
+
+impl Scratch {
+    fn new() -> Self {
+        Scratch { pe: PeArray::new(0, 0), lif: LifUnit::new(0, 0), tiles_in: Vec::new() }
+    }
+}
+
 /// The system controller bound to a hardware configuration.
 pub struct SystemController {
     cfg: AccelConfig,
     costs: CycleCosts,
     regs: ConfigRegisters,
+    scratch: Scratch,
 }
 
 impl SystemController {
     /// New controller.
     pub fn new(cfg: AccelConfig) -> Self {
-        SystemController { cfg, costs: CycleCosts::default(), regs: ConfigRegisters::default() }
+        SystemController {
+            cfg,
+            costs: CycleCosts::default(),
+            regs: ConfigRegisters::default(),
+            scratch: Scratch::new(),
+        }
     }
 
     /// Access the configuration.
@@ -290,30 +322,23 @@ impl SystemController {
         // Tiles are dealt round-robin to the simulated cores (§III-A:
         // spatially parallel PE arrays share nothing but the weight
         // stream, so a tile is the natural unit of core parallelism).
+        // The grid comes from the one shared [`TilePlan`] (row-major, edge
+        // tiles clipped — the same order the hand-rolled loop produced).
         // `run.cycles`/`run.dense_cycles` accumulate the running total;
         // per-tile deltas are folded into the per-core counters and the
         // makespan (max over cores) is reported at the end.
         let cores = self.cfg.num_cores.max(1);
         let mut core_cycles = vec![0u64; cores];
         let mut core_dense = vec![0u64; cores];
-        let mut tile_idx = 0usize;
-        let mut y0 = 0;
-        while y0 < spec.in_h {
-            let cth = th.min(spec.in_h - y0);
-            let mut x0 = 0;
-            while x0 < spec.in_w {
-                let ctw = tw.min(spec.in_w - x0);
-                let before = (run.cycles, run.dense_cycles);
-                run.cycles += self.costs.tile_setup;
-                run.dense_cycles += self.costs.tile_setup;
-                self.run_tile(spec, lw, &step_maps, planes, conv_t, (y0, x0, cth, ctw), &mut run);
-                let core = tile_idx % cores;
-                core_cycles[core] += run.cycles - before.0;
-                core_dense[core] += run.dense_cycles - before.1;
-                tile_idx += 1;
-                x0 += ctw;
-            }
-            y0 += cth;
+        let plan = TilePlan::new(spec.in_w, spec.in_h, tw, th);
+        for (tile_idx, tile) in plan.iter().enumerate() {
+            let before = (run.cycles, run.dense_cycles);
+            run.cycles += self.costs.tile_setup;
+            run.dense_cycles += self.costs.tile_setup;
+            self.run_tile(spec, lw, &step_maps, planes, conv_t, tile, &mut run);
+            let core = tile_idx % cores;
+            core_cycles[core] += run.cycles - before.0;
+            core_dense[core] += run.dense_cycles - before.1;
         }
         run.cycles = core_cycles.iter().copied().max().unwrap_or(0);
         run.dense_cycles = core_dense.iter().copied().max().unwrap_or(0);
@@ -322,53 +347,62 @@ impl SystemController {
         Ok(run)
     }
 
-    /// Execute the KTBC loop for one spatial tile.
+    /// Execute the KTBC loop for one spatial tile. Takes `&mut self` for
+    /// the scratch arena only — all results land in `run`, and the scratch
+    /// is fully re-shaped/cleared before use, so reuse is invisible.
     #[allow(clippy::too_many_arguments)]
     fn run_tile(
-        &self,
+        &mut self,
         spec: &ConvSpec,
         lw: &LayerWeights,
         step_maps: &[Vec<&SpikeMap>],
         planes: &[BitMaskKernel],
         conv_t: usize,
-        tile: (usize, usize, usize, usize),
+        tile: TileRect,
         run: &mut LayerRun,
     ) {
-        let (y0, x0, cth, ctw) = tile;
-        let mut pe = PeArray::new(cth, ctw);
-        let mut lif = LifUnit::new(cth, ctw);
+        let TileRect { y0, x0, h: cth, w: ctw } = tile;
+        let scratch = &mut self.scratch;
+        scratch.pe.reset_for_tile(cth, ctw);
+        scratch.lif.reset_for_tile(cth, ctw);
         let p = LifParams::from_quant(&lw.qp);
         let dense_plane_cycles = (spec.k * spec.k) as u64;
         let eff_out_t = if spec.kind == ConvKind::Output { spec.in_t } else { spec.out_t };
 
-        // Pre-extract per-(t, b, c) compressed input tiles once per spatial
+        // Extract per-(t, b, c) compressed input tiles once per spatial
         // tile — the hardware equivalent is the Input SRAM holding the
-        // sub-tile bitmap. Word-level extraction, no dense copies.
-        // (Indexing: tiles_in[t][b][c].)
-        let tiles_in: Vec<Vec<Vec<SpikePlane>>> = step_maps
-            .iter()
-            .map(|bit_maps| {
-                bit_maps
-                    .iter()
-                    .map(|m| {
-                        (0..spec.c_in)
-                            .map(|c| m.plane(c).extract_tile(y0, x0, cth, ctw))
-                            .collect()
-                    })
-                    .collect()
-            })
-            .collect();
+        // sub-tile bitmap. Word-level funnel extraction into the memoized
+        // scratch planes: no per-tile allocations after warm-up.
+        // (Indexing: tiles_in[(t * nb + b) * c_in + c].)
+        let nb = step_maps.first().map(|bits| bits.len()).unwrap_or(0);
+        let want_tiles = step_maps.len() * nb * spec.c_in;
+        if scratch.tiles_in.len() < want_tiles {
+            scratch.tiles_in.resize_with(want_tiles, || SpikePlane::zeros(0, 0));
+        }
+        for (t, bit_maps) in step_maps.iter().enumerate() {
+            for (b, m) in bit_maps.iter().enumerate() {
+                for c in 0..spec.c_in {
+                    m.plane(c).extract_tile_into(
+                        y0,
+                        x0,
+                        cth,
+                        ctw,
+                        &mut scratch.tiles_in[(t * nb + b) * spec.c_in + c],
+                    );
+                }
+            }
+        }
 
         for k in 0..spec.c_out {
-            lif.reset();
+            scratch.lif.reset();
             // Partial sums of the last computed conv step, for replay.
             let mut replay: Vec<i16> = Vec::new();
             for t in 0..eff_out_t {
                 let acc: Vec<i16> = if t < conv_t {
                     // Per-channel bias preloads the partial-sum registers.
-                    pe.preload(lw.bias[k]);
-                    for (b, bit_tiles) in tiles_in[t].iter().enumerate() {
-                        for (c, tile_in) in bit_tiles.iter().enumerate() {
+                    scratch.pe.preload(lw.bias[k]);
+                    for b in 0..nb {
+                        for c in 0..spec.c_in {
                             // Input-channel switch: all 4 banks read.
                             run.sram[0].read(self.cfg.io_banks as u64);
                             run.cycles += self.costs.input_switch;
@@ -379,13 +413,14 @@ impl SystemController {
                             run.sram[2].read(1);
                             run.sram[3].read(pl.nnz() as u64);
 
+                            let tile_in = &scratch.tiles_in[(t * nb + b) * spec.c_in + c];
                             let cycles =
-                                GatedOneToAll::new(tile_in).run(pl, &mut pe, b as u32);
+                                GatedOneToAll::new(tile_in).run(pl, &mut scratch.pe, b as u32);
                             run.cycles += cycles;
                             run.dense_cycles += dense_plane_cycles;
                         }
                     }
-                    replay = pe.readout();
+                    replay = scratch.pe.readout();
                     replay.clone()
                 } else {
                     // in_t < out_t: replay the single computed result.
@@ -410,7 +445,7 @@ impl SystemController {
                         run.sram[1].write(self.cfg.io_banks as u64);
                     }
                     _ => {
-                        let spike_tile = lif.step(p, &acc, 0);
+                        let spike_tile = scratch.lif.step(p, &acc, 0);
                         run.sram[1].write(self.cfg.io_banks as u64);
                         // Optional fused OR max pool, then reordered write —
                         // the compressed tile is pasted straight into the
@@ -424,12 +459,12 @@ impl SystemController {
                     }
                 }
             }
-            run.lif_updates += lif.updates;
-            run.spikes_out += lif.spikes_out;
-            lif.updates = 0;
-            lif.spikes_out = 0;
+            run.lif_updates += scratch.lif.updates;
+            run.spikes_out += scratch.lif.spikes_out;
+            scratch.lif.updates = 0;
+            scratch.lif.spikes_out = 0;
         }
-        run.gating.merge(&pe.stats());
+        run.gating.merge(&scratch.pe.stats());
     }
 }
 

@@ -65,6 +65,20 @@ impl LifUnit {
         self.fired.iter_mut().for_each(|f| *f = false);
     }
 
+    /// Re-shape for the next tile, clearing membranes, fire flags and
+    /// counters while keeping the allocations — the scratch-arena form of
+    /// constructing a fresh unit per tile.
+    pub fn reset_for_tile(&mut self, th: usize, tw: usize) {
+        self.th = th;
+        self.tw = tw;
+        self.vmem.clear();
+        self.vmem.resize(th * tw, 0);
+        self.fired.clear();
+        self.fired.resize(th * tw, false);
+        self.updates = 0;
+        self.spikes_out = 0;
+    }
+
     /// Current membrane potentials (for the output-conv no-reset mode the
     /// controller reads accumulators directly instead).
     pub fn vmem(&self) -> &[i8] {
@@ -119,5 +133,22 @@ mod tests {
         assert_ne!(unit.vmem(), &[0, 0]);
         unit.reset();
         assert_eq!(unit.vmem(), &[0, 0]);
+    }
+
+    #[test]
+    fn reset_for_tile_matches_fresh_unit() {
+        let p = LifParams { vth_q: 10 };
+        let mut reused = LifUnit::new(3, 3);
+        reused.step(p, &[20i16; 9], 0);
+        reused.reset_for_tile(2, 2);
+        assert_eq!(reused.updates, 0);
+        assert_eq!(reused.spikes_out, 0);
+        let got = reused.step(p, &[20, 0, 20, 0], 0);
+        let mut fresh = LifUnit::new(2, 2);
+        let want = fresh.step(p, &[20, 0, 20, 0], 0);
+        assert_eq!(got, want);
+        assert_eq!(reused.vmem(), fresh.vmem());
+        assert_eq!(reused.updates, fresh.updates);
+        assert_eq!(reused.spikes_out, fresh.spikes_out);
     }
 }

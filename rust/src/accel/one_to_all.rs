@@ -15,6 +15,15 @@
 //! popcount-driven: an all-zero window costs O(1) per weight instead of a
 //! dense scan, while the *modeled* cycle count is unchanged (the hardware
 //! still streams one nonzero weight per cycle regardless of activity).
+//!
+//! [`GatedOneToAll::run`] is **word-parallel**: each enable-window row is
+//! built 64 lanes at a time by funnel-shifting the packed source words
+//! into output alignment (mask–shift–popcount, see
+//! [`SpikePlane::accumulate_shifted_words_into`]), and a fully silent tile
+//! is settled in O(1) per product — counters only, no scan at all. The
+//! per-pixel event walk survives as [`GatedOneToAll::run_events`] and the
+//! dense enable-map form as [`GatedOneToAll::run_reference`]; all three
+//! are property-tested bit-identical in sums, statistics and cycles.
 
 use super::encoder::PriorityEncoder;
 use super::pe::PeArray;
@@ -29,9 +38,10 @@ pub struct GatedOneToAll<'a> {
 }
 
 impl<'a> GatedOneToAll<'a> {
-    /// Bind to one input-channel tile.
+    /// Bind to one input-channel tile. The dense enable scratch is lazily
+    /// allocated — the word-parallel hot path never materializes it.
     pub fn new(tile: &'a SpikePlane) -> Self {
-        GatedOneToAll { tile, enable: vec![0; tile.h * tile.w] }
+        GatedOneToAll { tile, enable: Vec::new() }
     }
 
     /// Build the dense enable map for a nonzero weight at kernel position
@@ -41,6 +51,7 @@ impl<'a> GatedOneToAll<'a> {
     /// property-tested against.
     pub fn enable_map(&mut self, r: usize, c: usize, kh: usize, kw: usize) -> &[u8] {
         let (th, tw) = (self.tile.h, self.tile.w);
+        self.enable.resize(th * tw, 0);
         let dy = r as isize - (kh / 2) as isize;
         let dx = c as isize - (kw / 2) as isize;
         for y in 0..th {
@@ -57,7 +68,37 @@ impl<'a> GatedOneToAll<'a> {
     /// accumulating into `pe`. `shift` selects the bit plane (encoding
     /// layer); returns the number of cycles consumed (= nonzero weights —
     /// activity never changes the cycle count, only the gating stats).
+    ///
+    /// Word-parallel hot path: 64 enable lanes per step via
+    /// funnel-shifted source words, with an O(1) settle for fully silent
+    /// tiles (every event gated, cycle count unchanged — the hardware
+    /// never skips the weight stream, it only holds the clocks).
     pub fn run(&mut self, kernel: &BitMaskKernel, pe: &mut PeArray, shift: u32) -> u64 {
+        debug_assert_eq!(pe.tile_h, self.tile.h);
+        debug_assert_eq!(pe.tile_w, self.tile.w);
+        if self.tile.is_all_zero() {
+            let cycles = kernel.nnz() as u64;
+            pe.gate_all(cycles);
+            return cycles;
+        }
+        let mut enc = PriorityEncoder::load_words(&kernel.map, kernel.kw);
+        let mut nz_iter = kernel.nz.iter();
+        let mut cycles = 0;
+        while let Some((r, c)) = enc.next_position() {
+            let w = *nz_iter.next().expect("map/nz agree");
+            let dy = r as isize - (kernel.kh / 2) as isize;
+            let dx = c as isize - (kernel.kw / 2) as isize;
+            pe.gated_accumulate_words(self.tile, dy, dx, w, shift);
+            cycles += 1;
+        }
+        cycles
+    }
+
+    /// Per-pixel event-driven form of [`GatedOneToAll::run`]: visit set
+    /// bits one at a time instead of a word per step. Identical sums,
+    /// statistics and cycles — kept as the mid-tier comparison point for
+    /// the hot-path bench (dense map vs per-pixel events vs words).
+    pub fn run_events(&mut self, kernel: &BitMaskKernel, pe: &mut PeArray, shift: u32) -> u64 {
         debug_assert_eq!(pe.tile_h, self.tile.h);
         debug_assert_eq!(pe.tile_w, self.tile.w);
         let mut enc = PriorityEncoder::load_words(&kernel.map, kernel.kw);
@@ -121,11 +162,57 @@ mod tests {
             let got: Vec<i32> = pe.partial_sums().to_vec();
             assert_eq!(got, want.data);
 
-            // Event-driven vs reference path: identical sums and statistics.
+            // Word-parallel vs per-pixel events vs dense reference:
+            // identical sums and statistics.
+            let mut pe_ev = PeArray::new(th, tw);
             let mut pe_ref = PeArray::new(th, tw);
+            let ev_cycles = GatedOneToAll::new(&tile).run_events(&bm, &mut pe_ev, 0);
             GatedOneToAll::new(&tile).run_reference(&bm, &mut pe_ref, 0);
+            assert_eq!(ev_cycles, cycles);
+            assert_eq!(pe.partial_sums(), pe_ev.partial_sums());
+            assert_eq!(pe.stats(), pe_ev.stats());
             assert_eq!(pe.partial_sums(), pe_ref.partial_sums());
             assert_eq!(pe.stats(), pe_ref.stats());
+        });
+    }
+
+    /// The word-parallel path vs the per-pixel path vs the dense
+    /// enable-map reference vs the golden event-driven convolution, across
+    /// kernel sizes 1×1/3×3/5×5/7×7, densities 0–100% and clipped
+    /// (non-multiple-of-64) tile widths — every funnel/edge/tail branch.
+    #[test]
+    fn prop_word_parallel_matches_reference_all_kernels() {
+        use crate::ref_impl::conv2d_events;
+        use crate::sparse::SpikeMap;
+        run_prop("one-to-all/word-vs-reference", |g| {
+            let k = [1usize, 3, 5, 7][g.usize(0, 4)];
+            let th = g.usize(1, 10);
+            let tw = g.usize(1, 80); // multi-word rows exercise the funnel
+            let density = g.f64(0.0, 1.0);
+            let density = if g.bool(0.1) { 0.0 } else if g.bool(0.1) { 1.0 } else { density };
+            let dense_tile = Tensor::from_vec(1, th, tw, g.spikes(th * tw, density));
+            let tile = SpikePlane::from_dense(dense_tile.channel(0), th, tw);
+            let plane = g.sparse_i8(k * k, 0.5);
+            let bm = BitMaskKernel::from_dense(&plane, k, k);
+
+            let mut pe = PeArray::new(th, tw);
+            let mut pe_ev = PeArray::new(th, tw);
+            let mut pe_ref = PeArray::new(th, tw);
+            let cycles = GatedOneToAll::new(&tile).run(&bm, &mut pe, 0);
+            let cycles_ev = GatedOneToAll::new(&tile).run_events(&bm, &mut pe_ev, 0);
+            let cycles_ref = GatedOneToAll::new(&tile).run_reference(&bm, &mut pe_ref, 0);
+            assert_eq!(cycles as usize, bm.nnz(), "k={k} th={th} tw={tw}");
+            assert_eq!(cycles, cycles_ev);
+            assert_eq!(cycles, cycles_ref);
+            assert_eq!(pe.partial_sums(), pe_ev.partial_sums(), "k={k} th={th} tw={tw}");
+            assert_eq!(pe.stats(), pe_ev.stats());
+            assert_eq!(pe.partial_sums(), pe_ref.partial_sums());
+            assert_eq!(pe.stats(), pe_ref.stats());
+
+            // Golden event-driven convolution of the same tile.
+            let w = Kernel4::from_vec(1, 1, k, k, plane);
+            let want = conv2d_events(&SpikeMap::from_dense(&dense_tile), &w, &[0]);
+            assert_eq!(pe.partial_sums(), &want.data[..], "k={k} th={th} tw={tw}");
         });
     }
 

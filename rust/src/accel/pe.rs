@@ -159,6 +159,44 @@ impl PeArray {
         self.stats.gated += (self.tile_h * self.tile_w) as u64 - enabled;
     }
 
+    /// Word-parallel form of [`PeArray::gated_accumulate_events`]: the
+    /// enable window is funnel-shifted a whole 64-bit word at a time
+    /// ([`crate::sparse::SpikePlane::accumulate_shifted_words_into`]) —
+    /// identical partial sums and gating statistics, but zero words cost
+    /// one compare and the enabled count is a popcount.
+    pub fn gated_accumulate_words(
+        &mut self,
+        tile: &crate::sparse::SpikePlane,
+        dy: isize,
+        dx: isize,
+        weight: i8,
+        shift: u32,
+    ) {
+        debug_assert_eq!((tile.h, tile.w), (self.tile_h, self.tile_w));
+        let contrib = (weight as i32) << shift;
+        let enabled = tile.accumulate_shifted_words_into(&mut self.acc, dy, dx, contrib);
+        self.stats.enabled += enabled;
+        self.stats.gated += (self.tile_h * self.tile_w) as u64 - enabled;
+    }
+
+    /// Account `events` fully-gated one-to-all cycles in O(1), without
+    /// touching the partial sums — the all-zero-tile fast path: every PE
+    /// is clock-gated on every cycle, so only the counters move.
+    pub fn gate_all(&mut self, events: u64) {
+        self.stats.gated += events * self.acc.len() as u64;
+    }
+
+    /// Re-shape for the next tile, clearing partial sums and statistics
+    /// while keeping the register-file allocation — the scratch-arena form
+    /// of constructing a fresh array per tile.
+    pub fn reset_for_tile(&mut self, tile_h: usize, tile_w: usize) {
+        self.tile_h = tile_h;
+        self.tile_w = tile_w;
+        self.acc.clear();
+        self.acc.resize(tile_h * tile_w, 0);
+        self.stats = GatingStats::default();
+    }
+
     /// Raw wide partial sums (tests / head accumulation).
     pub fn partial_sums(&self) -> &[i32] {
         &self.acc
@@ -248,8 +286,9 @@ mod tests {
 
     #[test]
     fn prop_events_match_dense_shifted() {
-        // The compressed-tile path must equal the dense shifted path in
-        // both partial sums and gating statistics, at any density.
+        // The compressed-tile paths (per-pixel events and word-parallel)
+        // must equal the dense shifted path in both partial sums and
+        // gating statistics, at any density.
         use crate::sparse::SpikePlane;
         use crate::tensor::Tensor;
         run_prop("pe/events-vs-dense", |g| {
@@ -260,6 +299,7 @@ mod tests {
             let plane = SpikePlane::from_dense(tile.channel(0), h, w);
             let mut dense_pe = PeArray::new(h, w);
             let mut event_pe = PeArray::new(h, w);
+            let mut word_pe = PeArray::new(h, w);
             for _ in 0..g.usize(1, 4) {
                 let dy = g.i64(-2, 2) as isize;
                 let dx = g.i64(-2, 2) as isize;
@@ -267,10 +307,39 @@ mod tests {
                 let shift = g.usize(0, 3) as u32;
                 dense_pe.gated_accumulate_shifted(&tile, dy, dx, wt, shift);
                 event_pe.gated_accumulate_events(&plane, dy, dx, wt, shift);
+                word_pe.gated_accumulate_words(&plane, dy, dx, wt, shift);
             }
             assert_eq!(event_pe.partial_sums(), dense_pe.partial_sums());
             assert_eq!(event_pe.stats(), dense_pe.stats());
+            assert_eq!(word_pe.partial_sums(), dense_pe.partial_sums());
+            assert_eq!(word_pe.stats(), dense_pe.stats());
         });
+    }
+
+    #[test]
+    fn gate_all_counts_without_touching_sums() {
+        let mut pe = PeArray::new(3, 4);
+        pe.gated_accumulate(&[1u8; 12], 2, 0);
+        pe.gate_all(5);
+        assert_eq!(pe.partial_sums(), &[2i32; 12][..]);
+        assert_eq!(pe.stats().enabled, 12);
+        assert_eq!(pe.stats().gated, 5 * 12);
+    }
+
+    #[test]
+    fn reset_for_tile_reshapes_and_clears() {
+        let mut pe = PeArray::new(2, 3);
+        pe.gated_accumulate(&[1u8; 6], 7, 0);
+        pe.reset_for_tile(3, 5);
+        assert_eq!((pe.tile_h, pe.tile_w), (3, 5));
+        assert_eq!(pe.partial_sums(), &[0i32; 15][..]);
+        assert_eq!(pe.stats(), GatingStats::default());
+        // Shrinking reuse keeps the same semantics as a fresh array.
+        pe.reset_for_tile(1, 2);
+        pe.gated_accumulate(&[1, 0], 3, 0);
+        assert_eq!(pe.partial_sums(), &[3, 0]);
+        assert_eq!(pe.stats().enabled, 1);
+        assert_eq!(pe.stats().gated, 1);
     }
 
     #[test]

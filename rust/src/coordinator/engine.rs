@@ -24,7 +24,11 @@
 //! and at most `in_flight` frames are resident — scheduled onto the same
 //! worker pool, with retired frames folded in frame order through a
 //! dependency-aware reorder buffer. This is the wall-clock side of the
-//! cluster's pipelined execution (`coordinator::stage_exec`).
+//! cluster's pipelined execution (`coordinator::stage_exec`). Stage jobs
+//! have their own batching knob ([`StreamingEngine::with_stage_batch`]):
+//! up to `k` runnable jobs bound for the **same** execution unit travel
+//! as one work item, so the unit (a `StageLease` chip) is acquired once
+//! per batch instead of once per job — bit-identical for any `k`.
 //!
 //! **Dynamic worker scaling** ([`StreamingEngine::with_max_workers`]):
 //! `EngineConfig::workers` is the pool floor; when a ceiling above it is
@@ -162,6 +166,10 @@ pub struct StreamingEngine {
     /// Dynamic-scaling ceiling; `<= cfg.workers` (the default 0) means a
     /// fixed pool of `cfg.workers`.
     max_workers: usize,
+    /// Stage-job micro-batch size; `stream_stages` hands a worker up to
+    /// this many runnable `(frame, stage)` jobs bound for the same
+    /// execution unit per dispatch. 1 = one job at a time.
+    stage_batch: usize,
     /// Largest pool size observed during the most recent run.
     peak_workers: AtomicUsize,
     /// Idle-shrink retirements during the most recent run.
@@ -179,6 +187,7 @@ impl StreamingEngine {
             backend,
             cfg,
             max_workers: 0,
+            stage_batch: 1,
             peak_workers: AtomicUsize::new(0),
             shrink_events: AtomicUsize::new(0),
             timeline: Mutex::new(Vec::new()),
@@ -190,6 +199,20 @@ impl StreamingEngine {
     /// queue's backlog. `max <= cfg.workers` keeps the pool fixed.
     pub fn with_max_workers(mut self, max: usize) -> StreamingEngine {
         self.max_workers = max;
+        self
+    }
+
+    /// Enable stage-job micro-batching: [`Self::stream_stages`]
+    /// dispatches up to `k` runnable `(frame, stage)` jobs bound for the
+    /// **same** execution unit as one work item, holding the unit across
+    /// the whole batch — one lease acquisition amortized over up to `k`
+    /// jobs. Batching never reorders anything observable: jobs inside a
+    /// batch run oldest frame first, the unit stays exclusive for the
+    /// whole batch, and retired frames still fold in frame order
+    /// (bit-identity across batch sizes is pinned in
+    /// `tests/stage_serving.rs`). `k <= 1` keeps per-job dispatch.
+    pub fn with_stage_batch(mut self, k: usize) -> StreamingEngine {
+        self.stage_batch = k.max(1);
         self
     }
 
@@ -460,8 +483,10 @@ impl StreamingEngine {
     ///
     /// `init` runs on the coordinator thread at admission and builds the
     /// frame's payload; `work` runs on worker threads (dispatch is
-    /// oldest-frame-first) and must leave the payload ready for the next
-    /// stage; retired frames are delivered to `fold` **in frame order**
+    /// oldest-frame-first, optionally micro-batched per unit — see
+    /// [`Self::with_stage_batch`]) and must leave the payload ready for
+    /// the next stage; retired frames are delivered to `fold` **in frame
+    /// order**
     /// through a dependency-aware reorder buffer together with the
     /// frame's completion instant. The first error aborts the run.
     /// Returns the run's wall-clock stats: per-frame completion instants
@@ -566,12 +591,17 @@ impl StreamingEngine {
             finished: Duration,
         }
 
-        let (job_tx, job_rx) = mpsc::sync_channel::<(usize, usize, P)>(workers);
+        // Jobs travel in unit-batches: every job inside one channel
+        // message targets the same execution unit, which stays claimed
+        // until the whole batch retires (see `with_stage_batch`; the
+        // default batch of 1 reproduces per-job dispatch exactly).
+        let stage_batch = self.stage_batch.max(1);
+        let (job_tx, job_rx) = mpsc::sync_channel::<Vec<(usize, usize, P)>>(workers);
         let job_rx = Mutex::new(job_rx);
         // Results unbounded so workers never block on delivery; the
         // dispatcher only releases jobs whose dependencies are met, so
         // the in-flight set is bounded by min(in_flight, units).
-        let (res_tx, res_rx) = mpsc::channel::<StageDone<P>>();
+        let (res_tx, res_rx) = mpsc::channel::<Vec<StageDone<P>>>();
 
         std::thread::scope(|s| -> Result<()> {
             for _ in 0..workers {
@@ -579,32 +609,45 @@ impl StreamingEngine {
                 let res_tx = res_tx.clone();
                 let work = &work;
                 s.spawn(move || loop {
-                    let (frame, stage, mut payload) = {
+                    let batch = {
                         let rx = job_rx.lock().expect("stage job queue lock");
                         match rx.recv() {
                             Ok(j) => j,
                             Err(_) => break, // dispatcher hung up
                         }
                     };
-                    let started = start.elapsed();
-                    // Contain panics: an unwinding worker would otherwise
-                    // leave the coordinator blocked on a result that
-                    // never comes (the other workers keep the channel
-                    // open) — turn the panic into a run-aborting error.
-                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        work(frame, stage, &mut payload)
-                    }))
-                    .unwrap_or_else(|p| {
-                        let msg = p
-                            .downcast_ref::<String>()
-                            .cloned()
-                            .or_else(|| p.downcast_ref::<&str>().map(|m| m.to_string()))
-                            .unwrap_or_else(|| "<non-string panic>".into());
-                        Err(anyhow!("stage job (frame {frame}, stage {stage}) panicked: {msg}"))
-                    });
-                    let finished = start.elapsed();
-                    let done = StageDone { frame, stage, payload, result, started, finished };
-                    if res_tx.send(done).is_err() {
+                    let mut dones: Vec<StageDone<P>> = Vec::with_capacity(batch.len());
+                    for (frame, stage, mut payload) in batch {
+                        let started = start.elapsed();
+                        // Contain panics: an unwinding worker would
+                        // otherwise leave the coordinator blocked on a
+                        // result that never comes (the other workers keep
+                        // the channel open) — turn the panic into a
+                        // run-aborting error.
+                        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            work(frame, stage, &mut payload)
+                        }))
+                        .unwrap_or_else(|p| {
+                            let msg = p
+                                .downcast_ref::<String>()
+                                .cloned()
+                                .or_else(|| p.downcast_ref::<&str>().map(|m| m.to_string()))
+                                .unwrap_or_else(|| "<non-string panic>".into());
+                            Err(anyhow!(
+                                "stage job (frame {frame}, stage {stage}) panicked: {msg}"
+                            ))
+                        });
+                        let finished = start.elapsed();
+                        let failed = result.is_err();
+                        dones.push(StageDone { frame, stage, payload, result, started, finished });
+                        if failed {
+                            // The coordinator aborts the run on this
+                            // result; the batch's remaining jobs never
+                            // run.
+                            break;
+                        }
+                    }
+                    if res_tx.send(dones).is_err() {
                         break; // coordinator aborted
                     }
                 });
@@ -648,33 +691,59 @@ impl StreamingEngine {
                         let payload = slots[f].take().expect("checked above");
                         unit_busy.insert(unit);
                         unit_sets[stage_of[f]].insert(unit);
+                        let mut batch = vec![(f, stage_of[f], payload)];
+                        // Micro-batch: append up to `stage_batch - 1`
+                        // more runnable jobs bound for the same unit,
+                        // oldest frame first — the unit stays claimed
+                        // across the whole batch.
+                        for f2 in f + 1..admitted {
+                            if batch.len() >= stage_batch {
+                                break;
+                            }
+                            if slots[f2].is_none() || stage_of[f2] >= stages {
+                                continue;
+                            }
+                            if unit_of(f2, stage_of[f2]) != unit {
+                                continue;
+                            }
+                            let p2 = slots[f2].take().expect("checked above");
+                            unit_sets[stage_of[f2]].insert(unit);
+                            batch.push((f2, stage_of[f2], p2));
+                        }
                         jobs_in_flight += 1;
                         job_tx
-                            .send((f, stage_of[f], payload))
+                            .send(batch)
                             .map_err(|_| anyhow!("stage worker pool exited early"))?;
                     }
                     if jobs_in_flight == 0 {
                         debug_assert!(live == 0 && admitted == n);
                         return Ok(());
                     }
-                    let done = res_rx
+                    let dones = res_rx
                         .recv()
                         .map_err(|_| anyhow!("stage worker pool exited early"))?;
                     jobs_in_flight -= 1;
-                    unit_busy.remove(&unit_of(done.frame, done.stage));
-                    stats.stage_busy[done.stage] += done.finished.saturating_sub(done.started);
-                    done.result?;
-                    stage_of[done.frame] = done.stage + 1;
-                    if done.stage + 1 == stages {
-                        live -= 1;
-                        stats.frame_done[done.frame] = done.finished;
-                        pending.insert(done.frame, (done.payload, done.finished));
-                        while let Some((payload, at)) = pending.remove(&next_fold) {
-                            fold(next_fold, payload, at)?;
-                            next_fold += 1;
+                    let unit = {
+                        let first = dones.first().expect("batches are never empty");
+                        unit_of(first.frame, first.stage)
+                    };
+                    unit_busy.remove(&unit);
+                    for done in dones {
+                        stats.stage_busy[done.stage] +=
+                            done.finished.saturating_sub(done.started);
+                        done.result?;
+                        stage_of[done.frame] = done.stage + 1;
+                        if done.stage + 1 == stages {
+                            live -= 1;
+                            stats.frame_done[done.frame] = done.finished;
+                            pending.insert(done.frame, (done.payload, done.finished));
+                            while let Some((payload, at)) = pending.remove(&next_fold) {
+                                fold(next_fold, payload, at)?;
+                                next_fold += 1;
+                            }
+                        } else {
+                            slots[done.frame] = Some(done.payload);
                         }
-                    } else {
-                        slots[done.frame] = Some(done.payload);
                     }
                 }
             };
@@ -966,6 +1035,55 @@ mod tests {
         assert!(stats.wall > Duration::ZERO);
         assert!(stats.measured_interval(3) > Duration::ZERO);
         assert!(stats.stage_occupancy().iter().all(|&o| o > 0.0));
+    }
+
+    #[test]
+    fn stage_micro_batching_keeps_units_exclusive_and_folds_in_order() {
+        // Same invariants as the unbatched stage test, across batch
+        // sizes: a batch holds its unit for every job inside it, frames
+        // still advance stage by stage, and the fold order never changes.
+        for stage_batch in [1usize, 2, 4, 16] {
+            let engine = StreamingEngine::new(
+                Arc::new(MockBackend { parallel: true }),
+                EngineConfig { workers: 4, queue_depth: 4, batch: 1 },
+            )
+            .with_stage_batch(stage_batch);
+            let (n, stages) = (6usize, 3usize);
+            let claims: Vec<AtomicUsize> = (0..stages).map(|_| AtomicUsize::new(0)).collect();
+            let overlap = AtomicBool::new(false);
+            let mut folded = Vec::new();
+            let stats = engine
+                .stream_stages(
+                    n,
+                    stages,
+                    4,
+                    |_f, s| s,
+                    |f| Ok((f, 0usize)),
+                    |f, s, p: &mut (usize, usize)| {
+                        assert_eq!(p.0, f, "payload followed the wrong frame");
+                        assert_eq!(p.1, s, "stage ran out of order");
+                        if claims[s].fetch_add(1, Ordering::SeqCst) != 0 {
+                            overlap.store(true, Ordering::SeqCst);
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                        claims[s].fetch_sub(1, Ordering::SeqCst);
+                        p.1 += 1;
+                        Ok(())
+                    },
+                    |f, p, _| {
+                        assert_eq!(p.1, stages, "folded frame missing stages");
+                        folded.push(f);
+                        Ok(())
+                    },
+                )
+                .unwrap();
+            assert_eq!(folded, vec![0, 1, 2, 3, 4, 5], "stage_batch={stage_batch}");
+            assert!(
+                !overlap.load(Ordering::SeqCst),
+                "stage_batch={stage_batch}: two frames occupied one unit at once"
+            );
+            assert_eq!(stats.stage_units, vec![1, 1, 1], "stage_batch={stage_batch}");
+        }
     }
 
     #[test]

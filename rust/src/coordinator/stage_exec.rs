@@ -31,6 +31,13 @@
 //! the wall-clock overlap differs — property-checked against the golden
 //! model by the shared conformance harness in `tests/stage_serving.rs`,
 //! which also asserts the measured interval shrinks as the window grows.
+//!
+//! When the engine was built with
+//! [`StreamingEngine::with_stage_batch`], up to `k` runnable stage jobs
+//! bound for one chip travel as a single work item, so the chip's
+//! [`StageLease`] unit is acquired once per batch instead of once per
+//! job — the same bit-identity grid in `tests/stage_serving.rs` covers
+//! every batch size.
 
 use crate::backend::{BackendFrame, FrameOptions};
 use crate::cluster::{ChipCluster, ClusterRun, StageLease};

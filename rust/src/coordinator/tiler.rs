@@ -2,6 +2,11 @@
 //! `tile_w × tile_h` blocks (paper: 32×18; edge tiles clipped). These are
 //! the independent work units of the spatial-parallel PE array — block
 //! convolution guarantees no data crosses tile boundaries (§II-B).
+//!
+//! [`crate::accel::SystemController`] drives its tile loop through
+//! [`TilePlan::iter`] and hands each [`TileRect`] to its memoized scratch
+//! arena, so this row-major clipped order is *the* tile order of the
+//! cycle simulator, not just the analytic models.
 
 /// One tile rectangle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

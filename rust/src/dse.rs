@@ -1,0 +1,536 @@
+//! Design-space exploration (`scsnn dse`): the §III-A/§IV studies grown
+//! into one first-class sweep over the whole accelerator configuration
+//! space — cores × chips × shard policy × residency window × input-SRAM
+//! capacity × inter-chip link × time-step mix.
+//!
+//! The sweep is two-tier, which is what makes >1000 points tractable:
+//!
+//! 1. **Analytic tier** — every grid point is priced closed-form:
+//!    throughput from [`LatencyModel::cluster`]'s bounded initiation
+//!    interval, an energy/frame proxy from [`DramModel`] traffic (bit-mask
+//!    format) plus [`LinkSpec`] energy on the activations that cross chips
+//!    under sharded policies, and an area proxy from [`AreaModel`] scaled
+//!    by chip count. No cycle simulation runs here.
+//! 2. **Cycle tier** — the analytic Pareto frontier (max fps, min
+//!    energy/frame, min area) is re-verified by the pipelined cycle
+//!    simulator at paper-tiny scale: [`ChipCluster::run_pipelined`]
+//!    measures the realized initiation interval, which must land within
+//!    the pinned interconnect slack of the analytic one (the same bound
+//!    `tests/pipelined_cluster.rs` enforces), and the per-frame energy is
+//!    re-priced from the simulated activity instead of the proxy.
+//!
+//! The word-parallel one-to-all datapath (`accel::one_to_all`) and the
+//! memoized tile arena (`accel::controller`) are what make tier 2
+//! affordable enough to run on every invocation; the whole sweep — ≥1000
+//! analytic points plus frontier verification — is one command:
+//!
+//! ```text
+//! scsnn dse [--scale full|tiny] [--max-points N] [--verify N]
+//!           [--frames N] [--seed N] [--out BENCH_dse.json]
+//! ```
+//!
+//! Results land in `BENCH_dse.json`: every swept point with its metrics
+//! and Pareto flag, the frontier, and the cycle-verification records.
+
+use crate::accel::dram::{DramModel, LinkSpec};
+use crate::accel::energy::AreaModel;
+use crate::accel::latency::LatencyModel;
+use crate::backend::FrameOptions;
+use crate::cluster::ChipCluster;
+use crate::config::{AccelConfig, ClusterConfig, ShardPolicy};
+use crate::detect::dataset::Dataset;
+use crate::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use crate::model::weights::ModelWeights;
+use crate::sparse::stats::Format;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::Args;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+/// Core counts swept per chip.
+const CORES: [usize; 4] = [1, 2, 4, 8];
+/// Cluster sizes swept.
+const CHIPS: [usize; 3] = [1, 2, 4];
+/// Residency windows (frames in flight) swept.
+const IN_FLIGHT: [usize; 3] = [1, 2, 4];
+/// Inter-chip links swept: a narrow/slow serdes, the default DRAM-class
+/// link, and a wide/low-latency one.
+const LINKS: [LinkSpec; 3] = [
+    LinkSpec { bits_per_cycle: 64, latency_cycles: 400, pj_per_bit: 15.0 },
+    LinkSpec { bits_per_cycle: 128, latency_cycles: 200, pj_per_bit: 10.0 },
+    LinkSpec { bits_per_cycle: 256, latency_cycles: 100, pj_per_bit: 6.0 },
+];
+
+/// Time-step mixes swept (Fig 15's most informative configurations).
+fn time_step_axis() -> [TimeStepConfig; 4] {
+    [
+        TimeStepConfig::Uniform(3),
+        TimeStepConfig::C1(3),
+        TimeStepConfig::C2(3),
+        TimeStepConfig::C2B(2, 3),
+    ]
+}
+
+/// Input-SRAM variants swept: the paper's 36 KB baseline and the 81 KB
+/// upgrade that collapses the input-refetch traffic (§IV-D).
+fn sram_axis() -> [AccelConfig; 2] {
+    [AccelConfig::paper(), AccelConfig::paper_large_input_sram()]
+}
+
+/// (chips, policy) combinations: a single chip has no sharding choice, so
+/// the policy axis only fans out for real clusters.
+fn chip_policy_axis() -> Vec<(usize, ShardPolicy)> {
+    let mut v = Vec::new();
+    for chips in CHIPS {
+        if chips == 1 {
+            v.push((1, ShardPolicy::FrameParallel));
+        } else {
+            for p in ShardPolicy::all() {
+                v.push((chips, p));
+            }
+        }
+    }
+    v
+}
+
+/// Total grid cardinality (before any `--max-points` decimation).
+pub fn grid_size() -> usize {
+    time_step_axis().len()
+        * sram_axis().len()
+        * CORES.len()
+        * chip_policy_axis().len()
+        * LINKS.len()
+        * IN_FLIGHT.len()
+}
+
+/// One coordinate in the sweep grid.
+#[derive(Clone, Debug)]
+pub struct DesignPoint {
+    /// Cores per chip.
+    pub cores: usize,
+    /// Chips in the cluster.
+    pub chips: usize,
+    /// Sharding policy (FrameParallel when `chips == 1`).
+    pub policy: ShardPolicy,
+    /// Residency window for the bounded initiation interval.
+    pub in_flight: usize,
+    /// Input-SRAM capacity of each chip.
+    pub input_sram_bytes: usize,
+    /// Inter-chip link.
+    pub link: LinkSpec,
+    /// Time-step mix of the network.
+    pub time_steps: TimeStepConfig,
+}
+
+impl DesignPoint {
+    /// The chip configuration this point describes.
+    pub fn chip_config(&self) -> AccelConfig {
+        let base = if self.input_sram_bytes > AccelConfig::paper().input_sram_bytes {
+            AccelConfig::paper_large_input_sram()
+        } else {
+            AccelConfig::paper()
+        };
+        base.with_cores(self.cores)
+    }
+
+    /// The cluster configuration this point describes.
+    pub fn cluster_config(&self) -> ClusterConfig {
+        ClusterConfig {
+            chip: self.chip_config(),
+            link_bits_per_cycle: self.link.bits_per_cycle,
+            link_latency_cycles: self.link.latency_cycles,
+            link_pj_per_bit: self.link.pj_per_bit,
+            ..ClusterConfig::single_chip()
+        }
+        .with_chips(self.chips)
+        .with_policy(self.policy)
+    }
+
+    /// Compact human label for tables.
+    pub fn label(&self) -> String {
+        format!(
+            "{}c×{}ch[{}] w{} {}KB link{} {}",
+            self.cores,
+            self.chips,
+            self.policy.label(),
+            self.in_flight,
+            self.input_sram_bytes / 1024,
+            self.link.bits_per_cycle,
+            self.time_steps.label()
+        )
+    }
+}
+
+/// A grid point with its analytic metrics.
+#[derive(Clone, Debug)]
+pub struct Evaluated {
+    /// The swept coordinate.
+    pub point: DesignPoint,
+    /// Bounded steady-state initiation interval in cycles.
+    pub interval_cycles: u64,
+    /// Compute critical path of one frame across the cluster.
+    pub compute_makespan: u64,
+    /// Analytic steady-state throughput at the chip clock.
+    pub fps: f64,
+    /// Energy/frame proxy in mJ: DRAM traffic + inter-chip link energy.
+    pub energy_mj: f64,
+    /// Area proxy in mm²: one chip's area × chips.
+    pub area_mm2: f64,
+}
+
+/// `a` Pareto-dominates `b` on (fps ↑, energy ↓, area ↓).
+pub fn dominates(a: &Evaluated, b: &Evaluated) -> bool {
+    a.fps >= b.fps
+        && a.energy_mj <= b.energy_mj
+        && a.area_mm2 <= b.area_mm2
+        && (a.fps > b.fps || a.energy_mj < b.energy_mj || a.area_mm2 < b.area_mm2)
+}
+
+/// Keep the `idx`-th of `total` leaves when decimating to `max_points`
+/// (0 = keep everything). The floor-boundary test keeps exactly
+/// `max_points` evenly-strided leaves.
+fn keep(idx: usize, total: usize, max_points: usize) -> bool {
+    max_points == 0
+        || max_points >= total
+        || (idx * max_points / total) != ((idx + 1) * max_points / total)
+}
+
+/// Run the analytic tier: price every grid point (optionally decimated to
+/// `max_points` evenly-strided ones) closed-form. Weights are synthetic
+/// 80%-pruned at `seed`, matching the CLI's fallback weights.
+pub fn sweep(scale: Scale, seed: u64, max_points: usize) -> Vec<Evaluated> {
+    let total = grid_size();
+    let area_model = AreaModel::default();
+    let mut out = Vec::new();
+    let mut idx = 0usize;
+    for ts in time_step_axis() {
+        let net = NetworkSpec::paper(scale, ts);
+        let mut w = ModelWeights::random(&net, 1.0, seed);
+        w.prune_fine_grained(0.8);
+        for base in sram_axis() {
+            // Traffic depends on the SRAM capacity and the network, not
+            // on core/cluster geometry — price it once per branch.
+            let dram = DramModel::new(base.clone());
+            let traffic = dram.frame_traffic(&net, &w, Format::BitMask);
+            let dram_mj = dram.frame_energy_mj(&traffic);
+            for cores in CORES {
+                let chip = base.clone().with_cores(cores);
+                let chip_area = area_model.report(&chip).total_mm2();
+                for (chips, policy) in chip_policy_axis() {
+                    for link in LINKS {
+                        // Skip the closed-form latency walk when
+                        // decimation drops this whole (link × window)
+                        // subtree.
+                        if !(0..IN_FLIGHT.len()).any(|j| keep(idx + j, total, max_points)) {
+                            idx += IN_FLIGHT.len();
+                            continue;
+                        }
+                        let point_base = DesignPoint {
+                            cores,
+                            chips,
+                            policy,
+                            in_flight: 1,
+                            input_sram_bytes: base.input_sram_bytes,
+                            link,
+                            time_steps: ts,
+                        };
+                        let cc = point_base.cluster_config();
+                        let cl = LatencyModel::cluster(&net, &w, &cc);
+                        // First-order link-energy proxy: sharded policies
+                        // ship activations between chips, frame-parallel
+                        // only talks to the host. The cycle tier prices
+                        // the real interconnect log instead.
+                        let link_bits = if chips == 1 || policy == ShardPolicy::FrameParallel {
+                            0
+                        } else {
+                            traffic.output_bits
+                        };
+                        let energy_mj = dram_mj + link.energy_mj(link_bits);
+                        for in_flight in IN_FLIGHT {
+                            let kept = keep(idx, total, max_points);
+                            idx += 1;
+                            if !kept {
+                                continue;
+                            }
+                            let interval = cl.pipeline_interval_bounded(in_flight);
+                            out.push(Evaluated {
+                                point: DesignPoint { in_flight, ..point_base.clone() },
+                                interval_cycles: interval,
+                                compute_makespan: cl.compute_makespan,
+                                fps: chip.clock_hz / interval.max(1) as f64,
+                                energy_mj,
+                                area_mm2: chip_area * chips as f64,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Indices of the Pareto-optimal points (max fps, min energy, min area).
+pub fn pareto_frontier(points: &[Evaluated]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| {
+            !points.iter().enumerate().any(|(j, p)| j != i && dominates(p, &points[i]))
+        })
+        .collect()
+}
+
+/// One frontier point re-run through the pipelined cycle simulator.
+#[derive(Clone, Debug)]
+pub struct Verification {
+    /// The verified coordinate.
+    pub point: DesignPoint,
+    /// Analytic bounded interval the simulator should realize.
+    pub analytic_interval: u64,
+    /// Measured steady-state interval from the pipelined schedule.
+    pub measured_interval: f64,
+    /// Simulated steady-state throughput at the chip clock.
+    pub steady_fps: f64,
+    /// Per-frame energy from the simulated activity (core + interconnect).
+    pub measured_energy_mj: f64,
+    /// Pinned tolerance: worst single frame's interconnect occupancy.
+    pub transfer_slack: u64,
+    /// `|measured − analytic| ≤ transfer_slack + 1` — the same bound
+    /// `tests/pipelined_cluster.rs` enforces.
+    pub within_model: bool,
+}
+
+/// Cycle-verify one design point at paper-tiny scale: run `frames`
+/// synthetic frames through [`ChipCluster::run_pipelined`], check
+/// bit-identity against serial execution, and compare the measured
+/// initiation interval to the analytic one within the pinned slack.
+///
+/// Verification always runs the tiny network — the full-scale cycle
+/// simulator takes hours per frame, and the interval/energy relationships
+/// being checked are scale-independent.
+pub fn verify_point(p: &DesignPoint, seed: u64, frames: usize) -> Result<Verification> {
+    let net = Arc::new(NetworkSpec::paper(Scale::Tiny, p.time_steps));
+    let mut w = ModelWeights::random(&net, 1.0, seed);
+    w.prune_fine_grained(0.8);
+    let w = Arc::new(w);
+    let cl = ChipCluster::new(net.clone(), w.clone(), p.cluster_config())?;
+    let ds = Dataset::synth(frames.max(2), net.input_w, net.input_h, seed + 1);
+    let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+    let opts = FrameOptions::default();
+    let run = cl.run_pipelined(&images, &opts, p.in_flight)?;
+    let serial = cl.run_frame_cluster(images[0], &opts)?;
+    if serial.frame != run.frames[0] {
+        bail!("pipelined frame 0 diverged from serial execution at {}", p.label());
+    }
+    let measured = run.measured_interval();
+    let slack = run.transfer_slack();
+    Ok(Verification {
+        point: p.clone(),
+        analytic_interval: run.analytic_interval,
+        measured_interval: measured,
+        steady_fps: run.steady_fps(p.chip_config().clock_hz),
+        measured_energy_mj: serial.run.energy.total_mj,
+        transfer_slack: slack,
+        within_model: (measured - run.analytic_interval as f64).abs() <= slack as f64 + 1.0,
+    })
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn point_json(e: &Evaluated, pareto: bool) -> Json {
+    obj(vec![
+        ("cores", Json::Num(e.point.cores as f64)),
+        ("chips", Json::Num(e.point.chips as f64)),
+        ("policy", Json::Str(e.point.policy.label().to_string())),
+        ("in_flight", Json::Num(e.point.in_flight as f64)),
+        ("input_sram_kb", Json::Num((e.point.input_sram_bytes / 1024) as f64)),
+        ("link_bits_per_cycle", Json::Num(e.point.link.bits_per_cycle as f64)),
+        ("link_latency_cycles", Json::Num(e.point.link.latency_cycles as f64)),
+        ("link_pj_per_bit", Json::Num(e.point.link.pj_per_bit)),
+        ("time_steps", Json::Str(e.point.time_steps.label())),
+        ("interval_cycles", Json::Num(e.interval_cycles as f64)),
+        ("compute_makespan", Json::Num(e.compute_makespan as f64)),
+        ("fps", Json::Num(e.fps)),
+        ("energy_mj_frame", Json::Num(e.energy_mj)),
+        ("area_mm2", Json::Num(e.area_mm2)),
+        ("pareto", Json::Bool(pareto)),
+    ])
+}
+
+fn verification_json(v: &Verification) -> Json {
+    obj(vec![
+        ("label", Json::Str(v.point.label())),
+        ("analytic_interval", Json::Num(v.analytic_interval as f64)),
+        ("measured_interval", Json::Num(v.measured_interval)),
+        ("steady_fps", Json::Num(v.steady_fps)),
+        ("measured_energy_mj_frame", Json::Num(v.measured_energy_mj)),
+        ("transfer_slack", Json::Num(v.transfer_slack as f64)),
+        ("within_model", Json::Bool(v.within_model)),
+    ])
+}
+
+/// The `scsnn dse` subcommand: analytic sweep, Pareto frontier, cycle
+/// verification, `BENCH_dse.json`.
+pub fn run(args: &Args) -> Result<()> {
+    let sc = Scale::parse(args.get_or("scale", "full")).unwrap_or(Scale::Full);
+    let seed = args.parsed_or("seed", 42u64);
+    let max_points = args.parsed_or("max-points", 0usize);
+    let verify_n = args.parsed_or("verify", 6usize).max(1);
+    let out_path = args.get_or("out", "BENCH_dse.json").to_string();
+
+    let total = grid_size();
+    let swept = if max_points == 0 { total } else { max_points.min(total) };
+    println!(
+        "dse: sweeping {swept} of {total} analytic points ({} scale, seed {seed})…",
+        args.get_or("scale", "full")
+    );
+    let evals = sweep(sc, seed, max_points);
+    let frontier = pareto_frontier(&evals);
+    println!("dse: {} points priced, Pareto frontier has {} points", evals.len(), frontier.len());
+
+    // Frontier by descending throughput, deduplicated on the metric
+    // triple (a single-chip point repeats across the link/window axes it
+    // is insensitive to).
+    let mut order: Vec<usize> = frontier.clone();
+    order.sort_by(|&a, &b| evals[b].fps.partial_cmp(&evals[a].fps).unwrap());
+    let mut seen = BTreeSet::new();
+    let distinct: Vec<usize> = order
+        .into_iter()
+        .filter(|&i| {
+            let e = &evals[i];
+            seen.insert(format!("{:.3}|{:.6}|{:.3}", e.fps, e.energy_mj, e.area_mm2))
+        })
+        .collect();
+
+    println!(
+        "  {:<38} {:>10} {:>12} {:>10}",
+        "frontier point", "fps", "mJ/frame", "mm²"
+    );
+    for &i in distinct.iter().take(10) {
+        let e = &evals[i];
+        println!(
+            "  {:<38} {:>10.1} {:>12.3} {:>10.2}",
+            e.point.label(),
+            e.fps,
+            e.energy_mj,
+            e.area_mm2
+        );
+    }
+
+    // Cycle tier: evenly-strided slice of the distinct frontier.
+    let n_verify = verify_n.min(distinct.len());
+    let mut verifications = Vec::new();
+    if n_verify > 0 {
+        println!("dse: cycle-verifying {n_verify} frontier points at tiny scale…");
+        println!(
+            "  {:<38} {:>10} {:>10} {:>10} {:>9}",
+            "verified point", "analytic", "measured", "sim fps", "ok"
+        );
+        for k in 0..n_verify {
+            let i = distinct[k * distinct.len() / n_verify];
+            let p = &evals[i].point;
+            let frames = args.parsed_or("frames", 2 * p.in_flight.max(2) + 2);
+            let v = verify_point(p, seed, frames)?;
+            println!(
+                "  {:<38} {:>10} {:>10.0} {:>10.1} {:>9}",
+                v.point.label(),
+                v.analytic_interval,
+                v.measured_interval,
+                v.steady_fps,
+                if v.within_model { "yes" } else { "NO" }
+            );
+            verifications.push(v);
+        }
+    }
+    let diverged: Vec<&Verification> =
+        verifications.iter().filter(|v| !v.within_model).collect();
+
+    let report = obj(vec![
+        ("scale", Json::Str(args.get_or("scale", "full").to_string())),
+        ("seed", Json::Num(seed as f64)),
+        ("grid_size", Json::Num(total as f64)),
+        ("points_swept", Json::Num(evals.len() as f64)),
+        ("frontier_size", Json::Num(frontier.len() as f64)),
+        (
+            "points",
+            Json::Arr(
+                evals
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| point_json(e, frontier.contains(&i)))
+                    .collect(),
+            ),
+        ),
+        ("verified", Json::Arr(verifications.iter().map(verification_json).collect())),
+    ]);
+    std::fs::write(&out_path, report.to_string_compact())?;
+    println!("dse: wrote {out_path}");
+    if !diverged.is_empty() {
+        bail!(
+            "{} frontier point(s) diverged from the cycle simulator beyond the pinned slack",
+            diverged.len()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_at_least_a_thousand_points() {
+        assert!(grid_size() >= 1000, "grid is only {} points", grid_size());
+    }
+
+    #[test]
+    fn decimated_sweep_keeps_the_requested_count_and_frontier_partitions_it() {
+        let evals = sweep(Scale::Tiny, 7, 40);
+        assert_eq!(evals.len(), 40);
+        assert!(evals.iter().all(|e| e.fps > 0.0 && e.energy_mj > 0.0 && e.area_mm2 > 0.0));
+        let front = pareto_frontier(&evals);
+        assert!(!front.is_empty());
+        for i in 0..evals.len() {
+            let dominated =
+                evals.iter().enumerate().any(|(j, p)| j != i && dominates(p, &evals[i]));
+            assert_eq!(
+                !dominated,
+                front.contains(&i),
+                "frontier membership wrong at {}",
+                evals[i].point.label()
+            );
+        }
+    }
+
+    #[test]
+    fn undecimated_sweep_prices_every_point() {
+        // max_points larger than the grid must be a no-op decimation.
+        let evals = sweep(Scale::Tiny, 7, 0);
+        assert_eq!(evals.len(), grid_size());
+    }
+
+    #[test]
+    fn cycle_sim_confirms_an_analytic_point_within_the_pinned_slack() {
+        let p = DesignPoint {
+            cores: 2,
+            chips: 2,
+            policy: ShardPolicy::LayerPipeline,
+            in_flight: 2,
+            input_sram_bytes: AccelConfig::paper().input_sram_bytes,
+            link: LinkSpec::default(),
+            time_steps: TimeStepConfig::PAPER,
+        };
+        let v = verify_point(&p, 11, 5).unwrap();
+        assert!(v.steady_fps > 0.0);
+        assert!(v.measured_interval > 0.0);
+        assert!(
+            v.within_model,
+            "measured {} vs analytic {} (slack {})",
+            v.measured_interval, v.analytic_interval, v.transfer_slack
+        );
+    }
+}

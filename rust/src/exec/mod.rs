@@ -112,6 +112,11 @@ pub trait WalkHooks {
 /// attribution — a [`LayerWalk`] over `NopHooks` **is** the plain
 /// single-chip cycle simulator, bit for bit and cycle for cycle
 /// (property-tested in `tests/exec_walk.rs`).
+///
+/// Because the controller persists across [`LayerWalk::run`] calls, its
+/// scratch arena (PE/LIF state, extracted input tiles) is reused across
+/// frames as well as across tiles — the memoized hot path. The
+/// cross-frame bit-identity of that reuse is pinned below.
 pub struct NopHooks {
     ctrl: SystemController,
 }
@@ -437,6 +442,43 @@ mod tests {
         assert_eq!(ev.len(), 2);
         assert_eq!(ev[0], StageCompletion { stage: 0, layers_done: 1 });
         assert_eq!(ev[1], StageCompletion { stage: 1, layers_done: net.layers.len() });
+    }
+
+    #[test]
+    fn reused_controller_scratch_is_bit_identical_across_frames() {
+        // One hook set (one controller, one scratch arena) serving many
+        // frames must produce exactly what a fresh controller per frame
+        // produces — the property the memoized tile extraction rests on.
+        let (net, w, img) = setup();
+        let planes = planes_of(&net, &w);
+        let walk = LayerWalk::new(&net, &w, &planes);
+        let opts = FrameOptions { collect_stats: true };
+
+        // Second frame with a different activity pattern.
+        let mut rng = Rng::new(777);
+        let n = net.input_c * net.input_h * net.input_w;
+        let img2 = Tensor::from_vec(
+            net.input_c,
+            net.input_h,
+            net.input_w,
+            (0..n).map(|_| rng.next_u32() as u8).collect(),
+        );
+
+        let mut reused = NopHooks::new(AccelConfig::paper());
+        let got: Vec<BackendFrame> = [&img, &img2, &img]
+            .iter()
+            .map(|im| walk.run(im, &opts, &mut reused).unwrap())
+            .collect();
+        let want: Vec<BackendFrame> = [&img, &img2, &img]
+            .iter()
+            .map(|im| {
+                let mut fresh = NopHooks::new(AccelConfig::paper());
+                walk.run(im, &opts, &mut fresh).unwrap()
+            })
+            .collect();
+        assert_eq!(got, want);
+        // Same image through the warm scratch is reproducible too.
+        assert_eq!(got[0], got[2]);
     }
 
     #[test]

@@ -35,6 +35,7 @@
 //! | [`ref_impl`] | functional golden model (block conv, full SNN forward) |
 //! | [`accel`] | cycle-level accelerator simulator (the paper's §III) |
 //! | [`detect`] | YOLOv2 decode, NMS, mAP, synthetic IVS-3cls dataset |
+//! | [`dse`] | design-space exploration: analytic sweep + cycle-verified Pareto frontier (`scsnn dse`) |
 //! | [`runtime`] | PJRT CPU client for `artifacts/*.hlo.txt` |
 //! | [`coordinator`] | block tiler, layer scheduler, streaming engine, frame pipeline, metrics |
 
@@ -44,6 +45,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod detect;
+pub mod dse;
 pub mod exec;
 pub mod model;
 pub mod ref_impl;

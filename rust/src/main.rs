@@ -6,6 +6,7 @@
 //! - `simulate`    analytic hardware run: cycles, fps, power, area (Fig 16)
 //! - `parallelism` the §III-A design-space study (Fig 6)
 //! - `dram`        DRAM traffic per compression format (Fig 17, §IV-D)
+//! - `dse`         1000+-point design-space sweep with a cycle-verified Pareto frontier
 //! - `timesteps`   mixed-time-step sweep on the golden model (Fig 15)
 //! - `miout`       per-layer mIoUT (Fig 5)
 //! - `report`      summarize `artifacts/metrics.json` (python build metrics)
@@ -40,6 +41,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("parallelism") => cmd_parallelism(&args),
         Some("dram") => cmd_dram(&args),
+        Some("dse") => scsnn::dse::run(&args),
         Some("timesteps") => cmd_timesteps(&args),
         Some("miout") => cmd_miout(&args),
         Some("report") => cmd_report(&args),
@@ -62,8 +64,9 @@ fn main() {
 fn print_usage() {
     println!(
         "scsnn — sparse compressed SNN accelerator (TCAS-I 2022 reproduction)\n\
-         usage: scsnn <detect|simulate|parallelism|dram|timesteps|miout|report> [--options]\n\
+         usage: scsnn <detect|simulate|parallelism|dram|dse|timesteps|miout|report> [--options]\n\
          common options: --artifacts DIR  --scale full|tiny  --seed N\n\
+         dse options:     --max-points N  --verify N  --frames N  --out BENCH_dse.json\n\
          serving options: --backend golden|cyclesim|pjrt|cluster|auto  --workers N|MIN..MAX  --cores N  --batch N\n\
          cluster options: --chips N  --shard-policy frame|pipeline|tile  --in-flight N  (--want-cycles with auto)\n\
          stage serving:   --pipeline N  (wall-clock pipelined cluster serving, N frames in flight)"

@@ -17,6 +17,11 @@
 //!   of sparse convolution: apply one weight to every output whose
 //!   (replicate-clamped) source bit is set, in O(popcount) per row, with
 //!   an O(1) all-zero fast path.
+//! - [`SpikePlane::accumulate_shifted_words_into`] — the word-parallel
+//!   form of the same inner loop: funnel-shift whole 64-bit packed words
+//!   into output alignment, OR in the replicate-clamped edge lanes as a
+//!   mask, popcount for the gating statistics, and scatter only the
+//!   surviving set bits. Zero words are skipped wholesale.
 //!
 //! The representation is bit-exact with the dense `Tensor<u8>` path; the
 //! property tests below pin `from_dense ∘ to_dense = id` and the
@@ -137,40 +142,72 @@ impl SpikePlane {
         })
     }
 
+    /// Re-shape to `h × w` and clear, reusing the word buffer's capacity —
+    /// the scratch-arena primitive behind [`SpikePlane::extract_tile_into`].
+    fn reset(&mut self, h: usize, w: usize) {
+        let words_per_row = w.div_ceil(64).max(1);
+        self.h = h;
+        self.w = w;
+        self.words_per_row = words_per_row;
+        self.words.clear();
+        self.words.resize(h * words_per_row, 0);
+        self.nnz = 0;
+    }
+
     /// Extract the fully-in-bounds sub-tile `[y0, y0+th) × [x0, x0+tw)`.
-    /// Only the words overlapping the column window are visited, so the
-    /// cost is O(popcount of the window) + O(covered words) — extracting N
-    /// tiles from a row costs one pass over that row in total.
+    /// Word-parallel: each output word is the funnel-shifted pair of
+    /// source words covering its columns, so the cost is O(covered words)
+    /// regardless of density.
     pub fn extract_tile(&self, y0: usize, x0: usize, th: usize, tw: usize) -> SpikePlane {
-        assert!(y0 + th <= self.h && x0 + tw <= self.w, "tile out of bounds");
         let mut out = SpikePlane::zeros(th, tw);
-        if tw == 0 {
-            return out;
+        self.extract_tile_into(y0, x0, th, tw, &mut out);
+        out
+    }
+
+    /// [`SpikePlane::extract_tile`] into a caller-owned plane, reusing its
+    /// allocation — the hot form for scratch arenas that extract the same
+    /// tile geometry for every channel, time step and frame.
+    pub fn extract_tile_into(
+        &self,
+        y0: usize,
+        x0: usize,
+        th: usize,
+        tw: usize,
+        out: &mut SpikePlane,
+    ) {
+        assert!(y0 + th <= self.h && x0 + tw <= self.w, "tile out of bounds");
+        out.reset(th, tw);
+        if tw == 0 || th == 0 {
+            return;
         }
+        let s = (x0 % 64) as u32;
         let wi_first = x0 / 64;
-        let wi_last = (x0 + tw - 1) / 64;
+        let (src_wpr, out_wpr) = (self.words_per_row, out.words_per_row);
+        let tail_mask = if tw % 64 == 0 { u64::MAX } else { (1u64 << (tw % 64)) - 1 };
+        let mut nnz = 0usize;
         for ty in 0..th {
             let row = self.row_words(y0 + ty);
-            for wi in wi_first..=wi_last {
-                let mut bits = row[wi];
-                // Mask off columns outside [x0, x0+tw) in the edge words.
-                if wi == wi_first {
-                    bits &= u64::MAX << (x0 % 64);
+            let dst = &mut out.words[ty * out_wpr..(ty + 1) * out_wpr];
+            for (owi, d) in dst.iter_mut().enumerate() {
+                // Output word `owi` holds source columns
+                // `[x0 + owi*64, x0 + owi*64 + 64)`: funnel-shift the two
+                // covering source words into alignment.
+                let swi = wi_first + owi;
+                let lo = if swi < src_wpr { row[swi] } else { 0 };
+                let mut bits = if s == 0 {
+                    lo
+                } else {
+                    let hi = if swi + 1 < src_wpr { row[swi + 1] } else { 0 };
+                    (lo >> s) | (hi << (64 - s))
+                };
+                if owi == out_wpr - 1 {
+                    bits &= tail_mask;
                 }
-                if wi == wi_last {
-                    let end = (x0 + tw - 1) % 64;
-                    if end < 63 {
-                        bits &= (1u64 << (end + 1)) - 1;
-                    }
-                }
-                while bits != 0 {
-                    let sx = wi * 64 + bits.trailing_zeros() as usize;
-                    bits &= bits - 1;
-                    out.set(ty, sx - x0);
-                }
+                *d = bits;
+                nnz += bits.count_ones() as usize;
             }
         }
-        out
+        out.nnz = nnz;
     }
 
     /// 2×2 stride-2 OR max pooling, event-driven: each set input bit ORs
@@ -256,6 +293,95 @@ impl SpikePlane {
                         *slot += contrib;
                         applied += 1;
                     }
+                }
+            }
+        }
+        applied
+    }
+
+    /// Word-parallel form of [`SpikePlane::accumulate_shifted_into`]:
+    /// identical sums and `applied` count, but the enable window is built
+    /// a whole 64-bit word at a time. Per output word the packed source
+    /// row is funnel-shifted into alignment, the replicate-clamped edge
+    /// lanes are ORed in as a mask, padding lanes are masked off, and only
+    /// the surviving set bits are scattered into `acc` — so zero words
+    /// cost one compare and the gating count is a popcount, not a scan.
+    pub fn accumulate_shifted_words_into(
+        &self,
+        acc: &mut [i32],
+        dy: isize,
+        dx: isize,
+        contrib: i32,
+    ) -> u64 {
+        debug_assert_eq!(acc.len(), self.h * self.w);
+        if self.nnz == 0 {
+            return 0; // all-zero fast path
+        }
+        let (h, w) = (self.h, self.w);
+        let wpr = self.words_per_row;
+        // Word/bit split of the shift, hoisted out of the row loop. The
+        // `s == 0` cases are special-cased below (shifting u64 by 64 is
+        // undefined).
+        let (q, s) = (dx.unsigned_abs() / 64, (dx.unsigned_abs() % 64) as u32);
+        let tail_mask = if w % 64 == 0 { u64::MAX } else { (1u64 << (w % 64)) - 1 };
+        let mut applied = 0u64;
+        for y in 0..h {
+            let sy = (y as isize + dy).clamp(0, h as isize - 1) as usize;
+            let row = self.row_words(sy);
+            let out_row = &mut acc[y * w..(y + 1) * w];
+            // Replicate-clamped edge lanes [ea, eb): outputs whose source
+            // column clamps to the row boundary, enabled iff the boundary
+            // bit is set. The funnel below yields zero on these lanes
+            // (shifted-in source bits are padding), so ORing is exact.
+            let (ea, eb) = if dx > 0 {
+                if self.get(sy, w - 1) { (w.saturating_sub(dx as usize), w) } else { (0, 0) }
+            } else if dx < 0 && self.get(sy, 0) {
+                (0, ((-dx) as usize).min(w))
+            } else {
+                (0, 0)
+            };
+            for owi in 0..wpr {
+                // Funnel-shift the packed source row into this output
+                // word: output lane `owi*64 + b` reads source column
+                // `owi*64 + b + dx` (unclamped interior).
+                let mut ew = if dx >= 0 {
+                    let swi = owi + q;
+                    let lo = if swi < wpr { row[swi] } else { 0 };
+                    if s == 0 {
+                        lo
+                    } else {
+                        let hi = if swi + 1 < wpr { row[swi + 1] } else { 0 };
+                        (lo >> s) | (hi << (64 - s))
+                    }
+                } else if owi < q {
+                    0
+                } else {
+                    let swi = owi - q;
+                    let lo = if s == 0 { row[swi] } else { row[swi] << s };
+                    let hi = if s > 0 && swi >= 1 { row[swi - 1] >> (64 - s) } else { 0 };
+                    lo | hi
+                };
+                if ea < eb {
+                    // Intersect the edge range with this word's lanes.
+                    let lane0 = owi * 64;
+                    let (a, b) = (ea.max(lane0), eb.min(lane0 + 64));
+                    if a < b {
+                        let hi_mask =
+                            if b - lane0 == 64 { u64::MAX } else { (1u64 << (b - lane0)) - 1 };
+                        ew |= hi_mask & !((1u64 << (a - lane0)) - 1);
+                    }
+                }
+                if owi == wpr - 1 {
+                    ew &= tail_mask;
+                }
+                if ew == 0 {
+                    continue; // whole silent word: one compare, no scan
+                }
+                applied += u64::from(ew.count_ones());
+                let base = owi * 64;
+                while ew != 0 {
+                    out_row[base + ew.trailing_zeros() as usize] += contrib;
+                    ew &= ew - 1;
                 }
             }
         }
@@ -537,6 +663,95 @@ mod tests {
         let mut acc = vec![7i32; 54];
         assert_eq!(plane.accumulate_shifted_into(&mut acc, -1, 1, 5), 0);
         assert!(acc.iter().all(|&v| v == 7));
+        let mut acc = vec![7i32; 54];
+        assert_eq!(plane.accumulate_shifted_words_into(&mut acc, -1, 1, 5), 0);
+        assert!(acc.iter().all(|&v| v == 7));
+    }
+
+    #[test]
+    fn prop_word_accumulate_matches_per_pixel_and_dense() {
+        // The word-parallel accumulate must equal both the per-pixel
+        // event-driven path and the naive dense enable-map form, for any
+        // density (0%..=100%), multi-word rows, and shifts from sub-word
+        // through whole-word up to larger than the row itself (every
+        // funnel/edge/tail branch).
+        run_prop("spike/accumulate-words", |g| {
+            let h = g.usize(1, 8);
+            let w = g.usize(1, 150); // exercise multi-word rows
+            let density = g.f64(0.0, 1.0);
+            let density = if g.bool(0.1) { 0.0 } else if g.bool(0.1) { 1.0 } else { density };
+            let data = g.spikes(h * w, density);
+            let plane = SpikePlane::from_dense(&data, h, w);
+            let dy = g.i64(-3, 3) as isize;
+            let dx = if g.bool(0.25) { g.i64(-170, 170) } else { g.i64(-70, 70) } as isize;
+            let contrib = g.i64(-50, 50) as i32;
+
+            let mut got = vec![0i32; h * w];
+            let applied = plane.accumulate_shifted_words_into(&mut got, dy, dx, contrib);
+            let mut pixel = vec![0i32; h * w];
+            let pixel_applied = plane.accumulate_shifted_into(&mut pixel, dy, dx, contrib);
+
+            let mut want = vec![0i32; h * w];
+            let mut want_applied = 0u64;
+            for y in 0..h {
+                for x in 0..w {
+                    let sy = (y as isize + dy).clamp(0, h as isize - 1) as usize;
+                    let sx = (x as isize + dx).clamp(0, w as isize - 1) as usize;
+                    if data[sy * w + sx] != 0 {
+                        want[y * w + x] += contrib;
+                        want_applied += 1;
+                    }
+                }
+            }
+            assert_eq!(got, want, "dy={dy} dx={dx} h={h} w={w}");
+            assert_eq!(applied, want_applied);
+            assert_eq!(got, pixel, "word vs per-pixel: dy={dy} dx={dx} h={h} w={w}");
+            assert_eq!(applied, pixel_applied);
+        });
+    }
+
+    #[test]
+    fn prop_extract_tile_matches_dense_window() {
+        // Funnel-shifted extraction vs a dense window slice, across
+        // word-aligned and unaligned offsets and clipped edge tiles.
+        run_prop("spike/extract-tile", |g| {
+            let h = g.usize(1, 8);
+            let w = g.usize(1, 150);
+            let data = g.spikes(h * w, g.f64(0.0, 1.0));
+            let plane = SpikePlane::from_dense(&data, h, w);
+            let th = g.usize(1, h + 1);
+            let tw = g.usize(1, w + 1);
+            let y0 = g.usize(0, h - th + 1);
+            let x0 = g.usize(0, w - tw + 1);
+            let tile = plane.extract_tile(y0, x0, th, tw);
+            assert_eq!((tile.h, tile.w), (th, tw));
+            let mut nnz = 0usize;
+            for y in 0..th {
+                for x in 0..tw {
+                    let want = data[(y0 + y) * w + x0 + x] != 0;
+                    assert_eq!(tile.get(y, x), want, "({y},{x}) y0={y0} x0={x0}");
+                    nnz += usize::from(want);
+                }
+            }
+            assert_eq!(tile.count_set(), nnz);
+        });
+    }
+
+    #[test]
+    fn extract_tile_into_reuses_the_buffer_bit_exact() {
+        // One scratch plane driven through differently-shaped extractions
+        // must equal a fresh extraction every time (shape, bits and cached
+        // nnz), including shrinking reuse.
+        let mut rng = Rng::new(19);
+        let (_, plane) = random_plane(&mut rng, 12, 140, 0.3);
+        let mut out = SpikePlane::zeros(1, 1);
+        for (y0, x0, th, tw) in
+            [(0, 0, 12, 140), (3, 17, 5, 40), (5, 63, 7, 66), (0, 64, 4, 64), (11, 139, 1, 1)]
+        {
+            plane.extract_tile_into(y0, x0, th, tw, &mut out);
+            assert_eq!(out, plane.extract_tile(y0, x0, th, tw), "({y0},{x0},{th},{tw})");
+            assert_eq!(out.count_set(), out.to_dense().iter().filter(|&&v| v != 0).count());
+        }
     }
 
     #[test]

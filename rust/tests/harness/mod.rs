@@ -222,12 +222,27 @@ pub fn golden_frames(case: &ConformanceCase, opts: &FrameOptions) -> Vec<Backend
 }
 
 /// Drive a property over random conformance cases: random chains,
-/// pruning densities, time-step mixes, 1–4 frames per case.
+/// pruning densities, time-step mixes, 1–4 frames per case. A slice of
+/// the frames are density extremes — all-zero (the one-to-all gating's
+/// O(1) fast path behind every cycle backend) and fully saturated pixels
+/// (every word of the word-parallel datapath at full occupancy) — so the
+/// hot-path special cases are conformance-checked, not just unit-tested.
 pub fn conformance_cases(name: &str, mut check: impl FnMut(&mut Gen, &ConformanceCase)) {
     run_prop(name, |g| {
         let (net, w) = random_chain(g);
         let frames = 1 + g.usize(0, 4);
-        let images = (0..frames).map(|_| random_image(g, &net)).collect();
+        let images = (0..frames)
+            .map(|_| {
+                if g.bool(0.15) {
+                    Tensor::zeros(net.input_c, net.input_h, net.input_w)
+                } else if g.bool(0.15) {
+                    let n = net.input_c * net.input_h * net.input_w;
+                    Tensor::from_vec(net.input_c, net.input_h, net.input_w, vec![255u8; n])
+                } else {
+                    random_image(g, &net)
+                }
+            })
+            .collect();
         let case = ConformanceCase { net: Arc::new(net), weights: Arc::new(w), images };
         check(g, &case);
     });

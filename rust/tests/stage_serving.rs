@@ -115,6 +115,42 @@ fn stage_executor_grid_bit_identical_on_tiny_network() {
 }
 
 #[test]
+fn stage_micro_batching_grid_bit_identical_on_tiny_network() {
+    // Micro-batched dispatch (`with_stage_batch`): up to k stage jobs
+    // bound for one chip travel as one work item, holding the chip's
+    // lease across the batch. For every policy × batch size the outputs
+    // and per-frame cluster accounting must be bit-identical to the
+    // unbatched (and serial) run.
+    let (net, w, ds) = harness::tiny_setup(4, 485);
+    let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+    let opts = FrameOptions { collect_stats: true };
+    for policy in ShardPolicy::all() {
+        let cl = Arc::new(harness::tiny_cluster(&net, &w, 2, policy));
+        let serial: Vec<BackendFrame> =
+            images.iter().map(|i| cl.run_frame(i, &opts).unwrap()).collect();
+        let exec = StageExecutor::new(&cl);
+        let mut unbatched_makespans: Option<Vec<u64>> = None;
+        for stage_batch in [1usize, 2, 4] {
+            let engine = StreamingEngine::new(
+                cl.clone(),
+                EngineConfig { workers: 4, queue_depth: 4, batch: 1 },
+            )
+            .with_stage_batch(stage_batch);
+            let run = exec.run(&engine, &images, &opts, 4).unwrap();
+            assert_eq!(run.frames, serial, "{policy:?} stage_batch={stage_batch}");
+            let makespans: Vec<u64> = run.cluster_runs.iter().map(|r| r.makespan).collect();
+            match &unbatched_makespans {
+                None => unbatched_makespans = Some(makespans),
+                Some(want) => assert_eq!(
+                    &makespans, want,
+                    "{policy:?} stage_batch={stage_batch}: modeled cycles changed"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
 fn wall_clock_interval_improves_as_the_window_grows() {
     // The point of the tentpole: the analytic initiation interval shows
     // up as measured wall-clock throughput. Deeper windows must not slow
