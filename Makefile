@@ -28,16 +28,20 @@ bench:
 # Quick serving-path smoke: streaming engine + multi-core simulator +
 # multi-chip cluster + pipelined executor + wall-clock stage serving
 # with a minimal sample budget (same as the CI bench step). perf_hotpath
-# hard-asserts the word-parallel one-to-all path is bit-exact with the
-# reference, and the dse smoke cycle-verifies a decimated Pareto sweep.
+# and perf_prosperity hard-assert the word-parallel and product-sparsity
+# one-to-all paths are bit-exact with the reference, and the dse smoke
+# cycle-verifies a decimated Pareto sweep.
 bench-smoke:
 	cd rust && SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_throughput && \
 	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench fig06_parallelism && \
 	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_cluster && \
 	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_pipeline && \
 	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_hotpath && \
+	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_prosperity && \
 	SCSNN_PROP_CASES=16 $(CARGO) test -q --test stage_serving && \
+	SCSNN_PROP_CASES=16 $(CARGO) test -q --test prosperity_conformance && \
 	$(CARGO) run --release -- simulate --scale tiny --chips 2 --pipeline 2 && \
+	$(CARGO) run --release -- simulate --scale tiny --datapath prosperity && \
 	$(CARGO) run --release -- dse --scale tiny --max-points 32 --verify 3
 
 # One-shot python build path: datasets + training + quantized weights +

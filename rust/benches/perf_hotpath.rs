@@ -13,18 +13,20 @@
 //! this change on. Acceptance floor: ≥2× at ≥90% sparsity.
 //!
 //! Also includes the **one-to-all datapath comparison**: the same gated
-//! one-to-all product run three ways — dense enable map
-//! (`run_reference`), per-pixel events (`run_events`), and the
-//! word-parallel mask–shift–popcount path (`run`) — at several activation
-//! densities. Bit-exactness of accumulators, gating stats and cycles
-//! across all three paths is a hard assert, so CI fails on any divergence
-//! before a single timing column prints. Target: ≥2× word-parallel over
-//! per-pixel at ≤50% density.
+//! one-to-all product run four ways — dense enable map
+//! (`run_reference`), per-pixel events (`run_events`), the word-parallel
+//! mask–shift–popcount path (`run`), and the product-sparsity reuse path
+//! (`run_prosperity` over a pre-mined [`ReuseForest`]) — at several
+//! activation densities. Bit-exactness of accumulators, gating stats and
+//! cycles across all four paths is a hard assert, so CI fails on any
+//! divergence before a single timing column prints. Target: ≥2×
+//! word-parallel over per-pixel at ≤50% density.
 
 use scsnn::accel::controller::{LayerInput, SystemController};
 use scsnn::accel::latency::LatencyModel;
 use scsnn::accel::one_to_all::GatedOneToAll;
 use scsnn::accel::pe::PeArray;
+use scsnn::accel::prosperity::ReuseForest;
 use scsnn::config::AccelConfig;
 use scsnn::detect::dataset::Dataset;
 use scsnn::detect::nms::nms;
@@ -75,18 +77,22 @@ fn main() {
             (0..576).map(|_| u8::from(rng.chance(density))).collect(),
         );
         let stim = SpikePlane::from_dense(stim_dense.channel(0), 18, 32);
+        let forest = ReuseForest::mine(&stim);
         let run_path = |which: usize| {
             let mut p = PeArray::new(18, 32);
             let mut o = GatedOneToAll::new(&stim);
             let cycles = match which {
                 0 => o.run_reference(&bm2, &mut p, 0),
                 1 => o.run_events(&bm2, &mut p, 0),
+                3 => o.run_prosperity(&bm2, &mut p, 0, &forest),
                 _ => o.run(&bm2, &mut p, 0),
             };
             (p.readout(), p.stats(), cycles)
         };
         let want = run_path(0);
-        for (which, name) in [(1usize, "per-pixel events"), (2, "word-parallel")] {
+        for (which, name) in
+            [(1usize, "per-pixel events"), (2, "word-parallel"), (3, "prosperity")]
+        {
             let got = run_path(which);
             assert_eq!(
                 got, want,
@@ -113,23 +119,42 @@ fn main() {
                 std::hint::black_box(o.run(&bm2, &mut pe, 0));
             })
             .clone();
+        // The reuse forest is mined once per tile by the controller, so
+        // the fair PE-level comparison replays a pre-mined forest.
+        let prosperity_m = r
+            .bench_throughput(&format!("one_to_all_prosperity_d{label}"), events_n, || {
+                let mut o = GatedOneToAll::new(&stim);
+                std::hint::black_box(o.run_prosperity(&bm2, &mut pe, 0, &forest));
+            })
+            .clone();
         let vs_events = events_m.median.as_secs_f64() / words_m.median.as_secs_f64();
         let vs_ref = ref_m.median.as_secs_f64() / words_m.median.as_secs_f64();
+        let prosperity_vs_words =
+            words_m.median.as_secs_f64() / prosperity_m.median.as_secs_f64();
         r.report_row(&format!(
             "density {:>3.0}% | reference {:>10.3?} | events {:>10.3?} | words {:>10.3?} | \
-             words vs events {vs_events:>5.2}x | vs reference {vs_ref:>5.2}x",
+             prosperity {:>10.3?} | words vs events {vs_events:>5.2}x | vs reference \
+             {vs_ref:>5.2}x | prosperity vs words {prosperity_vs_words:>5.2}x (reuse {:.0}%)",
             density * 100.0,
             ref_m.median,
             events_m.median,
-            words_m.median
+            words_m.median,
+            prosperity_m.median,
+            forest.reuse_rate() * 100.0
         ));
         let mut row = BTreeMap::new();
         row.insert("activation_density".to_string(), Json::Num(density));
         row.insert("reference_ns".to_string(), Json::Num(ref_m.median.as_secs_f64() * 1e9));
         row.insert("events_ns".to_string(), Json::Num(events_m.median.as_secs_f64() * 1e9));
         row.insert("words_ns".to_string(), Json::Num(words_m.median.as_secs_f64() * 1e9));
+        row.insert(
+            "prosperity_ns".to_string(),
+            Json::Num(prosperity_m.median.as_secs_f64() * 1e9),
+        );
         row.insert("words_vs_events".to_string(), Json::Num(vs_events));
         row.insert("words_vs_reference".to_string(), Json::Num(vs_ref));
+        row.insert("prosperity_vs_words".to_string(), Json::Num(prosperity_vs_words));
+        row.insert("reuse_rate".to_string(), Json::Num(forest.reuse_rate()));
         path_rows.push(Json::Obj(row));
     }
 

@@ -1,0 +1,244 @@
+//! Product-sparsity (Prosperity) datapath benchmark.
+//!
+//! Sweeps **activation density × duplicate-row rate** over synthetic
+//! spike planes and compares the reuse-aware PE path
+//! (`GatedOneToAll::run_prosperity` over a pre-mined `ReuseForest`)
+//! against the word-parallel bit-mask baseline (`run`). For every
+//! configuration the two paths must agree bit-exactly on accumulators,
+//! gating stats and cycles before a single timing column prints.
+//!
+//! Reported per point: measured reuse rate of the mined forest, modeled
+//! MAC reduction (enabled MACs ÷ freshly-computed MACs, the §Prosperity
+//! figure of merit), and wall-clock for both paths. Acceptance floor,
+//! asserted hard: on the duplicate-heavy workload (90% row reuse) the
+//! modeled-MAC reduction is ≥1.5× at every density.
+//!
+//! A second section runs the cycle-level controller on a duplicate-heavy
+//! 16-channel layer under both datapaths, showing the end-to-end cycle
+//! cost with the mining overhead charged (`tile_h` cycles per mined tile
+//! plane) alongside the harvested reuse counters.
+//!
+//! Results land in `BENCH_prosperity.json`.
+
+use scsnn::accel::controller::{LayerInput, SystemController};
+use scsnn::accel::one_to_all::GatedOneToAll;
+use scsnn::accel::pe::PeArray;
+use scsnn::accel::prosperity::ReuseForest;
+use scsnn::config::{AccelConfig, Datapath};
+use scsnn::model::topology::{ConvKind, ConvSpec, NetworkSpec};
+use scsnn::model::weights::ModelWeights;
+use scsnn::sparse::{BitMaskKernel, SpikeMap, SpikePlane};
+use scsnn::tensor::Tensor;
+use scsnn::util::json::Json;
+use scsnn::util::{BenchRunner, Rng};
+use std::collections::BTreeMap;
+
+const H: usize = 18;
+const W: usize = 32;
+
+/// One `h`×`w` plane: rows are drawn at `density`, except that with
+/// probability `dup` a row copies an earlier one verbatim — the knob that
+/// sets how much row-level pattern overlap the miner can exploit.
+fn duplicate_heavy_plane(rng: &mut Rng, h: usize, w: usize, density: f64, dup: f64) -> Vec<u8> {
+    let mut dense = vec![0u8; h * w];
+    for y in 0..h {
+        if y > 0 && rng.chance(dup) {
+            let of = rng.below(y as u64) as usize;
+            let (head, tail) = dense.split_at_mut(y * w);
+            tail[..w].copy_from_slice(&head[of * w..(of + 1) * w]);
+        } else {
+            for x in 0..w {
+                dense[y * w + x] = u8::from(rng.chance(density));
+            }
+        }
+    }
+    dense
+}
+
+fn main() {
+    let mut r = BenchRunner::new("perf_prosperity");
+    let mut rng = Rng::new(9);
+
+    let mut kvals: Vec<i8> =
+        (0..9).map(|_| if rng.chance(0.5) { (rng.next_u32() % 13) as i8 - 6 } else { 0 }).collect();
+    kvals[4] = 3;
+    let bm = BitMaskKernel::from_dense(&kvals, 3, 3);
+
+    // --- PE-level sweep: reuse rate × density ------------------------------
+    r.section("product sparsity vs bit-mask PE (18x32 tile, 3x3 kernel)");
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    for density in [0.10f64, 0.25, 0.50] {
+        for dup in [0.0f64, 0.5, 0.9] {
+            let dense = duplicate_heavy_plane(&mut rng, H, W, density, dup);
+            let stim = SpikePlane::from_dense(&dense, H, W);
+            let forest = ReuseForest::mine(&stim);
+
+            // Bit-exactness gate: accumulators, gating stats and cycles
+            // must match the word-parallel baseline exactly.
+            let mut pe_bm = PeArray::new(H, W);
+            let cyc_bm = GatedOneToAll::new(&stim).run(&bm, &mut pe_bm, 0);
+            let mut pe_ps = PeArray::new(H, W);
+            let cyc_ps = GatedOneToAll::new(&stim).run_prosperity(&bm, &mut pe_ps, 0, &forest);
+            assert_eq!(
+                (pe_bm.readout(), pe_bm.stats(), cyc_bm),
+                (pe_ps.readout(), pe_ps.stats(), cyc_ps),
+                "prosperity diverged from words at density {density} dup {dup}"
+            );
+
+            let enabled = pe_ps.stats().enabled;
+            let reused = pe_ps.reuse().macs_reused;
+            let fresh = enabled - reused;
+            let mac_reduction =
+                if enabled == 0 { 1.0 } else { enabled as f64 / fresh.max(1) as f64 };
+            if dup >= 0.9 {
+                assert!(
+                    mac_reduction >= 1.5,
+                    "duplicate-heavy workload (density {density}) only reduced modeled MACs \
+                     by {mac_reduction:.2}x (< 1.5x floor): {enabled} enabled, {reused} reused"
+                );
+            }
+
+            let events_n = (H * W) as u64 * bm.nnz() as u64;
+            let tag = format!("d{:.0}_r{:.0}", density * 100.0, dup * 100.0);
+            let words_m = r
+                .bench_throughput(&format!("words_{tag}"), events_n, || {
+                    let mut pe = PeArray::new(H, W);
+                    std::hint::black_box(GatedOneToAll::new(&stim).run(&bm, &mut pe, 0));
+                })
+                .clone();
+            let prosperity_m = r
+                .bench_throughput(&format!("prosperity_{tag}"), events_n, || {
+                    let mut pe = PeArray::new(H, W);
+                    std::hint::black_box(GatedOneToAll::new(&stim).run_prosperity(
+                        &bm, &mut pe, 0, &forest,
+                    ));
+                })
+                .clone();
+            let vs_words = words_m.median.as_secs_f64() / prosperity_m.median.as_secs_f64();
+            r.report_row(&format!(
+                "density {:>3.0}% dup {:>3.0}% | reuse {:>4.1}% | MAC reduction {:>5.2}x | \
+                 words {:>10.3?} | prosperity {:>10.3?} | {vs_words:>5.2}x",
+                density * 100.0,
+                dup * 100.0,
+                forest.reuse_rate() * 100.0,
+                mac_reduction,
+                words_m.median,
+                prosperity_m.median
+            ));
+            let mut row = BTreeMap::new();
+            row.insert("activation_density".to_string(), Json::Num(density));
+            row.insert("duplicate_rate".to_string(), Json::Num(dup));
+            row.insert("reuse_rate".to_string(), Json::Num(forest.reuse_rate()));
+            row.insert(
+                "patterns_unique".to_string(),
+                Json::Num(forest.patterns_unique() as f64),
+            );
+            row.insert("enabled_macs".to_string(), Json::Num(enabled as f64));
+            row.insert("macs_reused".to_string(), Json::Num(reused as f64));
+            row.insert("mac_reduction".to_string(), Json::Num(mac_reduction));
+            row.insert("words_ns".to_string(), Json::Num(words_m.median.as_secs_f64() * 1e9));
+            row.insert(
+                "prosperity_ns".to_string(),
+                Json::Num(prosperity_m.median.as_secs_f64() * 1e9),
+            );
+            row.insert("prosperity_vs_words".to_string(), Json::Num(vs_words));
+            sweep_rows.push(Json::Obj(row));
+        }
+    }
+
+    // --- controller level: mining overhead charged end-to-end --------------
+    r.section("controller layer 16c 48x80: bitmask vs prosperity (duplicate-heavy input)");
+    let net = NetworkSpec {
+        name: "bench".into(),
+        input_w: 80,
+        input_h: 48,
+        input_c: 16,
+        layers: vec![ConvSpec {
+            name: "l".into(),
+            kind: ConvKind::Spike,
+            c_in: 16,
+            c_out: 16,
+            k: 3,
+            in_t: 1,
+            out_t: 1,
+            maxpool_after: false,
+            in_w: 80,
+            in_h: 48,
+            concat_with: None,
+            input_from: None,
+        }],
+        num_anchors: 5,
+        num_classes: 3,
+    };
+    let mut w16 = ModelWeights::random(&net, 1.0, 2);
+    w16.prune_fine_grained(0.8);
+    let lw = w16.get("l").unwrap();
+    let spec = &net.layers[0];
+    let mut input = Tensor::zeros(16, 48, 80);
+    for c in 0..16 {
+        let plane = duplicate_heavy_plane(&mut rng, 48, 80, 0.25, 0.7);
+        input.data[c * 48 * 80..(c + 1) * 48 * 80].copy_from_slice(&plane);
+    }
+    let input_map = SpikeMap::from_dense(&input);
+    let mut ctrl_bm = SystemController::new(AccelConfig::paper());
+    let mut ctrl_ps = SystemController::new(AccelConfig::paper().with_datapath(Datapath::Prosperity));
+    let run_bm = ctrl_bm
+        .run_layer(spec, lw, LayerInput::Spikes(std::slice::from_ref(&input_map)))
+        .unwrap();
+    let run_ps = ctrl_ps
+        .run_layer(spec, lw, LayerInput::Spikes(std::slice::from_ref(&input_map)))
+        .unwrap();
+    assert_eq!(run_bm.output, run_ps.output, "prosperity layer output diverged");
+    assert_eq!(run_bm.gating, run_ps.gating, "prosperity gating stats diverged");
+    let mining_cycles = run_ps.cycles.saturating_sub(run_bm.cycles);
+    r.report_row(&format!(
+        "cycles: bitmask {} | prosperity {} (+{} mining) | patterns {} | MACs reused {}",
+        run_bm.cycles, run_ps.cycles, mining_cycles, run_ps.patterns_unique, run_ps.macs_reused
+    ));
+    let bm_layer_m = r
+        .bench("controller_layer_bitmask", || {
+            let run = ctrl_bm
+                .run_layer(spec, lw, LayerInput::Spikes(std::slice::from_ref(&input_map)))
+                .unwrap();
+            std::hint::black_box(run.cycles);
+        })
+        .clone();
+    let ps_layer_m = r
+        .bench("controller_layer_prosperity", || {
+            let run = ctrl_ps
+                .run_layer(spec, lw, LayerInput::Spikes(std::slice::from_ref(&input_map)))
+                .unwrap();
+            std::hint::black_box(run.cycles);
+        })
+        .clone();
+
+    let mut layer = BTreeMap::new();
+    layer.insert("cycles_bitmask".to_string(), Json::Num(run_bm.cycles as f64));
+    layer.insert("cycles_prosperity".to_string(), Json::Num(run_ps.cycles as f64));
+    layer.insert("mining_cycles".to_string(), Json::Num(mining_cycles as f64));
+    layer.insert("patterns_unique".to_string(), Json::Num(run_ps.patterns_unique as f64));
+    layer.insert("macs_reused".to_string(), Json::Num(run_ps.macs_reused as f64));
+    layer.insert(
+        "bitmask_ns".to_string(),
+        Json::Num(bm_layer_m.median.as_secs_f64() * 1e9),
+    );
+    layer.insert(
+        "prosperity_ns".to_string(),
+        Json::Num(ps_layer_m.median.as_secs_f64() * 1e9),
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("perf_prosperity".to_string()));
+    doc.insert(
+        "workload".to_string(),
+        Json::Str("18x32 plane, 3x3 kernel, density x duplicate-rate sweep".to_string()),
+    );
+    doc.insert("target_mac_reduction_high_overlap".to_string(), Json::Num(1.5));
+    doc.insert("sweep".to_string(), Json::Arr(sweep_rows));
+    doc.insert("layer".to_string(), Json::Obj(layer));
+    let json_path = "BENCH_prosperity.json";
+    match std::fs::write(json_path, Json::Obj(doc).to_string_compact()) {
+        Ok(()) => r.report_row(&format!("wrote {json_path}")),
+        Err(e) => r.report_row(&format!("could not write {json_path}: {e}")),
+    }
+}

@@ -43,9 +43,10 @@
 use super::lif_unit::LifUnit;
 use super::one_to_all::GatedOneToAll;
 use super::pe::{GatingStats, PeArray};
+use super::prosperity::ReuseForest;
 use super::sram::{SramBank, SramKind};
 use crate::config::registers::{ConfigRegisters, LayerSetup};
-use crate::config::AccelConfig;
+use crate::config::{AccelConfig, Datapath};
 use crate::coordinator::tiler::{TilePlan, TileRect};
 use crate::model::lif::LifParams;
 use crate::model::topology::{ConvKind, ConvSpec};
@@ -113,6 +114,14 @@ pub struct LayerRun {
     pub lif_updates: u64,
     /// Spikes emitted by the layer.
     pub spikes_out: u64,
+    /// Unique row patterns built by the product-sparsity datapath (one per
+    /// reuse-forest representative per mined tile plane). Zero on the
+    /// bit-mask datapath.
+    pub patterns_unique: u64,
+    /// MACs whose contribution was replayed from an already-built pattern
+    /// instead of recomputed (product sparsity, §Prosperity). Zero on the
+    /// bit-mask datapath.
+    pub macs_reused: u64,
     /// SRAM access counters (input, output, weight-map, nz-weight).
     pub sram: [SramBank; 4],
     /// Compressed output spike maps per time step (hidden layers).
@@ -160,11 +169,22 @@ struct Scratch {
     /// `(t * n_bit_planes + b) * c_in + c`; grown on demand and refilled
     /// in place via [`SpikePlane::extract_tile_into`].
     tiles_in: Vec<SpikePlane>,
+    /// Mined reuse forests, parallel to `tiles_in` (product-sparsity
+    /// datapath only). Mined once per extracted tile plane so the cost
+    /// amortizes across the whole K (output-channel) loop, and the node
+    /// vectors are recycled across tiles/layers/frames like every other
+    /// scratch buffer.
+    forests: Vec<ReuseForest>,
 }
 
 impl Scratch {
     fn new() -> Self {
-        Scratch { pe: PeArray::new(0, 0), lif: LifUnit::new(0, 0), tiles_in: Vec::new() }
+        Scratch {
+            pe: PeArray::new(0, 0),
+            lif: LifUnit::new(0, 0),
+            tiles_in: Vec::new(),
+            forests: Vec::new(),
+        }
     }
 }
 
@@ -296,6 +316,8 @@ impl SystemController {
             gating: GatingStats::default(),
             lif_updates: 0,
             spikes_out: 0,
+            patterns_unique: 0,
+            macs_reused: 0,
             sram: [
                 SramBank::new(SramKind::Input, self.cfg.input_sram_bytes),
                 SramBank::new(SramKind::Output, self.cfg.output_sram_bytes),
@@ -393,6 +415,26 @@ impl SystemController {
             }
         }
 
+        // Product-sparsity datapath: mine each extracted plane's reuse
+        // forest once per tile, before the K loop — the hardware streams
+        // the tile through the pattern comparators while the weight SRAM
+        // refills, one row per cycle of the *full* register height (a
+        // clipped edge tile still occupies the whole array, so the charge
+        // stays uniform and the closed-form multi-core makespan exact).
+        // The mining cost is charged to the shipped design only; the dense
+        // baseline never mines.
+        let mining = self.cfg.datapath == Datapath::Prosperity;
+        if mining {
+            if scratch.forests.len() < want_tiles {
+                scratch.forests.resize_with(want_tiles, ReuseForest::default);
+            }
+            for i in 0..want_tiles {
+                scratch.forests[i].mine_into(&scratch.tiles_in[i]);
+                scratch.pe.note_patterns_mined(scratch.forests[i].patterns_unique());
+                run.cycles += self.cfg.tile_h as u64;
+            }
+        }
+
         for k in 0..spec.c_out {
             scratch.lif.reset();
             // Partial sums of the last computed conv step, for replay.
@@ -413,9 +455,18 @@ impl SystemController {
                             run.sram[2].read(1);
                             run.sram[3].read(pl.nnz() as u64);
 
-                            let tile_in = &scratch.tiles_in[(t * nb + b) * spec.c_in + c];
-                            let cycles =
-                                GatedOneToAll::new(tile_in).run(pl, &mut scratch.pe, b as u32);
+                            let idx = (t * nb + b) * spec.c_in + c;
+                            let tile_in = &scratch.tiles_in[idx];
+                            let cycles = if mining {
+                                GatedOneToAll::new(tile_in).run_prosperity(
+                                    pl,
+                                    &mut scratch.pe,
+                                    b as u32,
+                                    &scratch.forests[idx],
+                                )
+                            } else {
+                                GatedOneToAll::new(tile_in).run(pl, &mut scratch.pe, b as u32)
+                            };
                             run.cycles += cycles;
                             run.dense_cycles += dense_plane_cycles;
                         }
@@ -465,6 +516,9 @@ impl SystemController {
             scratch.lif.spikes_out = 0;
         }
         run.gating.merge(&scratch.pe.stats());
+        let reuse = scratch.pe.reuse();
+        run.patterns_unique += reuse.patterns_unique;
+        run.macs_reused += reuse.macs_reused;
     }
 }
 
@@ -725,6 +779,52 @@ mod tests {
             }
             assert_eq!(run.spikes_out, run1.spikes_out);
         }
+    }
+
+    #[test]
+    fn prosperity_datapath_is_bit_exact_with_uniform_mining_charge() {
+        // The product-sparsity datapath must change *nothing* about the
+        // layer's outputs, gating statistics or dense baseline — only the
+        // shipped-design cycle count grows by the uniform mining charge
+        // (tile_h per extracted (t, b, c) plane per tile) and the reuse
+        // counters come alive.
+        let spec = test_spec(ConvKind::Spike, 2, 2, false);
+        let lw = test_weights(&spec, 41, 0.5);
+        let inputs: Vec<SpikeMap> =
+            random_inputs(&spec, 42, false).iter().map(SpikeMap::from_dense).collect();
+        let base = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() };
+        let run_bm = SystemController::new(base.clone())
+            .run_layer(&spec, &lw, LayerInput::Spikes(&inputs))
+            .unwrap();
+        assert_eq!(run_bm.patterns_unique, 0);
+        assert_eq!(run_bm.macs_reused, 0);
+        let run_ps = SystemController::new(base.clone().with_datapath(Datapath::Prosperity))
+            .run_layer(&spec, &lw, LayerInput::Spikes(&inputs))
+            .unwrap();
+        assert_eq!(run_ps.output, run_bm.output);
+        assert_eq!(run_ps.spikes_out, run_bm.spikes_out);
+        assert_eq!(run_ps.gating, run_bm.gating);
+        assert_eq!(run_ps.dense_cycles, run_bm.dense_cycles);
+        // 16×12 on an 8×6 tile → 4 tiles; in_t=2 × c_in=3 planes each,
+        // tile_h=6 mining cycles per plane.
+        let mine = 4 * (2 * 3) * 6;
+        assert_eq!(run_ps.cycles, run_bm.cycles + mine);
+        assert_eq!(run_ps.total_cycles(), run_bm.total_cycles() + mine);
+        assert!(run_ps.patterns_unique > 0);
+        assert!(run_ps.macs_reused <= run_ps.gating.enabled);
+
+        // Multi-core: the charge is per-tile, so sharding stays exact and
+        // outputs bit-identical.
+        let run_mc = SystemController::new(
+            base.with_datapath(Datapath::Prosperity).with_cores(2),
+        )
+        .run_layer(&spec, &lw, LayerInput::Spikes(&inputs))
+        .unwrap();
+        assert_eq!(run_mc.output, run_bm.output);
+        assert_eq!(run_mc.total_cycles(), run_ps.cycles);
+        assert_eq!(run_mc.cycles, run_ps.cycles / 2);
+        assert_eq!(run_mc.patterns_unique, run_ps.patterns_unique);
+        assert_eq!(run_mc.macs_reused, run_ps.macs_reused);
     }
 
     #[test]

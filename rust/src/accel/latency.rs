@@ -9,7 +9,7 @@
 //! two models together on a small layer.
 
 use super::controller::CycleCosts;
-use crate::config::{AccelConfig, ClusterConfig, ShardPolicy};
+use crate::config::{AccelConfig, ClusterConfig, Datapath, ShardPolicy};
 use crate::model::topology::{ConvKind, ConvSpec, NetworkSpec};
 use crate::model::weights::ModelWeights;
 
@@ -127,7 +127,17 @@ impl LatencyModel {
         let switches = (spec.c_out * spec.c_in) as u64 * self.costs.input_switch;
         let lif = spec.c_out as u64 * out_t * self.costs.lif_writeback;
 
-        let per_tile_sparse = conv_t * planes * (sparse_inner + switches) + lif;
+        // Product-sparsity mining charge: `tile_h` cycles per extracted
+        // `(t, b, c)` plane per tile — the full register height even for
+        // clipped edge tiles, exactly what the executing controller
+        // charges, so the closed-form multi-core makespan stays exact.
+        // The dense baseline never mines.
+        let per_tile_mine = if self.cfg.datapath == Datapath::Prosperity {
+            conv_t * planes * spec.c_in as u64 * self.cfg.tile_h as u64
+        } else {
+            0
+        };
+        let per_tile_sparse = conv_t * planes * (sparse_inner + switches) + lif + per_tile_mine;
         let per_tile_dense = conv_t * planes * (dense_inner + switches) + lif;
         // Round-robin tile sharding: the busiest of the `num_cores` cores
         // carries ceil(tiles / cores) tiles — the executing controller's
@@ -411,6 +421,66 @@ mod tests {
             assert_eq!(run.cycles, analytic.sparse_makespan, "cores={cores}");
             assert_eq!(run.dense_cycles, analytic.dense_makespan, "cores={cores}");
             assert_eq!(run.total_cycles(), analytic.sparse_cycles, "cores={cores}");
+        }
+    }
+
+    #[test]
+    fn prosperity_model_in_lockstep_with_controller() {
+        // The reuse-adjusted model must match the executing controller's
+        // counters exactly — including the mining charge on clipped edge
+        // tiles (16×18 with 8×6 tiles: the bottom row is clipped) and an
+        // uneven core count — while the dense baseline stays untouched.
+        let spec = ConvSpec {
+            name: "t".into(),
+            kind: ConvKind::Spike,
+            c_in: 3,
+            c_out: 4,
+            k: 3,
+            in_t: 2,
+            out_t: 2,
+            maxpool_after: false,
+            in_w: 16,
+            in_h: 18,
+            concat_with: None,
+            input_from: None,
+        };
+        let net = NetworkSpec {
+            name: "t".into(),
+            input_w: 16,
+            input_h: 18,
+            input_c: 3,
+            layers: vec![spec.clone()],
+            num_anchors: 5,
+            num_classes: 3,
+        };
+        let mut mw = ModelWeights::random(&net, 1.0, 51);
+        mw.prune_fine_grained(0.7);
+        let lw = mw.get("t").unwrap();
+        let mut rng = Rng::new(52);
+        let inputs: Vec<crate::sparse::SpikeMap> = (0..2)
+            .map(|_| {
+                let n = 3 * 18 * 16;
+                crate::sparse::SpikeMap::from_dense(&Tensor::from_vec(
+                    3,
+                    18,
+                    16,
+                    (0..n).map(|_| u8::from(rng.chance(0.3))).collect(),
+                ))
+            })
+            .collect();
+        for cores in [1usize, 2, 3, 4] {
+            let base = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() };
+            let cfg = base.clone().with_datapath(Datapath::Prosperity).with_cores(cores);
+            let analytic = LatencyModel::new(cfg.clone()).layer(&spec, lw);
+            let bitmask = LatencyModel::new(base.with_cores(cores)).layer(&spec, lw);
+            let run = SystemController::new(cfg)
+                .run_layer(&spec, lw, crate::accel::controller::LayerInput::Spikes(&inputs))
+                .unwrap();
+            assert_eq!(run.cycles, analytic.sparse_makespan, "cores={cores}");
+            assert_eq!(run.dense_cycles, analytic.dense_makespan, "cores={cores}");
+            assert_eq!(run.total_cycles(), analytic.sparse_cycles, "cores={cores}");
+            assert_eq!(analytic.dense_cycles, bitmask.dense_cycles, "cores={cores}");
+            assert!(analytic.sparse_cycles > bitmask.sparse_cycles, "cores={cores}");
         }
     }
 

@@ -32,6 +32,7 @@
 //! [`encoder`] — row/column priority encoders over the weight bit mask;
 //! [`pe`] — the 576-element gated PE array with clock-gating statistics;
 //! [`one_to_all`] — the gated one-to-all product over one kernel plane;
+//! [`prosperity`] — product-sparsity pattern mining (row reuse forests);
 //! [`lif_unit`] / [`maxpool_unit`] — post-processing units;
 //! [`sram`] / [`dram`] — memory models with access + energy accounting;
 //! [`reorder`] — temporal/channel output reordering (Fig 13);
@@ -50,6 +51,7 @@ pub mod maxpool_unit;
 pub mod one_to_all;
 pub mod parallelism;
 pub mod pe;
+pub mod prosperity;
 pub mod reorder;
 pub mod sram;
 
@@ -59,5 +61,6 @@ pub use encoder::PriorityEncoder;
 pub use energy::{AreaModel, ClusterPowerReport, EnergyModel, PowerReport};
 pub use latency::{ClusterLatency, LatencyModel, NetworkLatency};
 pub use one_to_all::GatedOneToAll;
-pub use pe::{GatingStats, PeArray};
+pub use pe::{GatingStats, PeArray, ReuseStats};
+pub use prosperity::{ReuseForest, RowNode};
 pub use sram::{SramBank, SramKind};

@@ -27,6 +27,7 @@
 
 use super::encoder::PriorityEncoder;
 use super::pe::PeArray;
+use super::prosperity::ReuseForest;
 use crate::sparse::{BitMaskKernel, SpikePlane};
 
 /// Executes gated one-to-all products over one compressed tile.
@@ -89,6 +90,43 @@ impl<'a> GatedOneToAll<'a> {
             let dy = r as isize - (kernel.kh / 2) as isize;
             let dx = c as isize - (kernel.kw / 2) as isize;
             pe.gated_accumulate_words(self.tile, dy, dx, w, shift);
+            cycles += 1;
+        }
+        cycles
+    }
+
+    /// Product-sparsity form of [`GatedOneToAll::run`]: given the tile's
+    /// mined [`ReuseForest`], each unique row pattern's contribution is
+    /// built once and replayed into every subsumed output row (equal rows
+    /// reuse the whole delta; supersets extend their parent's). Partial
+    /// sums, gating statistics and the weight-stream cycle count are
+    /// bit-identical to the word-parallel path — only the PE's
+    /// [`super::pe::ReuseStats`] and the controller's mining cycle charge
+    /// differ. Mining cost is *not* charged here; the controller accounts
+    /// for it once per extracted tile so it amortizes across the K loop.
+    pub fn run_prosperity(
+        &mut self,
+        kernel: &BitMaskKernel,
+        pe: &mut PeArray,
+        shift: u32,
+        forest: &ReuseForest,
+    ) -> u64 {
+        debug_assert_eq!(pe.tile_h, self.tile.h);
+        debug_assert_eq!(pe.tile_w, self.tile.w);
+        debug_assert_eq!(forest.rows(), self.tile.h);
+        if self.tile.is_all_zero() {
+            let cycles = kernel.nnz() as u64;
+            pe.gate_all(cycles);
+            return cycles;
+        }
+        let mut enc = PriorityEncoder::load_words(&kernel.map, kernel.kw);
+        let mut nz_iter = kernel.nz.iter();
+        let mut cycles = 0;
+        while let Some((r, c)) = enc.next_position() {
+            let w = *nz_iter.next().expect("map/nz agree");
+            let dy = r as isize - (kernel.kh / 2) as isize;
+            let dx = c as isize - (kernel.kw / 2) as isize;
+            pe.gated_accumulate_reuse(self.tile, forest, dy, dx, w, shift);
             cycles += 1;
         }
         cycles
@@ -233,6 +271,67 @@ mod tests {
             let want = conv2d(&dense_tile, &w, &[0]);
             assert_eq!(pe.partial_sums(), &want.data[..]);
         });
+    }
+
+    /// The product-sparsity path vs the word-parallel path, across kernel
+    /// sizes 1×1/3×3/5×5/7×7, densities 0–100% (with forced extremes),
+    /// clipped tile widths and duplicate-heavy rows: identical partial
+    /// sums, gating statistics and cycles — reuse changes *how* sums are
+    /// built, never *what* they are — and the claimed MAC saving is
+    /// bounded by the work actually applied.
+    #[test]
+    fn prop_prosperity_matches_words_all_kernels() {
+        use crate::accel::prosperity::ReuseForest;
+        run_prop("one-to-all/prosperity-vs-words", |g| {
+            let k = [1usize, 3, 5, 7][g.usize(0, 4)];
+            let th = g.usize(1, 10);
+            let tw = g.usize(1, 80);
+            let density = g.f64(0.0, 1.0);
+            let density = if g.bool(0.1) { 0.0 } else if g.bool(0.1) { 1.0 } else { density };
+            let mut dense = g.spikes(th * tw, density);
+            // Duplicate-heavy rows exercise Equal/Super reuse on purpose.
+            for y in 1..th {
+                if g.bool(0.35) {
+                    let of = g.usize(0, y);
+                    let (head, tail) = dense.split_at_mut(y * tw);
+                    tail[..tw].copy_from_slice(&head[of * tw..of * tw + tw]);
+                }
+            }
+            let tile = SpikePlane::from_dense(&dense, th, tw);
+            let forest = ReuseForest::mine(&tile);
+            let plane = g.sparse_i8(k * k, 0.5);
+            let bm = BitMaskKernel::from_dense(&plane, k, k);
+
+            let mut pe = PeArray::new(th, tw);
+            let mut pe_ps = PeArray::new(th, tw);
+            let cycles = GatedOneToAll::new(&tile).run(&bm, &mut pe, 0);
+            let cycles_ps = GatedOneToAll::new(&tile).run_prosperity(&bm, &mut pe_ps, 0, &forest);
+            assert_eq!(cycles, cycles_ps, "k={k} th={th} tw={tw}");
+            assert_eq!(pe.partial_sums(), pe_ps.partial_sums(), "k={k} th={th} tw={tw}");
+            assert_eq!(pe.stats(), pe_ps.stats(), "k={k} th={th} tw={tw}");
+            assert!(pe_ps.reuse().macs_reused <= pe_ps.stats().enabled);
+        });
+    }
+
+    /// Prosperity on a duplicate-row tile reuses the repeated rows' MACs
+    /// while leaving sums, stats and cycles untouched.
+    #[test]
+    fn prosperity_reuses_duplicate_rows() {
+        use crate::accel::prosperity::ReuseForest;
+        let dense = vec![1, 0, 1, /**/ 1, 0, 1, /**/ 1, 0, 1, /**/ 0, 0, 0];
+        let tile = SpikePlane::from_dense(&dense, 4, 3);
+        let forest = ReuseForest::mine(&tile);
+        assert_eq!(forest.patterns_unique(), 2); // {101} + the zero row
+        let bm = BitMaskKernel::from_dense(&[0, 0, 0, 0, 3, 0, 0, 0, 0], 3, 3);
+        let mut pe = PeArray::new(4, 3);
+        let mut pe_ps = PeArray::new(4, 3);
+        let cycles = GatedOneToAll::new(&tile).run(&bm, &mut pe, 0);
+        let cycles_ps = GatedOneToAll::new(&tile).run_prosperity(&bm, &mut pe_ps, 0, &forest);
+        assert_eq!(cycles, cycles_ps);
+        assert_eq!(pe.partial_sums(), pe_ps.partial_sums());
+        assert_eq!(pe.stats(), pe_ps.stats());
+        // Rows 1 and 2 replay row 0's delta: 2 rows × 2 enabled MACs each.
+        assert_eq!(pe_ps.reuse().macs_reused, 4);
     }
 
     #[test]

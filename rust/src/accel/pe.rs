@@ -17,6 +17,7 @@
 //! model: the paper's 46.6% PE dynamic-power reduction (§IV-E) is exactly
 //! the fraction of accumulate events suppressed by zero activations.
 
+use crate::accel::prosperity::{ReuseForest, RowNode};
 use crate::tensor::sat_i16;
 
 /// Clock-gating activity counters.
@@ -47,6 +48,26 @@ impl GatingStats {
     }
 }
 
+/// Product-sparsity activity counters (the Prosperity datapath).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReuseStats {
+    /// Distinct row patterns mined across the tile planes (Root + Super
+    /// nodes of every [`ReuseForest`]).
+    pub patterns_unique: u64,
+    /// Accumulate events served by replaying an already-computed pattern
+    /// delta instead of a fresh MAC — the product-sparsity saving on top
+    /// of bit sparsity. `enabled == fresh MACs + macs_reused`.
+    pub macs_reused: u64,
+}
+
+impl ReuseStats {
+    /// Merge counters (for aggregating across tiles/layers).
+    pub fn merge(&mut self, other: &ReuseStats) {
+        self.patterns_unique += other.patterns_unique;
+        self.macs_reused += other.macs_reused;
+    }
+}
+
 /// The PE array state for one tile computation.
 #[derive(Clone, Debug)]
 pub struct PeArray {
@@ -58,12 +79,29 @@ pub struct PeArray {
     acc: Vec<i32>,
     /// Gating activity.
     stats: GatingStats,
+    /// Product-sparsity activity (Prosperity datapath only).
+    reuse: ReuseStats,
+    /// Reuse-path scratch: one delta row per pattern class, row-major.
+    delta: Vec<i32>,
+    /// Reuse-path scratch: which classes this weight's shift needs.
+    class_needed: Vec<bool>,
+    /// Reuse-path scratch: per-class applied (enabled-PE) count.
+    class_applied: Vec<u64>,
 }
 
 impl PeArray {
     /// Array with all partial sums cleared.
     pub fn new(tile_h: usize, tile_w: usize) -> Self {
-        PeArray { tile_h, tile_w, acc: vec![0; tile_h * tile_w], stats: GatingStats::default() }
+        PeArray {
+            tile_h,
+            tile_w,
+            acc: vec![0; tile_h * tile_w],
+            stats: GatingStats::default(),
+            reuse: ReuseStats::default(),
+            delta: Vec::new(),
+            class_needed: Vec::new(),
+            class_applied: Vec::new(),
+        }
     }
 
     /// Number of PEs.
@@ -179,6 +217,118 @@ impl PeArray {
         self.stats.gated += (self.tile_h * self.tile_w) as u64 - enabled;
     }
 
+    /// Product-sparsity form of [`PeArray::gated_accumulate_words`]: rows
+    /// whose spike patterns were mined as equal or supersets of earlier
+    /// rows ([`ReuseForest`]) replay an already-built partial-sum delta
+    /// instead of decoding their bits again. Identical partial sums and
+    /// gating statistics — a replayed PE still counts as one enabled
+    /// accumulate event, exactly as the bit-mask path would count it —
+    /// but every replayed event is tallied in
+    /// [`ReuseStats::macs_reused`] instead of costing a fresh MAC.
+    ///
+    /// Clamp safety: a `Super` row's `extra` bits are disjoint from its
+    /// parent's at every source column, so adding the decoded extras on
+    /// top of the copied parent delta never double-counts, even where
+    /// edge replication maps several PE columns onto one source column.
+    pub fn gated_accumulate_reuse(
+        &mut self,
+        tile: &crate::sparse::SpikePlane,
+        forest: &ReuseForest,
+        dy: isize,
+        dx: isize,
+        weight: i8,
+        shift: u32,
+    ) {
+        debug_assert_eq!((tile.h, tile.w), (self.tile_h, self.tile_w));
+        debug_assert_eq!(forest.rows(), tile.h);
+        let contrib = (weight as i32) << shift;
+        let (h, w) = (self.tile_h, self.tile_w);
+        let clamp_y =
+            |y: usize| -> usize { (y as isize + dy).clamp(0, h as isize - 1) as usize };
+
+        // Mark the pattern classes this shift touches, propagating each
+        // Super's need up to its parent so deltas exist before reuse.
+        self.class_needed.clear();
+        self.class_needed.resize(h, false);
+        for y in 0..h {
+            let mut c = forest.class_of(clamp_y(y));
+            while !self.class_needed[c] {
+                self.class_needed[c] = true;
+                match forest.node(c) {
+                    RowNode::Super { of, .. } => c = *of,
+                    _ => break,
+                }
+            }
+        }
+
+        // Build each needed class delta once, in dependency (row) order:
+        // Roots decode their pattern, Supers copy the parent delta and
+        // decode only their extra bits. Fresh MACs = decode work.
+        self.delta.resize(h * w, 0);
+        self.class_applied.clear();
+        self.class_applied.resize(h, 0);
+        let mut fresh = 0u64;
+        for c in 0..h {
+            if !self.class_needed[c] {
+                continue;
+            }
+            match forest.node(c) {
+                RowNode::Equal { .. } => unreachable!("class representatives are Root/Super"),
+                RowNode::Root => {
+                    let words = tile.row_words(c);
+                    let mut applied = 0u64;
+                    for (x, d) in self.delta[c * w..(c + 1) * w].iter_mut().enumerate() {
+                        let sx = (x as isize + dx).clamp(0, w as isize - 1) as usize;
+                        if words[sx / 64] >> (sx % 64) & 1 == 1 {
+                            *d = contrib;
+                            applied += 1;
+                        } else {
+                            *d = 0;
+                        }
+                    }
+                    self.class_applied[c] = applied;
+                    fresh += applied;
+                }
+                RowNode::Super { of, extra } => {
+                    let parent = *of;
+                    let (built, rest) = self.delta.split_at_mut(c * w);
+                    let drow = &mut rest[..w];
+                    drow.copy_from_slice(&built[parent * w..(parent + 1) * w]);
+                    let mut applied = 0u64;
+                    for (x, d) in drow.iter_mut().enumerate() {
+                        let sx = (x as isize + dx).clamp(0, w as isize - 1) as usize;
+                        if extra[sx / 64] >> (sx % 64) & 1 == 1 {
+                            *d += contrib;
+                            applied += 1;
+                        }
+                    }
+                    self.class_applied[c] = self.class_applied[parent] + applied;
+                    fresh += applied;
+                }
+            }
+        }
+
+        // Replay: every output row adds its class delta as one vector op.
+        let mut enabled = 0u64;
+        for y in 0..h {
+            let c = forest.class_of(clamp_y(y));
+            let drow = &self.delta[c * w..(c + 1) * w];
+            for (a, &d) in self.acc[y * w..(y + 1) * w].iter_mut().zip(drow) {
+                *a += d;
+            }
+            enabled += self.class_applied[c];
+        }
+        self.stats.enabled += enabled;
+        self.stats.gated += (h * w) as u64 - enabled;
+        self.reuse.macs_reused += enabled - fresh;
+    }
+
+    /// Credit `patterns` freshly-mined unique row patterns (the controller
+    /// calls this once per mined tile plane).
+    pub fn note_patterns_mined(&mut self, patterns: u64) {
+        self.reuse.patterns_unique += patterns;
+    }
+
     /// Account `events` fully-gated one-to-all cycles in O(1), without
     /// touching the partial sums — the all-zero-tile fast path: every PE
     /// is clock-gated on every cycle, so only the counters move.
@@ -195,6 +345,7 @@ impl PeArray {
         self.acc.clear();
         self.acc.resize(tile_h * tile_w, 0);
         self.stats = GatingStats::default();
+        self.reuse = ReuseStats::default();
     }
 
     /// Raw wide partial sums (tests / head accumulation).
@@ -217,9 +368,15 @@ impl PeArray {
         self.stats
     }
 
+    /// Product-sparsity statistics accumulated so far.
+    pub fn reuse(&self) -> ReuseStats {
+        self.reuse
+    }
+
     /// Reset statistics.
     pub fn reset_stats(&mut self) {
         self.stats = GatingStats::default();
+        self.reuse = ReuseStats::default();
     }
 }
 
@@ -314,6 +471,66 @@ mod tests {
             assert_eq!(word_pe.partial_sums(), dense_pe.partial_sums());
             assert_eq!(word_pe.stats(), dense_pe.stats());
         });
+    }
+
+    #[test]
+    fn prop_reuse_matches_words_with_saving_counted() {
+        // The product-sparsity path must equal the word-parallel path in
+        // partial sums AND gating statistics at any density/shift, while
+        // every replayed event lands in macs_reused (enabled = fresh +
+        // reused, so reused can never exceed enabled).
+        use crate::accel::prosperity::ReuseForest;
+        use crate::sparse::SpikePlane;
+        run_prop("pe/reuse-vs-words", |g| {
+            let h = g.usize(1, 10);
+            let w = g.usize(1, 70);
+            let density = g.f64(0.0, 1.0);
+            let mut rows = g.spikes(h * w, density);
+            // Inject duplicate rows so Equal/Super nodes actually occur.
+            for y in 1..h {
+                if g.bool(0.4) {
+                    let src = g.usize(0, y);
+                    let (head, tail) = rows.split_at_mut(y * w);
+                    tail[..w].copy_from_slice(&head[src * w..(src + 1) * w]);
+                }
+            }
+            let plane = SpikePlane::from_dense(&rows, h, w);
+            let forest = ReuseForest::mine(&plane);
+            let mut word_pe = PeArray::new(h, w);
+            let mut reuse_pe = PeArray::new(h, w);
+            for _ in 0..g.usize(1, 4) {
+                let dy = g.i64(-2, 2) as isize;
+                let dx = g.i64(-2, 2) as isize;
+                let wt = g.i8();
+                let shift = g.usize(0, 3) as u32;
+                word_pe.gated_accumulate_words(&plane, dy, dx, wt, shift);
+                reuse_pe.gated_accumulate_reuse(&plane, &forest, dy, dx, wt, shift);
+            }
+            assert_eq!(reuse_pe.partial_sums(), word_pe.partial_sums());
+            assert_eq!(reuse_pe.stats(), word_pe.stats());
+            assert!(reuse_pe.reuse().macs_reused <= reuse_pe.stats().enabled);
+        });
+    }
+
+    #[test]
+    fn reuse_saving_on_duplicate_rows() {
+        // Four identical nonzero rows: the pattern is decoded once and
+        // replayed three times, so 3/4 of the enabled events are reused.
+        use crate::accel::prosperity::ReuseForest;
+        use crate::sparse::SpikePlane;
+        let plane = SpikePlane::from_dense(&[1, 0, 1, 1, 0, 1, 1, 0, 1, 1, 0, 1], 4, 3);
+        let forest = ReuseForest::mine(&plane);
+        assert_eq!(forest.patterns_unique(), 1);
+        let mut pe = PeArray::new(4, 3);
+        pe.gated_accumulate_reuse(&plane, &forest, 0, 0, 2, 0);
+        assert_eq!(pe.partial_sums(), &[2, 0, 2, 2, 0, 2, 2, 0, 2, 2, 0, 2]);
+        assert_eq!(pe.stats().enabled, 8);
+        assert_eq!(pe.stats().gated, 4);
+        assert_eq!(pe.reuse().macs_reused, 6);
+        pe.note_patterns_mined(forest.patterns_unique());
+        assert_eq!(pe.reuse().patterns_unique, 1);
+        pe.reset_for_tile(4, 3);
+        assert_eq!(pe.reuse(), ReuseStats::default());
     }
 
     #[test]

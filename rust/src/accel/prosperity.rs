@@ -1,0 +1,314 @@
+//! Product-sparsity pattern mining (the Prosperity paradigm, HPCA 2025):
+//! the bit-mask PE path exploits *bit* sparsity — silent pixels cost
+//! nothing — but rows of a spike tile frequently *overlap*: identical
+//! rows, or rows whose spike set contains another row's. This module
+//! mines those relations from the word-packed [`SpikePlane`] rows into a
+//! **reuse forest**: per tile row, either the first occurrence of its
+//! pattern (`Root`), a replay of an earlier identical row (`Equal`), or a
+//! proper superset of an earlier row (`Super`) carrying only the disjoint
+//! `extra` bits.
+//!
+//! The PE array then computes each unique pattern's partial-sum delta
+//! once and replays it for every subsumed row
+//! (`PeArray::gated_accumulate_reuse`): an `Equal` row costs a vector add
+//! instead of a decode, a `Super` row costs only its `extra` spikes on
+//! top of the parent's reused delta. Accumulators and gating statistics
+//! stay bit-identical to the bit-mask path — only the number of fresh
+//! MACs (and the modeled cycles) changes.
+//!
+//! Mining is **deterministic**: rows are scanned in index order and ties
+//! between candidate subset parents break toward the largest popcount,
+//! then the lowest row index — no hashing, no ambient randomness — so
+//! `patterns_unique` / `macs_reused` counters are reproducible across
+//! runs and platforms. Word-level subset/equality tests make a full scan
+//! O(h² · words_per_row), trivial at PE-tile heights; the forest is
+//! memoized in the controller's scratch arena so one mining pass per
+//! extracted tile plane serves every output channel that convolves it.
+
+use crate::sparse::SpikePlane;
+
+/// How one tile row relates to the rows mined before it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RowNode {
+    /// First occurrence of its pattern, with no usable subset parent.
+    Root,
+    /// Bit-identical to the earlier representative row `of`; replays its
+    /// delta for free.
+    Equal {
+        /// Row index of the representative this row replays.
+        of: usize,
+    },
+    /// Proper superset of the earlier representative row `of`.
+    Super {
+        /// Row index of the subset parent whose delta is reused.
+        of: usize,
+        /// The disjoint bits this row adds on top of the parent
+        /// (`row & !parent`), packed like the source row words.
+        extra: Vec<u64>,
+    },
+}
+
+/// The mined reuse relations of one tile plane's rows. Representatives
+/// (`Root`/`Super` rows) always precede the rows that reference them, so
+/// walking rows in index order builds deltas in dependency order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ReuseForest {
+    nodes: Vec<RowNode>,
+}
+
+impl ReuseForest {
+    /// Mine a fresh forest from a tile plane.
+    pub fn mine(tile: &SpikePlane) -> ReuseForest {
+        let mut f = ReuseForest::default();
+        f.mine_into(tile);
+        f
+    }
+
+    /// Re-mine this forest from a tile plane, reusing the node storage —
+    /// the memoized-arena entry point.
+    pub fn mine_into(&mut self, tile: &SpikePlane) {
+        self.nodes.clear();
+        self.nodes.reserve(tile.h);
+        for r in 0..tile.h {
+            let row = tile.row_words(r);
+            let mut equal: Option<usize> = None;
+            // Best subset parent so far: (row index, popcount). Strictly
+            // greater popcount wins, so ties keep the lowest index.
+            let mut parent: Option<(usize, u32)> = None;
+            for p in 0..r {
+                if matches!(self.nodes[p], RowNode::Equal { .. }) {
+                    continue; // only representatives can be referenced
+                }
+                let prow = tile.row_words(p);
+                if prow == row {
+                    equal = Some(p);
+                    break;
+                }
+                if prow.iter().zip(row).all(|(&a, &b)| a & b == a) {
+                    let pop: u32 = prow.iter().map(|x| x.count_ones()).sum();
+                    if pop > 0 && parent.map_or(true, |(_, best)| pop > best) {
+                        parent = Some((p, pop));
+                    }
+                }
+            }
+            self.nodes.push(match (equal, parent) {
+                (Some(of), _) => RowNode::Equal { of },
+                (None, Some((of, _))) => RowNode::Super {
+                    of,
+                    extra: tile.row_words(of).iter().zip(row).map(|(&p, &b)| b & !p).collect(),
+                },
+                (None, None) => RowNode::Root,
+            });
+        }
+    }
+
+    /// Number of mined rows.
+    pub fn rows(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The mined relation of row `y`.
+    pub fn node(&self, y: usize) -> &RowNode {
+        &self.nodes[y]
+    }
+
+    /// Representative row index of `y`'s pattern class (itself unless the
+    /// row is an `Equal` replay).
+    pub fn class_of(&self, y: usize) -> usize {
+        match self.nodes[y] {
+            RowNode::Equal { of } => of,
+            _ => y,
+        }
+    }
+
+    /// Number of distinct row patterns (`Root` + `Super` rows).
+    pub fn patterns_unique(&self) -> u64 {
+        self.nodes.iter().filter(|n| !matches!(n, RowNode::Equal { .. })).count() as u64
+    }
+
+    /// Fraction of rows that replay an earlier pattern (0 when empty).
+    pub fn reuse_rate(&self) -> f64 {
+        if self.nodes.is_empty() {
+            0.0
+        } else {
+            1.0 - self.patterns_unique() as f64 / self.nodes.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{run_prop, Gen};
+
+    fn pop(r: &[u64]) -> u32 {
+        r.iter().map(|x| x.count_ones()).sum()
+    }
+
+    fn is_subset(a: &[u64], b: &[u64]) -> bool {
+        a.iter().zip(b).all(|(&x, &y)| x & y == x)
+    }
+
+    /// Brute-force oracle: recompute every row's relation from first
+    /// principles and check the miner agrees — including the greedy
+    /// parent choice (max popcount, ties to the lowest row index) and the
+    /// `extra` decomposition reconstructing the row exactly.
+    fn check_against_oracle(tile: &SpikePlane, forest: &ReuseForest) {
+        assert_eq!(forest.rows(), tile.h);
+        let rows: Vec<Vec<u64>> = (0..tile.h).map(|y| tile.row_words(y).to_vec()).collect();
+        let mut reps: Vec<usize> = Vec::new();
+        for (y, row) in rows.iter().enumerate() {
+            let equal = reps.iter().copied().find(|&p| &rows[p] == row);
+            match forest.node(y) {
+                RowNode::Equal { of } => {
+                    assert_eq!(Some(*of), equal, "row {y}: wrong equal representative");
+                    assert_eq!(forest.class_of(y), *of);
+                }
+                node => {
+                    assert_eq!(equal, None, "row {y}: missed an equal representative");
+                    let best = reps
+                        .iter()
+                        .copied()
+                        .filter(|&p| pop(&rows[p]) > 0 && is_subset(&rows[p], row))
+                        .max_by_key(|&p| (pop(&rows[p]), std::cmp::Reverse(p)));
+                    match node {
+                        RowNode::Root => {
+                            assert_eq!(best, None, "row {y}: missed a subset parent");
+                        }
+                        RowNode::Super { of, extra } => {
+                            assert_eq!(Some(*of), best, "row {y}: wrong subset parent");
+                            let want: Vec<u64> =
+                                rows[*of].iter().zip(row).map(|(&p, &b)| b & !p).collect();
+                            assert_eq!(extra, &want, "row {y}: wrong extra bits");
+                            let rebuilt: Vec<u64> =
+                                rows[*of].iter().zip(extra).map(|(&p, &e)| p | e).collect();
+                            assert_eq!(&rebuilt, row, "row {y}: parent|extra ≠ row");
+                        }
+                        RowNode::Equal { .. } => unreachable!(),
+                    }
+                    assert_eq!(forest.class_of(y), y);
+                    reps.push(y);
+                }
+            }
+        }
+        assert_eq!(forest.patterns_unique(), reps.len() as u64);
+    }
+
+    #[test]
+    fn miner_matches_brute_force_oracle() {
+        // Random planes with forced all-zero, all-one and duplicate rows,
+        // widths spanning multiple 64-bit words, checked row by row
+        // against the brute-force subset/equality oracle.
+        run_prop("prosperity_miner_oracle", |g| {
+            let h = 1 + g.usize(0, 24);
+            let w = 1 + g.usize(0, 90);
+            let density = g.f64(0.0, 1.0);
+            let mut data = vec![0u8; h * w];
+            for y in 0..h {
+                if y > 0 && g.bool(0.3) {
+                    let src = g.usize(0, y);
+                    let (head, tail) = data.split_at_mut(y * w);
+                    tail[..w].copy_from_slice(&head[src * w..src * w + w]);
+                } else if g.bool(0.1) {
+                    // all-zero row: leave as zeros
+                } else if g.bool(0.1) {
+                    data[y * w..(y + 1) * w].fill(1);
+                } else {
+                    for cell in &mut data[y * w..(y + 1) * w] {
+                        *cell = u8::from(g.bool(density));
+                    }
+                }
+            }
+            let tile = SpikePlane::from_dense(&data, h, w);
+            check_against_oracle(&tile, &ReuseForest::mine(&tile));
+        });
+    }
+
+    #[test]
+    fn reuse_rate_monotone_as_duplicates_appended() {
+        // Greedy mining is prefix-stable: appending a copy of an existing
+        // row leaves every earlier node untouched and adds an `Equal`
+        // replay, so the reuse rate can only grow.
+        run_prop("prosperity_reuse_monotonic", |g| {
+            let mut rows = 2 + g.usize(0, 10);
+            let w = 1 + g.usize(0, 70);
+            let density = g.f64(0.0, 1.0);
+            let mut data: Vec<u8> = (0..rows * w).map(|_| u8::from(g.bool(density))).collect();
+            let mut prev = ReuseForest::mine(&SpikePlane::from_dense(&data, rows, w));
+            for _ in 0..4 {
+                let src = g.usize(0, rows);
+                let dup: Vec<u8> = data[src * w..(src + 1) * w].to_vec();
+                data.extend_from_slice(&dup);
+                rows += 1;
+                let next = ReuseForest::mine(&SpikePlane::from_dense(&data, rows, w));
+                for y in 0..rows - 1 {
+                    assert_eq!(next.node(y), prev.node(y), "appending changed node {y}");
+                }
+                assert!(
+                    matches!(next.node(rows - 1), RowNode::Equal { .. }),
+                    "appended duplicate must replay a representative"
+                );
+                assert!(
+                    next.reuse_rate() >= prev.reuse_rate() - 1e-12,
+                    "reuse rate dropped: {} -> {}",
+                    prev.reuse_rate(),
+                    next.reuse_rate()
+                );
+                prev = next;
+            }
+        });
+    }
+
+    #[test]
+    fn canonical_shapes() {
+        // All-zero plane: one empty Root, everything else replays it.
+        let z = SpikePlane::zeros(4, 10);
+        let f = ReuseForest::mine(&z);
+        assert_eq!(*f.node(0), RowNode::Root);
+        for y in 1..4 {
+            assert_eq!(*f.node(y), RowNode::Equal { of: 0 });
+        }
+        assert_eq!(f.patterns_unique(), 1);
+        assert!((f.reuse_rate() - 0.75).abs() < 1e-12);
+
+        // All-one plane: same shape, saturated pattern.
+        let o = SpikePlane::from_dense(&vec![1u8; 3 * 70], 3, 70);
+        let f = ReuseForest::mine(&o);
+        assert_eq!(f.patterns_unique(), 1);
+        assert_eq!(*f.node(2), RowNode::Equal { of: 0 });
+
+        // Nested subsets chain into Supers: 100 ⊂ 110 ⊂ 111.
+        let data = [1, 0, 0, 1, 1, 0, 1, 1, 1];
+        let t = SpikePlane::from_dense(&data, 3, 3);
+        let f = ReuseForest::mine(&t);
+        assert_eq!(*f.node(0), RowNode::Root);
+        assert!(matches!(f.node(1), RowNode::Super { of: 0, .. }));
+        assert!(matches!(f.node(2), RowNode::Super { of: 1, .. }));
+        assert_eq!(f.patterns_unique(), 3);
+        assert_eq!(f.reuse_rate(), 0.0);
+
+        // A zero row is never a subset parent (no reuse in an empty
+        // pattern): zero then nonzero ⇒ both Roots.
+        let data = [0, 0, 1, 1];
+        let t = SpikePlane::from_dense(&data, 2, 2);
+        let f = ReuseForest::mine(&t);
+        assert_eq!(*f.node(0), RowNode::Root);
+        assert_eq!(*f.node(1), RowNode::Root);
+    }
+
+    #[test]
+    fn parent_choice_prefers_largest_then_lowest() {
+        // Row 2 is a superset of both row 0 (1 bit) and row 1 (2 bits):
+        // the denser parent wins.
+        let data = [1, 0, 0, 0, 1, 1, 0, 0, 1, 1, 1, 0];
+        let t = SpikePlane::from_dense(&data, 3, 4);
+        let f = ReuseForest::mine(&t);
+        assert!(matches!(f.node(2), RowNode::Super { of: 1, .. }));
+
+        // Two equal-popcount subset parents: the lowest index wins.
+        let data = [1, 1, 0, 0, 0, 0, 1, 1, 1, 1, 1, 1];
+        let t = SpikePlane::from_dense(&data, 3, 4);
+        let f = ReuseForest::mine(&t);
+        assert!(matches!(f.node(2), RowNode::Super { of: 0, .. }));
+    }
+}

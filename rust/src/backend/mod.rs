@@ -67,6 +67,11 @@ pub struct LayerObservation {
     pub dense_cycles: u64,
     /// Per-core cycle counters (multi-core cycle simulation).
     pub core_cycles: Vec<u64>,
+    /// Unique row patterns built by the product-sparsity datapath (zero
+    /// on the bit-mask datapath and non-cycle backends).
+    pub patterns_unique: u64,
+    /// MACs replayed from an already-built pattern instead of recomputed.
+    pub macs_reused: u64,
 }
 
 /// One frame's result: the raw integer head accumulator plus whatever

@@ -59,6 +59,11 @@ pub struct AccelConfig {
     pub voltage: f64,
     /// Process node in nm (paper: 28).
     pub process_nm: f64,
+    /// Which PE datapath executes the gated one-to-all product (bit-mask
+    /// baseline vs the Prosperity-style product-sparsity path that mines
+    /// partial-sum reuse across tile rows). Bit-exact either way; only the
+    /// cycle accounting differs.
+    pub datapath: Datapath,
 }
 
 impl AccelConfig {
@@ -84,6 +89,7 @@ impl AccelConfig {
             max_time_steps: 4,
             voltage: 0.9,
             process_nm: 28.0,
+            datapath: Datapath::BitMask,
         }
     }
 
@@ -96,6 +102,12 @@ impl AccelConfig {
     /// `num_cores` variant (design-space sweeps, `--cores N`).
     pub fn with_cores(mut self, cores: usize) -> Self {
         self.num_cores = cores.max(1);
+        self
+    }
+
+    /// `datapath` variant (design-space sweeps, `--datapath D`).
+    pub fn with_datapath(mut self, datapath: Datapath) -> Self {
+        self.datapath = datapath;
         self
     }
 
@@ -134,8 +146,50 @@ impl AccelConfig {
             cfg.weight_map_sram_bytes =
                 s.get_usize("weight_map_sram_bytes").unwrap_or(cfg.weight_map_sram_bytes);
             cfg.dram_pj_per_bit = s.get_f64("dram_pj_per_bit").unwrap_or(cfg.dram_pj_per_bit);
+            if let Some(d) = s.get("datapath") {
+                cfg.datapath = Datapath::parse(d).unwrap_or(cfg.datapath);
+            }
         }
         cfg
+    }
+}
+
+/// Which PE datapath the simulator's gated one-to-all product runs. Both
+/// are bit-exact against the golden model; they differ in how work is
+/// counted (and, at high pattern overlap, how much of it exists).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Datapath {
+    /// The paper's baseline: every enabled (pixel, weight) pair costs one
+    /// MAC, silent pixels are gated.
+    BitMask,
+    /// Prosperity-style product sparsity: a per-tile reuse forest over the
+    /// word-packed spike rows detects equal/subset row patterns, computes
+    /// each unique pattern once and replays deltas for subsumed rows —
+    /// fewer MACs at high overlap, at a fixed per-plane mining cost.
+    Prosperity,
+}
+
+impl Datapath {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<Datapath> {
+        match s {
+            "bitmask" | "bit-mask" => Some(Datapath::BitMask),
+            "prosperity" | "product" => Some(Datapath::Prosperity),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling.
+    pub fn label(self) -> &'static str {
+        match self {
+            Datapath::BitMask => "bitmask",
+            Datapath::Prosperity => "prosperity",
+        }
+    }
+
+    /// Every datapath, in CLI order.
+    pub fn all() -> [Datapath; 2] {
+        [Datapath::BitMask, Datapath::Prosperity]
     }
 }
 
@@ -303,6 +357,31 @@ mod tests {
         for p in ShardPolicy::all() {
             assert_eq!(ShardPolicy::parse(p.label()), Some(p), "{p:?} round-trips");
         }
+    }
+
+    #[test]
+    fn datapath_spellings_round_trip() {
+        assert_eq!(Datapath::parse("bitmask"), Some(Datapath::BitMask));
+        assert_eq!(Datapath::parse("prosperity"), Some(Datapath::Prosperity));
+        assert_eq!(Datapath::parse("bogus"), None);
+        for d in Datapath::all() {
+            assert_eq!(Datapath::parse(d.label()), Some(d), "{d:?} round-trips");
+        }
+        assert_eq!(AccelConfig::paper().datapath, Datapath::BitMask);
+        assert_eq!(
+            AccelConfig::paper().with_datapath(Datapath::Prosperity).datapath,
+            Datapath::Prosperity
+        );
+    }
+
+    #[test]
+    fn datapath_from_toml() {
+        let dir = std::env::temp_dir().join("scsnn_datapath_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("accel.toml");
+        std::fs::write(&p, "[accel]\ndatapath = \"prosperity\"\n").unwrap();
+        let c = AccelConfig::from_file(&p).unwrap();
+        assert_eq!(c.datapath, Datapath::Prosperity);
     }
 
     #[test]

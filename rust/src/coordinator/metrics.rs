@@ -168,6 +168,13 @@ pub struct PipelineMetrics {
     /// grow/shrink decision, with the queue backlog that triggered it
     /// (empty for fixed pools).
     pub pool_timeline: Vec<PoolSample>,
+    /// Unique row patterns the product-sparsity datapath built on a
+    /// representative frame, summed over layers (0 = bit-mask datapath
+    /// or a backend that reports no cycle-level observations).
+    pub patterns_unique: u64,
+    /// MACs replayed from already-built patterns on the same
+    /// representative frame (0 likewise).
+    pub macs_reused: u64,
 }
 
 impl PipelineMetrics {
@@ -254,6 +261,10 @@ impl PipelineMetrics {
                         .collect(),
                 ),
             );
+        }
+        if self.patterns_unique > 0 {
+            m.insert("patterns_unique".into(), Json::Num(self.patterns_unique as f64));
+            m.insert("macs_reused".into(), Json::Num(self.macs_reused as f64));
         }
         if let Some(hw) = &self.hw {
             let mut h = BTreeMap::new();

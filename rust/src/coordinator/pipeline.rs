@@ -23,7 +23,7 @@ use crate::backend::{
     RequestClass, SnnBackend,
 };
 use crate::cluster::ChipCluster;
-use crate::config::{AccelConfig, ClusterConfig, ShardPolicy};
+use crate::config::{AccelConfig, ClusterConfig, Datapath, ShardPolicy};
 use crate::coordinator::engine::{EngineConfig, StreamingEngine};
 use crate::coordinator::metrics::{FrameHwEstimate, PipelineMetrics};
 use crate::coordinator::stage_exec::{StageExecutor, StageServingRun};
@@ -274,6 +274,20 @@ impl DetectionPipeline {
         Ok(())
     }
 
+    /// Set the PE datapath (bit-mask baseline vs product sparsity);
+    /// rebuilds the cycle-sim or cluster backend if one of them is
+    /// active. Bit-exact either way — only cycle accounting and the
+    /// reuse counters change.
+    pub fn set_datapath(&mut self, datapath: Datapath) -> Result<()> {
+        self.cfg.datapath = datapath;
+        match self.backend.name() {
+            "cyclesim" => self.select_backend(BackendKind::CycleSim)?,
+            "cluster" => self.select_backend(BackendKind::Cluster)?,
+            _ => {}
+        }
+        Ok(())
+    }
+
     /// Set the cluster geometry (chip count + sharding policy); rebuilds
     /// the cluster backend if it is the active one.
     pub fn set_cluster(&mut self, chips: usize, policy: ShardPolicy) -> Result<()> {
@@ -438,6 +452,22 @@ impl DetectionPipeline {
         out
     }
 
+    /// Product-sparsity reuse counters of one frame on the active
+    /// backend (summed over layers): a stats-collecting `run_frame` on a
+    /// representative frame, used to label serving runs with the
+    /// datapath's efficiency. Returns zeros unless the backend reports
+    /// cycles and the configured datapath mines patterns.
+    fn reuse_counters(&self, image: &Tensor<u8>) -> Result<(u64, u64)> {
+        if self.cfg.datapath != Datapath::Prosperity || !self.backend.caps().reports_cycles {
+            return Ok((0, 0));
+        }
+        let frame = self.backend.run_frame(image, &FrameOptions { collect_stats: true })?;
+        Ok(frame
+            .layers
+            .values()
+            .fold((0, 0), |(p, m), o| (p + o.patterns_unique, m + o.macs_reused)))
+    }
+
     /// Estimate the hardware metrics of one frame (golden model run with
     /// stats + analytic latency/energy models, paper hardware config).
     /// The sparsity profile comes from popcounts of the compressed spike
@@ -510,6 +540,11 @@ impl DetectionPipeline {
             metrics.peak_workers = run.stats.workers;
             metrics.wall_interval_ms = run.wall_interval().as_secs_f64() * 1e3;
             metrics.stage_occupancy = run.stage_occupancy();
+            if let Some(first) = ds.samples.first() {
+                let (pu, mr) = self.reuse_counters(&first.image)?;
+                metrics.patterns_unique = pu;
+                metrics.macs_reused = mr;
+            }
             let gts = ds.ground_truth();
             let summary = mean_ap(&dets, &gts, NUM_CLASSES, 0.5);
             return Ok(PipelineReport { metrics, map: summary.mean, ap: summary.ap });
@@ -539,6 +574,11 @@ impl DetectionPipeline {
         )?;
         metrics.peak_workers = engine.peak_workers();
         metrics.pool_timeline = engine.scaling_timeline();
+        if let Some(first) = ds.samples.first() {
+            let (pu, mr) = self.reuse_counters(&first.image)?;
+            metrics.patterns_unique = pu;
+            metrics.macs_reused = mr;
+        }
         let gts = ds.ground_truth();
         let summary = mean_ap(&dets, &gts, NUM_CLASSES, 0.5);
         Ok(PipelineReport { metrics, map: summary.mean, ap: summary.ap })
@@ -645,6 +685,28 @@ mod tests {
         assert_eq!(p.backend_name(), "cluster");
         let got = p.process_frame(&ds.samples[0].image).unwrap();
         assert_eq!(got.head.data, want.head.data);
+    }
+
+    #[test]
+    fn prosperity_datapath_serves_bit_identical_with_reuse_counters() {
+        let mut p = synthetic_pipeline();
+        let ds = Dataset::synth(2, p.net.input_w, p.net.input_h, 23);
+        p.select_backend(BackendKind::CycleSim).unwrap();
+        let want = p.process_frame(&ds.samples[0].image).unwrap();
+        p.set_datapath(Datapath::Prosperity).unwrap();
+        assert_eq!(p.backend_name(), "cyclesim");
+        let got = p.process_frame(&ds.samples[0].image).unwrap();
+        assert_eq!(got.head.data, want.head.data);
+        assert_eq!(got.detections, want.detections);
+        // The dataset report carries the datapath's reuse counters.
+        let rep = p.process_dataset(&ds).unwrap();
+        assert!(rep.metrics.patterns_unique > 0);
+        // The golden backend reports no cycle-level observations, so the
+        // counters stay zero even with the prosperity datapath selected.
+        p.select_backend(BackendKind::Golden).unwrap();
+        let rep_g = p.process_dataset(&ds).unwrap();
+        assert_eq!(rep_g.metrics.patterns_unique, 0);
+        assert_eq!(rep_g.metrics.macs_reused, 0);
     }
 
     #[test]

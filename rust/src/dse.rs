@@ -1,7 +1,7 @@
 //! Design-space exploration (`scsnn dse`): the §III-A/§IV studies grown
 //! into one first-class sweep over the whole accelerator configuration
 //! space — cores × chips × shard policy × residency window × input-SRAM
-//! capacity × inter-chip link × time-step mix.
+//! capacity × inter-chip link × time-step mix × PE datapath.
 //!
 //! The sweep is two-tier, which is what makes >1000 points tractable:
 //!
@@ -37,14 +37,14 @@ use crate::accel::energy::AreaModel;
 use crate::accel::latency::LatencyModel;
 use crate::backend::FrameOptions;
 use crate::cluster::ChipCluster;
-use crate::config::{AccelConfig, ClusterConfig, ShardPolicy};
+use crate::config::{AccelConfig, ClusterConfig, Datapath, ShardPolicy};
 use crate::detect::dataset::Dataset;
 use crate::model::topology::{NetworkSpec, Scale, TimeStepConfig};
 use crate::model::weights::ModelWeights;
 use crate::sparse::stats::Format;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
-use crate::util::Args;
+use crate::util::{Args, Rng};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::collections::BTreeSet;
@@ -101,6 +101,7 @@ pub fn grid_size() -> usize {
     time_step_axis().len()
         * sram_axis().len()
         * CORES.len()
+        * Datapath::all().len()
         * chip_policy_axis().len()
         * LINKS.len()
         * IN_FLIGHT.len()
@@ -123,6 +124,8 @@ pub struct DesignPoint {
     pub link: LinkSpec,
     /// Time-step mix of the network.
     pub time_steps: TimeStepConfig,
+    /// PE datapath (bit-mask gating or product-sparsity reuse).
+    pub datapath: Datapath,
 }
 
 impl DesignPoint {
@@ -133,7 +136,7 @@ impl DesignPoint {
         } else {
             AccelConfig::paper()
         };
-        base.with_cores(self.cores)
+        base.with_cores(self.cores).with_datapath(self.datapath)
     }
 
     /// The cluster configuration this point describes.
@@ -152,14 +155,15 @@ impl DesignPoint {
     /// Compact human label for tables.
     pub fn label(&self) -> String {
         format!(
-            "{}c×{}ch[{}] w{} {}KB link{} {}",
+            "{}c×{}ch[{}] w{} {}KB link{} {} {}",
             self.cores,
             self.chips,
             self.policy.label(),
             self.in_flight,
             self.input_sram_bytes / 1024,
             self.link.bits_per_cycle,
-            self.time_steps.label()
+            self.time_steps.label(),
+            self.datapath.label()
         )
     }
 }
@@ -189,20 +193,39 @@ pub fn dominates(a: &Evaluated, b: &Evaluated) -> bool {
         && (a.fps > b.fps || a.energy_mj < b.energy_mj || a.area_mm2 < b.area_mm2)
 }
 
-/// Keep the `idx`-th of `total` leaves when decimating to `max_points`
-/// (0 = keep everything). The floor-boundary test keeps exactly
-/// `max_points` evenly-strided leaves.
-fn keep(idx: usize, total: usize, max_points: usize) -> bool {
-    max_points == 0
-        || max_points >= total
-        || (idx * max_points / total) != ((idx + 1) * max_points / total)
+/// Which grid leaves survive a `--max-points` decimation: a uniform
+/// random subset drawn without replacement from [`Rng`] at the sweep
+/// seed, so repeated runs with the same seed price the identical subset
+/// and no stride can alias against the axis ordering (the old
+/// evenly-strided keep rule systematically under-sampled the fast-moving
+/// `in_flight` axis).
+struct Decimation {
+    kept: Option<BTreeSet<usize>>,
+}
+
+impl Decimation {
+    /// `max_points == 0` (or ≥ `total`) keeps everything.
+    fn new(total: usize, max_points: usize, seed: u64) -> Self {
+        if max_points == 0 || max_points >= total {
+            return Decimation { kept: None };
+        }
+        let mut leaves: Vec<usize> = (0..total).collect();
+        Rng::new(seed ^ 0x5ce5_ce5c_e5ce_5ce5).shuffle(&mut leaves);
+        Decimation { kept: Some(leaves.into_iter().take(max_points).collect()) }
+    }
+
+    fn keep(&self, idx: usize) -> bool {
+        self.kept.as_ref().map_or(true, |k| k.contains(&idx))
+    }
 }
 
 /// Run the analytic tier: price every grid point (optionally decimated to
-/// `max_points` evenly-strided ones) closed-form. Weights are synthetic
-/// 80%-pruned at `seed`, matching the CLI's fallback weights.
+/// a seed-deterministic random subset of `max_points`) closed-form.
+/// Weights are synthetic 80%-pruned at `seed`, matching the CLI's
+/// fallback weights.
 pub fn sweep(scale: Scale, seed: u64, max_points: usize) -> Vec<Evaluated> {
     let total = grid_size();
+    let dec = Decimation::new(total, max_points, seed);
     let area_model = AreaModel::default();
     let mut out = Vec::new();
     let mut idx = 0usize;
@@ -212,58 +235,64 @@ pub fn sweep(scale: Scale, seed: u64, max_points: usize) -> Vec<Evaluated> {
         w.prune_fine_grained(0.8);
         for base in sram_axis() {
             // Traffic depends on the SRAM capacity and the network, not
-            // on core/cluster geometry — price it once per branch.
+            // on core/cluster geometry or the PE datapath (both store
+            // the same bit-mask compressed format) — price it once per
+            // branch.
             let dram = DramModel::new(base.clone());
             let traffic = dram.frame_traffic(&net, &w, Format::BitMask);
             let dram_mj = dram.frame_energy_mj(&traffic);
             for cores in CORES {
-                let chip = base.clone().with_cores(cores);
-                let chip_area = area_model.report(&chip).total_mm2();
-                for (chips, policy) in chip_policy_axis() {
-                    for link in LINKS {
-                        // Skip the closed-form latency walk when
-                        // decimation drops this whole (link × window)
-                        // subtree.
-                        if !(0..IN_FLIGHT.len()).any(|j| keep(idx + j, total, max_points)) {
-                            idx += IN_FLIGHT.len();
-                            continue;
-                        }
-                        let point_base = DesignPoint {
-                            cores,
-                            chips,
-                            policy,
-                            in_flight: 1,
-                            input_sram_bytes: base.input_sram_bytes,
-                            link,
-                            time_steps: ts,
-                        };
-                        let cc = point_base.cluster_config();
-                        let cl = LatencyModel::cluster(&net, &w, &cc);
-                        // First-order link-energy proxy: sharded policies
-                        // ship activations between chips, frame-parallel
-                        // only talks to the host. The cycle tier prices
-                        // the real interconnect log instead.
-                        let link_bits = if chips == 1 || policy == ShardPolicy::FrameParallel {
-                            0
-                        } else {
-                            traffic.output_bits
-                        };
-                        let energy_mj = dram_mj + link.energy_mj(link_bits);
-                        for in_flight in IN_FLIGHT {
-                            let kept = keep(idx, total, max_points);
-                            idx += 1;
-                            if !kept {
+                for datapath in Datapath::all() {
+                    let chip = base.clone().with_cores(cores).with_datapath(datapath);
+                    let chip_area = area_model.report(&chip).total_mm2();
+                    for (chips, policy) in chip_policy_axis() {
+                        for link in LINKS {
+                            // Skip the closed-form latency walk when
+                            // decimation drops this whole (link × window)
+                            // subtree.
+                            if !(0..IN_FLIGHT.len()).any(|j| dec.keep(idx + j)) {
+                                idx += IN_FLIGHT.len();
                                 continue;
                             }
-                            let interval = cl.pipeline_interval_bounded(in_flight);
-                            out.push(Evaluated {
-                                point: DesignPoint { in_flight, ..point_base.clone() },
-                                interval_cycles: interval,
-                                compute_makespan: cl.compute_makespan,
-                                fps: chip.clock_hz / interval.max(1) as f64,
-                                energy_mj,
-                                area_mm2: chip_area * chips as f64,
-                            });
+                            let point_base = DesignPoint {
+                                cores,
+                                chips,
+                                policy,
+                                in_flight: 1,
+                                input_sram_bytes: base.input_sram_bytes,
+                                link,
+                                time_steps: ts,
+                                datapath,
+                            };
+                            let cc = point_base.cluster_config();
+                            let cl = LatencyModel::cluster(&net, &w, &cc);
+                            // First-order link-energy proxy: sharded
+                            // policies ship activations between chips,
+                            // frame-parallel only talks to the host. The
+                            // cycle tier prices the real interconnect
+                            // log instead.
+                            let link_bits = if chips == 1 || policy == ShardPolicy::FrameParallel {
+                                0
+                            } else {
+                                traffic.output_bits
+                            };
+                            let energy_mj = dram_mj + link.energy_mj(link_bits);
+                            for in_flight in IN_FLIGHT {
+                                let kept = dec.keep(idx);
+                                idx += 1;
+                                if !kept {
+                                    continue;
+                                }
+                                let interval = cl.pipeline_interval_bounded(in_flight);
+                                out.push(Evaluated {
+                                    point: DesignPoint { in_flight, ..point_base.clone() },
+                                    interval_cycles: interval,
+                                    compute_makespan: cl.compute_makespan,
+                                    fps: chip.clock_hz / interval.max(1) as f64,
+                                    energy_mj,
+                                    area_mm2: chip_area * chips as f64,
+                                });
+                            }
                         }
                     }
                 }
@@ -352,6 +381,7 @@ fn point_json(e: &Evaluated, pareto: bool) -> Json {
         ("link_latency_cycles", Json::Num(e.point.link.latency_cycles as f64)),
         ("link_pj_per_bit", Json::Num(e.point.link.pj_per_bit)),
         ("time_steps", Json::Str(e.point.time_steps.label())),
+        ("datapath", Json::Str(e.point.datapath.label().to_string())),
         ("interval_cycles", Json::Num(e.interval_cycles as f64)),
         ("compute_makespan", Json::Num(e.compute_makespan as f64)),
         ("fps", Json::Num(e.fps)),
@@ -511,6 +541,41 @@ mod tests {
         // max_points larger than the grid must be a no-op decimation.
         let evals = sweep(Scale::Tiny, 7, 0);
         assert_eq!(evals.len(), grid_size());
+        // The datapath axis doubles the grid; matching coordinates pair
+        // up in emission order, and the prosperity twin can never be
+        // faster than bit-mask — its cycle model adds mining overhead.
+        let bm: Vec<&Evaluated> =
+            evals.iter().filter(|e| e.point.datapath == Datapath::BitMask).collect();
+        let ps: Vec<&Evaluated> =
+            evals.iter().filter(|e| e.point.datapath == Datapath::Prosperity).collect();
+        assert_eq!(bm.len(), ps.len());
+        assert!(ps.iter().zip(&bm).any(|(p, b)| p.interval_cycles > b.interval_cycles));
+        for (p, b) in ps.iter().zip(&bm) {
+            assert_eq!(p.point.cores, b.point.cores);
+            assert_eq!(p.point.in_flight, b.point.in_flight);
+            assert!(
+                p.interval_cycles >= b.interval_cycles,
+                "prosperity beat bitmask at {}",
+                p.point.label()
+            );
+        }
+    }
+
+    #[test]
+    fn decimation_is_seed_deterministic_and_seed_sensitive() {
+        let a = sweep(Scale::Tiny, 7, 40);
+        let b = sweep(Scale::Tiny, 7, 40);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.point.label(), y.point.label());
+            assert_eq!(x.interval_cycles, y.interval_cycles);
+        }
+        // A different seed draws a different subset (40 of >1000 points:
+        // an identical draw would mean the Rng ignores its seed).
+        let c = sweep(Scale::Tiny, 8, 40);
+        let la: Vec<String> = a.iter().map(|e| e.point.label()).collect();
+        let lc: Vec<String> = c.iter().map(|e| e.point.label()).collect();
+        assert_ne!(la, lc);
     }
 
     #[test]
@@ -523,6 +588,7 @@ mod tests {
             input_sram_bytes: AccelConfig::paper().input_sram_bytes,
             link: LinkSpec::default(),
             time_steps: TimeStepConfig::PAPER,
+            datapath: Datapath::BitMask,
         };
         let v = verify_point(&p, 11, 5).unwrap();
         assert!(v.steady_fps > 0.0);

@@ -334,6 +334,8 @@ impl<'a> LayerWalk<'a> {
                         cycles: run.cycles,
                         dense_cycles: run.dense_cycles,
                         core_cycles: run.core_cycles.clone(),
+                        patterns_unique: run.patterns_unique,
+                        macs_reused: run.macs_reused,
                     },
                 );
             }

@@ -15,9 +15,9 @@ use anyhow::{anyhow, bail, Result};
 use scsnn::accel::energy::{AreaModel, EnergyModel};
 use scsnn::accel::latency::LatencyModel;
 use scsnn::accel::parallelism::{fig6_study, multicore_study};
-use scsnn::backend::{BackendKind, FrameOptions};
+use scsnn::backend::{BackendKind, CycleSimBackend, FrameOptions, SnnBackend};
 use scsnn::cluster::ChipCluster;
-use scsnn::config::{AccelConfig, ClusterConfig, ShardPolicy};
+use scsnn::config::{AccelConfig, ClusterConfig, Datapath, ShardPolicy};
 use scsnn::coordinator::engine::{EngineConfig, StreamingEngine};
 use scsnn::coordinator::pipeline::{DetectionPipeline, HwStatsMode};
 use scsnn::coordinator::stage_exec::StageExecutor;
@@ -68,6 +68,7 @@ fn print_usage() {
          common options: --artifacts DIR  --scale full|tiny  --seed N\n\
          dse options:     --max-points N  --verify N  --frames N  --out BENCH_dse.json\n\
          serving options: --backend golden|cyclesim|pjrt|cluster|auto  --workers N|MIN..MAX  --cores N  --batch N\n\
+         datapath:        --datapath bitmask|prosperity  (product-sparsity PE path, bit-exact)\n\
          cluster options: --chips N  --shard-policy frame|pipeline|tile  --in-flight N  (--want-cycles with auto)\n\
          stage serving:   --pipeline N  (wall-clock pipelined cluster serving, N frames in flight)"
     );
@@ -116,6 +117,15 @@ fn parse_workers(spec: &str) -> Result<(usize, usize)> {
     }
 }
 
+/// Parse `--datapath` when given (default: the bit-mask baseline).
+fn datapath(args: &Args) -> Result<Datapath> {
+    match args.get("datapath") {
+        None => Ok(Datapath::BitMask),
+        Some(s) => Datapath::parse(s)
+            .ok_or_else(|| anyhow!("unknown datapath {s:?} (bitmask|prosperity)")),
+    }
+}
+
 /// Parse `--backend` when given.
 fn backend_kind(args: &Args) -> Result<Option<BackendKind>> {
     match args.get("backend") {
@@ -144,6 +154,7 @@ fn cmd_detect(args: &Args) -> Result<()> {
     pipeline.max_workers = worker_ceiling;
     pipeline.batch = args.parsed_or("batch", 1usize).max(1);
     pipeline.set_cores(args.parsed_or("cores", 1usize))?;
+    pipeline.set_datapath(datapath(args)?)?;
     let chips = args.parsed_or("chips", 1usize).max(1);
     let policy_str = args.get_or("shard-policy", "frame");
     let policy = ShardPolicy::parse(policy_str)
@@ -226,7 +237,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let net = NetworkSpec::paper(sc, TimeStepConfig::PAPER);
     let (weights, kind) = load_or_random(args, &net);
     let cores = args.parsed_or("cores", 1usize).max(1);
-    let cfg = AccelConfig::paper().with_cores(cores);
+    let dp = datapath(args)?;
+    let cfg = AccelConfig::paper().with_cores(cores).with_datapath(dp);
     let lat = LatencyModel::new(cfg.clone()).network(&net, &weights);
     let area = AreaModel::default().report(&cfg);
     println!("network {}  weights: {kind}  density {:.3}", net.name, weights.density());
@@ -236,6 +248,43 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         lat.dense_cycles(),
         lat.latency_saving() * 100.0
     );
+    if dp == Datapath::Prosperity {
+        let bm = LatencyModel::new(cfg.clone().with_datapath(Datapath::BitMask))
+            .network(&net, &weights);
+        println!(
+            "datapath: prosperity  (modeled mining overhead {} cycles over bitmask {})",
+            lat.sparse_cycles() - bm.sparse_cycles(),
+            bm.sparse_cycles()
+        );
+        if sc == Scale::Tiny {
+            // Executed per-layer reuse table on one synthetic frame — the
+            // full-scale simulator is analytic-only, like the cluster
+            // columns below.
+            let be = CycleSimBackend::new(
+                Arc::new(net.clone()),
+                Arc::new(weights.clone()),
+                cfg.clone(),
+            )?;
+            let ds =
+                Dataset::synth(1, net.input_w, net.input_h, args.parsed_or("seed", 42u64) + 2);
+            let frame =
+                be.run_frame(&ds.samples[0].image, &FrameOptions { collect_stats: true })?;
+            println!(
+                "  {:<12} {:>12} {:>10} {:>12}",
+                "layer", "cycles", "patterns", "macs reused"
+            );
+            for l in &net.layers {
+                if let Some(o) = frame.layers.get(&l.name) {
+                    println!(
+                        "  {:<12} {:>12} {:>10} {:>12}",
+                        l.name, o.cycles, o.patterns_unique, o.macs_reused
+                    );
+                }
+            }
+        } else {
+            println!("  (executed per-layer reuse table needs --scale tiny)");
+        }
+    }
     if cores > 1 {
         println!(
             "{cores} cores: makespan {} cycles  speedup {:.2}x  efficiency {:.0}%",

@@ -58,6 +58,13 @@ pub struct LayerStats {
     pub dense_macs: u64,
     /// Number of time steps the conv was computed.
     pub conv_steps: usize,
+    /// Unique row patterns built by the product-sparsity datapath. The
+    /// functional golden model does not mine patterns — the field is
+    /// filled from cycle-level backends' observations (zero otherwise).
+    pub patterns_unique: u64,
+    /// MACs replayed from an already-built pattern instead of recomputed
+    /// (product-sparsity datapath; zero otherwise).
+    pub macs_reused: u64,
 }
 
 /// Result of one frame.

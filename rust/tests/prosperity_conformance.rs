@@ -1,0 +1,108 @@
+//! Product-sparsity datapath conformance: every serving backend that can
+//! run the Prosperity PE path must stay bit-exact with the golden model,
+//! through the same shared harness (`tests/harness/mod.rs`) that checks
+//! the bit-mask datapath — random chains, kernel sizes 1×1–7×7 via the
+//! chain generator, pruning densities, time-step mixes, density-extreme
+//! frames (all-zero and fully saturated), and tile-edge clipping from the
+//! harness's deliberately small 8×6 hardware tile.
+//!
+//! Also pins the reuse-adjusted cycle model: on the paper-tiny network
+//! the analytic [`LatencyModel`] total must equal the executed cycle
+//! counters exactly, mining charge included, for one and several cores.
+
+mod harness;
+
+use scsnn::accel::latency::LatencyModel;
+use scsnn::backend::{BackendFrame, CycleSimBackend, FrameOptions, SnnBackend};
+use scsnn::cluster::ChipCluster;
+use scsnn::config::{AccelConfig, ClusterConfig, Datapath, ShardPolicy};
+use scsnn::coordinator::engine::{EngineConfig, StreamingEngine};
+use scsnn::coordinator::stage_exec::StageExecutor;
+use scsnn::tensor::Tensor;
+use std::sync::Arc;
+
+#[test]
+fn cyclesim_prosperity_conforms_to_golden() {
+    harness::backend_conformance("prosperity-cyclesim-conformance", |g, case| {
+        let cfg = harness::chain_config(1 + g.usize(0, 3)).with_datapath(Datapath::Prosperity);
+        Arc::new(CycleSimBackend::new(case.net.clone(), case.weights.clone(), cfg).unwrap())
+    });
+}
+
+#[test]
+fn cluster_prosperity_conforms_to_golden_across_policies() {
+    harness::backend_conformance("prosperity-cluster-conformance", |g, case| {
+        let chips = 1 + g.usize(0, 3);
+        let policy = ShardPolicy::all()[g.usize(0, 3)];
+        let chip =
+            harness::chain_config(1 + g.usize(0, 2)).with_datapath(Datapath::Prosperity);
+        let cc = ClusterConfig { chip, ..ClusterConfig::single_chip() }
+            .with_chips(chips)
+            .with_policy(policy);
+        Arc::new(ChipCluster::new(case.net.clone(), case.weights.clone(), cc).unwrap())
+    });
+}
+
+#[test]
+fn stage_executor_prosperity_conforms_to_serial_and_golden() {
+    // The pipelined stage executor over Prosperity-datapath chips:
+    // outputs bit-identical to serial frame order and heads bit-exact
+    // with the golden model.
+    harness::conformance_cases("prosperity-stage-conformance", |g, case| {
+        let chips = 1 + g.usize(0, 3);
+        let policy = ShardPolicy::all()[g.usize(0, 3)];
+        let workers = 1 + g.usize(0, 4);
+        let in_flight = 1 + g.usize(0, 4);
+        let chip =
+            harness::chain_config(1 + g.usize(0, 2)).with_datapath(Datapath::Prosperity);
+        let cc = ClusterConfig { chip, ..ClusterConfig::single_chip() }
+            .with_chips(chips)
+            .with_policy(policy);
+        let cl =
+            Arc::new(ChipCluster::new(case.net.clone(), case.weights.clone(), cc).unwrap());
+        let opts = FrameOptions { collect_stats: true };
+        let serial: Vec<BackendFrame> =
+            case.images.iter().map(|i| cl.run_frame(i, &opts).unwrap()).collect();
+        let engine = StreamingEngine::new(
+            cl.clone(),
+            EngineConfig { workers, queue_depth: 4, batch: 1 },
+        );
+        let exec = StageExecutor::new(&cl);
+        let imgs: Vec<&Tensor<u8>> = case.images.iter().collect();
+        let run = exec.run(&engine, &imgs, &opts, in_flight).unwrap();
+        assert_eq!(
+            run.frames, serial,
+            "chips={chips} {policy:?} workers={workers} in_flight={in_flight}"
+        );
+        let want = harness::golden_frames(case, &opts);
+        for (got, w) in run.frames.iter().zip(&want) {
+            assert_eq!(got.head_acc.data, w.head_acc.data, "prosperity stage vs golden");
+        }
+    });
+}
+
+#[test]
+fn prosperity_cycle_model_matches_executed_counters_on_tiny_network() {
+    // Reuse-adjusted analytic model vs executed counters on the full
+    // paper-tiny network (covers the bit-serial encoding layer and the
+    // maxpool/time-step mix the per-layer unit tests don't).
+    let (net, w, ds) = harness::tiny_setup(1, 33);
+    let opts = FrameOptions { collect_stats: true };
+    for cores in [1usize, 2] {
+        let cfg = AccelConfig::paper().with_cores(cores).with_datapath(Datapath::Prosperity);
+        let be = CycleSimBackend::new(net.clone(), w.clone(), cfg.clone()).unwrap();
+        let frame = be.run_frame(&ds.samples[0].image, &opts).unwrap();
+        let executed: u64 = frame.layers.values().map(|o| o.cycles).sum();
+        let analytic = LatencyModel::new(cfg).network(&net, &w);
+        assert_eq!(
+            executed,
+            analytic.sparse_cycles(),
+            "cores={cores}: prosperity analytic model diverged from executed counters"
+        );
+        // Every mined nonempty plane has at least one representative, so
+        // the harvested counter must be live (whether any MACs replay
+        // depends on the frame's actual row overlap).
+        let patterns: u64 = frame.layers.values().map(|o| o.patterns_unique).sum();
+        assert!(patterns > 0, "tiny network mined no patterns");
+    }
+}
