@@ -1,0 +1,106 @@
+//! Open-loop tail-latency sweep: the detection pipeline under Poisson
+//! offered load below, at 2×, and at 8× its measured capacity, recorded
+//! to `BENCH_loadgen.json`.
+//!
+//! Closed-loop benches (`perf_throughput`) answer "how fast can it go";
+//! this bench answers the serving question: what total latency (queue
+//! wait + service) does a client see at a given offered rate. Capacity
+//! is estimated first from closed-loop per-frame service time; the
+//! sweep then replays seeded Poisson arrival schedules through
+//! `process_dataset_open_loop` and reports p50/p99 of the total-latency
+//! histogram next to the offered and achieved rates.
+//!
+//! Inline cross-check: p99 total latency must be monotonically
+//! non-decreasing in offered load (a queueing-theory invariant — more
+//! offered work can only deepen the backlog).
+
+use scsnn::coordinator::loadgen::ArrivalProcess;
+use scsnn::coordinator::pipeline::{DetectionPipeline, HwStatsMode};
+use scsnn::detect::dataset::Dataset;
+use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::weights::ModelWeights;
+use scsnn::util::json::Json;
+use scsnn::util::BenchRunner;
+use std::collections::BTreeMap;
+
+fn main() {
+    let r = BenchRunner::new("perf_loadgen");
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let mut w = ModelWeights::random(&net, 1.0, 150);
+    w.prune_fine_grained(0.8);
+    let mut p = DetectionPipeline::from_weights(net, w).unwrap();
+    p.hw_mode = HwStatsMode::Off;
+    p.workers = 2;
+    let requests = 12usize;
+    let ds = Dataset::synth(requests, p.net.input_w, p.net.input_h, 151);
+
+    // Closed-loop capacity estimate: mean service time over a short
+    // warmup, scaled by the worker count.
+    let warmup = 3usize;
+    let mut service_secs = 0.0f64;
+    for s in ds.samples.iter().take(warmup) {
+        service_secs += p.process_frame(&s.image).unwrap().wall.as_secs_f64();
+    }
+    let mean_service = (service_secs / warmup as f64).max(1e-6);
+    let capacity = p.workers as f64 / mean_service;
+    r.section(&format!(
+        "golden backend, {} workers: mean service {:.3} ms, capacity ≈ {capacity:.1} fps",
+        p.workers,
+        mean_service * 1e3
+    ));
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut prev_p99 = 0.0f64;
+    for (label, factor) in [("0.25x", 0.25f64), ("2x", 2.0), ("8x", 8.0)] {
+        let offered = (capacity * factor).max(1.0);
+        let process = ArrivalProcess::Poisson { rate_fps: offered };
+        let rep = p.process_dataset_open_loop(&ds, &process, 152).unwrap();
+        let p50 = rep.metrics.latency_pct(0.50).as_secs_f64() * 1e3;
+        let p99 = rep.metrics.latency_pct(0.99).as_secs_f64() * 1e3;
+        let queue_p99 = rep
+            .metrics
+            .queue_hist
+            .as_ref()
+            .and_then(|h| h.to_json().get("p99_ms").and_then(|v| v.as_f64()))
+            .unwrap_or(0.0);
+        r.report_row(&format!(
+            "{label:>5} capacity | offered {offered:>8.1} fps | achieved {:>8.1} fps | total p50 {p50:>8.2} ms | total p99 {p99:>8.2} ms | queue p99 {queue_p99:>8.2} ms",
+            rep.metrics.wall_fps(),
+        ));
+
+        // Queueing invariant: offered load only ever deepens the tail.
+        // 5% slack absorbs scheduler noise on loaded hosts.
+        assert!(
+            p99 >= prev_p99 * 0.95,
+            "{label}: p99 {p99:.2} ms fell below the lighter load's {prev_p99:.2} ms"
+        );
+        prev_p99 = prev_p99.max(p99);
+
+        let mut row = BTreeMap::new();
+        row.insert("load_factor".to_string(), Json::Num(factor));
+        row.insert("offered_fps".to_string(), Json::Num(offered));
+        row.insert("achieved_fps".to_string(), Json::Num(rep.metrics.wall_fps()));
+        row.insert("requests".to_string(), Json::Num(requests as f64));
+        row.insert("total_p50_ms".to_string(), Json::Num(p50));
+        row.insert("total_p99_ms".to_string(), Json::Num(p99));
+        row.insert("queue_p99_ms".to_string(), Json::Num(queue_p99));
+        rows.push(Json::Obj(row));
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("perf_loadgen".to_string()));
+    doc.insert(
+        "workload".to_string(),
+        Json::Str(format!(
+            "{requests} synthetic tiny frames, golden backend, 2 workers, seeded Poisson arrivals"
+        )),
+    );
+    doc.insert("capacity_fps".to_string(), Json::Num(capacity));
+    doc.insert("mean_service_ms".to_string(), Json::Num(mean_service * 1e3));
+    doc.insert("sweep".to_string(), Json::Arr(rows));
+    let json_path = "BENCH_loadgen.json";
+    match std::fs::write(json_path, Json::Obj(doc).to_string_compact()) {
+        Ok(()) => r.report_row(&format!("wrote {json_path}")),
+        Err(e) => r.report_row(&format!("could not write {json_path}: {e}")),
+    }
+}

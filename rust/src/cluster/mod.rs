@@ -76,10 +76,12 @@ use crate::model::topology::{ConvKind, ConvSpec, NetworkSpec};
 use crate::model::weights::ModelWeights;
 use crate::sparse::{bitmask::compress_kernel4, BitMaskKernel, SpikeMap};
 use crate::tensor::Tensor;
+use crate::trace::{TraceKind, TraceSink};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
 
 /// Cluster-level execution record of one frame.
 #[derive(Clone, Debug)]
@@ -168,6 +170,9 @@ pub struct ChipCluster {
     exec_stages: Vec<Vec<usize>>,
     /// Round-robin cursor for FrameParallel.
     next_chip: AtomicUsize,
+    /// Trace sink for lease waits, per-layer spans, and interconnect
+    /// transfer events; disabled by default (every record is a no-op).
+    trace: TraceSink,
 }
 
 impl ChipCluster {
@@ -222,7 +227,21 @@ impl ChipCluster {
             analytic,
             exec_stages,
             next_chip: AtomicUsize::new(0),
+            trace: TraceSink::disabled(),
         })
+    }
+
+    /// Record lease waits, per-layer spans, and interconnect transfer
+    /// events into `sink`. Must be called before the cluster is shared
+    /// (e.g. wrapped in an `Arc`); the default disabled sink keeps all
+    /// recording zero-cost.
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = sink;
+    }
+
+    /// The cluster's trace sink.
+    pub fn trace(&self) -> &TraceSink {
+        &self.trace
     }
 
     /// The cluster configuration.
@@ -298,7 +317,7 @@ impl ChipCluster {
     /// resumable walk state. Advance it with [`StageFrame::run_stage`],
     /// retire it with [`StageFrame::finish`].
     pub fn stage_frame(&self, index: usize, image: &Tensor<u8>) -> StageFrame<'_> {
-        let mut hooks = ShardHooks::new_leased(self, self.plan_for_frame(index));
+        let mut hooks = ShardHooks::new_leased(self, self.plan_for_frame(index), index);
         let first = hooks.first_chip();
         hooks.send(None, Some(first), pixel_frame_bits(image.c, image.h, image.w));
         StageFrame { index, hooks, state: WalkState::new(), next_stage: 0 }
@@ -336,7 +355,7 @@ impl ChipCluster {
             ShardPolicy::FrameParallel => self.next_chip.fetch_add(1, Ordering::Relaxed),
             _ => 0,
         };
-        self.run_sharded(image, opts, self.plan_for_frame(rr))
+        self.run_sharded(image, opts, self.plan_for_frame(rr), rr)
     }
 
     /// Chip owning tile `t` under TileSplit: tiles are dealt round-robin
@@ -507,8 +526,9 @@ impl ChipCluster {
         image: &Tensor<u8>,
         opts: &FrameOptions,
         plan: Plan,
+        frame: usize,
     ) -> Result<ClusterFrame> {
-        let mut hooks = ShardHooks::new(self, plan);
+        let mut hooks = ShardHooks::new(self, plan, frame);
         // Host frame upload to the first compute chip (TileSplit: the
         // whole frame lands on chip 0's DRAM; halo strips model the
         // cross-chip portion of the reads).
@@ -581,7 +601,7 @@ impl ChipCluster {
             // stays resident until the last stage drains.
             while admitted < n && live.len() < in_flight {
                 let img = images[admitted];
-                let mut hooks = ShardHooks::new(self, self.plan_for_frame(admitted));
+                let mut hooks = ShardHooks::new(self, self.plan_for_frame(admitted), admitted);
                 let first = hooks.first_chip();
                 hooks.send(None, Some(first), pixel_frame_bits(img.c, img.h, img.w));
                 let upload = hooks.transfer_cycles;
@@ -777,7 +797,11 @@ impl<'c> StageFrame<'c> {
             bail!("frame {}: all {} stages already ran", self.index, cl.exec_stages.len());
         }
         let unit = cl.stage_unit(self.index, s);
+        // Acquisition wait on the chip's serialized controller — the
+        // structural-hazard side of the pipeline, made visible.
+        let t_wait = cl.trace.now();
         let mut ctrl = lease.lock(unit);
+        cl.trace.span(TraceKind::LeaseWait { frame: self.index, stage: s, unit }, t_wait);
         let mut hooks = LeasedHooks { inner: &mut self.hooks, ctrl: &mut *ctrl };
         LayerWalk::new(&cl.net, &cl.weights, &cl.planes)
             .run_layers(
@@ -872,12 +896,17 @@ impl BackendFrame {
 struct ShardHooks<'c> {
     cl: &'c ChipCluster,
     plan: Plan,
+    /// Frame index the hooks account for (FrameParallel's serial path
+    /// labels with the round-robin ticket) — the trace coordinate.
+    frame: usize,
     controllers: Vec<SystemController>,
     ic: Interconnect,
     chip_cycles: Vec<u64>,
     compute_cycles: u64,
     transfer_cycles: u64,
     ev: FrameEvents,
+    /// Start timestamp of the layer currently walking (tracing only).
+    layer_t0: Option<Duration>,
     /// Which chip produced each layer's output.
     producer: BTreeMap<String, usize>,
     /// `(layer, chip)` pairs whose output is already resident on `chip`
@@ -886,9 +915,9 @@ struct ShardHooks<'c> {
 }
 
 impl<'c> ShardHooks<'c> {
-    fn new(cl: &'c ChipCluster, plan: Plan) -> ShardHooks<'c> {
+    fn new(cl: &'c ChipCluster, plan: Plan, frame: usize) -> ShardHooks<'c> {
         let controllers = cl.unit_controllers(matches!(&plan, Plan::TileSplit));
-        Self::with_controllers(cl, plan, controllers)
+        Self::with_controllers(cl, plan, frame, controllers)
     }
 
     /// Hooks for the leased stage-executor path: per-frame accounting
@@ -896,25 +925,28 @@ impl<'c> ShardHooks<'c> {
     /// [`LeasedHooks`], so building per-frame controllers here would be
     /// dead weight on the serving hot path. [`WalkHooks::controller`]
     /// must never be called on these hooks directly.
-    fn new_leased(cl: &'c ChipCluster, plan: Plan) -> ShardHooks<'c> {
-        Self::with_controllers(cl, plan, Vec::new())
+    fn new_leased(cl: &'c ChipCluster, plan: Plan, frame: usize) -> ShardHooks<'c> {
+        Self::with_controllers(cl, plan, frame, Vec::new())
     }
 
     fn with_controllers(
         cl: &'c ChipCluster,
         plan: Plan,
+        frame: usize,
         controllers: Vec<SystemController>,
     ) -> ShardHooks<'c> {
         let chips_n = cl.cfg.num_chips;
         ShardHooks {
             cl,
             plan,
+            frame,
             controllers,
             ic: Interconnect::new(LinkSpec::from_cluster(&cl.cfg), chips_n),
             chip_cycles: vec![0u64; chips_n],
             compute_cycles: 0,
             transfer_cycles: 0,
             ev: FrameEvents::default(),
+            layer_t0: None,
             producer: BTreeMap::new(),
             resident: BTreeSet::new(),
         }
@@ -946,7 +978,21 @@ impl<'c> ShardHooks<'c> {
 
     /// Record one transfer and charge its link occupancy to the frame.
     fn send(&mut self, src: Option<usize>, dst: Option<usize>, bits: u64) {
-        self.transfer_cycles += self.ic.send(src, dst, bits);
+        let index = self.ic.transfers().len();
+        let cycles = self.ic.send(src, dst, bits);
+        self.transfer_cycles += cycles;
+        // Zero-bit sends record nothing in the interconnect log, so the
+        // trace stream stays 1:1 with `ClusterRun::transfers`.
+        if bits > 0 && self.cl.trace.is_enabled() {
+            self.cl.trace.instant(TraceKind::Transfer {
+                frame: self.frame,
+                index,
+                src,
+                dst,
+                bits,
+                cycles,
+            });
+        }
     }
 
     /// Close out the frame: assemble the cluster accounting record.
@@ -982,6 +1028,11 @@ impl WalkHooks for ShardHooks<'_> {
             Plan::PerLayer(chip_of) => &mut self.controllers[chip_of[li]],
             Plan::TileSplit => &mut self.controllers[0],
         }
+    }
+
+    fn on_layer_start(&mut self, _li: usize, _spec: &ConvSpec) -> Result<()> {
+        self.layer_t0 = self.cl.trace.now();
+        Ok(())
     }
 
     fn route_input(
@@ -1055,6 +1106,10 @@ impl WalkHooks for ShardHooks<'_> {
                 self.send(Some(a), Some(b), bits);
             }
         }
+        self.cl.trace.span(
+            TraceKind::Layer { frame: self.frame, layer: li, unit: self.exec_chip(li) },
+            self.layer_t0.take(),
+        );
         Ok(())
     }
 }

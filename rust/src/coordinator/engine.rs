@@ -49,6 +49,7 @@
 
 use crate::backend::{BackendFrame, FrameOptions, SnnBackend};
 use crate::tensor::Tensor;
+use crate::trace::{TraceKind, TraceSink};
 use anyhow::{anyhow, Result};
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -77,6 +78,23 @@ pub struct PoolSample {
     pub queue_depth: usize,
 }
 
+/// Per-stage wait-vs-busy load of one stage-graph run: how much of the
+/// run a stage spent computing, and how starved frames were waiting for
+/// it. The two together replace a bare occupancy number — a stage can
+/// be modestly busy yet still the bottleneck because every frame queues
+/// on it.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageLoad {
+    /// Fraction of the run wall time the stage spent busy, normalized
+    /// by the execution units that ran it (multi-chip whole-frame
+    /// stages still read as a fraction).
+    pub busy_frac: f64,
+    /// Fraction of a frame's resident lifetime spent *ready but
+    /// waiting* for this stage (unit occupied or no worker free),
+    /// averaged over frames: total wait / (wall × frames).
+    pub wait_frac: f64,
+}
+
 /// Wall-clock statistics of one stage-graph run
 /// ([`StreamingEngine::stream_stages`]): the measured counterpart of the
 /// cluster's analytic pipeline timing.
@@ -89,6 +107,10 @@ pub struct StageStreamStats {
     /// Total busy time per stage, summed across every execution unit
     /// that ran the stage's jobs.
     pub stage_busy: Vec<Duration>,
+    /// Total time frames spent ready for a stage but not running it
+    /// (its unit occupied, or no worker free), summed across frames —
+    /// the starvation side of the busy/wait breakdown.
+    pub stage_wait: Vec<Duration>,
     /// Distinct execution units that ran each stage (a LayerPipeline
     /// stage is one chip; FrameParallel's single whole-frame stage
     /// spreads across all chips).
@@ -128,6 +150,46 @@ impl StageStreamStats {
             .zip(&self.stage_units)
             .map(|(b, &u)| b.as_secs_f64() / wall / u.max(1) as f64)
             .collect()
+    }
+
+    /// Wait-vs-busy breakdown per stage: busy is [`Self::
+    /// stage_occupancy`]; wait is each stage's summed ready-but-waiting
+    /// time as a fraction of total frame residency (wall × frames).
+    pub fn stage_breakdown(&self) -> Vec<StageLoad> {
+        let wall = self.wall.as_secs_f64().max(f64::EPSILON);
+        let frames = self.frame_done.len().max(1) as f64;
+        self.stage_occupancy()
+            .into_iter()
+            .zip(&self.stage_wait)
+            .map(|(busy_frac, w)| StageLoad {
+                busy_frac,
+                wait_frac: w.as_secs_f64() / wall / frames,
+            })
+            .collect()
+    }
+
+    /// The stage frames starve on: argmax of wait fraction (falling
+    /// back to busy fraction when nothing measurably waited — a
+    /// perfectly balanced or single-frame run). `None` only when the
+    /// run had no stages.
+    pub fn bottleneck_stage(&self) -> Option<usize> {
+        let breakdown = self.stage_breakdown();
+        if breakdown.is_empty() {
+            return None;
+        }
+        let by_wait = breakdown.iter().any(|s| s.wait_frac > 0.0);
+        let mut best = 0usize;
+        for (i, s) in breakdown.iter().enumerate() {
+            let (cur, prev) = if by_wait {
+                (s.wait_frac, breakdown[best].wait_frac)
+            } else {
+                (s.busy_frac, breakdown[best].busy_frac)
+            };
+            if cur > prev {
+                best = i;
+            }
+        }
+        Some(best)
     }
 }
 
@@ -178,6 +240,9 @@ pub struct StreamingEngine {
     /// order (grow decisions from the coordinator, shrink decisions from
     /// the retiring workers).
     timeline: Mutex<Vec<PoolSample>>,
+    /// Trace sink job spans are recorded into; the default disabled
+    /// sink makes every record a no-op (see [`Self::with_trace`]).
+    trace: TraceSink,
 }
 
 impl StreamingEngine {
@@ -191,7 +256,22 @@ impl StreamingEngine {
             peak_workers: AtomicUsize::new(0),
             shrink_events: AtomicUsize::new(0),
             timeline: Mutex::new(Vec::new()),
+            trace: TraceSink::disabled(),
         }
+    }
+
+    /// Record job spans into `sink`: whole-frame work items as
+    /// `engine.job`, stage jobs as `stage.job`. A disabled sink (the
+    /// default) keeps every record a no-op on the hot path.
+    pub fn with_trace(mut self, sink: TraceSink) -> StreamingEngine {
+        self.trace = sink;
+        self
+    }
+
+    /// The engine's trace sink (disabled unless [`Self::with_trace`]
+    /// installed one).
+    pub fn trace(&self) -> &TraceSink {
+        &self.trace
     }
 
     /// Enable dynamic scaling: the pool floats between
@@ -281,8 +361,11 @@ impl StreamingEngine {
             self.peak_workers.store(1, Ordering::Relaxed);
             for i in 0..n {
                 let t0 = Instant::now();
+                let ts = self.trace.now();
                 let out = work(i)?;
-                fold(i, out, t0.elapsed())?;
+                let wall = t0.elapsed();
+                self.trace.span(TraceKind::EngineJob { frame: i }, ts);
+                fold(i, out, wall)?;
             }
             return Ok(());
         }
@@ -309,6 +392,7 @@ impl StreamingEngine {
                 let done = &done;
                 let shrinks = &self.shrink_events;
                 let timeline = &self.timeline;
+                let trace = self.trace.clone();
                 s.spawn(move || loop {
                     // Parked above the current pool size: wait for a grow
                     // decision (or the end of the run) without competing
@@ -354,8 +438,11 @@ impl StreamingEngine {
                         }
                     };
                     let t0 = Instant::now();
+                    let ts = trace.now();
                     let out = work(idx);
-                    if res_tx.send((idx, out, t0.elapsed())).is_err() {
+                    let wall = t0.elapsed();
+                    trace.span(TraceKind::EngineJob { frame: idx }, ts);
+                    if res_tx.send((idx, out, wall)).is_err() {
                         break; // coordinator aborted
                     }
                 });
@@ -533,6 +620,7 @@ impl StreamingEngine {
         let mut stats = StageStreamStats {
             frame_done: vec![Duration::ZERO; n],
             stage_busy: vec![Duration::ZERO; stages],
+            stage_wait: vec![Duration::ZERO; stages],
             stage_units: vec![0usize; stages],
             wall: Duration::ZERO,
             workers,
@@ -548,12 +636,18 @@ impl StreamingEngine {
             // retire (and fold) in frame order by construction.
             let mut slots: Vec<Option<P>> = (0..n).map(|_| None).collect();
             let mut stage_of = vec![0usize; n];
+            // When each frame became ready for its next stage — the
+            // wait side of the busy/wait breakdown (inline execution
+            // still waits: the coordinator is busy running other
+            // frames' stages).
+            let mut ready_at = vec![Duration::ZERO; n];
             let mut admitted = 0usize;
             let mut retired = 0usize;
             let mut live = 0usize;
             while retired < n {
                 while admitted < n && live < in_flight {
                     slots[admitted] = Some(init(admitted)?);
+                    ready_at[admitted] = start.elapsed();
                     live += 1;
                     admitted += 1;
                 }
@@ -562,15 +656,23 @@ impl StreamingEngine {
                     .expect("a resident frame always has a runnable stage");
                 let s = stage_of[f];
                 let mut payload = slots[f].take().expect("checked above");
-                unit_sets[s].insert(unit_of(f, s));
-                let t0 = Instant::now();
+                let unit = unit_of(f, s);
+                unit_sets[s].insert(unit);
+                let started = start.elapsed();
+                stats.stage_wait[s] += started.saturating_sub(ready_at[f]);
                 work(f, s, &mut payload)?;
-                stats.stage_busy[s] += t0.elapsed();
+                let finished = start.elapsed();
+                stats.stage_busy[s] += finished.saturating_sub(started);
+                self.trace.span_at(
+                    TraceKind::StageJob { frame: f, stage: s, unit },
+                    started,
+                    finished,
+                );
+                ready_at[f] = finished;
                 stage_of[f] = s + 1;
                 if s + 1 == stages {
-                    let at = start.elapsed();
-                    stats.frame_done[f] = at;
-                    fold(f, payload, at)?;
+                    stats.frame_done[f] = finished;
+                    fold(f, payload, finished)?;
                     live -= 1;
                     retired += 1;
                 } else {
@@ -592,11 +694,12 @@ impl StreamingEngine {
         }
 
         // Jobs travel in unit-batches: every job inside one channel
-        // message targets the same execution unit, which stays claimed
-        // until the whole batch retires (see `with_stage_batch`; the
-        // default batch of 1 reproduces per-job dispatch exactly).
+        // message targets the same execution unit (carried alongside so
+        // workers can label trace spans without `unit_of`), which stays
+        // claimed until the whole batch retires (see `with_stage_batch`;
+        // the default batch of 1 reproduces per-job dispatch exactly).
         let stage_batch = self.stage_batch.max(1);
-        let (job_tx, job_rx) = mpsc::sync_channel::<Vec<(usize, usize, P)>>(workers);
+        let (job_tx, job_rx) = mpsc::sync_channel::<(usize, Vec<(usize, usize, P)>)>(workers);
         let job_rx = Mutex::new(job_rx);
         // Results unbounded so workers never block on delivery; the
         // dispatcher only releases jobs whose dependencies are met, so
@@ -608,8 +711,9 @@ impl StreamingEngine {
                 let job_rx = &job_rx;
                 let res_tx = res_tx.clone();
                 let work = &work;
+                let trace = self.trace.clone();
                 s.spawn(move || loop {
-                    let batch = {
+                    let (unit, batch) = {
                         let rx = job_rx.lock().expect("stage job queue lock");
                         match rx.recv() {
                             Ok(j) => j,
@@ -638,6 +742,7 @@ impl StreamingEngine {
                             ))
                         });
                         let finished = start.elapsed();
+                        trace.span_at(TraceKind::StageJob { frame, stage, unit }, started, finished);
                         let failed = result.is_err();
                         dones.push(StageDone { frame, stage, payload, result, started, finished });
                         if failed {
@@ -661,6 +766,10 @@ impl StreamingEngine {
             let mut stage_of = vec![0usize; n];
             let mut unit_busy: BTreeSet<usize> = BTreeSet::new();
             let mut pending: BTreeMap<usize, (P, Duration)> = BTreeMap::new();
+            // When each frame became ready for its next stage (admission
+            // or previous stage's completion): a job's wait is its start
+            // minus this, attributed to the stage it waited for.
+            let mut ready_at = vec![Duration::ZERO; n];
             let mut next_fold = 0usize;
             let mut admitted = 0usize;
             let mut live = 0usize;
@@ -673,6 +782,7 @@ impl StreamingEngine {
                 loop {
                     while admitted < n && live < in_flight {
                         slots[admitted] = Some(init(admitted)?);
+                        ready_at[admitted] = start.elapsed();
                         live += 1;
                         admitted += 1;
                     }
@@ -712,7 +822,7 @@ impl StreamingEngine {
                         }
                         jobs_in_flight += 1;
                         job_tx
-                            .send(batch)
+                            .send((unit, batch))
                             .map_err(|_| anyhow!("stage worker pool exited early"))?;
                     }
                     if jobs_in_flight == 0 {
@@ -731,6 +841,9 @@ impl StreamingEngine {
                     for done in dones {
                         stats.stage_busy[done.stage] +=
                             done.finished.saturating_sub(done.started);
+                        stats.stage_wait[done.stage] +=
+                            done.started.saturating_sub(ready_at[done.frame]);
+                        ready_at[done.frame] = done.finished;
                         done.result?;
                         stage_of[done.frame] = done.stage + 1;
                         if done.stage + 1 == stages {
@@ -1035,6 +1148,94 @@ mod tests {
         assert!(stats.wall > Duration::ZERO);
         assert!(stats.measured_interval(3) > Duration::ZERO);
         assert!(stats.stage_occupancy().iter().all(|&o| o > 0.0));
+        // The wait-vs-busy breakdown exists for every stage and names a
+        // bottleneck; with 6 frames × 2 ms jobs contending for 3
+        // exclusive units, some frame measurably waited.
+        assert_eq!(stats.stage_wait.len(), stages);
+        let breakdown = stats.stage_breakdown();
+        assert_eq!(breakdown.len(), stages);
+        assert!(breakdown.iter().all(|s| s.busy_frac > 0.0 && s.wait_frac >= 0.0));
+        assert!(stats.bottleneck_stage().is_some());
+    }
+
+    #[test]
+    fn bottleneck_prefers_waited_on_stage() {
+        let mk = |busy: &[u64], wait: &[u64]| StageStreamStats {
+            frame_done: vec![Duration::from_millis(10); 4],
+            stage_busy: busy.iter().map(|&b| Duration::from_millis(b)).collect(),
+            stage_wait: wait.iter().map(|&w| Duration::from_millis(w)).collect(),
+            stage_units: vec![1; busy.len()],
+            wall: Duration::from_millis(10),
+            workers: 2,
+        };
+        // Stage 1 is moderately busy but heavily waited on.
+        assert_eq!(mk(&[8, 5, 2], &[0, 12, 1]).bottleneck_stage(), Some(1));
+        // Nothing waited: fall back to the busiest stage.
+        assert_eq!(mk(&[3, 9, 2], &[0, 0, 0]).bottleneck_stage(), Some(1));
+        // No stages at all.
+        assert_eq!(mk(&[], &[]).bottleneck_stage(), None);
+    }
+
+    #[test]
+    fn traced_runs_record_job_spans_with_identical_counts_across_workers() {
+        use crate::trace::TraceKind;
+        let imgs = frames(&[0, 1, 2, 3, 4, 5]);
+        let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+        let be = Arc::new(MockBackend { parallel: true });
+        let mut keys_by_workers = Vec::new();
+        for workers in [1usize, 4] {
+            let sink = TraceSink::enabled();
+            let engine = StreamingEngine::new(
+                be.clone(),
+                EngineConfig { workers, queue_depth: 4, batch: 1 },
+            )
+            .with_trace(sink.clone());
+            engine.run_frames(&refs, FrameOptions::default()).unwrap();
+            let events = sink.events();
+            assert_eq!(events.len(), refs.len(), "one engine.job span per frame");
+            assert!(events.iter().all(|e| matches!(e.kind, TraceKind::EngineJob { .. })));
+            keys_by_workers.push(events.iter().map(|e| e.kind.sort_key()).collect::<Vec<_>>());
+        }
+        assert_eq!(keys_by_workers[0], keys_by_workers[1]);
+    }
+
+    #[test]
+    fn traced_stage_runs_record_one_span_per_stage_job() {
+        for workers in [1usize, 4] {
+            let sink = TraceSink::enabled();
+            let engine = StreamingEngine::new(
+                Arc::new(MockBackend { parallel: workers > 1 }),
+                EngineConfig { workers, queue_depth: 4, batch: 1 },
+            )
+            .with_trace(sink.clone());
+            let (n, stages) = (5usize, 3usize);
+            engine
+                .stream_stages(
+                    n,
+                    stages,
+                    3,
+                    |_f, s| s,
+                    |f| Ok(f),
+                    |_f, _s, _p: &mut usize| {
+                        std::thread::sleep(Duration::from_millis(1));
+                        Ok(())
+                    },
+                    |_f, _p, _| Ok(()),
+                )
+                .unwrap();
+            let events = sink.events();
+            assert_eq!(events.len(), n * stages, "workers={workers}");
+            let mut expected = Vec::new();
+            for f in 0..n {
+                for s in 0..stages {
+                    expected.push(TraceKind::StageJob { frame: f, stage: s, unit: s }.sort_key());
+                }
+            }
+            let mut got: Vec<_> = events.iter().map(|e| e.kind.sort_key()).collect();
+            got.sort();
+            expected.sort();
+            assert_eq!(got, expected, "workers={workers}");
+        }
     }
 
     #[test]

@@ -1,0 +1,436 @@
+//! Open-loop load harness: arrival processes driven through the
+//! [`StreamingEngine`] with per-request tail-latency accounting.
+//!
+//! Closed-loop measurement (issue the next frame when the previous one
+//! retires) hides queueing delay entirely: the system is never offered
+//! more work than it can absorb, so the latency distribution collapses
+//! to pure service time. Serving systems are instead characterized
+//! **open-loop** — requests arrive on their own clock, whether or not
+//! the server is ready — and the interesting metric is the *total*
+//! latency (queue wait + service) tail as the offered load approaches
+//! capacity.
+//!
+//! [`ArrivalProcess`] generates deterministic arrival schedules from the
+//! crate PRNG ([`Rng`]): Poisson (exponential inter-arrival gaps, the
+//! classic open-loop model) or bursty (groups of `burst` simultaneous
+//! arrivals with exponential gaps between groups, stressing queue
+//! depth). [`LoadGenerator`] replays a schedule through
+//! [`StreamingEngine::stream_ordered`]: each request's work closure
+//! holds the job until its arrival instant, then serves it, and the
+//! fold records three [`LatencyHistogram`]s — `queue` (arrival → service
+//! start), `service` (service start → done), `total` (arrival → done) —
+//! plus `request.queued` / `request.service` trace spans when the
+//! engine's [`TraceSink`] is enabled.
+//!
+//! The harness is open-loop *up to the engine's admission window*: the
+//! bounded job queue means at most `max(queue_depth, workers)` requests
+//! are in flight, and later requests wait **unadmitted** — but their
+//! arrival timestamps are fixed up front, so queue wait accrued before
+//! admission still counts against them. That is exactly the backlog a
+//! saturated server accumulates, and it is why p99 total latency grows
+//! without bound past capacity. Run the engine with a **fixed** pool
+//! (no [`StreamingEngine::with_max_workers`] ceiling): a worker
+//! sleeping until an arrival is indistinguishable from a busy one to
+//! the scaler, so a dynamic pool would grow on idle waiting.
+//!
+//! [`Rng`]: crate::util::Rng
+
+use crate::coordinator::engine::StreamingEngine;
+use crate::trace::histogram::LatencyHistogram;
+use crate::trace::TraceKind;
+use crate::util::json::Json;
+use crate::util::Rng;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// When requests arrive, relative to the start of the run.
+///
+/// Both processes are parameterized by a long-run offered rate in
+/// frames per second and draw from the caller's [`Rng`], so a schedule
+/// is a pure function of `(process, seed, n)` — reruns see identical
+/// arrival instants.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals: independent exponential inter-arrival gaps
+    /// with mean `1 / rate_fps`.
+    Poisson {
+        /// Long-run offered load, frames per second.
+        rate_fps: f64,
+    },
+    /// Clustered arrivals: groups of `burst` requests land at one
+    /// instant, with exponential gaps of mean `burst / rate_fps`
+    /// between groups — same long-run rate as Poisson, far harsher on
+    /// queue depth.
+    Bursty {
+        /// Long-run offered load, frames per second.
+        rate_fps: f64,
+        /// Requests per burst (≥ 1).
+        burst: usize,
+    },
+}
+
+impl ArrivalProcess {
+    /// Parse a CLI spec: `poisson:RATE` or `bursty:RATE:BURST`
+    /// (e.g. `poisson:200`, `bursty:120:8`).
+    pub fn parse(spec: &str) -> Result<ArrivalProcess> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let rate = |s: &str| -> Result<f64> {
+            let r: f64 = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad arrival rate {s:?} in {spec:?}"))?;
+            if !r.is_finite() || r <= 0.0 {
+                bail!("arrival rate must be positive, got {s:?} in {spec:?}");
+            }
+            Ok(r)
+        };
+        match parts.as_slice() {
+            ["poisson", r] => Ok(ArrivalProcess::Poisson { rate_fps: rate(r)? }),
+            ["bursty", r, b] => {
+                let burst: usize = b
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad burst size {b:?} in {spec:?}"))?;
+                if burst == 0 {
+                    bail!("burst size must be >= 1 in {spec:?}");
+                }
+                Ok(ArrivalProcess::Bursty { rate_fps: rate(r)?, burst })
+            }
+            _ => bail!("bad arrival spec {spec:?}: expected poisson:RATE or bursty:RATE:BURST"),
+        }
+    }
+
+    /// The long-run offered load in frames per second.
+    pub fn rate_fps(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate_fps } => rate_fps,
+            ArrivalProcess::Bursty { rate_fps, .. } => rate_fps,
+        }
+    }
+
+    /// Generate `n` arrival instants (offsets from run start),
+    /// non-decreasing, deterministic in the PRNG state.
+    pub fn arrivals(&self, n: usize, rng: &mut Rng) -> Vec<Duration> {
+        // Exponential sample with the given mean: inverse-CDF on a
+        // uniform draw. `f64()` is in [0, 1), so `1 - u` is in (0, 1]
+        // and the log is finite.
+        let mut exp = |mean: f64| -> f64 { -(1.0 - rng.f64()).ln() * mean };
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            ArrivalProcess::Poisson { rate_fps } => {
+                let mut t = 0.0f64;
+                for _ in 0..n {
+                    t += exp(1.0 / rate_fps);
+                    out.push(Duration::from_secs_f64(t));
+                }
+            }
+            ArrivalProcess::Bursty { rate_fps, burst } => {
+                let mut t = 0.0f64;
+                for i in 0..n {
+                    if i % burst == 0 {
+                        t += exp(burst as f64 / rate_fps);
+                    }
+                    out.push(Duration::from_secs_f64(t));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Open-loop driver: replays an [`ArrivalProcess`] schedule through a
+/// [`StreamingEngine`] and aggregates per-request latency histograms.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadGenerator {
+    process: ArrivalProcess,
+    seed: u64,
+}
+
+impl LoadGenerator {
+    /// A generator for one arrival process; `seed` fixes the schedule.
+    pub fn new(process: ArrivalProcess, seed: u64) -> LoadGenerator {
+        LoadGenerator { process, seed }
+    }
+
+    /// The arrival process this generator replays.
+    pub fn process(&self) -> ArrivalProcess {
+        self.process
+    }
+
+    /// The arrival schedule this generator will replay for `n`
+    /// requests (pure in `(process, seed, n)`).
+    pub fn schedule(&self, n: usize) -> Vec<Duration> {
+        let mut rng = Rng::new(self.seed);
+        self.process.arrivals(n, &mut rng)
+    }
+
+    /// Run `n` requests open-loop on `engine`: request `i`'s `work`
+    /// runs no earlier than its arrival instant, results fold in
+    /// request order together with the request's **total** latency
+    /// (arrival → done), and the returned stats hold queue/service/
+    /// total latency histograms. When the engine's trace sink is
+    /// enabled, each request contributes one `request.queued` and one
+    /// `request.service` span.
+    pub fn run<T, W, F>(
+        &self,
+        engine: &StreamingEngine,
+        n: usize,
+        work: W,
+        mut fold: F,
+    ) -> Result<LoadRunStats>
+    where
+        T: Send,
+        W: Fn(usize) -> Result<T> + Sync,
+        F: FnMut(usize, T, Duration) -> Result<()>,
+    {
+        let arrivals = self.schedule(n);
+        let mut stats = LoadRunStats::new(self.process.rate_fps());
+        let t0 = Instant::now();
+        // Trace timestamps are offsets from the sink epoch; `base` maps
+        // this run's t0 into that clock (zero when tracing is off — the
+        // spans below are no-ops then anyway).
+        let base = engine.trace().now().unwrap_or(Duration::ZERO);
+        let stamps: Mutex<Vec<(Duration, Duration)>> =
+            Mutex::new(vec![(Duration::ZERO, Duration::ZERO); n]);
+        let trace = engine.trace().clone();
+        engine.stream_ordered(
+            n,
+            |i| {
+                // Open-loop admission: hold the request until its
+                // arrival instant. Under overload the arrival is
+                // already past and the job starts immediately — the
+                // elapsed backlog shows up as queue wait.
+                let due = arrivals[i];
+                loop {
+                    let now = t0.elapsed();
+                    if now >= due {
+                        break;
+                    }
+                    std::thread::sleep(due - now);
+                }
+                let svc_start = t0.elapsed();
+                let out = work(i)?;
+                let svc_end = t0.elapsed();
+                stamps.lock().expect("stamp lock")[i] = (svc_start, svc_end);
+                Ok(out)
+            },
+            |i, out, _wall| {
+                let (svc_start, svc_end) = stamps.lock().expect("stamp lock")[i];
+                let arrival = arrivals[i];
+                let total = svc_end.saturating_sub(arrival);
+                stats.queue.observe(svc_start.saturating_sub(arrival));
+                stats.service.observe(svc_end.saturating_sub(svc_start));
+                stats.total.observe(total);
+                trace.span_at(
+                    TraceKind::RequestQueued { request: i },
+                    base + arrival,
+                    base + svc_start,
+                );
+                trace.span_at(
+                    TraceKind::RequestService { request: i },
+                    base + svc_start,
+                    base + svc_end,
+                );
+                fold(i, out, total)
+            },
+        )?;
+        stats.wall = t0.elapsed();
+        stats.requests = n;
+        Ok(stats)
+    }
+}
+
+/// Aggregate result of one open-loop run: three latency histograms and
+/// the run envelope.
+#[derive(Clone, Debug)]
+pub struct LoadRunStats {
+    /// Arrival → service start (admission + backlog wait).
+    pub queue: LatencyHistogram,
+    /// Service start → done (pure service time).
+    pub service: LatencyHistogram,
+    /// Arrival → done (what a client observes).
+    pub total: LatencyHistogram,
+    /// Long-run offered load of the arrival process, frames/second.
+    pub offered_fps: f64,
+    /// Wall-clock span of the whole run (first arrival scheduled at
+    /// run start; includes drain).
+    pub wall: Duration,
+    /// Requests completed.
+    pub requests: usize,
+}
+
+impl LoadRunStats {
+    fn new(offered_fps: f64) -> LoadRunStats {
+        LoadRunStats {
+            queue: LatencyHistogram::default(),
+            service: LatencyHistogram::default(),
+            total: LatencyHistogram::default(),
+            offered_fps,
+            wall: Duration::ZERO,
+            requests: 0,
+        }
+    }
+
+    /// Throughput actually achieved over the run's wall span.
+    pub fn achieved_fps(&self) -> f64 {
+        let w = self.wall.as_secs_f64();
+        if w <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / w
+        }
+    }
+
+    /// JSON summary: offered/achieved rates plus the three histograms'
+    /// count/mean/percentile digests.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("offered_fps".into(), Json::Num(self.offered_fps));
+        o.insert("achieved_fps".into(), Json::Num(self.achieved_fps()));
+        o.insert("requests".into(), Json::Num(self.requests as f64));
+        o.insert("wall_ms".into(), Json::Num(self.wall.as_secs_f64() * 1e3));
+        o.insert("queue_ms".into(), self.queue.to_json());
+        o.insert("service_ms".into(), self.service.to_json());
+        o.insert("total_ms".into(), self.total.to_json());
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{BackendCaps, BackendFrame, FrameOptions, SnnBackend};
+    use crate::coordinator::engine::EngineConfig;
+    use crate::tensor::Tensor;
+    use crate::trace::TraceSink;
+    use std::sync::Arc;
+
+    struct SleepBackend;
+
+    impl SnnBackend for SleepBackend {
+        fn name(&self) -> &'static str {
+            "sleep"
+        }
+
+        fn caps(&self) -> BackendCaps {
+            BackendCaps { parallel: true, reports_sparsity: false, reports_cycles: false }
+        }
+
+        fn run_frame(&self, image: &Tensor<u8>, _opts: &FrameOptions) -> Result<BackendFrame> {
+            std::thread::sleep(Duration::from_millis(1));
+            let mut head = Tensor::zeros(image.c, image.h, image.w);
+            for (o, &v) in head.data.iter_mut().zip(&image.data) {
+                *o = v as i32;
+            }
+            Ok(BackendFrame { head_acc: head, layers: std::collections::BTreeMap::new() })
+        }
+    }
+
+    fn engine(workers: usize) -> StreamingEngine {
+        StreamingEngine::new(
+            Arc::new(SleepBackend),
+            EngineConfig { workers, queue_depth: 2, batch: 1 },
+        )
+    }
+
+    #[test]
+    fn parse_accepts_both_processes_and_rejects_garbage() {
+        assert_eq!(
+            ArrivalProcess::parse("poisson:200").unwrap(),
+            ArrivalProcess::Poisson { rate_fps: 200.0 }
+        );
+        assert_eq!(
+            ArrivalProcess::parse("bursty:120:8").unwrap(),
+            ArrivalProcess::Bursty { rate_fps: 120.0, burst: 8 }
+        );
+        for bad in ["", "poisson", "poisson:-5", "poisson:0", "bursty:10", "bursty:10:0", "uniform:3"] {
+            assert!(ArrivalProcess::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_are_deterministic_monotone_and_rate_scaled() {
+        let p = ArrivalProcess::Poisson { rate_fps: 1000.0 };
+        let a = p.arrivals(500, &mut Rng::new(7));
+        let b = p.arrivals(500, &mut Rng::new(7));
+        assert_eq!(a, b, "same seed must give the same schedule");
+        for w in a.windows(2) {
+            assert!(w[1] >= w[0], "arrivals must be non-decreasing");
+        }
+        // 500 arrivals at 1000 fps span ~0.5 s; allow wide slack (the
+        // bound is 4x either way, far beyond plausible sample noise).
+        let span = a.last().unwrap().as_secs_f64();
+        assert!(span > 0.125 && span < 2.0, "span {span} out of range for 500 @ 1000fps");
+    }
+
+    #[test]
+    fn bursty_arrivals_land_in_groups() {
+        let p = ArrivalProcess::Bursty { rate_fps: 100.0, burst: 4 };
+        let a = p.arrivals(8, &mut Rng::new(11));
+        for i in 1..4 {
+            assert_eq!(a[i], a[0], "first burst must share one instant");
+        }
+        for i in 5..8 {
+            assert_eq!(a[i], a[4], "second burst must share one instant");
+        }
+        assert!(a[4] >= a[0], "groups must not go backwards");
+    }
+
+    #[test]
+    fn open_loop_run_fills_histograms_and_folds_in_order() {
+        let eng = engine(2);
+        let img = Tensor::from_vec(1, 1, 2, vec![3u8, 4]);
+        let gen = LoadGenerator::new(ArrivalProcess::Poisson { rate_fps: 5000.0 }, 42);
+        let mut seen = Vec::new();
+        let stats = gen
+            .run(
+                &eng,
+                6,
+                |_i| eng.backend().run_frame(&img, &FrameOptions::default()),
+                |i, out, total| {
+                    assert_eq!(out.head_acc.data[0], 3);
+                    assert!(total >= Duration::from_micros(500), "total includes the 1 ms service");
+                    seen.push(i);
+                    Ok(())
+                },
+            )
+            .unwrap();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(stats.requests, 6);
+        assert_eq!(stats.queue.count(), 6);
+        assert_eq!(stats.service.count(), 6);
+        assert_eq!(stats.total.count(), 6);
+        // Service includes a 1 ms sleep, so the distribution cannot be
+        // all-zero; total >= service per request, so means order too.
+        assert!(stats.service.mean() >= Duration::from_micros(500));
+        assert!(stats.total.mean() >= stats.service.mean());
+        assert!(stats.achieved_fps() > 0.0);
+        let j = stats.to_json();
+        assert!(j.get("total_ms").and_then(|t| t.get("count")).is_some());
+    }
+
+    #[test]
+    fn traced_run_records_one_queued_and_one_service_span_per_request() {
+        let eng = engine(2).with_trace(TraceSink::enabled());
+        let img = Tensor::from_vec(1, 1, 2, vec![1u8, 2]);
+        let gen = LoadGenerator::new(ArrivalProcess::Bursty { rate_fps: 2000.0, burst: 3 }, 9);
+        gen.run(
+            &eng,
+            6,
+            |_i| eng.backend().run_frame(&img, &FrameOptions::default()),
+            |_i, _out, _total| Ok(()),
+        )
+        .unwrap();
+        let events = eng.trace().events();
+        let queued = events
+            .iter()
+            .filter(|e| matches!(e.kind, TraceKind::RequestQueued { .. }))
+            .count();
+        let service = events
+            .iter()
+            .filter(|e| matches!(e.kind, TraceKind::RequestService { .. }))
+            .count();
+        assert_eq!(queued, 6);
+        assert_eq!(service, 6);
+    }
+}

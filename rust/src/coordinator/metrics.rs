@@ -4,10 +4,12 @@
 use crate::accel::energy::{EnergyModel, FrameEvents, PowerReport};
 use crate::accel::latency::NetworkLatency;
 use crate::config::AccelConfig;
-use crate::coordinator::engine::PoolSample;
+use crate::coordinator::engine::{PoolSample, StageLoad};
 use crate::model::topology::{ConvKind, NetworkSpec};
 use crate::ref_impl::snn::ForwardResult;
+use crate::trace::histogram::LatencyHistogram;
 use crate::util::json::Json;
+use core::cell::OnceCell;
 use std::collections::BTreeMap;
 use std::time::Duration;
 
@@ -144,6 +146,13 @@ pub struct PipelineMetrics {
     pub frames: usize,
     /// Per-frame wall latencies.
     latencies: Vec<Duration>,
+    /// Lazily sorted copy of `latencies` for percentile queries;
+    /// invalidated on every `record`.
+    sorted: OnceCell<Vec<Duration>>,
+    /// True wall-clock span of the run (first admission → last
+    /// completion). Zero means "not recorded" and `wall_fps` falls back
+    /// to the serial latency sum.
+    pub wall_span: Duration,
     /// Total detections emitted.
     pub detections: usize,
     /// Last simulated hardware estimate.
@@ -160,10 +169,23 @@ pub struct PipelineMetrics {
     /// stage-executor run, in milliseconds (0 = the run was not
     /// stage-pipelined).
     pub wall_interval_ms: f64,
-    /// Per-stage busy fraction of a stage-executor run, normalized by
-    /// the execution units that ran each stage (empty = not
-    /// stage-pipelined).
-    pub stage_occupancy: Vec<f64>,
+    /// Per-stage wait-vs-busy breakdown of a stage-executor run: busy
+    /// fraction normalized by the units that ran each stage, plus the
+    /// fraction of the run frames spent *ready but waiting* for that
+    /// stage (empty = not stage-pipelined).
+    pub stage_breakdown: Vec<StageLoad>,
+    /// The stage frames starve on: argmax of wait fraction across
+    /// `stage_breakdown` (`None` = not stage-pipelined). This is the
+    /// signal stage-aware dynamic scaling will consume.
+    pub bottleneck_stage: Option<usize>,
+    /// Queue-wait latency distribution under the open-loop load
+    /// harness (`None` = closed-loop run).
+    pub queue_hist: Option<LatencyHistogram>,
+    /// Service latency distribution under the open-loop load harness.
+    pub service_hist: Option<LatencyHistogram>,
+    /// Offered arrival rate of the open-loop run in frames/s (0 =
+    /// closed-loop).
+    pub offered_fps: f64,
     /// Worker-pool scaling time series of the run: pool size after each
     /// grow/shrink decision, with the queue backlog that triggered it
     /// (empty for fixed pools).
@@ -191,11 +213,19 @@ impl PipelineMetrics {
     pub fn record(&mut self, wall: Duration, detections: usize) {
         self.frames += 1;
         self.latencies.push(wall);
+        self.sorted = OnceCell::new();
         self.detections += detections;
     }
 
-    /// Wall-clock fps over the recorded frames.
+    /// Wall-clock fps over the recorded frames: frames divided by the
+    /// true run span when one was recorded. The latency-sum fallback
+    /// (correct only for serial runs, where latencies tile the wall)
+    /// covers callers that never set `wall_span`.
     pub fn wall_fps(&self) -> f64 {
+        let span = self.wall_span.as_secs_f64();
+        if span > 0.0 {
+            return self.frames as f64 / span;
+        }
         let total: f64 = self.latencies.iter().map(|d| d.as_secs_f64()).sum();
         if total == 0.0 {
             0.0
@@ -204,14 +234,20 @@ impl PipelineMetrics {
         }
     }
 
-    /// Latency percentile (0.0–1.0).
+    /// Latency percentile (0.0–1.0), nearest-rank on a once-sorted
+    /// cache — repeated percentile queries don't re-sort.
     pub fn latency_pct(&self, p: f64) -> Duration {
-        if self.latencies.is_empty() {
+        let n = self.latencies.len();
+        if n == 0 {
             return Duration::ZERO;
         }
-        let mut v = self.latencies.clone();
-        v.sort();
-        v[((v.len() - 1) as f64 * p) as usize]
+        let sorted = self.sorted.get_or_init(|| {
+            let mut v = self.latencies.clone();
+            v.sort();
+            v
+        });
+        let rank = ((p.clamp(0.0, 1.0) * n as f64).ceil() as usize).clamp(1, n);
+        sorted[rank - 1]
     }
 
     /// Render as a JSON report.
@@ -222,6 +258,10 @@ impl PipelineMetrics {
         m.insert(
             "latency_p50_ms".into(),
             Json::Num(self.latency_pct(0.5).as_secs_f64() * 1e3),
+        );
+        m.insert(
+            "latency_p95_ms".into(),
+            Json::Num(self.latency_pct(0.95).as_secs_f64() * 1e3),
         );
         m.insert(
             "latency_p99_ms".into(),
@@ -240,11 +280,33 @@ impl PipelineMetrics {
         if self.wall_interval_ms > 0.0 {
             m.insert("wall_interval_ms".into(), Json::Num(self.wall_interval_ms));
         }
-        if !self.stage_occupancy.is_empty() {
+        if !self.stage_breakdown.is_empty() {
             m.insert(
-                "stage_occupancy".into(),
-                Json::Arr(self.stage_occupancy.iter().map(|&o| Json::Num(o)).collect()),
+                "stage_breakdown".into(),
+                Json::Arr(
+                    self.stage_breakdown
+                        .iter()
+                        .map(|s| {
+                            let mut o = BTreeMap::new();
+                            o.insert("busy".to_string(), Json::Num(s.busy_frac));
+                            o.insert("wait".to_string(), Json::Num(s.wait_frac));
+                            Json::Obj(o)
+                        })
+                        .collect(),
+                ),
             );
+        }
+        if let Some(b) = self.bottleneck_stage {
+            m.insert("bottleneck_stage".into(), Json::Num(b as f64));
+        }
+        if self.offered_fps > 0.0 {
+            m.insert("offered_fps".into(), Json::Num(self.offered_fps));
+        }
+        if let Some(h) = &self.queue_hist {
+            m.insert("queue_ms".into(), h.to_json());
+        }
+        if let Some(h) = &self.service_hist {
+            m.insert("service_ms".into(), h.to_json());
         }
         if !self.pool_timeline.is_empty() {
             m.insert(
@@ -294,7 +356,25 @@ mod tests {
         assert_eq!(m.detections, 8);
         assert!(m.wall_fps() > 0.0);
         assert_eq!(m.latency_pct(0.0), Duration::from_millis(10));
+        assert_eq!(m.latency_pct(0.5), Duration::from_millis(20));
+        assert_eq!(m.latency_pct(1.0), Duration::from_millis(40));
         assert!(m.latency_pct(0.99) >= Duration::from_millis(30));
+        // The sorted cache invalidates on record.
+        m.record(Duration::from_millis(50), 0);
+        assert_eq!(m.latency_pct(1.0), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn wall_fps_uses_true_span_when_recorded() {
+        let mut m = PipelineMetrics::default();
+        // Four overlapping 100 ms frames on a 200 ms wall: the latency
+        // sum (400 ms) would claim 10 fps; the true span says 20.
+        for _ in 0..4 {
+            m.record(Duration::from_millis(100), 0);
+        }
+        assert!((m.wall_fps() - 10.0).abs() < 1e-9, "fallback path");
+        m.wall_span = Duration::from_millis(200);
+        assert!((m.wall_fps() - 20.0).abs() < 1e-9, "true-span path");
     }
 
     #[test]
@@ -302,13 +382,26 @@ mod tests {
         let mut m = PipelineMetrics::for_run("cluster", 2);
         m.record(Duration::from_millis(5), 1);
         let j = m.to_json().to_string_compact();
-        assert!(!j.contains("wall_interval_ms") && !j.contains("stage_occupancy"));
+        assert!(!j.contains("wall_interval_ms") && !j.contains("stage_breakdown"));
+        assert!(!j.contains("bottleneck_stage") && !j.contains("queue_ms"));
         m.wall_interval_ms = 12.5;
-        m.stage_occupancy = vec![0.9, 0.4];
+        m.stage_breakdown =
+            vec![StageLoad { busy_frac: 0.9, wait_frac: 0.0 }, StageLoad { busy_frac: 0.4, wait_frac: 0.3 }];
+        m.bottleneck_stage = Some(1);
         m.pool_timeline = vec![PoolSample { pool: 2, queue_depth: 3 }];
+        let mut qh = LatencyHistogram::new();
+        qh.observe(Duration::from_millis(3));
+        m.queue_hist = Some(qh);
+        m.offered_fps = 200.0;
         let parsed = Json::parse(&m.to_json().to_string_compact()).unwrap();
         assert_eq!(parsed.at(&["wall_interval_ms"]).unwrap().as_f64(), Some(12.5));
-        assert_eq!(parsed.at(&["stage_occupancy"]).unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(parsed.at(&["latency_p95_ms"]).unwrap().as_f64(), Some(5.0));
+        let sb = parsed.at(&["stage_breakdown"]).unwrap().as_arr().unwrap();
+        assert_eq!(sb.len(), 2);
+        assert_eq!(sb[1].at(&["wait"]).unwrap().as_f64(), Some(0.3));
+        assert_eq!(parsed.at(&["bottleneck_stage"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(parsed.at(&["offered_fps"]).unwrap().as_f64(), Some(200.0));
+        assert_eq!(parsed.at(&["queue_ms", "count"]).unwrap().as_f64(), Some(1.0));
         let tl = parsed.at(&["pool_timeline"]).unwrap().as_arr().unwrap();
         assert_eq!(tl[0].at(&["pool"]).unwrap().as_f64(), Some(2.0));
         assert_eq!(tl[0].at(&["queue_depth"]).unwrap().as_f64(), Some(3.0));

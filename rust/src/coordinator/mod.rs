@@ -12,16 +12,21 @@
 //! - [`pipeline`] — end-to-end frame pipeline over any
 //!   [`crate::backend::SnnBackend`]: inference, YOLO decode + NMS,
 //!   hardware metric estimation;
+//! - [`loadgen`] — open-loop load harness: Poisson/bursty arrival
+//!   processes driven through the engine with per-request
+//!   queue/service/total latency histograms;
 //! - [`metrics`] — throughput/latency/energy aggregation and reporting.
 
 pub mod engine;
+pub mod loadgen;
 pub mod metrics;
 pub mod pipeline;
 pub mod scheduler;
 pub mod stage_exec;
 pub mod tiler;
 
-pub use engine::{EngineConfig, PoolSample, StageStreamStats, StreamingEngine};
+pub use engine::{EngineConfig, PoolSample, StageLoad, StageStreamStats, StreamingEngine};
+pub use loadgen::{ArrivalProcess, LoadGenerator, LoadRunStats};
 pub use metrics::{FrameHwEstimate, PipelineMetrics};
 pub use pipeline::{DetectionPipeline, FrameResult, HwStatsMode, PipelineReport};
 pub use scheduler::{LayerPlan, LayerSchedule};

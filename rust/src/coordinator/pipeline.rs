@@ -25,6 +25,7 @@ use crate::backend::{
 use crate::cluster::ChipCluster;
 use crate::config::{AccelConfig, ClusterConfig, Datapath, ShardPolicy};
 use crate::coordinator::engine::{EngineConfig, StreamingEngine};
+use crate::coordinator::loadgen::{ArrivalProcess, LoadGenerator};
 use crate::coordinator::metrics::{FrameHwEstimate, PipelineMetrics};
 use crate::coordinator::stage_exec::{StageExecutor, StageServingRun};
 use crate::detect::dataset::Dataset;
@@ -37,6 +38,7 @@ use crate::model::weights::ModelWeights;
 use crate::ref_impl::{ForwardOptions, SnnForward};
 use crate::runtime::{try_load_executable, ArtifactPaths};
 use crate::tensor::Tensor;
+use crate::trace::TraceSink;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 use std::sync::Arc;
@@ -140,6 +142,13 @@ pub struct DetectionPipeline {
     /// backend is active — the stage executor needs `ChipCluster`'s
     /// stage partition and lease, which `dyn SnnBackend` cannot expose.
     cluster_backend: Option<Arc<ChipCluster>>,
+    /// Trace sink shared with every execution layer (engine workers,
+    /// stage jobs, cluster layer walks, interconnect transfers).
+    /// Disabled (zero-cost) by default; enable **before** selecting the
+    /// cluster backend so the sink is threaded into the cluster at
+    /// construction ([`ChipCluster::set_trace`] needs `&mut`, which an
+    /// `Arc`-wrapped cluster no longer grants).
+    pub trace: TraceSink,
 }
 
 impl DetectionPipeline {
@@ -210,6 +219,7 @@ impl DetectionPipeline {
             cluster: ClusterConfig::single_chip(),
             pipeline_depth: 0,
             cluster_backend: None,
+            trace: TraceSink::disabled(),
         }
     }
 
@@ -259,7 +269,9 @@ impl DetectionPipeline {
     fn build_cluster(&self) -> Result<ChipCluster> {
         let mut cc = self.cluster.clone();
         cc.chip = self.cfg.clone();
-        ChipCluster::new(self.net.clone(), self.weights.clone(), cc)
+        let mut cluster = ChipCluster::new(self.net.clone(), self.weights.clone(), cc)?;
+        cluster.set_trace(self.trace.clone());
+        Ok(cluster)
     }
 
     /// Set the simulated core count; rebuilds the cycle-sim or cluster
@@ -357,6 +369,7 @@ impl DetectionPipeline {
             },
         )
         .with_max_workers(self.max_workers)
+        .with_trace(self.trace.clone())
     }
 
     /// The concrete cluster when the cluster backend is active.
@@ -539,7 +552,9 @@ impl DetectionPipeline {
             }
             metrics.peak_workers = run.stats.workers;
             metrics.wall_interval_ms = run.wall_interval().as_secs_f64() * 1e3;
-            metrics.stage_occupancy = run.stage_occupancy();
+            metrics.wall_span = run.stats.wall;
+            metrics.stage_breakdown = run.stage_breakdown();
+            metrics.bottleneck_stage = run.bottleneck_stage();
             if let Some(first) = ds.samples.first() {
                 let (pu, mr) = self.reuse_counters(&first.image)?;
                 metrics.patterns_unique = pu;
@@ -555,6 +570,7 @@ impl DetectionPipeline {
             engine.effective_workers(ds.samples.len()),
         );
         let mut dets: Vec<(usize, Box2D)> = Vec::new();
+        let t0 = Instant::now();
         engine.stream_batched(
             images.len(),
             |i| Ok(self.detect_frame(images[i])?.0),
@@ -572,8 +588,61 @@ impl DetectionPipeline {
                 Ok(())
             },
         )?;
+        metrics.wall_span = t0.elapsed();
         metrics.peak_workers = engine.peak_workers();
         metrics.pool_timeline = engine.scaling_timeline();
+        if let Some(first) = ds.samples.first() {
+            let (pu, mr) = self.reuse_counters(&first.image)?;
+            metrics.patterns_unique = pu;
+            metrics.macs_reused = mr;
+        }
+        let gts = ds.ground_truth();
+        let summary = mean_ap(&dets, &gts, NUM_CLASSES, 0.5);
+        Ok(PipelineReport { metrics, map: summary.mean, ap: summary.ap })
+    }
+
+    /// Run the pipeline over a dataset **open-loop**: requests arrive on
+    /// the [`ArrivalProcess`] schedule (seeded, deterministic) whether or
+    /// not the engine is ready, and each frame's recorded latency is the
+    /// client-observed **total** (queue wait + service), not the bare
+    /// service time a closed-loop run measures. The report additionally
+    /// carries the queue/service latency histograms and the offered
+    /// rate. Hardware estimation runs once (first frame) on the
+    /// [`HwStatsMode`] != `Off` cadence, outside the timed path.
+    pub fn process_dataset_open_loop(
+        &self,
+        ds: &Dataset,
+        process: &ArrivalProcess,
+        seed: u64,
+    ) -> Result<PipelineReport> {
+        let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+        let engine = self.engine();
+        let mut metrics = PipelineMetrics::for_run(
+            self.backend.name(),
+            engine.effective_workers(images.len()),
+        );
+        let mut dets: Vec<(usize, Box2D)> = Vec::new();
+        let gen = LoadGenerator::new(*process, seed);
+        let stats = gen.run(
+            &engine,
+            images.len(),
+            |i| Ok(self.detect_frame(images[i])?.0),
+            |i, frame_dets, total| {
+                metrics.record(total, frame_dets.len());
+                dets.extend(frame_dets.iter().map(|d| (i, *d)));
+                Ok(())
+            },
+        )?;
+        if self.hw_mode != HwStatsMode::Off {
+            if let Some(first) = ds.samples.first() {
+                metrics.hw = Some(self.estimate_hw(&first.image)?);
+            }
+        }
+        metrics.peak_workers = engine.peak_workers();
+        metrics.wall_span = stats.wall;
+        metrics.offered_fps = stats.offered_fps;
+        metrics.queue_hist = Some(stats.queue.clone());
+        metrics.service_hist = Some(stats.service.clone());
         if let Some(first) = ds.samples.first() {
             let (pu, mr) = self.reuse_counters(&first.image)?;
             metrics.patterns_unique = pu;
@@ -762,6 +831,26 @@ mod tests {
         // The chosen backend actually serves frames.
         let ds = Dataset::synth(1, p.net.input_w, p.net.input_h, 19);
         assert!(p.process_frame(&ds.samples[0].image).is_ok());
+    }
+
+    #[test]
+    fn open_loop_report_carries_latency_histograms() {
+        let mut p = synthetic_pipeline();
+        p.hw_mode = HwStatsMode::Off;
+        p.workers = 2;
+        let ds = Dataset::synth(4, p.net.input_w, p.net.input_h, 31);
+        let rep = p
+            .process_dataset_open_loop(&ds, &ArrivalProcess::Poisson { rate_fps: 1000.0 }, 7)
+            .unwrap();
+        assert_eq!(rep.metrics.frames, 4);
+        assert_eq!(rep.metrics.offered_fps, 1000.0);
+        assert_eq!(rep.metrics.queue_hist.as_ref().unwrap().count(), 4);
+        assert_eq!(rep.metrics.service_hist.as_ref().unwrap().count(), 4);
+        assert!(rep.metrics.wall_span > Duration::ZERO);
+        // The JSON report surfaces the open-loop fields.
+        let j = rep.metrics.to_json();
+        assert!(j.get("offered_fps").is_some());
+        assert!(j.get("queue_ms").and_then(|q| q.get("p99_ms")).is_some());
     }
 
     #[test]

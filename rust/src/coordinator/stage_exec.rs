@@ -41,7 +41,7 @@
 
 use crate::backend::{BackendFrame, FrameOptions};
 use crate::cluster::{ChipCluster, ClusterRun, StageLease};
-use crate::coordinator::engine::{StageStreamStats, StreamingEngine};
+use crate::coordinator::engine::{StageLoad, StageStreamStats, StreamingEngine};
 use crate::tensor::Tensor;
 use anyhow::Result;
 use std::time::Duration;
@@ -147,5 +147,16 @@ impl StageServingRun {
     /// Per-stage busy fraction of the run.
     pub fn stage_occupancy(&self) -> Vec<f64> {
         self.stats.stage_occupancy()
+    }
+
+    /// Per-stage wait-vs-busy breakdown of the run (the telemetry that
+    /// replaces bare occupancy in `PipelineMetrics`).
+    pub fn stage_breakdown(&self) -> Vec<StageLoad> {
+        self.stats.stage_breakdown()
+    }
+
+    /// The stage frames starved on, if the partition has stages.
+    pub fn bottleneck_stage(&self) -> Option<usize> {
+        self.stats.bottleneck_stage()
     }
 }

@@ -37,7 +37,8 @@
 //! | [`detect`] | YOLOv2 decode, NMS, mAP, synthetic IVS-3cls dataset |
 //! | [`dse`] | design-space exploration: analytic sweep + cycle-verified Pareto frontier (`scsnn dse`) |
 //! | [`runtime`] | PJRT CPU client for `artifacts/*.hlo.txt` |
-//! | [`coordinator`] | block tiler, layer scheduler, streaming engine, frame pipeline, metrics |
+//! | [`coordinator`] | block tiler, layer scheduler, streaming engine, frame pipeline, open-loop loadgen, metrics |
+//! | [`trace`] | unified tracing/telemetry: typed spans, log-bucket latency histograms, Chrome-trace/JSONL export |
 
 pub mod accel;
 pub mod backend;
@@ -52,4 +53,5 @@ pub mod ref_impl;
 pub mod runtime;
 pub mod sparse;
 pub mod tensor;
+pub mod trace;
 pub mod util;

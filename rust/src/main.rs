@@ -3,6 +3,7 @@
 //! Subcommands:
 //!
 //! - `detect`      run the detection pipeline on a dataset (PJRT + simulator)
+//! - `trace`       synthetic traced run → Chrome trace JSON (chrome://tracing)
 //! - `simulate`    analytic hardware run: cycles, fps, power, area (Fig 16)
 //! - `parallelism` the §III-A design-space study (Fig 6)
 //! - `dram`        DRAM traffic per compression format (Fig 17, §IV-D)
@@ -19,6 +20,7 @@ use scsnn::backend::{BackendKind, CycleSimBackend, FrameOptions, SnnBackend};
 use scsnn::cluster::ChipCluster;
 use scsnn::config::{AccelConfig, ClusterConfig, Datapath, ShardPolicy};
 use scsnn::coordinator::engine::{EngineConfig, StreamingEngine};
+use scsnn::coordinator::loadgen::ArrivalProcess;
 use scsnn::coordinator::pipeline::{DetectionPipeline, HwStatsMode};
 use scsnn::coordinator::stage_exec::StageExecutor;
 use scsnn::detect::dataset::{write_ppm, Dataset};
@@ -29,15 +31,18 @@ use scsnn::ref_impl::{ForwardOptions, SnnForward};
 use scsnn::runtime::ArtifactPaths;
 use scsnn::sparse::stats::Format;
 use scsnn::tensor::Tensor;
+use scsnn::trace::export::{chrome_trace_json, to_jsonl};
+use scsnn::trace::TraceSink;
 use scsnn::util::json::Json;
 use scsnn::util::Args;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 fn main() {
     let args = Args::from_env();
     let result = match args.subcommand() {
         Some("detect") => cmd_detect(&args),
+        Some("trace") => cmd_trace(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("parallelism") => cmd_parallelism(&args),
         Some("dram") => cmd_dram(&args),
@@ -64,13 +69,15 @@ fn main() {
 fn print_usage() {
     println!(
         "scsnn — sparse compressed SNN accelerator (TCAS-I 2022 reproduction)\n\
-         usage: scsnn <detect|simulate|parallelism|dram|dse|timesteps|miout|report> [--options]\n\
+         usage: scsnn <detect|trace|simulate|parallelism|dram|dse|timesteps|miout|report> [--options]\n\
          common options: --artifacts DIR  --scale full|tiny  --seed N\n\
          dse options:     --max-points N  --verify N  --frames N  --out BENCH_dse.json\n\
          serving options: --backend golden|cyclesim|pjrt|cluster|auto  --workers N|MIN..MAX  --cores N  --batch N\n\
          datapath:        --datapath bitmask|prosperity  (product-sparsity PE path, bit-exact)\n\
          cluster options: --chips N  --shard-policy frame|pipeline|tile  --in-flight N  (--want-cycles with auto)\n\
-         stage serving:   --pipeline N  (wall-clock pipelined cluster serving, N frames in flight)"
+         stage serving:   --pipeline N  (wall-clock pipelined cluster serving, N frames in flight)\n\
+         observability:   --trace FILE.json (Chrome trace)  --trace-jsonl FILE.jsonl  --arrivals poisson:RATE|bursty:RATE:BURST\n\
+         trace options:   --out trace.json  --frames N  --chips N  --pipeline N  (synthetic traced run)"
     );
 }
 
@@ -146,8 +153,31 @@ fn cmd_detect(args: &Args) -> Result<()> {
         // `auto` keeps PJRT as a candidate unless --no-pjrt opts out.
         None => !args.has_flag("no-pjrt"),
     };
-    let mut pipeline = DetectionPipeline::from_artifacts(&dir, use_pjrt)?;
+    // Without built artifacts, fall back to synthetic pruned weights so
+    // detect (and the CI trace-smoke leg) runs in a bare checkout —
+    // except for an explicit PJRT request, which cannot be satisfied.
+    let mut pipeline = match DetectionPipeline::from_artifacts(&dir, use_pjrt) {
+        Ok(p) => p,
+        Err(err) => {
+            if matches!(backend, Some(BackendKind::Pjrt)) {
+                return Err(err);
+            }
+            eprintln!("artifacts unavailable ({err:#}); using synthetic pruned weights");
+            let sc = Scale::parse(args.get_or("scale", "tiny")).unwrap_or(Scale::Tiny);
+            let net = NetworkSpec::paper(sc, TimeStepConfig::PAPER);
+            let mut w = ModelWeights::random(&net, 1.0, args.parsed_or("seed", 42u64));
+            w.prune_fine_grained(0.8);
+            DetectionPipeline::from_weights(net, w)?
+        }
+    };
     pipeline.hw_mode = HwStatsMode::Once;
+    // Enable tracing before any backend is (re)built: the cluster takes
+    // its sink at construction.
+    let trace_path = args.get("trace").map(PathBuf::from);
+    let trace_jsonl = args.get("trace-jsonl").map(PathBuf::from);
+    if trace_path.is_some() || trace_jsonl.is_some() {
+        pipeline.trace = TraceSink::enabled();
+    }
     pipeline.conf_thresh = args.parsed_or("conf", 0.1f32);
     let (worker_floor, worker_ceiling) = parse_workers(args.get_or("workers", "1"))?;
     pipeline.workers = worker_floor;
@@ -162,11 +192,27 @@ fn cmd_detect(args: &Args) -> Result<()> {
     pipeline.set_cluster(chips, policy)?;
     pipeline.pipeline_depth = args.parsed_or("pipeline", 0usize);
 
-    let ds_path = args
-        .get("dataset")
-        .map(PathBuf::from)
-        .unwrap_or_else(|| ArtifactPaths::in_dir(&dir).dataset_test);
-    let mut ds = Dataset::load(&ds_path)?;
+    let mut ds = match args.get("dataset") {
+        Some(p) => Dataset::load(&PathBuf::from(p))?,
+        None => {
+            let default = ArtifactPaths::in_dir(&dir).dataset_test;
+            match Dataset::load(&default) {
+                Ok(d) => d,
+                Err(_) => {
+                    eprintln!(
+                        "no dataset at {}; using a synthetic IVS-3cls set",
+                        default.display()
+                    );
+                    Dataset::synth(
+                        args.parsed_or("frames", 8usize).max(1),
+                        pipeline.net.input_w,
+                        pipeline.net.input_h,
+                        args.parsed_or("seed", 42u64),
+                    )
+                }
+            }
+        }
+    };
     let frames = args.parsed_or("frames", ds.samples.len());
     ds.samples.truncate(frames);
 
@@ -216,9 +262,35 @@ fn cmd_detect(args: &Args) -> Result<()> {
         pipeline.batch,
         args.parsed_or("cores", 1usize).max(1)
     );
-    let report = pipeline.process_dataset(&ds)?;
+    let report = match args.get("arrivals") {
+        Some(spec) => {
+            let process = ArrivalProcess::parse(spec)?;
+            if pipeline.stage_serving_active() {
+                eprintln!(
+                    "note: --arrivals drives the open-loop engine path; --pipeline {} is \
+                     ignored for this run",
+                    pipeline.pipeline_depth
+                );
+            }
+            let rep = pipeline.process_dataset_open_loop(
+                &ds,
+                &process,
+                args.parsed_or("seed", 42u64),
+            )?;
+            // Self-check (the CI smoke leg relies on it): an open-loop
+            // run must produce non-empty latency histograms.
+            let filled = rep.metrics.queue_hist.as_ref().is_some_and(|h| !h.is_empty())
+                && rep.metrics.service_hist.as_ref().is_some_and(|h| !h.is_empty());
+            if !filled {
+                bail!("open-loop run produced empty latency histograms");
+            }
+            rep
+        }
+        None => pipeline.process_dataset(&ds)?,
+    };
     println!("mAP@0.5 = {:.3}  (per-class {:?})", report.map, report.ap);
     println!("{}", report.metrics.to_json().to_string_compact());
+    write_trace_outputs(&pipeline.trace, trace_path.as_deref(), trace_jsonl.as_deref())?;
 
     if let Some(out) = args.get("ppm-out") {
         std::fs::create_dir_all(out)?;
@@ -230,6 +302,94 @@ fn cmd_detect(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Export captured trace events: Chrome trace JSON (verified to parse
+/// back and be non-empty — the self-check the CI smoke leg relies on)
+/// and/or a JSONL event stream.
+fn write_trace_outputs(
+    trace: &TraceSink,
+    chrome: Option<&Path>,
+    jsonl: Option<&Path>,
+) -> Result<()> {
+    if chrome.is_none() && jsonl.is_none() {
+        return Ok(());
+    }
+    let events = trace.events();
+    if let Some(path) = chrome {
+        let text = chrome_trace_json(&events).to_string_compact();
+        let parsed = Json::parse(&text)?;
+        let n = parsed
+            .get("traceEvents")
+            .and_then(|t| t.as_arr())
+            .map(|a| a.len())
+            .unwrap_or(0);
+        if n == 0 {
+            bail!("trace capture produced no events (is tracing enabled?)");
+        }
+        std::fs::write(path, &text)?;
+        println!(
+            "wrote {n} trace events to {} ({} dropped at capacity)",
+            path.display(),
+            trace.dropped()
+        );
+    }
+    if let Some(path) = jsonl {
+        std::fs::write(path, to_jsonl(&events))?;
+        println!("wrote {} JSONL events to {}", events.len(), path.display());
+    }
+    Ok(())
+}
+
+/// `scsnn trace` — a self-contained traced run: synthetic weights and
+/// dataset, stage-pipelined cluster, Chrome trace out. The quickest way
+/// to a trace loadable in chrome://tracing or Perfetto.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let sc = Scale::parse(args.get_or("scale", "tiny")).unwrap_or(Scale::Tiny);
+    let net = NetworkSpec::paper(sc, TimeStepConfig::PAPER);
+    let (weights, kind) = load_or_random(args, &net);
+    let mut pipeline = DetectionPipeline::from_weights(net, weights)?;
+    pipeline.hw_mode = HwStatsMode::Off;
+    pipeline.trace = TraceSink::enabled();
+    let (worker_floor, worker_ceiling) = parse_workers(args.get_or("workers", "2"))?;
+    pipeline.workers = worker_floor;
+    pipeline.max_workers = worker_ceiling;
+    let chips = args.parsed_or("chips", 2usize).max(1);
+    pipeline.set_cluster(chips, ShardPolicy::LayerPipeline)?;
+    pipeline.select_backend(BackendKind::Cluster)?;
+    pipeline.pipeline_depth = args.parsed_or("pipeline", 2usize);
+    let frames = args.parsed_or("frames", 8usize).max(1);
+    let ds = Dataset::synth(
+        frames,
+        pipeline.net.input_w,
+        pipeline.net.input_h,
+        args.parsed_or("seed", 42u64),
+    );
+    println!(
+        "tracing {frames} frames through the cluster backend ({kind} weights, {chips} chips, \
+         pipeline {} …)",
+        pipeline.pipeline_depth
+    );
+    let report = pipeline.process_dataset(&ds)?;
+    let events = pipeline.trace.events();
+    let mut by_kind: std::collections::BTreeMap<&'static str, usize> =
+        std::collections::BTreeMap::new();
+    for e in &events {
+        *by_kind.entry(e.kind.name()).or_insert(0) += 1;
+    }
+    for (name, count) in &by_kind {
+        println!("  {name:<22} {count}");
+    }
+    println!(
+        "wall interval {:.3} ms, bottleneck stage {:?}",
+        report.metrics.wall_interval_ms, report.metrics.bottleneck_stage
+    );
+    let out = PathBuf::from(args.get_or("out", "trace.json"));
+    write_trace_outputs(
+        &pipeline.trace,
+        Some(&out),
+        args.get("trace-jsonl").map(PathBuf::from).as_deref(),
+    )
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {

@@ -1,0 +1,171 @@
+//! Trace exporters: Chrome `trace_event` JSON (loadable in
+//! `chrome://tracing` / Perfetto) and a line-per-event JSONL stream.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::{TraceEvent, TraceKind};
+
+fn chip_json(c: Option<usize>) -> Json {
+    match c {
+        Some(i) => Json::Num(i as f64),
+        None => Json::Str("host".into()),
+    }
+}
+
+/// Structured `args` payload for one event (shared by both exporters).
+fn args_json(kind: &TraceKind) -> Json {
+    let mut o = BTreeMap::new();
+    match *kind {
+        TraceKind::RequestQueued { request } | TraceKind::RequestService { request } => {
+            o.insert("request".into(), Json::Num(request as f64));
+        }
+        TraceKind::EngineJob { frame } => {
+            o.insert("frame".into(), Json::Num(frame as f64));
+        }
+        TraceKind::StageJob { frame, stage, unit } | TraceKind::LeaseWait { frame, stage, unit } => {
+            o.insert("frame".into(), Json::Num(frame as f64));
+            o.insert("stage".into(), Json::Num(stage as f64));
+            o.insert("unit".into(), Json::Num(unit as f64));
+        }
+        TraceKind::Layer { frame, layer, unit } => {
+            o.insert("frame".into(), Json::Num(frame as f64));
+            o.insert("layer".into(), Json::Num(layer as f64));
+            o.insert("unit".into(), Json::Num(unit as f64));
+        }
+        TraceKind::Transfer { frame, index, src, dst, bits, cycles } => {
+            o.insert("frame".into(), Json::Num(frame as f64));
+            o.insert("index".into(), Json::Num(index as f64));
+            o.insert("src".into(), chip_json(src));
+            o.insert("dst".into(), chip_json(dst));
+            o.insert("bits".into(), Json::Num(bits as f64));
+            o.insert("cycles".into(), Json::Num(cycles as f64));
+        }
+    }
+    Json::Obj(o)
+}
+
+/// One Chrome `trace_event` object: complete spans (`ph:"X"` with
+/// `ts`/`dur` in microseconds) and thread-scoped instants (`ph:"i"`).
+fn chrome_event(ev: &TraceEvent) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".into(), Json::Str(ev.kind.name().into()));
+    o.insert("cat".into(), Json::Str(ev.kind.category().into()));
+    o.insert("pid".into(), Json::Num(0.0));
+    o.insert("tid".into(), Json::Num(ev.track as f64));
+    o.insert("ts".into(), Json::Num(ev.start.as_secs_f64() * 1e6));
+    if ev.dur.is_zero() {
+        o.insert("ph".into(), Json::Str("i".into()));
+        o.insert("s".into(), Json::Str("t".into()));
+    } else {
+        o.insert("ph".into(), Json::Str("X".into()));
+        o.insert("dur".into(), Json::Num(ev.dur.as_secs_f64() * 1e6));
+    }
+    o.insert("args".into(), args_json(&ev.kind));
+    Json::Obj(o)
+}
+
+/// The full Chrome trace document:
+/// `{"traceEvents": [...], "displayTimeUnit": "ms"}`.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("traceEvents".into(), Json::Arr(events.iter().map(chrome_event).collect()));
+    o.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+    Json::Obj(o)
+}
+
+/// JSONL stream: one compact Chrome-format event object per line
+/// (grep/`jq`-friendly; trailing newline when non-empty).
+pub fn to_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&chrome_event(ev).to_string_compact());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceSink;
+    use std::time::Duration;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        let sink = TraceSink::enabled();
+        let t = sink.now();
+        sink.span(TraceKind::StageJob { frame: 0, stage: 0, unit: 1 }, t);
+        sink.span_at(
+            TraceKind::RequestService { request: 2 },
+            Duration::from_micros(10),
+            Duration::from_micros(35),
+        );
+        sink.instant(TraceKind::Transfer {
+            frame: 0,
+            index: 0,
+            src: None,
+            dst: Some(1),
+            bits: 128,
+            cycles: 4,
+        });
+        sink.events()
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_parser() {
+        let events = sample_events();
+        let doc = chrome_trace_json(&events);
+        let text = doc.to_string_compact();
+        let parsed = Json::parse(&text).expect("chrome trace parses");
+        let list = match parsed.get("traceEvents") {
+            Some(Json::Arr(a)) => a.clone(),
+            other => panic!("traceEvents missing: {other:?}"),
+        };
+        assert_eq!(list.len(), events.len());
+        // Spans are ph:"X" with dur; instants are ph:"i" with scope.
+        let phases: Vec<String> = list
+            .iter()
+            .map(|e| match e.get("ph") {
+                Some(Json::Str(s)) => s.clone(),
+                other => panic!("ph missing: {other:?}"),
+            })
+            .collect();
+        assert!(phases.contains(&"X".to_string()));
+        assert!(phases.contains(&"i".to_string()));
+        for e in &list {
+            assert!(e.get("name").is_some());
+            assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
+            assert!(e.get("args").is_some());
+        }
+    }
+
+    #[test]
+    fn span_at_preserves_microsecond_timestamps() {
+        let events = sample_events();
+        let doc = chrome_trace_json(&events);
+        let list = match doc.get("traceEvents") {
+            Some(Json::Arr(a)) => a.clone(),
+            _ => unreachable!(),
+        };
+        let svc = list
+            .iter()
+            .find(|e| matches!(e.get("name"), Some(Json::Str(s)) if s == "request.service"))
+            .expect("service span exported");
+        assert_eq!(svc.get("ts").and_then(|t| t.as_f64()), Some(10.0));
+        assert_eq!(svc.get("dur").and_then(|t| t.as_f64()), Some(25.0));
+    }
+
+    #[test]
+    fn jsonl_has_one_parseable_object_per_line() {
+        let events = sample_events();
+        let jsonl = to_jsonl(&events);
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), events.len());
+        for line in lines {
+            let obj = Json::parse(line).expect("jsonl line parses");
+            assert!(obj.get("name").is_some());
+        }
+        assert!(to_jsonl(&[]).is_empty());
+    }
+}

@@ -1,0 +1,280 @@
+//! Fixed log-bucket latency histograms (HDR-style): p50/p95/p99
+//! without storing every sample, mergeable across threads.
+//!
+//! Values are recorded in microseconds into buckets with 16
+//! sub-buckets per octave (`SUB_BITS = 4`), so any reported quantile
+//! is within ~6.25% relative error of the true sample — plenty for
+//! tail-latency reporting — while the whole histogram is a fixed
+//! 976-slot array covering 1 µs .. ~584000 years.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Sub-bucket resolution: 2^SUB_BITS buckets per power of two.
+const SUB_BITS: u32 = 4;
+const SUBS: usize = 1 << SUB_BITS;
+
+/// Bucket count for the full u64 range: the first 16 values map 1:1,
+/// then 16 sub-buckets for each exponent 4..=63.
+const NBUCKETS: usize = SUBS + (64 - SUB_BITS as usize) * SUBS; // 976
+
+fn bucket_of(v: u64) -> usize {
+    if v < SUBS as u64 {
+        return v as usize;
+    }
+    let e = 63 - v.leading_zeros(); // e >= SUB_BITS
+    (((e - (SUB_BITS - 1)) as usize) << SUB_BITS) + ((v >> (e - SUB_BITS)) & (SUBS as u64 - 1)) as usize
+}
+
+/// Lowest value mapping into bucket `idx` (inverse of [`bucket_of`]).
+fn bucket_low(idx: usize) -> u64 {
+    if idx < SUBS {
+        return idx as u64;
+    }
+    let e = (idx >> SUB_BITS) as u32 + (SUB_BITS - 1);
+    (1u64 << e) + (((idx & (SUBS - 1)) as u64) << (e - SUB_BITS))
+}
+
+/// A mergeable log-bucket latency histogram. `Default` is empty;
+/// bucket storage is allocated lazily on the first observation.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    min_us: u64,
+    max_us: u64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one latency sample (floored to whole microseconds).
+    pub fn observe(&mut self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; NBUCKETS];
+            self.min_us = us;
+            self.max_us = us;
+        } else {
+            self.min_us = self.min_us.min(us);
+            self.max_us = self.max_us.max(us);
+        }
+        self.buckets[bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+    }
+
+    /// Fold another histogram's samples into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.buckets.is_empty() {
+            *self = other.clone();
+            return;
+        }
+        for (b, &c) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += c;
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn min(&self) -> Duration {
+        Duration::from_micros(if self.count == 0 { 0 } else { self.min_us })
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(if self.count == 0 { 0 } else { self.max_us })
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.count)
+    }
+
+    /// Nearest-rank quantile (`q` in [0, 1]): the lower bound of the
+    /// bucket holding the rank-`ceil(q·count)` sample, clamped into
+    /// the observed [min, max] range so q=0/q=1 are exact.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Duration::from_micros(bucket_low(idx).clamp(self.min_us, self.max_us));
+            }
+        }
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Summary object: `{count, mean_ms, min_ms, max_ms, p50_ms,
+    /// p95_ms, p99_ms}`.
+    pub fn to_json(&self) -> Json {
+        let ms = |d: Duration| Json::Num(d.as_secs_f64() * 1e3);
+        let mut o = BTreeMap::new();
+        o.insert("count".into(), Json::Num(self.count as f64));
+        o.insert("mean_ms".into(), ms(self.mean()));
+        o.insert("min_ms".into(), ms(self.min()));
+        o.insert("max_ms".into(), ms(self.max()));
+        o.insert("p50_ms".into(), ms(self.quantile(0.50)));
+        o.insert("p95_ms".into(), ms(self.quantile(0.95)));
+        o.insert("p99_ms".into(), ms(self.quantile(0.99)));
+        Json::Obj(o)
+    }
+}
+
+/// Named histograms behind one mutex: threads observe through a shared
+/// handle, readers snapshot by name. The registry lock is held only
+/// for the O(log-buckets) observe, so contention stays negligible next
+/// to frame work.
+#[derive(Debug, Default)]
+pub struct HistogramRegistry {
+    inner: Mutex<BTreeMap<String, LatencyHistogram>>,
+}
+
+impl HistogramRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&self, name: &str, d: Duration) {
+        self.inner.lock().unwrap().entry(name.to_string()).or_default().observe(d);
+    }
+
+    /// Merge a locally accumulated histogram (e.g. one per worker
+    /// thread) into the named slot.
+    pub fn merge_from(&self, name: &str, h: &LatencyHistogram) {
+        self.inner.lock().unwrap().entry(name.to_string()).or_default().merge(h);
+    }
+
+    pub fn get(&self, name: &str) -> Option<LatencyHistogram> {
+        self.inner.lock().unwrap().get(name).cloned()
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, LatencyHistogram> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.snapshot().into_iter().map(|(name, h)| (name, h.to_json())).collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_mapping_round_trips() {
+        for v in [0u64, 1, 15, 16, 17, 31, 32, 63, 64, 1000, 1 << 20, u64::MAX] {
+            let idx = bucket_of(v);
+            assert!(idx < NBUCKETS, "bucket {idx} out of range for {v}");
+            let low = bucket_low(idx);
+            assert!(low <= v, "bucket_low({idx})={low} > {v}");
+            if idx + 1 < NBUCKETS {
+                assert!(bucket_low(idx + 1) > v, "value {v} not below next bucket");
+            }
+            // Relative error bound: bucket width / low <= 1/16.
+            if v >= 16 {
+                assert!((v - low) as f64 / v as f64 <= 1.0 / 16.0);
+            }
+        }
+        assert_eq!(bucket_of(u64::MAX), NBUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_are_nearest_rank_within_bucket_error() {
+        let mut h = LatencyHistogram::new();
+        for ms in [10u64, 20, 30, 40] {
+            h.observe(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.min(), Duration::from_millis(10));
+        assert_eq!(h.max(), Duration::from_millis(40));
+        let p0 = h.quantile(0.0).as_secs_f64();
+        assert!((p0 - 0.010).abs() < 0.010 / 16.0);
+        let p99 = h.quantile(0.99).as_secs_f64();
+        assert!(p99 >= 0.030, "p99 {p99} should reach the last sample's bucket");
+        assert!(h.quantile(1.0) <= Duration::from_millis(40));
+        // Monotone in q.
+        let qs: Vec<Duration> = (0..=10).map(|i| h.quantile(i as f64 / 10.0)).collect();
+        for pair in qs.windows(2) {
+            assert!(pair[1] >= pair[0]);
+        }
+    }
+
+    #[test]
+    fn merge_matches_combined_observation() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for i in 0..100u64 {
+            let d = Duration::from_micros(17 * i + 3);
+            if i % 2 == 0 { a.observe(d) } else { b.observe(d) }
+            all.observe(d);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), all.quantile(q));
+        }
+    }
+
+    #[test]
+    fn registry_observes_and_merges_across_threads() {
+        let reg = HistogramRegistry::new();
+        std::thread::scope(|scope| {
+            for w in 0..4 {
+                let reg = &reg;
+                scope.spawn(move || {
+                    for i in 0..50 {
+                        reg.observe("queue", Duration::from_micros(100 * w + i));
+                    }
+                });
+            }
+        });
+        let h = reg.get("queue").expect("histogram recorded");
+        assert_eq!(h.count(), 200);
+        assert!(reg.get("missing").is_none());
+        let json = reg.to_json().to_string_compact();
+        assert!(json.contains("queue"));
+        assert!(json.contains("p99_ms"));
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+        let mut other = LatencyHistogram::new();
+        other.merge(&h);
+        assert!(other.is_empty());
+    }
+}

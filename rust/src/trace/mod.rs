@@ -1,0 +1,360 @@
+//! Unified tracing & telemetry: typed spans/instants recorded into a
+//! lock-cheap, bounded, shareable sink, plus log-bucket latency
+//! histograms ([`histogram`]) and Chrome `trace_event` / JSONL export
+//! ([`export`]).
+//!
+//! Design constraints (see README §Observability):
+//!
+//! - **Zero-cost when disabled.** A [`TraceSink`] is either enabled
+//!   (backed by a shared buffer) or a no-op behind the same API;
+//!   `TraceSink::disabled()` never allocates, never takes a lock, and
+//!   `now()` returns `None` so callers skip even the clock read.
+//! - **Lock-cheap when enabled.** Events land in one of a fixed set of
+//!   sharded buffers keyed by the recording thread, so concurrent
+//!   workers rarely contend on the same mutex; each push is a single
+//!   short critical section.
+//! - **Bounded memory.** The sink holds at most `cap` events; overflow
+//!   increments a drop counter instead of growing without bound.
+//! - **Deterministic ordering/counts.** Wall-clock timestamps are
+//!   nondeterministic by nature, so determinism is defined over the
+//!   *logical* identity of events: [`TraceSink::events`] returns the
+//!   merged buffers sorted by [`TraceKind::sort_key`] (kind tag + frame
+//!   + stage/layer/unit coordinates), which depends only on what work
+//!   ran — not when or on which thread. The same seed and config
+//!   therefore yield byte-identical event sequences for any worker
+//!   count (`tests/trace_determinism.rs`).
+
+pub mod export;
+pub mod histogram;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Number of independently locked event buffers. Threads hash onto
+/// shards by their track id, so contention only occurs when more than
+/// `SHARDS` threads trace simultaneously.
+const SHARDS: usize = 16;
+
+/// Default bound on retained events (~14 MB at 56 B/event).
+const DEFAULT_CAP: usize = 1 << 18;
+
+/// A typed trace event identity: what happened, with enough
+/// coordinates to order it deterministically. Times live on
+/// [`TraceEvent`], not here.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// An open-loop request waiting between arrival and service start.
+    RequestQueued { request: usize },
+    /// An open-loop request being serviced (service start → done).
+    RequestService { request: usize },
+    /// A whole-frame job on a streaming-engine worker thread.
+    EngineJob { frame: usize },
+    /// One `(frame, stage)` job on the stage executor.
+    StageJob { frame: usize, stage: usize, unit: usize },
+    /// Time spent blocked acquiring the `StageLease` unit lock.
+    LeaseWait { frame: usize, stage: usize, unit: usize },
+    /// One layer of the cluster walk on one stage unit.
+    Layer { frame: usize, layer: usize, unit: usize },
+    /// An interconnect transfer priced by the `Interconnect` log
+    /// (instant: modeled cycles, not wall time).
+    Transfer {
+        frame: usize,
+        index: usize,
+        src: Option<usize>,
+        dst: Option<usize>,
+        bits: u64,
+        cycles: u64,
+    },
+}
+
+impl TraceKind {
+    /// Chrome-trace event name (`cat.name` style, stable across PRs).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::RequestQueued { .. } => "request.queued",
+            TraceKind::RequestService { .. } => "request.service",
+            TraceKind::EngineJob { .. } => "engine.job",
+            TraceKind::StageJob { .. } => "stage.job",
+            TraceKind::LeaseWait { .. } => "stage.lease_wait",
+            TraceKind::Layer { .. } => "chip.layer",
+            TraceKind::Transfer { .. } => "interconnect.transfer",
+        }
+    }
+
+    /// Chrome-trace category.
+    pub fn category(&self) -> &'static str {
+        match self {
+            TraceKind::RequestQueued { .. } | TraceKind::RequestService { .. } => "request",
+            TraceKind::EngineJob { .. } => "engine",
+            TraceKind::StageJob { .. } | TraceKind::LeaseWait { .. } => "stage",
+            TraceKind::Layer { .. } => "chip",
+            TraceKind::Transfer { .. } => "interconnect",
+        }
+    }
+
+    /// Deterministic ordering key: depends only on the event's logical
+    /// identity (never on wall-clock time or thread id), so sorted
+    /// event streams are comparable across worker counts.
+    pub fn sort_key(&self) -> (u8, usize, usize, usize, u64) {
+        match *self {
+            TraceKind::RequestQueued { request } => (0, request, 0, 0, 0),
+            TraceKind::RequestService { request } => (1, request, 0, 0, 0),
+            TraceKind::EngineJob { frame } => (2, frame, 0, 0, 0),
+            TraceKind::StageJob { frame, stage, unit } => (3, frame, stage, unit, 0),
+            TraceKind::LeaseWait { frame, stage, unit } => (4, frame, stage, unit, 0),
+            TraceKind::Layer { frame, layer, unit } => (5, frame, layer, unit, 0),
+            TraceKind::Transfer { frame, index, bits, .. } => (6, frame, index, 0, bits),
+        }
+    }
+}
+
+/// One recorded event: a span (`dur > 0`) or an instant (`dur == 0`),
+/// stamped relative to the sink's epoch.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub kind: TraceKind,
+    /// Offset from the sink epoch.
+    pub start: Duration,
+    /// Span length; zero for instants.
+    pub dur: Duration,
+    /// Recording thread's track id (Chrome `tid`). Not part of the
+    /// deterministic identity — scheduling decides it.
+    pub track: usize,
+}
+
+struct SinkShared {
+    epoch: Instant,
+    shards: Vec<Mutex<Vec<TraceEvent>>>,
+    cap: usize,
+    len: AtomicUsize,
+    dropped: AtomicUsize,
+}
+
+/// Handle to a trace buffer, cheap to clone and send across threads.
+/// `TraceSink::disabled()` (the default) is a no-op behind the same
+/// API — every method short-circuits without touching a clock or lock.
+#[derive(Clone, Default)]
+pub struct TraceSink {
+    shared: Option<Arc<SinkShared>>,
+}
+
+fn next_track() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static TRACK: usize = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TRACK.with(|t| *t)
+}
+
+impl TraceSink {
+    /// An enabled sink with the default event capacity.
+    pub fn enabled() -> Self {
+        Self::enabled_with_capacity(DEFAULT_CAP)
+    }
+
+    /// An enabled sink retaining at most `cap` events; overflow counts
+    /// into [`TraceSink::dropped`] instead of allocating.
+    pub fn enabled_with_capacity(cap: usize) -> Self {
+        TraceSink {
+            shared: Some(Arc::new(SinkShared {
+                epoch: Instant::now(),
+                shards: (0..SHARDS).map(|_| Mutex::new(Vec::new())).collect(),
+                cap: cap.max(1),
+                len: AtomicUsize::new(0),
+                dropped: AtomicUsize::new(0),
+            })),
+        }
+    }
+
+    /// The no-op sink (same as `Default`).
+    pub fn disabled() -> Self {
+        TraceSink { shared: None }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.shared.is_some()
+    }
+
+    /// Current offset from the sink epoch, or `None` when disabled —
+    /// the idiom `let t = sink.now(); ...; sink.span(kind, t)` costs
+    /// nothing on the disabled path.
+    pub fn now(&self) -> Option<Duration> {
+        self.shared.as_ref().map(|s| s.epoch.elapsed())
+    }
+
+    /// Record a span from `start` (a value from [`TraceSink::now`]) to
+    /// the current instant. No-op when disabled or `start` is `None`.
+    pub fn span(&self, kind: TraceKind, start: Option<Duration>) {
+        if let (Some(shared), Some(start)) = (self.shared.as_deref(), start) {
+            let end = shared.epoch.elapsed();
+            self.push(TraceEvent {
+                kind,
+                start,
+                dur: end.saturating_sub(start),
+                track: next_track(),
+            });
+        }
+    }
+
+    /// Record a span with both endpoints supplied (offsets from the
+    /// sink epoch), e.g. timestamps captured on another thread.
+    pub fn span_at(&self, kind: TraceKind, start: Duration, end: Duration) {
+        if self.shared.is_some() {
+            self.push(TraceEvent { kind, start, dur: end.saturating_sub(start), track: next_track() });
+        }
+    }
+
+    /// Record an instantaneous event at the current time.
+    pub fn instant(&self, kind: TraceKind) {
+        if let Some(shared) = self.shared.as_deref() {
+            let at = shared.epoch.elapsed();
+            self.push(TraceEvent { kind, start: at, dur: Duration::ZERO, track: next_track() });
+        }
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        let shared = match self.shared.as_deref() {
+            Some(s) => s,
+            None => return,
+        };
+        if shared.len.fetch_add(1, Ordering::Relaxed) >= shared.cap {
+            shared.len.fetch_sub(1, Ordering::Relaxed);
+            shared.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let shard = ev.track % SHARDS;
+        shared.shards[shard].lock().unwrap().push(ev);
+    }
+
+    /// Events dropped at the capacity bound.
+    pub fn dropped(&self) -> usize {
+        self.shared.as_deref().map_or(0, |s| s.dropped.load(Ordering::Relaxed))
+    }
+
+    /// Merge all shards and sort by the deterministic
+    /// [`TraceKind::sort_key`] — the canonical event stream used by the
+    /// exporters and the determinism tests.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let shared = match self.shared.as_deref() {
+            Some(s) => s,
+            None => return Vec::new(),
+        };
+        let mut out = Vec::new();
+        for shard in &shared.shards {
+            out.extend(shard.lock().unwrap().iter().cloned());
+        }
+        out.sort_by_key(|e| e.kind.sort_key());
+        out
+    }
+
+    /// Drop all recorded events (capacity and drop counter reset too).
+    pub fn clear(&self) {
+        if let Some(shared) = self.shared.as_deref() {
+            for shard in &shared.shards {
+                shard.lock().unwrap().clear();
+            }
+            shared.len.store(0, Ordering::Relaxed);
+            shared.dropped.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.shared.as_deref() {
+            Some(s) => f
+                .debug_struct("TraceSink")
+                .field("enabled", &true)
+                .field("events", &s.len.load(Ordering::Relaxed))
+                .field("dropped", &s.dropped.load(Ordering::Relaxed))
+                .finish(),
+            None => f.debug_struct("TraceSink").field("enabled", &false).finish(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        let sink = TraceSink::disabled();
+        assert!(!sink.is_enabled());
+        assert_eq!(sink.now(), None);
+        sink.span(TraceKind::EngineJob { frame: 0 }, sink.now());
+        sink.instant(TraceKind::EngineJob { frame: 1 });
+        assert!(sink.events().is_empty());
+        assert_eq!(sink.dropped(), 0);
+    }
+
+    #[test]
+    fn spans_and_instants_record_and_sort_deterministically() {
+        let sink = TraceSink::enabled();
+        // Record out of logical order; events() must sort by identity.
+        sink.instant(TraceKind::Transfer {
+            frame: 1,
+            index: 0,
+            src: None,
+            dst: Some(0),
+            bits: 64,
+            cycles: 2,
+        });
+        let t = sink.now();
+        sink.span(TraceKind::StageJob { frame: 0, stage: 1, unit: 0 }, t);
+        let t = sink.now();
+        sink.span(TraceKind::StageJob { frame: 0, stage: 0, unit: 0 }, t);
+        let ev = sink.events();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0].kind, TraceKind::StageJob { frame: 0, stage: 0, unit: 0 });
+        assert_eq!(ev[1].kind, TraceKind::StageJob { frame: 0, stage: 1, unit: 0 });
+        assert_eq!(ev[2].kind.name(), "interconnect.transfer");
+        assert_eq!(ev[2].dur, Duration::ZERO);
+    }
+
+    #[test]
+    fn capacity_bound_counts_drops() {
+        let sink = TraceSink::enabled_with_capacity(2);
+        for frame in 0..5 {
+            sink.instant(TraceKind::EngineJob { frame });
+        }
+        assert_eq!(sink.events().len(), 2);
+        assert_eq!(sink.dropped(), 3);
+        sink.clear();
+        assert!(sink.events().is_empty());
+        assert_eq!(sink.dropped(), 0);
+        sink.instant(TraceKind::EngineJob { frame: 9 });
+        assert_eq!(sink.events().len(), 1);
+    }
+
+    #[test]
+    fn clones_share_the_buffer() {
+        let sink = TraceSink::enabled();
+        let handle = sink.clone();
+        handle.instant(TraceKind::EngineJob { frame: 3 });
+        assert_eq!(sink.events().len(), 1);
+    }
+
+    #[test]
+    fn concurrent_recording_keeps_every_event() {
+        let sink = TraceSink::enabled();
+        std::thread::scope(|scope| {
+            for w in 0..4 {
+                let sink = sink.clone();
+                scope.spawn(move || {
+                    for i in 0..100 {
+                        let t = sink.now();
+                        sink.span(TraceKind::EngineJob { frame: w * 100 + i }, t);
+                    }
+                });
+            }
+        });
+        let ev = sink.events();
+        assert_eq!(ev.len(), 400);
+        // Sorted by frame regardless of interleaving.
+        for (i, e) in ev.iter().enumerate() {
+            assert_eq!(e.kind, TraceKind::EngineJob { frame: i });
+        }
+    }
+}

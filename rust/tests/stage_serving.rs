@@ -236,7 +236,13 @@ fn detection_pipeline_routes_cluster_through_stage_executor() {
     assert_eq!(baseline.metrics.detections, staged.metrics.detections);
     assert_eq!(staged.metrics.frames, 4);
     assert!(staged.metrics.wall_interval_ms > 0.0, "wall interval must be measured");
-    assert_eq!(staged.metrics.stage_occupancy.len(), 2, "one occupancy per stage");
+    assert_eq!(staged.metrics.stage_breakdown.len(), 2, "one busy/wait entry per stage");
+    assert!(
+        staged.metrics.stage_breakdown.iter().all(|l| l.busy_frac > 0.0),
+        "every stage ran work: {:?}",
+        staged.metrics.stage_breakdown
+    );
+    assert!(staged.metrics.wall_span > std::time::Duration::ZERO);
     assert_eq!(staged.metrics.backend.as_deref(), Some("cluster"));
 
     // Leaving the cluster backend deactivates stage serving even with a

@@ -1,0 +1,144 @@
+//! Tracing must be an **observer**: it may not change what the pipeline
+//! computes, and its event stream must be deterministic in everything
+//! but wall-clock timestamps.
+//!
+//! - Same seed + config ⇒ identical event counts and identical per-type
+//!   ordering (the `sort_key` sequence) whether the engine ran 1 worker
+//!   or 4 — scheduling decides *when*, never *what*.
+//! - The Chrome `trace_event` export round-trips through the crate's
+//!   own JSON parser, one exported object per captured event.
+//! - Traced and untraced runs produce bit-identical detections/heads.
+//! - The stage-job spans of a pipelined run reconstruct the measured
+//!   wall-clock initiation interval: the last-stage span ends are the
+//!   same instants `StageStreamStats::frame_done` records.
+
+mod harness;
+
+use scsnn::backend::BackendKind;
+use scsnn::config::ShardPolicy;
+use scsnn::coordinator::pipeline::{DetectionPipeline, HwStatsMode};
+use scsnn::detect::dataset::Dataset;
+use scsnn::tensor::Tensor;
+use scsnn::trace::export::chrome_trace_json;
+use scsnn::trace::{TraceKind, TraceSink};
+use scsnn::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+const FRAMES: usize = 6;
+const STAGES: usize = 2; // 2 chips, LayerPipeline → one stage per chip
+
+/// A fresh stage-pipelined cluster pipeline over the same tiny network
+/// and synthetic dataset every time (seeds fixed), with tracing enabled
+/// **before** the cluster backend is built.
+fn traced_pipeline(workers: usize, depth: usize, traced: bool) -> (DetectionPipeline, Dataset) {
+    let (net, w) = harness::tiny_raw(700);
+    let ds = Dataset::synth(FRAMES, net.input_w, net.input_h, 701);
+    let mut p = DetectionPipeline::from_weights(net, w).unwrap();
+    p.hw_mode = HwStatsMode::Off;
+    p.workers = workers;
+    if traced {
+        p.trace = TraceSink::enabled();
+    }
+    p.set_cluster(STAGES, ShardPolicy::LayerPipeline).unwrap();
+    p.select_backend(BackendKind::Cluster).unwrap();
+    p.pipeline_depth = depth;
+    (p, ds)
+}
+
+fn kind_counts(p: &DetectionPipeline) -> BTreeMap<&'static str, usize> {
+    let mut by_kind = BTreeMap::new();
+    for e in p.trace.events() {
+        *by_kind.entry(e.kind.name()).or_insert(0) += 1;
+    }
+    by_kind
+}
+
+#[test]
+fn traced_staged_runs_are_identical_across_worker_counts() {
+    let (p1, ds1) = traced_pipeline(1, 2, true);
+    p1.process_dataset(&ds1).unwrap();
+    let keys1: Vec<_> = p1.trace.events().iter().map(|e| e.kind.sort_key()).collect();
+    let counts1 = kind_counts(&p1);
+
+    let (p4, ds4) = traced_pipeline(4, 2, true);
+    p4.process_dataset(&ds4).unwrap();
+    let keys4: Vec<_> = p4.trace.events().iter().map(|e| e.kind.sort_key()).collect();
+    let counts4 = kind_counts(&p4);
+
+    assert!(!keys1.is_empty(), "a traced staged run must record events");
+    assert_eq!(p1.trace.dropped(), 0, "tiny run must fit the default capacity");
+    assert_eq!(keys1, keys4, "event identity must not depend on the worker count");
+    assert_eq!(counts1, counts4);
+    // Every layer of the trace stack reported in: stage jobs + lease
+    // waits (engine/executor), layer spans + transfers (cluster).
+    assert_eq!(counts1.get("stage.job"), Some(&(FRAMES * STAGES)));
+    assert_eq!(counts1.get("stage.lease_wait"), Some(&(FRAMES * STAGES)));
+    assert!(counts1.get("chip.layer").is_some_and(|&n| n >= FRAMES), "{counts1:?}");
+    assert!(counts1.get("interconnect.transfer").is_some_and(|&n| n > 0), "{counts1:?}");
+}
+
+#[test]
+fn chrome_export_round_trips_with_one_object_per_event() {
+    let (p, ds) = traced_pipeline(2, 2, true);
+    p.process_dataset(&ds).unwrap();
+    let events = p.trace.events();
+    assert!(!events.is_empty());
+    let text = chrome_trace_json(&events).to_string_compact();
+    let parsed = Json::parse(&text).unwrap();
+    let arr = parsed.get("traceEvents").and_then(|t| t.as_arr()).unwrap();
+    assert_eq!(arr.len(), events.len());
+    for e in arr {
+        assert!(e.get("name").and_then(|n| n.as_str()).is_some());
+        assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
+        assert!(e.get("ph").and_then(|t| t.as_str()).is_some());
+    }
+}
+
+#[test]
+fn tracing_never_changes_outputs() {
+    let (traced, ds) = traced_pipeline(2, 2, true);
+    let (plain, _) = traced_pipeline(2, 2, false);
+    let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
+    let with_trace = traced.process_frames(&images).unwrap();
+    let without = plain.process_frames(&images).unwrap();
+    assert!(!traced.trace.events().is_empty());
+    assert!(plain.trace.events().is_empty(), "a disabled sink records nothing");
+    for (a, b) in with_trace.iter().zip(&without) {
+        assert_eq!(a.detections, b.detections, "tracing changed detections");
+        assert_eq!(a.head.data, b.head.data, "tracing changed the head");
+    }
+}
+
+#[test]
+fn stage_spans_reconstruct_the_measured_interval() {
+    let in_flight = 4usize;
+    let (p, ds) = traced_pipeline(2, in_flight, true);
+    let rep = p.process_dataset(&ds).unwrap();
+    // End instant of each frame's last-stage span: the same measurement
+    // frame_done records, so the reconstruction mirrors
+    // `StageStreamStats::measured_interval` over span data alone.
+    let mut ends: Vec<Duration> = p
+        .trace
+        .events()
+        .iter()
+        .filter_map(|e| match e.kind {
+            TraceKind::StageJob { stage, .. } if stage + 1 == STAGES => Some(e.start + e.dur),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(ends.len(), FRAMES, "one last-stage span per frame");
+    ends.sort_unstable();
+    let w = in_flight.max(1).min(FRAMES - 1);
+    let reconstructed =
+        ends[FRAMES - 1].saturating_sub(ends[w - 1]) / (FRAMES - w) as u32;
+    let got = reconstructed.as_secs_f64() * 1e3;
+    let want = rep.metrics.wall_interval_ms;
+    assert!(want > 0.0, "staged run must measure an interval");
+    // The span ends and frame_done are the same instants; allow a small
+    // absolute slack for duration→float rounding only.
+    assert!(
+        (got - want).abs() <= 0.5 + want * 0.05,
+        "span-reconstructed interval {got:.3} ms vs measured {want:.3} ms"
+    );
+}
