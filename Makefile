@@ -27,9 +27,11 @@ bench:
 
 # Quick serving-path smoke: streaming engine + multi-core simulator +
 # multi-chip cluster + pipelined executor + wall-clock stage serving
-# with a minimal sample budget (same as the CI bench step). perf_hotpath
-# and perf_prosperity hard-assert the word-parallel and product-sparsity
-# one-to-all paths are bit-exact with the reference, the dse smoke
+# with a minimal sample budget (same as the CI bench step). perf_hotpath,
+# perf_prosperity and perf_temporal hard-assert the word-parallel,
+# product-sparsity and temporal-delta one-to-all paths are bit-exact
+# with the reference (perf_temporal additionally gates the cycle model's
+# lock-step and the fresh-MAC drop at full correlation), the dse smoke
 # cycle-verifies a decimated Pareto sweep, perf_loadgen asserts p99
 # total latency is monotone in offered load, and the traced detect run
 # self-checks that the Chrome trace parses with non-empty histograms.
@@ -40,12 +42,15 @@ bench-smoke:
 	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_pipeline && \
 	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_hotpath && \
 	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_prosperity && \
+	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_temporal && \
 	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_loadgen && \
 	SCSNN_PROP_CASES=16 $(CARGO) test -q --test stage_serving && \
 	SCSNN_PROP_CASES=16 $(CARGO) test -q --test prosperity_conformance && \
+	SCSNN_PROP_CASES=16 $(CARGO) test -q --test temporal_conformance && \
 	$(CARGO) test -q --test trace_determinism && \
 	$(CARGO) run --release -- simulate --scale tiny --chips 2 --pipeline 2 && \
 	$(CARGO) run --release -- simulate --scale tiny --datapath prosperity && \
+	$(CARGO) run --release -- simulate --scale tiny --datapath temporal-delta && \
 	$(CARGO) run --release -- dse --scale tiny --max-points 32 --verify 3 && \
 	$(CARGO) run --release -- detect --scale tiny --frames 8 --chips 2 --pipeline 2 \
 	  --trace /tmp/trace.json --arrivals poisson:200 && \

@@ -45,6 +45,7 @@ use super::one_to_all::GatedOneToAll;
 use super::pe::{GatingStats, PeArray};
 use super::prosperity::ReuseForest;
 use super::sram::{SramBank, SramKind};
+use super::temporal::{plan_tile, ForestCache, MiningPlan, PlaneDelta};
 use crate::config::registers::{ConfigRegisters, LayerSetup};
 use crate::config::{AccelConfig, Datapath};
 use crate::coordinator::tiler::{TilePlan, TileRect};
@@ -122,6 +123,16 @@ pub struct LayerRun {
     /// instead of recomputed (product sparsity, §Prosperity). Zero on the
     /// bit-mask datapath.
     pub macs_reused: u64,
+    /// MACs served by replaying the previous time step's cached plane
+    /// delta (temporal-delta datapath only; disjoint from `macs_reused`).
+    pub macs_reused_temporal: u64,
+    /// Output rows the temporal planner marked replayable from the cached
+    /// delta (counted once per `(t, b, c)` plane per tile, before the K
+    /// loop amortizes them).
+    pub rows_unchanged: u64,
+    /// Tile planes whose reuse forest came from the cross-tile pattern
+    /// cache instead of a fresh mining pass (temporal-delta datapath).
+    pub cache_hits: u64,
     /// SRAM access counters (input, output, weight-map, nz-weight).
     pub sram: [SramBank; 4],
     /// Compressed output spike maps per time step (hidden layers).
@@ -169,12 +180,24 @@ struct Scratch {
     /// `(t * n_bit_planes + b) * c_in + c`; grown on demand and refilled
     /// in place via [`SpikePlane::extract_tile_into`].
     tiles_in: Vec<SpikePlane>,
-    /// Mined reuse forests, parallel to `tiles_in` (product-sparsity
-    /// datapath only). Mined once per extracted tile plane so the cost
-    /// amortizes across the whole K (output-channel) loop, and the node
-    /// vectors are recycled across tiles/layers/frames like every other
-    /// scratch buffer.
+    /// Mined reuse forests, parallel to `tiles_in` (product-sparsity and
+    /// temporal-delta datapaths). Mined once per extracted tile plane so
+    /// the cost amortizes across the whole K (output-channel) loop, and
+    /// the node vectors are recycled across tiles/layers/frames like
+    /// every other scratch buffer.
     forests: Vec<ReuseForest>,
+    /// Cross-tile pattern cache (temporal-delta datapath): mined forests
+    /// keyed by row-bitmap hash, reset at the start of every layer run so
+    /// cycle counts never depend on earlier layers or frames.
+    cache: ForestCache,
+    /// Per-tile temporal plan (plane modes + mining charges), shared with
+    /// the analytic latency model via [`plan_tile`].
+    plan: MiningPlan,
+    /// Cached per-`(b, c)` plane deltas for cross-time-step replay; slot
+    /// `b * c_in + c`, reset by every `t = 0` rebuild.
+    deltas: Vec<PlaneDelta>,
+    /// Changed-row diff scratch for the planner.
+    changed: Vec<bool>,
 }
 
 impl Scratch {
@@ -184,6 +207,10 @@ impl Scratch {
             lif: LifUnit::new(0, 0),
             tiles_in: Vec::new(),
             forests: Vec::new(),
+            cache: ForestCache::new(0),
+            plan: MiningPlan::default(),
+            deltas: Vec::new(),
+            changed: Vec::new(),
         }
     }
 }
@@ -318,6 +345,9 @@ impl SystemController {
             spikes_out: 0,
             patterns_unique: 0,
             macs_reused: 0,
+            macs_reused_temporal: 0,
+            rows_unchanged: 0,
+            cache_hits: 0,
             sram: [
                 SramBank::new(SramKind::Input, self.cfg.input_sram_bytes),
                 SramBank::new(SramKind::Output, self.cfg.output_sram_bytes),
@@ -352,6 +382,10 @@ impl SystemController {
         let cores = self.cfg.num_cores.max(1);
         let mut core_cycles = vec![0u64; cores];
         let mut core_dense = vec![0u64; cores];
+        // The cross-tile pattern cache starts empty every layer run:
+        // cycle counts must depend only on this layer's stimulus, never
+        // on what earlier layers or frames happened to mine.
+        self.scratch.cache.reset(self.cfg.temporal_cache_planes);
         let plan = TilePlan::new(spec.in_w, spec.in_h, tw, th);
         for (tile_idx, tile) in plan.iter().enumerate() {
             let before = (run.cycles, run.dense_cycles);
@@ -415,23 +449,42 @@ impl SystemController {
             }
         }
 
-        // Product-sparsity datapath: mine each extracted plane's reuse
-        // forest once per tile, before the K loop — the hardware streams
-        // the tile through the pattern comparators while the weight SRAM
-        // refills, one row per cycle of the *full* register height (a
-        // clipped edge tile still occupies the whole array, so the charge
-        // stays uniform and the closed-form multi-core makespan exact).
-        // The mining cost is charged to the shipped design only; the dense
-        // baseline never mines.
-        let mining = self.cfg.datapath == Datapath::Prosperity;
-        if mining {
+        // Product-sparsity / temporal-delta datapaths: plan the tile's
+        // mining work once, before the K loop — the hardware streams each
+        // plane through the pattern comparators while the weight SRAM
+        // refills, one mined representative per cycle, so the charge is
+        // the forest's representative count (all-zero planes are skipped
+        // outright, and on the temporal path cached forests and patched
+        // planes charge nothing). The shared planner is also what the
+        // stimulus-aware analytic latency model runs, so the modeled
+        // mining cycles are in lock-step by construction. Mining is
+        // charged to the shipped design only; the dense baseline never
+        // mines.
+        let datapath = self.cfg.datapath;
+        if datapath != Datapath::BitMask {
             if scratch.forests.len() < want_tiles {
                 scratch.forests.resize_with(want_tiles, ReuseForest::default);
             }
-            for i in 0..want_tiles {
-                scratch.forests[i].mine_into(&scratch.tiles_in[i]);
-                scratch.pe.note_patterns_mined(scratch.forests[i].patterns_unique());
-                run.cycles += self.cfg.tile_h as u64;
+            plan_tile(
+                datapath,
+                &scratch.tiles_in[..want_tiles],
+                step_maps.len(),
+                nb * spec.c_in,
+                spec.k,
+                &mut scratch.cache,
+                &mut scratch.forests,
+                &mut scratch.changed,
+                &mut scratch.plan,
+            );
+            scratch.pe.note_patterns_mined(scratch.plan.patterns_mined);
+            run.cycles += scratch.plan.mine_cycles;
+            run.rows_unchanged += scratch.plan.rows_unchanged;
+            run.cache_hits += scratch.plan.cache_hits;
+        }
+        if datapath == Datapath::TemporalDelta {
+            let want_deltas = nb * spec.c_in;
+            if scratch.deltas.len() < want_deltas {
+                scratch.deltas.resize_with(want_deltas, PlaneDelta::default);
             }
         }
 
@@ -457,15 +510,26 @@ impl SystemController {
 
                             let idx = (t * nb + b) * spec.c_in + c;
                             let tile_in = &scratch.tiles_in[idx];
-                            let cycles = if mining {
-                                GatedOneToAll::new(tile_in).run_prosperity(
-                                    pl,
-                                    &mut scratch.pe,
-                                    b as u32,
-                                    &scratch.forests[idx],
-                                )
-                            } else {
-                                GatedOneToAll::new(tile_in).run(pl, &mut scratch.pe, b as u32)
+                            let cycles = match datapath {
+                                Datapath::BitMask => {
+                                    GatedOneToAll::new(tile_in).run(pl, &mut scratch.pe, b as u32)
+                                }
+                                Datapath::Prosperity => GatedOneToAll::new(tile_in)
+                                    .run_prosperity(
+                                        pl,
+                                        &mut scratch.pe,
+                                        b as u32,
+                                        &scratch.forests[idx],
+                                    ),
+                                Datapath::TemporalDelta => GatedOneToAll::new(tile_in)
+                                    .run_temporal(
+                                        pl,
+                                        &mut scratch.pe,
+                                        b as u32,
+                                        &scratch.plan.modes[idx],
+                                        &scratch.forests[idx],
+                                        &mut scratch.deltas[b * spec.c_in + c],
+                                    ),
                             };
                             run.cycles += cycles;
                             run.dense_cycles += dense_plane_cycles;
@@ -519,6 +583,7 @@ impl SystemController {
         let reuse = scratch.pe.reuse();
         run.patterns_unique += reuse.patterns_unique;
         run.macs_reused += reuse.macs_reused;
+        run.macs_reused_temporal += reuse.macs_reused_temporal;
     }
 }
 
@@ -781,12 +846,33 @@ mod tests {
         }
     }
 
+    /// Re-derive the Prosperity mining charge the planner should have
+    /// produced: per tile, per non-silent extracted `(t, c)` plane, the
+    /// mined forest's representative count.
+    fn expected_prosperity_mine(spec: &ConvSpec, inputs: &[SpikeMap], cfg: &AccelConfig) -> u64 {
+        let plan = TilePlan::new(spec.in_w, spec.in_h, cfg.tile_w, cfg.tile_h);
+        let mut total = 0u64;
+        let mut p = SpikePlane::zeros(0, 0);
+        for tile in plan.iter() {
+            for m in inputs {
+                for c in 0..spec.c_in {
+                    m.plane(c).extract_tile_into(tile.y0, tile.x0, tile.h, tile.w, &mut p);
+                    if p.is_all_zero() {
+                        continue;
+                    }
+                    total += ReuseForest::mine(&p).patterns_unique();
+                }
+            }
+        }
+        total
+    }
+
     #[test]
-    fn prosperity_datapath_is_bit_exact_with_uniform_mining_charge() {
+    fn prosperity_datapath_is_bit_exact_with_representative_mining_charge() {
         // The product-sparsity datapath must change *nothing* about the
         // layer's outputs, gating statistics or dense baseline — only the
-        // shipped-design cycle count grows by the uniform mining charge
-        // (tile_h per extracted (t, b, c) plane per tile) and the reuse
+        // shipped-design cycle count grows by the mining charge (one cycle
+        // per mined representative, all-zero planes skipped) and the reuse
         // counters come alive.
         let spec = test_spec(ConvKind::Spike, 2, 2, false);
         let lw = test_weights(&spec, 41, 0.5);
@@ -805,26 +891,135 @@ mod tests {
         assert_eq!(run_ps.spikes_out, run_bm.spikes_out);
         assert_eq!(run_ps.gating, run_bm.gating);
         assert_eq!(run_ps.dense_cycles, run_bm.dense_cycles);
-        // 16×12 on an 8×6 tile → 4 tiles; in_t=2 × c_in=3 planes each,
-        // tile_h=6 mining cycles per plane.
-        let mine = 4 * (2 * 3) * 6;
+        let mine = expected_prosperity_mine(&spec, &inputs, &base);
+        assert!(mine > 0);
         assert_eq!(run_ps.cycles, run_bm.cycles + mine);
         assert_eq!(run_ps.total_cycles(), run_bm.total_cycles() + mine);
-        assert!(run_ps.patterns_unique > 0);
+        // The representative charge is bounded by the old uniform charge
+        // (patterns_unique ≤ th ≤ tile_h) and equals the mined patterns.
+        assert!(mine <= 4 * (2 * 3) * 6);
+        assert_eq!(run_ps.patterns_unique, mine);
         assert!(run_ps.macs_reused <= run_ps.gating.enabled);
 
-        // Multi-core: the charge is per-tile, so sharding stays exact and
-        // outputs bit-identical.
-        let run_mc = SystemController::new(
-            base.with_datapath(Datapath::Prosperity).with_cores(2),
-        )
-        .run_layer(&spec, &lw, LayerInput::Spikes(&inputs))
-        .unwrap();
+        // Multi-core: the charge is per-tile, so sharding conserves work
+        // and outputs stay bit-identical.
+        let run_mc =
+            SystemController::new(base.clone().with_datapath(Datapath::Prosperity).with_cores(2))
+                .run_layer(&spec, &lw, LayerInput::Spikes(&inputs))
+                .unwrap();
         assert_eq!(run_mc.output, run_bm.output);
         assert_eq!(run_mc.total_cycles(), run_ps.cycles);
-        assert_eq!(run_mc.cycles, run_ps.cycles / 2);
         assert_eq!(run_mc.patterns_unique, run_ps.patterns_unique);
         assert_eq!(run_mc.macs_reused, run_ps.macs_reused);
+    }
+
+    #[test]
+    fn prosperity_skips_mining_for_silent_planes() {
+        // An all-zero stimulus mines nothing and charges nothing: the
+        // prosperity cycle count collapses to the bit-mask count.
+        let spec = test_spec(ConvKind::Spike, 2, 2, false);
+        let lw = test_weights(&spec, 43, 0.5);
+        let zeros = vec![SpikeMap::zeros(spec.c_in, spec.in_h, spec.in_w); spec.in_t];
+        let base = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() };
+        let run_bm = SystemController::new(base.clone())
+            .run_layer(&spec, &lw, LayerInput::Spikes(&zeros))
+            .unwrap();
+        for datapath in [Datapath::Prosperity, Datapath::TemporalDelta] {
+            let run = SystemController::new(base.clone().with_datapath(datapath))
+                .run_layer(&spec, &lw, LayerInput::Spikes(&zeros))
+                .unwrap();
+            assert_eq!(run.cycles, run_bm.cycles, "{datapath:?}");
+            assert_eq!(run.patterns_unique, 0, "{datapath:?}");
+            assert_eq!(run.output, run_bm.output);
+        }
+    }
+
+    #[test]
+    fn temporal_datapath_is_bit_exact_and_counts_reuse() {
+        // Identical consecutive time steps: the temporal path must leave
+        // outputs, gating stats and the dense baseline untouched while
+        // patching every post-t0 plane from the cached delta — and it can
+        // never mine more than prosperity does.
+        let spec = test_spec(ConvKind::Spike, 3, 3, false);
+        let lw = test_weights(&spec, 45, 0.5);
+        let step = SpikeMap::from_dense(&random_inputs(&spec, 46, false)[0]);
+        let inputs = vec![step; spec.in_t];
+        let base = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() };
+        let run_bm = SystemController::new(base.clone())
+            .run_layer(&spec, &lw, LayerInput::Spikes(&inputs))
+            .unwrap();
+        let run_ps = SystemController::new(base.clone().with_datapath(Datapath::Prosperity))
+            .run_layer(&spec, &lw, LayerInput::Spikes(&inputs))
+            .unwrap();
+        let run_td = SystemController::new(base.clone().with_datapath(Datapath::TemporalDelta))
+            .run_layer(&spec, &lw, LayerInput::Spikes(&inputs))
+            .unwrap();
+        assert_eq!(run_td.output, run_bm.output);
+        assert_eq!(run_td.spikes_out, run_bm.spikes_out);
+        assert_eq!(run_td.gating, run_bm.gating);
+        assert_eq!(run_td.dense_cycles, run_bm.dense_cycles);
+        assert!(run_td.macs_reused_temporal > 0, "identical steps must replay");
+        assert!(run_td.rows_unchanged > 0);
+        assert!(run_td.cycles <= run_ps.cycles, "temporal never mines more than prosperity");
+        assert!(run_td.cycles >= run_bm.cycles);
+        assert!(
+            run_td.macs_reused + run_td.macs_reused_temporal <= run_td.gating.enabled,
+            "reuse is bounded by enabled events"
+        );
+
+        // Multi-core sharding stays bit-identical with live counters.
+        let run_mc =
+            SystemController::new(base.with_datapath(Datapath::TemporalDelta).with_cores(3))
+                .run_layer(&spec, &lw, LayerInput::Spikes(&inputs))
+                .unwrap();
+        assert_eq!(run_mc.output, run_bm.output);
+        assert_eq!(run_mc.gating, run_bm.gating);
+        assert_eq!(run_mc.macs_reused_temporal, run_td.macs_reused_temporal);
+        assert_eq!(run_mc.rows_unchanged, run_td.rows_unchanged);
+    }
+
+    #[test]
+    fn temporal_datapath_matches_reference_across_layer_shapes() {
+        // Independent random steps, mixed (1,3) replay, pooled layers and
+        // the head: the temporal path must be bit-exact with the bit-mask
+        // path everywhere (outputs, head accumulator, gating stats).
+        let cases = [
+            (test_spec(ConvKind::Spike, 3, 3, false), 51u64),
+            (test_spec(ConvKind::Spike, 1, 3, false), 52),
+            (test_spec(ConvKind::Spike, 2, 2, true), 53),
+        ];
+        let base = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() };
+        for (spec, seed) in cases {
+            let lw = test_weights(&spec, seed, 0.5);
+            let inputs: Vec<SpikeMap> =
+                random_inputs(&spec, seed + 100, false).iter().map(SpikeMap::from_dense).collect();
+            let run_bm = SystemController::new(base.clone())
+                .run_layer(&spec, &lw, LayerInput::Spikes(&inputs))
+                .unwrap();
+            let run_td = SystemController::new(base.clone().with_datapath(Datapath::TemporalDelta))
+                .run_layer(&spec, &lw, LayerInput::Spikes(&inputs))
+                .unwrap();
+            assert_eq!(run_td.output, run_bm.output, "{}", spec.in_t);
+            assert_eq!(run_td.gating, run_bm.gating, "{}", spec.in_t);
+            assert_eq!(run_td.spikes_out, run_bm.spikes_out);
+        }
+        // Head layer (1×1 kernel, no-reset accumulation over in_t).
+        let mut spec = test_spec(ConvKind::Output, 3, 3, false);
+        spec.k = 1;
+        let lw = test_weights(&spec, 54, 1.0);
+        let inputs: Vec<SpikeMap> =
+            random_inputs(&spec, 55, false).iter().map(SpikeMap::from_dense).collect();
+        let run_bm = SystemController::new(base.clone())
+            .run_layer(&spec, &lw, LayerInput::Spikes(&inputs))
+            .unwrap();
+        let run_td = SystemController::new(base.with_datapath(Datapath::TemporalDelta))
+            .run_layer(&spec, &lw, LayerInput::Spikes(&inputs))
+            .unwrap();
+        assert_eq!(
+            run_td.head_acc.as_ref().unwrap().data,
+            run_bm.head_acc.as_ref().unwrap().data
+        );
+        assert_eq!(run_td.gating, run_bm.gating);
     }
 
     #[test]

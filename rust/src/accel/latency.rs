@@ -8,10 +8,14 @@
 //! [`super::controller::SystemController`]; an integration test pins the
 //! two models together on a small layer.
 
-use super::controller::CycleCosts;
+use super::controller::{CycleCosts, LayerInput};
+use super::prosperity::ReuseForest;
+use super::temporal::{plan_tile, ForestCache, MiningPlan};
 use crate::config::{AccelConfig, ClusterConfig, Datapath, ShardPolicy};
+use crate::coordinator::tiler::TilePlan;
 use crate::model::topology::{ConvKind, ConvSpec, NetworkSpec};
 use crate::model::weights::ModelWeights;
+use crate::sparse::{SpikeMap, SpikePlane};
 
 /// Per-layer latency result.
 #[derive(Clone, Debug)]
@@ -127,15 +131,20 @@ impl LatencyModel {
         let switches = (spec.c_out * spec.c_in) as u64 * self.costs.input_switch;
         let lif = spec.c_out as u64 * out_t * self.costs.lif_writeback;
 
-        // Product-sparsity mining charge: `tile_h` cycles per extracted
-        // `(t, b, c)` plane per tile — the full register height even for
-        // clipped edge tiles, exactly what the executing controller
-        // charges, so the closed-form multi-core makespan stays exact.
-        // The dense baseline never mines.
-        let per_tile_mine = if self.cfg.datapath == Datapath::Prosperity {
-            conv_t * planes * spec.c_in as u64 * self.cfg.tile_h as u64
-        } else {
+        // Mining charge (product-sparsity and temporal-delta datapaths):
+        // stimulus-blind **upper bound** of `tile_h` cycles per extracted
+        // `(t, b, c)` plane per tile. The executing controller charges the
+        // mined forest's representative count (`patterns_unique ≤ th ≤
+        // tile_h`), skips all-zero planes, and on the temporal path skips
+        // cached/patched planes entirely, so the real charge is data
+        // dependent — [`LatencyModel::layer_with_input`] reproduces it
+        // exactly from the stimulus; this closed form bounds it from
+        // above (DSE and fps sweeps keep using the bound). The dense
+        // baseline never mines.
+        let per_tile_mine = if self.cfg.datapath == Datapath::BitMask {
             0
+        } else {
+            conv_t * planes * spec.c_in as u64 * self.cfg.tile_h as u64
         };
         let per_tile_sparse = conv_t * planes * (sparse_inner + switches) + lif + per_tile_mine;
         let per_tile_dense = conv_t * planes * (dense_inner + switches) + lif;
@@ -149,6 +158,110 @@ impl LatencyModel {
             dense_cycles: n_tiles * (per_tile_dense + self.costs.tile_setup),
             sparse_makespan: busiest_tiles * (per_tile_sparse + self.costs.tile_setup),
             dense_makespan: busiest_tiles * (per_tile_dense + self.costs.tile_setup),
+        }
+    }
+
+    /// Stimulus-aware cycles for one layer: the closed-form uniform costs
+    /// of [`LatencyModel::layer`] plus the **exact** data-dependent mining
+    /// charge, derived by running the very same planner
+    /// ([`super::temporal::plan_tile`]) the executing controller runs —
+    /// same bit-slice prep, same tile extraction, same tile order, same
+    /// shared pattern cache — so the per-core totals and the multi-core
+    /// makespan are in lock-step with the executed counters by
+    /// construction. On the bit-mask datapath this degenerates to
+    /// [`LatencyModel::layer`] exactly.
+    pub fn layer_with_input(
+        &self,
+        spec: &ConvSpec,
+        lw: &crate::model::weights::LayerWeights,
+        input: &LayerInput<'_>,
+    ) -> LayerLatency {
+        let planes = if spec.kind == ConvKind::Encoding { 8u64 } else { 1 };
+        let conv_t = spec.in_t as u64;
+        let out_t = if spec.kind == ConvKind::Output { spec.in_t } else { spec.out_t } as u64;
+        let mut sparse_inner = 0u64;
+        for k in 0..spec.c_out {
+            for c in 0..spec.c_in {
+                let plane = lw.w.plane(k, c);
+                sparse_inner += plane.iter().filter(|&&w| w != 0).count() as u64;
+            }
+        }
+        let dense_inner = (spec.c_out * spec.c_in * spec.k * spec.k) as u64;
+        let switches = (spec.c_out * spec.c_in) as u64 * self.costs.input_switch;
+        let lif = spec.c_out as u64 * out_t * self.costs.lif_writeback;
+        let per_tile_base = conv_t * planes * (sparse_inner + switches) + lif;
+        let per_tile_dense = conv_t * planes * (dense_inner + switches) + lif;
+
+        // Stimulus prep, mirroring the controller: bit-slice pixel frames
+        // (8 planes) or borrow the compressed spike maps directly.
+        let owned_bits: Vec<Vec<SpikeMap>> = match input {
+            LayerInput::Pixels(frames) => frames.iter().map(SpikeMap::bit_slice).collect(),
+            LayerInput::Spikes(_) => Vec::new(),
+        };
+        let step_maps: Vec<Vec<&SpikeMap>> = match input {
+            LayerInput::Pixels(_) => {
+                owned_bits.iter().map(|bits| bits.iter().collect()).collect()
+            }
+            LayerInput::Spikes(maps) => maps.iter().map(|m| vec![m]).collect(),
+        };
+        let nb = step_maps.first().map(|bits| bits.len()).unwrap_or(0);
+        let planes_per_step = nb * spec.c_in;
+        let want_tiles = step_maps.len() * planes_per_step;
+
+        let cores = self.cfg.num_cores.max(1);
+        let mut core_sparse = vec![0u64; cores];
+        let mut core_dense = vec![0u64; cores];
+        // One cache for the whole layer, reset up front — the exact
+        // lifecycle the controller gives its scratch cache.
+        let mut cache = ForestCache::new(self.cfg.temporal_cache_planes);
+        let mut tiles: Vec<SpikePlane> = Vec::new();
+        let mut forests: Vec<ReuseForest> = Vec::new();
+        let mut changed: Vec<bool> = Vec::new();
+        let mut plan = MiningPlan::default();
+        let grid = TilePlan::new(spec.in_w, spec.in_h, self.cfg.tile_w, self.cfg.tile_h);
+        for (tile_idx, tile) in grid.iter().enumerate() {
+            let mut mine = 0u64;
+            if self.cfg.datapath != Datapath::BitMask {
+                if tiles.len() < want_tiles {
+                    tiles.resize_with(want_tiles, || SpikePlane::zeros(0, 0));
+                    forests.resize_with(want_tiles, ReuseForest::default);
+                }
+                for (t, bit_maps) in step_maps.iter().enumerate() {
+                    for (b, m) in bit_maps.iter().enumerate() {
+                        for c in 0..spec.c_in {
+                            m.plane(c).extract_tile_into(
+                                tile.y0,
+                                tile.x0,
+                                tile.h,
+                                tile.w,
+                                &mut tiles[(t * nb + b) * spec.c_in + c],
+                            );
+                        }
+                    }
+                }
+                plan_tile(
+                    self.cfg.datapath,
+                    &tiles[..want_tiles],
+                    step_maps.len(),
+                    planes_per_step,
+                    spec.k,
+                    &mut cache,
+                    &mut forests,
+                    &mut changed,
+                    &mut plan,
+                );
+                mine = plan.mine_cycles;
+            }
+            let core = tile_idx % cores;
+            core_sparse[core] += per_tile_base + self.costs.tile_setup + mine;
+            core_dense[core] += per_tile_dense + self.costs.tile_setup;
+        }
+        LayerLatency {
+            name: spec.name.clone(),
+            sparse_cycles: core_sparse.iter().sum(),
+            dense_cycles: core_dense.iter().sum(),
+            sparse_makespan: core_sparse.iter().copied().max().unwrap_or(0),
+            dense_makespan: core_dense.iter().copied().max().unwrap_or(0),
         }
     }
 
@@ -425,19 +538,23 @@ mod tests {
     }
 
     #[test]
-    fn prosperity_model_in_lockstep_with_controller() {
-        // The reuse-adjusted model must match the executing controller's
-        // counters exactly — including the mining charge on clipped edge
-        // tiles (16×18 with 8×6 tiles: the bottom row is clipped) and an
-        // uneven core count — while the dense baseline stays untouched.
+    fn stimulus_aware_model_in_lockstep_with_controller() {
+        // The stimulus-aware model must match the executing controller's
+        // counters exactly for every datapath — including the
+        // data-dependent mining charge on clipped edge tiles (16×18 with
+        // 8×6 tiles: the bottom row is clipped), temporally correlated
+        // steps (step 1 = step 0 with one flipped pixel → patch planes)
+        // and uneven core counts — while the dense baseline stays
+        // untouched and the stimulus-blind closed form bounds the charge
+        // from above.
         let spec = ConvSpec {
             name: "t".into(),
             kind: ConvKind::Spike,
             c_in: 3,
             c_out: 4,
             k: 3,
-            in_t: 2,
-            out_t: 2,
+            in_t: 3,
+            out_t: 3,
             maxpool_after: false,
             in_w: 16,
             in_h: 18,
@@ -457,30 +574,97 @@ mod tests {
         mw.prune_fine_grained(0.7);
         let lw = mw.get("t").unwrap();
         let mut rng = Rng::new(52);
-        let inputs: Vec<crate::sparse::SpikeMap> = (0..2)
-            .map(|_| {
-                let n = 3 * 18 * 16;
-                crate::sparse::SpikeMap::from_dense(&Tensor::from_vec(
-                    3,
-                    18,
-                    16,
-                    (0..n).map(|_| u8::from(rng.chance(0.3))).collect(),
-                ))
-            })
+        let n = 3 * 18 * 16;
+        let step0: Vec<u8> = (0..n).map(|_| u8::from(rng.chance(0.3))).collect();
+        let mut step1 = step0.clone();
+        step1[5 * 16 + 3] ^= 1; // one flipped pixel → mostly patched planes
+        let step2: Vec<u8> = (0..n).map(|_| u8::from(rng.chance(0.3))).collect();
+        let inputs: Vec<crate::sparse::SpikeMap> = [step0, step1, step2]
+            .into_iter()
+            .map(|d| crate::sparse::SpikeMap::from_dense(&Tensor::from_vec(3, 18, 16, d)))
             .collect();
-        for cores in [1usize, 2, 3, 4] {
-            let base = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() };
-            let cfg = base.clone().with_datapath(Datapath::Prosperity).with_cores(cores);
-            let analytic = LatencyModel::new(cfg.clone()).layer(&spec, lw);
-            let bitmask = LatencyModel::new(base.with_cores(cores)).layer(&spec, lw);
+        let base = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() };
+        for datapath in crate::config::Datapath::all() {
+            for cores in [1usize, 2, 3, 4] {
+                let cfg = base.clone().with_datapath(datapath).with_cores(cores);
+                let model = LatencyModel::new(cfg.clone());
+                let aware = model.layer_with_input(&spec, lw, &LayerInput::Spikes(&inputs));
+                let blind = model.layer(&spec, lw);
+                let run = SystemController::new(cfg)
+                    .run_layer(&spec, lw, LayerInput::Spikes(&inputs))
+                    .unwrap();
+                assert_eq!(run.cycles, aware.sparse_makespan, "{datapath:?} cores={cores}");
+                assert_eq!(run.dense_cycles, aware.dense_makespan, "{datapath:?} cores={cores}");
+                assert_eq!(run.total_cycles(), aware.sparse_cycles, "{datapath:?} cores={cores}");
+                assert_eq!(aware.dense_cycles, blind.dense_cycles, "{datapath:?} cores={cores}");
+                assert!(
+                    aware.sparse_cycles <= blind.sparse_cycles,
+                    "{datapath:?} cores={cores}: blind model is an upper bound"
+                );
+                if datapath == Datapath::BitMask {
+                    assert_eq!(aware.sparse_cycles, blind.sparse_cycles, "cores={cores}");
+                    assert_eq!(aware.sparse_makespan, blind.sparse_makespan, "cores={cores}");
+                }
+            }
+        }
+        // The blind bound still separates the datapaths in the DSE grid:
+        // mining-capable paths price strictly above the bit-mask path.
+        let ps = LatencyModel::new(base.clone().with_datapath(Datapath::Prosperity))
+            .layer(&spec, lw);
+        let bm = LatencyModel::new(base).layer(&spec, lw);
+        assert!(ps.sparse_cycles > bm.sparse_cycles);
+    }
+
+    #[test]
+    fn stimulus_aware_model_handles_encoding_bit_planes() {
+        // Encoding layers bit-slice the stimulus into 8 planes; the
+        // stimulus-aware model must reproduce the controller's mining
+        // charge over all of them (Pixels input path).
+        let spec = ConvSpec {
+            name: "enc".into(),
+            kind: ConvKind::Encoding,
+            c_in: 3,
+            c_out: 4,
+            k: 3,
+            in_t: 1,
+            out_t: 1,
+            maxpool_after: false,
+            in_w: 16,
+            in_h: 12,
+            concat_with: None,
+            input_from: None,
+        };
+        let net = NetworkSpec {
+            name: "enc".into(),
+            input_w: 16,
+            input_h: 12,
+            input_c: 3,
+            layers: vec![spec.clone()],
+            num_anchors: 5,
+            num_classes: 3,
+        };
+        let mut mw = ModelWeights::random(&net, 1.0, 61);
+        mw.prune_fine_grained(0.5);
+        let lw = mw.get("enc").unwrap();
+        let mut rng = Rng::new(62);
+        let n = 3 * 12 * 16;
+        let frames = vec![Tensor::from_vec(
+            3,
+            12,
+            16,
+            (0..n).map(|_| rng.next_u32() as u8).collect::<Vec<u8>>(),
+        )];
+        let base = AccelConfig { tile_w: 8, tile_h: 6, ..AccelConfig::paper() };
+        for datapath in [Datapath::Prosperity, Datapath::TemporalDelta] {
+            let cfg = base.clone().with_datapath(datapath);
+            let aware = LatencyModel::new(cfg.clone())
+                .layer_with_input(&spec, lw, &LayerInput::Pixels(&frames));
             let run = SystemController::new(cfg)
-                .run_layer(&spec, lw, crate::accel::controller::LayerInput::Spikes(&inputs))
+                .run_layer(&spec, lw, LayerInput::Pixels(&frames))
                 .unwrap();
-            assert_eq!(run.cycles, analytic.sparse_makespan, "cores={cores}");
-            assert_eq!(run.dense_cycles, analytic.dense_makespan, "cores={cores}");
-            assert_eq!(run.total_cycles(), analytic.sparse_cycles, "cores={cores}");
-            assert_eq!(analytic.dense_cycles, bitmask.dense_cycles, "cores={cores}");
-            assert!(analytic.sparse_cycles > bitmask.sparse_cycles, "cores={cores}");
+            assert_eq!(run.cycles, aware.sparse_makespan, "{datapath:?}");
+            assert_eq!(run.total_cycles(), aware.sparse_cycles, "{datapath:?}");
+            assert_eq!(run.dense_cycles, aware.dense_makespan, "{datapath:?}");
         }
     }
 

@@ -33,6 +33,7 @@
 //! [`pe`] — the 576-element gated PE array with clock-gating statistics;
 //! [`one_to_all`] — the gated one-to-all product over one kernel plane;
 //! [`prosperity`] — product-sparsity pattern mining (row reuse forests);
+//! [`temporal`] — temporal-delta planner + cross-tile pattern cache;
 //! [`lif_unit`] / [`maxpool_unit`] — post-processing units;
 //! [`sram`] / [`dram`] — memory models with access + energy accounting;
 //! [`reorder`] — temporal/channel output reordering (Fig 13);
@@ -54,6 +55,7 @@ pub mod pe;
 pub mod prosperity;
 pub mod reorder;
 pub mod sram;
+pub mod temporal;
 
 pub use controller::{LayerRun, SystemController};
 pub use dram::{DramModel, Interconnect, LinkSpec};
@@ -64,3 +66,4 @@ pub use one_to_all::GatedOneToAll;
 pub use pe::{GatingStats, PeArray, ReuseStats};
 pub use prosperity::{ReuseForest, RowNode};
 pub use sram::{SramBank, SramKind};
+pub use temporal::{ForestCache, MiningPlan, PlaneDelta, PlaneMode};

@@ -24,10 +24,14 @@
 //! per-pixel event walk survives as [`GatedOneToAll::run_events`] and the
 //! dense enable-map form as [`GatedOneToAll::run_reference`]; all three
 //! are property-tested bit-identical in sums, statistics and cycles.
+//! [`GatedOneToAll::run_prosperity`] and [`GatedOneToAll::run_temporal`]
+//! are the product-sparsity and temporal-delta forms — same sums,
+//! statistics and cycles again, only the reuse bookkeeping differs.
 
 use super::encoder::PriorityEncoder;
 use super::pe::PeArray;
 use super::prosperity::ReuseForest;
+use super::temporal::{PlaneDelta, PlaneMode};
 use crate::sparse::{BitMaskKernel, SpikePlane};
 
 /// Executes gated one-to-all products over one compressed tile.
@@ -113,12 +117,14 @@ impl<'a> GatedOneToAll<'a> {
     ) -> u64 {
         debug_assert_eq!(pe.tile_h, self.tile.h);
         debug_assert_eq!(pe.tile_w, self.tile.w);
-        debug_assert_eq!(forest.rows(), self.tile.h);
         if self.tile.is_all_zero() {
+            // Silent planes are never mined (the planner skips them), so
+            // `forest` may be stale here — don't shape-check it.
             let cycles = kernel.nnz() as u64;
             pe.gate_all(cycles);
             return cycles;
         }
+        debug_assert_eq!(forest.rows(), self.tile.h);
         let mut enc = PriorityEncoder::load_words(&kernel.map, kernel.kw);
         let mut nz_iter = kernel.nz.iter();
         let mut cycles = 0;
@@ -128,6 +134,92 @@ impl<'a> GatedOneToAll<'a> {
             let dx = c as isize - (kernel.kw / 2) as isize;
             pe.gated_accumulate_reuse(self.tile, forest, dy, dx, w, shift);
             cycles += 1;
+        }
+        cycles
+    }
+
+    /// Temporal-delta form of [`GatedOneToAll::run_prosperity`], executing
+    /// the plane in the mode the planner chose
+    /// ([`super::temporal::plan_tile`]) and maintaining the plane's cached
+    /// contribution in `delta`:
+    ///
+    /// - `Silent`: O(1) gate-all (the plane is all-zero); the delta is
+    ///   zeroed so the next step can patch against it.
+    /// - `Rebuild`: full product-sparsity compute via the tracked reuse
+    ///   path, capturing the plane's own contribution (snapshot/diff) and
+    ///   per-row enable counts into `delta`.
+    /// - `Patch`: only the `changed` output rows are recomputed (a
+    ///   row-restricted word-parallel walk, no forest at all); the rest
+    ///   replay the cached delta row-for-row, with their events tallied in
+    ///   [`super::pe::ReuseStats::macs_reused_temporal`].
+    ///
+    /// Partial sums, gating statistics and the weight-stream cycle count
+    /// stay bit-identical to [`GatedOneToAll::run`] in every mode — the
+    /// hardware still streams one nonzero weight per cycle; only where the
+    /// partial sums come from changes.
+    pub fn run_temporal(
+        &mut self,
+        kernel: &BitMaskKernel,
+        pe: &mut PeArray,
+        shift: u32,
+        mode: &PlaneMode,
+        forest: &ReuseForest,
+        delta: &mut PlaneDelta,
+    ) -> u64 {
+        let (th, tw) = (self.tile.h, self.tile.w);
+        debug_assert_eq!(pe.tile_h, th);
+        debug_assert_eq!(pe.tile_w, tw);
+        let cycles = kernel.nnz() as u64;
+        match mode {
+            PlaneMode::Silent => {
+                debug_assert!(self.tile.is_all_zero());
+                delta.reset(th, tw);
+                pe.gate_all(cycles);
+            }
+            PlaneMode::Rebuild => {
+                debug_assert_eq!(forest.rows(), th);
+                delta.reset(th, tw);
+                pe.snapshot_acc_into(&mut delta.snapshot);
+                let mut enc = PriorityEncoder::load_words(&kernel.map, kernel.kw);
+                let mut nz_iter = kernel.nz.iter();
+                while let Some((r, c)) = enc.next_position() {
+                    let w = *nz_iter.next().expect("map/nz agree");
+                    let dy = r as isize - (kernel.kh / 2) as isize;
+                    let dx = c as isize - (kernel.kw / 2) as isize;
+                    pe.gated_accumulate_reuse_tracked(
+                        self.tile,
+                        forest,
+                        dy,
+                        dx,
+                        w,
+                        shift,
+                        &mut delta.row_enabled,
+                    );
+                }
+                pe.diff_acc_into(&delta.snapshot, &mut delta.acc);
+            }
+            PlaneMode::Patch { changed } => {
+                debug_assert_eq!(changed.len(), th);
+                debug_assert_eq!(delta.row_enabled.len(), th);
+                delta.clear_rows(changed, tw);
+                let mut enc = PriorityEncoder::load_words(&kernel.map, kernel.kw);
+                let mut nz_iter = kernel.nz.iter();
+                while let Some((r, c)) = enc.next_position() {
+                    let w = *nz_iter.next().expect("map/nz agree");
+                    let dy = r as isize - (kernel.kh / 2) as isize;
+                    let dx = c as isize - (kernel.kw / 2) as isize;
+                    let contrib = (w as i32) << shift;
+                    self.tile.accumulate_shifted_words_rows_into(
+                        &mut delta.acc,
+                        dy,
+                        dx,
+                        contrib,
+                        changed,
+                        &mut delta.row_enabled,
+                    );
+                }
+                pe.apply_plane_delta(&delta.acc, &delta.row_enabled, changed, cycles);
+            }
         }
         cycles
     }
@@ -311,6 +403,128 @@ mod tests {
             assert_eq!(pe.stats(), pe_ps.stats(), "k={k} th={th} tw={tw}");
             assert!(pe_ps.reuse().macs_reused <= pe_ps.stats().enabled);
         });
+    }
+
+    /// The temporal-delta path vs the word-parallel path over a chain of
+    /// correlated time steps (identical / one-pixel-flip / independent),
+    /// across kernel sizes, densities and clipped tile widths: the planner
+    /// picks the modes, and the executed sums, gating statistics and
+    /// cycles must stay bit-identical step by step, with the combined
+    /// reuse savings bounded by the enabled events.
+    #[test]
+    fn prop_temporal_matches_words_across_correlated_steps() {
+        use crate::accel::prosperity::ReuseForest;
+        use crate::accel::temporal::{plan_tile, ForestCache, MiningPlan, PlaneDelta};
+        use crate::config::Datapath;
+        run_prop("one-to-all/temporal-vs-words", |g| {
+            let k = [1usize, 3, 5][g.usize(0, 3)];
+            let th = g.usize(1, 10);
+            let tw = g.usize(1, 80);
+            let steps = g.usize(1, 6);
+            let density = g.f64(0.0, 1.0);
+            let mut cur = g.spikes(th * tw, density);
+            let mut planes = vec![SpikePlane::from_dense(&cur, th, tw)];
+            for _ in 1..steps {
+                match g.usize(0, 3) {
+                    0 => {} // identical step
+                    1 => {
+                        let i = g.usize(0, th * tw); // one-pixel flip
+                        cur[i] ^= 1;
+                    }
+                    _ => cur = g.spikes(th * tw, density), // independent
+                }
+                planes.push(SpikePlane::from_dense(&cur, th, tw));
+            }
+            let bm = BitMaskKernel::from_dense(&g.sparse_i8(k * k, 0.5), k, k);
+
+            let mut cache = ForestCache::new(8);
+            let mut forests = vec![ReuseForest::default(); steps];
+            let mut scratch = Vec::new();
+            let mut plan = MiningPlan::default();
+            plan_tile(
+                Datapath::TemporalDelta,
+                &planes,
+                steps,
+                1,
+                k,
+                &mut cache,
+                &mut forests,
+                &mut scratch,
+                &mut plan,
+            );
+
+            let mut pe_td = PeArray::new(th, tw);
+            let mut pe_w = PeArray::new(th, tw);
+            let mut delta = PlaneDelta::default();
+            for (t, plane) in planes.iter().enumerate() {
+                let c_td = GatedOneToAll::new(plane).run_temporal(
+                    &bm,
+                    &mut pe_td,
+                    0,
+                    &plan.modes[t],
+                    &forests[t],
+                    &mut delta,
+                );
+                let c_w = GatedOneToAll::new(plane).run(&bm, &mut pe_w, 0);
+                assert_eq!(c_td, c_w, "k={k} th={th} tw={tw} t={t}");
+                assert_eq!(
+                    pe_td.partial_sums(),
+                    pe_w.partial_sums(),
+                    "k={k} th={th} tw={tw} t={t}"
+                );
+                assert_eq!(pe_td.stats(), pe_w.stats(), "k={k} th={th} tw={tw} t={t}");
+            }
+            let r = pe_td.reuse();
+            assert!(r.macs_reused + r.macs_reused_temporal <= pe_td.stats().enabled);
+        });
+    }
+
+    /// Identical consecutive steps replay the entire plane from the
+    /// temporal delta: the second step costs no fresh MACs at all.
+    #[test]
+    fn temporal_identical_step_is_fully_replayed() {
+        use crate::accel::prosperity::ReuseForest;
+        use crate::accel::temporal::{plan_tile, ForestCache, MiningPlan, PlaneDelta};
+        use crate::config::Datapath;
+        let dense = vec![1, 0, 1, /**/ 0, 1, 0, /**/ 1, 1, 0, /**/ 0, 0, 1];
+        let plane = SpikePlane::from_dense(&dense, 4, 3);
+        let planes = vec![plane.clone(), plane.clone()];
+        let bm = BitMaskKernel::from_dense(&[0, 2, 0, -1, 3, 0, 0, 0, 1], 3, 3);
+        let mut cache = ForestCache::new(4);
+        let mut forests = vec![ReuseForest::default(); 2];
+        let mut scratch = Vec::new();
+        let mut plan = MiningPlan::default();
+        plan_tile(
+            Datapath::TemporalDelta,
+            &planes,
+            2,
+            1,
+            3,
+            &mut cache,
+            &mut forests,
+            &mut scratch,
+            &mut plan,
+        );
+        assert_eq!(plan.rows_unchanged, 4);
+        let mut pe = PeArray::new(4, 3);
+        let mut pe_w = PeArray::new(4, 3);
+        let mut delta = PlaneDelta::default();
+        for (t, p) in planes.iter().enumerate() {
+            GatedOneToAll::new(p).run_temporal(
+                &bm,
+                &mut pe,
+                0,
+                &plan.modes[t],
+                &forests[t],
+                &mut delta,
+            );
+            GatedOneToAll::new(p).run(&bm, &mut pe_w, 0);
+        }
+        assert_eq!(pe.partial_sums(), pe_w.partial_sums());
+        assert_eq!(pe.stats(), pe_w.stats());
+        // Both steps book the same enabled events; the second step's all
+        // came from the cached delta.
+        assert_eq!(pe.reuse().macs_reused_temporal * 2, pe.stats().enabled);
     }
 
     /// Prosperity on a duplicate-row tile reuses the repeated rows' MACs

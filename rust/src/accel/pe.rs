@@ -58,6 +58,11 @@ pub struct ReuseStats {
     /// delta instead of a fresh MAC — the product-sparsity saving on top
     /// of bit sparsity. `enabled == fresh MACs + macs_reused`.
     pub macs_reused: u64,
+    /// Accumulate events served by replaying the previous time step's
+    /// cached plane delta (the temporal-delta datapath's cross-time-step
+    /// saving — disjoint from `macs_reused`, which counts within-plane
+    /// pattern replays).
+    pub macs_reused_temporal: u64,
 }
 
 impl ReuseStats {
@@ -65,6 +70,7 @@ impl ReuseStats {
     pub fn merge(&mut self, other: &ReuseStats) {
         self.patterns_unique += other.patterns_unique;
         self.macs_reused += other.macs_reused;
+        self.macs_reused_temporal += other.macs_reused_temporal;
     }
 }
 
@@ -239,6 +245,40 @@ impl PeArray {
         weight: i8,
         shift: u32,
     ) {
+        self.gated_accumulate_reuse_inner(tile, forest, dy, dx, weight, shift, None);
+    }
+
+    /// [`PeArray::gated_accumulate_reuse`] that additionally accumulates
+    /// the per-output-row enabled counts into `row_enabled` — the
+    /// temporal-delta rebuild capture, which must remember how many
+    /// enable events each row contributed so a later replay can re-book
+    /// them row-by-row.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gated_accumulate_reuse_tracked(
+        &mut self,
+        tile: &crate::sparse::SpikePlane,
+        forest: &ReuseForest,
+        dy: isize,
+        dx: isize,
+        weight: i8,
+        shift: u32,
+        row_enabled: &mut [u64],
+    ) {
+        debug_assert_eq!(row_enabled.len(), self.tile_h);
+        self.gated_accumulate_reuse_inner(tile, forest, dy, dx, weight, shift, Some(row_enabled));
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn gated_accumulate_reuse_inner(
+        &mut self,
+        tile: &crate::sparse::SpikePlane,
+        forest: &ReuseForest,
+        dy: isize,
+        dx: isize,
+        weight: i8,
+        shift: u32,
+        mut row_enabled: Option<&mut [u64]>,
+    ) {
         debug_assert_eq!((tile.h, tile.w), (self.tile_h, self.tile_w));
         debug_assert_eq!(forest.rows(), tile.h);
         let contrib = (weight as i32) << shift;
@@ -317,10 +357,65 @@ impl PeArray {
                 *a += d;
             }
             enabled += self.class_applied[c];
+            if let Some(track) = row_enabled.as_deref_mut() {
+                track[y] += self.class_applied[c];
+            }
         }
         self.stats.enabled += enabled;
         self.stats.gated += (h * w) as u64 - enabled;
         self.reuse.macs_reused += enabled - fresh;
+    }
+
+    /// Copy the current partial sums into `out` — the temporal-delta
+    /// rebuild snapshot, taken just before a plane's weight loop so the
+    /// plane's own contribution can be isolated afterwards with
+    /// [`PeArray::diff_acc_into`].
+    pub fn snapshot_acc_into(&self, out: &mut Vec<i32>) {
+        out.clear();
+        out.extend_from_slice(&self.acc);
+    }
+
+    /// `delta[i] = acc[i] - before[i]`: isolate what accumulated since
+    /// the [`PeArray::snapshot_acc_into`] snapshot `before`.
+    pub fn diff_acc_into(&self, before: &[i32], delta: &mut [i32]) {
+        debug_assert_eq!(before.len(), self.acc.len());
+        debug_assert_eq!(delta.len(), self.acc.len());
+        for ((d, &a), &b) in delta.iter_mut().zip(&self.acc).zip(before) {
+            *d = a - b;
+        }
+    }
+
+    /// Replay a cached plane delta (temporal-delta patch step): add
+    /// `acc_delta` into every partial sum and re-book the cached per-row
+    /// enable counts exactly as the bit-mask path would have counted
+    /// them over `events` one-to-all cycles. Rows not marked in `changed`
+    /// were served entirely from the cache — their events are tallied in
+    /// [`ReuseStats::macs_reused_temporal`]; the `changed` rows' counts
+    /// were freshly recomputed by the caller and count as ordinary MACs.
+    pub fn apply_plane_delta(
+        &mut self,
+        acc_delta: &[i32],
+        row_enabled: &[u64],
+        changed: &[bool],
+        events: u64,
+    ) {
+        debug_assert_eq!(acc_delta.len(), self.acc.len());
+        debug_assert_eq!(row_enabled.len(), self.tile_h);
+        debug_assert_eq!(changed.len(), self.tile_h);
+        for (a, &d) in self.acc.iter_mut().zip(acc_delta) {
+            *a += d;
+        }
+        let mut enabled = 0u64;
+        let mut replayed = 0u64;
+        for (y, &re) in row_enabled.iter().enumerate() {
+            enabled += re;
+            if !changed[y] {
+                replayed += re;
+            }
+        }
+        self.stats.enabled += enabled;
+        self.stats.gated += events * self.acc.len() as u64 - enabled;
+        self.reuse.macs_reused_temporal += replayed;
     }
 
     /// Credit `patterns` freshly-mined unique row patterns (the controller
@@ -509,6 +604,81 @@ mod tests {
             assert_eq!(reuse_pe.partial_sums(), word_pe.partial_sums());
             assert_eq!(reuse_pe.stats(), word_pe.stats());
             assert!(reuse_pe.reuse().macs_reused <= reuse_pe.stats().enabled);
+        });
+    }
+
+    #[test]
+    fn prop_tracked_reuse_matches_untracked_and_rows_sum_to_enabled() {
+        // The tracked rebuild form must leave sums/stats identical to the
+        // untracked reuse path while its per-row counts sum to exactly
+        // the enabled events it booked.
+        use crate::accel::prosperity::ReuseForest;
+        use crate::sparse::SpikePlane;
+        run_prop("pe/tracked-reuse", |g| {
+            let h = g.usize(1, 10);
+            let w = g.usize(1, 70);
+            let plane = SpikePlane::from_dense(&g.spikes(h * w, g.f64(0.0, 1.0)), h, w);
+            let forest = ReuseForest::mine(&plane);
+            let mut plain = PeArray::new(h, w);
+            let mut tracked = PeArray::new(h, w);
+            let mut rows = vec![0u64; h];
+            for _ in 0..g.usize(1, 4) {
+                let dy = g.i64(-2, 2) as isize;
+                let dx = g.i64(-2, 2) as isize;
+                let wt = g.i8();
+                let shift = g.usize(0, 3) as u32;
+                plain.gated_accumulate_reuse(&plane, &forest, dy, dx, wt, shift);
+                tracked
+                    .gated_accumulate_reuse_tracked(&plane, &forest, dy, dx, wt, shift, &mut rows);
+            }
+            assert_eq!(tracked.partial_sums(), plain.partial_sums());
+            assert_eq!(tracked.stats(), plain.stats());
+            assert_eq!(tracked.reuse(), plain.reuse());
+            assert_eq!(rows.iter().sum::<u64>(), tracked.stats().enabled);
+        });
+    }
+
+    #[test]
+    fn prop_delta_capture_and_replay_is_bit_exact() {
+        // Snapshot/diff a plane's contribution on one array, replay it on
+        // a second with apply_plane_delta: sums and gating stats must
+        // equal a direct recompute, and with no rows marked changed every
+        // enabled event lands in macs_reused_temporal.
+        use crate::accel::prosperity::ReuseForest;
+        use crate::sparse::SpikePlane;
+        run_prop("pe/delta-replay", |g| {
+            let h = g.usize(1, 8);
+            let w = g.usize(1, 70);
+            let plane = SpikePlane::from_dense(&g.spikes(h * w, g.f64(0.0, 1.0)), h, w);
+            let forest = ReuseForest::mine(&plane);
+            let passes = g.usize(1, 4);
+            let shifts: Vec<(isize, isize, i8, u32)> = (0..passes)
+                .map(|_| {
+                    (g.i64(-2, 2) as isize, g.i64(-2, 2) as isize, g.i8(), g.usize(0, 3) as u32)
+                })
+                .collect();
+            // Capture pass (on top of a nonzero preload, to prove the
+            // snapshot isolates only the plane's own contribution).
+            let mut cap = PeArray::new(h, w);
+            cap.preload(g.i64(-50, 50) as i32);
+            let mut before = Vec::new();
+            cap.snapshot_acc_into(&mut before);
+            let mut rows = vec![0u64; h];
+            for &(dy, dx, wt, shift) in &shifts {
+                cap.gated_accumulate_reuse_tracked(&plane, &forest, dy, dx, wt, shift, &mut rows);
+            }
+            let mut delta = vec![0i32; h * w];
+            cap.diff_acc_into(&before, &mut delta);
+            // Replay vs direct recompute.
+            let mut replay = PeArray::new(h, w);
+            let mut direct = PeArray::new(h, w);
+            replay.apply_plane_delta(&delta, &rows, &vec![false; h], passes as u64);
+            for &(dy, dx, wt, shift) in &shifts {
+                direct.gated_accumulate_words(&plane, dy, dx, wt, shift);
+            }
+            assert_eq!(replay.partial_sums(), direct.partial_sums());
+            assert_eq!(replay.stats(), direct.stats());
+            assert_eq!(replay.reuse().macs_reused_temporal, replay.stats().enabled);
         });
     }
 

@@ -1,0 +1,573 @@
+//! Temporal-delta reuse on top of product-sparsity mining: the paper's
+//! strongest untapped correlation is *temporal* — consecutive time steps
+//! of the same tile plane differ by a few rows — and the second strongest
+//! is *spatial recurrence* — the same row patterns showing up in
+//! neighboring tiles and channels. The [`Datapath::TemporalDelta`] path
+//! exploits both on top of [`super::prosperity`]:
+//!
+//! - **Temporal deltas.** Each `(bit, channel)` plane's accumulator
+//!   contribution and per-row enable counts are captured into a
+//!   [`PlaneDelta`] when the plane is computed in full. At the next time
+//!   step the new plane is row-wise XOR-diffed against the previous one
+//!   ([`crate::sparse::SpikePlane::diff_rows_into`]); output rows whose
+//!   (replicate-clamped) enable windows read only unchanged input rows
+//!   replay the cached delta with one vector add per row, and only the
+//!   changed rows are recomputed. Full compute happens at `t = 0` — the
+//!   mixed (1,3) schedule's single-step layers simply never patch.
+//! - **Cross-tile pattern cache.** [`ReuseForest`] mining is promoted to
+//!   a small LRU ([`ForestCache`]) keyed by a row-bitmap hash: a plane
+//!   bit-identical to a recently mined one (neighboring tile, another
+//!   channel) fetches the mined forest instead of re-mining. Hits are
+//!   verified word-for-word against the stored bitmap, so a hash
+//!   collision can never smuggle in a wrong forest.
+//!
+//! [`plan_tile`] is the **shared planner**: the executing controller and
+//! the stimulus-aware analytic latency model both call it on the same
+//! extracted tile planes, so the modeled mining cycles are in exact
+//! lock-step with the executed counters by construction — including the
+//! all-zero silent skip and the representative-count mining charge that
+//! also apply to the plain Prosperity datapath.
+
+use super::prosperity::ReuseForest;
+use crate::config::Datapath;
+use crate::sparse::SpikePlane;
+
+/// One plane's cached temporal state: the accumulator contribution of the
+/// previous time step (`acc[y*w + x]`) and the per-output-row enabled
+/// event counts that produced it. Replaying a row applies the cached
+/// partial sums and re-books exactly the enable events the bit-mask path
+/// would have counted — bit-exact accumulators *and* gating statistics.
+#[derive(Clone, Debug, Default)]
+pub struct PlaneDelta {
+    /// Partial-sum contribution of the cached plane, `h × w` row-major.
+    pub acc: Vec<i32>,
+    /// Enabled (MAC) events per output row of the cached plane.
+    pub row_enabled: Vec<u64>,
+    /// Snapshot scratch for the rebuild capture (see
+    /// [`crate::accel::PeArray::snapshot_acc_into`]).
+    pub snapshot: Vec<i32>,
+}
+
+impl PlaneDelta {
+    /// Re-shape to `h × w` and zero, reusing the buffers — called on every
+    /// full rebuild (and on silent planes, whose contribution is zero).
+    pub fn reset(&mut self, h: usize, w: usize) {
+        self.acc.clear();
+        self.acc.resize(h * w, 0);
+        self.row_enabled.clear();
+        self.row_enabled.resize(h, 0);
+    }
+
+    /// Zero the delta rows marked in `changed` (width `w`) ahead of their
+    /// fresh recomputation; unchanged rows keep their cached state.
+    pub fn clear_rows(&mut self, changed: &[bool], w: usize) {
+        debug_assert_eq!(changed.len(), self.row_enabled.len());
+        for (y, &ch) in changed.iter().enumerate() {
+            if ch {
+                self.acc[y * w..(y + 1) * w].iter_mut().for_each(|v| *v = 0);
+                self.row_enabled[y] = 0;
+            }
+        }
+    }
+
+    /// Total enabled events across all rows.
+    pub fn total_enabled(&self) -> u64 {
+        self.row_enabled.iter().sum()
+    }
+}
+
+/// How the temporal planner decided to execute one `(t, bit, channel)`
+/// plane of a tile.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlaneMode {
+    /// All-zero plane: O(1) gate-all, no mining, delta zeroed.
+    Silent,
+    /// Full product-sparsity compute with delta capture: `t = 0`, or the
+    /// diff marked too many rows changed for patching to pay.
+    Rebuild,
+    /// Replay the cached delta on unchanged output rows, recompute only
+    /// the marked ones (no forest walk at all).
+    Patch {
+        /// Changed *output* rows: the dilation of the changed input rows
+        /// by the kernel's row footprint (see [`dilate_changed_rows`]).
+        changed: Vec<bool>,
+    },
+}
+
+/// Dilate changed *input* rows to the output rows whose enable windows
+/// read them: output row `y` reads replicate-clamped source rows
+/// `y + r - kh/2` for `r in 0..kh`, so it must be recomputed iff any of
+/// those source rows changed. Returns the mask and its popcount.
+pub fn dilate_changed_rows(changed_in: &[bool], kh: usize) -> (Vec<bool>, usize) {
+    let h = changed_in.len();
+    let mut out = vec![false; h];
+    if h == 0 {
+        return (out, 0);
+    }
+    let mut n = 0usize;
+    for (y, o) in out.iter_mut().enumerate() {
+        for r in 0..kh {
+            let sy = (y as isize + r as isize - (kh / 2) as isize).clamp(0, h as isize - 1);
+            if changed_in[sy as usize] {
+                *o = true;
+                n += 1;
+                break;
+            }
+        }
+    }
+    (out, n)
+}
+
+/// One cached mined plane: the verification bitmap, its forest, and the
+/// LRU bookkeeping.
+#[derive(Clone, Debug)]
+struct CacheEntry {
+    hash: u64,
+    h: usize,
+    w: usize,
+    /// Stored row words of the mined plane — hits are confirmed by exact
+    /// word equality, so the forest served is always the plane's own.
+    words: Vec<u64>,
+    forest: ReuseForest,
+    last_use: u64,
+}
+
+/// Cross-tile/channel LRU of mined [`ReuseForest`]s, keyed by a row-bitmap
+/// hash and verified word-for-word on every hit. Deliberately a plain
+/// `Vec` scan — capacities are small (default 64 planes) and the scan is
+/// deterministic, which keeps executed cycles reproducible across runs
+/// and platforms (a `HashMap`'s iteration order would not be).
+#[derive(Clone, Debug, Default)]
+pub struct ForestCache {
+    entries: Vec<CacheEntry>,
+    capacity: usize,
+    tick: u64,
+}
+
+impl ForestCache {
+    /// Empty cache with room for `capacity` mined planes (0 disables
+    /// caching: every rebuild re-mines).
+    pub fn new(capacity: usize) -> ForestCache {
+        ForestCache { entries: Vec::new(), capacity, tick: 0 }
+    }
+
+    /// Drop every entry and set a (possibly new) capacity — called at the
+    /// start of each layer run so cycle counts never depend on what
+    /// earlier layers or frames happened to mine.
+    pub fn reset(&mut self, capacity: usize) {
+        self.entries.clear();
+        self.capacity = capacity;
+        self.tick = 0;
+    }
+
+    /// Cached plane count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the cache holds nothing.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// FNV-1a over the plane shape and row words.
+    fn hash_plane(plane: &SpikePlane) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        mix(plane.h as u64);
+        mix(plane.w as u64);
+        for y in 0..plane.h {
+            for &word in plane.row_words(y) {
+                mix(word);
+            }
+        }
+        h
+    }
+
+    /// Fetch the mined forest for `plane` into `out`, mining (and
+    /// inserting) on a miss. Returns `true` on a cache hit. The forest is
+    /// cloned out rather than borrowed so a later eviction can never
+    /// invalidate a plane that is still executing.
+    pub fn fetch_or_mine(&mut self, plane: &SpikePlane, out: &mut ReuseForest) -> bool {
+        self.tick += 1;
+        let hash = Self::hash_plane(plane);
+        for e in &mut self.entries {
+            if e.hash == hash
+                && e.h == plane.h
+                && e.w == plane.w
+                && e.words.len() == plane.h * plane.row_words(0).len()
+                && (0..plane.h).all(|y| {
+                    let wpr = plane.row_words(y).len();
+                    &e.words[y * wpr..(y + 1) * wpr] == plane.row_words(y)
+                })
+            {
+                out.clone_from(&e.forest);
+                e.last_use = self.tick;
+                return true;
+            }
+        }
+        out.mine_into(plane);
+        if self.capacity > 0 {
+            if self.entries.len() >= self.capacity {
+                // Evict the least recently used entry; `last_use` ticks
+                // are unique, so the victim is unambiguous.
+                let victim = self
+                    .entries
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, e)| e.last_use)
+                    .map(|(i, _)| i)
+                    .expect("capacity > 0");
+                self.entries.swap_remove(victim);
+            }
+            let mut words = Vec::with_capacity(plane.h * plane.row_words(0).len());
+            for y in 0..plane.h {
+                words.extend_from_slice(plane.row_words(y));
+            }
+            self.entries.push(CacheEntry {
+                hash,
+                h: plane.h,
+                w: plane.w,
+                words,
+                forest: out.clone(),
+                last_use: self.tick,
+            });
+        }
+        false
+    }
+}
+
+/// One tile's planner outcome: the per-plane temporal modes (empty for
+/// the non-temporal datapaths) and the mining-charge summary the cycle
+/// accounting consumes. Produced by [`plan_tile`].
+#[derive(Clone, Debug, Default)]
+pub struct MiningPlan {
+    /// Per-plane execution mode, indexed like the extracted tile planes
+    /// (`(t * planes_per_step) + plane`). Empty unless the datapath is
+    /// [`Datapath::TemporalDelta`].
+    pub modes: Vec<PlaneMode>,
+    /// Mining cycles charged to the shipped design for this tile: the
+    /// freshly mined forests' representative counts (cache hits and
+    /// silent planes charge nothing).
+    pub mine_cycles: u64,
+    /// Planes whose forest came from the cross-tile pattern cache.
+    pub cache_hits: u64,
+    /// Output rows the planner marked replayable from the temporal delta.
+    pub rows_unchanged: u64,
+    /// Unique patterns freshly mined across the tile's planes.
+    pub patterns_mined: u64,
+}
+
+impl MiningPlan {
+    /// Zero the plan for the next tile, keeping buffer capacity.
+    pub fn clear(&mut self) {
+        self.modes.clear();
+        self.mine_cycles = 0;
+        self.cache_hits = 0;
+        self.rows_unchanged = 0;
+        self.patterns_mined = 0;
+    }
+}
+
+/// Plan one spatial tile's mining work — the single source of truth for
+/// the data-dependent part of the cycle model, shared verbatim by the
+/// executing controller and the stimulus-aware analytic latency model:
+///
+/// - **BitMask**: nothing mines, nothing is charged.
+/// - **Prosperity**: every *non-silent* plane is mined into `forests[i]`
+///   and charged its representative count ([`ReuseForest::patterns_unique`]);
+///   all-zero planes are skipped outright (no mining, no charge).
+/// - **TemporalDelta**: per plane, choose [`PlaneMode`]: `Silent` for
+///   all-zero planes; `Rebuild` at `t = 0` or when more than half the
+///   output rows changed (fetching the forest through `cache`, charged
+///   only on a miss); `Patch` otherwise (no forest, no mining charge).
+///
+/// `tiles` is laid out `(t * planes_per_step) + plane` for
+/// `t in 0..steps`; `kh` is the layer's kernel height (the dilation
+/// footprint); `changed_scratch` is caller-owned diff scratch.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_tile(
+    datapath: Datapath,
+    tiles: &[SpikePlane],
+    steps: usize,
+    planes_per_step: usize,
+    kh: usize,
+    cache: &mut ForestCache,
+    forests: &mut [ReuseForest],
+    changed_scratch: &mut Vec<bool>,
+    plan: &mut MiningPlan,
+) {
+    debug_assert!(tiles.len() >= steps * planes_per_step);
+    debug_assert!(forests.len() >= tiles.len() || datapath == Datapath::BitMask);
+    plan.clear();
+    match datapath {
+        Datapath::BitMask => {}
+        Datapath::Prosperity => {
+            for (i, plane) in tiles.iter().enumerate().take(steps * planes_per_step) {
+                if plane.is_all_zero() {
+                    continue; // silent plane: no mining run, no charge
+                }
+                forests[i].mine_into(plane);
+                let pu = forests[i].patterns_unique();
+                plan.patterns_mined += pu;
+                plan.mine_cycles += pu;
+            }
+        }
+        Datapath::TemporalDelta => {
+            for t in 0..steps {
+                for j in 0..planes_per_step {
+                    let i = t * planes_per_step + j;
+                    let plane = &tiles[i];
+                    let mode = if plane.is_all_zero() {
+                        PlaneMode::Silent
+                    } else if t == 0 {
+                        PlaneMode::Rebuild
+                    } else {
+                        let prev = &tiles[(t - 1) * planes_per_step + j];
+                        plane.diff_rows_into(prev, changed_scratch);
+                        let (changed, n_out) = dilate_changed_rows(changed_scratch, kh);
+                        if 2 * n_out > plane.h {
+                            PlaneMode::Rebuild
+                        } else {
+                            plan.rows_unchanged += (plane.h - n_out) as u64;
+                            PlaneMode::Patch { changed }
+                        }
+                    };
+                    if mode == PlaneMode::Rebuild {
+                        if cache.fetch_or_mine(plane, &mut forests[i]) {
+                            plan.cache_hits += 1;
+                        } else {
+                            let pu = forests[i].patterns_unique();
+                            plan.patterns_mined += pu;
+                            plan.mine_cycles += pu;
+                        }
+                    }
+                    plan.modes.push(mode);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn plane_from(rng: &mut Rng, h: usize, w: usize, density: f64) -> SpikePlane {
+        let data: Vec<u8> = (0..h * w).map(|_| u8::from(rng.chance(density))).collect();
+        SpikePlane::from_dense(&data, h, w)
+    }
+
+    #[test]
+    fn dilation_footprints() {
+        // 1×1 kernels read only their own row: dilation is the identity.
+        let ch = [false, true, false, false];
+        let (out, n) = dilate_changed_rows(&ch, 1);
+        assert_eq!(out, ch);
+        assert_eq!(n, 1);
+        // 3×3 kernels read y-1..=y+1 (replicate-clamped): one changed
+        // input row dirties three output rows, two at the edge.
+        let (out, n) = dilate_changed_rows(&ch, 3);
+        assert_eq!(out, [true, true, true, false]);
+        assert_eq!(n, 3);
+        let edge = [true, false, false, false];
+        let (out, _) = dilate_changed_rows(&edge, 3);
+        assert_eq!(out, [true, true, false, false]);
+        // Clamping: the top edge row replicates, so a change in row 0
+        // also reaches row 1 but row 2's window never clamps down to it.
+        let (out, n) = dilate_changed_rows(&[], 3);
+        assert!(out.is_empty());
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn cache_hits_identical_planes_and_verifies_bits() {
+        let mut rng = Rng::new(5);
+        let a = plane_from(&mut rng, 6, 40, 0.4);
+        let b = plane_from(&mut rng, 6, 40, 0.4);
+        assert_ne!(a, b, "distinct random planes expected");
+        let mut cache = ForestCache::new(4);
+        let mut f = ReuseForest::default();
+        assert!(!cache.fetch_or_mine(&a, &mut f), "first sight must miss");
+        assert_eq!(f, ReuseForest::mine(&a));
+        assert!(cache.fetch_or_mine(&a, &mut f), "identical plane must hit");
+        assert_eq!(f, ReuseForest::mine(&a));
+        assert!(!cache.fetch_or_mine(&b, &mut f), "different plane must miss");
+        assert_eq!(f, ReuseForest::mine(&b));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used() {
+        let mut rng = Rng::new(9);
+        let planes: Vec<SpikePlane> = (0..3).map(|_| plane_from(&mut rng, 5, 30, 0.5)).collect();
+        let mut cache = ForestCache::new(2);
+        let mut f = ReuseForest::default();
+        assert!(!cache.fetch_or_mine(&planes[0], &mut f));
+        assert!(!cache.fetch_or_mine(&planes[1], &mut f));
+        // Touch plane 0 so plane 1 is the LRU victim.
+        assert!(cache.fetch_or_mine(&planes[0], &mut f));
+        assert!(!cache.fetch_or_mine(&planes[2], &mut f));
+        assert!(cache.fetch_or_mine(&planes[0], &mut f), "recently used entry survived");
+        assert!(!cache.fetch_or_mine(&planes[1], &mut f), "LRU entry was evicted");
+        // Capacity 0 disables insertion entirely.
+        let mut off = ForestCache::new(0);
+        assert!(!off.fetch_or_mine(&planes[0], &mut f));
+        assert!(!off.fetch_or_mine(&planes[0], &mut f));
+        assert!(off.is_empty());
+    }
+
+    #[test]
+    fn cache_reset_forgets_everything() {
+        let mut rng = Rng::new(13);
+        let p = plane_from(&mut rng, 4, 20, 0.5);
+        let mut cache = ForestCache::new(4);
+        let mut f = ReuseForest::default();
+        assert!(!cache.fetch_or_mine(&p, &mut f));
+        cache.reset(4);
+        assert!(cache.is_empty());
+        assert!(!cache.fetch_or_mine(&p, &mut f), "reset cache must re-mine");
+    }
+
+    #[test]
+    fn planner_prosperity_skips_silent_planes_and_charges_representatives() {
+        let mut rng = Rng::new(21);
+        let live = plane_from(&mut rng, 6, 16, 0.5);
+        let tiles = vec![SpikePlane::zeros(6, 16), live.clone()];
+        let mut cache = ForestCache::new(4);
+        let mut forests = vec![ReuseForest::default(); 2];
+        let mut scratch = Vec::new();
+        let mut plan = MiningPlan::default();
+        plan_tile(
+            Datapath::Prosperity,
+            &tiles,
+            2,
+            1,
+            3,
+            &mut cache,
+            &mut forests,
+            &mut scratch,
+            &mut plan,
+        );
+        let want = ReuseForest::mine(&live).patterns_unique();
+        assert_eq!(plan.mine_cycles, want, "only the live plane is charged");
+        assert_eq!(plan.patterns_mined, want);
+        assert_eq!(plan.cache_hits, 0);
+        assert!(plan.modes.is_empty(), "prosperity tracks no temporal modes");
+        // BitMask plans nothing at all.
+        plan_tile(
+            Datapath::BitMask,
+            &tiles,
+            2,
+            1,
+            3,
+            &mut cache,
+            &mut forests,
+            &mut scratch,
+            &mut plan,
+        );
+        assert_eq!((plan.mine_cycles, plan.patterns_mined), (0, 0));
+    }
+
+    #[test]
+    fn planner_temporal_modes_track_correlation() {
+        let mut rng = Rng::new(33);
+        let base = plane_from(&mut rng, 6, 16, 0.5);
+        // One flipped pixel => one changed input row.
+        let mut flipped = base.to_dense();
+        flipped[2 * 16 + 3] ^= 1;
+        let flipped = SpikePlane::from_dense(&flipped, 6, 16);
+        let fresh = plane_from(&mut rng, 6, 16, 0.5);
+        // Steps: t0 = base (rebuild), t1 = base (identical: pure replay),
+        // t2 = flipped (patch), t3 = fresh (most rows changed: rebuild).
+        let tiles = vec![base.clone(), base.clone(), flipped, fresh.clone()];
+        let mut cache = ForestCache::new(8);
+        let mut forests = vec![ReuseForest::default(); 4];
+        let mut scratch = Vec::new();
+        let mut plan = MiningPlan::default();
+        plan_tile(
+            Datapath::TemporalDelta,
+            &tiles,
+            4,
+            1,
+            3,
+            &mut cache,
+            &mut forests,
+            &mut scratch,
+            &mut plan,
+        );
+        assert_eq!(plan.modes[0], PlaneMode::Rebuild);
+        match &plan.modes[1] {
+            PlaneMode::Patch { changed } => assert!(changed.iter().all(|&c| !c)),
+            m => panic!("identical step should patch with no changed rows, got {m:?}"),
+        }
+        match &plan.modes[2] {
+            // Changed input row 2, 3×3 kernel: output rows 1..=3 recompute.
+            PlaneMode::Patch { changed } => {
+                assert_eq!(changed, &[false, true, true, true, false, false])
+            }
+            m => panic!("one-row flip should patch, got {m:?}"),
+        }
+        assert_eq!(plan.modes[3], PlaneMode::Rebuild, "uncorrelated step rebuilds");
+        // Replayable rows: 6 (identical step) + 3 (one-row flip).
+        assert_eq!(plan.rows_unchanged, 9);
+        // Mining: t0 mined fresh; t3's plane is new too — no hits unless
+        // planes repeat.
+        assert_eq!(plan.cache_hits, 0);
+        assert_eq!(
+            plan.mine_cycles,
+            ReuseForest::mine(&base).patterns_unique()
+                + ReuseForest::mine(&fresh).patterns_unique()
+        );
+
+        // A second tile with the same t0 plane now hits the cache.
+        let tiles2 = vec![base.clone()];
+        let mut forests2 = vec![ReuseForest::default()];
+        plan_tile(
+            Datapath::TemporalDelta,
+            &tiles2,
+            1,
+            1,
+            3,
+            &mut cache,
+            &mut forests2,
+            &mut scratch,
+            &mut plan,
+        );
+        assert_eq!(plan.cache_hits, 1);
+        assert_eq!(plan.mine_cycles, 0, "cache hits charge no mining cycles");
+        assert_eq!(forests2[0], ReuseForest::mine(&base));
+
+        // Silent planes stay silent and cost nothing.
+        let tiles3 = vec![SpikePlane::zeros(6, 16)];
+        plan_tile(
+            Datapath::TemporalDelta,
+            &tiles3,
+            1,
+            1,
+            3,
+            &mut cache,
+            &mut forests2,
+            &mut scratch,
+            &mut plan,
+        );
+        assert_eq!(plan.modes[0], PlaneMode::Silent);
+        assert_eq!((plan.mine_cycles, plan.cache_hits, plan.rows_unchanged), (0, 0, 0));
+    }
+
+    #[test]
+    fn plane_delta_row_clearing() {
+        let mut d = PlaneDelta::default();
+        d.reset(3, 4);
+        d.acc.copy_from_slice(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]);
+        d.row_enabled.copy_from_slice(&[5, 6, 7]);
+        d.clear_rows(&[false, true, false], 4);
+        assert_eq!(d.acc, [1, 2, 3, 4, 0, 0, 0, 0, 9, 10, 11, 12]);
+        assert_eq!(d.row_enabled, [5, 0, 7]);
+        assert_eq!(d.total_enabled(), 12);
+    }
+}

@@ -72,6 +72,15 @@ pub struct LayerObservation {
     pub patterns_unique: u64,
     /// MACs replayed from an already-built pattern instead of recomputed.
     pub macs_reused: u64,
+    /// Output rows whose inputs were unchanged from the previous time
+    /// step (temporal-delta datapath only).
+    pub rows_unchanged: u64,
+    /// Tile planes whose reuse forest was served from the cross-tile
+    /// pattern cache instead of re-mined (temporal-delta datapath only).
+    pub cache_hits: u64,
+    /// MACs replayed from the previous time step's accumulator deltas
+    /// (temporal-delta datapath only; disjoint from `macs_reused`).
+    pub macs_reused_temporal: u64,
 }
 
 /// One frame's result: the raw integer head accumulator plus whatever

@@ -60,10 +60,17 @@ pub struct AccelConfig {
     /// Process node in nm (paper: 28).
     pub process_nm: f64,
     /// Which PE datapath executes the gated one-to-all product (bit-mask
-    /// baseline vs the Prosperity-style product-sparsity path that mines
-    /// partial-sum reuse across tile rows). Bit-exact either way; only the
-    /// cycle accounting differs.
+    /// baseline, the Prosperity-style product-sparsity path that mines
+    /// partial-sum reuse across tile rows, or the temporal-delta path
+    /// that additionally replays cached accumulator deltas across time
+    /// steps). Bit-exact every way; only the cycle accounting differs.
     pub datapath: Datapath,
+    /// Capacity (in planes) of the temporal-delta datapath's cross-tile
+    /// pattern cache: mined [`crate::accel::ReuseForest`]s are kept in a
+    /// small LRU keyed by row-bitmap hash so identical row patterns in
+    /// neighboring tiles/channels skip re-mining. Ignored by the other
+    /// datapaths.
+    pub temporal_cache_planes: usize,
 }
 
 impl AccelConfig {
@@ -90,6 +97,7 @@ impl AccelConfig {
             voltage: 0.9,
             process_nm: 28.0,
             datapath: Datapath::BitMask,
+            temporal_cache_planes: 64,
         }
     }
 
@@ -108,6 +116,12 @@ impl AccelConfig {
     /// `datapath` variant (design-space sweeps, `--datapath D`).
     pub fn with_datapath(mut self, datapath: Datapath) -> Self {
         self.datapath = datapath;
+        self
+    }
+
+    /// `temporal_cache_planes` variant (cache-size sweeps).
+    pub fn with_temporal_cache(mut self, planes: usize) -> Self {
+        self.temporal_cache_planes = planes;
         self
     }
 
@@ -149,14 +163,17 @@ impl AccelConfig {
             if let Some(d) = s.get("datapath") {
                 cfg.datapath = Datapath::parse(d).unwrap_or(cfg.datapath);
             }
+            cfg.temporal_cache_planes =
+                s.get_usize("temporal_cache_planes").unwrap_or(cfg.temporal_cache_planes);
         }
         cfg
     }
 }
 
-/// Which PE datapath the simulator's gated one-to-all product runs. Both
+/// Which PE datapath the simulator's gated one-to-all product runs. All
 /// are bit-exact against the golden model; they differ in how work is
-/// counted (and, at high pattern overlap, how much of it exists).
+/// counted (and, at high pattern overlap or temporal correlation, how
+/// much of it exists).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Datapath {
     /// The paper's baseline: every enabled (pixel, weight) pair costs one
@@ -165,8 +182,15 @@ pub enum Datapath {
     /// Prosperity-style product sparsity: a per-tile reuse forest over the
     /// word-packed spike rows detects equal/subset row patterns, computes
     /// each unique pattern once and replays deltas for subsumed rows —
-    /// fewer MACs at high overlap, at a fixed per-plane mining cost.
+    /// fewer MACs at high overlap, at a per-plane mining cost.
     Prosperity,
+    /// Temporal-delta reuse on top of the product-sparsity path:
+    /// consecutive time steps of a tile plane are row-wise XOR-diffed,
+    /// unchanged output rows replay the previous step's cached
+    /// accumulator delta instead of re-walking the forest (full compute
+    /// only at `t = 0`), and mined forests are shared across
+    /// tiles/channels through a small LRU pattern cache.
+    TemporalDelta,
 }
 
 impl Datapath {
@@ -175,6 +199,7 @@ impl Datapath {
         match s {
             "bitmask" | "bit-mask" => Some(Datapath::BitMask),
             "prosperity" | "product" => Some(Datapath::Prosperity),
+            "temporal-delta" | "temporal" => Some(Datapath::TemporalDelta),
             _ => None,
         }
     }
@@ -184,12 +209,13 @@ impl Datapath {
         match self {
             Datapath::BitMask => "bitmask",
             Datapath::Prosperity => "prosperity",
+            Datapath::TemporalDelta => "temporal-delta",
         }
     }
 
     /// Every datapath, in CLI order.
-    pub fn all() -> [Datapath; 2] {
-        [Datapath::BitMask, Datapath::Prosperity]
+    pub fn all() -> [Datapath; 3] {
+        [Datapath::BitMask, Datapath::Prosperity, Datapath::TemporalDelta]
     }
 }
 
@@ -363,6 +389,8 @@ mod tests {
     fn datapath_spellings_round_trip() {
         assert_eq!(Datapath::parse("bitmask"), Some(Datapath::BitMask));
         assert_eq!(Datapath::parse("prosperity"), Some(Datapath::Prosperity));
+        assert_eq!(Datapath::parse("temporal-delta"), Some(Datapath::TemporalDelta));
+        assert_eq!(Datapath::parse("temporal"), Some(Datapath::TemporalDelta));
         assert_eq!(Datapath::parse("bogus"), None);
         for d in Datapath::all() {
             assert_eq!(Datapath::parse(d.label()), Some(d), "{d:?} round-trips");
@@ -382,6 +410,16 @@ mod tests {
         std::fs::write(&p, "[accel]\ndatapath = \"prosperity\"\n").unwrap();
         let c = AccelConfig::from_file(&p).unwrap();
         assert_eq!(c.datapath, Datapath::Prosperity);
+        std::fs::write(
+            &p,
+            "[accel]\ndatapath = \"temporal-delta\"\ntemporal_cache_planes = 16\n",
+        )
+        .unwrap();
+        let c = AccelConfig::from_file(&p).unwrap();
+        assert_eq!(c.datapath, Datapath::TemporalDelta);
+        assert_eq!(c.temporal_cache_planes, 16);
+        assert_eq!(AccelConfig::paper().temporal_cache_planes, 64);
+        assert_eq!(AccelConfig::paper().with_temporal_cache(8).temporal_cache_planes, 8);
     }
 
     #[test]

@@ -197,6 +197,16 @@ pub struct PipelineMetrics {
     /// MACs replayed from already-built patterns on the same
     /// representative frame (0 likewise).
     pub macs_reused: u64,
+    /// Output rows the temporal-delta datapath served from the previous
+    /// time step's accumulator deltas on the representative frame (0 =
+    /// other datapaths or a non-cycle backend).
+    pub rows_unchanged: u64,
+    /// Tile planes whose reuse forest came from the cross-tile pattern
+    /// cache instead of being re-mined (0 likewise).
+    pub cache_hits: u64,
+    /// MACs replayed across time steps by the temporal-delta datapath —
+    /// disjoint from the within-plane `macs_reused` (0 likewise).
+    pub macs_reused_temporal: u64,
 }
 
 impl PipelineMetrics {
@@ -327,6 +337,14 @@ impl PipelineMetrics {
         if self.patterns_unique > 0 {
             m.insert("patterns_unique".into(), Json::Num(self.patterns_unique as f64));
             m.insert("macs_reused".into(), Json::Num(self.macs_reused as f64));
+        }
+        if self.rows_unchanged > 0 || self.cache_hits > 0 || self.macs_reused_temporal > 0 {
+            m.insert("rows_unchanged".into(), Json::Num(self.rows_unchanged as f64));
+            m.insert("cache_hits".into(), Json::Num(self.cache_hits as f64));
+            m.insert(
+                "macs_reused_temporal".into(),
+                Json::Num(self.macs_reused_temporal as f64),
+            );
         }
         if let Some(hw) = &self.hw {
             let mut h = BTreeMap::new();

@@ -465,20 +465,28 @@ impl DetectionPipeline {
         out
     }
 
-    /// Product-sparsity reuse counters of one frame on the active
-    /// backend (summed over layers): a stats-collecting `run_frame` on a
-    /// representative frame, used to label serving runs with the
-    /// datapath's efficiency. Returns zeros unless the backend reports
-    /// cycles and the configured datapath mines patterns.
-    fn reuse_counters(&self, image: &Tensor<u8>) -> Result<(u64, u64)> {
-        if self.cfg.datapath != Datapath::Prosperity || !self.backend.caps().reports_cycles {
-            return Ok((0, 0));
+    /// Reuse counters of one frame on the active backend (summed over
+    /// layers): a stats-collecting `run_frame` on a representative
+    /// frame, used to label serving runs with the datapath's
+    /// efficiency. Covers both mining datapaths — product-sparsity
+    /// (patterns / replayed MACs) and temporal-delta (additionally
+    /// unchanged rows, cache hits, temporally replayed MACs). Returns
+    /// zeros unless the backend reports cycles and the configured
+    /// datapath mines patterns.
+    fn reuse_counters(&self, image: &Tensor<u8>) -> Result<(u64, u64, u64, u64, u64)> {
+        if self.cfg.datapath == Datapath::BitMask || !self.backend.caps().reports_cycles {
+            return Ok((0, 0, 0, 0, 0));
         }
         let frame = self.backend.run_frame(image, &FrameOptions { collect_stats: true })?;
-        Ok(frame
-            .layers
-            .values()
-            .fold((0, 0), |(p, m), o| (p + o.patterns_unique, m + o.macs_reused)))
+        Ok(frame.layers.values().fold((0, 0, 0, 0, 0), |(p, m, r, c, t), o| {
+            (
+                p + o.patterns_unique,
+                m + o.macs_reused,
+                r + o.rows_unchanged,
+                c + o.cache_hits,
+                t + o.macs_reused_temporal,
+            )
+        }))
     }
 
     /// Estimate the hardware metrics of one frame (golden model run with
@@ -556,9 +564,12 @@ impl DetectionPipeline {
             metrics.stage_breakdown = run.stage_breakdown();
             metrics.bottleneck_stage = run.bottleneck_stage();
             if let Some(first) = ds.samples.first() {
-                let (pu, mr) = self.reuse_counters(&first.image)?;
+                let (pu, mr, ru, ch, mrt) = self.reuse_counters(&first.image)?;
                 metrics.patterns_unique = pu;
                 metrics.macs_reused = mr;
+                metrics.rows_unchanged = ru;
+                metrics.cache_hits = ch;
+                metrics.macs_reused_temporal = mrt;
             }
             let gts = ds.ground_truth();
             let summary = mean_ap(&dets, &gts, NUM_CLASSES, 0.5);
@@ -592,9 +603,12 @@ impl DetectionPipeline {
         metrics.peak_workers = engine.peak_workers();
         metrics.pool_timeline = engine.scaling_timeline();
         if let Some(first) = ds.samples.first() {
-            let (pu, mr) = self.reuse_counters(&first.image)?;
+            let (pu, mr, ru, ch, mrt) = self.reuse_counters(&first.image)?;
             metrics.patterns_unique = pu;
             metrics.macs_reused = mr;
+            metrics.rows_unchanged = ru;
+            metrics.cache_hits = ch;
+            metrics.macs_reused_temporal = mrt;
         }
         let gts = ds.ground_truth();
         let summary = mean_ap(&dets, &gts, NUM_CLASSES, 0.5);
@@ -644,9 +658,12 @@ impl DetectionPipeline {
         metrics.queue_hist = Some(stats.queue.clone());
         metrics.service_hist = Some(stats.service.clone());
         if let Some(first) = ds.samples.first() {
-            let (pu, mr) = self.reuse_counters(&first.image)?;
+            let (pu, mr, ru, ch, mrt) = self.reuse_counters(&first.image)?;
             metrics.patterns_unique = pu;
             metrics.macs_reused = mr;
+            metrics.rows_unchanged = ru;
+            metrics.cache_hits = ch;
+            metrics.macs_reused_temporal = mrt;
         }
         let gts = ds.ground_truth();
         let summary = mean_ap(&dets, &gts, NUM_CLASSES, 0.5);
@@ -770,12 +787,24 @@ mod tests {
         // The dataset report carries the datapath's reuse counters.
         let rep = p.process_dataset(&ds).unwrap();
         assert!(rep.metrics.patterns_unique > 0);
+        assert_eq!(rep.metrics.macs_reused_temporal, 0);
+        // Temporal-delta serves the same bits and still mines patterns
+        // (the replay counters themselves are stimulus-dependent; their
+        // positivity is pinned down by the controller tests with
+        // controlled correlation).
+        p.set_datapath(Datapath::TemporalDelta).unwrap();
+        let got_td = p.process_frame(&ds.samples[0].image).unwrap();
+        assert_eq!(got_td.head.data, want.head.data);
+        assert_eq!(got_td.detections, want.detections);
+        let rep_td = p.process_dataset(&ds).unwrap();
+        assert!(rep_td.metrics.patterns_unique > 0);
         // The golden backend reports no cycle-level observations, so the
-        // counters stay zero even with the prosperity datapath selected.
+        // counters stay zero even with a mining datapath selected.
         p.select_backend(BackendKind::Golden).unwrap();
         let rep_g = p.process_dataset(&ds).unwrap();
         assert_eq!(rep_g.metrics.patterns_unique, 0);
         assert_eq!(rep_g.metrics.macs_reused, 0);
+        assert_eq!(rep_g.metrics.macs_reused_temporal, 0);
     }
 
     #[test]

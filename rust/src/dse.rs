@@ -124,7 +124,8 @@ pub struct DesignPoint {
     pub link: LinkSpec,
     /// Time-step mix of the network.
     pub time_steps: TimeStepConfig,
-    /// PE datapath (bit-mask gating or product-sparsity reuse).
+    /// PE datapath (bit-mask gating, product-sparsity reuse, or
+    /// temporal-delta reuse).
     pub datapath: Datapath,
 }
 
@@ -541,23 +542,27 @@ mod tests {
         // max_points larger than the grid must be a no-op decimation.
         let evals = sweep(Scale::Tiny, 7, 0);
         assert_eq!(evals.len(), grid_size());
-        // The datapath axis doubles the grid; matching coordinates pair
-        // up in emission order, and the prosperity twin can never be
-        // faster than bit-mask — its cycle model adds mining overhead.
+        // The datapath axis triples the grid; matching coordinates pair
+        // up in emission order, and the mining twins (prosperity,
+        // temporal-delta) can never be faster than bit-mask — the blind
+        // cycle model charges both the same stimulus-free mining upper
+        // bound on top of the bit-mask cost.
         let bm: Vec<&Evaluated> =
             evals.iter().filter(|e| e.point.datapath == Datapath::BitMask).collect();
-        let ps: Vec<&Evaluated> =
-            evals.iter().filter(|e| e.point.datapath == Datapath::Prosperity).collect();
-        assert_eq!(bm.len(), ps.len());
-        assert!(ps.iter().zip(&bm).any(|(p, b)| p.interval_cycles > b.interval_cycles));
-        for (p, b) in ps.iter().zip(&bm) {
-            assert_eq!(p.point.cores, b.point.cores);
-            assert_eq!(p.point.in_flight, b.point.in_flight);
-            assert!(
-                p.interval_cycles >= b.interval_cycles,
-                "prosperity beat bitmask at {}",
-                p.point.label()
-            );
+        for mining in [Datapath::Prosperity, Datapath::TemporalDelta] {
+            let ps: Vec<&Evaluated> =
+                evals.iter().filter(|e| e.point.datapath == mining).collect();
+            assert_eq!(bm.len(), ps.len());
+            assert!(ps.iter().zip(&bm).any(|(p, b)| p.interval_cycles > b.interval_cycles));
+            for (p, b) in ps.iter().zip(&bm) {
+                assert_eq!(p.point.cores, b.point.cores);
+                assert_eq!(p.point.in_flight, b.point.in_flight);
+                assert!(
+                    p.interval_cycles >= b.interval_cycles,
+                    "{mining:?} beat bitmask at {}",
+                    p.point.label()
+                );
+            }
         }
     }
 

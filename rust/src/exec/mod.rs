@@ -336,6 +336,9 @@ impl<'a> LayerWalk<'a> {
                         core_cycles: run.core_cycles.clone(),
                         patterns_unique: run.patterns_unique,
                         macs_reused: run.macs_reused,
+                        rows_unchanged: run.rows_unchanged,
+                        cache_hits: run.cache_hits,
+                        macs_reused_temporal: run.macs_reused_temporal,
                     },
                 );
             }

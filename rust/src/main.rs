@@ -73,7 +73,7 @@ fn print_usage() {
          common options: --artifacts DIR  --scale full|tiny  --seed N\n\
          dse options:     --max-points N  --verify N  --frames N  --out BENCH_dse.json\n\
          serving options: --backend golden|cyclesim|pjrt|cluster|auto  --workers N|MIN..MAX  --cores N  --batch N\n\
-         datapath:        --datapath bitmask|prosperity  (product-sparsity PE path, bit-exact)\n\
+         datapath:        --datapath bitmask|prosperity|temporal-delta  (mining PE paths, bit-exact)\n\
          cluster options: --chips N  --shard-policy frame|pipeline|tile  --in-flight N  (--want-cycles with auto)\n\
          stage serving:   --pipeline N  (wall-clock pipelined cluster serving, N frames in flight)\n\
          observability:   --trace FILE.json (Chrome trace)  --trace-jsonl FILE.jsonl  --arrivals poisson:RATE|bursty:RATE:BURST\n\
@@ -129,7 +129,7 @@ fn datapath(args: &Args) -> Result<Datapath> {
     match args.get("datapath") {
         None => Ok(Datapath::BitMask),
         Some(s) => Datapath::parse(s)
-            .ok_or_else(|| anyhow!("unknown datapath {s:?} (bitmask|prosperity)")),
+            .ok_or_else(|| anyhow!("unknown datapath {s:?} (bitmask|prosperity|temporal-delta)")),
     }
 }
 
@@ -408,11 +408,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         lat.dense_cycles(),
         lat.latency_saving() * 100.0
     );
-    if dp == Datapath::Prosperity {
+    if dp != Datapath::BitMask {
         let bm = LatencyModel::new(cfg.clone().with_datapath(Datapath::BitMask))
             .network(&net, &weights);
         println!(
-            "datapath: prosperity  (modeled mining overhead {} cycles over bitmask {})",
+            "datapath: {}  (modeled mining overhead {} cycles over bitmask {}; \
+             blind upper bound — executed runs mine less)",
+            dp.label(),
             lat.sparse_cycles() - bm.sparse_cycles(),
             bm.sparse_cycles()
         );
@@ -430,14 +432,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             let frame =
                 be.run_frame(&ds.samples[0].image, &FrameOptions { collect_stats: true })?;
             println!(
-                "  {:<12} {:>12} {:>10} {:>12}",
-                "layer", "cycles", "patterns", "macs reused"
+                "  {:<12} {:>12} {:>10} {:>12} {:>10} {:>10} {:>12}",
+                "layer", "cycles", "patterns", "macs reused", "rows kept", "cache hit", "t-replayed"
             );
             for l in &net.layers {
                 if let Some(o) = frame.layers.get(&l.name) {
                     println!(
-                        "  {:<12} {:>12} {:>10} {:>12}",
-                        l.name, o.cycles, o.patterns_unique, o.macs_reused
+                        "  {:<12} {:>12} {:>10} {:>12} {:>10} {:>10} {:>12}",
+                        l.name,
+                        o.cycles,
+                        o.patterns_unique,
+                        o.macs_reused,
+                        o.rows_unchanged,
+                        o.cache_hits,
+                        o.macs_reused_temporal
                     );
                 }
             }

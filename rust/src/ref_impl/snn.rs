@@ -65,6 +65,15 @@ pub struct LayerStats {
     /// MACs replayed from an already-built pattern instead of recomputed
     /// (product-sparsity datapath; zero otherwise).
     pub macs_reused: u64,
+    /// Output rows served from the previous time step's accumulator
+    /// deltas (temporal-delta datapath; zero otherwise).
+    pub rows_unchanged: u64,
+    /// Tile planes whose reuse forest came from the cross-tile pattern
+    /// cache (temporal-delta datapath; zero otherwise).
+    pub cache_hits: u64,
+    /// MACs replayed across time steps (temporal-delta datapath; zero
+    /// otherwise — disjoint from `macs_reused`).
+    pub macs_reused_temporal: u64,
 }
 
 /// Result of one frame.

@@ -22,6 +22,12 @@
 //!   into output alignment, OR in the replicate-clamped edge lanes as a
 //!   mask, popcount for the gating statistics, and scatter only the
 //!   surviving set bits. Zero words are skipped wholesale.
+//! - [`SpikePlane::diff_rows_into`] / the row-restricted
+//!   [`SpikePlane::accumulate_shifted_words_rows_into`] — the temporal-delta
+//!   primitives: XOR-compare two same-shape planes a packed word at a time
+//!   to find which rows changed between consecutive time steps, then
+//!   recompute only those output rows (with per-row applied counts so the
+//!   replayed rows' gating statistics stay exact).
 //!
 //! The representation is bit-exact with the dense `Tensor<u8>` path; the
 //! property tests below pin `from_dense ∘ to_dense = id` and the
@@ -387,6 +393,113 @@ impl SpikePlane {
         }
         applied
     }
+
+    /// Row-wise XOR diff against a same-shape plane: `changed[y]` is set
+    /// iff row `y` differs between `self` and `prev`, compared a packed
+    /// word at a time. Returns the number of changed rows. The
+    /// temporal-delta datapath calls this once per `(bit, channel)` plane
+    /// per time step to decide which output rows must be recomputed.
+    pub fn diff_rows_into(&self, prev: &SpikePlane, changed: &mut Vec<bool>) -> usize {
+        assert_eq!((self.h, self.w), (prev.h, prev.w), "diff_rows shape mismatch");
+        changed.clear();
+        changed.resize(self.h, false);
+        let mut n = 0usize;
+        for (y, c) in changed.iter_mut().enumerate() {
+            // Padding bits are zero in both planes, so whole-word equality
+            // is exactly per-pixel row equality.
+            *c = self.row_words(y) != prev.row_words(y);
+            n += usize::from(*c);
+        }
+        n
+    }
+
+    /// Row-restricted form of
+    /// [`SpikePlane::accumulate_shifted_words_into`]: identical sums and
+    /// per-row applied counts, but only output rows with `rows[y]` set are
+    /// touched — the temporal-delta patch path recomputes exactly the rows
+    /// whose (replicate-clamped) source rows changed since the previous
+    /// time step. Each selected row's applied count is **added** to
+    /// `row_applied[y]`; the return value is the total over selected rows.
+    pub fn accumulate_shifted_words_rows_into(
+        &self,
+        acc: &mut [i32],
+        dy: isize,
+        dx: isize,
+        contrib: i32,
+        rows: &[bool],
+        row_applied: &mut [u64],
+    ) -> u64 {
+        debug_assert_eq!(acc.len(), self.h * self.w);
+        debug_assert_eq!(rows.len(), self.h);
+        debug_assert_eq!(row_applied.len(), self.h);
+        if self.nnz == 0 {
+            return 0; // all-zero fast path
+        }
+        let (h, w) = (self.h, self.w);
+        let wpr = self.words_per_row;
+        let (q, s) = (dx.unsigned_abs() / 64, (dx.unsigned_abs() % 64) as u32);
+        let tail_mask = if w % 64 == 0 { u64::MAX } else { (1u64 << (w % 64)) - 1 };
+        let mut applied = 0u64;
+        for y in 0..h {
+            if !rows[y] {
+                continue;
+            }
+            let sy = (y as isize + dy).clamp(0, h as isize - 1) as usize;
+            let row = self.row_words(sy);
+            let out_row = &mut acc[y * w..(y + 1) * w];
+            let (ea, eb) = if dx > 0 {
+                if self.get(sy, w - 1) { (w.saturating_sub(dx as usize), w) } else { (0, 0) }
+            } else if dx < 0 && self.get(sy, 0) {
+                (0, ((-dx) as usize).min(w))
+            } else {
+                (0, 0)
+            };
+            let mut row_app = 0u64;
+            for owi in 0..wpr {
+                let mut ew = if dx >= 0 {
+                    let swi = owi + q;
+                    let lo = if swi < wpr { row[swi] } else { 0 };
+                    if s == 0 {
+                        lo
+                    } else {
+                        let hi = if swi + 1 < wpr { row[swi + 1] } else { 0 };
+                        (lo >> s) | (hi << (64 - s))
+                    }
+                } else if owi < q {
+                    0
+                } else {
+                    let swi = owi - q;
+                    let lo = if s == 0 { row[swi] } else { row[swi] << s };
+                    let hi = if s > 0 && swi >= 1 { row[swi - 1] >> (64 - s) } else { 0 };
+                    lo | hi
+                };
+                if ea < eb {
+                    let lane0 = owi * 64;
+                    let (a, b) = (ea.max(lane0), eb.min(lane0 + 64));
+                    if a < b {
+                        let hi_mask =
+                            if b - lane0 == 64 { u64::MAX } else { (1u64 << (b - lane0)) - 1 };
+                        ew |= hi_mask & !((1u64 << (a - lane0)) - 1);
+                    }
+                }
+                if owi == wpr - 1 {
+                    ew &= tail_mask;
+                }
+                if ew == 0 {
+                    continue;
+                }
+                row_app += u64::from(ew.count_ones());
+                let base = owi * 64;
+                while ew != 0 {
+                    out_row[base + ew.trailing_zeros() as usize] += contrib;
+                    ew &= ew - 1;
+                }
+            }
+            row_applied[y] += row_app;
+            applied += row_app;
+        }
+        applied
+    }
 }
 
 /// Iterator over the set-bit offsets of one word.
@@ -707,6 +820,85 @@ mod tests {
             assert_eq!(applied, want_applied);
             assert_eq!(got, pixel, "word vs per-pixel: dy={dy} dx={dx} h={h} w={w}");
             assert_eq!(applied, pixel_applied);
+        });
+    }
+
+    #[test]
+    fn prop_diff_rows_matches_dense_compare() {
+        // Word-level row diff vs a per-pixel comparison, across identical
+        // planes, single-row flips, and independent redraws (the temporal
+        // correlation regimes the delta datapath sees).
+        run_prop("spike/diff-rows", |g| {
+            let h = g.usize(1, 8);
+            let w = g.usize(1, 150);
+            let prev_data = g.spikes(h * w, g.f64(0.0, 1.0));
+            let mut cur_data = if g.bool(0.3) {
+                prev_data.clone() // identical consecutive steps
+            } else {
+                g.spikes(h * w, g.f64(0.0, 1.0))
+            };
+            if g.bool(0.3) {
+                // Single-pixel flip: exactly one changed row.
+                let y = g.usize(0, h);
+                let x = g.usize(0, w);
+                cur_data = prev_data.clone();
+                cur_data[y * w + x] ^= 1;
+            }
+            let prev = SpikePlane::from_dense(&prev_data, h, w);
+            let cur = SpikePlane::from_dense(&cur_data, h, w);
+            let mut changed = Vec::new();
+            let n = cur.diff_rows_into(&prev, &mut changed);
+            let want: Vec<bool> = (0..h)
+                .map(|y| cur_data[y * w..(y + 1) * w] != prev_data[y * w..(y + 1) * w])
+                .collect();
+            assert_eq!(changed, want, "h={h} w={w}");
+            assert_eq!(n, want.iter().filter(|&&c| c).count());
+        });
+    }
+
+    #[test]
+    fn prop_row_restricted_accumulate_matches_masked_full() {
+        // The row-restricted accumulate over mask `rows` must equal the
+        // unrestricted word accumulate with non-selected rows zeroed, sums
+        // and per-row applied counts alike; an all-true mask reproduces
+        // the full path exactly.
+        run_prop("spike/accumulate-rows", |g| {
+            let h = g.usize(1, 8);
+            let w = g.usize(1, 150);
+            let density = g.f64(0.0, 1.0);
+            let data = g.spikes(h * w, density);
+            let plane = SpikePlane::from_dense(&data, h, w);
+            let dy = g.i64(-3, 3) as isize;
+            let dx = if g.bool(0.25) { g.i64(-170, 170) } else { g.i64(-70, 70) } as isize;
+            let contrib = g.i64(-50, 50) as i32;
+            let rows: Vec<bool> = (0..h).map(|_| g.bool(0.5)).collect();
+
+            let mut got = vec![0i32; h * w];
+            let mut row_applied = vec![0u64; h];
+            let applied = plane
+                .accumulate_shifted_words_rows_into(&mut got, dy, dx, contrib, &rows, &mut row_applied);
+
+            let mut full = vec![0i32; h * w];
+            plane.accumulate_shifted_words_into(&mut full, dy, dx, contrib);
+            let mut want_applied = 0u64;
+            for y in 0..h {
+                if !rows[y] {
+                    full[y * w..(y + 1) * w].iter_mut().for_each(|v| *v = 0);
+                    assert_eq!(row_applied[y], 0, "untouched row counted");
+                } else {
+                    let sy = (y as isize + dy).clamp(0, h as isize - 1) as usize;
+                    let sx_applied = (0..w)
+                        .filter(|&x| {
+                            let sx = (x as isize + dx).clamp(0, w as isize - 1) as usize;
+                            data[sy * w + sx] != 0
+                        })
+                        .count() as u64;
+                    assert_eq!(row_applied[y], sx_applied, "row {y} applied count");
+                    want_applied += sx_applied;
+                }
+            }
+            assert_eq!(got, full, "dy={dy} dx={dx} h={h} w={w}");
+            assert_eq!(applied, want_applied);
         });
     }
 

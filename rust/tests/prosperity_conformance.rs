@@ -7,8 +7,11 @@
 //! harness's deliberately small 8×6 hardware tile.
 //!
 //! Also pins the reuse-adjusted cycle model: on the paper-tiny network
-//! the analytic [`LatencyModel`] total must equal the executed cycle
-//! counters exactly, mining charge included, for one and several cores.
+//! the stimulus-blind analytic [`LatencyModel`] total must bound the
+//! executed cycle counters from above (the executed mining charge is
+//! data-dependent) with the bit-mask total as a floor, for one and
+//! several cores; the exact lock-step lives in
+//! [`LatencyModel::layer_with_input`]'s own tests.
 
 mod harness;
 
@@ -82,10 +85,17 @@ fn stage_executor_prosperity_conforms_to_serial_and_golden() {
 }
 
 #[test]
-fn prosperity_cycle_model_matches_executed_counters_on_tiny_network() {
-    // Reuse-adjusted analytic model vs executed counters on the full
+fn prosperity_cycle_model_bounds_executed_counters_on_tiny_network() {
+    // Stimulus-blind analytic model vs executed counters on the full
     // paper-tiny network (covers the bit-serial encoding layer and the
-    // maxpool/time-step mix the per-layer unit tests don't).
+    // maxpool/time-step mix the per-layer unit tests don't). The
+    // executed mining charge is data-dependent — each plane pays its
+    // mined representative count, and silent planes are skipped — so the
+    // blind model (which charges the uniform `tile_h` worst case) is an
+    // upper bound, with the bit-mask analytic total as a floor. The
+    // exact per-layer lock-step against
+    // `LatencyModel::layer_with_input` is property-checked in
+    // `tests/temporal_conformance.rs` and the `accel::latency` tests.
     let (net, w, ds) = harness::tiny_setup(1, 33);
     let opts = FrameOptions { collect_stats: true };
     for cores in [1usize, 2] {
@@ -93,11 +103,15 @@ fn prosperity_cycle_model_matches_executed_counters_on_tiny_network() {
         let be = CycleSimBackend::new(net.clone(), w.clone(), cfg.clone()).unwrap();
         let frame = be.run_frame(&ds.samples[0].image, &opts).unwrap();
         let executed: u64 = frame.layers.values().map(|o| o.cycles).sum();
-        let analytic = LatencyModel::new(cfg).network(&net, &w);
-        assert_eq!(
-            executed,
-            analytic.sparse_cycles(),
-            "cores={cores}: prosperity analytic model diverged from executed counters"
+        let blind = LatencyModel::new(cfg.clone()).network(&net, &w);
+        let floor = LatencyModel::new(cfg.with_datapath(Datapath::BitMask)).network(&net, &w);
+        assert!(
+            executed <= blind.sparse_cycles(),
+            "cores={cores}: executed charge above the blind upper bound"
+        );
+        assert!(
+            executed >= floor.sparse_cycles(),
+            "cores={cores}: mining datapath ran below the bit-mask floor"
         );
         // Every mined nonempty plane has at least one representative, so
         // the harvested counter must be live (whether any MACs replay

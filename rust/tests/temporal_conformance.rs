@@ -1,0 +1,283 @@
+//! Temporal-delta datapath conformance: every serving backend that can
+//! run the temporal-delta PE path must stay bit-exact with the golden
+//! model, through the same shared harness (`tests/harness/mod.rs`) that
+//! checks the bit-mask and product-sparsity datapaths — random chains
+//! (including the mixed 1→3 time-step replay path), kernel sizes
+//! 1×1–7×7, pruning densities, density-extreme frames, and tile-edge
+//! clipping from the harness's deliberately small 8×6 hardware tile.
+//!
+//! Also pins the temporal-specific contract directly on the controller:
+//! random chains of time steps with *controlled* correlation (identical
+//! / one-row-flip / independent transitions) stay bit-exact with the
+//! bit-mask datapath while the stimulus-aware cycle model
+//! ([`LatencyModel::layer_with_input`]) tracks the executed counters in
+//! exact lock-step for every core count, and the cross-tile pattern
+//! cache actually hits on tile-periodic stimuli.
+
+mod harness;
+
+use scsnn::accel::controller::{LayerInput, SystemController};
+use scsnn::accel::latency::LatencyModel;
+use scsnn::backend::{BackendFrame, CycleSimBackend, FrameOptions, SnnBackend};
+use scsnn::cluster::ChipCluster;
+use scsnn::config::{ClusterConfig, Datapath, ShardPolicy};
+use scsnn::coordinator::engine::{EngineConfig, StreamingEngine};
+use scsnn::coordinator::stage_exec::StageExecutor;
+use scsnn::model::topology::{ConvKind, ConvSpec, NetworkSpec};
+use scsnn::model::weights::ModelWeights;
+use scsnn::sparse::SpikeMap;
+use scsnn::tensor::Tensor;
+use scsnn::util::{run_prop, Gen};
+use std::sync::Arc;
+
+#[test]
+fn cyclesim_temporal_conforms_to_golden() {
+    harness::backend_conformance("temporal-cyclesim-conformance", |g, case| {
+        let cfg =
+            harness::chain_config(1 + g.usize(0, 3)).with_datapath(Datapath::TemporalDelta);
+        Arc::new(CycleSimBackend::new(case.net.clone(), case.weights.clone(), cfg).unwrap())
+    });
+}
+
+#[test]
+fn cluster_temporal_conforms_to_golden_across_policies() {
+    harness::backend_conformance("temporal-cluster-conformance", |g, case| {
+        let chips = 1 + g.usize(0, 3);
+        let policy = ShardPolicy::all()[g.usize(0, 3)];
+        let chip =
+            harness::chain_config(1 + g.usize(0, 2)).with_datapath(Datapath::TemporalDelta);
+        let cc = ClusterConfig { chip, ..ClusterConfig::single_chip() }
+            .with_chips(chips)
+            .with_policy(policy);
+        Arc::new(ChipCluster::new(case.net.clone(), case.weights.clone(), cc).unwrap())
+    });
+}
+
+#[test]
+fn stage_executor_temporal_conforms_to_serial_and_golden() {
+    // The pipelined stage executor over temporal-delta chips: outputs
+    // bit-identical to serial frame order and heads bit-exact with the
+    // golden model.
+    harness::conformance_cases("temporal-stage-conformance", |g, case| {
+        let chips = 1 + g.usize(0, 3);
+        let policy = ShardPolicy::all()[g.usize(0, 3)];
+        let workers = 1 + g.usize(0, 4);
+        let in_flight = 1 + g.usize(0, 4);
+        let chip =
+            harness::chain_config(1 + g.usize(0, 2)).with_datapath(Datapath::TemporalDelta);
+        let cc = ClusterConfig { chip, ..ClusterConfig::single_chip() }
+            .with_chips(chips)
+            .with_policy(policy);
+        let cl =
+            Arc::new(ChipCluster::new(case.net.clone(), case.weights.clone(), cc).unwrap());
+        let opts = FrameOptions { collect_stats: true };
+        let serial: Vec<BackendFrame> =
+            case.images.iter().map(|i| cl.run_frame(i, &opts).unwrap()).collect();
+        let engine = StreamingEngine::new(
+            cl.clone(),
+            EngineConfig { workers, queue_depth: 4, batch: 1 },
+        );
+        let exec = StageExecutor::new(&cl);
+        let imgs: Vec<&Tensor<u8>> = case.images.iter().collect();
+        let run = exec.run(&engine, &imgs, &opts, in_flight).unwrap();
+        assert_eq!(
+            run.frames, serial,
+            "chips={chips} {policy:?} workers={workers} in_flight={in_flight}"
+        );
+        let want = harness::golden_frames(case, &opts);
+        for (got, w) in run.frames.iter().zip(&want) {
+            assert_eq!(got.head_acc.data, w.head_acc.data, "temporal stage vs golden");
+        }
+    });
+}
+
+/// A single-Spike-layer network around `spec` so [`ModelWeights::random`]
+/// can synthesize pruned weights for it.
+fn single_layer_net(spec: &ConvSpec) -> NetworkSpec {
+    NetworkSpec {
+        name: "t".into(),
+        input_w: spec.in_w,
+        input_h: spec.in_h,
+        input_c: spec.c_in,
+        layers: vec![spec.clone()],
+        num_anchors: 1,
+        num_classes: 1,
+    }
+}
+
+/// A chain of `t` spike maps with controlled temporal correlation: each
+/// transition is drawn as identical, a partial flip of one row of one
+/// channel, or a fully independent redraw.
+fn correlated_steps(g: &mut Gen, c: usize, h: usize, w: usize, t: usize) -> Vec<SpikeMap> {
+    let n = c * h * w;
+    let density = g.f64(0.05, 0.5);
+    let mut cur = g.spikes(n, density);
+    let mut out = Vec::with_capacity(t);
+    out.push(SpikeMap::from_dense(&Tensor::from_vec(c, h, w, cur.clone())));
+    for _ in 1..t {
+        match g.usize(0, 3) {
+            0 => {} // identical step — every non-silent plane patches
+            1 => {
+                // flip bits in one row of one channel — a thin patch
+                let ch = g.usize(0, c);
+                let y = g.usize(0, h);
+                for x in 0..w {
+                    cur[(ch * h + y) * w + x] ^= u8::from(g.bool(0.5));
+                }
+            }
+            _ => cur = g.spikes(n, density), // independent — mostly rebuilds
+        }
+        out.push(SpikeMap::from_dense(&Tensor::from_vec(c, h, w, cur.clone())));
+    }
+    out
+}
+
+#[test]
+fn temporal_chains_stay_bit_exact_and_in_lockstep_with_the_cycle_model() {
+    // Random layer shapes (clipped right/bottom tiles against the 8×6
+    // hardware tile), random correlation structure, every datapath,
+    // 1–4 cores: outputs and gating stats bit-exact with the bit-mask
+    // reference, and the stimulus-aware analytic model equal to the
+    // executed cycle counters — makespan, per-core total, and dense
+    // baseline — with the stimulus-blind model as an upper bound.
+    run_prop("temporal-conformance-lockstep", |g| {
+        let k = [1usize, 3, 5][g.usize(0, 3)];
+        let c_in = 1 + g.usize(0, 3);
+        let in_w = 9 + g.usize(0, 16);
+        let in_h = 7 + g.usize(0, 8);
+        let in_t = 1 + g.usize(0, 3);
+        let pool = g.bool(0.3) && in_w % 2 == 0 && in_h % 2 == 0;
+        let spec = ConvSpec {
+            name: "t".into(),
+            kind: ConvKind::Spike,
+            c_in,
+            c_out: 1 + g.usize(0, 3),
+            k,
+            in_t,
+            out_t: in_t,
+            maxpool_after: pool,
+            in_w,
+            in_h,
+            concat_with: None,
+            input_from: None,
+        };
+        let net = single_layer_net(&spec);
+        let mut mw = ModelWeights::random(&net, 1.0, g.usize(0, 1_000_000) as u64);
+        mw.prune_fine_grained(g.f64(0.0, 0.8));
+        let lw = mw.get("t").unwrap();
+        // Occasionally hand the controller a single step with in_t > 1 —
+        // the mixed-time-step replay path (enc_t = 1 → t) of the walks.
+        let steps = if g.bool(0.2) { 1 } else { in_t };
+        let inputs = correlated_steps(g, c_in, in_h, in_w, steps);
+        let cores = 1 + g.usize(0, 4);
+        let base = harness::chain_config(cores);
+        let want = SystemController::new(base.clone())
+            .run_layer(&spec, lw, LayerInput::Spikes(&inputs))
+            .unwrap();
+        for datapath in [Datapath::Prosperity, Datapath::TemporalDelta] {
+            let cfg = base.clone().with_datapath(datapath);
+            let run = SystemController::new(cfg.clone())
+                .run_layer(&spec, lw, LayerInput::Spikes(&inputs))
+                .unwrap();
+            assert_eq!(run.output, want.output, "{datapath:?} cores={cores}");
+            assert_eq!(run.spikes_out, want.spikes_out, "{datapath:?}");
+            assert_eq!(run.gating, want.gating, "{datapath:?} cores={cores}");
+            let model = LatencyModel::new(cfg);
+            let aware = model.layer_with_input(&spec, lw, &LayerInput::Spikes(&inputs));
+            assert_eq!(run.cycles, aware.sparse_makespan, "{datapath:?} cores={cores}");
+            assert_eq!(run.total_cycles(), aware.sparse_cycles, "{datapath:?} cores={cores}");
+            assert_eq!(run.dense_cycles, aware.dense_makespan, "{datapath:?} cores={cores}");
+            let blind = model.layer(&spec, lw);
+            assert!(
+                aware.sparse_cycles <= blind.sparse_cycles,
+                "{datapath:?} cores={cores}: blind model must bound the executed charge"
+            );
+            assert_eq!(aware.dense_cycles, blind.dense_cycles, "{datapath:?}");
+        }
+    });
+}
+
+#[test]
+fn cross_tile_cache_and_temporal_replay_hit_on_periodic_identical_steps() {
+    // A saturated stimulus makes every 8×6 tile plane identical: the
+    // first plane of each shape mines, every later one is served from
+    // the cross-tile cache; the identical second step patches with zero
+    // changed rows, so the temporal replay counters must be live — all
+    // while staying bit-exact with the bit-mask datapath.
+    let spec = ConvSpec {
+        name: "t".into(),
+        kind: ConvKind::Spike,
+        c_in: 2,
+        c_out: 2,
+        k: 3,
+        in_t: 2,
+        out_t: 2,
+        maxpool_after: false,
+        in_w: 16,
+        in_h: 12,
+        concat_with: None,
+        input_from: None,
+    };
+    let net = single_layer_net(&spec);
+    let mut mw = ModelWeights::random(&net, 1.0, 71);
+    mw.prune_fine_grained(0.5);
+    let lw = mw.get("t").unwrap();
+    let ones = SpikeMap::from_dense(&Tensor::from_vec(2, 12, 16, vec![1u8; 2 * 12 * 16]));
+    let inputs = vec![ones.clone(), ones];
+    let base = harness::chain_config(1);
+    let want = SystemController::new(base.clone())
+        .run_layer(&spec, lw, LayerInput::Spikes(&inputs))
+        .unwrap();
+    let cfg = base.with_datapath(Datapath::TemporalDelta);
+    let run = SystemController::new(cfg.clone())
+        .run_layer(&spec, lw, LayerInput::Spikes(&inputs))
+        .unwrap();
+    assert_eq!(run.output, want.output);
+    assert_eq!(run.gating, want.gating);
+    assert!(run.cache_hits > 0, "identical tile planes must hit the cross-tile cache");
+    assert!(run.rows_unchanged > 0, "the identical second step must patch, not rebuild");
+    assert!(run.macs_reused_temporal > 0, "patched rows must replay their deltas");
+    // The cycle model sees the same cache hits and patches.
+    let aware =
+        LatencyModel::new(cfg).layer_with_input(&spec, lw, &LayerInput::Spikes(&inputs));
+    assert_eq!(run.cycles, aware.sparse_makespan);
+    // A zero-capacity cache disables cross-tile reuse but changes no bits
+    // — only the mining charge grows.
+    let cfg0 = harness::chain_config(1)
+        .with_datapath(Datapath::TemporalDelta)
+        .with_temporal_cache(0);
+    let run0 = SystemController::new(cfg0.clone())
+        .run_layer(&spec, lw, LayerInput::Spikes(&inputs))
+        .unwrap();
+    assert_eq!(run0.output, want.output);
+    assert_eq!(run0.cache_hits, 0);
+    assert!(run0.cycles >= run.cycles);
+    let aware0 =
+        LatencyModel::new(cfg0).layer_with_input(&spec, lw, &LayerInput::Spikes(&inputs));
+    assert_eq!(run0.cycles, aware0.sparse_makespan);
+}
+
+#[test]
+fn temporal_cycle_model_bounds_executed_counters_on_tiny_network() {
+    // On the full paper-tiny network (bit-serial encoding layer, maxpool
+    // and time-step mix) the stimulus-blind analytic model must bound
+    // the executed counters from above — the executed mining charge is
+    // data-dependent (representatives, silent planes, cache hits,
+    // patches) — while the bit-mask analytic total is a floor.
+    let (net, w, ds) = harness::tiny_setup(1, 33);
+    let opts = FrameOptions { collect_stats: true };
+    for cores in [1usize, 2] {
+        let cfg = scsnn::config::AccelConfig::paper()
+            .with_cores(cores)
+            .with_datapath(Datapath::TemporalDelta);
+        let be = CycleSimBackend::new(net.clone(), w.clone(), cfg.clone()).unwrap();
+        let frame = be.run_frame(&ds.samples[0].image, &opts).unwrap();
+        let executed: u64 = frame.layers.values().map(|o| o.cycles).sum();
+        let blind = LatencyModel::new(cfg.clone()).network(&net, &w);
+        let floor = LatencyModel::new(cfg.with_datapath(Datapath::BitMask)).network(&net, &w);
+        assert!(executed <= blind.sparse_cycles(), "cores={cores}");
+        assert!(executed >= floor.sparse_cycles(), "cores={cores}");
+        let patterns: u64 = frame.layers.values().map(|o| o.patterns_unique).sum();
+        assert!(patterns > 0, "tiny network mined no patterns");
+    }
+}
