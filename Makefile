@@ -33,8 +33,12 @@ bench:
 # with the reference (perf_temporal additionally gates the cycle model's
 # lock-step and the fresh-MAC drop at full correlation), the dse smoke
 # cycle-verifies a decimated Pareto sweep, perf_loadgen asserts p99
-# total latency is monotone in offered load, and the traced detect run
+# total latency is monotone in offered load, perf_slo asserts shedding
+# holds the admitted p99 at the target with >= 80% of capacity as
+# goodput (blocking blows the same target), and the traced detect run
 # self-checks that the Chrome trace parses with non-empty histograms.
+# The --expect-shed detect leg drives the SLO path end to end at far
+# over-capacity offered load and fails unless admission control sheds.
 bench-smoke:
 	cd rust && SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_throughput && \
 	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench fig06_parallelism && \
@@ -44,16 +48,20 @@ bench-smoke:
 	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_prosperity && \
 	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_temporal && \
 	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_loadgen && \
+	SCSNN_BENCH_SECS=0.05 $(CARGO) bench --bench perf_slo && \
 	SCSNN_PROP_CASES=16 $(CARGO) test -q --test stage_serving && \
 	SCSNN_PROP_CASES=16 $(CARGO) test -q --test prosperity_conformance && \
 	SCSNN_PROP_CASES=16 $(CARGO) test -q --test temporal_conformance && \
 	$(CARGO) test -q --test trace_determinism && \
+	$(CARGO) test -q --test slo_serving && \
 	$(CARGO) run --release -- simulate --scale tiny --chips 2 --pipeline 2 && \
 	$(CARGO) run --release -- simulate --scale tiny --datapath prosperity && \
 	$(CARGO) run --release -- simulate --scale tiny --datapath temporal-delta && \
 	$(CARGO) run --release -- dse --scale tiny --max-points 32 --verify 3 && \
 	$(CARGO) run --release -- detect --scale tiny --frames 8 --chips 2 --pipeline 2 \
 	  --trace /tmp/trace.json --arrivals poisson:200 && \
+	$(CARGO) run --release -- detect --scale tiny --frames 12 \
+	  --arrivals poisson:100000 --slo p99:8 --expect-shed && \
 	$(CARGO) run --release -- trace --frames 8 --out /tmp/trace_cmd.json
 
 # One-shot python build path: datasets + training + quantized weights +

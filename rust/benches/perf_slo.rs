@@ -1,0 +1,151 @@
+//! SLO gate: admission control must hold the admitted-request p99 at
+//! over-capacity load while keeping goodput near capacity — recorded to
+//! `BENCH_slo.json`, with hard asserts (this bench is a regression
+//! gate, not just a report).
+//!
+//! Setup: measure capacity closed-loop (mean service / workers), set the
+//! p99 target to 16 virtual service units, then offer 2x capacity:
+//!
+//! - **Shed** leg: admitted p99 <= target, goodput >= 80% of capacity.
+//! - **Block** leg: every request admitted; the backlog pushes total
+//!   p99 past the target (the unbounded-tail baseline shedding fixes).
+//! - **Determinism** leg: the same seeded schedule and fully-specified
+//!   policy replayed at workers 1 and 4 must pick identical outcome
+//!   counts and fold an identical mAP.
+
+use scsnn::coordinator::loadgen::ArrivalProcess;
+use scsnn::coordinator::pipeline::{DetectionPipeline, HwStatsMode};
+use scsnn::coordinator::{SloMode, SloPolicy};
+use scsnn::detect::dataset::Dataset;
+use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::weights::ModelWeights;
+use scsnn::util::json::Json;
+use scsnn::util::BenchRunner;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+fn main() {
+    let r = BenchRunner::new("perf_slo");
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let mut w = ModelWeights::random(&net, 1.0, 160);
+    w.prune_fine_grained(0.8);
+    let mut p = DetectionPipeline::from_weights(net, w).unwrap();
+    p.hw_mode = HwStatsMode::Off;
+    p.workers = 2;
+    let requests = 48usize;
+    let ds = Dataset::synth(requests, p.net.input_w, p.net.input_h, 161);
+
+    // Closed-loop capacity estimate. Two discarded frames absorb cold
+    // caches; the virtual service unit V is what one worker-slot of the
+    // pool retires per request (1 / capacity).
+    for s in ds.samples.iter().take(2) {
+        p.process_frame(&s.image).unwrap();
+    }
+    let warmup = 4usize;
+    let mut service_secs = 0.0f64;
+    for s in ds.samples.iter().take(warmup) {
+        service_secs += p.process_frame(&s.image).unwrap().wall.as_secs_f64();
+    }
+    let mean_service = (service_secs / warmup as f64).max(1e-6);
+    let capacity = p.workers as f64 / mean_service;
+    let v = 1.0 / capacity;
+    let target = Duration::from_secs_f64(16.0 * v);
+    let offered = 2.0 * capacity;
+    let process = ArrivalProcess::Poisson { rate_fps: offered };
+    r.section(&format!(
+        "golden backend, {} workers: capacity ≈ {capacity:.1} fps (V = {:.3} ms), target p99 {:.2} ms, offered {offered:.1} fps (2x)",
+        p.workers,
+        v * 1e3,
+        target.as_secs_f64() * 1e3
+    ));
+
+    // Fully-specified policy: the explicit estimate keeps the admission
+    // plan a pure function of (schedule, policy), independent of the
+    // pool width the run executes on.
+    let policy = SloPolicy::new(target).with_estimate(Duration::from_secs_f64(v));
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut run_leg = |label: &str, mode: SloMode| {
+        p.slo = Some(policy.clone().with_mode(mode));
+        let rep = p.process_dataset_open_loop(&ds, &process, 162).unwrap();
+        p.slo = None;
+        let m = &rep.metrics;
+        let p99 = m.latency_pct(0.99).as_secs_f64() * 1e3;
+        let goodput = m.goodput_fps();
+        r.report_row(&format!(
+            "{label:>6} | admitted {:>3} | shed {:>3} | goodput {goodput:>8.1} fps | admitted p99 {p99:>8.2} ms",
+            m.admitted, m.shed
+        ));
+        let mut row = BTreeMap::new();
+        row.insert("mode".to_string(), Json::Str(label.to_string()));
+        row.insert("offered_fps".to_string(), Json::Num(offered));
+        row.insert("admitted".to_string(), Json::Num(m.admitted as f64));
+        row.insert("shed".to_string(), Json::Num(m.shed as f64));
+        row.insert("goodput_fps".to_string(), Json::Num(goodput));
+        row.insert("admitted_p99_ms".to_string(), Json::Num(p99));
+        rows.push(Json::Obj(row));
+        (m.admitted, m.shed, goodput, p99)
+    };
+
+    let (shed_admitted, shed_dropped, shed_goodput, shed_p99) = run_leg("shed", SloMode::Shed);
+    let (block_admitted, block_dropped, _block_goodput, block_p99) =
+        run_leg("block", SloMode::Block);
+
+    // The gates. Shedding must bound the admitted tail at the target
+    // while goodput stays within 20% of capacity; blocking admits
+    // everything and the 2x backlog blows through the same target.
+    let target_ms = target.as_secs_f64() * 1e3;
+    assert!(shed_dropped > 0, "2x capacity must shed (admitted {shed_admitted})");
+    assert!(
+        shed_p99 <= target_ms,
+        "shedding failed its SLO: admitted p99 {shed_p99:.2} ms > target {target_ms:.2} ms"
+    );
+    assert!(
+        shed_goodput >= 0.8 * capacity,
+        "shedding starved goodput: {shed_goodput:.1} fps < 80% of capacity {capacity:.1} fps"
+    );
+    assert_eq!(block_admitted, requests, "block must admit everything");
+    assert_eq!(block_dropped, 0);
+    assert!(
+        block_p99 > target_ms,
+        "block at 2x capacity should blow the target: p99 {block_p99:.2} ms <= {target_ms:.2} ms"
+    );
+
+    // Determinism across pool widths: identical outcome counts and an
+    // identical admitted-set mAP at workers 1 and 4.
+    let mut det_rows: Vec<(usize, usize, usize, f64)> = Vec::new();
+    for workers in [1usize, 4] {
+        p.workers = workers;
+        p.slo = Some(policy.clone().with_mode(SloMode::Shed));
+        let rep = p.process_dataset_open_loop(&ds, &process, 162).unwrap();
+        p.slo = None;
+        det_rows.push((workers, rep.metrics.admitted, rep.metrics.shed, rep.map));
+    }
+    let (_, a1, s1, map1) = det_rows[0];
+    let (_, a4, s4, map4) = det_rows[1];
+    assert_eq!((a1, s1), (a4, s4), "shed plan must be worker-count independent");
+    assert_eq!(map1, map4, "admitted outputs must fold identically across pool widths");
+    r.report_row(&format!(
+        "determinism: workers 1 vs 4 -> admitted {a1}/{a4}, shed {s1}/{s4}, mAP {map1:.3}/{map4:.3}"
+    ));
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("perf_slo".to_string()));
+    doc.insert(
+        "workload".to_string(),
+        Json::Str(format!(
+            "{requests} synthetic tiny frames, golden backend, seeded Poisson at 2x capacity"
+        )),
+    );
+    doc.insert("capacity_fps".to_string(), Json::Num(capacity));
+    doc.insert("target_p99_ms".to_string(), Json::Num(target_ms));
+    doc.insert("shed_p99_ms".to_string(), Json::Num(shed_p99));
+    doc.insert("block_p99_ms".to_string(), Json::Num(block_p99));
+    doc.insert("goodput_fps".to_string(), Json::Num(shed_goodput));
+    doc.insert("legs".to_string(), Json::Arr(rows));
+    let json_path = "BENCH_slo.json";
+    match std::fs::write(json_path, Json::Obj(doc).to_string_compact()) {
+        Ok(()) => r.report_row(&format!("wrote {json_path}")),
+        Err(e) => r.report_row(&format!("could not write {json_path}: {e}")),
+    }
+}

@@ -7,9 +7,10 @@
 //! 1. A caller that wants hardware metrics gets the first cycle-reporting
 //!    backend (the cluster when one is registered, else the cycle
 //!    simulator).
-//! 2. Under a deep queue, throughput wins: the first backend that can run
-//!    frames concurrently **without** paying cycle accounting (the golden
-//!    model).
+//! 2. Under pressure — a deep queue, or the measured total-latency tail
+//!    already past the SLO target — throughput wins: the first backend
+//!    that can run frames concurrently **without** paying cycle
+//!    accounting (the golden model).
 //! 3. Under a shallow queue, single-frame latency wins: the PJRT engine
 //!    when it is built (it cannot parallelize, but one compiled frame
 //!    beats interpretation).
@@ -29,6 +30,11 @@ pub struct RequestClass {
     pub want_cycles: bool,
     /// Frames currently queued (the engine's back-pressure signal).
     pub pending: usize,
+    /// The serving tail (measured total-latency p99) is already past
+    /// the SLO target: treat the system as under pressure even when
+    /// the queue reads shallow — backlog drains before the queue-depth
+    /// signal catches up.
+    pub tail_over_target: bool,
 }
 
 /// The auto-select policy.
@@ -63,7 +69,7 @@ impl AutoSelectPolicy {
                 return Some(i);
             }
         }
-        if req.pending > self.deep_queue {
+        if req.pending > self.deep_queue || req.tail_over_target {
             if let Some(i) = candidates.iter().position(|(_, c)| c.parallel && !c.reports_cycles)
             {
                 return Some(i);
@@ -136,26 +142,47 @@ mod tests {
     #[test]
     fn cycle_requests_get_the_cycle_reporter() {
         let p = AutoSelectPolicy::default();
-        let got = p.choose(&fleet(), &RequestClass { want_cycles: true, pending: 100 }).unwrap();
+        let req = RequestClass { want_cycles: true, pending: 100, ..Default::default() };
+        let got = p.choose(&fleet(), &req).unwrap();
         // First registered cycle reporter wins: the cluster.
         assert_eq!(got.name(), "cluster");
         // Without one registered, fall through to the load rules.
         let no_cycles = vec![fake("golden", true, false)];
-        let got = p.choose(&no_cycles, &RequestClass { want_cycles: true, pending: 0 }).unwrap();
+        let req = RequestClass { want_cycles: true, ..Default::default() };
+        let got = p.choose(&no_cycles, &req).unwrap();
         assert_eq!(got.name(), "golden");
     }
 
     #[test]
     fn deep_queue_prefers_throughput_shallow_prefers_pjrt() {
         let p = AutoSelectPolicy::default();
-        let deep = p.choose(&fleet(), &RequestClass { want_cycles: false, pending: 16 }).unwrap();
+        let deep = p
+            .choose(&fleet(), &RequestClass { pending: 16, ..Default::default() })
+            .unwrap();
         assert_eq!(deep.name(), "golden", "deep queue: parallel + no cycle tax");
-        let shallow = p.choose(&fleet(), &RequestClass { want_cycles: false, pending: 1 }).unwrap();
+        let shallow = p
+            .choose(&fleet(), &RequestClass { pending: 1, ..Default::default() })
+            .unwrap();
         assert_eq!(shallow.name(), "pjrt", "shallow queue: compiled single-frame latency");
         // Shallow queue without PJRT built: first parallel backend.
         let no_pjrt: Vec<Arc<dyn SnnBackend>> = fleet().into_iter().skip(1).collect();
-        let got = p.choose(&no_pjrt, &RequestClass { want_cycles: false, pending: 1 }).unwrap();
+        let got = p
+            .choose(&no_pjrt, &RequestClass { pending: 1, ..Default::default() })
+            .unwrap();
         assert_eq!(got.name(), "golden");
+    }
+
+    #[test]
+    fn tail_over_target_forces_throughput_at_shallow_pending() {
+        let p = AutoSelectPolicy::default();
+        // Queue reads shallow, but the measured tail is already past the
+        // SLO target: the throughput backend wins over PJRT.
+        let req = RequestClass { pending: 0, tail_over_target: true, ..Default::default() };
+        let got = p.choose(&fleet(), &req).unwrap();
+        assert_eq!(got.name(), "golden", "tail pressure overrides the shallow-queue rule");
+        // want_cycles still takes precedence over tail pressure.
+        let req = RequestClass { want_cycles: true, tail_over_target: true, ..Default::default() };
+        assert_eq!(p.choose(&fleet(), &req).unwrap().name(), "cluster");
     }
 
     #[test]
@@ -167,7 +194,8 @@ mod tests {
             ("cluster", dcaps(true, true)),
         ];
         let pick = |want_cycles, pending| {
-            p.choose_desc(&descs, &RequestClass { want_cycles, pending }).map(|i| descs[i].0)
+            let req = RequestClass { want_cycles, pending, ..Default::default() };
+            p.choose_desc(&descs, &req).map(|i| descs[i].0)
         };
         assert_eq!(pick(true, 0), Some("cluster"));
         assert_eq!(pick(false, 100), Some("golden"));
@@ -181,7 +209,8 @@ mod tests {
         assert!(p.choose(&[], &RequestClass::default()).is_none());
         // Only a sequential backend registered: still chosen.
         let seq = vec![fake("pjrt", false, false)];
-        let got = p.choose(&seq, &RequestClass { want_cycles: true, pending: 100 }).unwrap();
+        let req = RequestClass { want_cycles: true, pending: 100, ..Default::default() };
+        let got = p.choose(&seq, &req).unwrap();
         assert_eq!(got.name(), "pjrt");
     }
 }

@@ -34,11 +34,20 @@
 //! `EngineConfig::workers` is the pool floor; when a ceiling above it is
 //! configured (`--workers min..max` on the CLI), the coordinator grows
 //! the pool one worker at a time when it waited [`GROW_PATIENCE`] without
-//! a result while more jobs were outstanding than the pool could be
-//! running (genuine backlog — a lone straggler or the drain phase never
-//! grows it), and workers above the floor retire after sitting idle for
-//! [`SHRINK_IDLE`]. Scaling is invisible to results: the reorder buffer
-//! already makes any pool size fold identically
+//! a result while the **tail says the backlog hurts**: more jobs are
+//! active than the pool could be running *and* the measured p95 service
+//! latency predicts the backlog cannot drain inside the scaling target
+//! ([`StreamingEngine::with_tail_target`]; without one the target
+//! defaults to [`GROW_PATIENCE`], reproducing the old eagerness). Jobs
+//! bracketed by [`StreamingEngine::hold_scope`] — e.g. open-loop
+//! requests sleeping until their arrival instant — count as *holding*,
+//! not active: they neither justify growth nor pollute the measured
+//! service tail, which is what lets `coordinator::loadgen` run against
+//! a dynamic pool. Workers above the floor retire after sitting idle
+//! for [`SHRINK_IDLE`]. Stage-job pools scale too: growth is attributed
+//! to the bottleneck stage (most accumulated wait) at the decision
+//! ([`PoolSample::stage`]). Scaling is invisible to results: the
+//! reorder buffer already makes any pool size fold identically
 //! (`tests/engine_determinism.rs`).
 //!
 //! Backends that are not thread-safe ([`BackendCaps::parallel`] == false,
@@ -49,13 +58,22 @@
 
 use crate::backend::{BackendFrame, FrameOptions, SnnBackend};
 use crate::tensor::Tensor;
+use crate::trace::histogram::LatencyHistogram;
 use crate::trace::{TraceKind, TraceSink};
 use anyhow::{anyhow, Result};
+use std::cell::Cell;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+thread_local! {
+    /// Time the job currently running on this worker thread spent inside
+    /// [`StreamingEngine::hold_scope`]: subtracted from the measured
+    /// wall before the sample lands in the live service histogram.
+    static HELD_IN_JOB: Cell<Duration> = const { Cell::new(Duration::ZERO) };
+}
 
 /// How long the coordinator tolerates result starvation (with work
 /// outstanding) before growing the pool by one worker.
@@ -73,9 +91,15 @@ pub const SHRINK_IDLE: Duration = Duration::from_millis(5);
 pub struct PoolSample {
     /// Pool-size target after the decision.
     pub pool: usize,
-    /// Jobs outstanding (sent, not yet folded) at the decision — the
-    /// backlog a grow reacted to; 0 for an idle-shrink.
+    /// Jobs in flight (dispatched, result not yet received) at the
+    /// decision — the backlog a grow reacted to (holding jobs already
+    /// discounted), or whatever was still running when an idle worker
+    /// retired.
     pub queue_depth: usize,
+    /// For stage-serving grows, the stage the decision was attributed
+    /// to: the bottleneck (most accumulated wait) at that instant.
+    /// `None` for whole-frame scaling and shrinks.
+    pub stage: Option<usize>,
 }
 
 /// Per-stage wait-vs-busy load of one stage-graph run: how much of the
@@ -232,6 +256,21 @@ pub struct StreamingEngine {
     /// this many runnable `(frame, stage)` jobs bound for the same
     /// execution unit per dispatch. 1 = one job at a time.
     stage_batch: usize,
+    /// Latency target driving pool growth: grow only when the measured
+    /// p95 service latency predicts the active backlog cannot drain
+    /// inside it. `None` falls back to [`GROW_PATIENCE`] (the historic
+    /// eagerness).
+    tail_target: Option<Duration>,
+    /// Jobs currently sleeping inside [`Self::hold_scope`] — discounted
+    /// from the backlog the scaler reacts to.
+    holding: AtomicUsize,
+    /// Live service-latency histogram of the current run (hold time
+    /// excluded); the p95 the grow trigger consults.
+    service_live: Mutex<LatencyHistogram>,
+    /// Per-frame relative-ish deadlines for the *next* `stream_stages`
+    /// run: dispatch prefers the smallest deadline among runnable
+    /// frames (EDF) instead of the smallest index.
+    stage_deadlines: Mutex<Option<Vec<Duration>>>,
     /// Largest pool size observed during the most recent run.
     peak_workers: AtomicUsize,
     /// Idle-shrink retirements during the most recent run.
@@ -253,6 +292,10 @@ impl StreamingEngine {
             cfg,
             max_workers: 0,
             stage_batch: 1,
+            tail_target: None,
+            holding: AtomicUsize::new(0),
+            service_live: Mutex::new(LatencyHistogram::new()),
+            stage_deadlines: Mutex::new(None),
             peak_workers: AtomicUsize::new(0),
             shrink_events: AtomicUsize::new(0),
             timeline: Mutex::new(Vec::new()),
@@ -280,6 +323,72 @@ impl StreamingEngine {
     pub fn with_max_workers(mut self, max: usize) -> StreamingEngine {
         self.max_workers = max;
         self
+    }
+
+    /// Set the latency target tail-driven scaling steers toward
+    /// (typically the SLO's p99): the pool grows only when the measured
+    /// p95 service latency predicts the active backlog cannot drain
+    /// inside `target`. Without one the target defaults to
+    /// [`GROW_PATIENCE`], which reproduces the historic backlog-driven
+    /// eagerness while still discounting held jobs.
+    pub fn with_tail_target(mut self, target: Duration) -> StreamingEngine {
+        self.tail_target = Some(target);
+        self
+    }
+
+    /// Run `f` as a *hold*, not work: the time it takes is excluded
+    /// from this job's service-latency sample and the job is discounted
+    /// from the backlog while `f` runs. Open-loop callers wrap the
+    /// sleep-until-arrival here so a worker waiting for the future is
+    /// indistinguishable from an idle one to the scaler — the fix that
+    /// lets `coordinator::loadgen` drive a dynamic pool.
+    pub fn hold_scope<T>(&self, f: impl FnOnce() -> T) -> T {
+        self.holding.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let out = f();
+        self.holding.fetch_sub(1, Ordering::Relaxed);
+        HELD_IN_JOB.with(|h| h.set(h.get() + t0.elapsed()));
+        out
+    }
+
+    /// Snapshot of the current run's live service-latency histogram
+    /// (hold time excluded) — the distribution the grow trigger's p95
+    /// reads.
+    pub fn live_service(&self) -> LatencyHistogram {
+        self.service_live.lock().expect("service histogram lock").clone()
+    }
+
+    /// Install per-frame deadlines for the **next** [`Self::
+    /// stream_stages`] run: dispatch prefers the runnable frame with the
+    /// smallest deadline (EDF; ties break on frame index) instead of the
+    /// smallest index. Folding stays in frame order regardless, so
+    /// deadline preference never changes results — only which frame's
+    /// tail latency absorbs contention. `None` restores index-order
+    /// dispatch.
+    pub fn set_stage_deadlines(&self, deadlines: Option<Vec<Duration>>) {
+        *self.stage_deadlines.lock().expect("stage deadline lock") = deadlines;
+    }
+
+    /// Record one completed job's service time into the live histogram.
+    fn observe_service(&self, service: Duration) {
+        self.service_live.lock().expect("service histogram lock").observe(service);
+    }
+
+    /// The tail-driven grow gate: does the measured p95 service latency
+    /// predict `active` backlogged jobs cannot drain through `pool`
+    /// workers inside the scaling target? With no measurement yet the
+    /// starvation itself is the only signal: an unconfigured engine
+    /// keeps the historic eager growth, while an explicit tail target
+    /// waits for evidence before spending threads (admission control
+    /// protects the SLO in the meantime).
+    fn tail_risk(&self, active: usize, pool: usize) -> bool {
+        let target = self.tail_target.unwrap_or(GROW_PATIENCE);
+        let hist = self.service_live.lock().expect("service histogram lock");
+        if hist.is_empty() {
+            return self.tail_target.is_none();
+        }
+        let waves = active.div_ceil(pool.max(1)).min(u32::MAX as usize) as u32;
+        hist.quantile(0.95) * waves > target
     }
 
     /// Enable stage-job micro-batching: [`Self::stream_stages`]
@@ -357,13 +466,17 @@ impl StreamingEngine {
         let (floor, ceiling) = self.worker_bounds(n);
         self.shrink_events.store(0, Ordering::Relaxed);
         self.timeline.lock().expect("timeline lock").clear();
+        *self.service_live.lock().expect("service histogram lock") = LatencyHistogram::new();
         if ceiling <= 1 {
             self.peak_workers.store(1, Ordering::Relaxed);
             for i in 0..n {
+                HELD_IN_JOB.with(|h| h.set(Duration::ZERO));
                 let t0 = Instant::now();
                 let ts = self.trace.now();
                 let out = work(i)?;
                 let wall = t0.elapsed();
+                let held = HELD_IN_JOB.with(|h| h.take());
+                self.observe_service(wall.saturating_sub(held));
                 self.trace.span(TraceKind::EngineJob { frame: i }, ts);
                 fold(i, out, wall)?;
             }
@@ -382,6 +495,10 @@ impl StreamingEngine {
         // topmost active worker lowers it after idling.
         let target = AtomicUsize::new(floor);
         let done = AtomicBool::new(false);
+        // Jobs dispatched whose result has not been received yet —
+        // shared so a retiring worker can record the real depth in its
+        // shrink sample (the coordinator owns the grow side).
+        let inflight = AtomicUsize::new(0);
 
         std::thread::scope(|s| -> Result<()> {
             for id in 0..ceiling {
@@ -390,8 +507,10 @@ impl StreamingEngine {
                 let work = &work;
                 let target = &target;
                 let done = &done;
+                let inflight = &inflight;
                 let shrinks = &self.shrink_events;
                 let timeline = &self.timeline;
+                let engine = self;
                 let trace = self.trace.clone();
                 s.spawn(move || loop {
                     // Parked above the current pool size: wait for a grow
@@ -427,20 +546,29 @@ impl StreamingEngine {
                                         .is_ok()
                                 {
                                     shrinks.fetch_add(1, Ordering::Relaxed);
+                                    // Record the real in-flight depth: a
+                                    // worker can idle out while other
+                                    // workers still run stragglers, and
+                                    // hard-coding 0 here erased that from
+                                    // the timeline.
+                                    let depth = inflight.load(Ordering::Relaxed);
                                     timeline
                                         .lock()
                                         .expect("timeline lock")
-                                        .push(PoolSample { pool: t - 1, queue_depth: 0 });
+                                        .push(PoolSample { pool: t - 1, queue_depth: depth, stage: None });
                                 }
                                 continue;
                             }
                             Err(RecvTimeoutError::Disconnected) => break,
                         }
                     };
+                    HELD_IN_JOB.with(|h| h.set(Duration::ZERO));
                     let t0 = Instant::now();
                     let ts = trace.now();
                     let out = work(idx);
                     let wall = t0.elapsed();
+                    let held = HELD_IN_JOB.with(|h| h.take());
+                    engine.observe_service(wall.saturating_sub(held));
                     trace.span(TraceKind::EngineJob { frame: idx }, ts);
                     if res_tx.send((idx, out, wall)).is_err() {
                         break; // coordinator aborted
@@ -461,19 +589,29 @@ impl StreamingEngine {
                 while next < n {
                     while sent < n && sent - next < window {
                         job_tx.send(sent).map_err(|_| anyhow!("worker pool exited early"))?;
+                        inflight.fetch_add(1, Ordering::Relaxed);
                         sent += 1;
                     }
                     let (i, res, wall) = loop {
                         match res_rx.recv_timeout(GROW_PATIENCE) {
                             Ok(r) => break r,
                             Err(RecvTimeoutError::Timeout) => {
-                                // Starved while more jobs are outstanding
+                                // Starved while more jobs are in flight
                                 // than the pool could even be running —
-                                // genuine backlog, grow toward the cap.
-                                // (A lone straggler or the drain phase has
-                                // outstanding <= target and never grows.)
-                                let outstanding = sent - next - pending.len();
-                                if outstanding > target.load(Ordering::Relaxed) {
+                                // genuine backlog. Grow toward the cap
+                                // only when the measured service tail says
+                                // another wave of this backlog would blow
+                                // the tail target; jobs merely *holding*
+                                // (open-loop arrival sleeps inside
+                                // [`Self::hold_scope`]) are discounted so
+                                // they never masquerade as busy work. (A
+                                // lone straggler or the drain phase has
+                                // active <= target and never grows.)
+                                let outstanding = inflight.load(Ordering::Relaxed);
+                                let active = outstanding
+                                    .saturating_sub(self.holding.load(Ordering::Relaxed));
+                                let t_now = target.load(Ordering::Relaxed);
+                                if active > t_now && self.tail_risk(active, t_now) {
                                     if let Ok(t) = target.fetch_update(
                                         Ordering::Relaxed,
                                         Ordering::Relaxed,
@@ -481,7 +619,11 @@ impl StreamingEngine {
                                     ) {
                                         self.peak_workers.fetch_max(t + 1, Ordering::Relaxed);
                                         self.timeline.lock().expect("timeline lock").push(
-                                            PoolSample { pool: t + 1, queue_depth: outstanding },
+                                            PoolSample {
+                                                pool: t + 1,
+                                                queue_depth: active,
+                                                stage: None,
+                                            },
                                         );
                                     }
                                 }
@@ -491,8 +633,10 @@ impl StreamingEngine {
                             }
                         }
                     };
+                    inflight.fetch_sub(1, Ordering::Relaxed);
                     pending.insert(i, (res, wall));
                     while let Ok((i, res, wall)) = res_rx.try_recv() {
+                        inflight.fetch_sub(1, Ordering::Relaxed);
                         pending.insert(i, (res, wall));
                     }
                     while let Some((res, wall)) = pending.remove(&next) {
@@ -598,24 +742,42 @@ impl StreamingEngine {
     {
         let stages = stages.max(1);
         let in_flight = in_flight.max(1);
-        // Stage jobs run on a fixed pool sized from the larger of the
-        // floor and the dynamic-scaling ceiling (a `--workers 1..8` user
-        // asked for up to 8); concurrency can never exceed the residency
-        // window (at most one job per resident frame) or the frame
-        // count, and non-parallel backends stay on the coordinator
-        // thread.
-        let pool = self.cfg.workers.max(self.max_workers).max(1);
-        let workers = if self.backend.caps().parallel {
-            pool.min(in_flight).min(n.max(1))
+        // Stage jobs run on a dynamic pool: the floor is the configured
+        // worker count, the ceiling the dynamic-scaling cap (a
+        // `--workers 1..8` user asked for *up to* 8 — the pool only
+        // grows there when the measured tail says the bottleneck stage
+        // needs it). Concurrency can never usefully exceed the
+        // residency window (at most one job per resident frame) or the
+        // frame count, and non-parallel backends stay on the
+        // coordinator thread.
+        let cap = in_flight.min(n.max(1));
+        let (floor, ceiling) = if self.backend.caps().parallel {
+            let floor = self.cfg.workers.max(1).min(cap);
+            (floor, self.max_workers.max(floor).min(cap))
         } else {
-            1
+            (1, 1)
         };
+        let workers = floor;
         // Same per-run contract as stream_ordered: the telemetry
         // accessors describe the most recent run, whichever job kind it
-        // used (stage pools are fixed, so the timeline stays empty).
+        // used. Grows land in the timeline tagged with the bottleneck
+        // stage; stage pools never shrink mid-run (runs are short and
+        // the parked-worker gate is cheap).
         self.peak_workers.store(workers, Ordering::Relaxed);
         self.shrink_events.store(0, Ordering::Relaxed);
         self.timeline.lock().expect("timeline lock").clear();
+        *self.service_live.lock().expect("service histogram lock") = LatencyHistogram::new();
+        // Earliest-deadline-first dispatch order, when armed (see
+        // [`Self::set_stage_deadlines`]); `None` keeps the historic
+        // oldest-frame-first order, which EDF with uniform deadlines
+        // reproduces exactly.
+        let deadlines = self.stage_deadlines.lock().expect("stage deadline lock").clone();
+        let deadline_of = |f: usize| -> Duration {
+            deadlines
+                .as_ref()
+                .and_then(|d| d.get(f).copied())
+                .unwrap_or(Duration::MAX)
+        };
         let start = Instant::now();
         let mut stats = StageStreamStats {
             frame_done: vec![Duration::ZERO; n],
@@ -630,9 +792,10 @@ impl StreamingEngine {
         }
         let mut unit_sets: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); stages];
 
-        if workers <= 1 {
+        if ceiling <= 1 {
             // Sequential: same admission rules, jobs run inline with the
-            // oldest resident frame always advancing first — frames
+            // earliest-deadline resident frame advancing first (ties and
+            // the unarmed case fall back to the oldest frame) — frames
             // retire (and fold) in frame order by construction.
             let mut slots: Vec<Option<P>> = (0..n).map(|_| None).collect();
             let mut stage_of = vec![0usize; n];
@@ -641,6 +804,12 @@ impl StreamingEngine {
             // still waits: the coordinator is busy running other
             // frames' stages).
             let mut ready_at = vec![Duration::ZERO; n];
+            // EDF can retire frames out of index order; the reorder
+            // buffer keeps the fold in frame order regardless (with
+            // uniform deadlines frames retire serially and it stays
+            // empty).
+            let mut pending: BTreeMap<usize, (P, Duration)> = BTreeMap::new();
+            let mut next_fold = 0usize;
             let mut admitted = 0usize;
             let mut retired = 0usize;
             let mut live = 0usize;
@@ -652,7 +821,8 @@ impl StreamingEngine {
                     admitted += 1;
                 }
                 let f = (0..admitted)
-                    .find(|&f| slots[f].is_some() && stage_of[f] < stages)
+                    .filter(|&f| slots[f].is_some() && stage_of[f] < stages)
+                    .min_by_key(|&f| (deadline_of(f), f))
                     .expect("a resident frame always has a runnable stage");
                 let s = stage_of[f];
                 let mut payload = slots[f].take().expect("checked above");
@@ -663,6 +833,7 @@ impl StreamingEngine {
                 work(f, s, &mut payload)?;
                 let finished = start.elapsed();
                 stats.stage_busy[s] += finished.saturating_sub(started);
+                self.observe_service(finished.saturating_sub(started));
                 self.trace.span_at(
                     TraceKind::StageJob { frame: f, stage: s, unit },
                     started,
@@ -672,7 +843,11 @@ impl StreamingEngine {
                 stage_of[f] = s + 1;
                 if s + 1 == stages {
                     stats.frame_done[f] = finished;
-                    fold(f, payload, finished)?;
+                    pending.insert(f, (payload, finished));
+                    while let Some((p, at)) = pending.remove(&next_fold) {
+                        fold(next_fold, p, at)?;
+                        next_fold += 1;
+                    }
                     live -= 1;
                     retired += 1;
                 } else {
@@ -699,25 +874,45 @@ impl StreamingEngine {
         // claimed until the whole batch retires (see `with_stage_batch`;
         // the default batch of 1 reproduces per-job dispatch exactly).
         let stage_batch = self.stage_batch.max(1);
-        let (job_tx, job_rx) = mpsc::sync_channel::<(usize, Vec<(usize, usize, P)>)>(workers);
+        let (job_tx, job_rx) = mpsc::sync_channel::<(usize, Vec<(usize, usize, P)>)>(ceiling);
         let job_rx = Mutex::new(job_rx);
         // Results unbounded so workers never block on delivery; the
         // dispatcher only releases jobs whose dependencies are met, so
         // the in-flight set is bounded by min(in_flight, units).
         let (res_tx, res_rx) = mpsc::channel::<Vec<StageDone<P>>>();
+        // Pool-size target: workers with `id >= target` park without
+        // taking jobs; the coordinator raises it when the measured stage
+        // tail justifies another worker.
+        let target = AtomicUsize::new(floor);
+        let done = AtomicBool::new(false);
 
         std::thread::scope(|s| -> Result<()> {
-            for _ in 0..workers {
+            for id in 0..ceiling {
                 let job_rx = &job_rx;
                 let res_tx = res_tx.clone();
                 let work = &work;
+                let target = &target;
+                let done = &done;
+                let engine = self;
                 let trace = self.trace.clone();
                 s.spawn(move || loop {
+                    if id >= target.load(Ordering::Relaxed) {
+                        // Parked above the target: poll cheaply until
+                        // grown into or the run ends.
+                        if done.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                        continue;
+                    }
                     let (unit, batch) = {
                         let rx = job_rx.lock().expect("stage job queue lock");
-                        match rx.recv() {
+                        match rx.recv_timeout(SHRINK_IDLE) {
                             Ok(j) => j,
-                            Err(_) => break, // dispatcher hung up
+                            // Re-check the park gate / done flag; stage
+                            // pools do not shrink mid-run.
+                            Err(RecvTimeoutError::Timeout) => continue,
+                            Err(RecvTimeoutError::Disconnected) => break, // dispatcher hung up
                         }
                     };
                     let mut dones: Vec<StageDone<P>> = Vec::with_capacity(batch.len());
@@ -743,6 +938,7 @@ impl StreamingEngine {
                         });
                         let finished = start.elapsed();
                         trace.span_at(TraceKind::StageJob { frame, stage, unit }, started, finished);
+                        engine.observe_service(finished.saturating_sub(started));
                         let failed = result.is_err();
                         dones.push(StageDone { frame, stage, payload, result, started, finished });
                         if failed {
@@ -790,9 +986,18 @@ impl StreamingEngine {
                     {
                         oldest += 1;
                     }
-                    for f in oldest..admitted {
+                    // Earliest deadline first across runnable frames;
+                    // with no deadlines armed every key ties and the
+                    // index tiebreak reproduces oldest-frame-first
+                    // dispatch exactly (fold order is unaffected either
+                    // way — the reorder buffer retires in frame order).
+                    let mut runnable: Vec<usize> = (oldest..admitted)
+                        .filter(|&f| slots[f].is_some() && stage_of[f] < stages)
+                        .collect();
+                    runnable.sort_by_key(|&f| (deadline_of(f), f));
+                    for f in runnable {
                         if slots[f].is_none() || stage_of[f] >= stages {
-                            continue;
+                            continue; // claimed by an earlier micro-batch this pass
                         }
                         let unit = unit_of(f, stage_of[f]);
                         if unit_busy.contains(&unit) {
@@ -829,9 +1034,45 @@ impl StreamingEngine {
                         debug_assert!(live == 0 && admitted == n);
                         return Ok(());
                     }
-                    let dones = res_rx
-                        .recv()
-                        .map_err(|_| anyhow!("stage worker pool exited early"))?;
+                    let dones = loop {
+                        match res_rx.recv_timeout(GROW_PATIENCE) {
+                            Ok(d) => break d,
+                            Err(RecvTimeoutError::Timeout) => {
+                                // Dispatched jobs outnumber the active
+                                // pool and the measured stage-service
+                                // tail says another wave would blow the
+                                // target: grow, attributing the decision
+                                // to the bottleneck stage (most
+                                // accumulated wait so far).
+                                let t_now = target.load(Ordering::Relaxed);
+                                if jobs_in_flight > t_now && self.tail_risk(jobs_in_flight, t_now) {
+                                    if let Ok(t) = target.fetch_update(
+                                        Ordering::Relaxed,
+                                        Ordering::Relaxed,
+                                        |t| (t < ceiling).then_some(t + 1),
+                                    ) {
+                                        self.peak_workers.fetch_max(t + 1, Ordering::Relaxed);
+                                        let bottleneck = stats
+                                            .stage_wait
+                                            .iter()
+                                            .enumerate()
+                                            .max_by_key(|&(_, w)| *w)
+                                            .map(|(s, _)| s);
+                                        self.timeline.lock().expect("timeline lock").push(
+                                            PoolSample {
+                                                pool: t + 1,
+                                                queue_depth: jobs_in_flight,
+                                                stage: bottleneck,
+                                            },
+                                        );
+                                    }
+                                }
+                            }
+                            Err(RecvTimeoutError::Disconnected) => {
+                                return Err(anyhow!("stage worker pool exited early"));
+                            }
+                        }
+                    };
                     jobs_in_flight -= 1;
                     let unit = {
                         let first = dones.first().expect("batches are never empty");
@@ -861,12 +1102,15 @@ impl StreamingEngine {
                 }
             };
             let result = coordinate();
-            // Close the job queue so workers exit, success or not.
+            // Wake parked workers and close the job queue so the scope
+            // can join, success or not.
+            done.store(true, Ordering::Relaxed);
             drop(job_tx);
             result
         })?;
         stats.stage_units = unit_sets.iter().map(|u| u.len()).collect();
         stats.wall = start.elapsed();
+        stats.workers = self.peak_workers.load(Ordering::Relaxed).max(floor);
         Ok(stats)
     }
 
@@ -1427,5 +1671,163 @@ mod tests {
             "idle workers above the floor must retire (peak={})",
             engine.peak_workers()
         );
+    }
+
+    #[test]
+    fn shrink_samples_record_live_inflight_depth() {
+        // Frame 0 is an 80 ms straggler, frame 1 instant: the pool grows
+        // to 2, worker 1 finishes frame 1 and idles out while frame 0 is
+        // still in flight — its shrink sample must carry that depth (the
+        // old code hard-coded 0 here, erasing the straggler from the
+        // timeline).
+        let engine = StreamingEngine::new(
+            Arc::new(MockBackend { parallel: true }),
+            EngineConfig { workers: 1, queue_depth: 2, batch: 1 },
+        )
+        .with_max_workers(2);
+        engine
+            .stream_ordered(
+                2,
+                |i| {
+                    std::thread::sleep(Duration::from_millis(if i == 0 { 80 } else { 1 }));
+                    Ok(i)
+                },
+                |_, _, _| Ok(()),
+            )
+            .unwrap();
+        let timeline = engine.scaling_timeline();
+        assert_eq!(
+            timeline.first(),
+            Some(&PoolSample { pool: 2, queue_depth: 2, stage: None }),
+            "grow sample records the backlog that justified it: {timeline:?}"
+        );
+        assert!(engine.shrink_events() > 0, "worker 1 must idle out");
+        let shrink = timeline
+            .windows(2)
+            .find(|w| w[1].pool < w[0].pool)
+            .map(|w| w[1])
+            .expect("a shrink sample lands in the timeline");
+        assert_eq!(shrink.queue_depth, 1, "frame 0 was still in flight: {timeline:?}");
+        assert_eq!(shrink.stage, None);
+    }
+
+    #[test]
+    fn held_jobs_never_grow_a_tail_targeted_pool() {
+        // Every job is pure hold (an open-loop arrival sleep): with an
+        // explicit tail target the scaler must treat holding workers as
+        // idle — no growth, and the hold time stays out of the service
+        // histogram.
+        let engine = StreamingEngine::new(
+            Arc::new(MockBackend { parallel: true }),
+            EngineConfig { workers: 1, queue_depth: 4, batch: 1 },
+        )
+        .with_max_workers(4)
+        .with_tail_target(Duration::from_millis(100));
+        engine
+            .stream_ordered(
+                6,
+                |i| {
+                    engine.hold_scope(|| std::thread::sleep(Duration::from_millis(8)));
+                    Ok(i)
+                },
+                |_, _, _| Ok(()),
+            )
+            .unwrap();
+        assert_eq!(
+            engine.peak_workers(),
+            1,
+            "holds masqueraded as busy work: {:?}",
+            engine.scaling_timeline()
+        );
+        let service = engine.live_service();
+        assert_eq!(service.count(), 6);
+        assert!(
+            service.quantile(0.95) < Duration::from_millis(4),
+            "hold time leaked into the service tail: p95={:?}",
+            service.quantile(0.95)
+        );
+    }
+
+    #[test]
+    fn stage_pool_grows_and_blames_the_bottleneck_stage() {
+        // Stage 1 is 10 ms per frame on distinct units, stage 0 instant:
+        // with a floor of 1 the run starves on stage-1 backlog, grows
+        // toward the ceiling, and the grow samples name stage 1.
+        let engine = StreamingEngine::new(
+            Arc::new(MockBackend { parallel: true }),
+            EngineConfig { workers: 1, queue_depth: 4, batch: 1 },
+        )
+        .with_max_workers(4);
+        let mut folded = Vec::new();
+        let stats = engine
+            .stream_stages(
+                6,
+                2,
+                4,
+                |f, s| s * 16 + f,
+                |f| Ok(f),
+                |_f, s, _p: &mut usize| {
+                    if s == 1 {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Ok(())
+                },
+                |f, _p, _| {
+                    folded.push(f);
+                    Ok(())
+                },
+            )
+            .unwrap();
+        assert_eq!(folded, vec![0, 1, 2, 3, 4, 5]);
+        assert!(stats.workers > 1, "stage backlog must grow the pool");
+        assert_eq!(stats.workers, engine.peak_workers());
+        let timeline = engine.scaling_timeline();
+        assert!(!timeline.is_empty());
+        assert!(
+            timeline.iter().any(|s| s.stage == Some(1)),
+            "growth must be attributed to the bottleneck stage: {timeline:?}"
+        );
+    }
+
+    #[test]
+    fn stage_deadlines_dispatch_edf_but_fold_in_frame_order() {
+        let engine = StreamingEngine::new(
+            Arc::new(MockBackend { parallel: false }),
+            EngineConfig { workers: 1, queue_depth: 4, batch: 1 },
+        );
+        let run = |deadlines: Option<Vec<Duration>>| {
+            engine.set_stage_deadlines(deadlines);
+            let ran = Mutex::new(Vec::new());
+            let mut folded = Vec::new();
+            engine
+                .stream_stages(
+                    3,
+                    1,
+                    3,
+                    |f, _s| f,
+                    |f| Ok(f),
+                    |f, _s, _p: &mut usize| {
+                        ran.lock().unwrap().push(f);
+                        Ok(())
+                    },
+                    |f, _p, _| {
+                        folded.push(f);
+                        Ok(())
+                    },
+                )
+                .unwrap();
+            (ran.into_inner().unwrap(), folded)
+        };
+        let (ran, folded) = run(Some(vec![
+            Duration::from_millis(30),
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+        ]));
+        assert_eq!(ran, vec![1, 2, 0], "smallest slack runs first");
+        assert_eq!(folded, vec![0, 1, 2], "fold order never changes");
+        let (ran, folded) = run(None);
+        assert_eq!(ran, vec![0, 1, 2], "unarmed EDF is oldest-frame-first");
+        assert_eq!(folded, vec![0, 1, 2]);
+        engine.set_stage_deadlines(None);
     }
 }

@@ -28,14 +28,24 @@
 //! arrival timestamps are fixed up front, so queue wait accrued before
 //! admission still counts against them. That is exactly the backlog a
 //! saturated server accumulates, and it is why p99 total latency grows
-//! without bound past capacity. Run the engine with a **fixed** pool
-//! (no [`StreamingEngine::with_max_workers`] ceiling): a worker
-//! sleeping until an arrival is indistinguishable from a busy one to
-//! the scaler, so a dynamic pool would grow on idle waiting.
+//! without bound past capacity — unless an [`SloPolicy`] is supplied
+//! ([`LoadGenerator::run_with_policy`]): the policy plans a
+//! deterministic shed/deadline outcome per request on its virtual
+//! clock, dropped requests skip backend work entirely (one
+//! `request.shed` / `request.deadline_missed` trace instant each), and
+//! the histograms describe admitted requests only.
+//!
+//! Dynamic pools are safe here: the sleep-until-arrival runs inside
+//! [`StreamingEngine::hold_scope`], so a worker holding a future
+//! request reads as idle to the scaler and the hold time stays out of
+//! the live service histogram the grow trigger consults. (Historically
+//! the harness demanded a fixed pool because that hold masqueraded as
+//! busy work.)
 //!
 //! [`Rng`]: crate::util::Rng
 
 use crate::coordinator::engine::StreamingEngine;
+use crate::coordinator::slo::{RequestOutcome, SloPolicy};
 use crate::trace::histogram::LatencyHistogram;
 use crate::trace::TraceKind;
 use crate::util::json::Json;
@@ -176,6 +186,31 @@ impl LoadGenerator {
         engine: &StreamingEngine,
         n: usize,
         work: W,
+        fold: F,
+    ) -> Result<LoadRunStats>
+    where
+        T: Send,
+        W: Fn(usize) -> Result<T> + Sync,
+        F: FnMut(usize, T, Duration) -> Result<()>,
+    {
+        self.run_with_policy(engine, n, None, work, fold)
+    }
+
+    /// [`Self::run`] under an admission policy. The policy's
+    /// [`SloPolicy::plan`] is evaluated on the arrival schedule up
+    /// front, so the shed set is a pure function of `(process, seed, n,
+    /// policy)` — identical across worker counts and reruns. Dropped
+    /// requests never reach `work` or `fold`: each costs one trace
+    /// instant (`request.shed` / `request.deadline_missed`) at its
+    /// arrival and is tallied in [`LoadRunStats::outcomes`]. The
+    /// latency histograms describe **admitted** requests only — that is
+    /// the population the SLO target governs.
+    pub fn run_with_policy<T, W, F>(
+        &self,
+        engine: &StreamingEngine,
+        n: usize,
+        policy: Option<&SloPolicy>,
+        work: W,
         mut fold: F,
     ) -> Result<LoadRunStats>
     where
@@ -184,6 +219,10 @@ impl LoadGenerator {
         F: FnMut(usize, T, Duration) -> Result<()>,
     {
         let arrivals = self.schedule(n);
+        let outcomes = match policy {
+            Some(p) => p.plan(&arrivals).outcomes,
+            None => vec![RequestOutcome::Admitted; n],
+        };
         let mut stats = LoadRunStats::new(self.process.rate_fps());
         let t0 = Instant::now();
         // Trace timestamps are offsets from the sink epoch; `base` maps
@@ -193,30 +232,48 @@ impl LoadGenerator {
         let stamps: Mutex<Vec<(Duration, Duration)>> =
             Mutex::new(vec![(Duration::ZERO, Duration::ZERO); n]);
         let trace = engine.trace().clone();
+        let outcomes_ref = &outcomes;
         engine.stream_ordered(
             n,
             |i| {
+                if outcomes_ref[i] != RequestOutcome::Admitted {
+                    // Planned drop: spend no backend cycles on it.
+                    return Ok(None);
+                }
                 // Open-loop admission: hold the request until its
                 // arrival instant. Under overload the arrival is
                 // already past and the job starts immediately — the
-                // elapsed backlog shows up as queue wait.
+                // elapsed backlog shows up as queue wait. The hold runs
+                // inside `hold_scope` so the scaler sees the worker as
+                // idle and the service histogram never sees the wait.
                 let due = arrivals[i];
-                loop {
+                engine.hold_scope(|| loop {
                     let now = t0.elapsed();
                     if now >= due {
                         break;
                     }
                     std::thread::sleep(due - now);
-                }
+                });
                 let svc_start = t0.elapsed();
                 let out = work(i)?;
                 let svc_end = t0.elapsed();
                 stamps.lock().expect("stamp lock")[i] = (svc_start, svc_end);
-                Ok(out)
+                Ok(Some(out))
             },
             |i, out, _wall| {
-                let (svc_start, svc_end) = stamps.lock().expect("stamp lock")[i];
                 let arrival = arrivals[i];
+                let Some(out) = out else {
+                    let kind = match outcomes_ref[i] {
+                        RequestOutcome::DeadlineMissed => {
+                            TraceKind::RequestDeadlineMissed { request: i }
+                        }
+                        _ => TraceKind::RequestShed { request: i },
+                    };
+                    // Zero-duration span at the arrival = one instant.
+                    trace.span_at(kind, base + arrival, base + arrival);
+                    return Ok(());
+                };
+                let (svc_start, svc_end) = stamps.lock().expect("stamp lock")[i];
                 let total = svc_end.saturating_sub(arrival);
                 stats.queue.observe(svc_start.saturating_sub(arrival));
                 stats.service.observe(svc_end.saturating_sub(svc_start));
@@ -236,6 +293,7 @@ impl LoadGenerator {
         )?;
         stats.wall = t0.elapsed();
         stats.requests = n;
+        stats.outcomes = outcomes;
         Ok(stats)
     }
 }
@@ -255,8 +313,11 @@ pub struct LoadRunStats {
     /// Wall-clock span of the whole run (first arrival scheduled at
     /// run start; includes drain).
     pub wall: Duration,
-    /// Requests completed.
+    /// Requests offered (admitted + dropped).
     pub requests: usize,
+    /// Per-request admission outcome, indexed by request. All
+    /// `Admitted` when no policy was supplied.
+    pub outcomes: Vec<RequestOutcome>,
 }
 
 impl LoadRunStats {
@@ -268,10 +329,27 @@ impl LoadRunStats {
             offered_fps,
             wall: Duration::ZERO,
             requests: 0,
+            outcomes: Vec::new(),
         }
     }
 
-    /// Throughput actually achieved over the run's wall span.
+    /// Requests that were admitted and served.
+    pub fn admitted(&self) -> usize {
+        self.outcomes.iter().filter(|o| **o == RequestOutcome::Admitted).count()
+    }
+
+    /// Requests dropped by load shedding / rejection.
+    pub fn shed(&self) -> usize {
+        self.outcomes.iter().filter(|o| **o == RequestOutcome::Shed).count()
+    }
+
+    /// Requests dropped because they could not start by their deadline.
+    pub fn deadline_missed(&self) -> usize {
+        self.outcomes.iter().filter(|o| **o == RequestOutcome::DeadlineMissed).count()
+    }
+
+    /// Throughput actually achieved over the run's wall span (dropped
+    /// requests count — they were disposed of, however cheaply).
     pub fn achieved_fps(&self) -> f64 {
         let w = self.wall.as_secs_f64();
         if w <= 0.0 {
@@ -281,13 +359,30 @@ impl LoadRunStats {
         }
     }
 
-    /// JSON summary: offered/achieved rates plus the three histograms'
-    /// count/mean/percentile digests.
+    /// **Goodput**: admitted (served) requests per second of wall time
+    /// — the number a shedding policy must keep close to capacity while
+    /// it protects the tail.
+    pub fn goodput_fps(&self) -> f64 {
+        let w = self.wall.as_secs_f64();
+        if w <= 0.0 {
+            0.0
+        } else {
+            self.admitted() as f64 / w
+        }
+    }
+
+    /// JSON summary: offered/achieved/goodput rates, admission outcome
+    /// counts, plus the three histograms' count/mean/percentile
+    /// digests (admitted requests only).
     pub fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();
         o.insert("offered_fps".into(), Json::Num(self.offered_fps));
         o.insert("achieved_fps".into(), Json::Num(self.achieved_fps()));
+        o.insert("goodput_fps".into(), Json::Num(self.goodput_fps()));
         o.insert("requests".into(), Json::Num(self.requests as f64));
+        o.insert("admitted".into(), Json::Num(self.admitted() as f64));
+        o.insert("shed".into(), Json::Num(self.shed() as f64));
+        o.insert("deadline_missed".into(), Json::Num(self.deadline_missed() as f64));
         o.insert("wall_ms".into(), Json::Num(self.wall.as_secs_f64() * 1e3));
         o.insert("queue_ms".into(), self.queue.to_json());
         o.insert("service_ms".into(), self.service.to_json());
@@ -343,7 +438,20 @@ mod tests {
             ArrivalProcess::parse("bursty:120:8").unwrap(),
             ArrivalProcess::Bursty { rate_fps: 120.0, burst: 8 }
         );
-        for bad in ["", "poisson", "poisson:-5", "poisson:0", "bursty:10", "bursty:10:0", "uniform:3"] {
+        for bad in [
+            "",
+            "poisson",
+            "poisson:-5",
+            "poisson:0",
+            "poisson:NaN",
+            "poisson:inf",
+            "poisson:10:5",
+            "bursty:10",
+            "bursty:10:0",
+            "bursty:10:2:9",
+            "bursty:NaN:2",
+            "uniform:3",
+        ] {
             assert!(ArrivalProcess::parse(bad).is_err(), "should reject {bad:?}");
         }
     }
@@ -432,5 +540,94 @@ mod tests {
             .count();
         assert_eq!(queued, 6);
         assert_eq!(service, 6);
+    }
+
+    #[test]
+    fn policy_run_sheds_deterministically_and_skips_backend_work() {
+        use crate::coordinator::slo::{SloMode, SloPolicy};
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // 2000 fps offered into a 1 ms server with one worker = 2x
+        // capacity: a calibrated shedding policy with a tight target
+        // must drop some requests, never run their backend work, and
+        // pick the identical shed set on every replay.
+        let img = Tensor::from_vec(1, 1, 2, vec![3u8, 4]);
+        let gen = LoadGenerator::new(ArrivalProcess::Poisson { rate_fps: 2000.0 }, 42);
+        let policy = SloPolicy::new(Duration::from_millis(8))
+            .with_mode(SloMode::Shed)
+            .with_estimate(Duration::from_millis(1));
+        let mut run_once = || {
+            let eng = engine(1);
+            let served = AtomicUsize::new(0);
+            let mut folded = Vec::new();
+            let stats = gen
+                .run_with_policy(
+                    &eng,
+                    24,
+                    Some(&policy),
+                    |_i| {
+                        served.fetch_add(1, Ordering::Relaxed);
+                        eng.backend().run_frame(&img, &FrameOptions::default())
+                    },
+                    |i, _out, _total| {
+                        folded.push(i);
+                        Ok(())
+                    },
+                )
+                .unwrap();
+            assert_eq!(served.load(Ordering::Relaxed), stats.admitted(), "shed ran work");
+            (stats, folded)
+        };
+        let (a, folded_a) = run_once();
+        let (b, folded_b) = run_once();
+        assert_eq!(a.outcomes, b.outcomes, "shed set must be deterministic");
+        assert_eq!(folded_a, folded_b);
+        assert!(a.shed() > 0, "2x capacity with a tight target must shed");
+        assert!(a.admitted() > 0, "an idle server always admits");
+        assert_eq!(a.admitted() + a.shed() + a.deadline_missed(), 24);
+        assert_eq!(a.total.count() as usize, a.admitted(), "histograms are admitted-only");
+        // Folded indices are exactly the admitted ones, in order.
+        let admitted_idx: Vec<usize> = a
+            .outcomes
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| **o == RequestOutcome::Admitted)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(folded_a, admitted_idx);
+        let j = a.to_json();
+        assert!(j.get("shed").and_then(|s| s.as_f64()).unwrap() > 0.0);
+        assert!(j.get("goodput_fps").and_then(|s| s.as_f64()).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn traced_policy_run_emits_shed_instants() {
+        use crate::coordinator::slo::{SloMode, SloPolicy};
+        let eng = engine(1).with_trace(TraceSink::enabled());
+        let img = Tensor::from_vec(1, 1, 2, vec![1u8, 2]);
+        let gen = LoadGenerator::new(ArrivalProcess::Bursty { rate_fps: 4000.0, burst: 8 }, 9);
+        let policy = SloPolicy::new(Duration::from_millis(4))
+            .with_mode(SloMode::Shed)
+            .with_estimate(Duration::from_millis(1));
+        let stats = gen
+            .run_with_policy(
+                &eng,
+                16,
+                Some(&policy),
+                |_i| eng.backend().run_frame(&img, &FrameOptions::default()),
+                |_i, _out, _total| Ok(()),
+            )
+            .unwrap();
+        assert!(stats.shed() > 0);
+        let events = eng.trace().events();
+        let shed_instants = events
+            .iter()
+            .filter(|e| matches!(e.kind, TraceKind::RequestShed { .. }))
+            .count();
+        assert_eq!(shed_instants, stats.shed());
+        let service = events
+            .iter()
+            .filter(|e| matches!(e.kind, TraceKind::RequestService { .. }))
+            .count();
+        assert_eq!(service, stats.admitted());
     }
 }

@@ -186,6 +186,15 @@ pub struct PipelineMetrics {
     /// Offered arrival rate of the open-loop run in frames/s (0 =
     /// closed-loop).
     pub offered_fps: f64,
+    /// Requests admitted and served under an SLO admission policy
+    /// (0 with `shed`/`deadline_missed` both 0 = no policy ran).
+    pub admitted: usize,
+    /// Requests dropped by shedding/rejection under the policy.
+    pub shed: usize,
+    /// Requests dropped because they could not start by their deadline.
+    pub deadline_missed: usize,
+    /// The policy's p99 target in milliseconds (0 = no policy).
+    pub slo_target_ms: f64,
     /// Worker-pool scaling time series of the run: pool size after each
     /// grow/shrink decision, with the queue backlog that triggered it
     /// (empty for fixed pools).
@@ -241,6 +250,18 @@ impl PipelineMetrics {
             0.0
         } else {
             self.frames as f64 / total
+        }
+    }
+
+    /// Goodput over the recorded span: admitted (served) requests per
+    /// second of wall time. Zero when no admission policy ran or no
+    /// span was recorded.
+    pub fn goodput_fps(&self) -> f64 {
+        let span = self.wall_span.as_secs_f64();
+        if span > 0.0 && (self.admitted > 0 || self.shed > 0 || self.deadline_missed > 0) {
+            self.admitted as f64 / span
+        } else {
+            0.0
         }
     }
 
@@ -312,6 +333,15 @@ impl PipelineMetrics {
         if self.offered_fps > 0.0 {
             m.insert("offered_fps".into(), Json::Num(self.offered_fps));
         }
+        if self.admitted > 0 || self.shed > 0 || self.deadline_missed > 0 {
+            m.insert("admitted".into(), Json::Num(self.admitted as f64));
+            m.insert("shed".into(), Json::Num(self.shed as f64));
+            m.insert("deadline_missed".into(), Json::Num(self.deadline_missed as f64));
+            m.insert("goodput_fps".into(), Json::Num(self.goodput_fps()));
+        }
+        if self.slo_target_ms > 0.0 {
+            m.insert("slo_target_ms".into(), Json::Num(self.slo_target_ms));
+        }
         if let Some(h) = &self.queue_hist {
             m.insert("queue_ms".into(), h.to_json());
         }
@@ -328,6 +358,9 @@ impl PipelineMetrics {
                             let mut o = BTreeMap::new();
                             o.insert("pool".to_string(), Json::Num(s.pool as f64));
                             o.insert("queue_depth".to_string(), Json::Num(s.queue_depth as f64));
+                            if let Some(stage) = s.stage {
+                                o.insert("stage".to_string(), Json::Num(stage as f64));
+                            }
                             Json::Obj(o)
                         })
                         .collect(),
@@ -406,7 +439,10 @@ mod tests {
         m.stage_breakdown =
             vec![StageLoad { busy_frac: 0.9, wait_frac: 0.0 }, StageLoad { busy_frac: 0.4, wait_frac: 0.3 }];
         m.bottleneck_stage = Some(1);
-        m.pool_timeline = vec![PoolSample { pool: 2, queue_depth: 3 }];
+        m.pool_timeline = vec![
+            PoolSample { pool: 2, queue_depth: 3, stage: None },
+            PoolSample { pool: 3, queue_depth: 5, stage: Some(1) },
+        ];
         let mut qh = LatencyHistogram::new();
         qh.observe(Duration::from_millis(3));
         m.queue_hist = Some(qh);
@@ -423,6 +459,29 @@ mod tests {
         let tl = parsed.at(&["pool_timeline"]).unwrap().as_arr().unwrap();
         assert_eq!(tl[0].at(&["pool"]).unwrap().as_f64(), Some(2.0));
         assert_eq!(tl[0].at(&["queue_depth"]).unwrap().as_f64(), Some(3.0));
+        assert!(tl[0].at(&["stage"]).is_none(), "whole-frame samples carry no stage");
+        assert_eq!(tl[1].at(&["stage"]).unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn slo_outcome_fields_serialize_only_when_a_policy_ran() {
+        let mut m = PipelineMetrics::for_run("golden", 1);
+        m.record(Duration::from_millis(5), 0);
+        let j = m.to_json().to_string_compact();
+        assert!(!j.contains("\"admitted\"") && !j.contains("\"shed\""));
+        assert!(!j.contains("slo_target_ms") && !j.contains("goodput_fps"));
+        assert_eq!(m.goodput_fps(), 0.0);
+        m.admitted = 8;
+        m.shed = 3;
+        m.deadline_missed = 1;
+        m.slo_target_ms = 16.0;
+        m.wall_span = Duration::from_secs(2);
+        let parsed = Json::parse(&m.to_json().to_string_compact()).unwrap();
+        assert_eq!(parsed.at(&["admitted"]).unwrap().as_f64(), Some(8.0));
+        assert_eq!(parsed.at(&["shed"]).unwrap().as_f64(), Some(3.0));
+        assert_eq!(parsed.at(&["deadline_missed"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(parsed.at(&["slo_target_ms"]).unwrap().as_f64(), Some(16.0));
+        assert_eq!(parsed.at(&["goodput_fps"]).unwrap().as_f64(), Some(4.0));
     }
 
     #[test]

@@ -15,6 +15,9 @@
 //! - [`loadgen`] — open-loop load harness: Poisson/bursty arrival
 //!   processes driven through the engine with per-request
 //!   queue/service/total latency histograms;
+//! - [`slo`] — SLO admission control: deterministic shed/reject/deadline
+//!   planning against a latency target, calibrated from the measured
+//!   service tail;
 //! - [`metrics`] — throughput/latency/energy aggregation and reporting.
 
 pub mod engine;
@@ -22,11 +25,13 @@ pub mod loadgen;
 pub mod metrics;
 pub mod pipeline;
 pub mod scheduler;
+pub mod slo;
 pub mod stage_exec;
 pub mod tiler;
 
 pub use engine::{EngineConfig, PoolSample, StageLoad, StageStreamStats, StreamingEngine};
 pub use loadgen::{ArrivalProcess, LoadGenerator, LoadRunStats};
+pub use slo::{AdmissionPlan, RequestOutcome, SloMode, SloPolicy};
 pub use metrics::{FrameHwEstimate, PipelineMetrics};
 pub use pipeline::{DetectionPipeline, FrameResult, HwStatsMode, PipelineReport};
 pub use scheduler::{LayerPlan, LayerSchedule};

@@ -27,6 +27,7 @@ use crate::config::{AccelConfig, ClusterConfig, Datapath, ShardPolicy};
 use crate::coordinator::engine::{EngineConfig, StreamingEngine};
 use crate::coordinator::loadgen::{ArrivalProcess, LoadGenerator};
 use crate::coordinator::metrics::{FrameHwEstimate, PipelineMetrics};
+use crate::coordinator::slo::SloPolicy;
 use crate::coordinator::stage_exec::{StageExecutor, StageServingRun};
 use crate::detect::dataset::Dataset;
 use crate::detect::map::mean_ap;
@@ -142,6 +143,13 @@ pub struct DetectionPipeline {
     /// backend is active — the stage executor needs `ChipCluster`'s
     /// stage partition and lease, which `dyn SnnBackend` cannot expose.
     cluster_backend: Option<Arc<ChipCluster>>,
+    /// SLO admission policy for open-loop serving (`--slo p99:MS` on
+    /// the CLI): [`Self::process_dataset_open_loop`] plans a
+    /// deterministic shed/deadline outcome per request against this
+    /// target (calibrating the service estimate on a warmup frame when
+    /// it is unset) and the engine's tail-driven scaler steers toward
+    /// the same target. `None` = admit everything (historic behavior).
+    pub slo: Option<SloPolicy>,
     /// Trace sink shared with every execution layer (engine workers,
     /// stage jobs, cluster layer walks, interconnect transfers).
     /// Disabled (zero-cost) by default; enable **before** selecting the
@@ -219,6 +227,7 @@ impl DetectionPipeline {
             cluster: ClusterConfig::single_chip(),
             pipeline_depth: 0,
             cluster_backend: None,
+            slo: None,
             trace: TraceSink::disabled(),
         }
     }
@@ -317,12 +326,16 @@ impl DetectionPipeline {
     /// currently active), the golden model, the cluster (when more than
     /// one chip is configured) and the cycle simulator. The policy
     /// decides on static descriptors, so only the winning backend is
-    /// constructed — and only when the choice actually changes. Returns
+    /// constructed — and only when the choice actually changes.
+    /// `tail_over_target` feeds the policy's pressure rule: when the
+    /// measured serving tail is already past the SLO target the
+    /// throughput backend wins even at shallow queue depth. Returns
     /// the chosen backend's name.
     pub fn select_backend_auto(
         &mut self,
         want_cycles: bool,
         pending: usize,
+        tail_over_target: bool,
     ) -> Result<&'static str> {
         let mut kinds: Vec<(BackendKind, crate::backend::BackendCaps)> = Vec::new();
         if self.pjrt.is_some() {
@@ -336,7 +349,7 @@ impl DetectionPipeline {
         let descs: Vec<(&str, crate::backend::BackendCaps)> =
             kinds.iter().map(|(k, c)| (k.label(), *c)).collect();
         let idx = AutoSelectPolicy::default()
-            .choose_desc(&descs, &RequestClass { want_cycles, pending })
+            .choose_desc(&descs, &RequestClass { want_cycles, pending, tail_over_target })
             .expect("candidate list is never empty");
         let kind = kinds[idx].0;
         // The decision is static; only rebuild when it actually changes
@@ -360,7 +373,7 @@ impl DetectionPipeline {
     /// A streaming engine over the active backend with the pipeline's
     /// scheduling parameters.
     pub fn engine(&self) -> StreamingEngine {
-        StreamingEngine::new(
+        let engine = StreamingEngine::new(
             self.backend.clone(),
             EngineConfig {
                 workers: self.workers,
@@ -369,7 +382,14 @@ impl DetectionPipeline {
             },
         )
         .with_max_workers(self.max_workers)
-        .with_trace(self.trace.clone())
+        .with_trace(self.trace.clone());
+        match &self.slo {
+            // Scale toward the SLO target instead of the historic
+            // backlog-eager default: the pool grows only when the
+            // measured p95 service tail predicts a target breach.
+            Some(slo) => engine.with_tail_target(slo.target_p99),
+            None => engine,
+        }
     }
 
     /// The concrete cluster when the cluster backend is active.
@@ -623,6 +643,13 @@ impl DetectionPipeline {
     /// carries the queue/service latency histograms and the offered
     /// rate. Hardware estimation runs once (first frame) on the
     /// [`HwStatsMode`] != `Off` cadence, outside the timed path.
+    ///
+    /// With [`Self::slo`] set, the run is admission-controlled: the
+    /// policy plans a deterministic shed/deadline outcome per request
+    /// (calibrating its service estimate on one untimed warmup frame
+    /// when unset), dropped requests cost no backend work, the
+    /// histograms and mAP describe admitted requests only, and the
+    /// metrics carry the outcome counts + goodput.
     pub fn process_dataset_open_loop(
         &self,
         ds: &Dataset,
@@ -631,15 +658,26 @@ impl DetectionPipeline {
     ) -> Result<PipelineReport> {
         let images: Vec<&Tensor<u8>> = ds.samples.iter().map(|s| &s.image).collect();
         let engine = self.engine();
-        let mut metrics = PipelineMetrics::for_run(
-            self.backend.name(),
-            engine.effective_workers(images.len()),
-        );
+        let workers = engine.effective_workers(images.len());
+        let mut metrics = PipelineMetrics::for_run(self.backend.name(), workers);
+        let policy = match &self.slo {
+            Some(p) if p.est_service.is_zero() && !images.is_empty() => {
+                // Warmup calibration outside the timed path: one frame's
+                // service time spread over the pool width approximates
+                // the virtual clock's per-request retirement interval.
+                let t0 = Instant::now();
+                self.detect_frame(images[0])?;
+                Some(p.clone().with_estimate(t0.elapsed() / workers.max(1) as u32))
+            }
+            Some(p) => Some(p.clone()),
+            None => None,
+        };
         let mut dets: Vec<(usize, Box2D)> = Vec::new();
         let gen = LoadGenerator::new(*process, seed);
-        let stats = gen.run(
+        let stats = gen.run_with_policy(
             &engine,
             images.len(),
+            policy.as_ref(),
             |i| Ok(self.detect_frame(images[i])?.0),
             |i, frame_dets, total| {
                 metrics.record(total, frame_dets.len());
@@ -653,10 +691,17 @@ impl DetectionPipeline {
             }
         }
         metrics.peak_workers = engine.peak_workers();
+        metrics.pool_timeline = engine.scaling_timeline();
         metrics.wall_span = stats.wall;
         metrics.offered_fps = stats.offered_fps;
         metrics.queue_hist = Some(stats.queue.clone());
         metrics.service_hist = Some(stats.service.clone());
+        if let Some(p) = &policy {
+            metrics.admitted = stats.admitted();
+            metrics.shed = stats.shed();
+            metrics.deadline_missed = stats.deadline_missed();
+            metrics.slo_target_ms = p.target_p99.as_secs_f64() * 1e3;
+        }
         if let Some(first) = ds.samples.first() {
             let (pu, mr, ru, ch, mrt) = self.reuse_counters(&first.image)?;
             metrics.patterns_unique = pu;
@@ -849,14 +894,17 @@ mod tests {
     fn auto_select_follows_caps_and_load() {
         let mut p = synthetic_pipeline();
         // Cycle request on a single-chip pipeline → cycle simulator.
-        assert_eq!(p.select_backend_auto(true, 0).unwrap(), "cyclesim");
+        assert_eq!(p.select_backend_auto(true, 0, false).unwrap(), "cyclesim");
         // Cycle request with a cluster configured → cluster.
         p.set_cluster(2, ShardPolicy::FrameParallel).unwrap();
-        assert_eq!(p.select_backend_auto(true, 0).unwrap(), "cluster");
+        assert_eq!(p.select_backend_auto(true, 0, false).unwrap(), "cluster");
         // Deep queue, no cycle request → golden throughput engine
         // (no PJRT in this build).
-        assert_eq!(p.select_backend_auto(false, 64).unwrap(), "golden");
-        assert_eq!(p.select_backend_auto(false, 0).unwrap(), "golden");
+        assert_eq!(p.select_backend_auto(false, 64, false).unwrap(), "golden");
+        assert_eq!(p.select_backend_auto(false, 0, false).unwrap(), "golden");
+        // Shallow queue but the serving tail is over the SLO target →
+        // still the throughput backend.
+        assert_eq!(p.select_backend_auto(false, 0, true).unwrap(), "golden");
         // The chosen backend actually serves frames.
         let ds = Dataset::synth(1, p.net.input_w, p.net.input_h, 19);
         assert!(p.process_frame(&ds.samples[0].image).is_ok());
@@ -880,6 +928,45 @@ mod tests {
         let j = rep.metrics.to_json();
         assert!(j.get("offered_fps").is_some());
         assert!(j.get("queue_ms").and_then(|q| q.get("p99_ms")).is_some());
+        // No policy ran: the SLO outcome fields stay out of the report.
+        assert!(j.get("shed").is_none());
+        assert!(j.get("slo_target_ms").is_none());
+    }
+
+    #[test]
+    fn slo_open_loop_run_sheds_and_reports_outcomes() {
+        use crate::coordinator::slo::SloMode;
+        let mut p = synthetic_pipeline();
+        p.hw_mode = HwStatsMode::Off;
+        // An explicit service estimate far above the admission budget
+        // makes the plan independent of real frame timing: at a 100k fps
+        // offered rate every request lands near t=0, the first admitted
+        // request books 5 ms of virtual service, and everything queued
+        // behind it overshoots the 4 ms budget (8 ms target x 0.5
+        // headroom) — so the run must both admit and shed.
+        p.slo = Some(
+            SloPolicy::new(Duration::from_millis(8))
+                .with_mode(SloMode::Shed)
+                .with_estimate(Duration::from_millis(5)),
+        );
+        let ds = Dataset::synth(6, p.net.input_w, p.net.input_h, 31);
+        let rep = p
+            .process_dataset_open_loop(&ds, &ArrivalProcess::Poisson { rate_fps: 100_000.0 }, 7)
+            .unwrap();
+        let m = &rep.metrics;
+        assert!(m.admitted > 0, "an idle server admits its first request");
+        assert!(m.shed > 0, "overload behind a 5 ms booking must shed");
+        assert_eq!(m.admitted + m.shed + m.deadline_missed, 6);
+        assert_eq!(m.slo_target_ms, 8.0);
+        // Histograms (and the folded frame count) cover admitted only.
+        assert_eq!(m.frames, m.admitted);
+        assert_eq!(m.queue_hist.as_ref().unwrap().count() as usize, m.admitted);
+        assert_eq!(m.service_hist.as_ref().unwrap().count() as usize, m.admitted);
+        let j = m.to_json();
+        assert_eq!(j.get("admitted").and_then(|v| v.as_f64()).unwrap(), m.admitted as f64);
+        assert_eq!(j.get("shed").and_then(|v| v.as_f64()).unwrap(), m.shed as f64);
+        assert_eq!(j.get("slo_target_ms").and_then(|v| v.as_f64()).unwrap(), 8.0);
+        assert!(j.get("goodput_fps").and_then(|v| v.as_f64()).unwrap() > 0.0);
     }
 
     #[test]

@@ -1,0 +1,351 @@
+//! SLO admission control: shed/reject arrivals the serving stack can
+//! no longer finish inside the latency target.
+//!
+//! An open-loop server past capacity has no good steady state: the
+//! backlog — and with it p99 total latency — grows without bound (the
+//! `coordinator::loadgen` module measures exactly that). The only two
+//! levers are *more capacity* (the engine's tail-driven pool scaling)
+//! and *less admitted work*; [`SloPolicy`] is the second lever.
+//!
+//! ## Determinism: a virtual clock, calibrated from the live telemetry
+//!
+//! A naive admission controller asks the wall clock "how long has this
+//! request waited?" — and its shed set then depends on worker count,
+//! scheduler jitter, and machine load, which would break the engine's
+//! core invariant (every pool shape is bit-identical to serial order).
+//! Instead the policy *plans* admission on a **virtual clock**: a
+//! work-conserving FCFS server that retires one admitted request every
+//! [`SloPolicy::est_service`], replayed over the deterministic arrival
+//! schedule. The plan is a pure function of `(arrivals, policy)`, so
+//! the same seed and policy produce the identical shed set — and
+//! bit-identical outputs for the admitted frames — across any worker
+//! count.
+//!
+//! The live measurement plane still steers the policy: `est_service`
+//! is *calibrated from the measured service-latency histogram* (e.g.
+//! a closed-loop warmup's mean service over the pool width, via
+//! [`SloPolicy::with_estimate_from`]), which is how "consult the total
+//! latency histogram" stays compatible with reproducible decisions.
+//!
+//! ## Modes and the deadline rule
+//!
+//! - [`SloMode::Block`] — never drop; pure back-pressure (the pre-SLO
+//!   behavior, kept as the A/B baseline: p99 unbounded past capacity).
+//! - [`SloMode::Reject`] — decide at *arrival*: refuse a request whose
+//!   predicted total (wait + service) exceeds the target budget.
+//! - [`SloMode::Shed`] — decide at *dequeue*: drop a request whose
+//!   accrued wait alone already exceeds the budget (admits the
+//!   marginal requests `Reject` refuses; sheds strictly no earlier).
+//!
+//! Either way a request that would start service immediately is always
+//! admitted — shedding work from an idle server cannot improve any
+//! tail. Requests may also carry a relative deadline: one whose
+//! (virtual) service start falls past `arrival + deadline` is dropped
+//! as [`RequestOutcome::DeadlineMissed`] *before* any chip cycles are
+//! spent on it. The admission budget is `target_p99 × headroom`
+//! (default 0.5): the virtual clock tracks the real one only up to
+//! scheduler noise, so the planner leaves half the target as jitter
+//! allowance for the measured tail.
+
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+use crate::trace::histogram::LatencyHistogram;
+
+/// What the admission controller does once the target is breached.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SloMode {
+    /// Never drop: back-pressure only (p99 unbounded past capacity).
+    Block,
+    /// Refuse at arrival when the predicted total exceeds the budget.
+    Reject,
+    /// Drop at dequeue when the accrued wait alone exceeds the budget.
+    Shed,
+}
+
+impl SloMode {
+    /// Parse a CLI mode name: `block`, `reject` or `shed`.
+    pub fn parse(s: &str) -> Result<SloMode> {
+        match s {
+            "block" => Ok(SloMode::Block),
+            "reject" => Ok(SloMode::Reject),
+            "shed" => Ok(SloMode::Shed),
+            _ => bail!("bad SLO mode {s:?}: expected block, reject or shed"),
+        }
+    }
+}
+
+/// Per-request outcome of the admission plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Served; its total latency lands in the histograms.
+    Admitted,
+    /// Dropped by the SLO target (rejected at arrival or shed at
+    /// dequeue, depending on [`SloMode`]).
+    Shed,
+    /// Dropped because its deadline passed before service began.
+    DeadlineMissed,
+}
+
+/// An SLO target plus the policy that enforces it.
+#[derive(Clone, Debug)]
+pub struct SloPolicy {
+    /// Target p99 total latency for admitted requests.
+    pub target_p99: Duration,
+    /// What to do with requests that would breach the target.
+    pub mode: SloMode,
+    /// Calibrated virtual per-request service time at the current pool
+    /// (≈ mean service / workers, i.e. 1 / capacity). Zero disables
+    /// prediction: every request admits (only deadline drops can fire,
+    /// and only with a non-zero estimate do they, since virtual waits
+    /// stay zero).
+    pub est_service: Duration,
+    /// Optional relative deadline (`arrival + deadline` is the drop
+    /// cutoff for service *start*).
+    pub deadline: Option<Duration>,
+    /// Fraction of `target_p99` the planner budgets for predicted
+    /// latency; the rest absorbs real-vs-virtual clock noise.
+    pub headroom: f64,
+}
+
+impl SloPolicy {
+    /// A shedding policy for the given p99 target with default
+    /// calibration knobs (`mode: Shed`, no deadline, headroom 0.5,
+    /// uncalibrated estimate).
+    pub fn new(target_p99: Duration) -> SloPolicy {
+        SloPolicy {
+            target_p99,
+            mode: SloMode::Shed,
+            est_service: Duration::ZERO,
+            deadline: None,
+            headroom: 0.5,
+        }
+    }
+
+    /// Parse the CLI target spec `p99:MS` (e.g. `p99:50`).
+    pub fn parse_target(spec: &str) -> Result<Duration> {
+        let ms = match spec.strip_prefix("p99:") {
+            Some(ms) => ms,
+            None => bail!("bad SLO spec {spec:?}: expected p99:MS"),
+        };
+        let ms: f64 = ms
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad SLO target {ms:?} in {spec:?}"))?;
+        if !ms.is_finite() || ms <= 0.0 {
+            bail!("SLO target must be positive milliseconds, got {spec:?}");
+        }
+        Ok(Duration::from_secs_f64(ms / 1e3))
+    }
+
+    pub fn with_mode(mut self, mode: SloMode) -> SloPolicy {
+        self.mode = mode;
+        self
+    }
+
+    /// Set the virtual per-request service-time estimate directly.
+    pub fn with_estimate(mut self, est_service: Duration) -> SloPolicy {
+        self.est_service = est_service;
+        self
+    }
+
+    /// Calibrate the estimate from a measured service-latency
+    /// histogram: mean service divided by the pool width (one request
+    /// retires every `mean / workers` at capacity).
+    pub fn with_estimate_from(self, service: &LatencyHistogram, workers: usize) -> SloPolicy {
+        let w = workers.max(1) as u32;
+        let est = service.mean() / w;
+        self.with_estimate(est)
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> SloPolicy {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// The planner's admission budget: `target_p99 × headroom`.
+    pub fn budget(&self) -> Duration {
+        self.target_p99.mul_f64(self.headroom.clamp(0.0, 1.0))
+    }
+
+    /// Plan admission over a deterministic arrival schedule (offsets
+    /// from run start, non-decreasing). Pure in `(arrivals, self)`.
+    pub fn plan(&self, arrivals: &[Duration]) -> AdmissionPlan {
+        let budget = self.budget();
+        let est = self.est_service;
+        // Virtual clock: when the FCFS server frees up next.
+        let mut finish = Duration::ZERO;
+        let mut outcomes = Vec::with_capacity(arrivals.len());
+        let mut virtual_start = Vec::with_capacity(arrivals.len());
+        for &a in arrivals {
+            let start = finish.max(a);
+            virtual_start.push(start);
+            // Deadline drop happens first: past-deadline work is dead
+            // regardless of what the SLO target would say.
+            if let Some(d) = self.deadline {
+                if start > a + d {
+                    outcomes.push(RequestOutcome::DeadlineMissed);
+                    continue;
+                }
+            }
+            let wait = start - a;
+            let admit = match self.mode {
+                SloMode::Block => true,
+                // An immediate start always admits: shedding work from
+                // an idle server cannot improve any tail.
+                SloMode::Reject => wait.is_zero() || wait + est <= budget,
+                SloMode::Shed => wait.is_zero() || wait <= budget,
+            };
+            if admit {
+                finish = start + est;
+                outcomes.push(RequestOutcome::Admitted);
+            } else {
+                outcomes.push(RequestOutcome::Shed);
+            }
+        }
+        AdmissionPlan { outcomes, virtual_start }
+    }
+}
+
+/// The deterministic per-request decisions for one schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AdmissionPlan {
+    /// Outcome per request, in arrival order.
+    pub outcomes: Vec<RequestOutcome>,
+    /// Planned service start on the virtual clock (diagnostic; equals
+    /// the arrival instant whenever the virtual server was idle).
+    pub virtual_start: Vec<Duration>,
+}
+
+impl AdmissionPlan {
+    pub fn admitted(&self) -> usize {
+        self.count(RequestOutcome::Admitted)
+    }
+
+    pub fn shed(&self) -> usize {
+        self.count(RequestOutcome::Shed)
+    }
+
+    pub fn deadline_missed(&self) -> usize {
+        self.count(RequestOutcome::DeadlineMissed)
+    }
+
+    fn count(&self, o: RequestOutcome) -> usize {
+        self.outcomes.iter().filter(|&&x| x == o).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    /// Arrivals every `gap_ms`, n of them, starting at t=0.
+    fn uniform(n: usize, gap_ms: u64) -> Vec<Duration> {
+        (0..n as u64).map(|i| ms(i * gap_ms)).collect()
+    }
+
+    #[test]
+    fn parse_target_accepts_p99_ms_and_rejects_garbage() {
+        assert_eq!(SloPolicy::parse_target("p99:50").unwrap(), ms(50));
+        assert_eq!(SloPolicy::parse_target("p99:2.5").unwrap(), Duration::from_micros(2500));
+        for bad in ["", "p99", "p99:", "p99:0", "p99:-3", "p99:NaN", "p95:10", "50"] {
+            assert!(SloPolicy::parse_target(bad).is_err(), "should reject {bad:?}");
+        }
+        assert!(SloMode::parse("shed").is_ok());
+        assert!(SloMode::parse("reject").is_ok());
+        assert!(SloMode::parse("block").is_ok());
+        assert!(SloMode::parse("drop").is_err());
+    }
+
+    #[test]
+    fn underload_admits_everything() {
+        // Arrivals 10 ms apart, 2 ms service: the virtual server is
+        // always idle at the next arrival.
+        let p = SloPolicy::new(ms(8)).with_estimate(ms(2));
+        let plan = p.plan(&uniform(20, 10));
+        assert_eq!(plan.admitted(), 20);
+        assert_eq!(plan.shed(), 0);
+        assert_eq!(plan.deadline_missed(), 0);
+    }
+
+    #[test]
+    fn overload_sheds_to_hold_the_virtual_wait_under_budget() {
+        // 2x capacity: arrivals every 1 ms against a 2 ms service.
+        // Budget = 8 ms x 0.5 = 4 ms of virtual wait.
+        let p = SloPolicy::new(ms(8)).with_estimate(ms(2));
+        let plan = p.plan(&uniform(40, 1));
+        assert!(plan.shed() > 0, "2x capacity must shed");
+        assert!(plan.admitted() > 0, "must not shed everything");
+        assert_eq!(plan.outcomes[0], RequestOutcome::Admitted, "idle server always admits");
+        // Every admitted request's virtual wait respects the budget.
+        let arrivals = uniform(40, 1);
+        for (i, o) in plan.outcomes.iter().enumerate() {
+            if *o == RequestOutcome::Admitted && i > 0 {
+                let wait = plan.virtual_start[i].saturating_sub(arrivals[i]);
+                assert!(wait <= p.budget(), "request {i} wait {wait:?} over budget");
+            }
+        }
+        // Deterministic: replanning yields the identical shed set.
+        assert_eq!(p.plan(&uniform(40, 1)), plan);
+    }
+
+    #[test]
+    fn reject_is_at_least_as_strict_as_shed_and_block_never_drops() {
+        let arrivals = uniform(60, 1);
+        let shed = SloPolicy::new(ms(8)).with_estimate(ms(2)).plan(&arrivals);
+        let reject = SloPolicy::new(ms(8))
+            .with_estimate(ms(2))
+            .with_mode(SloMode::Reject)
+            .plan(&arrivals);
+        let block = SloPolicy::new(ms(8))
+            .with_estimate(ms(2))
+            .with_mode(SloMode::Block)
+            .plan(&arrivals);
+        assert!(reject.admitted() <= shed.admitted());
+        assert!(reject.shed() > 0);
+        assert_eq!(block.shed(), 0);
+        assert_eq!(block.admitted(), 60);
+    }
+
+    #[test]
+    fn deadline_drops_fire_before_slo_sheds_and_spend_no_service() {
+        // Block mode + deadline: only deadline drops can fire.
+        let p = SloPolicy::new(ms(1000))
+            .with_estimate(ms(2))
+            .with_mode(SloMode::Block)
+            .with_deadline(ms(3));
+        let plan = p.plan(&uniform(40, 1));
+        assert!(plan.deadline_missed() > 0, "overload must miss deadlines");
+        assert_eq!(plan.shed(), 0, "Block mode never sheds on the target");
+        assert!(plan.admitted() > 0);
+        // A generous deadline never fires.
+        let lax = SloPolicy::new(ms(1000))
+            .with_estimate(ms(2))
+            .with_mode(SloMode::Block)
+            .with_deadline(ms(10_000));
+        assert_eq!(lax.plan(&uniform(40, 1)).deadline_missed(), 0);
+    }
+
+    #[test]
+    fn uncalibrated_estimate_admits_everything() {
+        let p = SloPolicy::new(ms(1));
+        let plan = p.plan(&uniform(50, 1));
+        assert_eq!(plan.admitted(), 50);
+    }
+
+    #[test]
+    fn estimate_calibrates_from_service_histogram_over_pool_width() {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..10 {
+            h.observe(ms(8));
+        }
+        let p = SloPolicy::new(ms(100)).with_estimate_from(&h, 4);
+        assert_eq!(p.est_service, ms(2));
+        // Pool width 0 is treated as 1 (no division by zero).
+        let q = SloPolicy::new(ms(100)).with_estimate_from(&h, 0);
+        assert_eq!(q.est_service, ms(8));
+    }
+}

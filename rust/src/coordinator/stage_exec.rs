@@ -107,6 +107,27 @@ impl<'c> StageExecutor<'c> {
             stages,
         })
     }
+
+    /// [`Self::run`] with per-frame deadlines: the stage scheduler
+    /// dispatches the runnable frame with the least slack first (EDF)
+    /// instead of the oldest, so under contention a tight-deadline frame
+    /// jumps the queue while outputs stay bit-identical (folding is in
+    /// frame order either way). Deadlines are instants relative to the
+    /// run start, `deadlines[f]` for frame `f`; the installed schedule
+    /// is cleared before returning so later runs are unaffected.
+    pub fn run_with_deadlines(
+        &self,
+        engine: &StreamingEngine,
+        images: &[&Tensor<u8>],
+        opts: &FrameOptions,
+        in_flight: usize,
+        deadlines: Vec<Duration>,
+    ) -> Result<StageServingRun> {
+        engine.set_stage_deadlines(Some(deadlines));
+        let out = self.run(engine, images, opts, in_flight);
+        engine.set_stage_deadlines(None);
+        out
+    }
 }
 
 /// Result of one wall-clock stage-serving run: per-frame backend outputs

@@ -22,6 +22,7 @@ use scsnn::config::{AccelConfig, ClusterConfig, Datapath, ShardPolicy};
 use scsnn::coordinator::engine::{EngineConfig, StreamingEngine};
 use scsnn::coordinator::loadgen::ArrivalProcess;
 use scsnn::coordinator::pipeline::{DetectionPipeline, HwStatsMode};
+use scsnn::coordinator::{SloMode, SloPolicy};
 use scsnn::coordinator::stage_exec::StageExecutor;
 use scsnn::detect::dataset::{write_ppm, Dataset};
 use scsnn::model::miout::MioutAccumulator;
@@ -37,6 +38,7 @@ use scsnn::util::json::Json;
 use scsnn::util::Args;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let args = Args::from_env();
@@ -77,6 +79,7 @@ fn print_usage() {
          cluster options: --chips N  --shard-policy frame|pipeline|tile  --in-flight N  (--want-cycles with auto)\n\
          stage serving:   --pipeline N  (wall-clock pipelined cluster serving, N frames in flight)\n\
          observability:   --trace FILE.json (Chrome trace)  --trace-jsonl FILE.jsonl  --arrivals poisson:RATE|bursty:RATE:BURST\n\
+         slo options:     --slo p99:MS  --slo-mode block|reject|shed  --deadline MS  --expect-shed  (open-loop admission control)\n\
          trace options:   --out trace.json  --frames N  --chips N  --pipeline N  (synthetic traced run)"
     );
 }
@@ -191,6 +194,32 @@ fn cmd_detect(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown shard policy {policy_str:?} (frame|pipeline|tile)"))?;
     pipeline.set_cluster(chips, policy)?;
     pipeline.pipeline_depth = args.parsed_or("pipeline", 0usize);
+    if let Some(spec) = args.get("slo") {
+        let target = SloPolicy::parse_target(spec)?;
+        let mode = match args.get("slo-mode") {
+            Some(m) => SloMode::parse(m)?,
+            None => SloMode::Shed,
+        };
+        let mut slo = SloPolicy::new(target).with_mode(mode);
+        if let Some(ms) = args.get("deadline") {
+            let ms: f64 = ms
+                .parse()
+                .map_err(|_| anyhow!("bad --deadline {ms:?} (want milliseconds)"))?;
+            if !ms.is_finite() || ms <= 0.0 {
+                bail!("--deadline must be a positive number of milliseconds");
+            }
+            slo = slo.with_deadline(Duration::from_secs_f64(ms / 1e3));
+        }
+        if args.get("arrivals").is_none() {
+            eprintln!(
+                "note: --slo steers the open-loop serving path; add --arrivals poisson:RATE \
+                 (closed-loop runs only use the target for pool scaling)"
+            );
+        }
+        pipeline.slo = Some(slo);
+    } else if args.get("slo-mode").is_some() || args.get("deadline").is_some() {
+        bail!("--slo-mode/--deadline need --slo p99:MS to define the policy");
+    }
 
     let mut ds = match args.get("dataset") {
         Some(p) => Dataset::load(&PathBuf::from(p))?,
@@ -217,8 +246,11 @@ fn cmd_detect(args: &Args) -> Result<()> {
     ds.samples.truncate(frames);
 
     if auto {
+        // No tail has been measured before the run starts, so the
+        // selection sees `tail_over_target: false` here; serving loops
+        // re-select with the live signal.
         let chosen =
-            pipeline.select_backend_auto(args.has_flag("want-cycles"), ds.samples.len())?;
+            pipeline.select_backend_auto(args.has_flag("want-cycles"), ds.samples.len(), false)?;
         println!("auto-selected backend: {chosen}");
     } else {
         match backend {
@@ -283,6 +315,14 @@ fn cmd_detect(args: &Args) -> Result<()> {
                 && rep.metrics.service_hist.as_ref().is_some_and(|h| !h.is_empty());
             if !filled {
                 bail!("open-loop run produced empty latency histograms");
+            }
+            // Self-check for the over-capacity CI smoke leg: admission
+            // control must actually have dropped something.
+            if args.has_flag("expect-shed") && rep.metrics.shed == 0 {
+                bail!(
+                    "--expect-shed: run shed no requests (SLO admission control inactive \
+                     or the offered load is under capacity)"
+                );
             }
             rep
         }

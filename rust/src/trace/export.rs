@@ -18,7 +18,10 @@ fn chip_json(c: Option<usize>) -> Json {
 fn args_json(kind: &TraceKind) -> Json {
     let mut o = BTreeMap::new();
     match *kind {
-        TraceKind::RequestQueued { request } | TraceKind::RequestService { request } => {
+        TraceKind::RequestQueued { request }
+        | TraceKind::RequestService { request }
+        | TraceKind::RequestShed { request }
+        | TraceKind::RequestDeadlineMissed { request } => {
             o.insert("request".into(), Json::Num(request as f64));
         }
         TraceKind::EngineJob { frame } => {

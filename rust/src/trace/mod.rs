@@ -48,6 +48,12 @@ pub enum TraceKind {
     RequestQueued { request: usize },
     /// An open-loop request being serviced (service start → done).
     RequestService { request: usize },
+    /// An open-loop request shed by the SLO admission policy
+    /// (instant at the shed decision; the request never ran).
+    RequestShed { request: usize },
+    /// An open-loop request dropped because its deadline passed before
+    /// service began (instant; no chip cycles were spent on it).
+    RequestDeadlineMissed { request: usize },
     /// A whole-frame job on a streaming-engine worker thread.
     EngineJob { frame: usize },
     /// One `(frame, stage)` job on the stage executor.
@@ -74,6 +80,8 @@ impl TraceKind {
         match self {
             TraceKind::RequestQueued { .. } => "request.queued",
             TraceKind::RequestService { .. } => "request.service",
+            TraceKind::RequestShed { .. } => "request.shed",
+            TraceKind::RequestDeadlineMissed { .. } => "request.deadline_missed",
             TraceKind::EngineJob { .. } => "engine.job",
             TraceKind::StageJob { .. } => "stage.job",
             TraceKind::LeaseWait { .. } => "stage.lease_wait",
@@ -85,7 +93,10 @@ impl TraceKind {
     /// Chrome-trace category.
     pub fn category(&self) -> &'static str {
         match self {
-            TraceKind::RequestQueued { .. } | TraceKind::RequestService { .. } => "request",
+            TraceKind::RequestQueued { .. }
+            | TraceKind::RequestService { .. }
+            | TraceKind::RequestShed { .. }
+            | TraceKind::RequestDeadlineMissed { .. } => "request",
             TraceKind::EngineJob { .. } => "engine",
             TraceKind::StageJob { .. } | TraceKind::LeaseWait { .. } => "stage",
             TraceKind::Layer { .. } => "chip",
@@ -105,6 +116,10 @@ impl TraceKind {
             TraceKind::LeaseWait { frame, stage, unit } => (4, frame, stage, unit, 0),
             TraceKind::Layer { frame, layer, unit } => (5, frame, layer, unit, 0),
             TraceKind::Transfer { frame, index, bits, .. } => (6, frame, index, 0, bits),
+            // New tags append after the existing ones so historical
+            // sort orders stay stable.
+            TraceKind::RequestShed { request } => (7, request, 0, 0, 0),
+            TraceKind::RequestDeadlineMissed { request } => (8, request, 0, 0, 0),
         }
     }
 }

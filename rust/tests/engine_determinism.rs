@@ -163,6 +163,17 @@ fn scaling_timeline_brackets_peak_and_never_reorders_output() {
             "shrinks recorded but never sampled"
         );
     }
+    // Shrink samples carry the *live* in-flight depth at the decision
+    // (not a hard-coded zero): bounded by what can still be outstanding.
+    // The frame-ordered path never attributes samples to a stage.
+    for w in timeline.windows(2) {
+        if w[1].pool < w[0].pool {
+            assert!(w[1].queue_depth <= images.len(), "shrink depth out of range: {w:?}");
+        }
+    }
+    for s in &timeline {
+        assert!(s.stage.is_none(), "ordered path must not attribute a stage: {s:?}");
+    }
     // The dataset path exports the same series into PipelineMetrics.
     let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
     let mut w = ModelWeights::random(&net, 1.0, 96);

@@ -1,0 +1,268 @@
+//! SLO-aware serving: admission control and deadline handling on the
+//! open-loop path, end to end.
+//!
+//! The properties under test:
+//!
+//! 1. **Determinism** — the shed set is a pure function of
+//!    `(process, seed, n, policy)`: worker counts 1 and 4 must pick the
+//!    identical outcome vector and fold bit-identical admitted outputs.
+//! 2. **Shedding protects, blocking does not** — `Shed` drops work at
+//!    over-capacity while `Block` admits everything and eats the
+//!    backlog.
+//! 3. **Deadlines** — requests that cannot start in time are dropped
+//!    before any backend work is spent on them.
+//! 4. **Scaling stays honest** — arrival holds never grow a
+//!    tail-targeted pool under light load.
+
+use anyhow::Result;
+use scsnn::backend::{BackendCaps, BackendFrame, FrameOptions, SnnBackend};
+use scsnn::coordinator::engine::{EngineConfig, StreamingEngine};
+use scsnn::coordinator::loadgen::{ArrivalProcess, LoadGenerator};
+use scsnn::coordinator::pipeline::{DetectionPipeline, HwStatsMode};
+use scsnn::coordinator::{RequestOutcome, SloMode, SloPolicy};
+use scsnn::detect::dataset::Dataset;
+use scsnn::model::topology::{NetworkSpec, Scale, TimeStepConfig};
+use scsnn::model::weights::ModelWeights;
+use scsnn::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// 1 ms-per-frame backend whose output echoes the input bytes, so folds
+/// can check bit-identity without caring about model content.
+struct SleepBackend;
+
+impl SnnBackend for SleepBackend {
+    fn name(&self) -> &'static str {
+        "sleep"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        BackendCaps { parallel: true, reports_sparsity: false, reports_cycles: false }
+    }
+
+    fn run_frame(&self, image: &Tensor<u8>, _opts: &FrameOptions) -> Result<BackendFrame> {
+        std::thread::sleep(Duration::from_millis(1));
+        let mut head = Tensor::zeros(image.c, image.h, image.w);
+        for (o, &v) in head.data.iter_mut().zip(&image.data) {
+            *o = v as i32;
+        }
+        Ok(BackendFrame { head_acc: head, layers: BTreeMap::new() })
+    }
+}
+
+fn engine(workers: usize) -> StreamingEngine {
+    StreamingEngine::new(
+        Arc::new(SleepBackend),
+        EngineConfig { workers, queue_depth: 4, batch: 1 },
+    )
+}
+
+/// Distinct one-byte images so each request's output is identifiable.
+fn images(n: usize) -> Vec<Tensor<u8>> {
+    (0..n).map(|i| Tensor::from_vec(1, 1, 1, vec![i as u8])).collect()
+}
+
+/// Run `n` requests under `policy` on a `workers`-wide pool; returns
+/// (outcomes, folded `(request, echoed byte)` pairs in fold order).
+fn run_policy(
+    workers: usize,
+    n: usize,
+    policy: &SloPolicy,
+) -> (Vec<RequestOutcome>, Vec<(usize, i32)>) {
+    let imgs = images(n);
+    let eng = engine(workers);
+    let gen = LoadGenerator::new(ArrivalProcess::Poisson { rate_fps: 2000.0 }, 42);
+    let mut folded = Vec::new();
+    let stats = gen
+        .run_with_policy(
+            &eng,
+            n,
+            Some(policy),
+            |i| eng.backend().run_frame(&imgs[i], &FrameOptions::default()),
+            |i, out, _total| {
+                folded.push((i, out.head_acc.data[0]));
+                Ok(())
+            },
+        )
+        .unwrap();
+    (stats.outcomes, folded)
+}
+
+#[test]
+fn shed_set_and_admitted_outputs_identical_across_worker_counts() {
+    // 2000 fps offered into a 1 ms server is 2x a single worker's
+    // capacity; the plan runs on the policy's virtual clock, so the
+    // shed set must not depend on the real pool width at all.
+    let policy = SloPolicy::new(Duration::from_millis(8))
+        .with_mode(SloMode::Shed)
+        .with_estimate(Duration::from_millis(1));
+    let (outcomes1, folded1) = run_policy(1, 32, &policy);
+    let (outcomes4, folded4) = run_policy(4, 32, &policy);
+    assert_eq!(outcomes1, outcomes4, "shed set must be worker-count independent");
+    assert_eq!(folded1, folded4, "admitted outputs must fold bit-identically");
+    assert!(outcomes1.iter().any(|o| *o == RequestOutcome::Shed), "2x capacity must shed");
+    assert!(
+        outcomes1.iter().any(|o| *o == RequestOutcome::Admitted),
+        "an idle server admits"
+    );
+    // Each admitted request folded its own image byte, in request order.
+    let admitted: Vec<usize> = outcomes1
+        .iter()
+        .enumerate()
+        .filter(|(_, o)| **o == RequestOutcome::Admitted)
+        .map(|(i, _)| i)
+        .collect();
+    let expect: Vec<(usize, i32)> = admitted.iter().map(|&i| (i, i as i32)).collect();
+    assert_eq!(folded1, expect);
+    // And the whole thing replays identically.
+    let (outcomes1b, folded1b) = run_policy(1, 32, &policy);
+    assert_eq!(outcomes1, outcomes1b);
+    assert_eq!(folded1, folded1b);
+}
+
+#[test]
+fn block_mode_admits_everything_shed_mode_drops() {
+    let shed = SloPolicy::new(Duration::from_millis(8))
+        .with_mode(SloMode::Shed)
+        .with_estimate(Duration::from_millis(1));
+    let block = shed.clone().with_mode(SloMode::Block);
+    let (shed_outcomes, shed_folded) = run_policy(1, 24, &shed);
+    let (block_outcomes, block_folded) = run_policy(1, 24, &block);
+    assert!(
+        block_outcomes.iter().all(|o| *o == RequestOutcome::Admitted),
+        "Block never drops: {block_outcomes:?}"
+    );
+    assert_eq!(block_folded.len(), 24, "Block serves the full offered load");
+    let shed_count = shed_outcomes.iter().filter(|o| **o == RequestOutcome::Shed).count();
+    assert!(shed_count > 0, "Shed at 2x capacity must drop");
+    assert_eq!(shed_folded.len(), 24 - shed_count);
+}
+
+#[test]
+fn reject_mode_refuses_at_arrival_when_the_budget_cannot_hold() {
+    // One burst of 12 simultaneous arrivals into a 1 ms virtual server,
+    // 4 ms budget (8 ms target x 0.5 headroom): request k queues k ms
+    // deep. Shed admits while the *wait* fits (k <= 4, so 5 requests);
+    // Reject also charges the predicted service (k + 1 <= 4, so 4) —
+    // exact counts, independent of machine speed.
+    let base = SloPolicy::new(Duration::from_millis(8)).with_estimate(Duration::from_millis(1));
+    let run = |mode: SloMode| {
+        let imgs = images(12);
+        let eng = engine(1);
+        let gen = LoadGenerator::new(ArrivalProcess::Bursty { rate_fps: 1000.0, burst: 12 }, 7);
+        gen.run_with_policy(
+            &eng,
+            12,
+            Some(&base.clone().with_mode(mode)),
+            |i| eng.backend().run_frame(&imgs[i], &FrameOptions::default()),
+            |_i, _out, _total| Ok(()),
+        )
+        .unwrap()
+    };
+    let shed = run(SloMode::Shed);
+    let reject = run(SloMode::Reject);
+    assert_eq!(shed.admitted(), 5, "{:?}", shed.outcomes);
+    assert_eq!(reject.admitted(), 4, "{:?}", reject.outcomes);
+    assert_eq!(shed.shed(), 7);
+    assert_eq!(reject.shed(), 8);
+}
+
+#[test]
+fn deadline_drops_late_requests_before_spending_backend_work() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    // A burst of 8 lands at one instant; each admitted request books
+    // 5 ms of virtual service, so anything queued more than 2 ms deep
+    // misses its deadline. The loose 1 s target keeps pure shedding out
+    // of the picture — every drop here is a deadline miss.
+    let policy = SloPolicy::new(Duration::from_secs(1))
+        .with_mode(SloMode::Block)
+        .with_estimate(Duration::from_millis(5))
+        .with_deadline(Duration::from_millis(2));
+    let imgs = images(8);
+    let eng = engine(1);
+    let gen = LoadGenerator::new(ArrivalProcess::Bursty { rate_fps: 1000.0, burst: 8 }, 3);
+    let served = AtomicUsize::new(0);
+    let stats = gen
+        .run_with_policy(
+            &eng,
+            8,
+            Some(&policy),
+            |i| {
+                served.fetch_add(1, Ordering::Relaxed);
+                eng.backend().run_frame(&imgs[i], &FrameOptions::default())
+            },
+            |_i, _out, _total| Ok(()),
+        )
+        .unwrap();
+    assert!(stats.deadline_missed() > 0, "a deep burst must miss the 2 ms deadline");
+    assert_eq!(stats.shed(), 0, "the loose target must not shed");
+    assert_eq!(
+        served.load(Ordering::Relaxed),
+        stats.admitted(),
+        "missed requests must never reach the backend"
+    );
+    assert_eq!(stats.total.count() as usize, stats.admitted());
+}
+
+#[test]
+fn arrival_holds_never_grow_a_tail_targeted_pool_under_light_load() {
+    // 100 fps into a 1 ms server is 10% load: workers spend almost all
+    // their time holding for the next arrival. With the SLO target
+    // steering the scaler, those holds must read as idle — the pool
+    // stays at its floor for the whole run.
+    let imgs = images(6);
+    let eng = StreamingEngine::new(
+        Arc::new(SleepBackend),
+        EngineConfig { workers: 1, queue_depth: 4, batch: 1 },
+    )
+    .with_max_workers(4)
+    .with_tail_target(Duration::from_millis(50));
+    let gen = LoadGenerator::new(ArrivalProcess::Poisson { rate_fps: 100.0 }, 5);
+    let policy = SloPolicy::new(Duration::from_millis(50))
+        .with_mode(SloMode::Shed)
+        .with_estimate(Duration::from_millis(1));
+    let stats = gen
+        .run_with_policy(
+            &eng,
+            6,
+            Some(&policy),
+            |i| eng.backend().run_frame(&imgs[i], &FrameOptions::default()),
+            |_i, _out, _total| Ok(()),
+        )
+        .unwrap();
+    assert_eq!(stats.admitted(), 6, "10% load sheds nothing");
+    assert_eq!(
+        eng.peak_workers(),
+        1,
+        "arrival holds grew the pool: {:?}",
+        eng.scaling_timeline()
+    );
+}
+
+#[test]
+fn slo_pipeline_report_carries_policy_outcomes_and_target() {
+    // End-to-end through DetectionPipeline: Block mode admits the whole
+    // dataset, so the counts are exact regardless of machine speed.
+    let net = NetworkSpec::paper(Scale::Tiny, TimeStepConfig::PAPER);
+    let mut w = ModelWeights::random(&net, 1.0, 9);
+    w.prune_fine_grained(0.8);
+    let mut p = DetectionPipeline::from_weights(net, w).unwrap();
+    p.hw_mode = HwStatsMode::Off;
+    p.slo = Some(SloPolicy::new(Duration::from_millis(250)).with_mode(SloMode::Block));
+    let ds = Dataset::synth(3, p.net.input_w, p.net.input_h, 21);
+    let rep = p
+        .process_dataset_open_loop(&ds, &ArrivalProcess::Poisson { rate_fps: 500.0 }, 13)
+        .unwrap();
+    let m = &rep.metrics;
+    assert_eq!(m.admitted, 3, "Block admits every request");
+    assert_eq!(m.shed, 0);
+    assert_eq!(m.deadline_missed, 0);
+    assert_eq!(m.slo_target_ms, 250.0);
+    assert_eq!(m.frames, 3);
+    assert_eq!(m.queue_hist.as_ref().unwrap().count(), 3);
+    let j = m.to_json();
+    assert_eq!(j.get("admitted").and_then(|v| v.as_f64()), Some(3.0));
+    assert_eq!(j.get("slo_target_ms").and_then(|v| v.as_f64()), Some(250.0));
+    assert!(j.get("goodput_fps").and_then(|v| v.as_f64()).unwrap() > 0.0);
+}
